@@ -1,0 +1,44 @@
+//! Quickstart: fine-tune the tiny model with RingAda on the default
+//! 4-device edge cluster and print the loss curve + eval metrics.
+//!
+//! ```bash
+//! make artifacts                       # builds artifacts/tiny (one-time)
+//! cargo run --release --example quickstart
+//! ```
+
+use ringada::prelude::*;
+
+fn main() -> Result<()> {
+    // 1. Point an experiment at an AOT artifact directory.  The paper's
+    //    defaults: 4 heterogeneous edge devices in a ring, top-down
+    //    unfreezing every k rounds, Adam on adapters + head.
+    let mut exp = ExperimentConfig::paper_default("artifacts/tiny");
+    exp.training.rounds = 20;
+    exp.training.local_iters = 2;
+    exp.training.unfreeze_interval = 5;
+
+    // 2. Run the RingAda scheme: real PJRT numerics, simulated edge clock.
+    let report = ringada::train::run_scheme(&exp, Scheme::RingAda)?;
+
+    // 3. Inspect.
+    println!("\nloss curve (epoch, loss, simulated time):");
+    for (i, (&(e, l), &t)) in report
+        .curve
+        .points
+        .iter()
+        .zip(&report.curve.sim_time_s)
+        .enumerate()
+    {
+        if i % 4 == 0 || i + 1 == report.curve.len() {
+            println!("  epoch {e:>4.0}  loss {l:.4}  t={t:.2}s");
+        }
+    }
+    println!("\nper-device memory: {:.2} MB", report.memory_mb);
+    if let Some(m) = &report.eval_metrics {
+        println!("held-out: F1 {:.2}  EM {:.2}", m.f1_pct(), m.em_pct());
+    }
+    if let Some(r) = report.converged_round {
+        println!("plateau detected at round {r}");
+    }
+    Ok(())
+}

@@ -1,0 +1,224 @@
+"""AOT lowering: JAX stage functions → HLO text + manifest for the Rust runtime.
+
+Interchange format is HLO **text**, not ``.serialize()``-d protos: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids that the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Each model config produces ``artifacts/<config>/``:
+
+    embed_fwd.hlo.txt      block_fwd.hlo.txt      block_bwd.hlo.txt
+    head_fwd.hlo.txt       head_loss_grad.hlo.txt head_predict.hlo.txt
+    manifest.json
+
+``manifest.json`` is the L2→L3 contract: model hyperparameters, the
+parameter inventory (name/shape/init/trainable — the Rust side initializes
+weights itself so artifacts stay small), and for every executable the
+ordered argument and result tensor specs.  The Rust runtime refuses to run
+against a manifest whose ``manifest_version`` it does not understand.
+
+Usage:  python -m compile.aot --config tiny --out-root ../artifacts
+        python -m compile.aot --all
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+MANIFEST_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_name(x) -> str:
+    return {"float32": "f32", "int32": "s32"}[str(jnp.asarray(x).dtype)]
+
+
+def _tensor_spec(name: str, proto) -> dict:
+    arr = jnp.asarray(proto)
+    return {"name": name, "shape": list(arr.shape), "dtype": _dtype_name(arr)}
+
+
+def _param_specs_json(specs) -> list[dict]:
+    return [
+        {
+            "name": s.name,
+            "shape": list(s.shape),
+            "init": s.init,
+            "trainable": s.trainable,
+        }
+        for s in specs
+    ]
+
+
+def _example_args(c: M.ModelConfig):
+    """Abstract example arguments (ShapeDtypeStruct) for every stage."""
+    f32 = jnp.float32
+    s32 = jnp.int32
+    sd = jax.ShapeDtypeStruct
+    h = sd((c.batch, c.seq, c.hidden), f32)
+    ids = sd((c.batch, c.seq), s32)
+    labels = sd((c.batch,), s32)
+
+    embed_params = [sd(s.shape, f32) for s in M.embed_param_specs(c)]
+    block_params = [sd(s.shape, f32) for s in M.block_param_specs(c)]
+    head_params = [sd(s.shape, f32) for s in M.head_param_specs(c)]
+
+    return {
+        "embed_fwd": (M.embed_fwd, [ids, *embed_params],
+                      ["ids", *[s.name for s in M.embed_param_specs(c)]]),
+        "block_fwd": (M.make_block_fwd(c), [h, *block_params],
+                      ["x", *[s.name for s in M.block_param_specs(c)]]),
+        "block_bwd": (M.make_block_bwd(c), [h, *block_params, h],
+                      ["x", *[s.name for s in M.block_param_specs(c)], "g_out"]),
+        "head_fwd": (M.head_fwd, [h, *head_params],
+                     ["h", "w_head", "b_head"]),
+        "head_loss_grad": (M.head_loss_grad, [h, *head_params, labels, labels],
+                           ["h", "w_head", "b_head", "starts", "ends"]),
+        "head_predict": (M.head_predict, [h, *head_params],
+                         ["h", "w_head", "b_head"]),
+    }
+
+
+def _result_specs(fn, args) -> list[dict]:
+    out = jax.eval_shape(fn, *args)
+    leaves = jax.tree_util.tree_leaves(out)
+    return [
+        {"name": f"out{i}", "shape": list(l.shape),
+         "dtype": {"float32": "f32", "int32": "s32"}[str(l.dtype)]}
+        for i, l in enumerate(leaves)
+    ]
+
+
+def _flat(a) -> list:
+    return [float(x) for x in jnp.asarray(a).reshape(-1).tolist()]
+
+
+def emit_testvectors(c: M.ModelConfig, out_dir: str) -> None:
+    """jax-computed input/expected-output vectors for every executable.
+
+    The Rust integration tests (`rust/tests/runtime_roundtrip.rs`) replay
+    these through the PJRT runtime and assert allclose — the cross-language
+    numeric contract.  Only emitted for the `tiny` config (the vectors are a
+    few MB of JSON; larger configs are covered transitively).
+    """
+    key = jax.random.PRNGKey(42)
+    params = M.init_params(c, key)
+    ids = jax.random.randint(jax.random.fold_in(key, 1), (c.batch, c.seq),
+                             0, c.vocab).astype(jnp.int32)
+    h = M.embed_fwd(ids, *params.embed)
+    gy = jax.random.normal(jax.random.fold_in(key, 2), h.shape) * 0.1
+    starts = (jnp.arange(c.batch) % c.seq).astype(jnp.int32)
+    ends = ((jnp.arange(c.batch) + 3) % c.seq).astype(jnp.int32)
+    blk = params.blocks[0]
+
+    cases = {}
+
+    def case(name, fn, args):
+        out = fn(*args)
+        leaves = jax.tree_util.tree_leaves(out)
+        cases[name] = {
+            "args": [_flat(a) for a in args],
+            "results": [_flat(l) for l in leaves],
+        }
+
+    case("embed_fwd", M.embed_fwd, [ids, *params.embed])
+    case("block_fwd", M.make_block_fwd(c), [h, *blk])
+    case("block_bwd", M.make_block_bwd(c), [h, *blk, gy])
+    case("head_fwd", M.head_fwd, [h, *params.head])
+    case("head_loss_grad", M.head_loss_grad, [h, *params.head, starts, ends])
+    case("head_predict", M.head_predict, [h, *params.head])
+
+    with open(os.path.join(out_dir, "testvectors.json"), "w") as f:
+        json.dump(cases, f)
+    print(f"[aot:{c.name}] wrote testvectors.json")
+
+
+def build_config(c: M.ModelConfig, out_root: str, force: bool = False) -> str:
+    out_dir = os.path.join(out_root, c.name)
+    os.makedirs(out_dir, exist_ok=True)
+
+    stages = _example_args(c)
+    manifest: dict = {
+        "manifest_version": MANIFEST_VERSION,
+        "config": {
+            "name": c.name,
+            "vocab": c.vocab,
+            "hidden": c.hidden,
+            "layers": c.layers,
+            "heads": c.heads,
+            "ffn": c.ffn,
+            "bottleneck": c.bottleneck,
+            "seq": c.seq,
+            "batch": c.batch,
+            "init_std": c.init_std,
+        },
+        "params": {
+            "embed": _param_specs_json(M.embed_param_specs(c)),
+            "block": _param_specs_json(M.block_param_specs(c)),
+            "head": _param_specs_json(M.head_param_specs(c)),
+        },
+        "executables": {},
+    }
+
+    for name, (fn, args, arg_names) in stages.items():
+        hlo_path = os.path.join(out_dir, f"{name}.hlo.txt")
+        print(f"[aot:{c.name}] lowering {name} ...", flush=True)
+        # keep_unused=True: the manifest promises positional arguments, so
+        # arguments a stage doesn't mathematically need (e.g. `a_bu` in
+        # block_bwd — the up-bias never influences any adapter gradient)
+        # must still be parameters of the lowered HLO.
+        lowered = jax.jit(fn, keep_unused=True).lower(*args)
+        text = to_hlo_text(lowered)
+        with open(hlo_path, "w") as f:
+            f.write(text)
+        manifest["executables"][name] = {
+            "file": f"{name}.hlo.txt",
+            "args": [
+                {"name": an, "shape": list(a.shape),
+                 "dtype": {"float32": "f32", "int32": "s32"}[str(a.dtype)]}
+                for an, a in zip(arg_names, args)
+            ],
+            "results": _result_specs(fn, args),
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+        }
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot:{c.name}] wrote {out_dir}/manifest.json")
+
+    if c.name == "tiny":
+        emit_testvectors(c, out_dir)
+    return out_dir
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--config", action="append", choices=list(M.CONFIGS),
+                    help="config(s) to build (repeatable)")
+    ap.add_argument("--all", action="store_true", help="build every config")
+    ap.add_argument("--out-root", default="../artifacts")
+    args = ap.parse_args()
+
+    names = list(M.CONFIGS) if args.all else (args.config or ["tiny"])
+    for name in names:
+        build_config(M.CONFIGS[name], args.out_root)
+
+
+if __name__ == "__main__":
+    main()

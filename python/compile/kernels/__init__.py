@@ -1,0 +1,21 @@
+"""L1 Pallas kernels for the RingAda model (build-time only).
+
+Every kernel is a ``jax.custom_vjp`` whose forward is a Pallas kernel
+(``interpret=True`` — see DESIGN.md §8) and whose backward is either a
+Pallas kernel (adapter, layernorm) or recompute-based jnp math (attention).
+``ref.py`` holds the pure-jnp oracles used by the pytest suite.
+"""
+
+from .adapter import adapter, adapter_param_count
+from .attention import mha
+from .common import gelu, gelu_grad
+from .layernorm import layernorm
+
+__all__ = [
+    "adapter",
+    "adapter_param_count",
+    "mha",
+    "gelu",
+    "gelu_grad",
+    "layernorm",
+]

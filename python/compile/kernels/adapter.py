@@ -1,0 +1,184 @@
+"""Fused serial-adapter Pallas kernel — the paper's compute hot-spot (L1).
+
+The serial adapter (paper Eq. (1), Fig. 1) is
+
+    y = x + GELU(x @ W_down + b_down) @ W_up + b_up
+
+inserted after each transformer block's FFN "add & layer norm" sublayer.
+During RingAda fine-tuning this is the *only* per-block computation whose
+parameters are trained, so both its forward and its backward are first-class
+kernels here.
+
+TPU mapping (DESIGN.md §8): the token rows are tiled ``TILE_ROWS × H``
+through VMEM while both projection matrices stay VMEM-resident across the
+whole row loop (they are tiny: ``2·H·m + m + H`` parameters).  Each grid
+step issues two MXU contractions, ``(TILE_ROWS×H)·(H×m)`` and
+``(TILE_ROWS×m)·(m×H)``.  The backward kernel accumulates the weight
+gradients across grid steps in revisited output blocks — the TPU grid is
+sequential per core, so ``+=`` accumulation is well-defined.
+
+Autodiff: ``pallas_call`` has no differentiation rule, so :func:`adapter`
+is a ``jax.custom_vjp`` whose forward and backward are *both* Pallas
+kernels.  The backward recomputes the bottleneck activations from ``x``
+instead of saving them (activation-memory frugality is the paper's whole
+point — see DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import (
+    as_rows,
+    cdiv,
+    gelu,
+    gelu_grad,
+    pad_rows,
+    pick_row_tile,
+)
+
+
+def _fwd_kernel(x_ref, wd_ref, bd_ref, wu_ref, bu_ref, o_ref):
+    x = x_ref[...]
+    z = jnp.dot(x, wd_ref[...]) + bd_ref[...][None, :]
+    h = gelu(z)
+    o_ref[...] = x + jnp.dot(h, wu_ref[...]) + bu_ref[...][None, :]
+
+
+def _bwd_kernel(
+    x_ref,
+    wd_ref,
+    bd_ref,
+    wu_ref,
+    gy_ref,
+    gx_ref,
+    gwd_ref,
+    gbd_ref,
+    gwu_ref,
+    gbu_ref,
+):
+    step = pl.program_id(0)
+    x = x_ref[...]
+    gy = gy_ref[...]
+    wd = wd_ref[...]
+    wu = wu_ref[...]
+
+    # Recompute the bottleneck activations (never stored).
+    z = jnp.dot(x, wd) + bd_ref[...][None, :]
+    h = gelu(z)
+
+    gh = jnp.dot(gy, wu.T)
+    gz = gh * gelu_grad(z)
+
+    gx_ref[...] = gy + jnp.dot(gz, wd.T)
+
+    # Weight-gradient accumulators: all grid steps map to the same output
+    # block; initialize on the first step, accumulate afterwards.
+    @pl.when(step == 0)
+    def _init():
+        gwd_ref[...] = jnp.zeros_like(gwd_ref)
+        gbd_ref[...] = jnp.zeros_like(gbd_ref)
+        gwu_ref[...] = jnp.zeros_like(gwu_ref)
+        gbu_ref[...] = jnp.zeros_like(gbu_ref)
+
+    gwd_ref[...] += jnp.dot(x.T, gz)
+    gbd_ref[...] += jnp.sum(gz, axis=0)
+    gwu_ref[...] += jnp.dot(h.T, gy)
+    gbu_ref[...] += jnp.sum(gy, axis=0)
+
+
+def _adapter_fwd_rows(x, wd, bd, wu, bu):
+    rows_total, hidden = x.shape
+    tile = pick_row_tile(rows_total)
+    x_p, rows = pad_rows(x, tile)
+    grid = (cdiv(x_p.shape[0], tile),)
+
+    out = pl.pallas_call(
+        _fwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, hidden), lambda i: (i, 0)),
+            pl.BlockSpec(wd.shape, lambda i: (0, 0)),
+            pl.BlockSpec(bd.shape, lambda i: (0,)),
+            pl.BlockSpec(wu.shape, lambda i: (0, 0)),
+            pl.BlockSpec(bu.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile, hidden), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x_p.shape, x.dtype),
+        interpret=True,
+    )(x_p, wd, bd, wu, bu)
+    return out[:rows]
+
+
+def _adapter_bwd_rows(x, wd, bd, wu, gy):
+    rows_total, hidden = x.shape
+    bneck = wd.shape[1]
+    tile = pick_row_tile(rows_total)
+    x_p, rows = pad_rows(x, tile)
+    gy_p, _ = pad_rows(gy, tile)
+    grid = (cdiv(x_p.shape[0], tile),)
+    acc = x.dtype  # accumulate in the input dtype (f32 in this codebase)
+
+    gx, gwd, gbd, gwu, gbu = pl.pallas_call(
+        _bwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, hidden), lambda i: (i, 0)),
+            pl.BlockSpec(wd.shape, lambda i: (0, 0)),
+            pl.BlockSpec(bd.shape, lambda i: (0,)),
+            pl.BlockSpec(wu.shape, lambda i: (0, 0)),
+            pl.BlockSpec((tile, hidden), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile, hidden), lambda i: (i, 0)),
+            pl.BlockSpec(wd.shape, lambda i: (0, 0)),
+            pl.BlockSpec(bd.shape, lambda i: (0,)),
+            pl.BlockSpec((bneck, hidden), lambda i: (0, 0)),
+            pl.BlockSpec((hidden,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x_p.shape, acc),
+            jax.ShapeDtypeStruct(wd.shape, acc),
+            jax.ShapeDtypeStruct(bd.shape, acc),
+            jax.ShapeDtypeStruct((bneck, hidden), acc),
+            jax.ShapeDtypeStruct((hidden,), acc),
+        ],
+        interpret=True,
+    )(x_p, wd, bd, wu, gy_p)
+    return gx[:rows], gwd, gbd, gwu, gbu
+
+
+@jax.custom_vjp
+def adapter(x, wd, bd, wu, bu):
+    """Serial adapter ``y = x + GELU(x·wd + bd)·wu + bu``.
+
+    ``x`` may be ``[..., H]``; ``wd: [H, m]``, ``bd: [m]``, ``wu: [m, H]``,
+    ``bu: [H]``.  Differentiable w.r.t. every argument.
+    """
+    rows, shape = as_rows(x)
+    return _adapter_fwd_rows(rows, wd, bd, wu, bu).reshape(shape)
+
+
+def _vjp_fwd(x, wd, bd, wu, bu):
+    y = adapter(x, wd, bd, wu, bu)
+    # Residuals: only the *inputs* — the bottleneck activations are
+    # recomputed by the backward kernel.
+    return y, (x, wd, bd, wu)
+
+
+def _vjp_bwd(res, gy):
+    x, wd, bd, wu = res
+    rows_x, shape = as_rows(x)
+    rows_gy, _ = as_rows(gy)
+    gx, gwd, gbd, gwu, gbu = _adapter_bwd_rows(rows_x, wd, bd, wu, rows_gy)
+    return gx.reshape(shape), gwd, gbd, gwu, gbu
+
+
+adapter.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+def adapter_param_count(hidden: int, bottleneck: int) -> int:
+    """Trainable parameters per adapter module."""
+    return 2 * hidden * bottleneck + bottleneck + hidden

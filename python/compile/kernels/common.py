@@ -1,0 +1,96 @@
+"""Shared helpers for the Pallas kernels (L1).
+
+All kernels in this package follow the same conventions:
+
+* They operate on 2-D row-major views ``[rows, features]`` where
+  ``rows = batch * seq``; wrappers reshape ``[B, S, H]`` inputs.
+* They are lowered with ``interpret=True`` — the CPU PJRT plugin cannot
+  execute Mosaic custom-calls, so interpret mode is the correctness target
+  and the real-TPU resource usage is estimated analytically (see
+  DESIGN.md §9 and :func:`vmem_bytes`).
+* Row counts are padded up to the row-tile size with zero rows; the pad is
+  sliced off afterwards.  Every kernel here is row-independent, so zero
+  padding is semantically inert.
+* GELU uses the tanh approximation *everywhere* (kernels, backward math,
+  and the pure-jnp oracles in ``ref.py``) so comparisons are exact-ish.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+# Row tile used by the row-parallel kernels (adapter, layernorm).  128 rows
+# keeps a (128, H) f32 tile under 1 MB of VMEM for H <= 2048 and matches the
+# MXU's 128-lane geometry.
+DEFAULT_ROW_TILE = 128
+
+_SQRT_2_OVER_PI = math.sqrt(2.0 / math.pi)
+
+
+def gelu(x: jax.Array) -> jax.Array:
+    """tanh-approximated GELU (the BERT variant)."""
+    return 0.5 * x * (1.0 + jnp.tanh(_SQRT_2_OVER_PI * (x + 0.044715 * x**3)))
+
+
+def gelu_grad(x: jax.Array) -> jax.Array:
+    """d/dx of :func:`gelu` (closed form for the tanh approximation)."""
+    u = _SQRT_2_OVER_PI * (x + 0.044715 * x**3)
+    t = jnp.tanh(u)
+    du = _SQRT_2_OVER_PI * (1.0 + 3.0 * 0.044715 * x**2)
+    return 0.5 * (1.0 + t) + 0.5 * x * (1.0 - t**2) * du
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return cdiv(a, b) * b
+
+
+def pick_row_tile(rows: int, max_tile: int = DEFAULT_ROW_TILE) -> int:
+    """Row-tile size for ``rows`` total rows: the full row count when small,
+    otherwise the default tile (rows are padded up to a multiple)."""
+    return rows if rows <= max_tile else max_tile
+
+
+def pad_rows(x: jax.Array, tile: int) -> tuple[jax.Array, int]:
+    """Zero-pad the leading (row) axis of ``x`` up to a multiple of ``tile``.
+
+    Returns the padded array and the original row count.
+    """
+    rows = x.shape[0]
+    padded = round_up(rows, tile)
+    if padded != rows:
+        x = jnp.pad(x, [(0, padded - rows)] + [(0, 0)] * (x.ndim - 1))
+    return x, rows
+
+
+def as_rows(x: jax.Array) -> tuple[jax.Array, tuple[int, ...]]:
+    """Collapse all leading axes of ``x`` into a row axis."""
+    shape = x.shape
+    return x.reshape(-1, shape[-1]), shape
+
+
+def vmem_bytes(*shapes_dtypes: tuple[tuple[int, ...], jnp.dtype]) -> int:
+    """Analytic VMEM footprint of a kernel instance: the sum of the byte
+    sizes of every ref the kernel touches per grid step.  Used by the
+    perf-estimation tests (DESIGN.md §9) to keep each kernel under the
+    ~16 MB per-core VMEM budget of a TPUv4-class part.
+    """
+    total = 0
+    for shape, dtype in shapes_dtypes:
+        total += math.prod(shape) * jnp.dtype(dtype).itemsize
+    return total
+
+
+def mxu_flops(*matmul_dims: tuple[int, int, int]) -> int:
+    """FLOPs routed to the MXU for a list of ``(m, k, n)`` contractions."""
+    return sum(2 * m * k * n for (m, k, n) in matmul_dims)
+
+
+partial  # re-exported convenience (quiet linters)

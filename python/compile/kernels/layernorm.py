@@ -1,0 +1,128 @@
+"""Fused LayerNorm Pallas kernel (L1).
+
+One VMEM pass per row tile computes mean, variance, normalization and the
+affine transform — avoiding the two-kernel mean/var + normalize split common
+in CUDA implementations (DESIGN.md §8).  The backward kernel uses the
+standard closed-form LayerNorm gradient and accumulates the affine-parameter
+gradients across grid steps in revisited output blocks.
+
+Exposed as :func:`layernorm`, a ``jax.custom_vjp`` differentiable w.r.t.
+``(x, gamma, beta)``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import as_rows, cdiv, pad_rows, pick_row_tile
+
+EPS = 1e-5
+
+
+def _fwd_kernel(x_ref, g_ref, b_ref, o_ref):
+    x = x_ref[...]
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    xhat = (x - mean) * jax.lax.rsqrt(var + EPS)
+    o_ref[...] = xhat * g_ref[...][None, :] + b_ref[...][None, :]
+
+
+def _bwd_kernel(x_ref, g_ref, gy_ref, gx_ref, gg_ref, gb_ref):
+    step = pl.program_id(0)
+    x = x_ref[...]
+    g = g_ref[...]
+    gy = gy_ref[...]
+
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    rstd = jax.lax.rsqrt(var + EPS)
+    xhat = (x - mean) * rstd
+
+    gxhat = gy * g[None, :]
+    m1 = jnp.mean(gxhat, axis=-1, keepdims=True)
+    m2 = jnp.mean(gxhat * xhat, axis=-1, keepdims=True)
+    gx_ref[...] = rstd * (gxhat - m1 - xhat * m2)
+
+    @pl.when(step == 0)
+    def _init():
+        gg_ref[...] = jnp.zeros_like(gg_ref)
+        gb_ref[...] = jnp.zeros_like(gb_ref)
+
+    gg_ref[...] += jnp.sum(gy * xhat, axis=0)
+    gb_ref[...] += jnp.sum(gy, axis=0)
+
+
+def _ln_fwd_rows(x, g, b):
+    rows_total, hidden = x.shape
+    tile = pick_row_tile(rows_total)
+    x_p, rows = pad_rows(x, tile)
+    grid = (cdiv(x_p.shape[0], tile),)
+    out = pl.pallas_call(
+        _fwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, hidden), lambda i: (i, 0)),
+            pl.BlockSpec(g.shape, lambda i: (0,)),
+            pl.BlockSpec(b.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile, hidden), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x_p.shape, x.dtype),
+        interpret=True,
+    )(x_p, g, b)
+    return out[:rows]
+
+
+def _ln_bwd_rows(x, g, gy):
+    rows_total, hidden = x.shape
+    tile = pick_row_tile(rows_total)
+    x_p, rows = pad_rows(x, tile)
+    gy_p, _ = pad_rows(gy, tile)
+    grid = (cdiv(x_p.shape[0], tile),)
+    gx, gg, gb = pl.pallas_call(
+        _bwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, hidden), lambda i: (i, 0)),
+            pl.BlockSpec(g.shape, lambda i: (0,)),
+            pl.BlockSpec((tile, hidden), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile, hidden), lambda i: (i, 0)),
+            pl.BlockSpec(g.shape, lambda i: (0,)),
+            pl.BlockSpec(g.shape, lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x_p.shape, x.dtype),
+            jax.ShapeDtypeStruct(g.shape, x.dtype),
+            jax.ShapeDtypeStruct(g.shape, x.dtype),
+        ],
+        interpret=True,
+    )(x_p, g, gy_p)
+    return gx[:rows], gg, gb
+
+
+@jax.custom_vjp
+def layernorm(x, gamma, beta):
+    """LayerNorm over the last axis with affine parameters.
+
+    ``x: [..., H]``, ``gamma: [H]``, ``beta: [H]``.
+    """
+    rows, shape = as_rows(x)
+    return _ln_fwd_rows(rows, gamma, beta).reshape(shape)
+
+
+def _vjp_fwd(x, gamma, beta):
+    return layernorm(x, gamma, beta), (x, gamma)
+
+
+def _vjp_bwd(res, gy):
+    x, gamma = res
+    rows_x, shape = as_rows(x)
+    rows_gy, _ = as_rows(gy)
+    gx, gg, gb = _ln_bwd_rows(rows_x, gamma, rows_gy)
+    return gx.reshape(shape), gg, gb
+
+
+layernorm.defvjp(_vjp_fwd, _vjp_bwd)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every L1 kernel — the CORE correctness signal.
+
+Each function here is the straightforward, un-tiled jnp implementation of
+the corresponding Pallas kernel.  pytest (``python/tests/``) sweeps shapes
+with hypothesis and asserts ``allclose`` between kernel and oracle for both
+values and VJPs (the oracles are plain-jnp, so ``jax.vjp`` differentiates
+them directly).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import gelu
+
+LN_EPS = 1e-5
+
+
+def adapter_ref(x, wd, bd, wu, bu):
+    """Serial adapter (paper Eq. (1)): ``x + GELU(x·wd + bd)·wu + bu``."""
+    h = gelu(jnp.dot(x, wd) + bd)
+    return x + jnp.dot(h, wu) + bu
+
+
+def layernorm_ref(x, gamma, beta):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    xhat = (x - mean) * jax.lax.rsqrt(var + LN_EPS)
+    return xhat * gamma + beta
+
+
+def mha_ref(q, k, v):
+    """Full-materialization attention; q, k, v: [BH, S, D]."""
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q, k).astype(jnp.float32) / (d**0.5)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,283 @@
+"""L2 — the RingAda model as per-stage JAX functions (build-time only).
+
+The model is a BERT-style encoder with one *serial adapter* after each
+block's FFN "add & layer-norm" sublayer (paper Fig. 1) and an extractive-QA
+span head (start/end logits), standing in for mBERT + MAD-X adapters on
+SQuAD (DESIGN.md §2).
+
+The model is deliberately decomposed into the five stage functions below —
+not one monolithic ``train_step`` — because RingAda's whole point is that
+*different devices own different contiguous block ranges* and backprop
+early-stops at the terminator block.  The Rust coordinator (L3) composes
+these stages around the ring at run time:
+
+* :func:`embed_fwd`       — run by the initiator on its local ``Emb`` copy.
+* :func:`block_fwd`       — one transformer block + adapter; the SAME lowered
+                            executable serves every block (weights are
+                            arguments), so any partition composes.
+* :func:`block_bwd`       — VJP of ``block_fwd`` w.r.t. the block input and
+                            the ADAPTER parameters only (backbone frozen);
+                            recompute-based, so no saved activations cross
+                            the AOT boundary.
+* :func:`head_fwd` / :func:`head_loss_grad` / :func:`head_predict`
+                          — run by the initiator on its local ``Hed`` copy;
+                            labels never leave the device.
+
+``aot.py`` lowers each of these to HLO text for the Rust runtime.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import adapter, gelu, layernorm, mha
+
+
+# ---------------------------------------------------------------------------
+# Configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Hyperparameters of one lowered artifact set.
+
+    ``batch`` and ``seq`` are baked into the HLO shapes (PJRT executables are
+    shape-specialized); the Rust side pads the final eval batch.
+    """
+
+    name: str
+    vocab: int
+    hidden: int
+    layers: int
+    heads: int
+    ffn: int
+    bottleneck: int
+    seq: int
+    batch: int
+    init_std: float = 0.02
+
+    @property
+    def head_dim(self) -> int:
+        return self.hidden // self.heads
+
+    def __post_init__(self):
+        assert self.hidden % self.heads == 0, "hidden must divide by heads"
+
+
+#: Artifact configurations.  ``tiny`` drives the test suites, ``small`` the
+#: criterion benches, ``e2e`` the end-to-end validation run (≈98 M params —
+#: mBERT-class, matching the paper's model scale).
+CONFIGS: dict[str, ModelConfig] = {
+    cfg.name: cfg
+    for cfg in [
+        ModelConfig("tiny", vocab=512, hidden=64, layers=4, heads=4, ffn=256, bottleneck=16, seq=32, batch=4),
+        ModelConfig("small", vocab=2048, hidden=256, layers=8, heads=8, ffn=1024, bottleneck=32, seq=64, batch=8),
+        ModelConfig("e2e", vocab=8192, hidden=768, layers=12, heads=12, ffn=3072, bottleneck=64, seq=128, batch=8),
+    ]
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameter inventory (shared with the Rust runtime via manifest.json)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    name: str
+    shape: tuple[int, ...]
+    init: str  # "normal" (std=init_std), "zeros", "ones"
+    trainable: bool = False
+
+
+def embed_param_specs(c: ModelConfig) -> list[ParamSpec]:
+    return [
+        ParamSpec("tok_emb", (c.vocab, c.hidden), "normal"),
+        ParamSpec("pos_emb", (c.seq, c.hidden), "normal"),
+        ParamSpec("emb_ln_g", (c.hidden,), "ones"),
+        ParamSpec("emb_ln_b", (c.hidden,), "zeros"),
+    ]
+
+
+def block_param_specs(c: ModelConfig) -> list[ParamSpec]:
+    """Per-block parameters, in the positional order ``block_fwd`` takes
+    them.  The four trailing adapter tensors are the trainable ones."""
+    h, f, m = c.hidden, c.ffn, c.bottleneck
+    return [
+        ParamSpec("wqkv", (h, 3 * h), "normal"),
+        ParamSpec("bqkv", (3 * h,), "zeros"),
+        ParamSpec("wo", (h, h), "normal"),
+        ParamSpec("bo", (h,), "zeros"),
+        ParamSpec("ln1_g", (h,), "ones"),
+        ParamSpec("ln1_b", (h,), "zeros"),
+        ParamSpec("w1", (h, f), "normal"),
+        ParamSpec("b1", (f,), "zeros"),
+        ParamSpec("w2", (f, h), "normal"),
+        ParamSpec("b2", (h,), "zeros"),
+        ParamSpec("ln2_g", (h,), "ones"),
+        ParamSpec("ln2_b", (h,), "zeros"),
+        # Adapter — W_up starts at zero so a freshly inserted adapter is an
+        # exact identity (the residual path), the standard stabilizer.
+        ParamSpec("a_wd", (h, m), "normal", trainable=True),
+        ParamSpec("a_bd", (m,), "zeros", trainable=True),
+        ParamSpec("a_wu", (m, h), "zeros", trainable=True),
+        ParamSpec("a_bu", (h,), "zeros", trainable=True),
+    ]
+
+
+NUM_ADAPTER_PARAMS = 4  # a_wd, a_bd, a_wu, a_bu — the block's trainable tail
+
+
+def head_param_specs(c: ModelConfig) -> list[ParamSpec]:
+    return [
+        ParamSpec("w_head", (c.hidden, 2), "normal", trainable=True),
+        ParamSpec("b_head", (2,), "zeros", trainable=True),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Stage functions
+# ---------------------------------------------------------------------------
+
+
+def embed_fwd(ids, tok_emb, pos_emb, ln_g, ln_b):
+    """``ids: s32[B, S]`` → hidden states ``f32[B, S, H]``."""
+    h = tok_emb[ids] + pos_emb[None, :, :]
+    return layernorm(h, ln_g, ln_b)
+
+
+def _block_apply(x, wqkv, bqkv, wo, bo, ln1_g, ln1_b, w1, b1, w2, b2,
+                 ln2_g, ln2_b, a_wd, a_bd, a_wu, a_bu, *, heads: int):
+    """One post-LN transformer block with a trailing serial adapter."""
+    bsz, seq, hidden = x.shape
+    hd = hidden // heads
+
+    qkv = jnp.dot(x, wqkv) + bqkv  # [B, S, 3H]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def to_bh(t):  # [B, S, H] -> [B*heads, S, hd]
+        return (
+            t.reshape(bsz, seq, heads, hd)
+            .transpose(0, 2, 1, 3)
+            .reshape(bsz * heads, seq, hd)
+        )
+
+    def from_bh(t):
+        return (
+            t.reshape(bsz, heads, seq, hd)
+            .transpose(0, 2, 1, 3)
+            .reshape(bsz, seq, hidden)
+        )
+
+    attn = from_bh(mha(to_bh(q), to_bh(k), to_bh(v)))
+    h1 = layernorm(x + jnp.dot(attn, wo) + bo, ln1_g, ln1_b)
+    ff = jnp.dot(gelu(jnp.dot(h1, w1) + b1), w2) + b2
+    h2 = layernorm(h1 + ff, ln2_g, ln2_b)
+    return adapter(h2, a_wd, a_bd, a_wu, a_bu)
+
+
+def make_block_fwd(c: ModelConfig):
+    def block_fwd(x, *params):
+        return _block_apply(x, *params, heads=c.heads)
+
+    return block_fwd
+
+
+def make_block_bwd(c: ModelConfig):
+    """VJP of the block w.r.t. ``(x, adapter params)`` — the backbone is
+    frozen, so its cotangents are never formed.  Activations are recomputed
+    inside (nothing but ``x`` crosses the stage boundary), which is what
+    keeps RingAda's per-device activation memory flat (DESIGN.md §6)."""
+    n_backbone = len(block_param_specs(c)) - NUM_ADAPTER_PARAMS
+
+    def block_bwd(x, *params_and_gy):
+        params, gy = params_and_gy[:-1], params_and_gy[-1]
+        backbone, adapters = params[:n_backbone], params[n_backbone:]
+
+        def f(x, a_wd, a_bd, a_wu, a_bu):
+            return _block_apply(x, *backbone, a_wd, a_bd, a_wu, a_bu, heads=c.heads)
+
+        _, vjp = jax.vjp(f, x, *adapters)
+        gx, g_wd, g_bd, g_wu, g_bu = vjp(gy)
+        return gx, g_wd, g_bd, g_wu, g_bu
+
+    return block_bwd
+
+
+def head_fwd(h, w_head, b_head):
+    """Span logits ``f32[B, S, 2]`` (start, end)."""
+    return jnp.dot(h, w_head) + b_head
+
+
+def _span_loss(h, w_head, b_head, starts, ends):
+    logits = head_fwd(h, w_head, b_head)
+    log_s = jax.nn.log_softmax(logits[..., 0], axis=-1)  # [B, S]
+    log_e = jax.nn.log_softmax(logits[..., 1], axis=-1)
+    bidx = jnp.arange(h.shape[0])
+    nll = -(log_s[bidx, starts] + log_e[bidx, ends]) / 2.0
+    return jnp.mean(nll)
+
+
+def head_loss_grad(h, w_head, b_head, starts, ends):
+    """Loss + gradients w.r.t. the hidden states and head parameters.
+
+    Run by the initiator only — ``starts``/``ends`` (the labels) never
+    leave the device that owns the mini-batch.
+    """
+    loss, vjp = jax.vjp(lambda h, w, b: _span_loss(h, w, b, starts, ends),
+                        h, w_head, b_head)
+    g_h, g_w, g_b = vjp(jnp.float32(1.0))
+    return loss, g_h, g_w, g_b
+
+
+def head_predict(h, w_head, b_head):
+    """Greedy span decode: ``(starts s32[B], ends s32[B])``."""
+    logits = head_fwd(h, w_head, b_head)
+    starts = jnp.argmax(logits[..., 0], axis=-1).astype(jnp.int32)
+    ends = jnp.argmax(logits[..., 1], axis=-1).astype(jnp.int32)
+    return starts, ends
+
+
+# ---------------------------------------------------------------------------
+# Whole-model reference (used by python tests only, never lowered)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ModelParams:
+    """Host-side parameter container for the python-level tests."""
+
+    embed: list
+    blocks: list  # [layers][param]
+    head: list
+    config: ModelConfig = field(repr=False, default=None)
+
+
+def init_params(c: ModelConfig, key) -> ModelParams:
+    def init_one(spec: ParamSpec, k):
+        if spec.init == "normal":
+            return jax.random.normal(k, spec.shape) * c.init_std
+        if spec.init == "ones":
+            return jnp.ones(spec.shape)
+        return jnp.zeros(spec.shape)
+
+    keys = iter(jax.random.split(key, 4096))
+    embed = [init_one(s, next(keys)) for s in embed_param_specs(c)]
+    blocks = [
+        [init_one(s, next(keys)) for s in block_param_specs(c)]
+        for _ in range(c.layers)
+    ]
+    head = [init_one(s, next(keys)) for s in head_param_specs(c)]
+    return ModelParams(embed, blocks, head, c)
+
+
+def model_fwd(c: ModelConfig, params: ModelParams, ids):
+    h = embed_fwd(ids, *params.embed)
+    block = make_block_fwd(c)
+    for bp in params.blocks:
+        h = block(h, *bp)
+    return h

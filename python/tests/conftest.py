@@ -1,0 +1,22 @@
+"""Shared pytest configuration for the build-time python suite.
+
+Hypothesis drives shape/dtype sweeps over the Pallas kernels; interpret-mode
+execution is slow-ish, so the profile trades example count for coverage of
+the structurally distinct cases (tile-aligned, ragged, single-row, wide).
+"""
+
+import os
+import sys
+
+from hypothesis import HealthCheck, settings
+
+# Make `compile.*` importable when pytest is invoked from the repo root.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+settings.register_profile(
+    "kernels",
+    max_examples=int(os.environ.get("RINGADA_HYP_EXAMPLES", "12")),
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+settings.load_profile("kernels")

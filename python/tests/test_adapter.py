@@ -1,0 +1,98 @@
+"""Adapter kernel vs pure-jnp oracle: values and VJPs, hypothesis-swept."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from compile.kernels import adapter, adapter_param_count
+from compile.kernels.ref import adapter_ref
+
+ATOL = 2e-5
+RTOL = 2e-5
+
+
+def _make(key, rows, hidden, bneck, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (rows, hidden), dtype)
+    wd = (jax.random.normal(ks[1], (hidden, bneck)) * 0.05).astype(dtype)
+    bd = (jax.random.normal(ks[2], (bneck,)) * 0.05).astype(dtype)
+    wu = (jax.random.normal(ks[3], (bneck, hidden)) * 0.05).astype(dtype)
+    bu = (jax.random.normal(ks[4], (hidden,)) * 0.05).astype(dtype)
+    return x, wd, bd, wu, bu
+
+
+@given(
+    rows=st.sampled_from([1, 3, 7, 32, 128, 130, 257]),
+    hidden=st.sampled_from([8, 64, 96, 256]),
+    bneck=st.sampled_from([4, 16, 48]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_adapter_fwd_matches_ref(rows, hidden, bneck, seed):
+    args = _make(jax.random.PRNGKey(seed), rows, hidden, bneck)
+    np.testing.assert_allclose(
+        adapter(*args), adapter_ref(*args), atol=ATOL, rtol=RTOL
+    )
+
+
+@given(
+    rows=st.sampled_from([1, 5, 32, 129]),
+    hidden=st.sampled_from([16, 64]),
+    bneck=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_adapter_vjp_matches_ref(rows, hidden, bneck, seed):
+    key = jax.random.PRNGKey(seed)
+    args = _make(key, rows, hidden, bneck)
+    gy = jax.random.normal(jax.random.fold_in(key, 99), (rows, hidden))
+    _, vjp = jax.vjp(adapter, *args)
+    _, vjp_ref = jax.vjp(adapter_ref, *args)
+    for got, want, name in zip(
+        vjp(gy), vjp_ref(gy), ["gx", "gwd", "gbd", "gwu", "gbu"]
+    ):
+        np.testing.assert_allclose(
+            got, want, atol=1e-4, rtol=1e-4, err_msg=name
+        )
+
+
+def test_adapter_3d_input_round_trips_shape():
+    x, wd, bd, wu, bu = _make(jax.random.PRNGKey(0), 24, 32, 8)
+    x3 = x.reshape(2, 12, 32)
+    y3 = adapter(x3, wd, bd, wu, bu)
+    assert y3.shape == (2, 12, 32)
+    np.testing.assert_allclose(
+        y3.reshape(24, 32), adapter(x, wd, bd, wu, bu), atol=ATOL, rtol=RTOL
+    )
+
+
+def test_adapter_zero_weights_is_residual_only():
+    """With W_up = 0 and b_up = 0 the adapter must be an exact identity —
+    the residual path is what makes inserting fresh adapters safe."""
+    x, wd, bd, wu, bu = _make(jax.random.PRNGKey(1), 40, 64, 16)
+    y = adapter(x, wd, bd, jnp.zeros_like(wu), jnp.zeros_like(bu))
+    np.testing.assert_allclose(y, x, atol=1e-6)
+
+
+def test_adapter_grad_through_jit():
+    """The custom VJP must survive jit + AOT lowering (the L2 path)."""
+    args = _make(jax.random.PRNGKey(2), 16, 32, 8)
+
+    @jax.jit
+    def loss(x, wd, bd, wu, bu):
+        return jnp.sum(adapter(x, wd, bd, wu, bu) ** 2)
+
+    grads = jax.grad(loss, argnums=(1, 2, 3, 4))(*args)
+    grads_ref = jax.grad(
+        lambda *a: jnp.sum(adapter_ref(*a) ** 2), argnums=(1, 2, 3, 4)
+    )(*args)
+    for got, want in zip(grads, grads_ref):
+        np.testing.assert_allclose(got, want, atol=1e-3, rtol=1e-3)
+
+
+@pytest.mark.parametrize(
+    "hidden,bneck,expected",
+    [(768, 64, 2 * 768 * 64 + 64 + 768), (64, 16, 2 * 64 * 16 + 16 + 64)],
+)
+def test_adapter_param_count(hidden, bneck, expected):
+    assert adapter_param_count(hidden, bneck) == expected

@@ -1,0 +1,71 @@
+"""LayerNorm kernel vs oracle: values and VJPs, hypothesis-swept."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from compile.kernels import layernorm
+from compile.kernels.ref import layernorm_ref
+
+
+def _make(key, rows, hidden):
+    ks = jax.random.split(key, 3)
+    x = jax.random.normal(ks[0], (rows, hidden)) * 3.0 + 0.5
+    g = jax.random.normal(ks[1], (hidden,)) * 0.5 + 1.0
+    b = jax.random.normal(ks[2], (hidden,)) * 0.1
+    return x, g, b
+
+
+@given(
+    rows=st.sampled_from([1, 2, 17, 128, 200, 384]),
+    hidden=st.sampled_from([8, 64, 256, 768]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_layernorm_fwd_matches_ref(rows, hidden, seed):
+    x, g, b = _make(jax.random.PRNGKey(seed), rows, hidden)
+    np.testing.assert_allclose(
+        layernorm(x, g, b), layernorm_ref(x, g, b), atol=2e-5, rtol=2e-5
+    )
+
+
+@given(
+    rows=st.sampled_from([1, 9, 128, 131]),
+    hidden=st.sampled_from([16, 64, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_layernorm_vjp_matches_ref(rows, hidden, seed):
+    key = jax.random.PRNGKey(seed)
+    x, g, b = _make(key, rows, hidden)
+    gy = jax.random.normal(jax.random.fold_in(key, 7), (rows, hidden))
+    _, vjp = jax.vjp(layernorm, x, g, b)
+    _, vjp_ref = jax.vjp(layernorm_ref, x, g, b)
+    for got, want, name in zip(vjp(gy), vjp_ref(gy), ["gx", "gg", "gb"]):
+        np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4, err_msg=name)
+
+
+def test_layernorm_output_statistics():
+    """With unit gamma / zero beta, rows must come out ~N(0, 1)."""
+    x = jax.random.normal(jax.random.PRNGKey(3), (64, 256)) * 5 + 2
+    y = layernorm(x, jnp.ones(256), jnp.zeros(256))
+    np.testing.assert_allclose(np.mean(y, axis=-1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(np.std(y, axis=-1), 1.0, atol=1e-3)
+
+
+def test_layernorm_scale_invariance():
+    """LayerNorm(c·x) == LayerNorm(x) for c > 0 (mean/var cancel c)."""
+    x, g, b = _make(jax.random.PRNGKey(4), 32, 64)
+    np.testing.assert_allclose(
+        layernorm(x * 10.0, g, b), layernorm(x, g, b), atol=1e-4, rtol=1e-4
+    )
+
+
+def test_layernorm_3d_input():
+    x, g, b = _make(jax.random.PRNGKey(5), 24, 32)
+    x3 = x.reshape(2, 12, 32)
+    np.testing.assert_allclose(
+        layernorm(x3, g, b).reshape(24, 32),
+        layernorm(x, g, b),
+        atol=2e-5,
+        rtol=2e-5,
+    )

@@ -1,0 +1,107 @@
+"""L1 performance estimation (DESIGN.md §9): interpret-mode Pallas gives no
+TPU timings, so the resource model is analytic — per-kernel-instance VMEM
+footprint must fit the ~16 MB/core budget of a TPUv4-class part, and the
+MXU-utilization proxy (MXU FLOPs / total FLOPs) is recorded in
+EXPERIMENTS.md §Perf.  These tests pin the estimates so a kernel/blockspec
+change that blows the budget fails CI.
+"""
+
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels.common import (
+    DEFAULT_ROW_TILE,
+    mxu_flops,
+    pick_row_tile,
+    vmem_bytes,
+)
+from compile.kernels.attention import DEFAULT_BLOCK_Q
+from compile.model import CONFIGS
+
+VMEM_BUDGET = 16 * 1024 * 1024  # bytes per core, TPUv4-class
+
+
+def adapter_vmem(c):
+    """Refs live per grid step: x-tile, W_down, b_down, W_up, b_up, out-tile."""
+    rows = pick_row_tile(c.batch * c.seq)
+    f32 = jnp.float32
+    return vmem_bytes(
+        ((rows, c.hidden), f32),
+        ((c.hidden, c.bottleneck), f32),
+        ((c.bottleneck,), f32),
+        ((c.bottleneck, c.hidden), f32),
+        ((c.hidden,), f32),
+        ((rows, c.hidden), f32),
+    )
+
+
+def attention_vmem(c):
+    """q-block + full K/V for one (batch, head) + accumulators + out."""
+    bq = min(DEFAULT_BLOCK_Q, c.seq)
+    d = c.hidden // c.heads
+    f32 = jnp.float32
+    return vmem_bytes(
+        ((bq, d), f32),          # q tile
+        ((c.seq, d), f32),       # K (resident)
+        ((c.seq, d), f32),       # V (resident)
+        ((bq, d), f32),          # accumulator
+        ((bq, 2), f32),          # running max / sum
+        ((bq, d), f32),          # out tile
+    )
+
+
+def layernorm_vmem(c):
+    rows = pick_row_tile(c.batch * c.seq)
+    f32 = jnp.float32
+    return vmem_bytes(
+        ((rows, c.hidden), f32),
+        ((c.hidden,), f32),
+        ((c.hidden,), f32),
+        ((rows, c.hidden), f32),
+    )
+
+
+@pytest.mark.parametrize("name", list(CONFIGS))
+def test_kernels_fit_vmem_budget(name):
+    c = CONFIGS[name]
+    for kernel, fn in [
+        ("adapter", adapter_vmem),
+        ("attention", attention_vmem),
+        ("layernorm", layernorm_vmem),
+    ]:
+        used = fn(c)
+        assert used <= VMEM_BUDGET, (
+            f"{kernel} on config {name} needs {used / 2**20:.2f} MiB VMEM"
+        )
+
+
+def test_adapter_mxu_fraction_is_high_for_e2e():
+    """The adapter kernel's arithmetic should be MXU-dominated for the
+    production-size config: the two projections dwarf the GELU/residual
+    vector ops."""
+    c = CONFIGS["e2e"]
+    rows = c.batch * c.seq
+    mxu = mxu_flops((rows, c.hidden, c.bottleneck), (rows, c.bottleneck, c.hidden))
+    # VPU work: gelu (≈10 flops/elem on rows×m) + residual add (rows×H).
+    vpu = 10 * rows * c.bottleneck + rows * c.hidden
+    frac = mxu / (mxu + vpu)
+    assert frac > 0.95, f"MXU fraction only {frac:.3f}"
+
+
+def test_row_tile_matches_mxu_lane_geometry():
+    assert DEFAULT_ROW_TILE % 128 == 0
+    # Small inputs use one tile (no padding waste beyond the tile).
+    assert pick_row_tile(32) == 32
+    assert pick_row_tile(1000) == DEFAULT_ROW_TILE
+
+
+def test_e2e_adapter_arithmetic_intensity():
+    """Rough roofline sanity: adapter FLOPs per HBM byte moved (weights
+    resident, activations streamed) should exceed 1 — i.e. the kernel is
+    not hopelessly bandwidth-bound once W is cached in VMEM."""
+    c = CONFIGS["e2e"]
+    rows = c.batch * c.seq
+    flops = mxu_flops((rows, c.hidden, c.bottleneck), (rows, c.bottleneck, c.hidden))
+    hbm_bytes = 2 * rows * c.hidden * 4  # read x, write y (weights resident)
+    intensity = flops / hbm_bytes
+    assert intensity > 1.0, f"arithmetic intensity {intensity:.2f}"

@@ -1,0 +1,99 @@
+//! Regenerates the paper's **Fig. 3**: (a) training loss vs epochs and
+//! (b) training loss vs wall-clock time for the three schemes, printing
+//! down-sampled series and writing full CSVs under `results/`.
+//!
+//! Expected shape (paper §V): in (a) RingAda starts slower (partial
+//! unfreezing) and the gap narrows; in (b) RingAda reaches any loss level
+//! first, Single last.
+//!
+//! Run: `cargo bench --bench fig3`
+
+use ringada::config::{ExperimentConfig, Scheme};
+use ringada::train::{run_scheme_with, TrainOptions};
+
+fn main() {
+    let art = if std::path::Path::new("artifacts/small/manifest.json").exists() {
+        "artifacts/small"
+    } else if std::path::Path::new("artifacts/tiny/manifest.json").exists() {
+        "artifacts/tiny"
+    } else {
+        eprintln!("skipping fig3 bench: artifacts missing (run `make artifacts`)");
+        return;
+    };
+    eprintln!("fig3 bench on {art}");
+    let mut exp = ExperimentConfig::paper_default(art);
+    exp.training.rounds = 36; // the "800 epochs" axis, scaled down
+    exp.training.local_iters = 2;
+    exp.training.unfreeze_interval = 8;
+    // Slow the descent so the curves are informative across the axis
+    // (4e-3 converges within ~4 epochs on the synthetic task).
+    exp.training.lr = 1.2e-3;
+    exp.samples_per_device = 96;
+    exp.eval_samples = 32;
+
+    std::fs::create_dir_all("results").ok();
+    let mut curves = Vec::new();
+    for scheme in Scheme::ALL {
+        let r = run_scheme_with(&exp, scheme, &TrainOptions { eval: false, verbose: false, loss_threshold: 0.5 })
+            .expect("run");
+        let path = format!("results/fig3_{}.csv", scheme.name().to_lowercase());
+        r.curve.write_csv(&path).expect("csv");
+        eprintln!("wrote {path}");
+        curves.push((scheme, r.curve));
+    }
+
+    println!("\nFig. 3(a) — training loss vs epochs:");
+    println!("{:>6} {:>12} {:>12} {:>12}", "epoch", "Single", "PipeAdapter", "RingAda");
+    for i in (0..exp.training.rounds).step_by(4) {
+        println!(
+            "{:>6} {:>12.4} {:>12.4} {:>12.4}",
+            i, curves[0].1.points[i].1, curves[1].1.points[i].1, curves[2].1.points[i].1
+        );
+    }
+
+    println!("\nFig. 3(b) — training loss vs simulated time (s):");
+    println!(
+        "{:>6} {:>16} {:>16} {:>16}",
+        "epoch", "Single t(loss)", "Pipe t(loss)", "RingAda t(loss)"
+    );
+    for i in (0..exp.training.rounds).step_by(4) {
+        println!(
+            "{:>6} {:>9.1}({:.3}) {:>9.1}({:.3}) {:>9.1}({:.3})",
+            i,
+            curves[0].1.sim_time_s[i],
+            curves[0].1.points[i].1,
+            curves[1].1.sim_time_s[i],
+            curves[1].1.points[i].1,
+            curves[2].1.sim_time_s[i],
+            curves[2].1.points[i].1,
+        );
+    }
+
+    // Shape checks — Fig. 3(b)'s claim is about reaching a loss level, so
+    // compare simulated *time-to-threshold* (the Table I convergence
+    // definition), not total time over a fixed round budget: RingAda's
+    // advantage lives in the low-depth phase where convergence happens,
+    // and the unfreeze schedule deepens (and slows) rounds afterwards.
+    let thresh = 0.5;
+    let t_single = curves[0].1.time_to_reach(thresh);
+    let t_pipe = curves[1].1.time_to_reach(thresh);
+    let t_ring = curves[2].1.time_to_reach(thresh);
+    println!(
+        "\ntime to loss {thresh}: Single {t_single:?}s, PipeAdapter {t_pipe:?}s, RingAda {t_ring:?}s"
+    );
+    match (t_single, t_pipe, t_ring) {
+        (Some(s), Some(p), Some(r)) if r < p && p < s => {
+            println!("shape: OK — RingAda < PipeAdapter < Single time-to-loss (paper Fig. 3(b))")
+        }
+        (Some(s), _, Some(r)) if r < s => {
+            println!("shape: PARTIAL — RingAda beats Single; PipeAdapter ordering off")
+        }
+        _ => println!("shape: MISMATCH"),
+    }
+    // Early-epoch loss: RingAda should descend no faster than Single in (a).
+    let early = 3.min(exp.training.rounds - 1);
+    println!(
+        "early-epoch loss (epoch {early}): Single {:.4} <= RingAda {:.4} expected (partial unfreezing)",
+        curves[0].1.points[early].1, curves[2].1.points[early].1
+    );
+}

@@ -1,0 +1,210 @@
+//! Hot-path micro-benchmarks (L3 performance deliverable, DESIGN.md §9):
+//! PJRT stage dispatch, schedule generation, the discrete-event simulator,
+//! the Adam update, JSON parsing, and data generation.
+//!
+//! Run: `cargo bench --bench hotpath`
+
+use ringada::config::ClusterConfig;
+use ringada::coordinator::{Coordinator, LayerAssignment};
+use ringada::config::TrainingConfig;
+use ringada::data::{QaConfig, SyntheticQa};
+use ringada::model::manifest::{Manifest, ModelHyper};
+use ringada::model::ModelMeta;
+use ringada::pipeline::{ScheduleBuilder, WireSizes};
+use ringada::runtime::{Adam, HostTensor, Rng};
+use ringada::sim::{CostLut, Simulator};
+use ringada::util::bench::{black_box, Bencher};
+use ringada::util::json::Json;
+
+fn meta() -> ModelMeta {
+    ModelMeta {
+        hyper: ModelHyper {
+            name: "bench".into(), vocab: 2048, hidden: 256, layers: 12, heads: 8,
+            ffn: 1024, bottleneck: 32, seq: 64, batch: 8, init_std: 0.02,
+        },
+        embed_params: 2048 * 256,
+        block_backbone_params: 1_000_000,
+        block_adapter_params: 16_672,
+        head_params: 514,
+    }
+}
+
+fn bench_schedule_and_sim(b: &mut Bencher) {
+    let m = meta();
+    let assignment = LayerAssignment::uniform(4, m.hyper.layers);
+    let cluster = ClusterConfig::paper_default();
+    let coordinator = Coordinator::with_assignment(
+        assignment.clone(),
+        &m,
+        &cluster,
+        &TrainingConfig::default(),
+    )
+    .unwrap();
+    let rp = coordinator.round_plan(0).unwrap();
+    let sizes = WireSizes { activation_bytes: m.activation_bytes(), head_bytes: 2056 };
+
+    b.bench("pipeline/ringada_step_generation", || {
+        let mut builder = ScheduleBuilder::new(assignment.clone(), sizes, 4);
+        for i in 0..16 {
+            builder.ringada_step(&rp, i % 4).unwrap();
+        }
+        black_box(builder.into_tasks());
+    });
+
+    // Simulator throughput: tasks/second over a 64-step RingAda schedule.
+    let mut builder = ScheduleBuilder::new(assignment.clone(), sizes, 4);
+    for i in 0..64 {
+        builder.ringada_step(&rp, i % 4).unwrap();
+    }
+    let (tasks, _) = builder.into_tasks();
+    let lut = CostLut::analytic(&m, 10.0);
+    let n_tasks = tasks.len();
+    let r = b.bench("sim/discrete_event_64_steps", || {
+        let mut sim = Simulator::new(cluster.clone(), lut.clone());
+        black_box(sim.run(&tasks).unwrap());
+    });
+    let tasks_per_sec = n_tasks as f64 / r.mean.as_secs_f64();
+    println!("  -> simulator throughput: {:.2}M tasks/s ({n_tasks} tasks)", tasks_per_sec / 1e6);
+}
+
+fn bench_planner(b: &mut Bencher) {
+    let m = meta();
+    let cluster = ClusterConfig::paper_default();
+    let costs = ringada::coordinator::PlannerCosts {
+        block_fwd_s: 0.02,
+        activation_bytes: m.activation_bytes(),
+    };
+    b.bench("coordinator/planner_4dev_12blocks_exhaustive", || {
+        let p = ringada::coordinator::Planner::new(&m, &cluster, costs);
+        black_box(p.plan().unwrap());
+    });
+}
+
+fn bench_adam(b: &mut Bencher) {
+    // One adapter of the e2e config: 2*768*64 + 64 + 768 params.
+    let shapes: Vec<Vec<usize>> = vec![vec![768, 64], vec![64], vec![64, 768], vec![768]];
+    let mut params: Vec<HostTensor> =
+        shapes.iter().map(|s| HostTensor::zeros_f32(s.clone())).collect();
+    let grads: Vec<HostTensor> = shapes
+        .iter()
+        .map(|s| {
+            let n: usize = s.iter().product();
+            HostTensor::f32(s.clone(), vec![0.01; n]).unwrap()
+        })
+        .collect();
+    let mut opt = Adam::new(1e-3, 4);
+    b.bench("optim/adam_step_one_e2e_adapter(99k params)", || {
+        let mut refs: Vec<&mut HostTensor> = params.iter_mut().collect();
+        let grefs: Vec<&HostTensor> = grads.iter().collect();
+        opt.update(&mut refs, &grefs).unwrap();
+    });
+}
+
+fn bench_json(b: &mut Bencher) {
+    // Manifest-sized document.
+    let manifest_text = ringada::config::ExperimentConfig::paper_default("x")
+        .to_json()
+        .pretty();
+    b.bench("util/json_parse_experiment_config", || {
+        black_box(Json::parse(&manifest_text).unwrap());
+    });
+    let _ = Manifest::from_json_text; // exercised via integration tests
+}
+
+fn bench_data(b: &mut Bencher) {
+    let qa = QaConfig::for_model(2048, 64);
+    b.bench("data/generate_256_examples", || {
+        black_box(SyntheticQa::generate(&qa, 0, 256, 7).unwrap());
+    });
+    let ds = SyntheticQa::generate(&qa, 0, 256, 7).unwrap();
+    let mut rng = Rng::new(3);
+    b.bench("data/sample_batch_8", || {
+        black_box(ds.sample_batch(8, &mut rng).unwrap());
+    });
+}
+
+fn bench_engine(b: &mut Bencher) {
+    let art = "artifacts/tiny";
+    if !std::path::Path::new(art).join("manifest.json").exists() {
+        eprintln!("skipping engine benches: {art} missing");
+        return;
+    }
+    use ringada::runtime::{Engine, ModelWeights, StageRunner};
+    let engine = Engine::load(art).unwrap();
+    let m = engine.manifest().clone();
+    let w = ModelWeights::init(&m, 7).unwrap();
+    let runner = StageRunner::new(&engine);
+    let ids = HostTensor::i32(
+        vec![m.config.batch, m.config.seq],
+        (0..(m.config.batch * m.config.seq) as i32)
+            .map(|i| i % m.config.vocab as i32)
+            .collect(),
+    )
+    .unwrap();
+    let h = runner.embed(&w, &ids).unwrap();
+    let gy = h.clone();
+
+    b.bench("runtime/block_fwd_tiny", || {
+        black_box(runner.block_fwd(&w, 0, &h).unwrap());
+    });
+    b.bench("runtime/block_bwd_tiny", || {
+        black_box(runner.block_bwd(&w, 0, &h, &gy).unwrap());
+    });
+    let starts = HostTensor::i32(vec![m.config.batch], vec![1; m.config.batch]).unwrap();
+    let ends = HostTensor::i32(vec![m.config.batch], vec![2; m.config.batch]).unwrap();
+    b.bench("runtime/head_loss_grad_tiny", || {
+        black_box(runner.head_loss_grad(&w, &h, &starts, &ends).unwrap());
+    });
+}
+
+/// The §Perf before/after: per-call weight upload (the old path) vs
+/// device-resident weights.  Uses the `small` config where the weight
+/// traffic (~4 MB/block) is visible.
+fn bench_device_weights(b: &mut Bencher) {
+    let art = "artifacts/small";
+    if !std::path::Path::new(art).join("manifest.json").exists() {
+        eprintln!("skipping device-weights benches: {art} missing");
+        return;
+    }
+    use ringada::runtime::{DeviceWeights, Engine, ModelWeights, StageRunner};
+    let engine = Engine::load(art).unwrap();
+    let m = engine.manifest().clone();
+    let w = ModelWeights::init(&m, 7).unwrap();
+    let dw = DeviceWeights::upload(&engine, &w).unwrap();
+    let runner = StageRunner::new(&engine);
+    let ids = HostTensor::i32(
+        vec![m.config.batch, m.config.seq],
+        (0..(m.config.batch * m.config.seq) as i32)
+            .map(|i| i % m.config.vocab as i32)
+            .collect(),
+    )
+    .unwrap();
+    let h = runner.embed(&w, &ids).unwrap();
+
+    let before = b
+        .bench("perf/block_fwd_small_HOST_weights (before)", || {
+            black_box(runner.block_fwd(&w, 0, &h).unwrap());
+        })
+        .mean;
+    let after = b
+        .bench("perf/block_fwd_small_DEVICE_weights (after)", || {
+            black_box(runner.block_fwd_dev(&dw, 0, &h).unwrap());
+        })
+        .mean;
+    println!(
+        "  -> device-resident weights: {:.2}x faster per block_fwd",
+        before.as_secs_f64() / after.as_secs_f64()
+    );
+}
+
+fn main() {
+    let mut b = Bencher::default();
+    println!("== hot-path micro benches ==");
+    bench_engine(&mut b);
+    bench_device_weights(&mut b);
+    bench_schedule_and_sim(&mut b);
+    bench_planner(&mut b);
+    bench_adam(&mut b);
+    bench_json(&mut b);
+    bench_data(&mut b);
+}

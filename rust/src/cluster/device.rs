@@ -1,0 +1,336 @@
+//! Device actor: one OS thread, one PJRT engine, one contiguous block
+//! range, plus `Emb`/`Hed` copies (paper §III.A).  Implements the pause
+//! rule: if this position holds unfrozen adapters and a batch it forwarded
+//! is still awaiting its backward update, a *new* batch's forward is
+//! deferred until the update lands (paper §IV.2 — this is what keeps every
+//! batch on one weight version without stashing).
+
+use std::collections::{HashMap, VecDeque};
+use std::path::PathBuf;
+use std::sync::mpsc::{Receiver, Sender};
+use std::thread::JoinHandle;
+
+use crate::cluster::messages::{Command, Event, PeerSender};
+use crate::error::{Error, Result};
+use crate::runtime::{Adam, Engine, HostTensor};
+
+/// Everything a device thread needs at spawn time.
+pub struct DeviceInit {
+    pub position: usize,
+    pub device_id: usize,
+    pub artifact_dir: PathBuf,
+    /// Absolute index of this position's first block.
+    pub block_offset: usize,
+    /// Parameters of this position's blocks (backbone + adapter each).
+    pub blocks: Vec<Vec<HostTensor>>,
+    pub backbone_per_block: usize,
+    pub embed: Vec<HostTensor>,
+    pub head: Vec<HostTensor>,
+    pub lr: f32,
+    pub terminator_block: usize,
+    pub num_positions: usize,
+    /// Command senders of every ring position (full D2D mesh).
+    pub peers: Vec<PeerSender>,
+    pub events: Sender<Event>,
+    pub cmd_rx: Receiver<Command>,
+}
+
+/// Controller-side handle.
+pub struct DeviceHandle {
+    pub position: usize,
+    tx: PeerSender,
+    join: JoinHandle<()>,
+}
+
+impl DeviceHandle {
+    pub fn send(&self, cmd: Command) -> Result<()> {
+        self.tx
+            .send(cmd)
+            .map_err(|_| Error::Cluster(format!("device {} channel closed", self.position)))
+    }
+
+    pub fn join(self) -> Result<()> {
+        self.join
+            .join()
+            .map_err(|_| Error::Cluster(format!("device {} thread panicked", self.position)))
+    }
+}
+
+pub fn spawn_device(init: DeviceInit) -> Result<DeviceHandle> {
+    let position = init.position;
+    let tx = init.peers[position].clone();
+    let events = init.events.clone();
+    let join = std::thread::Builder::new()
+        .name(format!("ringada-dev{position}"))
+        .spawn(move || {
+            if let Err(e) = device_main(init) {
+                let _ = events.send(Event::Error(format!("device {position}: {e}")));
+            }
+        })
+        .map_err(|e| Error::Cluster(format!("spawn: {e}")))?;
+    Ok(DeviceHandle { position, tx, join })
+}
+
+struct DeviceState {
+    position: usize,
+    block_offset: usize,
+    blocks: Vec<Vec<HostTensor>>,
+    backbone_per_block: usize,
+    embed: Vec<HostTensor>,
+    head: Vec<HostTensor>,
+    head_version: u64,
+    head_opt: Adam,
+    adapter_opts: Vec<Adam>,
+    terminator_block: usize,
+    num_positions: usize,
+    peers: Vec<PeerSender>,
+    events: Sender<Event>,
+    /// batch_id → stored inputs of this position's *unfrozen* blocks.
+    stored: HashMap<u64, Vec<(usize, HostTensor)>>,
+    /// batch_id → labels (initiator only; never serialized to peers).
+    labels: HashMap<u64, (HostTensor, HostTensor)>,
+    /// Batches forwarded here whose adapter update hasn't landed yet.
+    awaiting_update: usize,
+    /// Deferred forwards (the pause rule).
+    deferred: VecDeque<Command>,
+}
+
+impl DeviceState {
+    fn has_unfrozen(&self) -> bool {
+        self.block_offset + self.blocks.len() > self.terminator_block
+    }
+
+    fn lowest_unfrozen_local(&self) -> usize {
+        self.terminator_block.saturating_sub(self.block_offset)
+    }
+
+    fn send_peer(&self, pos: usize, cmd: Command) -> Result<()> {
+        self.peers[pos]
+            .send(cmd)
+            .map_err(|_| Error::Cluster(format!("peer {pos} channel closed")))
+    }
+}
+
+fn device_main(init: DeviceInit) -> Result<()> {
+    let engine = Engine::load(&init.artifact_dir)?;
+    let adapter_tensors = 4;
+    let mut st = DeviceState {
+        position: init.position,
+        block_offset: init.block_offset,
+        blocks: init.blocks,
+        backbone_per_block: init.backbone_per_block,
+        embed: init.embed,
+        head: init.head,
+        head_version: 0,
+        head_opt: Adam::new(init.lr, 2),
+        adapter_opts: (0..init.num_positions.max(1))
+            .map(|_| Adam::new(init.lr, adapter_tensors))
+            .collect(),
+        terminator_block: init.terminator_block,
+        num_positions: init.num_positions,
+        peers: init.peers,
+        events: init.events,
+        stored: HashMap::new(),
+        labels: HashMap::new(),
+        awaiting_update: 0,
+        deferred: VecDeque::new(),
+    };
+    // One Adam per local block (resize now that we know the count).
+    st.adapter_opts = (0..st.blocks.len()).map(|_| Adam::new(init.lr, adapter_tensors)).collect();
+
+    loop {
+        // Prefer deferred forwards once the pause is released.
+        let cmd = if st.awaiting_update == 0 && !st.deferred.is_empty() {
+            st.deferred.pop_front().unwrap()
+        } else {
+            match init.cmd_rx.recv() {
+                Ok(c) => c,
+                Err(_) => return Ok(()), // controller dropped
+            }
+        };
+        match cmd {
+            Command::Shutdown => return Ok(()),
+            Command::SetTerminator { block } => st.terminator_block = block,
+            Command::SetHead { head, version } => {
+                if version >= st.head_version {
+                    st.head = head;
+                    st.head_version = version;
+                }
+            }
+            Command::HandoffHead { to_position } => {
+                st.head_version += 1;
+                let head = st.head.clone();
+                let v = st.head_version;
+                st.send_peer(to_position, Command::SetHead { head, version: v })?;
+            }
+            Command::DumpState => {
+                let adapters = st
+                    .blocks
+                    .iter()
+                    .enumerate()
+                    .map(|(i, b)| {
+                        (st.block_offset + i, b[st.backbone_per_block..].to_vec())
+                    })
+                    .collect();
+                st.events
+                    .send(Event::StateDump {
+                        position: st.position,
+                        adapters,
+                        head: st.head.clone(),
+                        head_version: st.head_version,
+                    })
+                    .map_err(|_| Error::Cluster("event channel closed".into()))?;
+            }
+            Command::StartBatch { batch_id, ids, starts, ends } => {
+                st.labels.insert(batch_id, (starts, ends));
+                let mut args = vec![ids];
+                args.extend(st.embed.iter().cloned());
+                let mut out = engine.execute("embed_fwd", &args)?;
+                let x = out.remove(0);
+                // Enter the ring at position 0 (the block-0 holder).  Self-
+                // send when we *are* position 0, so the pause rule in the
+                // Forward handler applies uniformly.
+                st.send_peer(0, Command::Forward {
+                    batch_id,
+                    initiator_pos: st.position,
+                    x,
+                })?;
+            }
+            fwd @ Command::Forward { .. } => {
+                // The pause rule: defer new forwards while an update from a
+                // previous batch is still pending on unfrozen adapters.
+                if st.has_unfrozen() && st.awaiting_update > 0 {
+                    st.deferred.push_back(fwd);
+                    continue;
+                }
+                if let Command::Forward { batch_id, initiator_pos, x } = fwd {
+                    dispatch_forward(&mut st, &engine, batch_id, initiator_pos, x)?;
+                }
+            }
+            Command::HeadCompute { batch_id, h } => {
+                let (starts, ends) = st
+                    .labels
+                    .remove(&batch_id)
+                    .ok_or_else(|| Error::Cluster("labels missing for batch".into()))?;
+                let mut args = vec![h];
+                args.extend(st.head.iter().cloned());
+                args.push(starts);
+                args.push(ends);
+                let mut out = engine.execute("head_loss_grad", &args)?;
+                let loss = out.remove(0).scalar_f32()?;
+                let gh = out.remove(0);
+                let head_grads = out;
+                // Update the local head copy.
+                {
+                    let mut refs: Vec<&mut HostTensor> = st.head.iter_mut().collect();
+                    let grefs: Vec<&HostTensor> = head_grads.iter().collect();
+                    st.head_opt.update(&mut refs, &grefs)?;
+                    st.head_version += 1;
+                }
+                st.events
+                    .send(Event::Loss { batch_id, loss })
+                    .map_err(|_| Error::Cluster("event channel closed".into()))?;
+                // Backward starts at the top ring position.
+                let top = st.num_positions - 1;
+                if top == st.position {
+                    let me = st.position;
+                    handle_backward(&mut st, &engine, batch_id, me, gh)?;
+                } else {
+                    st.send_peer(top, Command::Backward {
+                        batch_id,
+                        initiator_pos: st.position,
+                        gy: gh,
+                    })?;
+                }
+            }
+            Command::Backward { batch_id, initiator_pos, gy } => {
+                handle_backward(&mut st, &engine, batch_id, initiator_pos, gy)?;
+            }
+        }
+    }
+}
+
+/// Run this position's blocks forward and route the result.
+fn dispatch_forward(
+    st: &mut DeviceState,
+    engine: &Engine,
+    batch_id: u64,
+    initiator_pos: usize,
+    x: HostTensor,
+) -> Result<()> {
+    let mut h = x;
+    let mut stored = Vec::new();
+    for (i, params) in st.blocks.iter().enumerate() {
+        let abs_block = st.block_offset + i;
+        if abs_block >= st.terminator_block {
+            stored.push((i, h.clone()));
+        }
+        let mut args = vec![h];
+        args.extend(params.iter().cloned());
+        let mut out = engine.execute("block_fwd", &args)?;
+        h = out.remove(0);
+    }
+    if !stored.is_empty() {
+        st.stored.insert(batch_id, stored);
+        st.awaiting_update += 1;
+    }
+
+    let next = st.position + 1;
+    if next == st.num_positions {
+        // Ring complete: hidden states go home to the initiator.
+        if initiator_pos == st.position {
+            // We are also the initiator: compute the head locally by
+            // re-dispatching through our own handler.
+            st.send_peer(st.position, Command::HeadCompute { batch_id, h })?;
+        } else {
+            st.send_peer(initiator_pos, Command::HeadCompute { batch_id, h })?;
+        }
+    } else {
+        st.send_peer(next, Command::Forward { batch_id, initiator_pos, x: h })?;
+    }
+    Ok(())
+}
+
+/// Backward through this position's unfrozen blocks; relay or finish.
+fn handle_backward(
+    st: &mut DeviceState,
+    engine: &Engine,
+    batch_id: u64,
+    initiator_pos: usize,
+    gy: HostTensor,
+) -> Result<()> {
+    let stored = st.stored.remove(&batch_id).unwrap_or_default();
+    let mut gy = gy;
+    let lowest_local = st.lowest_unfrozen_local();
+    // Walk our blocks top-down over the stored (unfrozen) inputs.
+    for &(i, ref x) in stored.iter().rev() {
+        let params = &st.blocks[i];
+        let mut args = vec![x.clone()];
+        args.extend(params.iter().cloned());
+        args.push(gy);
+        let mut out = engine.execute("block_bwd", &args)?;
+        gy = out.remove(0);
+        let grads = out;
+        let adapters = &mut st.blocks[i][st.backbone_per_block..];
+        let mut refs: Vec<&mut HostTensor> = adapters.iter_mut().collect();
+        let grefs: Vec<&HostTensor> = grads.iter().collect();
+        st.adapter_opts[i].update(&mut refs, &grefs)?;
+    }
+    if !stored.is_empty() {
+        st.awaiting_update = st.awaiting_update.saturating_sub(1);
+    }
+
+    // Early stop: if our lowest block is at/below the terminator, the
+    // backward ends here (paper Fig. 2: bwd u1 → u4 only at depth 3).
+    let our_lowest_is_terminator = st.block_offset <= st.terminator_block
+        || st.position == 0;
+    if our_lowest_is_terminator {
+        st.events
+            .send(Event::BatchDone { batch_id })
+            .map_err(|_| Error::Cluster("event channel closed".into()))?;
+    } else {
+        st.send_peer(st.position - 1, Command::Backward { batch_id, initiator_pos, gy })?;
+    }
+    let _ = lowest_local;
+    Ok(())
+}

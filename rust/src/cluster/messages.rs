@@ -1,0 +1,64 @@
+//! Message protocol between the controller and device actors, and among
+//! device actors themselves (D2D).  Activation/gradient payloads carry the
+//! batch id and the initiator position so the ring can have dynamic start
+//! and end points (paper §III.A).
+
+use std::sync::mpsc::Sender;
+
+use crate::runtime::HostTensor;
+
+/// Commands a device actor accepts on its channel.  Sent by the controller
+/// or by peer devices (D2D).
+pub enum Command {
+    /// (initiator only) Sample arrived: run `Emb` and start the ring
+    /// forward.  Labels stay inside this command — they are never forwarded.
+    StartBatch {
+        batch_id: u64,
+        ids: HostTensor,
+        starts: HostTensor,
+        ends: HostTensor,
+    },
+    /// Ring forward: apply this position's blocks to `x`.
+    Forward {
+        batch_id: u64,
+        initiator_pos: usize,
+        x: HostTensor,
+    },
+    /// Final hidden states coming home to the initiator for the head.
+    HeadCompute { batch_id: u64, h: HostTensor },
+    /// Ring backward: gradient w.r.t. this position's output.
+    Backward {
+        batch_id: u64,
+        initiator_pos: usize,
+        gy: HostTensor,
+    },
+    /// Coordinator control: new unfreeze depth (terminator block).
+    SetTerminator { block: usize },
+    /// Send my head parameters to another device (initiator rotation).
+    HandoffHead { to_position: usize },
+    /// Receive head parameters (rotation target side).
+    SetHead { head: Vec<HostTensor>, version: u64 },
+    /// Report trained state back to the controller.
+    DumpState,
+    Shutdown,
+}
+
+/// Events devices emit to the controller.
+pub enum Event {
+    /// Loss of a batch (emitted by its initiator; labels never moved).
+    Loss { batch_id: u64, loss: f32 },
+    /// The batch's backward fully early-stopped (terminator reached).
+    BatchDone { batch_id: u64 },
+    /// Reply to `DumpState`.
+    StateDump {
+        position: usize,
+        /// (absolute block index, adapter tensors).
+        adapters: Vec<(usize, Vec<HostTensor>)>,
+        head: Vec<HostTensor>,
+        head_version: u64,
+    },
+    Error(String),
+}
+
+/// Peer handle type used inside device threads.
+pub type PeerSender = Sender<Command>;

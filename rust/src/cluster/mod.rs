@@ -1,0 +1,173 @@
+//! In-process edge cluster: one OS thread per device, each owning its own
+//! PJRT [`Engine`] (PJRT clients are not `Send`, and one runtime per device
+//! mirrors the deployment reality), talking over mpsc channels that play
+//! the role of D2D links.
+//!
+//! This is the *distributed execution* half of the reproduction — the fast
+//! benches use `train::run_scheme` (same numerics on one engine), while
+//! this module proves the actual message-passing system works: ring
+//! forwarding with dynamic start/end, label locality (labels never leave
+//! the initiator's thread), early-stopped backward at the terminator,
+//! per-device adapter optimizers, head hand-off device-to-device, and the
+//! pause rule (a device with unfrozen adapters defers a new batch's forward
+//! until its previous update is applied).
+
+pub mod device;
+pub mod messages;
+
+pub use device::{spawn_device, DeviceHandle};
+pub use messages::{Command, Event};
+
+use std::sync::mpsc::{channel, Receiver};
+
+use crate::coordinator::LayerAssignment;
+use crate::data::Batch;
+use crate::error::{Error, Result};
+use crate::runtime::{HostTensor, ModelWeights};
+
+/// Controller-side view of the running cluster.
+pub struct RingCluster {
+    pub handles: Vec<DeviceHandle>,
+    events: Receiver<Event>,
+    assignment: LayerAssignment,
+    next_batch_id: u64,
+}
+
+impl RingCluster {
+    /// Spawn one device thread per ring position and distribute weights:
+    /// each device gets its contiguous block range plus `Emb`/`Hed` copies.
+    pub fn spawn(
+        artifact_dir: &std::path::Path,
+        assignment: LayerAssignment,
+        weights: &ModelWeights,
+        lr: f32,
+        terminator_block: usize,
+    ) -> Result<Self> {
+        let n = assignment.num_positions();
+        let (event_tx, events) = channel::<Event>();
+
+        // Create command channels first so every device can hold senders to
+        // every other device (full D2D mesh).
+        let mut cmd_txs = Vec::with_capacity(n);
+        let mut cmd_rxs = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = channel::<Command>();
+            cmd_txs.push(tx);
+            cmd_rxs.push(rx);
+        }
+
+        let mut handles = Vec::with_capacity(n);
+        for pos in 0..n {
+            let (bs, be) = assignment.blocks[pos];
+            let blocks: Vec<Vec<HostTensor>> = weights.blocks[bs..be].to_vec();
+            let handle = spawn_device(device::DeviceInit {
+                position: pos,
+                device_id: assignment.order[pos],
+                artifact_dir: artifact_dir.to_path_buf(),
+                block_offset: bs,
+                blocks,
+                backbone_per_block: weights.backbone_per_block,
+                embed: weights.embed.clone(),
+                head: weights.head.clone(),
+                lr,
+                terminator_block,
+                num_positions: n,
+                peers: cmd_txs.clone(),
+                events: event_tx.clone(),
+                cmd_rx: cmd_rxs.remove(0),
+            })?;
+            handles.push(handle);
+        }
+
+        Ok(RingCluster { handles, events, assignment, next_batch_id: 0 })
+    }
+
+    pub fn assignment(&self) -> &LayerAssignment {
+        &self.assignment
+    }
+
+    /// Broadcast a new terminator block (unfreeze-depth change).
+    pub fn set_terminator(&self, block: usize) -> Result<()> {
+        for h in &self.handles {
+            h.send(Command::SetTerminator { block })?;
+        }
+        Ok(())
+    }
+
+    /// Run one mini-batch originating at `initiator` (ring position), wait
+    /// for the loss and batch completion, and return the loss.
+    pub fn run_batch(&mut self, initiator_pos: usize, batch: &Batch) -> Result<f32> {
+        let id = self.next_batch_id;
+        self.next_batch_id += 1;
+        self.handles[initiator_pos].send(Command::StartBatch {
+            batch_id: id,
+            ids: batch.ids.clone(),
+            starts: batch.starts.clone(),
+            ends: batch.ends.clone(),
+        })?;
+        let mut loss = None;
+        loop {
+            match self.recv()? {
+                Event::Loss { batch_id, loss: l } if batch_id == id => loss = Some(l),
+                Event::BatchDone { batch_id } if batch_id == id => {
+                    return loss.ok_or_else(|| Error::Cluster("done before loss".into()));
+                }
+                Event::Error(e) => return Err(Error::Cluster(e)),
+                _ => {}
+            }
+        }
+    }
+
+    /// Direct device-to-device head hand-off (paper §IV.3).
+    pub fn handoff_head(&self, from_pos: usize, to_pos: usize) -> Result<()> {
+        self.handles[from_pos].send(Command::HandoffHead { to_position: to_pos })?;
+        Ok(())
+    }
+
+    /// Pull every device's trained adapters + the head back into a full
+    /// weight struct (for centralized evaluation).
+    pub fn collect_weights(&self, mut base: ModelWeights) -> Result<ModelWeights> {
+        for h in &self.handles {
+            h.send(Command::DumpState)?;
+        }
+        let mut remaining = self.handles.len();
+        let mut newest_head: Option<(u64, Vec<HostTensor>)> = None;
+        while remaining > 0 {
+            match self.recv()? {
+                Event::StateDump { adapters, head, head_version, .. } => {
+                    for (block, tensors) in adapters {
+                        let bpb = base.backbone_per_block;
+                        base.blocks[block][bpb..].clone_from_slice(&tensors);
+                    }
+                    if newest_head.as_ref().map_or(true, |(v, _)| head_version > *v) {
+                        newest_head = Some((head_version, head));
+                    }
+                    remaining -= 1;
+                }
+                Event::Error(e) => return Err(Error::Cluster(e)),
+                _ => {}
+            }
+        }
+        if let Some((_, head)) = newest_head {
+            base.head = head;
+        }
+        Ok(base)
+    }
+
+    fn recv(&self) -> Result<Event> {
+        self.events
+            .recv_timeout(std::time::Duration::from_secs(120))
+            .map_err(|e| Error::Cluster(format!("event channel: {e}")))
+    }
+
+    /// Graceful shutdown; joins all device threads.
+    pub fn shutdown(self) -> Result<()> {
+        for h in &self.handles {
+            let _ = h.send(Command::Shutdown);
+        }
+        for h in self.handles {
+            h.join()?;
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,230 @@
+//! The coordinator (paper §III.A, Algorithm 1): the control node that
+//! collects device state, plans the layer assignment, schedules top-down
+//! unfreezing, rotates initiators, and tracks convergence.  It never
+//! touches model weights — control signalling only — so it is not a
+//! bandwidth bottleneck (and any client could play this role).
+
+pub mod planner;
+pub mod ring;
+pub mod unfreeze;
+
+pub use planner::{Plan, Planner, PlannerCosts};
+pub use ring::{InitiatorRotation, LayerAssignment};
+pub use unfreeze::UnfreezeSchedule;
+
+use crate::config::{ClusterConfig, TrainingConfig};
+use crate::error::Result;
+use crate::model::ModelMeta;
+
+/// Convergence tracking: round-level loss EMA with plateau detection
+/// (Algorithm 1 line 12 "if model has converged").
+#[derive(Debug, Clone)]
+pub struct ConvergenceTracker {
+    tol: f32,
+    patience: usize,
+    ema: Option<f32>,
+    best: f32,
+    stall: usize,
+    pub converged_at_round: Option<usize>,
+}
+
+impl ConvergenceTracker {
+    pub fn new(tol: f32, patience: usize) -> Self {
+        ConvergenceTracker {
+            tol,
+            patience,
+            ema: None,
+            best: f32::INFINITY,
+            stall: 0,
+            converged_at_round: None,
+        }
+    }
+
+    /// Feed the round's mean loss; returns true once converged.
+    pub fn observe(&mut self, round: usize, loss: f32) -> bool {
+        let ema = match self.ema {
+            None => loss,
+            Some(prev) => 0.2 * loss + 0.8 * prev,
+        };
+        self.ema = Some(ema);
+        if ema < self.best - self.tol {
+            self.best = ema;
+            self.stall = 0;
+        } else {
+            self.stall += 1;
+            if self.stall >= self.patience && self.converged_at_round.is_none() {
+                self.converged_at_round = Some(round);
+            }
+        }
+        self.converged_at_round.is_some()
+    }
+
+    pub fn ema(&self) -> Option<f32> {
+        self.ema
+    }
+}
+
+/// Per-round control decisions the coordinator broadcasts.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RoundPlan {
+    pub round: usize,
+    /// Unfreeze depth `d` for this round.
+    pub depth: usize,
+    /// 0-based lowest unfrozen block.
+    pub terminator_block: usize,
+    /// Ring position that owns the terminator block.
+    pub terminator_position: usize,
+    /// Initiator device order for this round.
+    pub initiators: Vec<usize>,
+}
+
+/// The coordinator state machine.
+#[derive(Debug, Clone)]
+pub struct Coordinator {
+    pub assignment: LayerAssignment,
+    pub unfreeze: UnfreezeSchedule,
+    pub rotation: InitiatorRotation,
+    pub tracker: ConvergenceTracker,
+    layers: usize,
+}
+
+impl Coordinator {
+    /// Initialization stage: plan layers from device state info, build the
+    /// rotation and the unfreeze schedule.
+    pub fn initialize(
+        meta: &ModelMeta,
+        cluster: &ClusterConfig,
+        training: &TrainingConfig,
+        costs: PlannerCosts,
+    ) -> Result<Self> {
+        let plan = Planner::new(meta, cluster, costs).plan()?;
+        Self::with_assignment(plan.assignment, meta, cluster, training)
+    }
+
+    /// Use a pre-computed assignment (tests, Fig. 2 replication, ablations).
+    pub fn with_assignment(
+        assignment: LayerAssignment,
+        meta: &ModelMeta,
+        cluster: &ClusterConfig,
+        training: &TrainingConfig,
+    ) -> Result<Self> {
+        assignment.validate(meta.hyper.layers)?;
+        let unfreeze = UnfreezeSchedule::new(
+            training.initial_depth,
+            training.unfreeze_interval,
+            meta.hyper.layers,
+        );
+        // First initiator: position 0's device (the block-0 holder), then
+        // best-channel greedy (paper §IV.3).
+        let rotation =
+            InitiatorRotation::best_channel(&cluster.rate_bytes_per_s, assignment.order[0]);
+        Ok(Coordinator {
+            assignment,
+            unfreeze,
+            rotation,
+            tracker: ConvergenceTracker::new(training.convergence_tol, training.convergence_patience),
+            layers: meta.hyper.layers,
+        })
+    }
+
+    /// The control decisions for round `r`.
+    pub fn round_plan(&self, round: usize) -> Result<RoundPlan> {
+        let depth = self.unfreeze.depth_at_round(round);
+        let terminator_block = self.unfreeze.terminator_block(depth);
+        let terminator_position = self.assignment.terminator_position(terminator_block)?;
+        Ok(RoundPlan {
+            round,
+            depth,
+            terminator_block,
+            terminator_position,
+            initiators: self.rotation.order.clone(),
+        })
+    }
+
+    pub fn layers(&self) -> usize {
+        self.layers
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::ModelHyper;
+
+    fn meta() -> ModelMeta {
+        ModelMeta {
+            hyper: ModelHyper {
+                name: "t".into(),
+                vocab: 512,
+                hidden: 64,
+                layers: 14,
+                heads: 4,
+                ffn: 256,
+                bottleneck: 16,
+                seq: 32,
+                batch: 4,
+                init_std: 0.02,
+            },
+            embed_params: 1000,
+            block_backbone_params: 1000,
+            block_adapter_params: 100,
+            head_params: 10,
+        }
+    }
+
+    fn coordinator() -> Coordinator {
+        let assignment =
+            LayerAssignment::from_counts(vec![0, 1, 2, 3], &[4, 5, 2, 3]).unwrap();
+        Coordinator::with_assignment(
+            assignment,
+            &meta(),
+            &ClusterConfig::paper_default(),
+            &TrainingConfig { initial_depth: 3, unfreeze_interval: 10, ..Default::default() },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn fig2_round_plan() {
+        let c = coordinator();
+        let rp = c.round_plan(0).unwrap();
+        assert_eq!(rp.depth, 3);
+        assert_eq!(rp.terminator_block, 11);
+        assert_eq!(rp.terminator_position, 3); // u4 in the paper's Fig. 2
+        assert_eq!(rp.initiators.len(), 4);
+    }
+
+    #[test]
+    fn depth_deepens_across_rounds() {
+        let c = coordinator();
+        assert_eq!(c.round_plan(0).unwrap().depth, 3);
+        assert_eq!(c.round_plan(10).unwrap().depth, 4);
+        let full = c.round_plan(200).unwrap();
+        assert_eq!(full.depth, 14);
+        assert_eq!(full.terminator_position, 0);
+    }
+
+    #[test]
+    fn convergence_detects_plateau() {
+        let mut t = ConvergenceTracker::new(1e-3, 3);
+        let mut converged_round = None;
+        // The 0.2-blend EMA needs ~25 rounds on a plateau at 1.0 before the
+        // per-round improvement drops under tol.
+        for r in 0..60 {
+            let loss = if r < 5 { 3.0 - r as f32 * 0.5 } else { 1.0 };
+            if t.observe(r, loss) && converged_round.is_none() {
+                converged_round = Some(r);
+            }
+        }
+        assert!(converged_round.is_some());
+        assert!(t.converged_at_round.unwrap() >= 5);
+    }
+
+    #[test]
+    fn convergence_not_triggered_while_improving() {
+        let mut t = ConvergenceTracker::new(1e-3, 3);
+        for r in 0..50 {
+            assert!(!t.observe(r, 10.0 - 0.19 * r as f32));
+        }
+    }
+}

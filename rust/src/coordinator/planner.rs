@@ -1,0 +1,285 @@
+//! Layer-assignment planner (paper §IV.1: the coordinator "determines the
+//! layer assignment policy based on the collected system status
+//! information").  The paper leaves the algorithm unspecified; DESIGN.md §5
+//! documents ours:
+//!
+//! * objective — minimize the pipeline bottleneck
+//!   `max_s work(s)/speed(dev_s) + transfer(s → s+1)`
+//!   over contiguous partitions and ring orderings;
+//! * method — exact contiguous-partition DP for a fixed device order
+//!   (O(U·L²)), wrapped in exhaustive order search for U ≤ 8 and a
+//!   speed-descending greedy order beyond;
+//! * constraint — per-device memory budgets `C_u^mem` (checked with the
+//!   RingAda full-depth memory model, the worst case).
+
+use crate::config::ClusterConfig;
+use crate::coordinator::ring::LayerAssignment;
+use crate::error::{Error, Result};
+use crate::model::{MemoryModel, ModelMeta};
+use crate::config::Scheme;
+
+/// Planner inputs that come from profiling (the LUT) rather than configs.
+#[derive(Debug, Clone, Copy)]
+pub struct PlannerCosts {
+    /// Seconds for one block forward on a speed-1.0 device.
+    pub block_fwd_s: f64,
+    /// Bytes of one inter-stage activation transfer.
+    pub activation_bytes: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub assignment: LayerAssignment,
+    /// Predicted bottleneck stage time (seconds/batch) — the planner's
+    /// objective value.
+    pub bottleneck_s: f64,
+}
+
+/// Exact DP over contiguous partitions for a fixed device order: minimize
+/// the max stage cost.  `stage_cost(dev, blocks)` must be monotone in
+/// `blocks`.
+fn partition_dp(
+    order: &[usize],
+    layers: usize,
+    stage_cost: &dyn Fn(usize, usize) -> f64,
+) -> (Vec<usize>, f64) {
+    let u = order.len();
+    // dp[s][l] = minimal bottleneck placing the first l blocks on the first
+    // s ring positions, every position non-empty.
+    let inf = f64::INFINITY;
+    let mut dp = vec![vec![inf; layers + 1]; u + 1];
+    let mut choice = vec![vec![0usize; layers + 1]; u + 1];
+    dp[0][0] = 0.0;
+    for s in 1..=u {
+        for l in s..=layers - (u - s) {
+            for prev in (s - 1)..l {
+                let cost = stage_cost(order[s - 1], l - prev);
+                let cand = dp[s - 1][prev].max(cost);
+                if cand < dp[s][l] {
+                    dp[s][l] = cand;
+                    choice[s][l] = prev;
+                }
+            }
+        }
+    }
+    // Recover block counts.
+    let mut counts = vec![0usize; u];
+    let mut l = layers;
+    for s in (1..=u).rev() {
+        let prev = choice[s][l];
+        counts[s - 1] = l - prev;
+        l = prev;
+    }
+    (counts, dp[u][layers])
+}
+
+/// The planner proper.
+pub struct Planner<'a> {
+    pub meta: &'a ModelMeta,
+    pub cluster: &'a ClusterConfig,
+    pub costs: PlannerCosts,
+}
+
+impl<'a> Planner<'a> {
+    pub fn new(meta: &'a ModelMeta, cluster: &'a ClusterConfig, costs: PlannerCosts) -> Self {
+        Planner { meta, cluster, costs }
+    }
+
+    fn stage_cost(&self, dev: usize, blocks: usize, next_dev: usize) -> f64 {
+        let compute = self.costs.block_fwd_s * blocks as f64
+            / self.cluster.devices[dev].compute_speed;
+        let rate = self.cluster.rate_bytes_per_s[dev][next_dev];
+        let transfer = self.costs.activation_bytes as f64 / rate + self.cluster.link_latency_s;
+        compute + transfer
+    }
+
+    fn plan_for_order(&self, order: &[usize]) -> Option<Plan> {
+        let layers = self.meta.hyper.layers;
+        let u = order.len();
+        if layers < u {
+            return None;
+        }
+        // Transfer cost depends on the *next* device in ring order; bind it
+        // via position lookup inside the DP cost closure.
+        let cost = |dev: usize, blocks: usize| {
+            let pos = order.iter().position(|&d| d == dev).unwrap();
+            let next = order[(pos + 1) % u];
+            self.stage_cost(dev, blocks, next)
+        };
+        let (counts, bottleneck) = partition_dp(order, layers, &cost);
+        if !bottleneck.is_finite() {
+            return None;
+        }
+        let assignment = LayerAssignment::from_counts(order.to_vec(), &counts).ok()?;
+        // Memory feasibility: worst case is full unfreeze depth.
+        let mm = MemoryModel::new(self.meta.clone());
+        let unfrozen = assignment.counts();
+        let (per, _) = mm.cluster_peak(Scheme::RingAda, &counts, &unfrozen, 1);
+        for (pos, b) in per.iter().enumerate() {
+            let dev = assignment.order[pos];
+            if b.total() > self.cluster.devices[dev].mem_bytes {
+                return None;
+            }
+        }
+        Some(Plan { assignment, bottleneck_s: bottleneck })
+    }
+
+    /// Search ring orders: exhaustive for U ≤ 8, speed-descending greedy
+    /// otherwise.  Returns the best feasible plan.
+    pub fn plan(&self) -> Result<Plan> {
+        let n = self.cluster.len();
+        let mut best: Option<Plan> = None;
+        let mut consider = |plan: Option<Plan>| {
+            if let Some(p) = plan {
+                if best.as_ref().map_or(true, |b| p.bottleneck_s < b.bottleneck_s) {
+                    best = Some(p);
+                }
+            }
+        };
+        if n <= 8 {
+            let mut order: Vec<usize> = (0..n).collect();
+            permute(&mut order, 0, &mut |perm| consider(self.plan_for_order(perm)));
+        } else {
+            let mut order: Vec<usize> = (0..n).collect();
+            order.sort_by(|&a, &b| {
+                self.cluster.devices[b]
+                    .compute_speed
+                    .partial_cmp(&self.cluster.devices[a].compute_speed)
+                    .unwrap()
+            });
+            consider(self.plan_for_order(&order));
+            consider(self.plan_for_order(&(0..n).collect::<Vec<_>>()));
+        }
+        best.ok_or_else(|| {
+            Error::Plan("no feasible layer assignment (memory budgets too small?)".into())
+        })
+    }
+
+    /// Baseline for the ablation bench: uniform split in id order.
+    pub fn uniform_plan(&self) -> Result<Plan> {
+        let layers = self.meta.hyper.layers;
+        let n = self.cluster.len();
+        let assignment = LayerAssignment::uniform(n, layers);
+        let mut bottleneck: f64 = 0.0;
+        for (pos, &(s, e)) in assignment.blocks.iter().enumerate() {
+            let dev = assignment.order[pos];
+            let next = assignment.order[(pos + 1) % n];
+            bottleneck = bottleneck.max(self.stage_cost(dev, e - s, next));
+        }
+        Ok(Plan { assignment, bottleneck_s: bottleneck })
+    }
+}
+
+fn permute(xs: &mut Vec<usize>, k: usize, f: &mut impl FnMut(&[usize])) {
+    if k == xs.len() {
+        f(xs);
+        return;
+    }
+    for i in k..xs.len() {
+        xs.swap(k, i);
+        permute(xs, k + 1, f);
+        xs.swap(k, i);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::ModelHyper;
+
+    fn meta(layers: usize) -> ModelMeta {
+        ModelMeta {
+            hyper: ModelHyper {
+                name: "t".into(),
+                vocab: 512,
+                hidden: 64,
+                layers,
+                heads: 4,
+                ffn: 256,
+                bottleneck: 16,
+                seq: 32,
+                batch: 4,
+                init_std: 0.02,
+            },
+            embed_params: 512 * 64,
+            block_backbone_params: 100_000,
+            block_adapter_params: 2_128,
+            head_params: 130,
+        }
+    }
+
+    fn costs() -> PlannerCosts {
+        PlannerCosts { block_fwd_s: 0.010, activation_bytes: 4 * 32 * 64 * 4 }
+    }
+
+    #[test]
+    fn homogeneous_cluster_gets_even_split() {
+        let m = meta(12);
+        let cl = ClusterConfig::homogeneous(4, 1e9);
+        let plan = Planner::new(&m, &cl, costs()).plan().unwrap();
+        assert_eq!(plan.assignment.counts(), vec![3, 3, 3, 3]);
+    }
+
+    #[test]
+    fn faster_devices_get_more_blocks() {
+        let m = meta(12);
+        let mut cl = ClusterConfig::homogeneous(4, 1e9);
+        cl.devices[2].compute_speed = 3.0; // one much faster device
+        let plan = Planner::new(&m, &cl, costs()).plan().unwrap();
+        let pos = plan.assignment.position_of_device(2).unwrap();
+        let counts = plan.assignment.counts();
+        assert!(
+            counts[pos] > 3,
+            "fast device got {} blocks in {counts:?}",
+            counts[pos]
+        );
+        // And the plan beats the uniform baseline.
+        let uni = Planner::new(&m, &cl, costs()).uniform_plan().unwrap();
+        assert!(plan.bottleneck_s <= uni.bottleneck_s + 1e-12);
+    }
+
+    #[test]
+    fn memory_budget_excludes_overloaded_devices() {
+        let m = meta(8);
+        let mut cl = ClusterConfig::homogeneous(2, 1e9);
+        // Device 1 can hold almost nothing.
+        cl.devices[1].mem_bytes = 1 << 20;
+        let plan = Planner::new(&m, &cl, costs()).plan();
+        // Either infeasible (both small) or device 1 gets the minimum.
+        if let Ok(p) = plan {
+            let pos = p.assignment.position_of_device(1).unwrap();
+            assert_eq!(p.assignment.counts()[pos], 1);
+        }
+    }
+
+    #[test]
+    fn plan_covers_all_blocks_and_validates() {
+        let m = meta(14);
+        let cl = ClusterConfig::paper_default();
+        let plan = Planner::new(&m, &cl, costs()).plan().unwrap();
+        plan.assignment.validate(14).unwrap();
+        assert!(plan.bottleneck_s > 0.0);
+    }
+
+    #[test]
+    fn infeasible_when_fewer_blocks_than_devices() {
+        let m = meta(2);
+        let cl = ClusterConfig::homogeneous(4, 1e9);
+        assert!(Planner::new(&m, &cl, costs()).plan().is_err());
+    }
+
+    #[test]
+    fn dp_is_optimal_on_small_instance() {
+        // 2 devices, speeds 1 and 2, 6 blocks, negligible comms: optimal
+        // split puts 2 blocks on the slow device, 4 on the fast one
+        // (bottleneck 2.0 block-times) — any other split is worse.
+        let m = meta(6);
+        let mut cl = ClusterConfig::homogeneous(2, 1e12);
+        cl.link_latency_s = 0.0;
+        cl.devices[1].compute_speed = 2.0;
+        let plan = Planner::new(&m, &cl, costs()).plan().unwrap();
+        let pos0 = plan.assignment.position_of_device(0).unwrap();
+        let counts = plan.assignment.counts();
+        assert_eq!(counts[pos0], 2, "slow device should get 2 of 6: {counts:?}");
+    }
+}

@@ -1,0 +1,238 @@
+//! Ring topology and layer assignment (paper §III.A).
+//!
+//! A [`LayerAssignment`] places a contiguous range of transformer blocks on
+//! each ring position; ring position `s` forwards to position `s+1 mod U`.
+//! The forward pass for a batch starts at the initiator's `Emb`, enters the
+//! ring at the position holding block 0, traverses positions in block
+//! order, and the final hidden states return to the initiator for the head
+//! (labels never move).  The backward pass walks the same positions in
+//! reverse and early-stops at the terminator position.
+
+use crate::error::{Error, Result};
+
+/// Which device sits at each ring position, and which blocks it owns.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerAssignment {
+    /// `order[s]` = device id occupying ring position `s`.  Positions are
+    /// in block order: position 0 holds block 0.
+    pub order: Vec<usize>,
+    /// `blocks[s]` = `[start, end)` block range at ring position `s`.
+    pub blocks: Vec<(usize, usize)>,
+}
+
+impl LayerAssignment {
+    /// Even split of `layers` blocks over devices `0..n` in id order
+    /// (remainder spread over the leading positions).
+    pub fn uniform(n: usize, layers: usize) -> Self {
+        let base = layers / n;
+        let extra = layers % n;
+        let mut blocks = Vec::with_capacity(n);
+        let mut start = 0;
+        for s in 0..n {
+            let len = base + usize::from(s < extra);
+            blocks.push((start, start + len));
+            start += len;
+        }
+        LayerAssignment { order: (0..n).collect(), blocks }
+    }
+
+    /// Build from per-position block counts (e.g. the paper's 4:5:2:3).
+    pub fn from_counts(order: Vec<usize>, counts: &[usize]) -> Result<Self> {
+        if order.len() != counts.len() {
+            return Err(Error::Plan("order/counts length mismatch".into()));
+        }
+        let mut blocks = Vec::with_capacity(counts.len());
+        let mut start = 0;
+        for &c in counts {
+            blocks.push((start, start + c));
+            start += c;
+        }
+        let a = LayerAssignment { order, blocks };
+        a.validate(start)?;
+        Ok(a)
+    }
+
+    pub fn num_positions(&self) -> usize {
+        self.order.len()
+    }
+
+    pub fn validate(&self, layers: usize) -> Result<()> {
+        let n = self.order.len();
+        if n == 0 || self.blocks.len() != n {
+            return Err(Error::Plan("empty or inconsistent assignment".into()));
+        }
+        let mut seen = vec![false; n];
+        for &d in &self.order {
+            if d >= n || seen[d] {
+                return Err(Error::Plan(format!(
+                    "order must be a permutation of 0..{n} (bad id {d})"
+                )));
+            }
+            seen[d] = true;
+        }
+        let mut expect = 0;
+        for &(s, e) in &self.blocks {
+            if s != expect || e < s {
+                return Err(Error::Plan(format!(
+                    "block ranges must be contiguous from 0 (got [{s},{e}) expecting start {expect})"
+                )));
+            }
+            expect = e;
+        }
+        if expect != layers {
+            return Err(Error::Plan(format!(
+                "assignment covers {expect} blocks, model has {layers}"
+            )));
+        }
+        Ok(())
+    }
+
+    /// Ring position that owns `block`.
+    pub fn position_of_block(&self, block: usize) -> Result<usize> {
+        self.blocks
+            .iter()
+            .position(|&(s, e)| s <= block && block < e)
+            .ok_or_else(|| Error::Plan(format!("block {block} not assigned")))
+    }
+
+    /// Ring position of device `dev`.
+    pub fn position_of_device(&self, dev: usize) -> Result<usize> {
+        self.order
+            .iter()
+            .position(|&d| d == dev)
+            .ok_or_else(|| Error::Plan(format!("device {dev} not in ring")))
+    }
+
+    /// Device id that owns `block`.
+    pub fn device_of_block(&self, block: usize) -> Result<usize> {
+        Ok(self.order[self.position_of_block(block)?])
+    }
+
+    /// Number of blocks at each ring position.
+    pub fn counts(&self) -> Vec<usize> {
+        self.blocks.iter().map(|&(s, e)| e - s).collect()
+    }
+
+    /// Unfrozen-adapter count per ring position at `terminator` (0-based
+    /// lowest unfrozen block): position `s` trains the adapters of its
+    /// blocks that are ≥ terminator.
+    pub fn unfrozen_per_position(&self, terminator: usize) -> Vec<usize> {
+        self.blocks
+            .iter()
+            .map(|&(s, e)| e.saturating_sub(s.max(terminator)).min(e - s))
+            .collect()
+    }
+
+    /// Ring positions `[p, U)` hold only frozen blocks ⇒ never backprop at
+    /// this depth: the first position with any unfrozen adapter.
+    pub fn terminator_position(&self, terminator: usize) -> Result<usize> {
+        if terminator >= self.blocks.last().map(|&(_, e)| e).unwrap_or(0) {
+            return Err(Error::Plan(format!("terminator {terminator} beyond last block")));
+        }
+        self.position_of_block(terminator)
+    }
+}
+
+/// Initiator rotation (paper §IV.3): after its local iterations, the
+/// current initiator hands the head to the neighbor with the best channel
+/// quality among devices that have not yet initiated this round.
+#[derive(Debug, Clone)]
+pub struct InitiatorRotation {
+    /// Device ids in rotation order for one round.
+    pub order: Vec<usize>,
+}
+
+impl InitiatorRotation {
+    /// Greedy best-channel ordering over the link-rate matrix, starting at
+    /// `first`.
+    pub fn best_channel(rate: &[Vec<f64>], first: usize) -> Self {
+        let n = rate.len();
+        let mut order = vec![first];
+        let mut used = vec![false; n];
+        used[first] = true;
+        while order.len() < n {
+            let cur = *order.last().unwrap();
+            let next = (0..n)
+                .filter(|&v| !used[v])
+                .max_by(|&a, &b| {
+                    rate[cur][a]
+                        .partial_cmp(&rate[cur][b])
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                })
+                .unwrap();
+            used[next] = true;
+            order.push(next);
+        }
+        InitiatorRotation { order }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's Fig. 2 instance: 4 devices, 14 blocks split 4:5:2:3.
+    fn fig2() -> LayerAssignment {
+        LayerAssignment::from_counts(vec![0, 1, 2, 3], &[4, 5, 2, 3]).unwrap()
+    }
+
+    #[test]
+    fn uniform_covers_all_blocks() {
+        let a = LayerAssignment::uniform(4, 14);
+        a.validate(14).unwrap();
+        assert_eq!(a.counts(), vec![4, 4, 3, 3]);
+    }
+
+    #[test]
+    fn fig2_positions() {
+        let a = fig2();
+        a.validate(14).unwrap();
+        assert_eq!(a.device_of_block(0).unwrap(), 0);
+        assert_eq!(a.device_of_block(4).unwrap(), 1);
+        assert_eq!(a.device_of_block(9).unwrap(), 2);
+        assert_eq!(a.device_of_block(11).unwrap(), 3);
+        assert!(a.device_of_block(14).is_err());
+    }
+
+    #[test]
+    fn fig2_terminator_depth3_is_u4() {
+        // depth 3 of 14 blocks ⇒ terminator block 11 ⇒ position 3 (u4).
+        let a = fig2();
+        assert_eq!(a.terminator_position(11).unwrap(), 3);
+        assert_eq!(a.unfrozen_per_position(11), vec![0, 0, 0, 3]);
+    }
+
+    #[test]
+    fn unfrozen_counts_partial_device() {
+        // terminator block 10 cuts position 2's range [9,11) in half.
+        let a = fig2();
+        assert_eq!(a.unfrozen_per_position(10), vec![0, 0, 1, 3]);
+        assert_eq!(a.unfrozen_per_position(0), vec![4, 5, 2, 3]);
+    }
+
+    #[test]
+    fn validation_rejects_gaps_and_bad_perms() {
+        let bad = LayerAssignment { order: vec![0, 1], blocks: vec![(0, 3), (4, 6)] };
+        assert!(bad.validate(6).is_err());
+        let bad2 = LayerAssignment { order: vec![0, 0], blocks: vec![(0, 3), (3, 6)] };
+        assert!(bad2.validate(6).is_err());
+        let bad3 = LayerAssignment { order: vec![0, 1], blocks: vec![(0, 3), (3, 5)] };
+        assert!(bad3.validate(6).is_err());
+    }
+
+    #[test]
+    fn rotation_visits_every_device_once() {
+        let rate = vec![
+            vec![0.0, 5.0, 1.0, 1.0],
+            vec![5.0, 0.0, 9.0, 1.0],
+            vec![1.0, 9.0, 0.0, 2.0],
+            vec![1.0, 1.0, 2.0, 0.0],
+        ];
+        let r = InitiatorRotation::best_channel(&rate, 0);
+        let mut sorted = r.order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2, 3]);
+        // Greedy: 0 -> 1 (rate 5), 1 -> 2 (rate 9), then 3.
+        assert_eq!(r.order, vec![0, 1, 2, 3]);
+    }
+}

@@ -1,0 +1,90 @@
+//! Top-down scheduled adapter unfreezing (paper Algorithm 1, lines 13-16).
+//!
+//! Training starts with only the head and the top-most adapter unfrozen
+//! (`d = initial_depth`); every `interval` rounds the coordinator unfreezes
+//! the next adapter down (`d ← d + 1`), until all `L` adapters train.
+//! Backward propagation early-stops at the *terminator* — the lowest
+//! unfrozen block.
+
+/// The unfreeze policy; pure function of the round index.
+#[derive(Debug, Clone)]
+pub struct UnfreezeSchedule {
+    pub initial_depth: usize,
+    pub interval: usize,
+    /// Total transformer blocks `L` (depth saturates here).
+    pub layers: usize,
+}
+
+impl UnfreezeSchedule {
+    pub fn new(initial_depth: usize, interval: usize, layers: usize) -> Self {
+        assert!(initial_depth >= 1 && interval >= 1 && layers >= 1);
+        UnfreezeSchedule { initial_depth: initial_depth.min(layers), interval, layers }
+    }
+
+    /// Unfreeze depth `d` in round `r` (0-based): `initial + r / interval`,
+    /// saturating at `layers`.
+    pub fn depth_at_round(&self, round: usize) -> usize {
+        (self.initial_depth + round / self.interval).min(self.layers)
+    }
+
+    /// 0-based index of the terminator block (the lowest unfrozen block):
+    /// blocks `[terminator, layers)` are unfrozen at this depth.
+    pub fn terminator_block(&self, depth: usize) -> usize {
+        self.layers - depth.clamp(1, self.layers)
+    }
+
+    /// Is `block` (0-based) unfrozen at `depth`?
+    pub fn is_unfrozen(&self, block: usize, depth: usize) -> bool {
+        block >= self.terminator_block(depth)
+    }
+
+    /// First round at which every adapter is unfrozen.
+    pub fn full_depth_round(&self) -> usize {
+        if self.initial_depth >= self.layers {
+            0
+        } else {
+            (self.layers - self.initial_depth) * self.interval
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn depth_grows_stepwise() {
+        let s = UnfreezeSchedule::new(1, 40, 12);
+        assert_eq!(s.depth_at_round(0), 1);
+        assert_eq!(s.depth_at_round(39), 1);
+        assert_eq!(s.depth_at_round(40), 2);
+        assert_eq!(s.depth_at_round(80), 3);
+        assert_eq!(s.depth_at_round(10_000), 12);
+    }
+
+    #[test]
+    fn terminator_is_lowest_unfrozen() {
+        let s = UnfreezeSchedule::new(1, 10, 14);
+        // Fig. 2: L = 14, depth 3 ⇒ unfrozen blocks 11..14 (0-based),
+        // terminator = block 11.
+        assert_eq!(s.terminator_block(3), 11);
+        assert!(s.is_unfrozen(11, 3));
+        assert!(s.is_unfrozen(13, 3));
+        assert!(!s.is_unfrozen(10, 3));
+    }
+
+    #[test]
+    fn depth_saturates_at_layers() {
+        let s = UnfreezeSchedule::new(2, 5, 4);
+        assert_eq!(s.depth_at_round(100), 4);
+        assert_eq!(s.terminator_block(4), 0);
+        assert_eq!(s.full_depth_round(), 10);
+    }
+
+    #[test]
+    fn initial_depth_clamped() {
+        let s = UnfreezeSchedule::new(99, 5, 4);
+        assert_eq!(s.depth_at_round(0), 4);
+        assert_eq!(s.full_depth_round(), 0);
+    }
+}

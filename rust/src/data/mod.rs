@@ -1,0 +1,284 @@
+//! Synthetic extractive-QA corpus — the SQuAD stand-in (DESIGN.md §2).
+//!
+//! Task: the input is `[CLS] <question tokens> [SEP] <context tokens>`;
+//! the context contains exactly one *highlighted* span `[HLS] <answer
+//! tokens> [HLE]` (the answer repeats the question tokens, SQuAD-style),
+//! and the label is the `(start, end)` position of the highlighted span
+//! (markers inclusive).
+//!
+//! Why markers: the paper fine-tunes a *pretrained* mBERT, whose attention
+//! can do content-based question→context matching out of the box.  Our
+//! backbone is synthesized (frozen random — DESIGN.md §2), and serial
+//! adapters are per-token MLPs: they cannot create the cross-token
+//! matching a pure copy-task needs.  Boundary markers keep the task
+//! extractive-QA-shaped (find the answer span; F1/EM metrics unchanged)
+//! while making it learnable in the frozen-backbone + adapter regime —
+//! token identity survives the residual stream, so span detection is
+//! exactly what adapters + head can and must learn.
+//!
+//! Each device draws from its own token sub-range (plus a shared pool) so
+//! the per-device datasets are non-iid: using *all* devices' data — the
+//! paper's data-efficiency argument — measurably helps.
+
+use crate::error::{Error, Result};
+use crate::runtime::rng::Rng;
+use crate::runtime::tensor::HostTensor;
+
+/// Reserved token ids.
+pub const PAD: i32 = 0;
+pub const CLS: i32 = 1;
+pub const SEP: i32 = 2;
+/// Highlight-start marker: opens the answer span.
+pub const HLS: i32 = 3;
+/// Highlight-end marker: closes the answer span.
+pub const HLE: i32 = 4;
+pub const FIRST_CONTENT: i32 = 5;
+
+/// One QA example.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Example {
+    /// Token ids, length = seq.
+    pub ids: Vec<i32>,
+    /// Answer span, inclusive positions into `ids`.
+    pub start: i32,
+    pub end: i32,
+}
+
+/// A batch matching the artifact shapes: `ids s32[B,S]`, labels `s32[B]`.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub ids: HostTensor,
+    pub starts: HostTensor,
+    pub ends: HostTensor,
+    pub size: usize,
+}
+
+/// Generator parameters.
+#[derive(Debug, Clone)]
+pub struct QaConfig {
+    pub vocab: usize,
+    pub seq: usize,
+    /// Question length range (inclusive).
+    pub q_min: usize,
+    pub q_max: usize,
+}
+
+impl QaConfig {
+    pub fn for_model(vocab: usize, seq: usize) -> Self {
+        // Keep questions short relative to seq so spans fit comfortably.
+        let q_max = (seq / 8).clamp(2, 6).min(seq.saturating_sub(8) / 2).max(2);
+        QaConfig { vocab, seq, q_min: 2, q_max }
+    }
+}
+
+/// Synthetic QA dataset for one device.
+#[derive(Debug, Clone)]
+pub struct SyntheticQa {
+    pub cfg: QaConfig,
+    pub examples: Vec<Example>,
+}
+
+impl SyntheticQa {
+    /// Generate `n` examples for `device` (seeded).  Devices share the seed
+    /// base but fork distinct streams, and each device's *context* tokens
+    /// are biased towards a device-specific third of the vocabulary.
+    pub fn generate(cfg: &QaConfig, device: usize, n: usize, seed: u64) -> Result<Self> {
+        if cfg.vocab < (FIRST_CONTENT as usize) + 8 {
+            return Err(Error::Config("vocab too small for QA generation".into()));
+        }
+        if cfg.seq < cfg.q_max * 2 + 4 {
+            return Err(Error::Config(format!(
+                "seq {} too short for q_max {}",
+                cfg.seq, cfg.q_max
+            )));
+        }
+        let mut rng = Rng::new(seed).fork(0xDA7A + device as u64);
+        let examples = (0..n).map(|_| gen_example(cfg, device, &mut rng)).collect();
+        Ok(SyntheticQa { cfg: cfg.clone(), examples })
+    }
+
+    pub fn len(&self) -> usize {
+        self.examples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.examples.is_empty()
+    }
+
+    /// Sample a batch of `batch` examples (with replacement — the
+    /// mini-batch sampling of Algorithm 1 line 7).
+    pub fn sample_batch(&self, batch: usize, rng: &mut Rng) -> Result<Batch> {
+        let picks: Vec<&Example> = (0..batch)
+            .map(|_| &self.examples[rng.next_below(self.examples.len())])
+            .collect();
+        batch_from(&picks, self.cfg.seq)
+    }
+
+    /// Deterministic batches covering the dataset (for evaluation); the
+    /// final ragged batch is padded by repeating the last example (the
+    /// padding is excluded from scoring via the returned real count).
+    pub fn eval_batches(&self, batch: usize) -> Result<Vec<(Batch, usize)>> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.examples.len() {
+            let real = (self.examples.len() - i).min(batch);
+            let mut picks: Vec<&Example> =
+                self.examples[i..i + real].iter().collect();
+            while picks.len() < batch {
+                picks.push(picks[real - 1]);
+            }
+            out.push((batch_from(&picks, self.cfg.seq)?, real));
+            i += real;
+        }
+        Ok(out)
+    }
+}
+
+fn gen_example(cfg: &QaConfig, device: usize, rng: &mut Rng) -> Example {
+    let content = cfg.vocab as i32 - FIRST_CONTENT;
+    // Device-specific bias: 2/3 of context tokens come from the device's
+    // own third of the content vocab.
+    let third = (content / 3).max(1);
+    let dev_lo = FIRST_CONTENT + (device as i32 % 3) * third;
+
+    let qlen = cfg.q_min + rng.next_below(cfg.q_max - cfg.q_min + 1);
+    let question: Vec<i32> = (0..qlen)
+        .map(|_| FIRST_CONTENT + rng.next_below(content as usize) as i32)
+        .collect();
+
+    let mut ids = Vec::with_capacity(cfg.seq);
+    ids.push(CLS);
+    ids.extend(&question);
+    ids.push(SEP);
+
+    let ctx_start = ids.len();
+    let ctx_len = cfg.seq - ctx_start;
+    for _ in 0..ctx_len {
+        let t = if rng.next_f64() < 0.67 {
+            dev_lo + rng.next_below(third as usize) as i32
+        } else {
+            FIRST_CONTENT + rng.next_below(content as usize) as i32
+        };
+        ids.push(t);
+    }
+
+    // Plant the highlighted answer: `[HLS] <question copy> [HLE]` at a
+    // random context position.  Content tokens never collide with the
+    // markers (they start at FIRST_CONTENT), so the span is unique by
+    // construction.
+    let span_len = qlen + 2;
+    let plant_at = ctx_start + rng.next_below(ctx_len - span_len + 1);
+    ids[plant_at] = HLS;
+    ids[plant_at + 1..plant_at + 1 + qlen].copy_from_slice(&question);
+    ids[plant_at + span_len - 1] = HLE;
+
+    Example {
+        ids,
+        start: plant_at as i32,
+        end: (plant_at + span_len - 1) as i32,
+    }
+}
+
+fn batch_from(picks: &[&Example], seq: usize) -> Result<Batch> {
+    let b = picks.len();
+    let mut ids = Vec::with_capacity(b * seq);
+    let mut starts = Vec::with_capacity(b);
+    let mut ends = Vec::with_capacity(b);
+    for ex in picks {
+        ids.extend(&ex.ids);
+        starts.push(ex.start);
+        ends.push(ex.end);
+    }
+    Ok(Batch {
+        ids: HostTensor::i32(vec![b, seq], ids)?,
+        starts: HostTensor::i32(vec![b], starts)?,
+        ends: HostTensor::i32(vec![b], ends)?,
+        size: b,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> QaConfig {
+        QaConfig::for_model(512, 32)
+    }
+
+    #[test]
+    fn examples_have_valid_structure() {
+        let ds = SyntheticQa::generate(&cfg(), 0, 64, 1).unwrap();
+        for ex in &ds.examples {
+            assert_eq!(ex.ids.len(), 32);
+            assert_eq!(ex.ids[0], CLS);
+            assert!(ex.start < ex.end);
+            assert!((ex.end as usize) < 32);
+            // Span = [HLS] <question copy> [HLE].
+            let sep = ex.ids.iter().position(|&t| t == SEP).unwrap();
+            let question = &ex.ids[1..sep];
+            let span = &ex.ids[ex.start as usize..=ex.end as usize];
+            assert_eq!(span[0], HLS);
+            assert_eq!(*span.last().unwrap(), HLE);
+            assert_eq!(&span[1..span.len() - 1], question);
+            // Span lies inside the context (after SEP).
+            assert!(ex.start as usize > sep);
+        }
+    }
+
+    #[test]
+    fn answer_span_is_unique() {
+        // Exactly one highlight per example (markers are reserved ids).
+        let ds = SyntheticQa::generate(&cfg(), 1, 128, 2).unwrap();
+        for ex in &ds.examples {
+            assert_eq!(ex.ids.iter().filter(|&&t| t == HLS).count(), 1);
+            assert_eq!(ex.ids.iter().filter(|&&t| t == HLE).count(), 1);
+            assert_eq!(ex.ids[ex.start as usize], HLS);
+            assert_eq!(ex.ids[ex.end as usize], HLE);
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic_per_device() {
+        let a = SyntheticQa::generate(&cfg(), 0, 16, 7).unwrap();
+        let b = SyntheticQa::generate(&cfg(), 0, 16, 7).unwrap();
+        assert_eq!(a.examples, b.examples);
+        let c = SyntheticQa::generate(&cfg(), 1, 16, 7).unwrap();
+        assert_ne!(a.examples, c.examples);
+    }
+
+    #[test]
+    fn batches_have_artifact_shapes() {
+        let ds = SyntheticQa::generate(&cfg(), 0, 16, 7).unwrap();
+        let mut rng = Rng::new(0);
+        let b = ds.sample_batch(4, &mut rng).unwrap();
+        assert_eq!(b.ids.shape, vec![4, 32]);
+        assert_eq!(b.starts.shape, vec![4]);
+        assert_eq!(b.ends.shape, vec![4]);
+    }
+
+    #[test]
+    fn eval_batches_cover_dataset_with_padding() {
+        let ds = SyntheticQa::generate(&cfg(), 0, 10, 7).unwrap();
+        let batches = ds.eval_batches(4).unwrap();
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches[0].1, 4);
+        assert_eq!(batches[2].1, 2); // 10 = 4 + 4 + 2
+        assert_eq!(batches[2].0.ids.shape, vec![4, 32]); // padded to full batch
+    }
+
+    #[test]
+    fn rejects_too_small_shapes() {
+        let bad = QaConfig { vocab: 4, seq: 32, q_min: 2, q_max: 4 };
+        assert!(SyntheticQa::generate(&bad, 0, 4, 1).is_err());
+        let bad2 = QaConfig { vocab: 512, seq: 8, q_min: 2, q_max: 6 };
+        assert!(SyntheticQa::generate(&bad2, 0, 4, 1).is_err());
+    }
+
+    #[test]
+    fn pad_token_is_reserved() {
+        // No generated example should ever contain PAD (all positions are
+        // meaningful in this fixed-length task).
+        let ds = SyntheticQa::generate(&cfg(), 2, 32, 3).unwrap();
+        assert!(ds.examples.iter().all(|e| e.ids.iter().all(|&t| t != PAD)));
+    }
+}

@@ -1,0 +1,48 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+#[derive(Error, Debug)]
+pub enum Error {
+    #[error("xla error: {0}")]
+    Xla(#[from] xla::Error),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("manifest error: {0}")]
+    Manifest(String),
+
+    #[error("shape mismatch for `{name}`: expected {expected:?}, got {got:?}")]
+    ShapeMismatch {
+        name: String,
+        expected: Vec<usize>,
+        got: Vec<usize>,
+    },
+
+    #[error("unknown executable `{0}` (not in manifest)")]
+    UnknownExecutable(String),
+
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error("plan error: {0}")]
+    Plan(String),
+
+    #[error("schedule error: {0}")]
+    Schedule(String),
+
+    #[error("cluster error: {0}")]
+    Cluster(String),
+
+    #[error("{0}")]
+    Other(String),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    pub fn other(msg: impl Into<String>) -> Self {
+        Error::Other(msg.into())
+    }
+}

@@ -1,0 +1,72 @@
+//! # RingAda — pipelined LM fine-tuning on edge devices with scheduled layer unfreezing
+//!
+//! Reproduction of *RingAda* (Li, Chen, Wu — Peng Cheng Laboratory, CS.DC 2025)
+//! as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **L1/L2 (build time, python)** — the transformer-with-adapters model and
+//!   its Pallas kernels are AOT-lowered to HLO text under `artifacts/<config>/`
+//!   (`make artifacts`); python never runs on the training path.
+//! * **L3 (this crate)** — the paper's *system* contribution: the coordinator
+//!   that partitions the model over edge devices, forms the ring, schedules
+//!   top-down adapter unfreezing, early-stops backprop at the terminator, and
+//!   pipelines batches without weight staleness; plus a trace-based
+//!   discrete-event simulator reproducing the paper's evaluation methodology,
+//!   and the `Single` / `PipeAdapter` baselines.
+//!
+//! ## Layer map (paper → module)
+//!
+//! | Paper concept (§III/IV)                | Module |
+//! |----------------------------------------|--------|
+//! | coordinator, layer-assignment plan     | [`coordinator`] |
+//! | top-down unfreezing (Algorithm 1)      | [`coordinator::unfreeze`] |
+//! | ring topology / initiator rotation     | [`coordinator::ring`] |
+//! | fwd/bwd traversal, early stop, 1F1B    | [`pipeline`] |
+//! | trace-based timing evaluation (§V)     | [`sim`] |
+//! | per-device memory accounting (Table I) | [`model::memory`] |
+//! | device actors + D2D links              | [`cluster`] |
+//! | PJRT execution of AOT artifacts        | [`runtime`] |
+//! | SQuAD-stand-in synthetic QA            | [`data`] |
+//! | F1 / EM / loss curves                  | [`metrics`] |
+//! | training drivers (3 schemes)           | [`train`] |
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use ringada::prelude::*;
+//!
+//! let exp = ExperimentConfig::paper_default("artifacts/tiny");
+//! let report = ringada::train::run_scheme(&exp, Scheme::RingAda).unwrap();
+//! println!("final loss = {:.4}", report.final_loss());
+//! ```
+
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod metrics;
+pub mod model;
+pub mod pipeline;
+pub mod runtime;
+pub mod sim;
+pub mod train;
+pub mod util;
+
+pub use error::{Error, Result};
+
+/// Convenient glob-import surface for examples and downstream users.
+pub mod prelude {
+    pub use crate::config::{
+        ClusterConfig, DeviceSpec, ExperimentConfig, Scheme, TrainingConfig,
+    };
+    pub use crate::cluster::RingCluster;
+    pub use crate::coordinator::{Coordinator, LayerAssignment, Planner, PlannerCosts, UnfreezeSchedule};
+    pub use crate::data::{Batch, QaConfig, SyntheticQa};
+    pub use crate::error::{Error, Result};
+    pub use crate::metrics::{LossCurve, SpanMetrics, TablePrinter};
+    pub use crate::model::{MemoryModel, ModelMeta};
+    pub use crate::pipeline::{ScheduleBuilder, WireSizes};
+    pub use crate::runtime::{Engine, HostTensor, ModelWeights, StageRunner};
+    pub use crate::sim::{CostLut, SimReport, Simulator};
+    pub use crate::train::{run_scheme, TrainOptions, TrainReport};
+}

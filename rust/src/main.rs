@@ -1,0 +1,292 @@
+//! `ringada` — leader CLI for the RingAda reproduction.
+//!
+//! Subcommands (hand-rolled parsing; clap is unavailable offline):
+//!
+//! ```text
+//! ringada train    --artifacts DIR [--scheme ringada|pipeadapter|single]
+//!                  [--rounds N] [--local-iters I] [--unfreeze-interval K]
+//!                  [--lr F] [--seed S] [--samples N] [--csv PATH] [--quiet]
+//! ringada plan     --artifacts DIR          # show the layer-assignment plan
+//! ringada table1   --artifacts DIR [--rounds N]   # regenerate Table I
+//! ringada cluster  --artifacts DIR [--batches N]  # run the real device-
+//!                                                 # thread ring (demo)
+//! ringada info     --artifacts DIR          # manifest + memory summary
+//! ```
+
+use std::collections::HashMap;
+use std::process::ExitCode;
+
+use ringada::config::{ExperimentConfig, Scheme};
+use ringada::coordinator::{Planner, PlannerCosts};
+use ringada::metrics::TablePrinter;
+use ringada::model::{MemoryModel, ModelMeta};
+use ringada::runtime::{Engine, ModelWeights};
+use ringada::sim::CostLut;
+use ringada::train::{run_scheme_with, TrainOptions};
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn parse_flags(args: &[String]) -> (HashMap<String, String>, Vec<String>) {
+    let mut flags = HashMap::new();
+    let mut positional = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(name) = args[i].strip_prefix("--") {
+            let next_is_value = args.get(i + 1).map_or(false, |v| !v.starts_with("--"));
+            if next_is_value {
+                flags.insert(name.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            positional.push(args[i].clone());
+            i += 1;
+        }
+    }
+    (flags, positional)
+}
+
+fn experiment_from_flags(flags: &HashMap<String, String>) -> anyhow::Result<ExperimentConfig> {
+    if let Some(path) = flags.get("config") {
+        return Ok(ExperimentConfig::from_json_file(path)?);
+    }
+    let artifacts = flags
+        .get("artifacts")
+        .cloned()
+        .unwrap_or_else(|| "artifacts/tiny".to_string());
+    let mut exp = ExperimentConfig::paper_default(&artifacts);
+    if let Some(v) = flags.get("rounds") {
+        exp.training.rounds = v.parse()?;
+    }
+    if let Some(v) = flags.get("local-iters") {
+        exp.training.local_iters = v.parse()?;
+    }
+    if let Some(v) = flags.get("unfreeze-interval") {
+        exp.training.unfreeze_interval = v.parse()?;
+    }
+    if let Some(v) = flags.get("lr") {
+        exp.training.lr = v.parse()?;
+    }
+    if let Some(v) = flags.get("seed") {
+        exp.training.seed = v.parse()?;
+    }
+    if let Some(v) = flags.get("samples") {
+        exp.samples_per_device = v.parse()?;
+    }
+    Ok(exp)
+}
+
+fn scheme_from_flags(flags: &HashMap<String, String>) -> anyhow::Result<Scheme> {
+    match flags.get("scheme").map(String::as_str).unwrap_or("ringada") {
+        "ringada" => Ok(Scheme::RingAda),
+        "pipeadapter" => Ok(Scheme::PipeAdapter),
+        "single" => Ok(Scheme::Single),
+        other => anyhow::bail!("unknown scheme `{other}`"),
+    }
+}
+
+fn run(args: Vec<String>) -> anyhow::Result<()> {
+    let cmd = args.first().cloned().unwrap_or_else(|| "help".to_string());
+    let rest = if args.is_empty() { &args[..] } else { &args[1..] };
+    let (flags, _) = parse_flags(rest);
+    match cmd.as_str() {
+        "train" => cmd_train(&flags),
+        "plan" => cmd_plan(&flags),
+        "table1" => cmd_table1(&flags),
+        "cluster" => cmd_cluster(&flags),
+        "info" => cmd_info(&flags),
+        _ => {
+            println!("{HELP}");
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "ringada — RingAda reproduction (see README.md)
+  train    run one fine-tuning scheme (RingAda by default)
+  plan     show the coordinator's layer-assignment plan
+  table1   regenerate the paper's Table I across all three schemes
+  cluster  drive the real multi-threaded device ring for a few batches
+  info     print manifest + memory summary for an artifact dir
+Common flags: --artifacts DIR (default artifacts/tiny), --rounds N,
+  --scheme ringada|pipeadapter|single, --csv PATH, --quiet";
+
+fn cmd_train(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let exp = experiment_from_flags(flags)?;
+    let scheme = scheme_from_flags(flags)?;
+    let opts = TrainOptions { eval: true, verbose: !flags.contains_key("quiet"), ..Default::default() };
+    let report = run_scheme_with(&exp, scheme, &opts)?;
+    println!(
+        "\n[{}] rounds={} final_loss={:.4} sim_time={:.2}s mem={:.1}MB",
+        scheme.name(),
+        report.curve.len(),
+        report.final_loss(),
+        report.total_time_s,
+        report.memory_mb
+    );
+    if let Some(m) = &report.eval_metrics {
+        println!(
+            "eval: F1={:.2} EM={:.2} over {} examples",
+            m.f1_pct(),
+            m.em_pct(),
+            m.count
+        );
+    }
+    if let (Some(r), Some(t)) = (report.converged_round, report.converged_time_s) {
+        println!("converged at round {r} (t={t:.2}s)");
+    }
+    if let Some(path) = flags.get("csv") {
+        report.curve.write_csv(path)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_plan(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let exp = experiment_from_flags(flags)?;
+    let engine = Engine::load(&exp.artifact_dir)?;
+    let meta = ModelMeta::from_manifest(engine.manifest())?;
+    let weights = ModelWeights::init(engine.manifest(), exp.training.seed)?;
+    let lut = CostLut::from_engine(&engine, &weights, 2)?;
+    let costs = PlannerCosts {
+        block_fwd_s: lut.block_fwd_s,
+        activation_bytes: meta.activation_bytes(),
+    };
+    let plan = Planner::new(&meta, &exp.cluster, costs).plan()?;
+    println!("layer assignment (ring order):");
+    for (pos, (&dev, &(s, e))) in plan
+        .assignment
+        .order
+        .iter()
+        .zip(&plan.assignment.blocks)
+        .enumerate()
+    {
+        println!(
+            "  position {pos}: device {dev} (speed {:.2}) -> blocks [{s}, {e})",
+            exp.cluster.devices[dev].compute_speed
+        );
+    }
+    println!("predicted bottleneck stage time: {:.4}s", plan.bottleneck_s);
+    Ok(())
+}
+
+fn cmd_table1(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let exp = experiment_from_flags(flags)?;
+    let mut table = TablePrinter::new(&[
+        "Scheme", "Memory (MB)", "Epochs->conv", "Conv time (s)", "F1", "EM",
+    ]);
+    for scheme in Scheme::ALL {
+        let r = run_scheme_with(&exp, scheme, &TrainOptions::default())?;
+        let m = r.eval_metrics.clone().unwrap_or_default();
+        table.row(vec![
+            scheme.name().into(),
+            format!("{:.2}", r.memory_mb),
+            r.converged_round.map_or("-".into(), |x| x.to_string()),
+            r.converged_time_s.map_or("-".into(), |x| format!("{x:.2}")),
+            format!("{:.2}", m.f1_pct()),
+            format!("{:.2}", m.em_pct()),
+        ]);
+    }
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_cluster(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    use ringada::cluster::RingCluster;
+    use ringada::coordinator::LayerAssignment;
+    use ringada::data::{QaConfig, SyntheticQa};
+    use ringada::runtime::Rng;
+
+    let exp = experiment_from_flags(flags)?;
+    let batches: usize = flags.get("batches").map_or(Ok(8), |v| v.parse())?;
+    let manifest = ringada::model::manifest::Manifest::load(&exp.artifact_dir)?;
+    let weights = ModelWeights::init(&manifest, exp.training.seed)?;
+    let layers = manifest.config.layers;
+    let devices = exp.cluster.len().min(layers);
+    let assignment = LayerAssignment::uniform(devices, layers);
+    let terminator = layers - 1; // depth 1
+    println!("spawning {devices} device threads (one PJRT engine each) ...");
+    let mut cluster = RingCluster::spawn(
+        std::path::Path::new(&exp.artifact_dir),
+        assignment,
+        &weights,
+        exp.training.lr,
+        terminator,
+    )?;
+    let qa = QaConfig::for_model(manifest.config.vocab, manifest.config.seq);
+    let mut rng = Rng::new(exp.training.seed);
+    let shards: Vec<SyntheticQa> = (0..devices)
+        .map(|d| SyntheticQa::generate(&qa, d, 64, exp.training.seed).unwrap())
+        .collect();
+    for i in 0..batches {
+        let initiator = i % devices;
+        let b = shards[initiator].sample_batch(manifest.config.batch, &mut rng)?;
+        let loss = cluster.run_batch(initiator, &b)?;
+        println!("batch {i:>3}  initiator u{initiator}  loss {loss:.4}");
+        if initiator + 1 < devices {
+            cluster.handoff_head(initiator, initiator + 1)?;
+        }
+    }
+    cluster.shutdown()?;
+    println!("cluster shut down cleanly");
+    Ok(())
+}
+
+fn cmd_info(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let exp = experiment_from_flags(flags)?;
+    let engine = Engine::load(&exp.artifact_dir)?;
+    let m = engine.manifest();
+    let meta = ModelMeta::from_manifest(m)?;
+    println!(
+        "model `{}`: vocab {} hidden {} layers {} heads {} ffn {} bottleneck {} seq {} batch {}",
+        m.config.name,
+        m.config.vocab,
+        m.config.hidden,
+        m.config.layers,
+        m.config.heads,
+        m.config.ffn,
+        m.config.bottleneck,
+        m.config.seq,
+        m.config.batch
+    );
+    println!(
+        "params: total {:.1}M  (adapters+head {:.2}M trainable at full depth, {:.2}% of model)",
+        meta.total_params() as f64 / 1e6,
+        meta.trainable_params(m.config.layers) as f64 / 1e6,
+        100.0 * meta.trainable_params(m.config.layers) as f64 / meta.total_params() as f64
+    );
+    let mm = MemoryModel::new(meta.clone());
+    let n = exp.cluster.len();
+    let per = (meta.hyper.layers / n.max(1)).max(1);
+    let counts = vec![per; n];
+    for scheme in Scheme::ALL {
+        let in_flight = if scheme == Scheme::PipeAdapter { n } else { 1 };
+        let mb = match scheme {
+            Scheme::Single => {
+                mm.table1_avg_mb(scheme, &[meta.hyper.layers], &[meta.hyper.layers], 1)
+            }
+            _ => mm.table1_avg_mb(scheme, &counts, &counts, in_flight),
+        };
+        println!("memory/device ({}): {:.2} MB", scheme.name(), mb);
+    }
+    for (name, spec) in &m.executables {
+        println!(
+            "exe {name}: {} args, {} results, {}",
+            spec.args.len(),
+            spec.results.len(),
+            spec.file
+        );
+    }
+    Ok(())
+}

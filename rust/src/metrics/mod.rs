@@ -1,0 +1,281 @@
+//! Evaluation metrics and training curves: span F1 / EM (SQuAD-style) and
+//! the loss-vs-epoch / loss-vs-time series behind Fig. 3 and Table I.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use crate::error::Result;
+
+/// SQuAD-style span metrics over inclusive (start, end) spans.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SpanMetrics {
+    /// Exact match: both endpoints correct.
+    pub em: f64,
+    /// Token-overlap F1 between predicted and gold span.
+    pub f1: f64,
+    pub count: usize,
+}
+
+impl SpanMetrics {
+    /// Score one prediction against gold; returns (em, f1) for that example.
+    pub fn score_one(pred: (i32, i32), gold: (i32, i32)) -> (f64, f64) {
+        let (ps, pe) = (pred.0.min(pred.1), pred.0.max(pred.1));
+        let (gs, ge) = (gold.0, gold.1);
+        let em = if ps == gs && pe == ge { 1.0 } else { 0.0 };
+        // Token-level overlap of inclusive ranges.
+        let inter = ((pe.min(ge) - ps.max(gs)) + 1).max(0) as f64;
+        let pred_len = (pe - ps + 1).max(0) as f64;
+        let gold_len = (ge - gs + 1).max(0) as f64;
+        let f1 = if inter == 0.0 {
+            0.0
+        } else {
+            let p = inter / pred_len;
+            let r = inter / gold_len;
+            2.0 * p * r / (p + r)
+        };
+        (em, f1)
+    }
+
+    /// Aggregate a batch of predictions.
+    pub fn add_batch(
+        &mut self,
+        pred_starts: &[i32],
+        pred_ends: &[i32],
+        gold_starts: &[i32],
+        gold_ends: &[i32],
+        count: usize,
+    ) {
+        for i in 0..count {
+            let (em, f1) = Self::score_one(
+                (pred_starts[i], pred_ends[i]),
+                (gold_starts[i], gold_ends[i]),
+            );
+            let n = self.count as f64;
+            self.em = (self.em * n + em) / (n + 1.0);
+            self.f1 = (self.f1 * n + f1) / (n + 1.0);
+            self.count += 1;
+        }
+    }
+
+    /// Percent scale (as Table I reports).
+    pub fn f1_pct(&self) -> f64 {
+        self.f1 * 100.0
+    }
+
+    pub fn em_pct(&self) -> f64 {
+        self.em * 100.0
+    }
+}
+
+/// A training curve: loss per step, plus the simulated wall-clock time at
+/// which each step *completed* under the scheme's pipeline schedule —
+/// giving both Fig. 3(a) (loss vs epochs) and Fig. 3(b) (loss vs time)
+/// from one run.
+#[derive(Debug, Clone, Default)]
+pub struct LossCurve {
+    /// (epoch, loss) per recorded step.
+    pub points: Vec<(f64, f32)>,
+    /// Simulated completion time (seconds) of each recorded step.
+    pub sim_time_s: Vec<f64>,
+}
+
+impl LossCurve {
+    pub fn push(&mut self, epoch: f64, loss: f32, sim_time_s: f64) {
+        self.points.push((epoch, loss));
+        self.sim_time_s.push(sim_time_s);
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    pub fn final_loss(&self) -> Option<f32> {
+        self.points.last().map(|&(_, l)| l)
+    }
+
+    /// Exponential moving average of the loss (smoothing for convergence
+    /// detection and plotting).
+    pub fn ema(&self, alpha: f32) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.points.len());
+        let mut acc: Option<f32> = None;
+        for &(_, l) in &self.points {
+            acc = Some(match acc {
+                None => l,
+                Some(prev) => alpha * l + (1.0 - alpha) * prev,
+            });
+            out.push(acc.unwrap());
+        }
+        out
+    }
+
+    /// First epoch at which the loss EMA drops below `threshold`
+    /// (convergence definition used by Table I's "epochs to convergence").
+    pub fn epochs_to_reach(&self, threshold: f32) -> Option<f64> {
+        let ema = self.ema(0.1);
+        ema.iter()
+            .position(|&l| l <= threshold)
+            .map(|i| self.points[i].0)
+    }
+
+    /// First simulated time at which the loss EMA drops below `threshold`
+    /// (Table I's "convergence time").
+    pub fn time_to_reach(&self, threshold: f32) -> Option<f64> {
+        let ema = self.ema(0.1);
+        ema.iter()
+            .position(|&l| l <= threshold)
+            .map(|i| self.sim_time_s[i])
+    }
+
+    /// CSV with `epoch,loss,sim_time_s` rows.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("epoch,loss,sim_time_s\n");
+        for (&(e, l), &t) in self.points.iter().zip(&self.sim_time_s) {
+            let _ = writeln!(s, "{e},{l},{t}");
+        }
+        s
+    }
+
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_csv())?;
+        Ok(())
+    }
+}
+
+/// Fixed-width table printer for the paper-table benches.
+pub struct TablePrinter {
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl TablePrinter {
+    pub fn new(headers: &[&str]) -> Self {
+        TablePrinter {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(String::len).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize], out: &mut String| {
+            for (c, w) in cells.iter().zip(widths) {
+                let _ = write!(out, "| {c:<w$} ");
+            }
+            out.push_str("|\n");
+        };
+        fmt_row(&self.headers, &widths, &mut out);
+        for w in &widths {
+            let _ = write!(out, "|{}", "-".repeat(w + 2));
+        }
+        out.push_str("|\n");
+        for row in &self.rows {
+            fmt_row(row, &widths, &mut out);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_match_scores_one() {
+        let (em, f1) = SpanMetrics::score_one((3, 5), (3, 5));
+        assert_eq!(em, 1.0);
+        assert_eq!(f1, 1.0);
+    }
+
+    #[test]
+    fn disjoint_spans_score_zero() {
+        let (em, f1) = SpanMetrics::score_one((0, 2), (5, 8));
+        assert_eq!(em, 0.0);
+        assert_eq!(f1, 0.0);
+    }
+
+    #[test]
+    fn partial_overlap_f1() {
+        // pred [2,5] (4 tokens), gold [4,7] (4 tokens), overlap 2 tokens
+        // p = r = 0.5 -> f1 = 0.5
+        let (em, f1) = SpanMetrics::score_one((2, 5), (4, 7));
+        assert_eq!(em, 0.0);
+        assert!((f1 - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn inverted_prediction_is_normalized() {
+        let (em, f1) = SpanMetrics::score_one((5, 3), (3, 5));
+        assert_eq!(em, 1.0);
+        assert_eq!(f1, 1.0);
+    }
+
+    #[test]
+    fn batch_aggregation_averages() {
+        let mut m = SpanMetrics::default();
+        m.add_batch(&[1, 9], &[2, 9], &[1, 0], &[2, 0], 2);
+        assert_eq!(m.count, 2);
+        assert!((m.em - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn curve_threshold_crossing() {
+        let mut c = LossCurve::default();
+        for i in 0..10 {
+            c.push(i as f64, 3.0 - 0.3 * i as f32, i as f64 * 2.0);
+        }
+        // EMA(0.1) decays slowly: it crosses 2.5 at index 6.
+        let e = c.epochs_to_reach(2.5).unwrap();
+        assert!(e > 0.0 && e <= 9.0);
+        let t = c.time_to_reach(2.5).unwrap();
+        assert!((t / 2.0 - e).abs() < 1e-9); // time = 2 * epoch here
+        assert!(c.epochs_to_reach(-1.0).is_none());
+    }
+
+    #[test]
+    fn ema_smooths_monotonically_decreasing() {
+        let mut c = LossCurve::default();
+        for i in 0..5 {
+            c.push(i as f64, 5.0 - i as f32, 0.0);
+        }
+        let ema = c.ema(0.5);
+        assert_eq!(ema.len(), 5);
+        assert!(ema[0] == 5.0 && ema[4] > 1.0 && ema[4] < 5.0);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut c = LossCurve::default();
+        c.push(0.0, 1.5, 0.1);
+        let csv = c.to_csv();
+        assert!(csv.starts_with("epoch,loss,sim_time_s\n"));
+        assert_eq!(csv.lines().count(), 2);
+    }
+
+    #[test]
+    fn table_printer_aligns() {
+        let mut t = TablePrinter::new(&["Scheme", "Memory (MB)"]);
+        t.row(vec!["RingAda".into(), "373.06".into()]);
+        let s = t.render();
+        assert!(s.contains("| Scheme "));
+        assert!(s.contains("| RingAda"));
+        assert_eq!(s.lines().count(), 3);
+    }
+}

@@ -1,0 +1,317 @@
+//! `manifest.json` — the contract between the python AOT compiler (L2) and
+//! this runtime (L3).  See `python/compile/aot.py` for the producer.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Manifest versions this runtime understands.
+pub const SUPPORTED_MANIFEST_VERSION: u32 = 1;
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub manifest_version: u32,
+    pub config: ModelHyper,
+    pub params: ParamInventory,
+    pub executables: BTreeMap<String, ExecutableSpec>,
+}
+
+/// Model hyperparameters baked into the artifact shapes.
+#[derive(Debug, Clone)]
+pub struct ModelHyper {
+    pub name: String,
+    pub vocab: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub ffn: usize,
+    pub bottleneck: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub init_std: f32,
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamInventory {
+    pub embed: Vec<ParamSpec>,
+    pub block: Vec<ParamSpec>,
+    pub head: Vec<ParamSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// "normal" (std = `init_std`), "zeros" or "ones".
+    pub init: String,
+    pub trainable: bool,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(ParamSpec {
+            name: v.req("name")?.as_str()?.to_string(),
+            shape: v.req("shape")?.usize_vec()?,
+            init: v.req("init")?.as_str()?.to_string(),
+            trainable: v.req("trainable")?.as_bool()?,
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ExecutableSpec {
+    pub file: String,
+    pub args: Vec<TensorSpec>,
+    pub results: Vec<TensorSpec>,
+    pub sha256: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// "f32" or "s32".
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn byte_size(&self) -> usize {
+        self.numel() * 4 // f32 and s32 are both 4 bytes
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(TensorSpec {
+            name: v.req("name")?.as_str()?.to_string(),
+            shape: v.req("shape")?.usize_vec()?,
+            dtype: v.req("dtype")?.as_str()?.to_string(),
+        })
+    }
+}
+
+impl Manifest {
+    pub fn load(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let path = artifact_dir.as_ref().join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Manifest(format!(
+                "cannot read {} (run `make artifacts`?): {e}",
+                path.display()
+            ))
+        })?;
+        let m = Self::from_json_text(&text)?;
+        m.validate()?;
+        Ok(m)
+    }
+
+    pub fn from_json_text(text: &str) -> Result<Self> {
+        let v = Json::parse(text)?;
+        let cfg = v.req("config")?;
+        let config = ModelHyper {
+            name: cfg.req("name")?.as_str()?.to_string(),
+            vocab: cfg.req("vocab")?.as_usize()?,
+            hidden: cfg.req("hidden")?.as_usize()?,
+            layers: cfg.req("layers")?.as_usize()?,
+            heads: cfg.req("heads")?.as_usize()?,
+            ffn: cfg.req("ffn")?.as_usize()?,
+            bottleneck: cfg.req("bottleneck")?.as_usize()?,
+            seq: cfg.req("seq")?.as_usize()?,
+            batch: cfg.req("batch")?.as_usize()?,
+            init_std: cfg.req("init_std")?.as_f32()?,
+        };
+        let p = v.req("params")?;
+        let parse_specs = |key: &str| -> Result<Vec<ParamSpec>> {
+            p.req(key)?.as_arr()?.iter().map(ParamSpec::from_json).collect()
+        };
+        let params = ParamInventory {
+            embed: parse_specs("embed")?,
+            block: parse_specs("block")?,
+            head: parse_specs("head")?,
+        };
+        let mut executables = BTreeMap::new();
+        for (name, e) in v.req("executables")?.as_obj()? {
+            let args: Vec<TensorSpec> = e
+                .req("args")?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<_>>()?;
+            let results: Vec<TensorSpec> = e
+                .req("results")?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<_>>()?;
+            executables.insert(
+                name.clone(),
+                ExecutableSpec {
+                    file: e.req("file")?.as_str()?.to_string(),
+                    args,
+                    results,
+                    sha256: e.req("sha256")?.as_str()?.to_string(),
+                },
+            );
+        }
+        Ok(Manifest {
+            manifest_version: v.req("manifest_version")?.as_usize()? as u32,
+            config,
+            params,
+            executables,
+        })
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.manifest_version != SUPPORTED_MANIFEST_VERSION {
+            return Err(Error::Manifest(format!(
+                "manifest_version {} unsupported (runtime expects {})",
+                self.manifest_version, SUPPORTED_MANIFEST_VERSION
+            )));
+        }
+        for exe in ["embed_fwd", "block_fwd", "block_bwd", "head_fwd", "head_loss_grad", "head_predict"] {
+            if !self.executables.contains_key(exe) {
+                return Err(Error::Manifest(format!("missing executable `{exe}`")));
+            }
+        }
+        // block_fwd args must be [x, <block params in inventory order>]:
+        // the runtime feeds weights positionally.
+        let bf = &self.executables["block_fwd"];
+        if bf.args.len() != 1 + self.params.block.len() {
+            return Err(Error::Manifest(
+                "block_fwd arg count does not match block param inventory".into(),
+            ));
+        }
+        for (a, p) in bf.args[1..].iter().zip(&self.params.block) {
+            if a.name != p.name || a.shape != p.shape {
+                return Err(Error::Manifest(format!(
+                    "block_fwd arg `{}` does not match param spec `{}`",
+                    a.name, p.name
+                )));
+            }
+        }
+        // The trainable block params must be exactly the 4-tensor adapter tail.
+        let n = self.params.block.len();
+        if n < 4 {
+            return Err(Error::Manifest("fewer than 4 block params".into()));
+        }
+        let tail_ok = self.params.block[n - 4..].iter().all(|p| p.trainable);
+        let body_ok = self.params.block[..n - 4].iter().all(|p| !p.trainable);
+        if !tail_ok || !body_ok {
+            return Err(Error::Manifest(
+                "expected exactly the trailing 4 block params (adapter) to be trainable".into(),
+            ));
+        }
+        Ok(())
+    }
+
+    pub fn executable(&self, name: &str) -> Result<&ExecutableSpec> {
+        self.executables
+            .get(name)
+            .ok_or_else(|| Error::UnknownExecutable(name.to_string()))
+    }
+
+    /// Number of block params that are frozen backbone (the leading ones).
+    pub fn backbone_params_per_block(&self) -> usize {
+        self.params.block.len() - 4
+    }
+}
+
+#[cfg(test)]
+pub(crate) fn test_manifest_json(layers: usize) -> String {
+    format!(
+        r#"{{
+        "manifest_version": 1,
+        "config": {{"name": "t", "vocab": 8, "hidden": 4, "layers": {layers}, "heads": 2,
+                    "ffn": 8, "bottleneck": 2, "seq": 4, "batch": 1, "init_std": 0.02}},
+        "params": {{
+            "embed": [
+                {{"name": "tok_emb", "shape": [8, 4], "init": "normal", "trainable": false}},
+                {{"name": "ln_g", "shape": [4], "init": "ones", "trainable": false}}
+            ],
+            "block": [
+                {{"name": "w", "shape": [4, 4], "init": "normal", "trainable": false}},
+                {{"name": "a_wd", "shape": [4, 2], "init": "normal", "trainable": true}},
+                {{"name": "a_bd", "shape": [2], "init": "zeros", "trainable": true}},
+                {{"name": "a_wu", "shape": [2, 4], "init": "zeros", "trainable": true}},
+                {{"name": "a_bu", "shape": [4], "init": "zeros", "trainable": true}}
+            ],
+            "head": [{{"name": "w_head", "shape": [4, 2], "init": "normal", "trainable": true}}]
+        }},
+        "executables": {{
+            "embed_fwd": {{"file": "e", "args": [], "results": [], "sha256": ""}},
+            "block_fwd": {{"file": "b", "args": [
+                {{"name": "x", "shape": [1, 4, 4], "dtype": "f32"}},
+                {{"name": "w", "shape": [4, 4], "dtype": "f32"}},
+                {{"name": "a_wd", "shape": [4, 2], "dtype": "f32"}},
+                {{"name": "a_bd", "shape": [2], "dtype": "f32"}},
+                {{"name": "a_wu", "shape": [2, 4], "dtype": "f32"}},
+                {{"name": "a_bu", "shape": [4], "dtype": "f32"}}
+            ], "results": [], "sha256": ""}},
+            "block_bwd": {{"file": "bb", "args": [], "results": [], "sha256": ""}},
+            "head_fwd": {{"file": "h", "args": [], "results": [], "sha256": ""}},
+            "head_loss_grad": {{"file": "hl", "args": [], "results": [], "sha256": ""}},
+            "head_predict": {{"file": "hp", "args": [], "results": [], "sha256": ""}}
+        }}
+    }}"#
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_and_validates() {
+        let m = Manifest::from_json_text(&test_manifest_json(2)).unwrap();
+        m.validate().unwrap();
+        assert_eq!(m.backbone_params_per_block(), 1);
+        assert_eq!(m.config.layers, 2);
+        assert_eq!(m.params.block[1].name, "a_wd");
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let text = test_manifest_json(2).replace(
+            "\"manifest_version\": 1",
+            "\"manifest_version\": 99",
+        );
+        let m = Manifest::from_json_text(&text).unwrap();
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_missing_executable() {
+        let mut m = Manifest::from_json_text(&test_manifest_json(2)).unwrap();
+        m.executables.remove("block_bwd");
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_nontrainable_adapter_tail() {
+        let mut m = Manifest::from_json_text(&test_manifest_json(2)).unwrap();
+        let n = m.params.block.len();
+        m.params.block[n - 1].trainable = false;
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_trainable_backbone() {
+        let mut m = Manifest::from_json_text(&test_manifest_json(2)).unwrap();
+        m.params.block[0].trainable = true;
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn tensor_spec_sizes() {
+        let t = TensorSpec { name: "x".into(), shape: vec![2, 3, 4], dtype: "f32".into() };
+        assert_eq!(t.numel(), 24);
+        assert_eq!(t.byte_size(), 96);
+    }
+}

@@ -1,0 +1,264 @@
+//! Per-device memory accounting — the model behind Table I's first column.
+//!
+//! The paper's memory story (§II.B, §III, Table I):
+//!
+//! * **Single** pays for the *whole* model's weights plus full-depth
+//!   activations for backprop plus optimizer state for every adapter.
+//! * **PipeAdapter** (PipeDream-style) shards weights across devices but
+//!   must (a) keep activations for every in-flight microbatch and (b) stash
+//!   one weight *version* per in-flight batch so each batch sees consistent
+//!   weights across its forward and backward pass.
+//! * **RingAda** shards weights, keeps **one** weight version (no staleness
+//!   by construction), stores backprop activations only for blocks at or
+//!   above the terminator (backward early-stop), and streams forwards on
+//!   frozen-prefix devices (activations are released once sent).
+//!
+//! All formulas are pure functions of [`ModelMeta`] + an assignment + scheme,
+//! so the accounting is unit-testable without touching PJRT.
+
+use super::ModelMeta;
+use crate::config::Scheme;
+
+/// Bytes per f32 parameter of Adam state (m and v vectors).
+const ADAM_STATE_FACTOR: usize = 2;
+const F32: usize = 4;
+
+/// Per-activation-tensor count of *intermediate* tensors a block's backward
+/// needs when training adapters.  The recompute-based `block_bwd` only
+/// stores the block *input* across the fwd→bwd window; intra-block
+/// intermediates are transient.  We charge `1` stored activation per block
+/// in the backward region plus `PEAK_TRANSIENT` transient tensors while a
+/// block is actually executing (the XLA-measured working set of
+/// `block_fwd`/`block_bwd` for the e2e config is ≈3.1 activations wide).
+const PEAK_TRANSIENT: usize = 3;
+
+/// One device's memory breakdown (bytes).
+#[derive(Debug, Clone, Default)]
+pub struct MemoryBreakdown {
+    pub backbone_weights: usize,
+    pub adapter_weights: usize,
+    pub embed_head_weights: usize,
+    pub optimizer_state: usize,
+    pub stored_activations: usize,
+    pub transient_activations: usize,
+    pub stashed_weight_versions: usize,
+}
+
+impl MemoryBreakdown {
+    pub fn total(&self) -> usize {
+        self.backbone_weights
+            + self.adapter_weights
+            + self.embed_head_weights
+            + self.optimizer_state
+            + self.stored_activations
+            + self.transient_activations
+            + self.stashed_weight_versions
+    }
+
+    pub fn total_mb(&self) -> f64 {
+        self.total() as f64 / (1024.0 * 1024.0)
+    }
+}
+
+/// Memory model for one experiment.
+#[derive(Debug, Clone)]
+pub struct MemoryModel {
+    meta: ModelMeta,
+}
+
+impl MemoryModel {
+    pub fn new(meta: ModelMeta) -> Self {
+        MemoryModel { meta }
+    }
+
+    pub fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    /// Memory for a device holding `blocks` transformer blocks under the
+    /// given scheme.
+    ///
+    /// * `unfrozen_on_device` — how many of this device's adapters are
+    ///   currently unfrozen (RingAda; for the baselines pass `blocks`).
+    /// * `in_flight` — concurrently live microbatches on this device
+    ///   (PipeAdapter: pipeline depth; others: 1).
+    pub fn device(
+        &self,
+        scheme: Scheme,
+        blocks: usize,
+        unfrozen_on_device: usize,
+        in_flight: usize,
+    ) -> MemoryBreakdown {
+        let m = &self.meta;
+        let act = m.activation_bytes();
+        let backbone = blocks * m.block_backbone_params * F32;
+        let adapters = blocks * m.block_adapter_params * F32;
+        // Every client hosts a copy of Emb and Hed (paper §III.A).
+        let embed_head = (m.embed_params + m.head_params) * F32;
+
+        match scheme {
+            Scheme::Single => {
+                // One device holds everything; all adapters trainable.
+                let trainable = m.hyper.layers * m.block_adapter_params + m.head_params;
+                MemoryBreakdown {
+                    backbone_weights: m.hyper.layers * m.block_backbone_params * F32,
+                    adapter_weights: m.hyper.layers * m.block_adapter_params * F32,
+                    embed_head_weights: embed_head,
+                    optimizer_state: trainable * ADAM_STATE_FACTOR * F32,
+                    // Full-depth backprop: one stored input per block.
+                    stored_activations: m.hyper.layers * act,
+                    transient_activations: PEAK_TRANSIENT * act,
+                    stashed_weight_versions: 0,
+                }
+            }
+            Scheme::PipeAdapter => {
+                let trainable = blocks * m.block_adapter_params + m.head_params;
+                MemoryBreakdown {
+                    backbone_weights: backbone,
+                    adapter_weights: adapters,
+                    embed_head_weights: embed_head,
+                    optimizer_state: trainable * ADAM_STATE_FACTOR * F32,
+                    // One stored activation per block per in-flight batch.
+                    stored_activations: blocks * act * in_flight.max(1),
+                    transient_activations: PEAK_TRANSIENT * act,
+                    // Weight stashing: each *extra* in-flight batch pins one
+                    // version of this device's trainable weights (adapters;
+                    // the frozen backbone needs no versioning).
+                    stashed_weight_versions: in_flight.saturating_sub(1)
+                        * blocks
+                        * m.block_adapter_params
+                        * F32,
+                }
+            }
+            Scheme::RingAda => {
+                let trainable = unfrozen_on_device * m.block_adapter_params + m.head_params;
+                MemoryBreakdown {
+                    backbone_weights: backbone,
+                    adapter_weights: adapters,
+                    embed_head_weights: embed_head,
+                    optimizer_state: trainable * ADAM_STATE_FACTOR * F32,
+                    // Early stop: only blocks in the backward region store
+                    // their input; frozen-prefix blocks stream.
+                    stored_activations: unfrozen_on_device * act,
+                    transient_activations: PEAK_TRANSIENT * act,
+                    stashed_weight_versions: 0, // the design's headline claim
+                }
+            }
+        }
+    }
+
+    /// Peak per-device memory across a whole cluster assignment; returns
+    /// `(per_device, max)`.
+    ///
+    /// `assignment[u]` = number of blocks on device `u`;
+    /// `unfrozen[u]` = unfrozen adapters on device `u`;
+    /// `in_flight` as in [`MemoryModel::device`].
+    pub fn cluster_peak(
+        &self,
+        scheme: Scheme,
+        assignment: &[usize],
+        unfrozen: &[usize],
+        in_flight: usize,
+    ) -> (Vec<MemoryBreakdown>, usize) {
+        let per: Vec<MemoryBreakdown> = assignment
+            .iter()
+            .zip(unfrozen)
+            .map(|(&b, &u)| self.device(scheme, b, u, in_flight))
+            .collect();
+        let max = per.iter().map(|b| b.total()).max().unwrap_or(0);
+        (per, max)
+    }
+
+    /// Average per-device memory in MB — the quantity Table I reports.
+    pub fn table1_avg_mb(
+        &self,
+        scheme: Scheme,
+        assignment: &[usize],
+        unfrozen: &[usize],
+        in_flight: usize,
+    ) -> f64 {
+        let (per, _) = self.cluster_peak(scheme, assignment, unfrozen, in_flight);
+        per.iter().map(|b| b.total_mb()).sum::<f64>() / per.len().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::ModelHyper;
+
+    fn meta() -> ModelMeta {
+        ModelMeta {
+            hyper: ModelHyper {
+                name: "t".into(),
+                vocab: 8192,
+                hidden: 768,
+                layers: 12,
+                heads: 12,
+                ffn: 3072,
+                bottleneck: 64,
+                seq: 128,
+                batch: 8,
+                init_std: 0.02,
+            },
+            embed_params: 8192 * 768 + 128 * 768 + 2 * 768,
+            block_backbone_params: 768 * 2304 + 2304 + 768 * 768 + 768 + 2 * 768
+                + 768 * 3072 + 3072 + 3072 * 768 + 768 + 2 * 768,
+            block_adapter_params: 2 * 768 * 64 + 64 + 768,
+            head_params: 768 * 2 + 2,
+        }
+    }
+
+    #[test]
+    fn single_uses_most_memory() {
+        let mm = MemoryModel::new(meta());
+        let assignment = [3usize, 3, 3, 3];
+        let unfrozen = [3usize, 3, 3, 3];
+        let single = mm.table1_avg_mb(Scheme::Single, &assignment, &unfrozen, 1);
+        let pipe = mm.table1_avg_mb(Scheme::PipeAdapter, &assignment, &unfrozen, 4);
+        let ring = mm.table1_avg_mb(Scheme::RingAda, &assignment, &[1, 1, 1, 1], 1);
+        assert!(single > pipe, "single {single} <= pipe {pipe}");
+        assert!(pipe > ring, "pipe {pipe} <= ring {ring}");
+    }
+
+    #[test]
+    fn ringada_has_no_stashed_versions() {
+        let mm = MemoryModel::new(meta());
+        let b = mm.device(Scheme::RingAda, 3, 2, 4);
+        assert_eq!(b.stashed_weight_versions, 0);
+        let p = mm.device(Scheme::PipeAdapter, 3, 3, 4);
+        assert!(p.stashed_weight_versions > 0);
+    }
+
+    #[test]
+    fn ringada_activation_memory_grows_with_unfreezing() {
+        let mm = MemoryModel::new(meta());
+        let early = mm.device(Scheme::RingAda, 3, 0, 1);
+        let late = mm.device(Scheme::RingAda, 3, 3, 1);
+        assert!(late.stored_activations > early.stored_activations);
+        assert_eq!(early.stored_activations, 0);
+    }
+
+    #[test]
+    fn breakdown_total_is_sum_of_fields() {
+        let mm = MemoryModel::new(meta());
+        let b = mm.device(Scheme::PipeAdapter, 2, 2, 3);
+        let sum = b.backbone_weights
+            + b.adapter_weights
+            + b.embed_head_weights
+            + b.optimizer_state
+            + b.stored_activations
+            + b.transient_activations
+            + b.stashed_weight_versions;
+        assert_eq!(b.total(), sum);
+    }
+
+    #[test]
+    fn in_flight_scales_pipe_memory_linearly() {
+        let mm = MemoryModel::new(meta());
+        let b2 = mm.device(Scheme::PipeAdapter, 3, 3, 2);
+        let b4 = mm.device(Scheme::PipeAdapter, 3, 3, 4);
+        assert!(b4.stored_activations > b2.stored_activations);
+        assert!(b4.stashed_weight_versions > b2.stashed_weight_versions);
+    }
+}

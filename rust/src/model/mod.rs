@@ -1,0 +1,157 @@
+//! Model metadata: the L2→L3 contract (`manifest.json`) plus derived
+//! parameter inventories and the per-device memory model behind Table I.
+
+pub mod manifest;
+pub mod memory;
+
+pub use manifest::{ExecutableSpec, Manifest, ModelHyper, ParamSpec, TensorSpec};
+pub use memory::{MemoryBreakdown, MemoryModel};
+
+use crate::error::Result;
+
+/// Derived model metadata: sizes and FLOP counts the planner, memory model
+/// and simulator all consume.  Everything is computed from the manifest so
+/// Rust and the lowered HLO can never disagree about shapes.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub hyper: ModelHyper,
+    /// f32 parameter counts.
+    pub embed_params: usize,
+    pub block_backbone_params: usize,
+    pub block_adapter_params: usize,
+    pub head_params: usize,
+}
+
+impl ModelMeta {
+    pub fn from_manifest(m: &Manifest) -> Result<Self> {
+        let count = |specs: &[ParamSpec], trainable: Option<bool>| -> usize {
+            specs
+                .iter()
+                .filter(|s| trainable.map_or(true, |t| s.trainable == t))
+                .map(|s| s.shape.iter().product::<usize>())
+                .sum()
+        };
+        Ok(ModelMeta {
+            hyper: m.config.clone(),
+            embed_params: count(&m.params.embed, None),
+            block_backbone_params: count(&m.params.block, Some(false)),
+            block_adapter_params: count(&m.params.block, Some(true)),
+            head_params: count(&m.params.head, None),
+        })
+    }
+
+    /// Total parameters of the full model (embedding + all blocks + head).
+    pub fn total_params(&self) -> usize {
+        self.embed_params
+            + self.hyper.layers * (self.block_backbone_params + self.block_adapter_params)
+            + self.head_params
+    }
+
+    /// Trainable parameters when the `d` top-most adapters (plus the head)
+    /// are unfrozen.
+    pub fn trainable_params(&self, unfrozen_adapters: usize) -> usize {
+        self.head_params + unfrozen_adapters * self.block_adapter_params
+    }
+
+    /// Bytes of one activation tensor `[B, S, H]` (f32).
+    pub fn activation_bytes(&self) -> usize {
+        self.hyper.batch * self.hyper.seq * self.hyper.hidden * 4
+    }
+
+    /// Forward FLOPs of a single transformer block (per mini-batch):
+    /// QKV + attention scores/values + output proj + FFN + adapter.
+    pub fn block_fwd_flops(&self) -> u64 {
+        let b = self.hyper.batch as u64;
+        let s = self.hyper.seq as u64;
+        let h = self.hyper.hidden as u64;
+        let f = self.hyper.ffn as u64;
+        let m = self.hyper.bottleneck as u64;
+        let tokens = b * s;
+        let qkv = 2 * tokens * h * 3 * h;
+        let attn = 2 * 2 * b * s * s * h; // scores + values, summed over heads
+        let proj = 2 * tokens * h * h;
+        let ffn = 2 * 2 * tokens * h * f;
+        let adapter = 2 * 2 * tokens * h * m;
+        qkv + attn + proj + ffn + adapter
+    }
+
+    /// Backward FLOPs of one block under the *adapter-only* regime:
+    /// recompute forward + adapter/input gradients (≈ 2× forward for the
+    /// paths that must be differentiated).
+    pub fn block_bwd_flops(&self) -> u64 {
+        2 * self.block_fwd_flops()
+    }
+
+    /// Forward FLOPs of the embedding stage (lookup + layernorm — cheap).
+    pub fn embed_fwd_flops(&self) -> u64 {
+        (self.hyper.batch * self.hyper.seq * self.hyper.hidden * 10) as u64
+    }
+
+    /// Forward+loss FLOPs of the head stage.
+    pub fn head_flops(&self) -> u64 {
+        (2 * self.hyper.batch * self.hyper.seq * self.hyper.hidden * 2) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_hyper() -> ModelHyper {
+        ModelHyper {
+            name: "tiny".into(),
+            vocab: 512,
+            hidden: 64,
+            layers: 4,
+            heads: 4,
+            ffn: 256,
+            bottleneck: 16,
+            seq: 32,
+            batch: 4,
+            init_std: 0.02,
+        }
+    }
+
+    fn tiny_meta() -> ModelMeta {
+        ModelMeta {
+            hyper: tiny_hyper(),
+            embed_params: 512 * 64 + 32 * 64 + 2 * 64,
+            block_backbone_params: 64 * 192 + 192 + 64 * 64 + 64 + 2 * 64
+                + 64 * 256 + 256 + 256 * 64 + 64 + 2 * 64,
+            block_adapter_params: 2 * 64 * 16 + 16 + 64,
+            head_params: 64 * 2 + 2,
+        }
+    }
+
+    #[test]
+    fn total_params_adds_up() {
+        let m = tiny_meta();
+        assert_eq!(
+            m.total_params(),
+            m.embed_params + 4 * (m.block_backbone_params + m.block_adapter_params) + m.head_params
+        );
+    }
+
+    #[test]
+    fn trainable_params_scale_with_depth() {
+        let m = tiny_meta();
+        assert_eq!(m.trainable_params(0), m.head_params);
+        assert_eq!(
+            m.trainable_params(3) - m.trainable_params(1),
+            2 * m.block_adapter_params
+        );
+    }
+
+    #[test]
+    fn activation_bytes_is_bsh4() {
+        let m = tiny_meta();
+        assert_eq!(m.activation_bytes(), 4 * 32 * 64 * 4);
+    }
+
+    #[test]
+    fn bwd_flops_dominate_fwd() {
+        let m = tiny_meta();
+        assert_eq!(m.block_bwd_flops(), 2 * m.block_fwd_flops());
+        assert!(m.block_fwd_flops() > m.embed_fwd_flops());
+    }
+}

@@ -1,0 +1,486 @@
+//! Pipeline schedule generation for the three schemes (paper §IV).
+//!
+//! [`ScheduleBuilder`] emits a task DAG per training step and carries the
+//! cross-step state that encodes each scheme's semantics:
+//!
+//! * **RingAda** — forward traverses the ring in block order starting from
+//!   the initiator's `Emb`; backward walks back and **early-stops at the
+//!   terminator position**; a ring position with unfrozen adapters may not
+//!   start the next batch's forward until its adapter update from the
+//!   previous batch has been applied (**the pause rule** — this is what
+//!   guarantees one weight version and no staleness); frozen-prefix
+//!   positions stream forwards freely.
+//! * **PipeAdapter** — same ring forward, full-depth backward, **no pause
+//!   rule** (PipeDream-style stale forwarding with weight stashing), bounded
+//!   by `max_in_flight`.
+//! * **Single** — everything on one device, strictly sequential.
+//!
+//! The DAG encodes semantics via dependencies only; crate::sim adds time.
+
+pub mod task;
+
+pub use task::{validate_dag, Kind, Op, Resource, Task, TaskId};
+
+use crate::coordinator::{LayerAssignment, RoundPlan};
+use crate::error::{Error, Result};
+
+/// Sizes the schedules need (from the model meta).
+#[derive(Debug, Clone, Copy)]
+pub struct WireSizes {
+    /// Bytes of one `[B, S, H]` activation/gradient tensor.
+    pub activation_bytes: usize,
+    /// Bytes of the head parameters (initiator hand-off).
+    pub head_bytes: usize,
+}
+
+/// Per-step bookkeeping the drivers need to map sim results back to steps.
+#[derive(Debug, Clone)]
+pub struct StepHandles {
+    pub step: usize,
+    pub round: usize,
+    /// Initiator device of this step.
+    pub initiator: usize,
+    /// Task id of the head_loss_grad compute (its finish = the step's loss
+    /// timestamp in Fig. 3(b)).
+    pub head_task: TaskId,
+}
+
+/// Builder with cross-step state.
+#[derive(Debug)]
+pub struct ScheduleBuilder {
+    pub tasks: Vec<Task>,
+    pub handles: Vec<StepHandles>,
+    assignment: LayerAssignment,
+    sizes: WireSizes,
+    /// Pause rule: last adapter-update task per ring position.
+    last_update: Vec<Option<TaskId>>,
+    /// Head parameters form a single logical version chain.
+    last_head_touch: Option<TaskId>,
+    /// PipeAdapter: cap on in-flight batches (weight-stash depth).
+    max_in_flight: usize,
+    /// PipeAdapter: head task of step `s - max_in_flight` gates step `s`.
+    step_gate: Vec<TaskId>,
+    next_step: usize,
+}
+
+impl ScheduleBuilder {
+    pub fn new(assignment: LayerAssignment, sizes: WireSizes, max_in_flight: usize) -> Self {
+        let n = assignment.num_positions();
+        ScheduleBuilder {
+            tasks: Vec::new(),
+            handles: Vec::new(),
+            assignment,
+            sizes,
+            last_update: vec![None; n],
+            last_head_touch: None,
+            max_in_flight: max_in_flight.max(1),
+            step_gate: Vec::new(),
+            next_step: 0,
+        }
+    }
+
+    pub fn assignment(&self) -> &LayerAssignment {
+        &self.assignment
+    }
+
+    fn push(&mut self, kind: Kind, deps: Vec<TaskId>, step: usize, round: usize) -> TaskId {
+        let id = self.tasks.len();
+        self.tasks.push(Task { id, kind, deps, step, round });
+        id
+    }
+
+    fn compute(&mut self, device: usize, op: Op, deps: Vec<TaskId>, step: usize, round: usize) -> TaskId {
+        self.push(Kind::Compute { device, op }, deps, step, round)
+    }
+
+    fn transfer(&mut self, from: usize, to: usize, bytes: usize, deps: Vec<TaskId>, step: usize, round: usize) -> TaskId {
+        debug_assert_ne!(from, to);
+        self.push(Kind::Transfer { from, to, bytes }, deps, step, round)
+    }
+
+    /// Emit one RingAda training step (paper §IV.2).  `terminator_position`
+    /// and per-position unfrozen counts come from the coordinator's
+    /// [`RoundPlan`].
+    pub fn ringada_step(&mut self, rp: &RoundPlan, initiator: usize) -> Result<StepHandles> {
+        self.step_common(rp, initiator, /*pause_rule=*/ true, rp.terminator_position, rp.terminator_block)
+    }
+
+    /// Emit one PipeAdapter step: full-depth backward, stale forwarding
+    /// bounded by `max_in_flight` weight versions.
+    pub fn pipe_adapter_step(&mut self, rp: &RoundPlan, initiator: usize) -> Result<StepHandles> {
+        self.step_common(rp, initiator, /*pause_rule=*/ false, 0, 0)
+    }
+
+    fn step_common(
+        &mut self,
+        rp: &RoundPlan,
+        initiator: usize,
+        pause_rule: bool,
+        terminator_position: usize,
+        terminator_block: usize,
+    ) -> Result<StepHandles> {
+        let step = self.next_step;
+        self.next_step += 1;
+        let round = rp.round;
+        let a = self.assignment.clone();
+        let n = a.num_positions();
+        let act = self.sizes.activation_bytes;
+        let init_pos = a.position_of_device(initiator)?;
+
+        // PipeAdapter in-flight bound: step s may not *start* until step
+        // s - max_in_flight has fully finished its head stage (the stash
+        // slot frees up).  RingAda gets this for free from the pause rule.
+        let mut entry_deps: Vec<TaskId> = Vec::new();
+        if !pause_rule && step >= self.max_in_flight {
+            entry_deps.push(self.step_gate[step - self.max_in_flight]);
+        }
+
+        // ---- Forward: Emb on the initiator, then ring positions 0..n.
+        let emb = self.compute(initiator, Op::EmbedFwd, entry_deps, step, round);
+        let mut carry = emb;
+        let mut carry_dev = initiator;
+        let mut fwd_of_position: Vec<Option<TaskId>> = vec![None; n];
+        for s in 0..n {
+            let dev = a.order[s];
+            let blocks = a.blocks[s].1 - a.blocks[s].0;
+            if dev != carry_dev {
+                carry = self.transfer(carry_dev, dev, act, vec![carry], step, round);
+                carry_dev = dev;
+            }
+            let mut deps = vec![carry];
+            if pause_rule {
+                // The pause rule: positions holding unfrozen adapters must
+                // have applied the previous batch's update before running a
+                // new forward (one weight version, no staleness).
+                let has_unfrozen = a.blocks[s].1 > terminator_block.max(a.blocks[s].0);
+                if has_unfrozen {
+                    if let Some(u) = self.last_update[s] {
+                        deps.push(u);
+                    }
+                }
+            }
+            let f = self.compute(dev, Op::BlockFwd { n: blocks }, deps, step, round);
+            fwd_of_position[s] = Some(f);
+            carry = f;
+        }
+
+        // ---- Head on the initiator (labels never move).
+        if carry_dev != initiator {
+            carry = self.transfer(carry_dev, initiator, act, vec![carry], step, round);
+        }
+        let mut head_deps = vec![carry];
+        if let Some(h) = self.last_head_touch {
+            head_deps.push(h); // single logical head version chain
+        }
+        let head = self.compute(initiator, Op::HeadLossGrad, head_deps, step, round);
+        let head_upd = self.compute(initiator, Op::HeadUpdate, vec![head], step, round);
+        self.last_head_touch = Some(head_upd);
+
+        // ---- Backward: reverse ring order, early-stopping at the
+        // terminator position (RingAda) or walking all the way (PipeAdapter).
+        let stop = if pause_rule { terminator_position } else { 0 };
+        let mut gcarry = head;
+        let mut gdev = initiator;
+        for s in (stop..n).rev() {
+            let dev = a.order[s];
+            let (bs, be) = a.blocks[s];
+            // Blocks this position backprops through: all its blocks above
+            // the terminator block (everything for positions > stop).
+            let nb = if pause_rule { be - bs.max(terminator_block) } else { be - bs };
+            if nb == 0 {
+                continue;
+            }
+            if dev != gdev {
+                gcarry = self.transfer(gdev, dev, act, vec![gcarry], step, round);
+                gdev = dev;
+            }
+            let mut deps = vec![gcarry];
+            if let Some(f) = fwd_of_position[s] {
+                deps.push(f); // needs the stored activations of this batch
+            }
+            let b = self.compute(dev, Op::BlockBwd { n: nb }, deps, step, round);
+            let u = self.compute(dev, Op::AdapterUpdate { n: nb }, vec![b], step, round);
+            self.last_update[s] = Some(u);
+            gcarry = b;
+        }
+
+        let handle = StepHandles { step, round, initiator, head_task: head };
+        self.step_gate.push(head_upd);
+        self.handles.push(handle.clone());
+        let _ = init_pos;
+        Ok(handle)
+    }
+
+    /// Emit one Single-device step (classic adapter fine-tuning): everything
+    /// on `device`, full-depth backward, no transfers.
+    pub fn single_step(&mut self, rp: &RoundPlan, device: usize, layers: usize) -> Result<StepHandles> {
+        let step = self.next_step;
+        self.next_step += 1;
+        let round = rp.round;
+        let emb = self.compute(device, Op::EmbedFwd, vec![], step, round);
+        let fwd = self.compute(device, Op::BlockFwd { n: layers }, vec![emb], step, round);
+        let mut head_deps = vec![fwd];
+        if let Some(h) = self.last_head_touch {
+            head_deps.push(h);
+        }
+        let head = self.compute(device, Op::HeadLossGrad, head_deps, step, round);
+        let bwd = self.compute(device, Op::BlockBwd { n: layers }, vec![head], step, round);
+        let upd = self.compute(device, Op::AdapterUpdate { n: layers }, vec![bwd], step, round);
+        let hupd = self.compute(device, Op::HeadUpdate, vec![head], step, round);
+        self.last_head_touch = Some(hupd);
+        let _ = upd;
+        let handle = StepHandles { step, round, initiator: device, head_task: head };
+        self.step_gate.push(hupd);
+        self.handles.push(handle.clone());
+        Ok(handle)
+    }
+
+    /// End-of-initiator-turn head hand-off: the current initiator transfers
+    /// the head parameters to the next one (paper §IV.3).
+    pub fn head_handoff(&mut self, from: usize, to: usize, round: usize) -> Result<TaskId> {
+        if from == to {
+            return Err(Error::Schedule("handoff to self".into()));
+        }
+        let deps = self.last_head_touch.into_iter().collect();
+        let t = self.transfer(from, to, self.sizes.head_bytes, deps, self.next_step, round);
+        self.last_head_touch = Some(t);
+        Ok(t)
+    }
+
+    pub fn into_tasks(self) -> (Vec<Task>, Vec<StepHandles>) {
+        (self.tasks, self.handles)
+    }
+}
+
+/// DAG-level scheme invariants (used by tests and the property suite).
+pub mod invariants {
+    use super::*;
+    use std::collections::HashMap;
+
+    /// Count BlockBwd blocks per step: RingAda must equal `layers -
+    /// terminator_block` (early stop), baselines must equal `layers`.
+    pub fn bwd_blocks_per_step(tasks: &[Task]) -> HashMap<usize, usize> {
+        let mut m = HashMap::new();
+        for t in tasks {
+            if let Kind::Compute { op: Op::BlockBwd { n }, .. } = t.kind {
+                *m.entry(t.step).or_insert(0) += n;
+            }
+        }
+        m
+    }
+
+    /// Devices visited by forward compute, in task order, for `step`.
+    pub fn fwd_path(tasks: &[Task], step: usize) -> Vec<usize> {
+        tasks
+            .iter()
+            .filter(|t| t.step == step)
+            .filter_map(|t| match t.kind {
+                Kind::Compute { device, op: Op::BlockFwd { .. } } => Some(device),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Devices visited by backward compute, in task order, for `step`.
+    pub fn bwd_path(tasks: &[Task], step: usize) -> Vec<usize> {
+        tasks
+            .iter()
+            .filter(|t| t.step == step)
+            .filter_map(|t| match t.kind {
+                Kind::Compute { device, op: Op::BlockBwd { .. } } => Some(device),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// The pause rule as a checkable property: for every position with
+    /// unfrozen adapters, its BlockFwd of step `s+1` must (transitively)
+    /// depend on its AdapterUpdate of step `s`.
+    pub fn fwd_waits_for_update(tasks: &[Task], device: usize) -> bool {
+        // Direct-dep check suffices: the builder adds the edge explicitly.
+        let mut last_update: Option<TaskId> = None;
+        for t in tasks {
+            match t.kind {
+                Kind::Compute { device: d, op: Op::AdapterUpdate { .. } } if d == device => {
+                    last_update = Some(t.id);
+                }
+                Kind::Compute { device: d, op: Op::BlockFwd { .. } } if d == device => {
+                    if let Some(u) = last_update {
+                        if !t.deps.contains(&u) {
+                            return false;
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Coordinator, LayerAssignment};
+    use crate::config::{ClusterConfig, TrainingConfig};
+    use crate::model::manifest::ModelHyper;
+    use crate::model::ModelMeta;
+
+    fn meta(layers: usize) -> ModelMeta {
+        ModelMeta {
+            hyper: ModelHyper {
+                name: "t".into(), vocab: 512, hidden: 64, layers, heads: 4,
+                ffn: 256, bottleneck: 16, seq: 32, batch: 4, init_std: 0.02,
+            },
+            embed_params: 1000,
+            block_backbone_params: 1000,
+            block_adapter_params: 100,
+            head_params: 10,
+        }
+    }
+
+    fn sizes() -> WireSizes {
+        WireSizes { activation_bytes: 32768, head_bytes: 520 }
+    }
+
+    fn fig2_coordinator() -> Coordinator {
+        let assignment = LayerAssignment::from_counts(vec![0, 1, 2, 3], &[4, 5, 2, 3]).unwrap();
+        Coordinator::with_assignment(
+            assignment,
+            &meta(14),
+            &ClusterConfig::paper_default(),
+            &TrainingConfig { initial_depth: 3, unfreeze_interval: 10, ..Default::default() },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn ringada_step_fig2_paths() {
+        let c = fig2_coordinator();
+        let rp = c.round_plan(0).unwrap();
+        let mut b = ScheduleBuilder::new(c.assignment.clone(), sizes(), 4);
+        b.ringada_step(&rp, 0).unwrap();
+        let (tasks, _) = b.into_tasks();
+        validate_dag(&tasks).unwrap();
+        // Fig. 2: fwd u1→u2→u3→u4, bwd stops at u4 (device ids 0..3).
+        assert_eq!(invariants::fwd_path(&tasks, 0), vec![0, 1, 2, 3]);
+        assert_eq!(invariants::bwd_path(&tasks, 0), vec![3]);
+        // Early stop: exactly depth=3 blocks are backpropped.
+        assert_eq!(invariants::bwd_blocks_per_step(&tasks)[&0], 3);
+    }
+
+    #[test]
+    fn ringada_bwd_covers_partial_position() {
+        // depth 4 ⇒ terminator block 10 ⇒ u3 backprops 1 of its 2 blocks.
+        let c = fig2_coordinator();
+        let rp = c.round_plan(10).unwrap();
+        assert_eq!(rp.depth, 4);
+        let mut b = ScheduleBuilder::new(c.assignment.clone(), sizes(), 4);
+        b.ringada_step(&rp, 1).unwrap();
+        let (tasks, _) = b.into_tasks();
+        assert_eq!(invariants::bwd_path(&tasks, 0), vec![3, 2]);
+        assert_eq!(invariants::bwd_blocks_per_step(&tasks)[&0], 4);
+    }
+
+    #[test]
+    fn ringada_pause_rule_edges_exist() {
+        let c = fig2_coordinator();
+        let rp = c.round_plan(0).unwrap();
+        let mut b = ScheduleBuilder::new(c.assignment.clone(), sizes(), 4);
+        for _ in 0..3 {
+            b.ringada_step(&rp, 0).unwrap();
+        }
+        let (tasks, _) = b.into_tasks();
+        validate_dag(&tasks).unwrap();
+        // Device 3 (u4) holds unfrozen adapters at depth 3: its forwards
+        // must wait for its updates.
+        assert!(invariants::fwd_waits_for_update(&tasks, 3));
+    }
+
+    #[test]
+    fn pipeadapter_has_no_pause_edges_but_full_bwd() {
+        let c = fig2_coordinator();
+        let rp = c.round_plan(0).unwrap();
+        let mut b = ScheduleBuilder::new(c.assignment.clone(), sizes(), 4);
+        for _ in 0..2 {
+            b.pipe_adapter_step(&rp, 0).unwrap();
+        }
+        let (tasks, _) = b.into_tasks();
+        validate_dag(&tasks).unwrap();
+        assert_eq!(invariants::bwd_blocks_per_step(&tasks)[&0], 14);
+        assert_eq!(invariants::bwd_path(&tasks, 0), vec![3, 2, 1, 0]);
+        assert!(!invariants::fwd_waits_for_update(&tasks, 3));
+    }
+
+    #[test]
+    fn single_step_stays_on_one_device() {
+        let c = fig2_coordinator();
+        let rp = c.round_plan(0).unwrap();
+        let mut b = ScheduleBuilder::new(c.assignment.clone(), sizes(), 1);
+        b.single_step(&rp, 0, 14).unwrap();
+        let (tasks, _) = b.into_tasks();
+        validate_dag(&tasks).unwrap();
+        assert!(tasks.iter().all(|t| matches!(t.kind, Kind::Compute { device: 0, .. })));
+        assert_eq!(invariants::bwd_blocks_per_step(&tasks)[&0], 14);
+    }
+
+    #[test]
+    fn transfers_only_between_adjacent_carriers() {
+        let c = fig2_coordinator();
+        let rp = c.round_plan(0).unwrap();
+        let mut b = ScheduleBuilder::new(c.assignment.clone(), sizes(), 4);
+        b.ringada_step(&rp, 2).unwrap(); // initiator u3
+        let (tasks, _) = b.into_tasks();
+        // Initiator 2: emb on 2, transfer 2→0, fwd ring, final h 3→2 (last
+        // stage is dev 3), bwd grad 2→3.
+        let transfers: Vec<(usize, usize)> = tasks
+            .iter()
+            .filter_map(|t| match t.kind {
+                Kind::Transfer { from, to, .. } => Some((from, to)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(transfers, vec![(2, 0), (0, 1), (1, 2), (2, 3), (3, 2), (2, 3)]);
+    }
+
+    #[test]
+    fn head_handoff_chains_versions() {
+        let c = fig2_coordinator();
+        let rp = c.round_plan(0).unwrap();
+        let mut b = ScheduleBuilder::new(c.assignment.clone(), sizes(), 4);
+        b.ringada_step(&rp, 0).unwrap();
+        let h = b.head_handoff(0, 1, 0).unwrap();
+        b.ringada_step(&rp, 1).unwrap();
+        let (tasks, handles) = b.into_tasks();
+        validate_dag(&tasks).unwrap();
+        // The second step's head task must depend (directly) on the handoff.
+        let head2 = handles[1].head_task;
+        assert!(tasks[head2].deps.contains(&h));
+        assert!(b_is_sorted(&tasks));
+    }
+
+    fn b_is_sorted(tasks: &[Task]) -> bool {
+        tasks.windows(2).all(|w| w[0].id < w[1].id)
+    }
+
+    #[test]
+    fn pipeadapter_in_flight_gate() {
+        let c = fig2_coordinator();
+        let rp = c.round_plan(0).unwrap();
+        let mut b = ScheduleBuilder::new(c.assignment.clone(), sizes(), 2);
+        for _ in 0..4 {
+            b.pipe_adapter_step(&rp, 0).unwrap();
+        }
+        let (tasks, handles) = b.into_tasks();
+        // Step 2's EmbedFwd must depend on step 0's head update.
+        let emb2 = tasks
+            .iter()
+            .find(|t| t.step == 2 && matches!(t.kind, Kind::Compute { op: Op::EmbedFwd, .. }))
+            .unwrap();
+        assert!(!emb2.deps.is_empty());
+        let gate = emb2.deps[0];
+        assert_eq!(tasks[gate].step, 0);
+        assert!(matches!(tasks[gate].kind, Kind::Compute { op: Op::HeadUpdate, .. }));
+        let _ = handles;
+    }
+}

@@ -1,0 +1,128 @@
+//! Task-DAG vocabulary for the pipeline schedules.
+//!
+//! A schedule is a list of [`Task`]s in topological order (every dep id is
+//! smaller than the task's own id).  Tasks claim a *resource* — a device's
+//! compute or a directed D2D link — and the simulator (crate::sim) executes
+//! the DAG under resource exclusivity.  The *semantics* of each scheme
+//! (early-stopped backprop, the pause rule, stale forwarding) are encoded
+//! purely in the dependency structure, so they can be property-tested
+//! without any timing model.
+
+pub type TaskId = usize;
+
+/// What a compute task does (costing key for the simulator LUT).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Op {
+    EmbedFwd,
+    /// Forward through `n` consecutive blocks.
+    BlockFwd { n: usize },
+    /// Backward through `n` consecutive blocks (adapter grads + input grad).
+    BlockBwd { n: usize },
+    HeadLossGrad,
+    /// Optimizer step over `n` adapters.
+    AdapterUpdate { n: usize },
+    /// Optimizer step over the head parameters.
+    HeadUpdate,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Kind {
+    Compute { device: usize, op: Op },
+    Transfer { from: usize, to: usize, bytes: usize },
+}
+
+/// One node of the schedule DAG.
+#[derive(Debug, Clone)]
+pub struct Task {
+    pub id: TaskId,
+    pub kind: Kind,
+    pub deps: Vec<TaskId>,
+    /// Global step (mini-batch) index this task belongs to.
+    pub step: usize,
+    /// Training round the step belongs to.
+    pub round: usize,
+}
+
+impl Task {
+    pub fn device(&self) -> Option<usize> {
+        match self.kind {
+            Kind::Compute { device, .. } => Some(device),
+            Kind::Transfer { .. } => None,
+        }
+    }
+
+    pub fn is_compute(&self) -> bool {
+        matches!(self.kind, Kind::Compute { .. })
+    }
+}
+
+/// Resource identifier for the simulator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Resource {
+    Device(usize),
+    Link(usize, usize),
+}
+
+impl Task {
+    pub fn resource(&self) -> Resource {
+        match self.kind {
+            Kind::Compute { device, .. } => Resource::Device(device),
+            Kind::Transfer { from, to, .. } => Resource::Link(from, to),
+        }
+    }
+}
+
+/// Validate topological ordering and dep sanity.
+pub fn validate_dag(tasks: &[Task]) -> crate::error::Result<()> {
+    for (i, t) in tasks.iter().enumerate() {
+        if t.id != i {
+            return Err(crate::error::Error::Schedule(format!(
+                "task ids must be dense and ordered (task {i} has id {})",
+                t.id
+            )));
+        }
+        for &d in &t.deps {
+            if d >= t.id {
+                return Err(crate::error::Error::Schedule(format!(
+                    "task {} depends on later/equal task {d}",
+                    t.id
+                )));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validate_accepts_topological() {
+        let tasks = vec![
+            Task { id: 0, kind: Kind::Compute { device: 0, op: Op::EmbedFwd }, deps: vec![], step: 0, round: 0 },
+            Task { id: 1, kind: Kind::Transfer { from: 0, to: 1, bytes: 8 }, deps: vec![0], step: 0, round: 0 },
+        ];
+        validate_dag(&tasks).unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_forward_dep() {
+        let tasks = vec![Task {
+            id: 0,
+            kind: Kind::Compute { device: 0, op: Op::EmbedFwd },
+            deps: vec![0],
+            step: 0,
+            round: 0,
+        }];
+        assert!(validate_dag(&tasks).is_err());
+    }
+
+    #[test]
+    fn resource_mapping() {
+        let c = Task { id: 0, kind: Kind::Compute { device: 2, op: Op::HeadUpdate }, deps: vec![], step: 0, round: 0 };
+        assert_eq!(c.resource(), Resource::Device(2));
+        let t = Task { id: 0, kind: Kind::Transfer { from: 1, to: 3, bytes: 4 }, deps: vec![], step: 0, round: 0 };
+        assert_eq!(t.resource(), Resource::Link(1, 3));
+    }
+}

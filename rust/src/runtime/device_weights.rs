@@ -1,0 +1,64 @@
+//! Device-resident model weights — the runtime hot-path optimization
+//! (EXPERIMENTS.md §Perf).
+//!
+//! Per-call weight upload dominates stage dispatch once blocks get big
+//! (the `small` config moves ~4 MB of frozen backbone per `block_fwd`; the
+//! `e2e` config ~29 MB).  `DeviceWeights` pins every parameter tensor in a
+//! PJRT device buffer once; per step only the *activations* (tens of KB)
+//! and the freshly-updated adapter/head tensors (tiny) cross the host
+//! boundary.
+
+use xla::PjRtBuffer;
+
+use crate::error::Result;
+use crate::runtime::engine::Engine;
+use crate::runtime::tensor::HostTensor;
+use crate::runtime::weights::ModelWeights;
+
+/// Device-buffer mirror of [`ModelWeights`].  Holds borrows of nothing —
+/// buffers are owned — but must be used with the same [`Engine`] (same
+/// PJRT client) that uploaded them.
+pub struct DeviceWeights {
+    pub embed: Vec<PjRtBuffer>,
+    /// `blocks[l]` = all params of block `l` in manifest order.
+    pub blocks: Vec<Vec<PjRtBuffer>>,
+    pub head: Vec<PjRtBuffer>,
+    pub backbone_per_block: usize,
+}
+
+impl DeviceWeights {
+    /// Upload every tensor of `w` to the engine's device.
+    pub fn upload(engine: &Engine, w: &ModelWeights) -> Result<Self> {
+        let up = |ts: &[HostTensor]| -> Result<Vec<PjRtBuffer>> {
+            ts.iter().map(|t| engine.to_device(t)).collect()
+        };
+        Ok(DeviceWeights {
+            embed: up(&w.embed)?,
+            blocks: w.blocks.iter().map(|b| up(b)).collect::<Result<_>>()?,
+            head: up(&w.head)?,
+            backbone_per_block: w.backbone_per_block,
+        })
+    }
+
+    /// Re-upload block `l`'s four adapter tensors after an optimizer step.
+    pub fn refresh_adapter(
+        &mut self,
+        engine: &Engine,
+        l: usize,
+        adapters: &[HostTensor],
+    ) -> Result<()> {
+        debug_assert_eq!(adapters.len(), 4);
+        for (i, t) in adapters.iter().enumerate() {
+            self.blocks[l][self.backbone_per_block + i] = engine.to_device(t)?;
+        }
+        Ok(())
+    }
+
+    /// Re-upload the head parameters after an optimizer step.
+    pub fn refresh_head(&mut self, engine: &Engine, head: &[HostTensor]) -> Result<()> {
+        for (i, t) in head.iter().enumerate() {
+            self.head[i] = engine.to_device(t)?;
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,221 @@
+//! PJRT engine: loads AOT artifacts (HLO text) and executes them.
+//!
+//! One `Engine` = one PJRT CPU client + the compiled executables of one
+//! artifact directory.  `PjRtClient` is `Rc`-based (not `Send`), so each
+//! simulated edge device owns its own `Engine` on its own thread — which
+//! also mirrors the deployment reality (one NPU runtime per device).
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax ≥ 0.5
+//! serialized protos use 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see DESIGN.md §3 and
+//! /opt/xla-example/README.md).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use xla::{HloModuleProto, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::error::{Error, Result};
+use crate::model::manifest::Manifest;
+use crate::runtime::tensor::HostTensor;
+
+/// Cumulative execution statistics (profiling + the simulator's LUT source).
+#[derive(Debug, Clone, Default)]
+pub struct ExecStats {
+    /// Per-executable: (invocations, total seconds).
+    pub per_exe: HashMap<String, (u64, f64)>,
+}
+
+impl ExecStats {
+    fn record(&mut self, name: &str, secs: f64) {
+        let e = self.per_exe.entry(name.to_string()).or_insert((0, 0.0));
+        e.0 += 1;
+        e.1 += secs;
+    }
+
+    /// Mean seconds per invocation of `name`, if it ever ran.
+    pub fn mean_secs(&self, name: &str) -> Option<f64> {
+        self.per_exe.get(name).map(|(n, t)| t / (*n as f64).max(1.0))
+    }
+
+    pub fn total_invocations(&self) -> u64 {
+        self.per_exe.values().map(|(n, _)| n).sum()
+    }
+}
+
+/// A compiled artifact set, ready to execute.
+pub struct Engine {
+    client: PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    exes: HashMap<String, PjRtLoadedExecutable>,
+    stats: RefCell<ExecStats>,
+    /// When true, `execute` validates every argument against the manifest
+    /// spec (cheap; disable only in the measured hot loop).
+    pub check_args: bool,
+}
+
+impl Engine {
+    /// Load `manifest.json` from `dir` and compile every executable.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = PjRtClient::cpu()?;
+        let mut exes = HashMap::new();
+        for (name, spec) in &manifest.executables {
+            let path = dir.join(&spec.file);
+            let proto = HloModuleProto::from_text_file(path.to_str().ok_or_else(
+                || Error::other("non-utf8 artifact path"),
+            )?)?;
+            let comp = XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            exes.insert(name.clone(), exe);
+        }
+        Ok(Engine {
+            client,
+            manifest,
+            dir,
+            exes,
+            stats: RefCell::new(ExecStats::default()),
+            check_args: true,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+
+    pub fn stats(&self) -> ExecStats {
+        self.stats.borrow().clone()
+    }
+
+    pub fn reset_stats(&self) {
+        *self.stats.borrow_mut() = ExecStats::default();
+    }
+
+    /// Execute `name` with host tensors; returns the result tensors.
+    ///
+    /// aot.py lowers with `return_tuple=True`, so the PJRT output is a
+    /// single tuple buffer which we decompose into the manifest's declared
+    /// results.
+    pub fn execute(&self, name: &str, args: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let spec = self.manifest.executable(name)?;
+        if args.len() != spec.args.len() {
+            return Err(Error::other(format!(
+                "{name}: expected {} args, got {}",
+                spec.args.len(),
+                args.len()
+            )));
+        }
+        if self.check_args {
+            for (a, s) in args.iter().zip(&spec.args) {
+                a.check_spec(s)?;
+            }
+        }
+        let exe = self
+            .exes
+            .get(name)
+            .ok_or_else(|| Error::UnknownExecutable(name.to_string()))?;
+
+        let start = Instant::now();
+        // Upload args as explicitly-owned device buffers and run through
+        // `execute_b`.  (The Literal-based `execute` path leaks its
+        // device-side input copies — ~250 KB/call measured — and is also
+        // slower: one extra host copy per argument.)
+        let buffers: Vec<xla::PjRtBuffer> =
+            args.iter().map(|a| self.to_device(a)).collect::<Result<_>>()?;
+        let result = exe.execute_b::<xla::PjRtBuffer>(&buffers)?;
+        let tuple = result
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| Error::other(format!("{name}: empty execution result")))?
+            .to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        let secs = start.elapsed().as_secs_f64();
+        self.stats.borrow_mut().record(name, secs);
+
+        if parts.len() != spec.results.len() {
+            return Err(Error::other(format!(
+                "{name}: manifest declares {} results, runtime produced {}",
+                spec.results.len(),
+                parts.len()
+            )));
+        }
+        parts.iter().map(HostTensor::from_literal).collect()
+    }
+
+    /// Upload a host tensor to a device buffer (explicitly owned; freed on
+    /// drop).  Public so callers can pin long-lived operands — e.g. block
+    /// weights — device-side across many `execute_buffers` calls.
+    pub fn to_device(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
+        use crate::runtime::tensor::TensorData;
+        let buf = match &t.data {
+            TensorData::F32(v) => {
+                self.client.buffer_from_host_buffer::<f32>(v, &t.shape, None)?
+            }
+            TensorData::I32(v) => {
+                self.client.buffer_from_host_buffer::<i32>(v, &t.shape, None)?
+            }
+        };
+        Ok(buf)
+    }
+
+    /// Execute with caller-managed device buffers (the zero-copy hot path:
+    /// weights stay resident, only activations move).
+    pub fn execute_buffers(
+        &self,
+        name: &str,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<HostTensor>> {
+        let spec = self.manifest.executable(name)?;
+        if args.len() != spec.args.len() {
+            return Err(Error::other(format!(
+                "{name}: expected {} args, got {}",
+                spec.args.len(),
+                args.len()
+            )));
+        }
+        let exe = self
+            .exes
+            .get(name)
+            .ok_or_else(|| Error::UnknownExecutable(name.to_string()))?;
+        let start = Instant::now();
+        let result = exe.execute_b::<&xla::PjRtBuffer>(args)?;
+        let tuple = result
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| Error::other(format!("{name}: empty execution result")))?
+            .to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        self.stats
+            .borrow_mut()
+            .record(name, start.elapsed().as_secs_f64());
+        if parts.len() != spec.results.len() {
+            return Err(Error::other(format!(
+                "{name}: manifest declares {} results, runtime produced {}",
+                spec.results.len(),
+                parts.len()
+            )));
+        }
+        parts.iter().map(HostTensor::from_literal).collect()
+    }
+}
+
+impl std::fmt::Debug for Engine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Engine")
+            .field("dir", &self.dir)
+            .field("executables", &self.exes.keys().collect::<Vec<_>>())
+            .finish()
+    }
+}

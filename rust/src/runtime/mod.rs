@@ -1,0 +1,22 @@
+//! L3 runtime: PJRT execution of the AOT artifacts plus everything the
+//! coordinator needs around it (tensors, weights, optimizers, RNG).
+//!
+//! Layering (DESIGN.md §3): python/jax lowers the model ONCE at build time
+//! (`make artifacts`); this module loads the HLO text and executes it —
+//! python never runs on the training path.
+
+pub mod device_weights;
+pub mod engine;
+pub mod optim;
+pub mod rng;
+pub mod stage;
+pub mod tensor;
+pub mod weights;
+
+pub use device_weights::DeviceWeights;
+pub use engine::{Engine, ExecStats};
+pub use optim::{Adam, Sgd};
+pub use rng::Rng;
+pub use stage::StageRunner;
+pub use tensor::{HostTensor, TensorData};
+pub use weights::ModelWeights;

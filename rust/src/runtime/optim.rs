@@ -1,0 +1,148 @@
+//! Optimizers for the trainable parameters (adapters + head).
+//!
+//! Trainable state is tiny under RingAda (≈2% of the model), so parameter
+//! updates run on the Rust side rather than through an HLO executable —
+//! one less artifact per shape, and the simulator charges the cost to the
+//! device that owns the adapter anyway.
+
+use crate::error::Result;
+use crate::runtime::tensor::HostTensor;
+
+/// Adam with bias correction (the paper fine-tunes with Adam).
+#[derive(Debug, Clone)]
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    /// Per-parameter-tensor first/second moment vectors, lazily sized.
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    step: u64,
+}
+
+impl Adam {
+    pub fn new(lr: f32, num_tensors: usize) -> Self {
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            m: vec![Vec::new(); num_tensors],
+            v: vec![Vec::new(); num_tensors],
+            step: 0,
+        }
+    }
+
+    pub fn step_count(&self) -> u64 {
+        self.step
+    }
+
+    /// Bytes of optimizer state currently allocated (memory accounting).
+    pub fn state_bytes(&self) -> usize {
+        (self.m.iter().map(Vec::len).sum::<usize>()
+            + self.v.iter().map(Vec::len).sum::<usize>())
+            * 4
+    }
+
+    /// Apply one update to `params[i]` with `grads[i]`; slot indices keep
+    /// each tensor's moments separate.
+    pub fn update(&mut self, params: &mut [&mut HostTensor], grads: &[&HostTensor]) -> Result<()> {
+        assert_eq!(params.len(), grads.len());
+        self.step += 1;
+        let t = self.step as f32;
+        let bc1 = 1.0 - self.beta1.powf(t);
+        let bc2 = 1.0 - self.beta2.powf(t);
+        for (slot, (p, g)) in params.iter_mut().zip(grads).enumerate() {
+            let g = g.as_f32()?;
+            let p = p.as_f32_mut()?;
+            if self.m[slot].len() != p.len() {
+                self.m[slot] = vec![0.0; p.len()];
+                self.v[slot] = vec![0.0; p.len()];
+            }
+            let m = &mut self.m[slot];
+            let v = &mut self.v[slot];
+            for i in 0..p.len() {
+                m[i] = self.beta1 * m[i] + (1.0 - self.beta1) * g[i];
+                v[i] = self.beta2 * v[i] + (1.0 - self.beta2) * g[i] * g[i];
+                let mhat = m[i] / bc1;
+                let vhat = v[i] / bc2;
+                p[i] -= self.lr * mhat / (vhat.sqrt() + self.eps);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Plain SGD (ablation baseline).
+#[derive(Debug, Clone)]
+pub struct Sgd {
+    pub lr: f32,
+}
+
+impl Sgd {
+    pub fn new(lr: f32) -> Self {
+        Sgd { lr }
+    }
+
+    pub fn update(&self, params: &mut [&mut HostTensor], grads: &[&HostTensor]) -> Result<()> {
+        for (p, g) in params.iter_mut().zip(grads) {
+            let g = g.as_f32()?;
+            let p = p.as_f32_mut()?;
+            for i in 0..p.len() {
+                p[i] -= self.lr * g[i];
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(v: Vec<f32>) -> HostTensor {
+        HostTensor::f32(vec![v.len()], v).unwrap()
+    }
+
+    #[test]
+    fn adam_minimizes_quadratic() {
+        // minimize f(x) = x^2 from x=3; grad = 2x
+        let mut x = t(vec![3.0]);
+        let mut opt = Adam::new(0.1, 1);
+        for _ in 0..200 {
+            let g = t(vec![2.0 * x.as_f32().unwrap()[0]]);
+            opt.update(&mut [&mut x], &[&g]).unwrap();
+        }
+        assert!(x.as_f32().unwrap()[0].abs() < 1e-2);
+        assert_eq!(opt.step_count(), 200);
+    }
+
+    #[test]
+    fn adam_state_bytes_tracks_allocation() {
+        let mut x = t(vec![0.0; 100]);
+        let g = t(vec![1.0; 100]);
+        let mut opt = Adam::new(0.01, 1);
+        assert_eq!(opt.state_bytes(), 0);
+        opt.update(&mut [&mut x], &[&g]).unwrap();
+        assert_eq!(opt.state_bytes(), 2 * 100 * 4);
+    }
+
+    #[test]
+    fn sgd_step_is_lr_times_grad() {
+        let mut x = t(vec![1.0, 2.0]);
+        let g = t(vec![0.5, -0.5]);
+        Sgd::new(0.1).update(&mut [&mut x], &[&g]).unwrap();
+        assert_eq!(x.as_f32().unwrap(), &[0.95, 2.05]);
+    }
+
+    #[test]
+    fn adam_first_step_magnitude_is_lr() {
+        // With bias correction the first Adam step ≈ lr * sign(grad).
+        let mut x = t(vec![0.0]);
+        let g = t(vec![123.0]);
+        let mut opt = Adam::new(0.01, 1);
+        opt.update(&mut [&mut x], &[&g]).unwrap();
+        assert!((x.as_f32().unwrap()[0] + 0.01).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,205 @@
+//! Stage-level compute API: the typed operations the training drivers and
+//! device actors invoke, mapped onto the generic [`Engine::execute`] calls.
+//!
+//! One `block_fwd`/`block_bwd` executable serves *every* block — weights are
+//! arguments — so any layer assignment composes without recompiling
+//! (DESIGN.md §3).
+
+use crate::error::Result;
+use crate::runtime::device_weights::DeviceWeights;
+use crate::runtime::engine::Engine;
+use crate::runtime::tensor::HostTensor;
+use crate::runtime::weights::ModelWeights;
+
+/// Gradients produced by one block's backward pass.
+#[derive(Debug, Clone)]
+pub struct BlockGrads {
+    /// Gradient w.r.t. the block input (relayed to the previous device).
+    pub gx: HostTensor,
+    /// Gradients of the 4 adapter tensors, in manifest order.
+    pub adapter: Vec<HostTensor>,
+}
+
+/// Output of the head's loss+grad stage (runs on the initiator only).
+#[derive(Debug, Clone)]
+pub struct HeadGrads {
+    pub loss: f32,
+    /// Gradient w.r.t. the final hidden states (relayed backwards).
+    pub gh: HostTensor,
+    /// Gradients of the head parameters `[w_head, b_head]`.
+    pub head: Vec<HostTensor>,
+}
+
+/// Thin, borrowing wrapper — construct freely, it holds no state.
+pub struct StageRunner<'a> {
+    engine: &'a Engine,
+}
+
+impl<'a> StageRunner<'a> {
+    pub fn new(engine: &'a Engine) -> Self {
+        StageRunner { engine }
+    }
+
+    pub fn engine(&self) -> &Engine {
+        self.engine
+    }
+
+    /// Embedding forward: `ids s32[B,S]` → `h f32[B,S,H]`.
+    pub fn embed(&self, w: &ModelWeights, ids: &HostTensor) -> Result<HostTensor> {
+        let mut args = Vec::with_capacity(1 + w.embed.len());
+        args.push(ids.clone());
+        args.extend(w.embed.iter().cloned());
+        let mut out = self.engine.execute("embed_fwd", &args)?;
+        Ok(out.remove(0))
+    }
+
+    /// Forward through block `l`.
+    pub fn block_fwd(&self, w: &ModelWeights, l: usize, x: &HostTensor) -> Result<HostTensor> {
+        let mut args = Vec::with_capacity(1 + w.blocks[l].len());
+        args.push(x.clone());
+        args.extend(w.blocks[l].iter().cloned());
+        let mut out = self.engine.execute("block_fwd", &args)?;
+        Ok(out.remove(0))
+    }
+
+    /// Backward through block `l`: needs the block *input* `x` (stored at
+    /// forward time) and the upstream gradient `gy`; recomputes internals.
+    pub fn block_bwd(
+        &self,
+        w: &ModelWeights,
+        l: usize,
+        x: &HostTensor,
+        gy: &HostTensor,
+    ) -> Result<BlockGrads> {
+        let mut args = Vec::with_capacity(2 + w.blocks[l].len());
+        args.push(x.clone());
+        args.extend(w.blocks[l].iter().cloned());
+        args.push(gy.clone());
+        let mut out = self.engine.execute("block_bwd", &args)?;
+        let gx = out.remove(0);
+        Ok(BlockGrads { gx, adapter: out })
+    }
+
+    /// Head forward (logits only, for inspection).
+    pub fn head_fwd(&self, w: &ModelWeights, h: &HostTensor) -> Result<HostTensor> {
+        let mut args = vec![h.clone()];
+        args.extend(w.head.iter().cloned());
+        let mut out = self.engine.execute("head_fwd", &args)?;
+        Ok(out.remove(0))
+    }
+
+    /// Loss + gradients; labels stay on the initiator.
+    pub fn head_loss_grad(
+        &self,
+        w: &ModelWeights,
+        h: &HostTensor,
+        starts: &HostTensor,
+        ends: &HostTensor,
+    ) -> Result<HeadGrads> {
+        let mut args = vec![h.clone()];
+        args.extend(w.head.iter().cloned());
+        args.push(starts.clone());
+        args.push(ends.clone());
+        let mut out = self.engine.execute("head_loss_grad", &args)?;
+        let loss = out.remove(0).scalar_f32()?;
+        let gh = out.remove(0);
+        Ok(HeadGrads { loss, gh, head: out })
+    }
+
+    /// Greedy span decode for evaluation.
+    pub fn head_predict(
+        &self,
+        w: &ModelWeights,
+        h: &HostTensor,
+    ) -> Result<(Vec<i32>, Vec<i32>)> {
+        let mut args = vec![h.clone()];
+        args.extend(w.head.iter().cloned());
+        let out = self.engine.execute("head_predict", &args)?;
+        Ok((out[0].as_i32()?.to_vec(), out[1].as_i32()?.to_vec()))
+    }
+
+    /// Full forward from token ids through blocks `[0, L)` (single-device
+    /// semantics; the distributed path splits this across devices).
+    pub fn full_fwd(&self, w: &ModelWeights, ids: &HostTensor) -> Result<HostTensor> {
+        let mut h = self.embed(w, ids)?;
+        for l in 0..w.blocks.len() {
+            h = self.block_fwd(w, l, &h)?;
+        }
+        Ok(h)
+    }
+
+    // ------------------------------------------------------------------
+    // Device-resident weight path (the hot loop; EXPERIMENTS.md §Perf):
+    // weights stay pinned in PJRT buffers, only activations move.
+    // ------------------------------------------------------------------
+
+    pub fn embed_dev(&self, dw: &DeviceWeights, ids: &HostTensor) -> Result<HostTensor> {
+        let ids_buf = self.engine.to_device(ids)?;
+        let mut args: Vec<&xla::PjRtBuffer> = vec![&ids_buf];
+        args.extend(dw.embed.iter());
+        let mut out = self.engine.execute_buffers("embed_fwd", &args)?;
+        Ok(out.remove(0))
+    }
+
+    pub fn block_fwd_dev(
+        &self,
+        dw: &DeviceWeights,
+        l: usize,
+        x: &HostTensor,
+    ) -> Result<HostTensor> {
+        let x_buf = self.engine.to_device(x)?;
+        let mut args: Vec<&xla::PjRtBuffer> = vec![&x_buf];
+        args.extend(dw.blocks[l].iter());
+        let mut out = self.engine.execute_buffers("block_fwd", &args)?;
+        Ok(out.remove(0))
+    }
+
+    pub fn block_bwd_dev(
+        &self,
+        dw: &DeviceWeights,
+        l: usize,
+        x: &HostTensor,
+        gy: &HostTensor,
+    ) -> Result<BlockGrads> {
+        let x_buf = self.engine.to_device(x)?;
+        let gy_buf = self.engine.to_device(gy)?;
+        let mut args: Vec<&xla::PjRtBuffer> = vec![&x_buf];
+        args.extend(dw.blocks[l].iter());
+        args.push(&gy_buf);
+        let mut out = self.engine.execute_buffers("block_bwd", &args)?;
+        let gx = out.remove(0);
+        Ok(BlockGrads { gx, adapter: out })
+    }
+
+    pub fn head_loss_grad_dev(
+        &self,
+        dw: &DeviceWeights,
+        h: &HostTensor,
+        starts: &HostTensor,
+        ends: &HostTensor,
+    ) -> Result<HeadGrads> {
+        let h_buf = self.engine.to_device(h)?;
+        let s_buf = self.engine.to_device(starts)?;
+        let e_buf = self.engine.to_device(ends)?;
+        let mut args: Vec<&xla::PjRtBuffer> = vec![&h_buf];
+        args.extend(dw.head.iter());
+        args.push(&s_buf);
+        args.push(&e_buf);
+        let mut out = self.engine.execute_buffers("head_loss_grad", &args)?;
+        let loss = out.remove(0).scalar_f32()?;
+        let gh = out.remove(0);
+        Ok(HeadGrads { loss, gh, head: out })
+    }
+
+    pub fn head_predict_dev(
+        &self,
+        dw: &DeviceWeights,
+        h: &HostTensor,
+    ) -> Result<(Vec<i32>, Vec<i32>)> {
+        let h_buf = self.engine.to_device(h)?;
+        let mut args: Vec<&xla::PjRtBuffer> = vec![&h_buf];
+        args.extend(dw.head.iter());
+        let out = self.engine.execute_buffers("head_predict", &args)?;
+        Ok((out[0].as_i32()?.to_vec(), out[1].as_i32()?.to_vec()))
+    }
+}

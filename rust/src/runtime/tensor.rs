@@ -1,0 +1,205 @@
+//! Host-side tensor type bridging `manifest.json` specs and XLA literals.
+
+use xla::Literal;
+
+use crate::error::{Error, Result};
+use crate::model::manifest::TensorSpec;
+
+/// Element storage: this stack only traffics f32 and s32 (see aot.py).
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// A host tensor with shape; the unit of exchange with the PJRT engine and
+/// between simulated devices.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl HostTensor {
+    pub fn f32(shape: impl Into<Vec<usize>>, data: Vec<f32>) -> Result<Self> {
+        let shape = shape.into();
+        let numel: usize = shape.iter().product();
+        if data.len() != numel {
+            return Err(Error::ShapeMismatch {
+                name: "f32 tensor".into(),
+                expected: shape,
+                got: vec![data.len()],
+            });
+        }
+        Ok(HostTensor { shape, data: TensorData::F32(data) })
+    }
+
+    pub fn i32(shape: impl Into<Vec<usize>>, data: Vec<i32>) -> Result<Self> {
+        let shape = shape.into();
+        let numel: usize = shape.iter().product();
+        if data.len() != numel {
+            return Err(Error::ShapeMismatch {
+                name: "i32 tensor".into(),
+                expected: shape,
+                got: vec![data.len()],
+            });
+        }
+        Ok(HostTensor { shape, data: TensorData::I32(data) })
+    }
+
+    pub fn zeros_f32(shape: impl Into<Vec<usize>>) -> Self {
+        let shape = shape.into();
+        let numel: usize = shape.iter().product();
+        HostTensor { shape, data: TensorData::F32(vec![0.0; numel]) }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn byte_size(&self) -> usize {
+        self.numel() * 4
+    }
+
+    pub fn dtype_name(&self) -> &'static str {
+        match self.data {
+            TensorData::F32(_) => "f32",
+            TensorData::I32(_) => "s32",
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            TensorData::I32(_) => Err(Error::other("tensor is s32, expected f32")),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut Vec<f32>> {
+        match &mut self.data {
+            TensorData::F32(v) => Ok(v),
+            TensorData::I32(_) => Err(Error::other("tensor is s32, expected f32")),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            TensorData::F32(_) => Err(Error::other("tensor is f32, expected s32")),
+        }
+    }
+
+    /// Scalar extraction (loss values etc.).
+    pub fn scalar_f32(&self) -> Result<f32> {
+        let v = self.as_f32()?;
+        if v.len() != 1 {
+            return Err(Error::other(format!(
+                "expected scalar, got {:?}",
+                self.shape
+            )));
+        }
+        Ok(v[0])
+    }
+
+    /// Validate against a manifest tensor spec (shape + dtype).
+    pub fn check_spec(&self, spec: &TensorSpec) -> Result<()> {
+        if self.shape != spec.shape {
+            return Err(Error::ShapeMismatch {
+                name: spec.name.clone(),
+                expected: spec.shape.clone(),
+                got: self.shape.clone(),
+            });
+        }
+        if self.dtype_name() != spec.dtype {
+            return Err(Error::other(format!(
+                "dtype mismatch for `{}`: manifest says {}, tensor is {}",
+                spec.name, spec.dtype, self.dtype_name()
+            )));
+        }
+        Ok(())
+    }
+
+    pub fn to_literal(&self) -> Result<Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = match &self.data {
+            TensorData::F32(v) => Literal::vec1(v).reshape(&dims)?,
+            TensorData::I32(v) => Literal::vec1(v).reshape(&dims)?,
+        };
+        Ok(lit)
+    }
+
+    pub fn from_literal(lit: &Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => {
+                HostTensor::f32(dims, lit.to_vec::<f32>()?)
+            }
+            xla::ElementType::S32 => {
+                HostTensor::i32(dims, lit.to_vec::<i32>()?)
+            }
+            other => Err(Error::other(format!(
+                "unsupported literal element type {other:?}"
+            ))),
+        }
+    }
+
+    /// Max absolute difference vs another f32 tensor (test helper).
+    pub fn max_abs_diff(&self, other: &HostTensor) -> Result<f32> {
+        let a = self.as_f32()?;
+        let b = other.as_f32()?;
+        if a.len() != b.len() {
+            return Err(Error::other("length mismatch in max_abs_diff"));
+        }
+        Ok(a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_shape_checked() {
+        assert!(HostTensor::f32(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(HostTensor::f32(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn scalar_extraction() {
+        let t = HostTensor::f32(vec![], vec![7.5]).unwrap();
+        assert_eq!(t.scalar_f32().unwrap(), 7.5);
+        let t2 = HostTensor::f32(vec![2], vec![1.0, 2.0]).unwrap();
+        assert!(t2.scalar_f32().is_err());
+    }
+
+    #[test]
+    fn spec_check() {
+        let spec = TensorSpec { name: "x".into(), shape: vec![2, 2], dtype: "f32".into() };
+        let ok = HostTensor::zeros_f32(vec![2, 2]);
+        ok.check_spec(&spec).unwrap();
+        let bad_shape = HostTensor::zeros_f32(vec![4]);
+        assert!(bad_shape.check_spec(&spec).is_err());
+        let bad_dtype = HostTensor::i32(vec![2, 2], vec![0; 4]).unwrap();
+        assert!(bad_dtype.check_spec(&spec).is_err());
+    }
+
+    #[test]
+    fn literal_round_trip() {
+        let t = HostTensor::f32(vec![2, 3], (0..6).map(|i| i as f32).collect()).unwrap();
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+
+        let ti = HostTensor::i32(vec![4], vec![1, -2, 3, -4]).unwrap();
+        let back = HostTensor::from_literal(&ti.to_literal().unwrap()).unwrap();
+        assert_eq!(ti, back);
+    }
+
+    #[test]
+    fn max_abs_diff_works() {
+        let a = HostTensor::f32(vec![3], vec![1.0, 2.0, 3.0]).unwrap();
+        let b = HostTensor::f32(vec![3], vec![1.5, 2.0, 2.0]).unwrap();
+        assert_eq!(a.max_abs_diff(&b).unwrap(), 1.0);
+    }
+}

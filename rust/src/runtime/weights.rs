@@ -1,0 +1,150 @@
+//! Model weights: deterministic initialization from the manifest inventory.
+//!
+//! Artifacts carry no weights — the "pre-trained" backbone is synthesized
+//! here from a seed (DESIGN.md §2: what matters for the reproduction is the
+//! *training dynamics of adapters over a frozen backbone*, not the specific
+//! pre-trained weights).  Adapter `W_up` is zero-initialized so fresh
+//! adapters are exact identities (standard practice; also asserted by the
+//! python tests).
+
+use crate::error::Result;
+use crate::model::manifest::{Manifest, ParamSpec};
+use crate::runtime::rng::Rng;
+use crate::runtime::tensor::HostTensor;
+
+/// All parameters of the model, grouped the way devices hold them.
+#[derive(Debug, Clone)]
+pub struct ModelWeights {
+    pub embed: Vec<HostTensor>,
+    /// `blocks[l]` = all params of block `l` in manifest order
+    /// (backbone first, then the 4 adapter tensors).
+    pub blocks: Vec<Vec<HostTensor>>,
+    pub head: Vec<HostTensor>,
+    /// Number of leading backbone params per block.
+    pub backbone_per_block: usize,
+}
+
+fn init_tensor(spec: &ParamSpec, std: f32, rng: &mut Rng) -> HostTensor {
+    let n = spec.numel();
+    let data = match spec.init.as_str() {
+        "normal" => rng.normal_vec(n, std),
+        "ones" => vec![1.0; n],
+        _ => vec![0.0; n],
+    };
+    HostTensor { shape: spec.shape.clone(), data: crate::runtime::tensor::TensorData::F32(data) }
+}
+
+impl ModelWeights {
+    /// Deterministic init: `seed` fully determines every tensor.  Layer `l`
+    /// uses stream `l+1`, so assigning blocks to different devices cannot
+    /// change their contents.
+    pub fn init(manifest: &Manifest, seed: u64) -> Result<Self> {
+        let std = manifest.config.init_std;
+        let base = Rng::new(seed);
+
+        let mut embed_rng = base.fork(0xE0B);
+        let embed = manifest
+            .params
+            .embed
+            .iter()
+            .map(|s| init_tensor(s, std, &mut embed_rng))
+            .collect();
+
+        let blocks = (0..manifest.config.layers)
+            .map(|l| {
+                let mut rng = base.fork(1 + l as u64);
+                manifest
+                    .params
+                    .block
+                    .iter()
+                    .map(|s| init_tensor(s, std, &mut rng))
+                    .collect()
+            })
+            .collect();
+
+        let mut head_rng = base.fork(0x4EAD);
+        let head = manifest
+            .params
+            .head
+            .iter()
+            .map(|s| init_tensor(s, std, &mut head_rng))
+            .collect();
+
+        Ok(ModelWeights {
+            embed,
+            blocks,
+            head,
+            backbone_per_block: manifest.backbone_params_per_block(),
+        })
+    }
+
+    /// The four adapter tensors of block `l` (immutable).
+    pub fn adapter(&self, l: usize) -> &[HostTensor] {
+        &self.blocks[l][self.backbone_per_block..]
+    }
+
+    /// The four adapter tensors of block `l` (mutable).
+    pub fn adapter_mut(&mut self, l: usize) -> &mut [HostTensor] {
+        let b = self.backbone_per_block;
+        &mut self.blocks[l][b..]
+    }
+
+    /// Total f32 parameter count.
+    pub fn total_params(&self) -> usize {
+        let count = |ts: &[HostTensor]| ts.iter().map(HostTensor::numel).sum::<usize>();
+        count(&self.embed)
+            + self.blocks.iter().map(|b| count(b)).sum::<usize>()
+            + count(&self.head)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_manifest() -> Manifest {
+        // One source of truth for the test-manifest structure.
+        Manifest::from_json_text(&crate::model::manifest::test_manifest_json(3)).unwrap()
+    }
+
+    #[test]
+    fn init_is_deterministic() {
+        let m = fake_manifest();
+        let a = ModelWeights::init(&m, 5).unwrap();
+        let b = ModelWeights::init(&m, 5).unwrap();
+        assert_eq!(a.blocks[1][0], b.blocks[1][0]);
+        let c = ModelWeights::init(&m, 6).unwrap();
+        assert_ne!(
+            a.blocks[1][0].as_f32().unwrap(),
+            c.blocks[1][0].as_f32().unwrap()
+        );
+    }
+
+    #[test]
+    fn blocks_differ_from_each_other() {
+        let m = fake_manifest();
+        let w = ModelWeights::init(&m, 5).unwrap();
+        assert_ne!(
+            w.blocks[0][0].as_f32().unwrap(),
+            w.blocks[1][0].as_f32().unwrap()
+        );
+    }
+
+    #[test]
+    fn ones_and_zeros_respected() {
+        let m = fake_manifest();
+        let w = ModelWeights::init(&m, 5).unwrap();
+        assert!(w.embed[1].as_f32().unwrap().iter().all(|&x| x == 1.0));
+        // a_wu zero-init (identity adapter)
+        assert!(w.adapter(0)[2].as_f32().unwrap().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn adapter_slices_are_the_trailing_tensors() {
+        let m = fake_manifest();
+        let w = ModelWeights::init(&m, 5).unwrap();
+        assert_eq!(w.adapter(0).len(), 4);
+        assert_eq!(w.adapter(0)[0].shape, vec![4, 2]);
+        assert_eq!(w.total_params(), (8*4 + 4) + 3*(16 + 8 + 2 + 8 + 4) + 8);
+    }
+}

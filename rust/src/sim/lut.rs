@@ -1,0 +1,147 @@
+//! Per-layer compute-time lookup table (paper §V: "the forward and backward
+//! propagation time of different layers on different computing capacities
+//! is recorded in a lookup table").
+//!
+//! The LUT stores seconds per primitive op on a speed-1.0 device; the
+//! simulator scales by each device's `C_u^comp`.  Two constructors:
+//!
+//! * [`CostLut::from_engine`] — profile the *real* PJRT executables a few
+//!   times and average (the paper's trace-based methodology, with our CPU
+//!   runtime playing the role of their edge-device profiling run);
+//! * [`CostLut::analytic`] — FLOP-model fallback used by unit tests and by
+//!   planners before any engine exists.
+
+use crate::error::Result;
+use crate::model::ModelMeta;
+use crate::pipeline::Op;
+
+#[derive(Debug, Clone)]
+pub struct CostLut {
+    pub embed_fwd_s: f64,
+    pub block_fwd_s: f64,
+    pub block_bwd_s: f64,
+    pub head_loss_grad_s: f64,
+    /// Per-adapter optimizer step.
+    pub adapter_update_s: f64,
+    pub head_update_s: f64,
+}
+
+impl CostLut {
+    /// Seconds for `op` on a device of relative speed `speed`.
+    pub fn op_seconds(&self, op: Op, speed: f64) -> f64 {
+        let base = match op {
+            Op::EmbedFwd => self.embed_fwd_s,
+            Op::BlockFwd { n } => self.block_fwd_s * n as f64,
+            Op::BlockBwd { n } => self.block_bwd_s * n as f64,
+            Op::HeadLossGrad => self.head_loss_grad_s,
+            Op::AdapterUpdate { n } => self.adapter_update_s * n as f64,
+            Op::HeadUpdate => self.head_update_s,
+        };
+        base / speed.max(1e-9)
+    }
+
+    /// FLOP-count model at `gflops` effective throughput.
+    pub fn analytic(meta: &ModelMeta, gflops: f64) -> Self {
+        let per_flop = 1.0 / (gflops * 1e9);
+        let adapter_flops = 3.0 * meta.block_adapter_params as f64; // Adam RMW
+        CostLut {
+            embed_fwd_s: meta.embed_fwd_flops() as f64 * per_flop,
+            block_fwd_s: meta.block_fwd_flops() as f64 * per_flop,
+            block_bwd_s: meta.block_bwd_flops() as f64 * per_flop,
+            head_loss_grad_s: meta.head_flops() as f64 * per_flop,
+            adapter_update_s: adapter_flops * per_flop,
+            head_update_s: 3.0 * meta.head_params as f64 * per_flop,
+        }
+    }
+
+    /// Profile the real executables (runs each a few times, keeps the mean).
+    pub fn from_engine(
+        engine: &crate::runtime::Engine,
+        weights: &crate::runtime::ModelWeights,
+        reps: usize,
+    ) -> Result<Self> {
+        use crate::runtime::{HostTensor, StageRunner};
+        let m = engine.manifest().clone();
+        let runner = StageRunner::new(engine);
+        let ids = HostTensor::i32(
+            vec![m.config.batch, m.config.seq],
+            (0..(m.config.batch * m.config.seq) as i32)
+                .map(|i| i % m.config.vocab as i32)
+                .collect(),
+        )?;
+        let starts = HostTensor::i32(vec![m.config.batch], vec![1; m.config.batch])?;
+        let ends = HostTensor::i32(vec![m.config.batch], vec![2; m.config.batch])?;
+
+        engine.reset_stats();
+        let mut gy = None;
+        for _ in 0..reps.max(1) {
+            let h = runner.embed(weights, &ids)?;
+            let h1 = runner.block_fwd(weights, 0, &h)?;
+            let hg = runner.head_loss_grad(weights, &h1, &starts, &ends)?;
+            let bg = runner.block_bwd(weights, 0, &h, &hg.gh)?;
+            gy = Some(bg.gx);
+        }
+        let _ = gy;
+        let stats = engine.stats();
+        let mean = |name: &str| stats.mean_secs(name).unwrap_or(1e-4);
+
+        // Adapter update cost: measure a host-side Adam step.
+        let mut adapter: Vec<HostTensor> = weights.adapter(0).to_vec();
+        let grads: Vec<HostTensor> = adapter.clone();
+        let mut opt = crate::runtime::Adam::new(1e-3, adapter.len());
+        let t0 = std::time::Instant::now();
+        let upd_reps = 10;
+        for _ in 0..upd_reps {
+            let mut refs: Vec<&mut HostTensor> = adapter.iter_mut().collect();
+            let grefs: Vec<&HostTensor> = grads.iter().collect();
+            opt.update(&mut refs, &grefs)?;
+        }
+        let adapter_update_s = t0.elapsed().as_secs_f64() / upd_reps as f64;
+
+        Ok(CostLut {
+            embed_fwd_s: mean("embed_fwd"),
+            block_fwd_s: mean("block_fwd"),
+            block_bwd_s: mean("block_bwd"),
+            head_loss_grad_s: mean("head_loss_grad"),
+            adapter_update_s,
+            head_update_s: adapter_update_s * 0.1,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::ModelHyper;
+
+    fn meta() -> ModelMeta {
+        ModelMeta {
+            hyper: ModelHyper {
+                name: "t".into(), vocab: 512, hidden: 64, layers: 4, heads: 4,
+                ffn: 256, bottleneck: 16, seq: 32, batch: 4, init_std: 0.02,
+            },
+            embed_params: 32768,
+            block_backbone_params: 100_000,
+            block_adapter_params: 2128,
+            head_params: 130,
+        }
+    }
+
+    #[test]
+    fn analytic_costs_scale_with_ops() {
+        let lut = CostLut::analytic(&meta(), 10.0);
+        assert!(lut.block_bwd_s > lut.block_fwd_s);
+        assert_eq!(
+            lut.op_seconds(Op::BlockFwd { n: 3 }, 1.0),
+            3.0 * lut.op_seconds(Op::BlockFwd { n: 1 }, 1.0)
+        );
+    }
+
+    #[test]
+    fn speed_scales_inverse() {
+        let lut = CostLut::analytic(&meta(), 10.0);
+        let fast = lut.op_seconds(Op::BlockFwd { n: 1 }, 2.0);
+        let slow = lut.op_seconds(Op::BlockFwd { n: 1 }, 0.5);
+        assert!((slow / fast - 4.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,353 @@
+//! The scheme drivers: real numerics + simulated clock (see mod docs).
+//!
+//! Structure of a run:
+//! 1. numerics round-by-round on the real PJRT engine (loss per round);
+//! 2. in parallel, the step schedule is appended to one global task DAG;
+//! 3. after the last round, the DAG is simulated once and each round's
+//!    completion time back-fills the loss curve's time axis.
+
+use std::collections::VecDeque;
+
+use crate::config::{ExperimentConfig, Scheme};
+use crate::coordinator::{Coordinator, PlannerCosts};
+use crate::data::{QaConfig, SyntheticQa};
+use crate::error::{Error, Result};
+use crate::metrics::{LossCurve, SpanMetrics};
+use crate::model::{MemoryModel, ModelMeta};
+use crate::pipeline::{ScheduleBuilder, WireSizes};
+use crate::runtime::{Adam, DeviceWeights, Engine, HostTensor, ModelWeights, Rng, StageRunner};
+use crate::sim::{CostLut, Simulator};
+
+/// Extra knobs the benches/examples tweak beyond [`ExperimentConfig`].
+#[derive(Debug, Clone)]
+pub struct TrainOptions {
+    /// Evaluate F1/EM on the held-out set after training.
+    pub eval: bool,
+    /// Print a progress line per round.
+    pub verbose: bool,
+    /// Loss threshold defining "converged" for the Table-I columns.
+    pub loss_threshold: f32,
+}
+
+impl Default for TrainOptions {
+    fn default() -> Self {
+        TrainOptions { eval: true, verbose: false, loss_threshold: 0.5 }
+    }
+}
+
+/// Everything Table I and Fig. 3 need from one training run.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub scheme: Scheme,
+    pub curve: LossCurve,
+    /// Loss threshold used for the Table-I style convergence columns
+    /// (comparable across schemes, unlike the plateau detector).
+    pub loss_threshold: f32,
+    /// Per-device average memory (MB) under the scheme's worst-case
+    /// (full-depth) configuration — Table I column 1.
+    pub memory_mb: f64,
+    /// Round at which the plateau detector fired, if it did.
+    pub converged_round: Option<usize>,
+    /// Simulated wall-clock at the converged round (Table I column 3).
+    pub converged_time_s: Option<f64>,
+    /// Simulated time for the whole run.
+    pub total_time_s: f64,
+    /// Held-out span metrics (Table I columns 4-5); `None` if eval skipped.
+    pub eval_metrics: Option<SpanMetrics>,
+    /// Per-device compute utilization over the simulated run.
+    pub utilization: Vec<f64>,
+}
+
+impl TrainReport {
+    pub fn final_loss(&self) -> f32 {
+        self.curve.final_loss().unwrap_or(f32::NAN)
+    }
+
+    /// Table I column 2: first epoch whose loss EMA crosses the threshold.
+    pub fn epochs_to_convergence(&self) -> Option<f64> {
+        self.curve.epochs_to_reach(self.loss_threshold)
+    }
+
+    /// Table I column 3: simulated time at that epoch.
+    pub fn time_to_convergence(&self) -> Option<f64> {
+        self.curve.time_to_reach(self.loss_threshold)
+    }
+}
+
+/// Pending (delayed) update for PipeAdapter staleness modelling.
+struct PendingUpdate {
+    /// (block index, adapter grads).
+    blocks: Vec<(usize, Vec<HostTensor>)>,
+    head: Vec<HostTensor>,
+}
+
+/// Run `scheme` on the experiment; see module docs for semantics.
+pub fn run_scheme(exp: &ExperimentConfig, scheme: Scheme) -> Result<TrainReport> {
+    run_scheme_with(exp, scheme, &TrainOptions::default())
+}
+
+pub fn run_scheme_with(
+    exp: &ExperimentConfig,
+    scheme: Scheme,
+    opts: &TrainOptions,
+) -> Result<TrainReport> {
+    exp.validate()?;
+    let engine = Engine::load(&exp.artifact_dir)?;
+    let manifest = engine.manifest().clone();
+    let meta = ModelMeta::from_manifest(&manifest)?;
+    let layers = meta.hyper.layers;
+    let u = exp.cluster.len();
+
+    // --- Data: one shard per device + a held-out eval set.
+    let qa = QaConfig::for_model(meta.hyper.vocab, meta.hyper.seq);
+    let shards: Vec<SyntheticQa> = (0..u)
+        .map(|d| SyntheticQa::generate(&qa, d, exp.samples_per_device, exp.training.seed))
+        .collect::<Result<_>>()?;
+    let eval_set = SyntheticQa::generate(
+        &qa,
+        1_000_003, // out-of-band "device" id: held-out distribution mix
+        exp.eval_samples,
+        exp.training.seed ^ 0xE7A1,
+    )?;
+
+    // --- Weights + optimizers.
+    let mut weights = ModelWeights::init(&manifest, exp.training.seed)?;
+    let mut adapter_opts: Vec<Adam> = (0..layers)
+        .map(|_| Adam::new(exp.training.lr, 4))
+        .collect();
+    let mut head_opt = Adam::new(exp.training.lr, weights.head.len());
+
+    // --- Coordinator (planner costs from a quick profile of the engine).
+    let lut = CostLut::from_engine(&engine, &weights, 2)?;
+    let costs = PlannerCosts {
+        block_fwd_s: lut.block_fwd_s,
+        activation_bytes: meta.activation_bytes(),
+    };
+    let coordinator = Coordinator::initialize(&meta, &exp.cluster, &exp.training, costs)?;
+
+    // --- One global schedule DAG for the whole run.
+    let sizes = WireSizes {
+        activation_bytes: meta.activation_bytes(),
+        head_bytes: (meta.head_params * 4).max(4),
+    };
+    let mut builder = ScheduleBuilder::new(coordinator.assignment.clone(), sizes, u.max(2));
+
+    let runner = StageRunner::new(&engine);
+    // Pin every parameter tensor device-side; per step only activations and
+    // the freshly-updated adapter/head tensors cross the host boundary
+    // (EXPERIMENTS.md §Perf: 2.4x step time on `small`).
+    let mut dev_weights = DeviceWeights::upload(&engine, &weights)?;
+    let mut data_rng = Rng::new(exp.training.seed ^ 0xBA7C4);
+    let mut round_losses: Vec<f32> = Vec::with_capacity(exp.training.rounds);
+    let mut tracker = coordinator.tracker.clone();
+    let mut converged_round = None;
+
+    // PipeAdapter staleness queue: PipeDream-style weight stashing bounds
+    // per-stage staleness to one version, so updates land one step late.
+    // (A deeper delay diverges under Adam — and overstates the paper's
+    // staleness; see DESIGN.md §2.)
+    let staleness = if scheme == Scheme::PipeAdapter { 1 } else { 0 };
+    let mut pending: VecDeque<PendingUpdate> = VecDeque::new();
+
+    for round in 0..exp.training.rounds {
+        let rp = coordinator.round_plan(round)?;
+        let terminator = match scheme {
+            Scheme::RingAda => rp.terminator_block,
+            _ => 0,
+        };
+        let mut round_loss = 0.0f32;
+        let mut losses_in_round = 0usize;
+
+        // Single is the *centralized* baseline: same number of mini-batches
+        // per round (epochs stay comparable across schemes, as in Fig. 3),
+        // all on device 0.
+        let initiators: Vec<usize> = match scheme {
+            Scheme::Single => vec![0; u],
+            _ => rp.initiators.clone(),
+        };
+        for (turn, &initiator) in initiators.iter().enumerate() {
+            for _ in 0..exp.training.local_iters {
+                // ---- Numerics.
+                let batch = match scheme {
+                    // Centralized baseline: draws from the union of shards.
+                    Scheme::Single => {
+                        let shard = &shards[data_rng.next_below(u)];
+                        shard.sample_batch(meta.hyper.batch, &mut data_rng)?
+                    }
+                    _ => shards[initiator].sample_batch(meta.hyper.batch, &mut data_rng)?,
+                };
+
+                // Forward, storing the block inputs backward will need.
+                let mut h = runner.embed_dev(&dev_weights, &batch.ids)?;
+                let mut stored: Vec<Option<HostTensor>> = vec![None; layers];
+                for l in 0..layers {
+                    if l >= terminator {
+                        stored[l] = Some(h.clone());
+                    }
+                    h = runner.block_fwd_dev(&dev_weights, l, &h)?;
+                }
+                let hg =
+                    runner.head_loss_grad_dev(&dev_weights, &h, &batch.starts, &batch.ends)?;
+                round_loss += hg.loss;
+                losses_in_round += 1;
+
+                // Backward with early stop at `terminator` (paper §IV.2).
+                let mut gy = hg.gh.clone();
+                let mut block_grads: Vec<(usize, Vec<HostTensor>)> = Vec::new();
+                for l in (terminator..layers).rev() {
+                    let x = stored[l].as_ref().ok_or_else(|| {
+                        Error::other("missing stored activation for backward")
+                    })?;
+                    let bg = runner.block_bwd_dev(&dev_weights, l, x, &gy)?;
+                    block_grads.push((l, bg.adapter));
+                    gy = bg.gx;
+                }
+                // Global-norm gradient clipping (standard transformer
+                // fine-tuning hygiene; keeps the delayed-update baseline
+                // stable too).
+                let mut head_grads = hg.head;
+                clip_global_norm(&mut block_grads, &mut head_grads, 1.0)?;
+
+                // Apply updates (immediately, or after the staleness delay).
+                pending.push_back(PendingUpdate { blocks: block_grads, head: head_grads });
+                while pending.len() > staleness {
+                    let upd = pending.pop_front().unwrap();
+                    for (l, grads) in upd.blocks {
+                        {
+                            let adapters = weights.adapter_mut(l);
+                            let mut refs: Vec<&mut HostTensor> = adapters.iter_mut().collect();
+                            let grefs: Vec<&HostTensor> = grads.iter().collect();
+                            adapter_opts[l].update(&mut refs, &grefs)?;
+                        }
+                        dev_weights.refresh_adapter(&engine, l, weights.adapter(l))?;
+                    }
+                    {
+                        let mut refs: Vec<&mut HostTensor> = weights.head.iter_mut().collect();
+                        let grefs: Vec<&HostTensor> = upd.head.iter().collect();
+                        head_opt.update(&mut refs, &grefs)?;
+                    }
+                    dev_weights.refresh_head(&engine, &weights.head)?;
+                }
+
+                // ---- Schedule (timing only; simulated at the end).
+                match scheme {
+                    Scheme::RingAda => builder.ringada_step(&rp, initiator)?,
+                    Scheme::PipeAdapter => builder.pipe_adapter_step(&rp, initiator)?,
+                    Scheme::Single => builder.single_step(&rp, 0, layers)?,
+                };
+            }
+            // Head hand-off to the next initiator (ring schemes only).
+            if scheme != Scheme::Single && turn + 1 < initiators.len() {
+                builder.head_handoff(initiator, initiators[turn + 1], round)?;
+            }
+        }
+
+        let mean_loss = round_loss / losses_in_round.max(1) as f32;
+        round_losses.push(mean_loss);
+        if opts.verbose {
+            println!(
+                "[{}] round {round:>4}  depth {}  loss {mean_loss:.4}",
+                scheme.name(),
+                rp.depth
+            );
+        }
+        if tracker.observe(round, mean_loss) && converged_round.is_none() {
+            converged_round = Some(round);
+        }
+    }
+
+    // ---- Simulate the whole run once; back-fill the time axis.
+    let (tasks, _handles) = builder.into_tasks();
+    let mut simulator = Simulator::new(exp.cluster.clone(), lut);
+    let sim_report = simulator.run(&tasks)?;
+    // Completion time of round r = max finish over its tasks.
+    let mut round_done = vec![0.0f64; exp.training.rounds];
+    for t in &tasks {
+        if t.round < round_done.len() {
+            round_done[t.round] = round_done[t.round].max(sim_report.finish[t.id]);
+        }
+    }
+    let mut curve = LossCurve::default();
+    for (r, &loss) in round_losses.iter().enumerate() {
+        curve.push(r as f64, loss, round_done[r]);
+    }
+    let converged_time_s = converged_round.map(|r| round_done[r]);
+
+    // ---- Memory (worst case: full depth) — Table I column 1.
+    let mm = MemoryModel::new(meta.clone());
+    let assignment_counts = coordinator.assignment.counts();
+    let in_flight = if scheme == Scheme::PipeAdapter { u } else { 1 };
+    let memory_mb = match scheme {
+        Scheme::Single => mm.table1_avg_mb(scheme, &[layers], &[layers], 1),
+        _ => mm.table1_avg_mb(scheme, &assignment_counts, &assignment_counts, in_flight),
+    };
+
+    // ---- Final evaluation.
+    let eval_metrics = if opts.eval {
+        Some(evaluate(&runner, &weights, &eval_set, meta.hyper.batch)?)
+    } else {
+        None
+    };
+
+    Ok(TrainReport {
+        scheme,
+        loss_threshold: opts.loss_threshold,
+        total_time_s: sim_report.makespan,
+        memory_mb,
+        converged_round,
+        converged_time_s,
+        eval_metrics,
+        utilization: sim_report.utilization(),
+        curve,
+    })
+}
+
+/// Scale all gradients so their global L2 norm is at most `max_norm`.
+fn clip_global_norm(
+    blocks: &mut [(usize, Vec<HostTensor>)],
+    head: &mut [HostTensor],
+    max_norm: f32,
+) -> Result<()> {
+    let mut sq = 0.0f64;
+    for (_, grads) in blocks.iter() {
+        for g in grads {
+            sq += g.as_f32()?.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>();
+        }
+    }
+    for g in head.iter() {
+        sq += g.as_f32()?.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>();
+    }
+    let norm = sq.sqrt() as f32;
+    if norm > max_norm {
+        let scale = max_norm / norm;
+        for (_, grads) in blocks.iter_mut() {
+            for g in grads {
+                for x in g.as_f32_mut()? {
+                    *x *= scale;
+                }
+            }
+        }
+        for g in head.iter_mut() {
+            for x in g.as_f32_mut()? {
+                *x *= scale;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// F1/EM over a held-out set with greedy span decoding.
+pub fn evaluate(
+    runner: &StageRunner,
+    weights: &ModelWeights,
+    eval_set: &SyntheticQa,
+    batch: usize,
+) -> Result<SpanMetrics> {
+    let mut metrics = SpanMetrics::default();
+    for (b, real) in eval_set.eval_batches(batch)? {
+        let h = runner.full_fwd(weights, &b.ids)?;
+        let (ps, pe) = runner.head_predict(weights, &h)?;
+        metrics.add_batch(&ps, &pe, b.starts.as_i32()?, b.ends.as_i32()?, real);
+    }
+    Ok(metrics)
+}

@@ -1,0 +1,24 @@
+//! Training drivers for the three schemes (paper §V).
+//!
+//! Numerics run on the real PJRT artifacts through one [`Engine`]; timing
+//! comes from the trace-based simulator fed with the same step schedule the
+//! distributed system would execute (the paper's own methodology — §V uses
+//! profiled lookup tables, not wall-clock of the actual testbed).  The two
+//! are joined per step: the loss recorded at step `s` is stamped with the
+//! simulated completion time of that step's head task, yielding Fig. 3(a)
+//! (loss vs epoch) and Fig. 3(b) (loss vs time) from one run.
+//!
+//! Scheme numerics:
+//! * `Single`      — full-depth adapter fine-tuning on the union of all
+//!                   device data (the centralized baseline).
+//! * `PipeAdapter` — full-depth, but adapter updates are applied with a
+//!                   staleness delay of `U - 1` steps (weight-stashed
+//!                   PipeDream-style pipelining trains on slightly stale
+//!                   weights; this models its accuracy cost).
+//! * `RingAda`     — backward early-stops at the terminator block from the
+//!                   coordinator's unfreeze schedule; updates are immediate
+//!                   (the pause rule guarantees one weight version).
+
+mod driver;
+
+pub use driver::{evaluate, run_scheme, run_scheme_with, TrainOptions, TrainReport};

@@ -1,0 +1,162 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Methodology: warmup, then adaptively pick an iteration count so each
+//! sample runs ≥ `min_sample_time`; report mean / stddev / min over
+//! `samples` samples.  Output format is one line per benchmark:
+//!
+//! ```text
+//! bench <name> ... mean 12.34µs  σ 0.56µs  min 11.80µs  (20 samples × 813 iters)
+//! ```
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+    pub samples: usize,
+    pub iters_per_sample: u64,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "bench {:<44} mean {:>10}  σ {:>9}  min {:>10}  ({} samples × {} iters)",
+            self.name,
+            fmt_dur(self.mean),
+            fmt_dur(self.stddev),
+            fmt_dur(self.min),
+            self.samples,
+            self.iters_per_sample,
+        );
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1_000.0 {
+        format!("{ns:.1}ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2}µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2}ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.3}s", ns / 1_000_000_000.0)
+    }
+}
+
+pub struct Bencher {
+    pub warmup: Duration,
+    pub min_sample_time: Duration,
+    pub samples: usize,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            min_sample_time: Duration::from_millis(20),
+            samples: 15,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    /// Quick profile for expensive end-to-end benches.
+    pub fn coarse() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(50),
+            min_sample_time: Duration::from_millis(5),
+            samples: 5,
+            results: Vec::new(),
+        }
+    }
+
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warmup + calibration.
+        let mut iters: u64 = 1;
+        let warm_start = Instant::now();
+        loop {
+            let t = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            let dt = t.elapsed();
+            if dt >= self.min_sample_time || warm_start.elapsed() > self.warmup {
+                if dt < self.min_sample_time {
+                    let scale = (self.min_sample_time.as_secs_f64()
+                        / dt.as_secs_f64().max(1e-9))
+                    .ceil() as u64;
+                    iters = (iters * scale).max(1);
+                }
+                break;
+            }
+            iters *= 2;
+        }
+
+        let mut per_iter: Vec<f64> = Vec::with_capacity(self.samples);
+        let mut min = f64::INFINITY;
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            let s = t.elapsed().as_secs_f64() / iters as f64;
+            min = min.min(s);
+            per_iter.push(s);
+        }
+        let mean = per_iter.iter().sum::<f64>() / per_iter.len() as f64;
+        let var = per_iter.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
+            / per_iter.len() as f64;
+        let result = BenchResult {
+            name: name.to_string(),
+            mean: Duration::from_secs_f64(mean),
+            stddev: Duration::from_secs_f64(var.sqrt()),
+            min: Duration::from_secs_f64(min),
+            samples: self.samples,
+            iters_per_sample: iters,
+        };
+        result.print();
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+}
+
+/// Prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_positive_timings() {
+        let mut b = Bencher {
+            warmup: Duration::from_millis(1),
+            min_sample_time: Duration::from_micros(200),
+            samples: 3,
+            results: Vec::new(),
+        };
+        let r = b.bench("noop-sum", || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(r.mean > Duration::ZERO);
+        assert!(r.min <= r.mean);
+        assert_eq!(b.results.len(), 1);
+    }
+
+    #[test]
+    fn fmt_dur_scales() {
+        assert!(fmt_dur(Duration::from_nanos(5)).ends_with("ns"));
+        assert!(fmt_dur(Duration::from_micros(5)).ends_with("µs"));
+        assert!(fmt_dur(Duration::from_millis(5)).ends_with("ms"));
+        assert!(fmt_dur(Duration::from_secs(5)).ends_with('s'));
+    }
+}

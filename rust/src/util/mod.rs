@@ -1,0 +1,9 @@
+//! Offline-build substrates: the small libraries this crate would normally
+//! pull from crates.io (serde_json, criterion, proptest) implemented
+//! in-crate, since only the xla closure is available in the baked registry.
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+
+pub use json::Json;

@@ -1,0 +1,78 @@
+//! Tiny property-based testing helper (proptest is unavailable offline).
+//!
+//! Runs a property over `cases` randomized inputs drawn from a generator
+//! closure; on failure it reports the failing seed so the case can be
+//! replayed deterministically:
+//!
+//! ```no_run
+//! use ringada::util::prop::forall;
+//! forall(200, |rng| {
+//!     let n = 1 + rng.next_below(16);
+//!     // generate inputs from rng, assert the invariant, return a
+//!     // Result<(), String> describing the violation.
+//!     if n > 0 { Ok(()) } else { Err(format!("n = {n}")) }
+//! });
+//! ```
+
+use crate::runtime::rng::Rng;
+
+/// Run `prop` over `cases` seeds; panic with the seed on first failure.
+pub fn forall<F>(cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    // Honor an explicit replay seed when debugging.
+    if let Ok(seed) = std::env::var("RINGADA_PROP_SEED") {
+        let seed: u64 = seed.parse().expect("RINGADA_PROP_SEED must be u64");
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property failed on replay seed {seed}: {msg}");
+        }
+        return;
+    }
+    for case in 0..cases {
+        let seed = 0xFEED_0000 + case;
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property failed (seed {seed}, case {case}/{cases}): {msg}\n\
+                 replay with RINGADA_PROP_SEED={seed}"
+            );
+        }
+    }
+}
+
+/// Assert helper producing `Result<(), String>` for use inside `forall`.
+#[macro_export]
+macro_rules! prop_check {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(50, |rng| {
+            let a = rng.next_below(100);
+            let b = rng.next_below(100);
+            prop_check!(a + b >= a, "overflow a={a} b={b}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports_seed() {
+        forall(50, |rng| {
+            let a = rng.next_below(100);
+            prop_check!(a < 90, "a = {a}");
+            Ok(())
+        });
+    }
+}

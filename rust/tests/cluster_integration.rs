@@ -1,0 +1,173 @@
+//! Distributed-runtime integration: spawn real device threads (one PJRT
+//! engine each), run ring training batches through the message protocol,
+//! and check numerics against the single-engine reference driver.
+
+use ringada::cluster::RingCluster;
+use ringada::coordinator::LayerAssignment;
+use ringada::data::{QaConfig, SyntheticQa};
+use ringada::model::manifest::Manifest;
+use ringada::runtime::{Engine, ModelWeights, Rng, StageRunner};
+
+const ART: &str = "artifacts/tiny";
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(ART).join("manifest.json").exists()
+}
+
+#[test]
+fn ring_cluster_trains_a_batch_from_each_initiator() {
+    if !have_artifacts() {
+        eprintln!("skipping: {ART} missing");
+        return;
+    }
+    let manifest = Manifest::load(ART).unwrap();
+    let weights = ModelWeights::init(&manifest, 11).unwrap();
+    let assignment = LayerAssignment::uniform(2, manifest.config.layers);
+    // Terminator at block 2: top device (blocks 2..4) trains, bottom frozen.
+    let mut cluster = RingCluster::spawn(
+        std::path::Path::new(ART),
+        assignment,
+        &weights,
+        5e-3,
+        2,
+    )
+    .unwrap();
+
+    let qa = QaConfig::for_model(manifest.config.vocab, manifest.config.seq);
+    let ds = SyntheticQa::generate(&qa, 0, 32, 5).unwrap();
+    let mut rng = Rng::new(3);
+
+    let mut losses = Vec::new();
+    for initiator in [0usize, 1, 0, 1] {
+        let batch = ds.sample_batch(manifest.config.batch, &mut rng).unwrap();
+        let loss = cluster.run_batch(initiator, &batch).unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        losses.push(loss);
+    }
+    // Initial loss near log(seq): uniform logits.
+    assert!((losses[0] - (manifest.config.seq as f32).ln()).abs() < 1.0);
+
+    cluster.shutdown().unwrap();
+}
+
+#[test]
+fn cluster_numerics_match_single_engine_reference() {
+    if !have_artifacts() {
+        return;
+    }
+    let manifest = Manifest::load(ART).unwrap();
+    let weights = ModelWeights::init(&manifest, 21).unwrap();
+    let layers = manifest.config.layers;
+    let terminator = 1; // depth = layers-1: blocks 1..4 unfrozen
+
+    let qa = QaConfig::for_model(manifest.config.vocab, manifest.config.seq);
+    let ds = SyntheticQa::generate(&qa, 0, 16, 9).unwrap();
+    let mut rng = Rng::new(1);
+    let batches: Vec<_> = (0..3)
+        .map(|_| ds.sample_batch(manifest.config.batch, &mut rng).unwrap())
+        .collect();
+
+    // --- Distributed run.
+    let assignment = LayerAssignment::uniform(2, layers);
+    let mut cluster = RingCluster::spawn(
+        std::path::Path::new(ART),
+        assignment,
+        &weights,
+        5e-3,
+        terminator,
+    )
+    .unwrap();
+    let mut cluster_losses = Vec::new();
+    for b in &batches {
+        cluster_losses.push(cluster.run_batch(0, b).unwrap());
+    }
+    let collected = cluster.collect_weights(weights.clone()).unwrap();
+    cluster.shutdown().unwrap();
+
+    // --- Single-engine reference (same order, same lr, early stop at the
+    // same terminator).
+    let engine = Engine::load(ART).unwrap();
+    let runner = StageRunner::new(&engine);
+    let mut w = weights.clone();
+    let mut adapter_opts: Vec<ringada::runtime::Adam> =
+        (0..layers).map(|_| ringada::runtime::Adam::new(5e-3, 4)).collect();
+    let mut head_opt = ringada::runtime::Adam::new(5e-3, w.head.len());
+    let mut ref_losses = Vec::new();
+    for b in &batches {
+        let mut h = runner.embed(&w, &b.ids).unwrap();
+        let mut stored = vec![None; layers];
+        for l in 0..layers {
+            if l >= terminator {
+                stored[l] = Some(h.clone());
+            }
+            h = runner.block_fwd(&w, l, &h).unwrap();
+        }
+        let hg = runner.head_loss_grad(&w, &h, &b.starts, &b.ends).unwrap();
+        ref_losses.push(hg.loss);
+        let mut gy = hg.gh.clone();
+        for l in (terminator..layers).rev() {
+            let bg = runner
+                .block_bwd(&w, l, stored[l].as_ref().unwrap(), &gy)
+                .unwrap();
+            let adapters = w.adapter_mut(l);
+            let mut refs: Vec<&mut _> = adapters.iter_mut().collect();
+            let grefs: Vec<&_> = bg.adapter.iter().collect();
+            adapter_opts[l].update(&mut refs, &grefs).unwrap();
+            gy = bg.gx;
+        }
+        let mut refs: Vec<&mut _> = w.head.iter_mut().collect();
+        let grefs: Vec<&_> = hg.head.iter().collect();
+        head_opt.update(&mut refs, &grefs).unwrap();
+    }
+
+    // Same losses step for step.
+    for (c, r) in cluster_losses.iter().zip(&ref_losses) {
+        assert!(
+            (c - r).abs() < 5e-4,
+            "cluster loss {c} != reference loss {r}"
+        );
+    }
+    // Same trained adapters (block 2 lives on device 1 in the cluster).
+    for l in terminator..layers {
+        let diff = collected.adapter(l)[0]
+            .max_abs_diff(&w.adapter(l)[0])
+            .unwrap();
+        assert!(diff < 5e-4, "block {l} adapter diverged by {diff}");
+    }
+    // Frozen block untouched.
+    assert_eq!(
+        collected.adapter(0)[2].as_f32().unwrap(),
+        weights.adapter(0)[2].as_f32().unwrap()
+    );
+}
+
+#[test]
+fn head_handoff_moves_latest_head() {
+    if !have_artifacts() {
+        return;
+    }
+    let manifest = Manifest::load(ART).unwrap();
+    let weights = ModelWeights::init(&manifest, 31).unwrap();
+    let assignment = LayerAssignment::uniform(2, manifest.config.layers);
+    let mut cluster = RingCluster::spawn(
+        std::path::Path::new(ART),
+        assignment,
+        &weights,
+        5e-3,
+        2,
+    )
+    .unwrap();
+    let qa = QaConfig::for_model(manifest.config.vocab, manifest.config.seq);
+    let ds = SyntheticQa::generate(&qa, 0, 8, 2).unwrap();
+    let mut rng = Rng::new(7);
+    let b = ds.sample_batch(manifest.config.batch, &mut rng).unwrap();
+    // Train on initiator 0 (its head copy updates), hand off to 1, then
+    // collect: the dump must carry initiator 0's updated head through 1.
+    cluster.run_batch(0, &b).unwrap();
+    cluster.handoff_head(0, 1).unwrap();
+    let collected = cluster.collect_weights(weights.clone()).unwrap();
+    // The collected head must differ from the init head (it was trained).
+    let diff = collected.head[0].max_abs_diff(&weights.head[0]).unwrap();
+    assert!(diff > 0.0, "head was never updated");
+    cluster.shutdown().unwrap();
+}

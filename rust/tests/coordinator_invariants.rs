@@ -1,0 +1,256 @@
+//! Property-based invariants over the coordinator + schedule generator
+//! (DESIGN.md §7), using the in-crate `forall` helper: random cluster
+//! sizes, layer counts, assignments, unfreeze depths and initiators.
+
+use ringada::config::{ClusterConfig, TrainingConfig};
+use ringada::coordinator::{Coordinator, LayerAssignment, UnfreezeSchedule};
+use ringada::model::manifest::ModelHyper;
+use ringada::model::ModelMeta;
+use ringada::pipeline::{invariants, Kind, Op, ScheduleBuilder, WireSizes};
+use ringada::prop_check;
+use ringada::runtime::Rng;
+use ringada::util::prop::forall;
+
+fn meta(layers: usize) -> ModelMeta {
+    ModelMeta {
+        hyper: ModelHyper {
+            name: "p".into(),
+            vocab: 256,
+            hidden: 32,
+            layers,
+            heads: 4,
+            ffn: 64,
+            bottleneck: 8,
+            seq: 16,
+            batch: 2,
+            init_std: 0.02,
+        },
+        embed_params: 256 * 32,
+        block_backbone_params: 10_000,
+        block_adapter_params: 552,
+        head_params: 66,
+    }
+}
+
+fn random_assignment(rng: &mut Rng, devices: usize, layers: usize) -> LayerAssignment {
+    // Random positive counts summing to `layers`.
+    let mut counts = vec![1usize; devices];
+    for _ in 0..layers - devices {
+        counts[rng.next_below(devices)] += 1;
+    }
+    let mut order: Vec<usize> = (0..devices).collect();
+    rng.shuffle(&mut order);
+    LayerAssignment::from_counts(order, &counts).unwrap()
+}
+
+fn random_setup(rng: &mut Rng) -> (Coordinator, usize, usize) {
+    let devices = 2 + rng.next_below(5); // 2..=6
+    let layers = devices + rng.next_below(12); // >= devices
+    let assignment = random_assignment(rng, devices, layers);
+    let training = TrainingConfig {
+        initial_depth: 1 + rng.next_below(layers),
+        unfreeze_interval: 1 + rng.next_below(20),
+        ..Default::default()
+    };
+    let c = Coordinator::with_assignment(
+        assignment,
+        &meta(layers),
+        &ClusterConfig::homogeneous(devices, 1e7),
+        &training,
+    )
+    .unwrap();
+    (c, devices, layers)
+}
+
+#[test]
+fn prop_backward_visits_exactly_the_unfrozen_blocks() {
+    forall(150, |rng| {
+        let (c, devices, layers) = random_setup(rng);
+        let round = rng.next_below(100);
+        let rp = c.round_plan(round).map_err(|e| e.to_string())?;
+        let initiator = rng.next_below(devices);
+        let mut b = ScheduleBuilder::new(
+            c.assignment.clone(),
+            WireSizes { activation_bytes: 1024, head_bytes: 64 },
+            devices,
+        );
+        b.ringada_step(&rp, initiator).map_err(|e| e.to_string())?;
+        let (tasks, _) = b.into_tasks();
+        let bwd = invariants::bwd_blocks_per_step(&tasks)[&0];
+        prop_check!(
+            bwd == layers - rp.terminator_block,
+            "bwd {bwd} != unfrozen {} (layers {layers}, term {})",
+            layers - rp.terminator_block,
+            rp.terminator_block
+        );
+        prop_check!(bwd == rp.depth, "bwd {bwd} != depth {}", rp.depth);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_forward_path_is_ring_order_for_every_initiator() {
+    forall(150, |rng| {
+        let (c, devices, _layers) = random_setup(rng);
+        let rp = c.round_plan(0).map_err(|e| e.to_string())?;
+        let initiator = rng.next_below(devices);
+        let mut b = ScheduleBuilder::new(
+            c.assignment.clone(),
+            WireSizes { activation_bytes: 1024, head_bytes: 64 },
+            devices,
+        );
+        b.ringada_step(&rp, initiator).map_err(|e| e.to_string())?;
+        let (tasks, handles) = b.into_tasks();
+        // Forward visits ring positions in block order regardless of who
+        // initiates; head lands on the initiator.
+        prop_check!(
+            invariants::fwd_path(&tasks, 0) == c.assignment.order,
+            "fwd path {:?} != ring order {:?}",
+            invariants::fwd_path(&tasks, 0),
+            c.assignment.order
+        );
+        let head = &tasks[handles[0].head_task];
+        prop_check!(
+            matches!(head.kind, Kind::Compute { device, .. } if device == initiator),
+            "head not on initiator"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_no_task_references_forward_deps() {
+    forall(80, |rng| {
+        let (c, devices, layers) = random_setup(rng);
+        let mut b = ScheduleBuilder::new(
+            c.assignment.clone(),
+            WireSizes { activation_bytes: 1024, head_bytes: 64 },
+            devices,
+        );
+        for step in 0..4 {
+            let rp = c.round_plan(step).map_err(|e| e.to_string())?;
+            let initiator = rng.next_below(devices);
+            if rng.next_below(2) == 0 {
+                b.ringada_step(&rp, initiator).map_err(|e| e.to_string())?;
+            } else {
+                b.pipe_adapter_step(&rp, initiator).map_err(|e| e.to_string())?;
+            }
+        }
+        let (tasks, _) = b.into_tasks();
+        ringada::pipeline::validate_dag(&tasks).map_err(|e| e.to_string())?;
+        let _ = layers;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pause_rule_only_on_unfrozen_positions() {
+    forall(120, |rng| {
+        let (c, devices, _) = random_setup(rng);
+        let rp = c.round_plan(0).map_err(|e| e.to_string())?;
+        let mut b = ScheduleBuilder::new(
+            c.assignment.clone(),
+            WireSizes { activation_bytes: 1024, head_bytes: 64 },
+            devices,
+        );
+        for _ in 0..3 {
+            let initiator = rng.next_below(devices);
+            b.ringada_step(&rp, initiator).map_err(|e| e.to_string())?;
+        }
+        let (tasks, _) = b.into_tasks();
+        for pos in 0..devices {
+            let dev = c.assignment.order[pos];
+            let has_unfrozen = c.assignment.blocks[pos].1 > rp.terminator_block;
+            if has_unfrozen {
+                prop_check!(
+                    invariants::fwd_waits_for_update(&tasks, dev),
+                    "unfrozen device {dev} missing pause edges"
+                );
+            } else {
+                // Frozen-prefix devices never update adapters at all.
+                let updates = tasks.iter().any(|t| {
+                    matches!(t.kind, Kind::Compute { device, op: Op::AdapterUpdate { .. } } if device == dev)
+                });
+                prop_check!(!updates, "frozen device {dev} has updates");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_unfreeze_depth_monotone_and_saturating() {
+    forall(200, |rng| {
+        let layers = 1 + rng.next_below(24);
+        let s = UnfreezeSchedule::new(
+            1 + rng.next_below(layers),
+            1 + rng.next_below(50),
+            layers,
+        );
+        let mut prev = 0;
+        let horizon = s.full_depth_round() + 10;
+        for r in 0..horizon {
+            let d = s.depth_at_round(r);
+            prop_check!(d >= prev, "depth decreased at round {r}");
+            prop_check!(d <= layers, "depth {d} exceeds layers {layers}");
+            prop_check!(
+                s.terminator_block(d) == layers - d,
+                "terminator mismatch at depth {d}"
+            );
+            prev = d;
+        }
+        prop_check!(
+            prev == layers,
+            "depth never saturated by round {horizon} (got {prev}/{layers})"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_assignment_partitions_blocks_exactly_once() {
+    forall(200, |rng| {
+        let devices = 1 + rng.next_below(8);
+        let layers = devices + rng.next_below(20);
+        let a = random_assignment(rng, devices, layers);
+        a.validate(layers).map_err(|e| e.to_string())?;
+        for block in 0..layers {
+            let pos = a.position_of_block(block).map_err(|e| e.to_string())?;
+            let (s, e) = a.blocks[pos];
+            prop_check!(s <= block && block < e, "block {block} outside its range");
+        }
+        let total: usize = a.counts().iter().sum();
+        prop_check!(total == layers, "counts sum {total} != layers {layers}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_single_weight_version_no_stashes_in_ringada() {
+    // The memory-model counterpart of the staleness claim: for any
+    // assignment/depth, the RingAda memory breakdown carries zero stashed
+    // versions while PipeAdapter with >1 in flight always carries some.
+    use ringada::config::Scheme;
+    use ringada::model::MemoryModel;
+    forall(150, |rng| {
+        let layers = 2 + rng.next_below(12);
+        let blocks = 1 + rng.next_below(layers);
+        let unfrozen = rng.next_below(blocks + 1);
+        let in_flight = 2 + rng.next_below(4);
+        let mm = MemoryModel::new(meta(layers));
+        let ring = mm.device(Scheme::RingAda, blocks, unfrozen, in_flight);
+        prop_check!(ring.stashed_weight_versions == 0, "ringada stashed weights");
+        let pipe = mm.device(Scheme::PipeAdapter, blocks, blocks, in_flight);
+        prop_check!(
+            pipe.stashed_weight_versions > 0,
+            "pipeadapter lost its stash cost"
+        );
+        prop_check!(
+            pipe.total() > ring.total(),
+            "pipe {} <= ring {} (blocks {blocks}, unfrozen {unfrozen}, inflight {in_flight})",
+            pipe.total(),
+            ring.total()
+        );
+        Ok(())
+    });
+}

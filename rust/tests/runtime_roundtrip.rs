@@ -1,0 +1,152 @@
+//! Cross-language numeric contract: replay the jax-computed test vectors
+//! (`artifacts/tiny/testvectors.json`, emitted by `python -m compile.aot`)
+//! through the Rust PJRT runtime and assert allclose.
+//!
+//! Requires `make artifacts` (the tiny config) — these tests are skipped
+//! with a notice if the artifacts are missing.
+
+use ringada::model::manifest::Manifest;
+use ringada::runtime::{Engine, HostTensor};
+use ringada::util::json::Json;
+
+const ART: &str = "artifacts/tiny";
+const ATOL: f32 = 2e-4;
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(ART).join("testvectors.json").exists()
+}
+
+fn load_vectors() -> Json {
+    let text = std::fs::read_to_string(format!("{ART}/testvectors.json")).unwrap();
+    Json::parse(&text).unwrap()
+}
+
+/// Build HostTensors for `exe`'s args from the flat JSON float lists,
+/// using the manifest's shapes/dtypes.
+fn args_for(manifest: &Manifest, vectors: &Json, exe: &str) -> Vec<HostTensor> {
+    let spec = manifest.executable(exe).unwrap();
+    let case = vectors.req(exe).unwrap();
+    let arg_lists = case.req("args").unwrap().as_arr().unwrap();
+    spec.args
+        .iter()
+        .zip(arg_lists)
+        .map(|(ts, flat)| {
+            let vals = flat.f32_vec().unwrap();
+            if ts.dtype == "s32" {
+                HostTensor::i32(ts.shape.clone(), vals.iter().map(|&x| x as i32).collect())
+                    .unwrap()
+            } else {
+                HostTensor::f32(ts.shape.clone(), vals).unwrap()
+            }
+        })
+        .collect()
+}
+
+fn check_results(vectors: &Json, exe: &str, got: &[HostTensor]) {
+    let want_lists = vectors.req(exe).unwrap().req("results").unwrap().as_arr().unwrap();
+    assert_eq!(got.len(), want_lists.len(), "{exe}: result arity");
+    for (i, (g, w)) in got.iter().zip(want_lists).enumerate() {
+        let want = w.f32_vec().unwrap();
+        match &g.data {
+            ringada::runtime::TensorData::F32(v) => {
+                assert_eq!(v.len(), want.len(), "{exe} result {i} length");
+                let max_diff = v
+                    .iter()
+                    .zip(&want)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0f32, f32::max);
+                assert!(
+                    max_diff < ATOL,
+                    "{exe} result {i}: max |diff| = {max_diff} >= {ATOL}"
+                );
+            }
+            ringada::runtime::TensorData::I32(v) => {
+                let got_f: Vec<f32> = v.iter().map(|&x| x as f32).collect();
+                assert_eq!(got_f, want, "{exe} result {i} (s32)");
+            }
+        }
+    }
+}
+
+macro_rules! roundtrip_test {
+    ($name:ident, $exe:literal) => {
+        #[test]
+        fn $name() {
+            if !have_artifacts() {
+                eprintln!("skipping: {ART} missing (run `make artifacts`)");
+                return;
+            }
+            let engine = Engine::load(ART).unwrap();
+            let vectors = load_vectors();
+            let args = args_for(engine.manifest(), &vectors, $exe);
+            let got = engine.execute($exe, &args).unwrap();
+            check_results(&vectors, $exe, &got);
+        }
+    };
+}
+
+roundtrip_test!(embed_fwd_matches_jax, "embed_fwd");
+roundtrip_test!(block_fwd_matches_jax, "block_fwd");
+roundtrip_test!(block_bwd_matches_jax, "block_bwd");
+roundtrip_test!(head_fwd_matches_jax, "head_fwd");
+roundtrip_test!(head_loss_grad_matches_jax, "head_loss_grad");
+roundtrip_test!(head_predict_matches_jax, "head_predict");
+
+#[test]
+fn engine_rejects_wrong_shapes() {
+    if !have_artifacts() {
+        return;
+    }
+    let engine = Engine::load(ART).unwrap();
+    let bad = vec![HostTensor::zeros_f32(vec![1, 1])];
+    assert!(engine.execute("head_fwd", &bad).is_err());
+}
+
+#[test]
+fn engine_records_stats() {
+    if !have_artifacts() {
+        return;
+    }
+    let engine = Engine::load(ART).unwrap();
+    let vectors = load_vectors();
+    let args = args_for(engine.manifest(), &vectors, "head_fwd");
+    engine.execute("head_fwd", &args).unwrap();
+    engine.execute("head_fwd", &args).unwrap();
+    let stats = engine.stats();
+    assert_eq!(stats.per_exe.get("head_fwd").unwrap().0, 2);
+    assert!(stats.mean_secs("head_fwd").unwrap() > 0.0);
+}
+
+#[test]
+fn stage_runner_full_forward_runs() {
+    if !have_artifacts() {
+        return;
+    }
+    use ringada::runtime::{ModelWeights, StageRunner};
+    let engine = Engine::load(ART).unwrap();
+    let m = engine.manifest().clone();
+    let w = ModelWeights::init(&m, 7).unwrap();
+    let runner = StageRunner::new(&engine);
+    let ids = HostTensor::i32(
+        vec![m.config.batch, m.config.seq],
+        (0..(m.config.batch * m.config.seq) as i32)
+            .map(|i| i % m.config.vocab as i32)
+            .collect(),
+    )
+    .unwrap();
+    let h = runner.full_fwd(&w, &ids).unwrap();
+    assert_eq!(h.shape, vec![m.config.batch, m.config.seq, m.config.hidden]);
+    // Values must be finite.
+    assert!(h.as_f32().unwrap().iter().all(|x| x.is_finite()));
+
+    // Loss at init ≈ log(seq) per side (near-uniform logits).
+    let starts = HostTensor::i32(vec![m.config.batch], vec![1; m.config.batch]).unwrap();
+    let ends = HostTensor::i32(vec![m.config.batch], vec![2; m.config.batch]).unwrap();
+    let hg = runner.head_loss_grad(&w, &h, &starts, &ends).unwrap();
+    let expect = (m.config.seq as f32).ln();
+    assert!(
+        (hg.loss - expect).abs() < 1.0,
+        "init loss {} far from log(seq) {expect}",
+        hg.loss
+    );
+}

@@ -1,0 +1,154 @@
+//! Replicates the paper's Fig. 2 walkthrough exactly: four clients with a
+//! 4:5:2:3 Trm assignment and unfreeze depth 3.  "The model of u1 is
+//! trained by traversing u1→u2→u3→u4→u1 for forward propagation and u1→u4
+//! for backward propagation", and the frozen-prefix forward of the next
+//! batch may run concurrently.
+
+use ringada::config::{ClusterConfig, TrainingConfig};
+use ringada::coordinator::{Coordinator, LayerAssignment};
+use ringada::model::manifest::ModelHyper;
+use ringada::model::ModelMeta;
+use ringada::pipeline::{invariants, Kind, Op, ScheduleBuilder, WireSizes};
+use ringada::sim::{CostLut, Simulator};
+
+fn meta() -> ModelMeta {
+    ModelMeta {
+        hyper: ModelHyper {
+            name: "fig2".into(),
+            vocab: 512,
+            hidden: 64,
+            layers: 14,
+            heads: 4,
+            ffn: 256,
+            bottleneck: 16,
+            seq: 32,
+            batch: 4,
+            init_std: 0.02,
+        },
+        embed_params: 512 * 64,
+        block_backbone_params: 100_000,
+        block_adapter_params: 2_128,
+        head_params: 130,
+    }
+}
+
+fn fig2_coordinator() -> Coordinator {
+    let assignment = LayerAssignment::from_counts(vec![0, 1, 2, 3], &[4, 5, 2, 3]).unwrap();
+    Coordinator::with_assignment(
+        assignment,
+        &meta(),
+        &ClusterConfig::paper_default(),
+        &TrainingConfig { initial_depth: 3, unfreeze_interval: 40, ..Default::default() },
+    )
+    .unwrap()
+}
+
+fn sizes() -> WireSizes {
+    WireSizes { activation_bytes: 4 * 32 * 64 * 4, head_bytes: 520 }
+}
+
+#[test]
+fn fig2_forward_and_backward_paths() {
+    let c = fig2_coordinator();
+    let rp = c.round_plan(0).unwrap();
+    assert_eq!(rp.depth, 3);
+    assert_eq!(rp.terminator_block, 11); // 0-based block 11 = paper's 12th
+    assert_eq!(rp.terminator_position, 3); // u4
+
+    let mut b = ScheduleBuilder::new(c.assignment.clone(), sizes(), 4);
+    b.ringada_step(&rp, 0).unwrap(); // u1 is the initiator
+    let (tasks, _) = b.into_tasks();
+
+    // Forward visits u1, u2, u3, u4 in order (devices 0..3).
+    assert_eq!(invariants::fwd_path(&tasks, 0), vec![0, 1, 2, 3]);
+    // Backward only reaches u4 (early stop), per Fig. 2's orange arrows.
+    assert_eq!(invariants::bwd_path(&tasks, 0), vec![3]);
+    // Exactly depth = 3 blocks are backpropped.
+    assert_eq!(invariants::bwd_blocks_per_step(&tasks)[&0], 3);
+}
+
+#[test]
+fn fig2_frozen_prefix_streams_while_upper_ring_backprops() {
+    // Run two consecutive batches through the simulator: u1/u2/u3 (frozen
+    // prefix at depth 3) must start batch 1's forward before batch 0's
+    // backward completes on u4 — the paper's "conducted simultaneously to
+    // enable training parallelism".
+    let c = fig2_coordinator();
+    let rp = c.round_plan(0).unwrap();
+    let mut b = ScheduleBuilder::new(c.assignment.clone(), sizes(), 4);
+    b.ringada_step(&rp, 0).unwrap();
+    b.ringada_step(&rp, 0).unwrap();
+    let (tasks, _) = b.into_tasks();
+
+    let mut cluster = ClusterConfig::paper_default();
+    for d in &mut cluster.devices {
+        d.compute_speed = 0.1; // compute-dominated regime
+    }
+    let mut sim = Simulator::new(cluster, CostLut::analytic(&meta(), 10.0));
+    let report = sim.run(&tasks).unwrap();
+
+    // Find batch 1's forward start on device 0 and batch 0's update finish
+    // on device 3.
+    let fwd1_u1_start = tasks
+        .iter()
+        .find(|t| t.step == 1 && matches!(t.kind, Kind::Compute { device: 0, op: Op::BlockFwd { .. } }))
+        .map(|t| report.start[t.id])
+        .unwrap();
+    let upd0_u4_finish = tasks
+        .iter()
+        .find(|t| t.step == 0 && matches!(t.kind, Kind::Compute { device: 3, op: Op::AdapterUpdate { .. } }))
+        .map(|t| report.finish[t.id])
+        .unwrap();
+    assert!(
+        fwd1_u1_start < upd0_u4_finish,
+        "frozen prefix should stream: fwd1@u1 starts {fwd1_u1_start:.4}, upd0@u4 ends {upd0_u4_finish:.4}"
+    );
+
+    // And u4 (unfrozen) must NOT start batch 1's forward before its own
+    // batch-0 update (the pause rule).
+    let fwd1_u4_start = tasks
+        .iter()
+        .find(|t| t.step == 1 && matches!(t.kind, Kind::Compute { device: 3, op: Op::BlockFwd { .. } }))
+        .map(|t| report.start[t.id])
+        .unwrap();
+    assert!(
+        fwd1_u4_start >= upd0_u4_finish - 1e-12,
+        "pause rule violated: fwd1@u4 at {fwd1_u4_start:.4} before upd0 at {upd0_u4_finish:.4}"
+    );
+}
+
+#[test]
+fn fig2_initiator_u2_wraps_the_ring() {
+    // With u2 as initiator, the embedding goes to u1 first, the ring wraps,
+    // and the final hidden states come home to u2.
+    let c = fig2_coordinator();
+    let rp = c.round_plan(0).unwrap();
+    let mut b = ScheduleBuilder::new(c.assignment.clone(), sizes(), 4);
+    b.ringada_step(&rp, 1).unwrap();
+    let (tasks, _) = b.into_tasks();
+    let transfers: Vec<(usize, usize)> = tasks
+        .iter()
+        .filter_map(|t| match t.kind {
+            Kind::Transfer { from, to, .. } => Some((from, to)),
+            _ => None,
+        })
+        .collect();
+    // emb u2→u1, acts u1→u2 (u2 holds blocks 4..9), u2→u3, u3→u4, home
+    // u4→u2, grads u2→u4.
+    assert_eq!(transfers, vec![(1, 0), (0, 1), (1, 2), (2, 3), (3, 1), (1, 3)]);
+}
+
+#[test]
+fn deeper_unfreezing_extends_backward_path() {
+    let c = fig2_coordinator();
+    // Round 40·4 = depth 3+4 = 7 ⇒ terminator block 7 (inside u2's 4..9).
+    let rp = c.round_plan(160).unwrap();
+    assert_eq!(rp.depth, 7);
+    assert_eq!(rp.terminator_block, 7);
+    assert_eq!(rp.terminator_position, 1);
+    let mut b = ScheduleBuilder::new(c.assignment.clone(), sizes(), 4);
+    b.ringada_step(&rp, 0).unwrap();
+    let (tasks, _) = b.into_tasks();
+    assert_eq!(invariants::bwd_path(&tasks, 0), vec![3, 2, 1]);
+    assert_eq!(invariants::bwd_blocks_per_step(&tasks)[&0], 7);
+}

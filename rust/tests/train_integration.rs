@@ -1,0 +1,135 @@
+//! End-to-end training integration over the tiny artifacts: all three
+//! schemes must run, produce finite decreasing losses, and reproduce the
+//! paper's qualitative ordering on memory.  Skipped when artifacts are
+//! missing (run `make artifacts`).
+
+use ringada::config::{ExperimentConfig, Scheme};
+use ringada::train::run_scheme;
+
+const ART: &str = "artifacts/tiny";
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(ART).join("manifest.json").exists()
+}
+
+fn quick_exp(rounds: usize) -> ExperimentConfig {
+    let mut exp = ExperimentConfig::paper_default(ART);
+    exp.training.rounds = rounds;
+    exp.training.local_iters = 1;
+    exp.training.unfreeze_interval = 2;
+    exp.training.lr = 5e-3;
+    exp.samples_per_device = 32;
+    exp.eval_samples = 16;
+    exp
+}
+
+#[test]
+fn ringada_trains_and_loss_decreases() {
+    if !have_artifacts() {
+        eprintln!("skipping: {ART} missing");
+        return;
+    }
+    let exp = quick_exp(10);
+    let r = run_scheme(&exp, Scheme::RingAda).unwrap();
+    assert_eq!(r.curve.len(), 10);
+    let first = r.curve.points[0].1;
+    let last = r.final_loss();
+    assert!(first.is_finite() && last.is_finite());
+    assert!(
+        last < first,
+        "RingAda loss should decrease: {first} -> {last}"
+    );
+    // Simulated times must be positive and non-decreasing.
+    assert!(r.curve.sim_time_s.windows(2).all(|w| w[0] <= w[1]));
+    assert!(r.total_time_s > 0.0);
+    // Eval ran.
+    let m = r.eval_metrics.unwrap();
+    assert_eq!(m.count, 16);
+}
+
+#[test]
+fn all_schemes_run_and_memory_ordering_matches_paper() {
+    if !have_artifacts() {
+        return;
+    }
+    let exp = quick_exp(4);
+    let single = run_scheme(&exp, Scheme::Single).unwrap();
+    let pipe = run_scheme(&exp, Scheme::PipeAdapter).unwrap();
+    let ring = run_scheme(&exp, Scheme::RingAda).unwrap();
+    // Table I ordering: Single > PipeAdapter > RingAda on per-device memory.
+    assert!(
+        single.memory_mb > pipe.memory_mb,
+        "single {} <= pipe {}",
+        single.memory_mb,
+        pipe.memory_mb
+    );
+    assert!(
+        pipe.memory_mb > ring.memory_mb,
+        "pipe {} <= ring {}",
+        pipe.memory_mb,
+        ring.memory_mb
+    );
+    for r in [&single, &pipe, &ring] {
+        assert!(r.final_loss().is_finite(), "{:?} loss", r.scheme);
+    }
+}
+
+#[test]
+fn ringada_is_faster_than_baselines_in_sim_time() {
+    if !have_artifacts() {
+        return;
+    }
+    // The paper's regime (DESIGN.md §4): compute dominates comms, and each
+    // ring position holds more than one block so the early-stopped backward
+    // skips real work.  tiny has 4 layers → use 2 devices (2 blocks each)
+    // and keep the unfreeze depth at 1 (interval > rounds).
+    let mut exp = quick_exp(6);
+    exp.cluster = ringada::config::ClusterConfig::homogeneous(2, 25e6);
+    for d in &mut exp.cluster.devices {
+        d.compute_speed = 0.1; // edge-class
+    }
+    exp.training.local_iters = 2;
+    exp.training.unfreeze_interval = 100; // depth stays 1
+    let single = run_scheme(&exp, Scheme::Single).unwrap();
+    let pipe = run_scheme(&exp, Scheme::PipeAdapter).unwrap();
+    let ring = run_scheme(&exp, Scheme::RingAda).unwrap();
+    // Every scheme runs the same number of mini-batches per round (Single
+    // is centralized but not under-batched), so total times compare 1:1.
+    let per_step = |r: &ringada::train::TrainReport| {
+        r.total_time_s / (r.curve.len() as f64 * 4.0)
+    };
+    let t_single = per_step(&single);
+    let t_pipe = per_step(&pipe);
+    let t_ring = per_step(&ring);
+    assert!(
+        t_ring < t_single,
+        "RingAda {t_ring:.4}s/step should beat Single {t_single:.4}s/step"
+    );
+    assert!(
+        t_ring < t_pipe,
+        "RingAda {t_ring:.4}s/step should beat PipeAdapter {t_pipe:.4}s/step at depth 1"
+    );
+}
+
+#[test]
+fn unfreeze_depth_grows_trainable_set() {
+    if !have_artifacts() {
+        return;
+    }
+    // With interval=2 over 10 rounds and 4 layers, depth reaches 4; the
+    // early rounds must train fewer adapters — observable as slower early
+    // loss descent vs a full-depth run at equal steps.
+    let exp = quick_exp(8);
+    let ring = run_scheme(&exp, Scheme::RingAda).unwrap();
+    let mut full = quick_exp(8);
+    full.training.initial_depth = 4; // all adapters from the start
+    let full_run = run_scheme(&full, Scheme::RingAda).unwrap();
+    // Both must reach finite losses; full-depth should descend at least as
+    // fast in epochs early on (Fig. 3(a)'s RingAda-vs-baseline gap).
+    let early_ring: f32 = ring.curve.points[1..4].iter().map(|p| p.1).sum();
+    let early_full: f32 = full_run.curve.points[1..4].iter().map(|p| p.1).sum();
+    assert!(
+        early_full <= early_ring + 0.05,
+        "full-depth early loss {early_full} vs scheduled {early_ring}"
+    );
+}

@@ -1,0 +1,99 @@
+//! Chaos sweep: how gracefully does each scheme degrade when the edge
+//! cluster misbehaves?  Sweeps a seed-deterministic failure-intensity axis
+//! — stragglers, link degradation, and (at high intensity) a mid-run
+//! device dropout that forces the coordinator to re-plan the ring — and
+//! prints per-scheme makespan/utilization deltas against each scheme's
+//! healthy baseline.
+//!
+//! Timing-only: runs the full coordinator → planner → schedule → simulator
+//! stack with an analytic cost LUT, so it needs no AOT artifacts and works
+//! on any machine.
+//!
+//! ```bash
+//! cargo run --release --example chaos_ring
+//! ```
+
+use ringada::config::{ClusterConfig, Scheme, TrainingConfig};
+use ringada::metrics::ScenarioDeltaTable;
+use ringada::model::manifest::ModelHyper;
+use ringada::model::ModelMeta;
+use ringada::sim::{CostLut, Scenario};
+use ringada::train::simulate_scenario;
+
+fn main() -> ringada::Result<()> {
+    // An mBERT-ish 12-block model on the paper's 4-device edge cluster.
+    let meta = ModelMeta::from_hyper(ModelHyper {
+        name: "chaos".into(),
+        vocab: 8192,
+        hidden: 256,
+        layers: 12,
+        heads: 8,
+        ffn: 1024,
+        bottleneck: 32,
+        seq: 64,
+        batch: 8,
+        init_std: 0.02,
+    });
+    let cluster = ClusterConfig::paper_default();
+    let lut = CostLut::analytic(&meta, 10.0);
+    let training = TrainingConfig {
+        rounds: 8,
+        local_iters: 2,
+        unfreeze_interval: 2,
+        initial_depth: 1,
+        ..Default::default()
+    };
+    let seed = 2026u64;
+    let intensities = [0.3, 0.6, 0.9];
+
+    println!(
+        "chaos_ring: {} blocks over {} devices, {} rounds x {} iters, seed {seed}",
+        meta.hyper.layers,
+        cluster.len(),
+        training.rounds,
+        training.local_iters
+    );
+    println!("intensity sweep {intensities:?}: stragglers + link degradation; >= 0.7 adds a dropout + ring re-plan\n");
+
+    let mut table = ScenarioDeltaTable::new();
+    let mut worst: Vec<(Scheme, f64)> = Vec::new();
+    for scheme in Scheme::ALL {
+        let healthy =
+            simulate_scenario(&meta, &cluster, &training, scheme, &Scenario::healthy(), &lut)?;
+        println!(
+            "[{:<11}] healthy makespan {:8.2}s   mean utilization {:5.1}%",
+            scheme.name(),
+            healthy.makespan_s,
+            100.0 * healthy.mean_surviving_utilization()
+        );
+        let mut worst_delta = 0.0f64;
+        for &intensity in &intensities {
+            // The same seed at every intensity keeps the event *sites*
+            // comparable; only severity (and the dropout) changes.
+            let scenario = Scenario::synth(seed, cluster.len(), healthy.makespan_s, intensity);
+            let run = simulate_scenario(&meta, &cluster, &training, scheme, &scenario, &lut)?;
+            let delta = if healthy.makespan_s > 0.0 {
+                100.0 * (run.makespan_s - healthy.makespan_s) / healthy.makespan_s
+            } else {
+                0.0
+            };
+            worst_delta = worst_delta.max(delta);
+            table.push(&healthy, &run);
+        }
+        worst.push((scheme, worst_delta));
+    }
+
+    println!("\nper-scheme makespan/utilization deltas vs healthy baseline:\n");
+    println!("{}", table.render());
+
+    println!("graceful-degradation summary (worst makespan delta over the sweep):");
+    for (scheme, delta) in &worst {
+        println!("  {:<11} +{delta:.1}%", scheme.name());
+    }
+    println!(
+        "\nreading: RingAda's pause rule + early stop keep its pipeline short, so a\n\
+         straggling or dying device stalls fewer in-flight batches than PipeAdapter's\n\
+         full-depth pipeline; Single only suffers when its one device is the victim."
+    );
+    Ok(())
+}

@@ -12,6 +12,10 @@ use ringada::config::{ExperimentConfig, Scheme};
 use ringada::train::{run_scheme_with, TrainOptions};
 
 fn main() {
+    if !ringada::runtime::pjrt_available() {
+        eprintln!("skipping bench: PJRT is stubbed in this build (see rust/xla)");
+        return;
+    }
     let art = if std::path::Path::new("artifacts/small/manifest.json").exists() {
         "artifacts/small"
     } else if std::path::Path::new("artifacts/tiny/manifest.json").exists() {

@@ -125,7 +125,9 @@ fn bench_data(b: &mut Bencher) {
 
 fn bench_engine(b: &mut Bencher) {
     let art = "artifacts/tiny";
-    if !std::path::Path::new(art).join("manifest.json").exists() {
+    if !ringada::runtime::pjrt_available()
+        || !std::path::Path::new(art).join("manifest.json").exists()
+    {
         eprintln!("skipping engine benches: {art} missing");
         return;
     }
@@ -162,7 +164,9 @@ fn bench_engine(b: &mut Bencher) {
 /// traffic (~4 MB/block) is visible.
 fn bench_device_weights(b: &mut Bencher) {
     let art = "artifacts/small";
-    if !std::path::Path::new(art).join("manifest.json").exists() {
+    if !ringada::runtime::pjrt_available()
+        || !std::path::Path::new(art).join("manifest.json").exists()
+    {
         eprintln!("skipping device-weights benches: {art} missing");
         return;
     }

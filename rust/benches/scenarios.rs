@@ -1,0 +1,111 @@
+//! Scenario-engine benches: how much the fault-injection machinery costs
+//! on top of the plain discrete-event simulator, and the price of a
+//! dropout re-plan cycle.
+//!
+//! Run: `cargo bench --bench scenarios`
+
+use ringada::config::{ClusterConfig, Scheme, TrainingConfig};
+use ringada::coordinator::{Coordinator, LayerAssignment};
+use ringada::model::manifest::ModelHyper;
+use ringada::model::ModelMeta;
+use ringada::pipeline::{ScheduleBuilder, WireSizes};
+use ringada::sim::{CostLut, Scenario, ScenarioEvent, Simulator};
+use ringada::train::simulate_scenario;
+use ringada::util::bench::{black_box, Bencher};
+
+fn meta() -> ModelMeta {
+    ModelMeta::from_hyper(ModelHyper {
+        name: "bench".into(),
+        vocab: 2048,
+        hidden: 256,
+        layers: 12,
+        heads: 8,
+        ffn: 1024,
+        bottleneck: 32,
+        seq: 64,
+        batch: 8,
+        init_std: 0.02,
+    })
+}
+
+fn training() -> TrainingConfig {
+    TrainingConfig {
+        rounds: 4,
+        local_iters: 2,
+        unfreeze_interval: 2,
+        initial_depth: 1,
+        ..Default::default()
+    }
+}
+
+fn main() {
+    let m = meta();
+    let cluster = ClusterConfig::paper_default();
+    let lut = CostLut::analytic(&m, 10.0);
+    let tr = training();
+    let mut b = Bencher::coarse();
+    println!("== scenario-engine benches ==");
+
+    // Full driver, healthy cluster: the baseline every scenario compares to.
+    b.bench("scenario/driver_healthy_4_rounds", || {
+        black_box(
+            simulate_scenario(&m, &cluster, &tr, Scheme::RingAda, &Scenario::healthy(), &lut)
+                .unwrap(),
+        );
+    });
+    let healthy =
+        simulate_scenario(&m, &cluster, &tr, Scheme::RingAda, &Scenario::healthy(), &lut)
+            .unwrap();
+    let horizon = healthy.makespan_s;
+
+    // Stragglers + link degradation: same DAG, perturbed clock.
+    let slow = Scenario::synth(7, cluster.len(), horizon, 0.6);
+    b.bench("scenario/driver_straggler_degrade", || {
+        black_box(simulate_scenario(&m, &cluster, &tr, Scheme::RingAda, &slow, &lut).unwrap());
+    });
+
+    // Dropout mid-run: includes a planner re-plan and builder reset.
+    let drop = Scenario {
+        name: "bench-drop".into(),
+        events: vec![
+            ScenarioEvent::Straggler {
+                device: 1,
+                t_start: 0.0,
+                t_end: 0.5 * horizon,
+                factor: 0.5,
+            },
+            ScenarioEvent::Dropout { device: 2, at: 0.3 * horizon },
+        ],
+    };
+    b.bench("scenario/driver_dropout_replan", || {
+        black_box(simulate_scenario(&m, &cluster, &tr, Scheme::RingAda, &drop, &lut).unwrap());
+    });
+
+    // Raw simulator throughput with and without active windows, same DAG.
+    let assignment = LayerAssignment::uniform(cluster.len(), m.hyper.layers);
+    let c = Coordinator::with_assignment(assignment.clone(), &m, &cluster, &tr).unwrap();
+    let rp = c.round_plan(0).unwrap();
+    let sizes = WireSizes { activation_bytes: m.activation_bytes(), head_bytes: 2056 };
+    let mut builder = ScheduleBuilder::new(assignment, sizes, cluster.len());
+    for i in 0..64 {
+        builder.ringada_step(&rp, rp.initiators[i % cluster.len()]).unwrap();
+    }
+    let (tasks, _) = builder.into_tasks();
+    let n_tasks = tasks.len();
+    let plain_mean = b
+        .bench("scenario/sim_64_steps_no_windows", || {
+            let mut sim = Simulator::new(cluster.clone(), lut.clone());
+            black_box(sim.run(&tasks).unwrap());
+        })
+        .mean;
+    let windowed_mean = b
+        .bench("scenario/sim_64_steps_active_windows", || {
+            let mut sim = Simulator::with_scenario(cluster.clone(), lut.clone(), &slow).unwrap();
+            black_box(sim.run(&tasks).unwrap());
+        })
+        .mean;
+    println!(
+        "  -> window overhead: {:.2}x over plain sim ({n_tasks} tasks)",
+        windowed_mean.as_secs_f64() / plain_mean.as_secs_f64().max(1e-12)
+    );
+}

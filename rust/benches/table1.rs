@@ -19,6 +19,10 @@ const PAPER: [(&str, f64, f64, f64, f64, f64); 3] = [
 ];
 
 fn main() {
+    if !ringada::runtime::pjrt_available() {
+        eprintln!("skipping bench: PJRT is stubbed in this build (see rust/xla)");
+        return;
+    }
     // Prefer the `small` config (8 layers over 4 devices = 2 blocks/stage —
     // the regime where early-stopped backward skips real work); fall back
     // to `tiny` so the bench always runs.

@@ -8,6 +8,7 @@
 use std::path::PathBuf;
 
 use crate::error::{Error, Result};
+use crate::sim::scenario::Scenario;
 use crate::util::json::Json;
 
 /// The three fine-tuning schemes evaluated in the paper (§V).
@@ -206,6 +207,10 @@ pub struct ExperimentConfig {
     pub samples_per_device: usize,
     /// Held-out eval set size (global).
     pub eval_samples: usize,
+    /// Optional fault/heterogeneity script applied to the simulated clock
+    /// (see [`crate::sim::scenario`] for the spec format).  `None` = the
+    /// healthy cluster the paper evaluates.
+    pub scenario: Option<Scenario>,
 }
 
 impl ExperimentConfig {
@@ -217,6 +222,7 @@ impl ExperimentConfig {
             training: TrainingConfig::default(),
             samples_per_device: 256,
             eval_samples: 128,
+            scenario: None,
         }
     }
 
@@ -225,6 +231,9 @@ impl ExperimentConfig {
         self.training.validate()?;
         if self.samples_per_device == 0 {
             return Err(Error::Config("samples_per_device must be > 0".into()));
+        }
+        if let Some(sc) = &self.scenario {
+            sc.validate(self.cluster.len())?;
         }
         Ok(())
     }
@@ -276,6 +285,10 @@ impl ExperimentConfig {
             },
             samples_per_device: v.req("samples_per_device")?.as_usize()?,
             eval_samples: v.req("eval_samples")?.as_usize()?,
+            scenario: match v.get("scenario") {
+                Some(s) => Some(Scenario::from_json(s)?),
+                None => None,
+            },
         })
     }
 
@@ -300,7 +313,7 @@ impl ExperimentConfig {
                 .map(|r| Json::arr_f64(r))
                 .collect(),
         );
-        Json::obj(vec![
+        let mut pairs = vec![
             (
                 "artifact_dir",
                 Json::str(self.artifact_dir.to_string_lossy().to_string()),
@@ -340,7 +353,11 @@ impl ExperimentConfig {
                 Json::num(self.samples_per_device as f64),
             ),
             ("eval_samples", Json::num(self.eval_samples as f64)),
-        ])
+        ];
+        if let Some(sc) = &self.scenario {
+            pairs.push(("scenario", sc.to_json()));
+        }
+        Json::obj(pairs)
     }
 }
 
@@ -391,6 +408,23 @@ mod tests {
         assert_eq!(back.cluster.len(), 4);
         assert_eq!(back.training.seed, cfg.training.seed);
         assert_eq!(back.cluster.devices[2].compute_speed, 0.05);
+    }
+
+    #[test]
+    fn scenario_rides_along_in_experiment_json() {
+        let mut cfg = ExperimentConfig::paper_default("artifacts/tiny");
+        cfg.scenario = Some(crate::sim::Scenario::synth(11, 4, 500.0, 0.8));
+        cfg.validate().unwrap();
+        let json = cfg.to_json().pretty();
+        let back = ExperimentConfig::from_json(&Json::parse(&json).unwrap()).unwrap();
+        assert_eq!(back.scenario, cfg.scenario);
+        // A scenario referencing devices outside the cluster fails validate.
+        let mut bad = ExperimentConfig::paper_default("artifacts/tiny");
+        bad.scenario = Some(crate::sim::Scenario {
+            name: "bad".into(),
+            events: vec![crate::sim::ScenarioEvent::Dropout { device: 9, at: 1.0 }],
+        });
+        assert!(bad.validate().is_err());
     }
 
     #[test]

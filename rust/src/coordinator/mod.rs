@@ -109,15 +109,40 @@ impl Coordinator {
         training: &TrainingConfig,
     ) -> Result<Self> {
         assignment.validate(meta.hyper.layers)?;
+        Self::build(assignment, meta, cluster, training)
+    }
+
+    /// Like [`Coordinator::with_assignment`], but the ring may occupy a
+    /// subset of the cluster's devices — the post-dropout re-planning path.
+    /// The rotation only visits ring members (a dead device can't initiate).
+    pub fn with_assignment_for_cluster(
+        assignment: LayerAssignment,
+        meta: &ModelMeta,
+        cluster: &ClusterConfig,
+        training: &TrainingConfig,
+    ) -> Result<Self> {
+        assignment.validate_for_devices(meta.hyper.layers, cluster.len())?;
+        Self::build(assignment, meta, cluster, training)
+    }
+
+    fn build(
+        assignment: LayerAssignment,
+        meta: &ModelMeta,
+        cluster: &ClusterConfig,
+        training: &TrainingConfig,
+    ) -> Result<Self> {
         let unfreeze = UnfreezeSchedule::new(
             training.initial_depth,
             training.unfreeze_interval,
             meta.hyper.layers,
         );
         // First initiator: position 0's device (the block-0 holder), then
-        // best-channel greedy (paper §IV.3).
-        let rotation =
-            InitiatorRotation::best_channel(&cluster.rate_bytes_per_s, assignment.order[0]);
+        // best-channel greedy (paper §IV.3) over the ring's members.
+        let rotation = InitiatorRotation::best_channel_among(
+            &cluster.rate_bytes_per_s,
+            assignment.order[0],
+            &assignment.order,
+        );
         Ok(Coordinator {
             assignment,
             unfreeze,

@@ -110,7 +110,11 @@ impl<'a> Planner<'a> {
         if !bottleneck.is_finite() {
             return None;
         }
-        let assignment = LayerAssignment::from_counts(order.to_vec(), &counts).ok()?;
+        // `order` may be a survivor subset of the cluster (re-planning
+        // after a dropout), so validate against the full device count.
+        let assignment =
+            LayerAssignment::from_counts_for_devices(order.to_vec(), &counts, self.cluster.len())
+                .ok()?;
         // Memory feasibility: worst case is full unfreeze depth.
         let mm = MemoryModel::new(self.meta.clone());
         let unfrozen = assignment.counts();
@@ -127,7 +131,27 @@ impl<'a> Planner<'a> {
     /// Search ring orders: exhaustive for U ≤ 8, speed-descending greedy
     /// otherwise.  Returns the best feasible plan.
     pub fn plan(&self) -> Result<Plan> {
-        let n = self.cluster.len();
+        let all: Vec<usize> = (0..self.cluster.len()).collect();
+        self.plan_for_devices(&all)
+    }
+
+    /// Plan over a subset of the cluster's devices — the re-planning path
+    /// after a dropout.  `devices` keep their original cluster indices (the
+    /// simulator's resource clocks and the rate matrix stay valid); the
+    /// resulting ring simply has fewer positions.
+    pub fn plan_for_devices(&self, devices: &[usize]) -> Result<Plan> {
+        let n = devices.len();
+        if n == 0 {
+            return Err(Error::Plan("no surviving devices to plan over".into()));
+        }
+        for &d in devices {
+            if d >= self.cluster.len() {
+                return Err(Error::Plan(format!(
+                    "device {d} out of range (cluster has {})",
+                    self.cluster.len()
+                )));
+            }
+        }
         let mut best: Option<Plan> = None;
         let mut consider = |plan: Option<Plan>| {
             if let Some(p) = plan {
@@ -137,10 +161,10 @@ impl<'a> Planner<'a> {
             }
         };
         if n <= 8 {
-            let mut order: Vec<usize> = (0..n).collect();
+            let mut order: Vec<usize> = devices.to_vec();
             permute(&mut order, 0, &mut |perm| consider(self.plan_for_order(perm)));
         } else {
-            let mut order: Vec<usize> = (0..n).collect();
+            let mut order: Vec<usize> = devices.to_vec();
             order.sort_by(|&a, &b| {
                 self.cluster.devices[b]
                     .compute_speed
@@ -148,7 +172,7 @@ impl<'a> Planner<'a> {
                     .unwrap()
             });
             consider(self.plan_for_order(&order));
-            consider(self.plan_for_order(&(0..n).collect::<Vec<_>>()));
+            consider(self.plan_for_order(&devices.to_vec()));
         }
         best.ok_or_else(|| {
             Error::Plan("no feasible layer assignment (memory budgets too small?)".into())
@@ -259,6 +283,32 @@ mod tests {
         let plan = Planner::new(&m, &cl, costs()).plan().unwrap();
         plan.assignment.validate(14).unwrap();
         assert!(plan.bottleneck_s > 0.0);
+    }
+
+    #[test]
+    fn subset_plan_covers_all_blocks_on_survivors() {
+        // Device 2 dropped out of the paper's 4-device cluster: the plan
+        // must cover all 14 blocks using only {0, 1, 3}, keeping original
+        // device ids.
+        let m = meta(14);
+        let cl = ClusterConfig::paper_default();
+        let plan = Planner::new(&m, &cl, costs()).plan_for_devices(&[0, 1, 3]).unwrap();
+        plan.assignment.validate_for_devices(14, 4).unwrap();
+        assert_eq!(plan.assignment.num_positions(), 3);
+        assert!(!plan.assignment.order.contains(&2));
+        assert_eq!(plan.assignment.counts().iter().sum::<usize>(), 14);
+        // A smaller ring can't beat the full one on bottleneck time.
+        let full = Planner::new(&m, &cl, costs()).plan().unwrap();
+        assert!(plan.bottleneck_s >= full.bottleneck_s - 1e-12);
+    }
+
+    #[test]
+    fn subset_plan_rejects_bad_device_ids() {
+        let m = meta(8);
+        let cl = ClusterConfig::homogeneous(3, 1e9);
+        let p = Planner::new(&m, &cl, costs());
+        assert!(p.plan_for_devices(&[]).is_err());
+        assert!(p.plan_for_devices(&[0, 3]).is_err());
     }
 
     #[test]

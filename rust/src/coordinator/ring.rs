@@ -38,6 +38,19 @@ impl LayerAssignment {
 
     /// Build from per-position block counts (e.g. the paper's 4:5:2:3).
     pub fn from_counts(order: Vec<usize>, counts: &[usize]) -> Result<Self> {
+        let n = order.len();
+        Self::from_counts_for_devices(order, counts, n)
+    }
+
+    /// Like [`LayerAssignment::from_counts`], but the ring may occupy a
+    /// *subset* of a `num_devices`-device cluster — the re-planning path
+    /// after a dropout, where surviving device ids keep their original
+    /// cluster indices.
+    pub fn from_counts_for_devices(
+        order: Vec<usize>,
+        counts: &[usize],
+        num_devices: usize,
+    ) -> Result<Self> {
         if order.len() != counts.len() {
             return Err(Error::Plan("order/counts length mismatch".into()));
         }
@@ -48,7 +61,7 @@ impl LayerAssignment {
             start += c;
         }
         let a = LayerAssignment { order, blocks };
-        a.validate(start)?;
+        a.validate_for_devices(start, num_devices)?;
         Ok(a)
     }
 
@@ -56,16 +69,25 @@ impl LayerAssignment {
         self.order.len()
     }
 
+    /// Strict validation: the ring must use *every* device exactly once
+    /// (ids `0..positions`) — the healthy-cluster invariant.
     pub fn validate(&self, layers: usize) -> Result<()> {
+        self.validate_for_devices(layers, self.order.len())
+    }
+
+    /// Validation against a cluster of `num_devices`, of which the ring may
+    /// occupy any distinct subset (post-dropout re-planning keeps original
+    /// device ids, so `order` is no longer a permutation of `0..n`).
+    pub fn validate_for_devices(&self, layers: usize, num_devices: usize) -> Result<()> {
         let n = self.order.len();
         if n == 0 || self.blocks.len() != n {
             return Err(Error::Plan("empty or inconsistent assignment".into()));
         }
-        let mut seen = vec![false; n];
+        let mut seen = vec![false; num_devices];
         for &d in &self.order {
-            if d >= n || seen[d] {
+            if d >= num_devices || seen[d] {
                 return Err(Error::Plan(format!(
-                    "order must be a permutation of 0..{n} (bad id {d})"
+                    "order must be distinct device ids below {num_devices} (bad id {d})"
                 )));
             }
             seen[d] = true;
@@ -146,13 +168,23 @@ impl InitiatorRotation {
     /// Greedy best-channel ordering over the link-rate matrix, starting at
     /// `first`.
     pub fn best_channel(rate: &[Vec<f64>], first: usize) -> Self {
-        let n = rate.len();
+        let all: Vec<usize> = (0..rate.len()).collect();
+        Self::best_channel_among(rate, first, &all)
+    }
+
+    /// Greedy best-channel ordering restricted to the `among` devices (the
+    /// survivors after a dropout).  `first` must be in `among`.
+    pub fn best_channel_among(rate: &[Vec<f64>], first: usize, among: &[usize]) -> Self {
+        let mut candidates: Vec<usize> = among.to_vec();
+        candidates.sort_unstable(); // id order makes greedy ties deterministic
         let mut order = vec![first];
-        let mut used = vec![false; n];
+        let mut used = vec![false; rate.len()];
         used[first] = true;
-        while order.len() < n {
+        while order.len() < candidates.len() {
             let cur = *order.last().unwrap();
-            let next = (0..n)
+            let next = candidates
+                .iter()
+                .copied()
                 .filter(|&v| !used[v])
                 .max_by(|&a, &b| {
                     rate[cur][a]
@@ -218,6 +250,34 @@ mod tests {
         assert!(bad2.validate(6).is_err());
         let bad3 = LayerAssignment { order: vec![0, 1], blocks: vec![(0, 3), (3, 5)] };
         assert!(bad3.validate(6).is_err());
+    }
+
+    #[test]
+    fn subset_assignment_validates_against_cluster_size() {
+        // Survivors {0, 2, 3} of a 4-device cluster, device 1 dropped.
+        let a = LayerAssignment::from_counts_for_devices(vec![0, 3, 2], &[5, 5, 4], 4).unwrap();
+        a.validate_for_devices(14, 4).unwrap();
+        // Strict validation (permutation of 0..3) must reject it...
+        assert!(a.validate(14).is_err());
+        // ...and ids beyond the cluster stay rejected either way.
+        assert!(LayerAssignment::from_counts_for_devices(vec![0, 4], &[7, 7], 4).is_err());
+        // Duplicates too.
+        assert!(LayerAssignment::from_counts_for_devices(vec![2, 2], &[7, 7], 4).is_err());
+    }
+
+    #[test]
+    fn rotation_among_subset_skips_dead_devices() {
+        let rate = vec![
+            vec![0.0, 5.0, 1.0, 2.0],
+            vec![5.0, 0.0, 9.0, 1.0],
+            vec![1.0, 9.0, 0.0, 2.0],
+            vec![2.0, 1.0, 2.0, 0.0],
+        ];
+        // Device 1 dead: greedy from 0 over {0, 2, 3} -> 0, then 3 (rate 2
+        // beats 1), then 2.
+        let r = InitiatorRotation::best_channel_among(&rate, 0, &[0, 2, 3]);
+        assert_eq!(r.order, vec![0, 3, 2]);
+        assert!(!r.order.contains(&1));
     }
 
     #[test]

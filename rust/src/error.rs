@@ -1,42 +1,72 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls (no `thiserror`): the offline build
+//! policy keeps this crate free of crates.io dependencies.
 
-use thiserror::Error;
+use std::fmt;
 
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
-    #[error("xla error: {0}")]
-    Xla(#[from] xla::Error),
-
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-
-    #[error("manifest error: {0}")]
+    Xla(xla::Error),
+    Io(std::io::Error),
     Manifest(String),
-
-    #[error("shape mismatch for `{name}`: expected {expected:?}, got {got:?}")]
     ShapeMismatch {
         name: String,
         expected: Vec<usize>,
         got: Vec<usize>,
     },
-
-    #[error("unknown executable `{0}` (not in manifest)")]
     UnknownExecutable(String),
-
-    #[error("config error: {0}")]
     Config(String),
-
-    #[error("plan error: {0}")]
     Plan(String),
-
-    #[error("schedule error: {0}")]
     Schedule(String),
-
-    #[error("cluster error: {0}")]
     Cluster(String),
-
-    #[error("{0}")]
+    Scenario(String),
     Other(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Xla(e) => write!(f, "xla error: {e}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Manifest(msg) => write!(f, "manifest error: {msg}"),
+            Error::ShapeMismatch { name, expected, got } => write!(
+                f,
+                "shape mismatch for `{name}`: expected {expected:?}, got {got:?}"
+            ),
+            Error::UnknownExecutable(name) => {
+                write!(f, "unknown executable `{name}` (not in manifest)")
+            }
+            Error::Config(msg) => write!(f, "config error: {msg}"),
+            Error::Plan(msg) => write!(f, "plan error: {msg}"),
+            Error::Schedule(msg) => write!(f, "schedule error: {msg}"),
+            Error::Cluster(msg) => write!(f, "cluster error: {msg}"),
+            Error::Scenario(msg) => write!(f, "scenario error: {msg}"),
+            Error::Other(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Xla(e) => Some(e),
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 pub type Result<T> = std::result::Result<T, Error>;

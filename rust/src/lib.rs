@@ -22,6 +22,8 @@
 //! | ring topology / initiator rotation     | [`coordinator::ring`] |
 //! | fwd/bwd traversal, early stop, 1F1B    | [`pipeline`] |
 //! | trace-based timing evaluation (§V)     | [`sim`] |
+//! | fault/heterogeneity scenario scripts   | [`sim::scenario`] |
+//! | dropout re-planning, chaos driver      | [`train`] (`simulate_scenario`) |
 //! | per-device memory accounting (Table I) | [`model::memory`] |
 //! | device actors + D2D links              | [`cluster`] |
 //! | PJRT execution of AOT artifacts        | [`runtime`] |
@@ -38,6 +40,35 @@
 //! let report = ringada::train::run_scheme(&exp, Scheme::RingAda).unwrap();
 //! println!("final loss = {:.4}", report.final_loss());
 //! ```
+//!
+//! ## Fault injection (no artifacts needed)
+//!
+//! Timing-only runs take a scripted [`sim::Scenario`] — stragglers,
+//! link degradation, device dropout with ring re-planning — through the
+//! same coordinator/planner/schedule/simulator stack:
+//!
+//! ```
+//! use ringada::prelude::*;
+//! use ringada::model::manifest::ModelHyper;
+//!
+//! let meta = ModelMeta::from_hyper(ModelHyper {
+//!     name: "demo".into(), vocab: 256, hidden: 32, layers: 8, heads: 4,
+//!     ffn: 64, bottleneck: 8, seq: 16, batch: 2, init_std: 0.02,
+//! });
+//! let cluster = ClusterConfig::paper_default();
+//! let lut = CostLut::analytic(&meta, 10.0);
+//! let training = TrainingConfig { rounds: 2, ..Default::default() };
+//! let scenario = Scenario::synth(7, cluster.len(), 1e4, 0.5);
+//! let run = ringada::train::simulate_scenario(
+//!     &meta, &cluster, &training, Scheme::RingAda, &scenario, &lut,
+//! ).unwrap();
+//! assert!(run.makespan_s > 0.0);
+//! ```
+//!
+//! The scenario spec format is documented in [`sim::scenario`]; an
+//! `ExperimentConfig` JSON file may carry one under the `"scenario"` key,
+//! and `examples/chaos_ring.rs` sweeps failure intensity across all three
+//! schemes.
 
 pub mod cluster;
 pub mod config;
@@ -67,6 +98,6 @@ pub mod prelude {
     pub use crate::model::{MemoryModel, ModelMeta};
     pub use crate::pipeline::{ScheduleBuilder, WireSizes};
     pub use crate::runtime::{Engine, HostTensor, ModelWeights, StageRunner};
-    pub use crate::sim::{CostLut, SimReport, Simulator};
-    pub use crate::train::{run_scheme, TrainOptions, TrainReport};
+    pub use crate::sim::{CostLut, Scenario, ScenarioEvent, ScenarioRun, SimReport, Simulator};
+    pub use crate::train::{run_scheme, simulate_scenario, TrainOptions, TrainReport};
 }

@@ -24,6 +24,10 @@ use ringada::runtime::{Engine, ModelWeights};
 use ringada::sim::CostLut;
 use ringada::train::{run_scheme_with, TrainOptions};
 
+/// CLI-level result type (anyhow is unavailable offline; boxing covers the
+/// mix of crate errors and std parse errors the flag handling produces).
+type CliResult<T> = std::result::Result<T, Box<dyn std::error::Error>>;
+
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
     match run(args) {
@@ -57,7 +61,7 @@ fn parse_flags(args: &[String]) -> (HashMap<String, String>, Vec<String>) {
     (flags, positional)
 }
 
-fn experiment_from_flags(flags: &HashMap<String, String>) -> anyhow::Result<ExperimentConfig> {
+fn experiment_from_flags(flags: &HashMap<String, String>) -> CliResult<ExperimentConfig> {
     if let Some(path) = flags.get("config") {
         return Ok(ExperimentConfig::from_json_file(path)?);
     }
@@ -87,16 +91,16 @@ fn experiment_from_flags(flags: &HashMap<String, String>) -> anyhow::Result<Expe
     Ok(exp)
 }
 
-fn scheme_from_flags(flags: &HashMap<String, String>) -> anyhow::Result<Scheme> {
+fn scheme_from_flags(flags: &HashMap<String, String>) -> CliResult<Scheme> {
     match flags.get("scheme").map(String::as_str).unwrap_or("ringada") {
         "ringada" => Ok(Scheme::RingAda),
         "pipeadapter" => Ok(Scheme::PipeAdapter),
         "single" => Ok(Scheme::Single),
-        other => anyhow::bail!("unknown scheme `{other}`"),
+        other => Err(format!("unknown scheme `{other}`").into()),
     }
 }
 
-fn run(args: Vec<String>) -> anyhow::Result<()> {
+fn run(args: Vec<String>) -> CliResult<()> {
     let cmd = args.first().cloned().unwrap_or_else(|| "help".to_string());
     let rest = if args.is_empty() { &args[..] } else { &args[1..] };
     let (flags, _) = parse_flags(rest);
@@ -122,7 +126,7 @@ const HELP: &str = "ringada — RingAda reproduction (see README.md)
 Common flags: --artifacts DIR (default artifacts/tiny), --rounds N,
   --scheme ringada|pipeadapter|single, --csv PATH, --quiet";
 
-fn cmd_train(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+fn cmd_train(flags: &HashMap<String, String>) -> CliResult<()> {
     let exp = experiment_from_flags(flags)?;
     let scheme = scheme_from_flags(flags)?;
     let opts = TrainOptions { eval: true, verbose: !flags.contains_key("quiet"), ..Default::default() };
@@ -153,7 +157,7 @@ fn cmd_train(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_plan(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+fn cmd_plan(flags: &HashMap<String, String>) -> CliResult<()> {
     let exp = experiment_from_flags(flags)?;
     let engine = Engine::load(&exp.artifact_dir)?;
     let meta = ModelMeta::from_manifest(engine.manifest())?;
@@ -181,7 +185,7 @@ fn cmd_plan(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_table1(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+fn cmd_table1(flags: &HashMap<String, String>) -> CliResult<()> {
     let exp = experiment_from_flags(flags)?;
     let mut table = TablePrinter::new(&[
         "Scheme", "Memory (MB)", "Epochs->conv", "Conv time (s)", "F1", "EM",
@@ -202,7 +206,7 @@ fn cmd_table1(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_cluster(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+fn cmd_cluster(flags: &HashMap<String, String>) -> CliResult<()> {
     use ringada::cluster::RingCluster;
     use ringada::coordinator::LayerAssignment;
     use ringada::data::{QaConfig, SyntheticQa};
@@ -243,7 +247,7 @@ fn cmd_cluster(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_info(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+fn cmd_info(flags: &HashMap<String, String>) -> CliResult<()> {
     let exp = experiment_from_flags(flags)?;
     let engine = Engine::load(&exp.artifact_dir)?;
     let m = engine.manifest();

@@ -1,10 +1,13 @@
-//! Evaluation metrics and training curves: span F1 / EM (SQuAD-style) and
-//! the loss-vs-epoch / loss-vs-time series behind Fig. 3 and Table I.
+//! Evaluation metrics and training curves: span F1 / EM (SQuAD-style), the
+//! loss-vs-epoch / loss-vs-time series behind Fig. 3 and Table I, and the
+//! per-scenario makespan/utilization deltas the fault-injection runs report
+//! ([`ScenarioDeltaTable`]).
 
 use std::fmt::Write as _;
 use std::path::Path;
 
 use crate::error::Result;
+use crate::sim::ScenarioRun;
 
 /// SQuAD-style span metrics over inclusive (start, end) spans.
 #[derive(Debug, Clone, Default, PartialEq)]
@@ -193,9 +196,138 @@ impl TablePrinter {
     }
 }
 
+/// One scheme × scenario outcome, paired with its healthy baseline.
+#[derive(Debug, Clone)]
+pub struct ScenarioDeltaRow {
+    pub scheme: String,
+    pub scenario: String,
+    pub makespan_s: f64,
+    pub baseline_makespan_s: f64,
+    /// Mean utilization over surviving devices.
+    pub utilization: f64,
+    pub baseline_utilization: f64,
+    pub replans: usize,
+    pub dropped: usize,
+}
+
+impl ScenarioDeltaRow {
+    pub fn from_runs(baseline: &ScenarioRun, run: &ScenarioRun) -> Self {
+        ScenarioDeltaRow {
+            scheme: run.scheme.name().to_string(),
+            scenario: run.scenario.clone(),
+            makespan_s: run.makespan_s,
+            baseline_makespan_s: baseline.makespan_s,
+            utilization: run.mean_surviving_utilization(),
+            baseline_utilization: baseline.mean_surviving_utilization(),
+            replans: run.replans,
+            dropped: run.dropped.len(),
+        }
+    }
+
+    /// Relative makespan increase over the healthy baseline, in percent.
+    pub fn makespan_delta_pct(&self) -> f64 {
+        if self.baseline_makespan_s > 0.0 {
+            100.0 * (self.makespan_s - self.baseline_makespan_s) / self.baseline_makespan_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Utilization change vs the healthy baseline, in percentage points.
+    pub fn utilization_delta_points(&self) -> f64 {
+        100.0 * (self.utilization - self.baseline_utilization)
+    }
+}
+
+/// Renders fault-injection sweeps: one row per scheme × scenario, with
+/// makespan / utilization deltas against each scheme's healthy baseline.
+#[derive(Debug, Clone, Default)]
+pub struct ScenarioDeltaTable {
+    pub rows: Vec<ScenarioDeltaRow>,
+}
+
+impl ScenarioDeltaTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, baseline: &ScenarioRun, run: &ScenarioRun) {
+        self.rows.push(ScenarioDeltaRow::from_runs(baseline, run));
+    }
+
+    pub fn render(&self) -> String {
+        let mut t = TablePrinter::new(&[
+            "Scheme",
+            "Scenario",
+            "Makespan (s)",
+            "Δ vs healthy",
+            "Util (%)",
+            "Δ util (pts)",
+            "Re-plans",
+            "Dropped",
+        ]);
+        for r in &self.rows {
+            t.row(vec![
+                r.scheme.clone(),
+                r.scenario.clone(),
+                format!("{:.2}", r.makespan_s),
+                format!("{:+.1}%", r.makespan_delta_pct()),
+                format!("{:.1}", 100.0 * r.utilization),
+                format!("{:+.1}", r.utilization_delta_points()),
+                r.replans.to_string(),
+                r.dropped.to_string(),
+            ]);
+        }
+        t.render()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::Scheme;
+    use std::collections::BTreeMap;
+
+    fn run(makespan: f64, busy: f64, replans: usize) -> ScenarioRun {
+        ScenarioRun {
+            scheme: Scheme::RingAda,
+            scenario: "t".into(),
+            rounds: 1,
+            makespan_s: makespan,
+            device_busy: vec![busy, busy],
+            link_bytes: BTreeMap::new(),
+            chunk_makespans: vec![makespan],
+            chunk_task_counts: vec![1],
+            starts: vec![0.0],
+            finishes: vec![makespan],
+            replans,
+            dropped: vec![],
+        }
+    }
+
+    #[test]
+    fn scenario_delta_row_computes_percentages() {
+        let base = run(10.0, 8.0, 0);
+        let hurt = run(15.0, 9.0, 1);
+        let row = ScenarioDeltaRow::from_runs(&base, &hurt);
+        assert!((row.makespan_delta_pct() - 50.0).abs() < 1e-9);
+        assert!((row.utilization - 0.6).abs() < 1e-9); // 9/15
+        assert!((row.baseline_utilization - 0.8).abs() < 1e-9);
+        assert!((row.utilization_delta_points() + 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scenario_delta_table_renders_rows() {
+        let base = run(10.0, 8.0, 0);
+        let hurt = run(12.5, 8.0, 2);
+        let mut table = ScenarioDeltaTable::new();
+        table.push(&base, &hurt);
+        let s = table.render();
+        assert!(s.contains("RingAda"));
+        assert!(s.contains("+25.0%"));
+        assert!(s.contains("| Re-plans"));
+        assert_eq!(s.lines().count(), 3);
+    }
 
     #[test]
     fn exact_match_scores_one() {

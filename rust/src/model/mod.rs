@@ -40,6 +40,30 @@ impl ModelMeta {
         })
     }
 
+    /// Derive the standard parameter inventory straight from
+    /// hyperparameters — the artifact-free path used by the scenario
+    /// simulations and benches, mirroring what `python/compile/model.py`
+    /// lowers: tok+pos embeddings with layernorm, pre-LN blocks with fused
+    /// QKV + output proj + FFN, serial bottleneck adapters, 2-logit span
+    /// head.
+    pub fn from_hyper(hyper: ModelHyper) -> Self {
+        let h = hyper.hidden;
+        let f = hyper.ffn;
+        let m = hyper.bottleneck;
+        let embed_params = hyper.vocab * h + hyper.seq * h + 2 * h;
+        let block_backbone_params =
+            h * 3 * h + 3 * h + h * h + h + 2 * h + h * f + f + f * h + h + 2 * h;
+        let block_adapter_params = 2 * h * m + m + h;
+        let head_params = h * 2 + 2;
+        ModelMeta {
+            hyper,
+            embed_params,
+            block_backbone_params,
+            block_adapter_params,
+            head_params,
+        }
+    }
+
     /// Total parameters of the full model (embedding + all blocks + head).
     pub fn total_params(&self) -> usize {
         self.embed_params
@@ -121,6 +145,16 @@ mod tests {
             block_adapter_params: 2 * 64 * 16 + 16 + 64,
             head_params: 64 * 2 + 2,
         }
+    }
+
+    #[test]
+    fn from_hyper_matches_hand_computed_inventory() {
+        let m = ModelMeta::from_hyper(tiny_hyper());
+        let want = tiny_meta();
+        assert_eq!(m.embed_params, want.embed_params);
+        assert_eq!(m.block_backbone_params, want.block_backbone_params);
+        assert_eq!(m.block_adapter_params, want.block_adapter_params);
+        assert_eq!(m.head_params, want.head_params);
     }
 
     #[test]

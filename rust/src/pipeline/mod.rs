@@ -59,7 +59,10 @@ pub struct ScheduleBuilder {
     /// PipeAdapter: cap on in-flight batches (weight-stash depth).
     max_in_flight: usize,
     /// PipeAdapter: head task of step `s - max_in_flight` gates step `s`.
+    /// Entry `i` corresponds to global step `chunk_first_step + i`.
     step_gate: Vec<TaskId>,
+    /// First global step of the current chunk (see [`Self::drain_chunk`]).
+    chunk_first_step: usize,
     next_step: usize,
 }
 
@@ -75,6 +78,7 @@ impl ScheduleBuilder {
             last_head_touch: None,
             max_in_flight: max_in_flight.max(1),
             step_gate: Vec::new(),
+            chunk_first_step: 0,
             next_step: 0,
         }
     }
@@ -130,9 +134,14 @@ impl ScheduleBuilder {
         // PipeAdapter in-flight bound: step s may not *start* until step
         // s - max_in_flight has fully finished its head stage (the stash
         // slot frees up).  RingAda gets this for free from the pause rule.
+        // Gating steps living in an already-drained chunk need no edge: the
+        // simulator's chunk release floor guarantees they finished first.
         let mut entry_deps: Vec<TaskId> = Vec::new();
         if !pause_rule && step >= self.max_in_flight {
-            entry_deps.push(self.step_gate[step - self.max_in_flight]);
+            let gate_step = step - self.max_in_flight;
+            if gate_step >= self.chunk_first_step {
+                entry_deps.push(self.step_gate[gate_step - self.chunk_first_step]);
+            }
         }
 
         // ---- Forward: Emb on the initiator, then ring positions 0..n.
@@ -249,6 +258,36 @@ impl ScheduleBuilder {
 
     pub fn into_tasks(self) -> (Vec<Task>, Vec<StepHandles>) {
         (self.tasks, self.handles)
+    }
+
+    /// Hand the accumulated tasks to the simulator as one chunk and keep
+    /// building from a clean slate (task ids restart at 0).
+    ///
+    /// Chunk semantics: the caller feeds the returned DAG to
+    /// [`crate::sim::Simulator::run`], whose release floor guarantees every
+    /// task of this chunk finishes before anything from a later chunk
+    /// starts.  That barrier is what lets the cross-chunk dependency state
+    /// be dropped *exactly*: the pause rule's `last_update` edges and
+    /// PipeAdapter's in-flight gates only ever point at tasks that are
+    /// already complete by construction, so omitting them changes neither
+    /// the one-weight-version guarantee nor any start time.  This is the
+    /// resume point after a dropout re-plan — "resume from the last applied
+    /// adapter update".
+    pub fn drain_chunk(&mut self) -> (Vec<Task>, Vec<StepHandles>) {
+        let tasks = std::mem::take(&mut self.tasks);
+        let handles = std::mem::take(&mut self.handles);
+        for u in &mut self.last_update {
+            *u = None;
+        }
+        self.last_head_touch = None;
+        self.step_gate.clear();
+        self.chunk_first_step = self.next_step;
+        (tasks, handles)
+    }
+
+    /// Steps emitted so far (global across chunks).
+    pub fn steps_emitted(&self) -> usize {
+        self.next_step
     }
 }
 
@@ -461,6 +500,70 @@ mod tests {
 
     fn b_is_sorted(tasks: &[Task]) -> bool {
         tasks.windows(2).all(|w| w[0].id < w[1].id)
+    }
+
+    #[test]
+    fn drain_chunk_restarts_ids_and_drops_cross_chunk_edges() {
+        let c = fig2_coordinator();
+        let rp = c.round_plan(0).unwrap();
+        let mut b = ScheduleBuilder::new(c.assignment.clone(), sizes(), 4);
+        for _ in 0..2 {
+            b.ringada_step(&rp, 0).unwrap();
+        }
+        let (chunk1, h1) = b.drain_chunk();
+        validate_dag(&chunk1).unwrap();
+        assert_eq!(h1.len(), 2);
+        assert_eq!(b.steps_emitted(), 2);
+
+        b.ringada_step(&rp, 0).unwrap();
+        let (chunk2, h2) = b.drain_chunk();
+        validate_dag(&chunk2).unwrap();
+        // Fresh chunk: ids restart at 0 and the global step label carries on.
+        assert_eq!(chunk2[0].id, 0);
+        assert_eq!(h2[0].step, 2);
+        // No dep may point into the drained chunk (validate_dag would catch
+        // forward refs; stale cross-chunk ids would alias *earlier* ids, so
+        // check the first unfrozen-position forward has only its carry dep).
+        let first_fwd_u4 = chunk2
+            .iter()
+            .find(|t| matches!(t.kind, Kind::Compute { device: 3, op: Op::BlockFwd { .. } }))
+            .unwrap();
+        assert_eq!(
+            first_fwd_u4.deps.len(),
+            1,
+            "post-drain forward must not carry a pause edge into the old chunk"
+        );
+    }
+
+    #[test]
+    fn drain_chunk_skips_pipeadapter_gates_into_old_chunks() {
+        let c = fig2_coordinator();
+        let rp = c.round_plan(0).unwrap();
+        let mut b = ScheduleBuilder::new(c.assignment.clone(), sizes(), 2);
+        for _ in 0..2 {
+            b.pipe_adapter_step(&rp, 0).unwrap();
+        }
+        let _ = b.drain_chunk();
+        for _ in 0..3 {
+            b.pipe_adapter_step(&rp, 0).unwrap();
+        }
+        let (chunk2, handles) = b.drain_chunk();
+        validate_dag(&chunk2).unwrap();
+        // Steps 2 and 3 gate on drained steps 0/1 -> no entry dep; step 4
+        // gates on step 2, which lives in this chunk.
+        let emb_of = |step: usize| {
+            chunk2
+                .iter()
+                .find(|t| t.step == step && matches!(t.kind, Kind::Compute { op: Op::EmbedFwd, .. }))
+                .unwrap()
+        };
+        assert!(emb_of(2).deps.is_empty());
+        assert!(emb_of(3).deps.is_empty());
+        assert_eq!(emb_of(4).deps.len(), 1);
+        let gate = emb_of(4).deps[0];
+        assert_eq!(chunk2[gate].step, 2);
+        assert!(matches!(chunk2[gate].kind, Kind::Compute { op: Op::HeadUpdate, .. }));
+        let _ = handles;
     }
 
     #[test]

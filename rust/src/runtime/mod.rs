@@ -20,3 +20,10 @@ pub use rng::Rng;
 pub use stage::StageRunner;
 pub use tensor::{HostTensor, TensorData};
 pub use weights::ModelWeights;
+
+/// Whether a real PJRT runtime is linked.  The offline build ships the
+/// in-tree `xla` shim (compilation/execution stubbed), so artifact-driven
+/// tests and benches must gate on this *and* artifact presence.
+pub fn pjrt_available() -> bool {
+    !xla::STUBBED_RUNTIME
+}

@@ -11,8 +11,10 @@
 //! simulator never special-cases a scheme.
 
 pub mod lut;
+pub mod scenario;
 
 pub use lut::CostLut;
+pub use scenario::{Scenario, ScenarioEvent, ScenarioRun};
 
 use std::collections::HashMap;
 
@@ -47,12 +49,23 @@ impl SimReport {
 
 /// The simulator: owns resource clocks so multi-round simulations can feed
 /// successive DAG chunks while time accumulates.
+///
+/// Chunk semantics: each [`Simulator::run`] call models a DAG the
+/// controller *released* at the current clock — no task of a later chunk
+/// may start before every earlier chunk finished being released (the
+/// release floor).  This is what makes clocks resumable across re-planning
+/// boundaries: a post-dropout chunk on a previously idle device cannot
+/// time-travel to t = 0.
 #[derive(Debug, Clone)]
 pub struct Simulator {
     cluster: ClusterConfig,
     lut: CostLut,
     device_free: Vec<f64>,
     link_free: HashMap<(usize, usize), f64>,
+    /// Scenario-derived rate windows (empty for a healthy cluster).
+    perturb: scenario::Compiled,
+    /// Fail-stopped devices (set via [`Simulator::drop_device`]).
+    dead: Vec<bool>,
     pub now: f64,
 }
 
@@ -60,6 +73,8 @@ impl Simulator {
     pub fn new(cluster: ClusterConfig, lut: CostLut) -> Self {
         let n = cluster.len();
         Simulator {
+            perturb: scenario::Compiled::empty(n),
+            dead: vec![false; n],
             cluster,
             lut,
             device_free: vec![0.0; n],
@@ -68,10 +83,35 @@ impl Simulator {
         }
     }
 
+    /// A simulator whose clock runs under `scenario`'s straggler and
+    /// link-degradation windows.  Dropout events are *not* auto-applied —
+    /// the training driver decides when a failure is detected and calls
+    /// [`Simulator::drop_device`] (see `train::simulate_scenario`).
+    pub fn with_scenario(
+        cluster: ClusterConfig,
+        lut: CostLut,
+        scenario: &Scenario,
+    ) -> Result<Self> {
+        scenario.validate(cluster.len())?;
+        let mut sim = Self::new(cluster, lut);
+        sim.perturb = scenario.compile(sim.cluster.len());
+        Ok(sim)
+    }
+
     pub fn lut(&self) -> &CostLut {
         &self.lut
     }
 
+    /// Mark `device` fail-stopped: any later chunk touching it is rejected.
+    pub fn drop_device(&mut self, device: usize) {
+        self.dead[device] = true;
+    }
+
+    pub fn is_alive(&self, device: usize) -> bool {
+        !self.dead[device]
+    }
+
+    /// Nominal duration (no scenario windows applied).
     fn duration(&self, task: &Task) -> f64 {
         match task.kind {
             Kind::Compute { device, op } => {
@@ -84,9 +124,38 @@ impl Simulator {
         }
     }
 
+    /// Finish time of `task` starting at `start`, integrating the
+    /// scenario's piecewise-constant rate multipliers for its resource.
+    fn finish_time(&self, task: &Task, start: f64) -> Result<f64> {
+        let base = self.duration(task);
+        match task.kind {
+            Kind::Compute { device, .. } => {
+                scenario::finish_after(self.perturb.device(device), start, base)
+            }
+            Kind::Transfer { from, to, .. } => {
+                scenario::finish_after(self.perturb.link(from, to), start, base)
+            }
+        }
+    }
+
     /// Execute one DAG chunk; resource clocks persist across calls.
     pub fn run(&mut self, tasks: &[Task]) -> Result<SimReport> {
         crate::pipeline::validate_dag(tasks)?;
+        for t in tasks {
+            let touched_dead = match t.kind {
+                Kind::Compute { device, .. } => self.dead[device],
+                Kind::Transfer { from, to, .. } => self.dead[from] || self.dead[to],
+            };
+            if touched_dead {
+                return Err(Error::Schedule(format!(
+                    "task {} targets a fail-stopped device (re-plan required)",
+                    t.id
+                )));
+            }
+        }
+        // Release floor: this chunk was handed to the cluster at the
+        // current clock; nothing in it may start earlier.
+        let release = self.now;
         let n = tasks.len();
         let mut finish = vec![f64::NAN; n];
         let mut start = vec![f64::NAN; n];
@@ -119,7 +188,7 @@ impl Simulator {
                     Resource::Device(d) => self.device_free[d],
                     Resource::Link(a, b) => *self.link_free.get(&(a, b)).unwrap_or(&0.0),
                 };
-                let s = res_free.max(ready_time[tid]);
+                let s = res_free.max(ready_time[tid]).max(release);
                 let key = (s, tid, ri);
                 if best.map_or(true, |(bs, bid, _)| (s, tid) < (bs, bid)) {
                     best = Some(key);
@@ -128,14 +197,14 @@ impl Simulator {
             let (s, tid, ri) = best.unwrap();
             ready.swap_remove(ri);
             let t = &tasks[tid];
-            let dur = self.duration(t);
-            let f = s + dur;
+            let f = self.finish_time(t, s)?;
             start[tid] = s;
             finish[tid] = f;
             match t.kind {
                 Kind::Compute { device, .. } => {
                     self.device_free[device] = f;
-                    device_busy[device] += dur;
+                    // Occupied time, including any scenario-induced stall.
+                    device_busy[device] += f - s;
                 }
                 Kind::Transfer { from, to, bytes } => {
                     self.link_free.insert((from, to), f);
@@ -276,5 +345,95 @@ mod tests {
         let tasks = vec![compute(0, 0, 2, vec![]), compute(1, 1, 2, vec![])];
         let r = s.run(&tasks).unwrap();
         assert!((r.finish[1] / r.finish[0] - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn straggler_window_slows_compute() {
+        let cl = ClusterConfig::homogeneous(1, 1e6);
+        let lut = CostLut::analytic(&meta(), 1.0);
+        let healthy = lut.op_seconds(Op::BlockFwd { n: 2 }, 1.0);
+        let sc = Scenario {
+            name: "s".into(),
+            events: vec![ScenarioEvent::Straggler {
+                device: 0,
+                t_start: 0.0,
+                t_end: 1e9, // covers the whole run
+                factor: 0.5,
+            }],
+        };
+        let mut s = Simulator::with_scenario(cl, lut, &sc).unwrap();
+        let r = s.run(&[compute(0, 0, 2, vec![])]).unwrap();
+        assert!(
+            (r.makespan - 2.0 * healthy).abs() < 1e-9,
+            "half speed should double the makespan: {} vs {healthy}",
+            r.makespan
+        );
+        // Busy time counts occupancy (the stall is real wall-clock).
+        assert!((r.device_busy[0] - r.makespan).abs() < 1e-12);
+    }
+
+    #[test]
+    fn link_outage_stalls_transfer_until_window_lifts() {
+        let mut cl = ClusterConfig::homogeneous(2, 1000.0);
+        cl.link_latency_s = 0.0;
+        let sc = Scenario {
+            name: "o".into(),
+            events: vec![ScenarioEvent::LinkDegrade {
+                from: 0,
+                to: 1,
+                t_start: 1.0,
+                t_end: 4.0,
+                factor: 0.0,
+            }],
+        };
+        let mut s = Simulator::with_scenario(cl, CostLut::analytic(&meta(), 1.0), &sc).unwrap();
+        // 2000 bytes at 1000 B/s = 2s of work: 1s before the outage, stall
+        // [1, 4), remaining 1s after -> finish at 5.
+        let tasks = vec![Task {
+            id: 0,
+            kind: Kind::Transfer { from: 0, to: 1, bytes: 2000 },
+            deps: vec![],
+            step: 0,
+            round: 0,
+        }];
+        let r = s.run(&tasks).unwrap();
+        assert!((r.finish[0] - 5.0).abs() < 1e-9, "finish {}", r.finish[0]);
+    }
+
+    #[test]
+    fn later_chunks_never_start_before_their_release() {
+        // Chunk 1 busies device 0; chunk 2 runs on the *idle* device 1.
+        // Without the release floor chunk 2 would start at t = 0 — i.e.
+        // before the re-plan that produced it even happened.
+        let mut s = sim(2);
+        let r1 = s.run(&[compute(0, 0, 4, vec![])]).unwrap();
+        let r2 = s.run(&[compute(0, 1, 1, vec![])]).unwrap();
+        assert!(
+            r2.start[0] >= r1.finish[0] - 1e-12,
+            "chunk 2 time-traveled: starts {} before release {}",
+            r2.start[0],
+            r1.finish[0]
+        );
+    }
+
+    #[test]
+    fn dropped_device_rejects_new_chunks() {
+        let mut s = sim(2);
+        s.run(&[compute(0, 0, 1, vec![])]).unwrap();
+        s.drop_device(0);
+        assert!(!s.is_alive(0) && s.is_alive(1));
+        assert!(s.run(&[compute(0, 0, 1, vec![])]).is_err());
+        // Transfers touching the dead device are rejected too.
+        let t = Task {
+            id: 0,
+            kind: Kind::Transfer { from: 1, to: 0, bytes: 8 },
+            deps: vec![],
+            step: 0,
+            round: 0,
+        };
+        assert!(s.run(&[t]).is_err());
+        // The surviving device keeps working, with clocks intact.
+        let r = s.run(&[compute(0, 1, 1, vec![])]).unwrap();
+        assert!(r.start[0] >= 0.0);
     }
 }

@@ -1,0 +1,635 @@
+//! Scripted fault & heterogeneity scenarios for the discrete-event
+//! simulator — the "volatile edge cluster" half of the paper's premise that
+//! §V's evaluation leaves out.  A [`Scenario`] is a seed-deterministic
+//! timeline of events perturbing the cluster the schedule runs on:
+//!
+//! * [`ScenarioEvent::Straggler`] — a device's effective compute rate is
+//!   multiplied by `factor` during `[t_start, t_end)` (thermal throttling,
+//!   co-tenant interference, battery-saver governors);
+//! * [`ScenarioEvent::LinkDegrade`] — the directed link `from → to` runs at
+//!   `factor ×` its configured rate `R_{u,u'}` during the window
+//!   (`factor = 0` models a full outage: transfers stall until it lifts);
+//! * [`ScenarioEvent::Dropout`] — a device fail-stops at time `at`.  The
+//!   simulator refuses further tasks on it; the training driver detects the
+//!   failure at the next round boundary, re-plans the layer assignment over
+//!   the surviving devices, and resumes (see `train::simulate_scenario`).
+//!
+//! Overlapping windows on the same resource *multiply*.  All events are
+//! data; the schedule DAG never changes shape because of a straggler or a
+//! slow link — only the clock does — which keeps runs byte-deterministic
+//! for a given (seed, scenario) pair.
+//!
+//! ## Scenario spec (JSON)
+//!
+//! Parsed with the in-tree [`crate::util::json`] module; the same format is
+//! accepted inside an `ExperimentConfig` under the optional `"scenario"`
+//! key:
+//!
+//! ```json
+//! {
+//!   "name": "straggler+outage",
+//!   "events": [
+//!     {"kind": "straggler",    "device": 2, "t_start": 1.0, "t_end": 5.0, "factor": 0.3},
+//!     {"kind": "link_degrade", "from": 0, "to": 1, "t_start": 2.0, "t_end": 4.0, "factor": 0.1},
+//!     {"kind": "dropout",      "device": 3, "at": 6.0}
+//!   ]
+//! }
+//! ```
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::config::Scheme;
+use crate::error::{Error, Result};
+use crate::runtime::rng::Rng;
+use crate::util::json::Json;
+
+/// One scripted perturbation of the cluster.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ScenarioEvent {
+    /// Device `device` computes at `factor ×` its nominal speed during
+    /// `[t_start, t_end)`.
+    Straggler {
+        device: usize,
+        t_start: f64,
+        t_end: f64,
+        factor: f64,
+    },
+    /// Directed link `from → to` moves bytes at `factor ×` its configured
+    /// rate during `[t_start, t_end)`; `factor = 0` is an outage.
+    LinkDegrade {
+        from: usize,
+        to: usize,
+        t_start: f64,
+        t_end: f64,
+        factor: f64,
+    },
+    /// Device `device` fail-stops at time `at` and never returns.
+    Dropout { device: usize, at: f64 },
+}
+
+/// A named, validated event timeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    pub name: String,
+    pub events: Vec<ScenarioEvent>,
+}
+
+impl Scenario {
+    /// The no-fault baseline every perturbed run is compared against.
+    pub fn healthy() -> Self {
+        Scenario { name: "healthy".into(), events: Vec::new() }
+    }
+
+    pub fn is_healthy(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Dropout events as `(time, device)`, sorted by time (ties: device id).
+    pub fn dropouts(&self) -> Vec<(f64, usize)> {
+        let mut d: Vec<(f64, usize)> = self
+            .events
+            .iter()
+            .filter_map(|e| match *e {
+                ScenarioEvent::Dropout { device, at } => Some((at, device)),
+                _ => None,
+            })
+            .collect();
+        d.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        d
+    }
+
+    /// Sanity-check indices and windows against a cluster of `n` devices.
+    pub fn validate(&self, n: usize) -> Result<()> {
+        let mut dropped = vec![false; n];
+        for e in &self.events {
+            match *e {
+                ScenarioEvent::Straggler { device, t_start, t_end, factor } => {
+                    if device >= n {
+                        return Err(Error::Scenario(format!(
+                            "straggler device {device} out of range (cluster has {n})"
+                        )));
+                    }
+                    check_window(t_start, t_end, factor, "straggler")?;
+                }
+                ScenarioEvent::LinkDegrade { from, to, t_start, t_end, factor } => {
+                    if from >= n || to >= n || from == to {
+                        return Err(Error::Scenario(format!(
+                            "link_degrade {from}->{to} invalid for {n} devices"
+                        )));
+                    }
+                    check_window(t_start, t_end, factor, "link_degrade")?;
+                }
+                ScenarioEvent::Dropout { device, at } => {
+                    if device >= n {
+                        return Err(Error::Scenario(format!(
+                            "dropout device {device} out of range (cluster has {n})"
+                        )));
+                    }
+                    if !at.is_finite() || at < 0.0 {
+                        return Err(Error::Scenario(format!(
+                            "dropout time {at} must be finite and >= 0"
+                        )));
+                    }
+                    if dropped[device] {
+                        return Err(Error::Scenario(format!(
+                            "device {device} drops out twice"
+                        )));
+                    }
+                    dropped[device] = true;
+                }
+            }
+        }
+        if n > 0 && dropped.iter().all(|&d| d) {
+            return Err(Error::Scenario("scenario drops every device".into()));
+        }
+        Ok(())
+    }
+
+    /// Seed-deterministic synthetic scenario at a given failure intensity.
+    ///
+    /// `intensity` in `[0, 1]` scales how many devices straggle, how hard,
+    /// how degraded the links get, and (at `intensity >= 0.7`, clusters of
+    /// three or more) whether one device drops out entirely.  `horizon_s`
+    /// anchors event times to the expected run length.  Same
+    /// `(seed, n, horizon_s, intensity)` ⇒ identical scenario.
+    pub fn synth(seed: u64, n: usize, horizon_s: f64, intensity: f64) -> Self {
+        let intensity = intensity.clamp(0.0, 1.0);
+        if intensity == 0.0 || n == 0 || horizon_s <= 0.0 {
+            return Scenario::healthy();
+        }
+        let mut rng = Rng::new(seed ^ 0x5CE7_A210);
+        let mut events = Vec::new();
+
+        // Stragglers: up to half the cluster, slowdown deepening with
+        // intensity but floored away from starvation.
+        let n_strag = (((n as f64) * 0.5 * intensity).round() as usize).max(1);
+        for _ in 0..n_strag {
+            let device = rng.next_below(n);
+            let factor = (1.0 - 0.8 * intensity * (0.5 + 0.5 * rng.next_f64())).max(0.1);
+            let t_start = rng.next_f64() * 0.5 * horizon_s;
+            let len = (0.15 + 0.45 * rng.next_f64()) * horizon_s * intensity.max(0.2);
+            events.push(ScenarioEvent::Straggler {
+                device,
+                t_start,
+                t_end: t_start + len,
+                factor,
+            });
+        }
+
+        // One degraded directed link (an outage at full intensity).
+        if n >= 2 {
+            let from = rng.next_below(n);
+            let mut to = rng.next_below(n);
+            if to == from {
+                to = (to + 1) % n;
+            }
+            let factor = if intensity >= 0.95 { 0.0 } else { (1.0 - intensity).max(0.05) };
+            let t_start = rng.next_f64() * 0.4 * horizon_s;
+            let len = (0.1 + 0.3 * rng.next_f64()) * horizon_s * intensity.max(0.2);
+            events.push(ScenarioEvent::LinkDegrade {
+                from,
+                to,
+                t_start,
+                t_end: t_start + len,
+                factor,
+            });
+        }
+
+        // One fail-stop dropout at high intensity; no device is
+        // special-cased — the re-planner must cope with any of them dying.
+        if intensity >= 0.7 && n >= 3 {
+            let device = rng.next_below(n);
+            let at = (0.25 + 0.4 * rng.next_f64()) * horizon_s;
+            events.push(ScenarioEvent::Dropout { device, at });
+        }
+
+        Scenario { name: format!("synth-i{:.2}-s{seed}", intensity), events }
+    }
+
+    // -------------------------------------------------------------- JSON
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let name = v.req("name")?.as_str()?.to_string();
+        let events = v
+            .req("events")?
+            .as_arr()?
+            .iter()
+            .map(event_from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Scenario { name, events })
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        Self::from_json(&Json::parse(text)?)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            (
+                "events",
+                Json::Arr(self.events.iter().map(event_to_json).collect()),
+            ),
+        ])
+    }
+
+    /// Compile into per-resource window lists for the simulator.
+    pub(crate) fn compile(&self, n: usize) -> Compiled {
+        let mut c = Compiled::empty(n);
+        for e in &self.events {
+            match *e {
+                ScenarioEvent::Straggler { device, t_start, t_end, factor } => {
+                    c.device_windows[device].push(Window { t0: t_start, t1: t_end, factor });
+                }
+                ScenarioEvent::LinkDegrade { from, to, t_start, t_end, factor } => {
+                    c.link_windows
+                        .entry((from, to))
+                        .or_default()
+                        .push(Window { t0: t_start, t1: t_end, factor });
+                }
+                ScenarioEvent::Dropout { device, at } => {
+                    c.dropouts.push((at, device));
+                }
+            }
+        }
+        c.dropouts
+            .sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        c
+    }
+}
+
+fn check_window(t_start: f64, t_end: f64, factor: f64, kind: &str) -> Result<()> {
+    if !(t_start.is_finite() && t_end.is_finite() && t_end > t_start && t_start >= 0.0) {
+        return Err(Error::Scenario(format!(
+            "{kind} window [{t_start}, {t_end}) must be finite, non-negative and non-empty"
+        )));
+    }
+    if !(factor.is_finite() && factor >= 0.0) {
+        return Err(Error::Scenario(format!(
+            "{kind} factor {factor} must be finite and >= 0"
+        )));
+    }
+    Ok(())
+}
+
+fn event_from_json(v: &Json) -> Result<ScenarioEvent> {
+    match v.req("kind")?.as_str()? {
+        "straggler" => Ok(ScenarioEvent::Straggler {
+            device: v.req("device")?.as_usize()?,
+            t_start: v.req("t_start")?.as_f64()?,
+            t_end: v.req("t_end")?.as_f64()?,
+            factor: v.req("factor")?.as_f64()?,
+        }),
+        "link_degrade" => Ok(ScenarioEvent::LinkDegrade {
+            from: v.req("from")?.as_usize()?,
+            to: v.req("to")?.as_usize()?,
+            t_start: v.req("t_start")?.as_f64()?,
+            t_end: v.req("t_end")?.as_f64()?,
+            factor: v.req("factor")?.as_f64()?,
+        }),
+        "dropout" => Ok(ScenarioEvent::Dropout {
+            device: v.req("device")?.as_usize()?,
+            at: v.req("at")?.as_f64()?,
+        }),
+        other => Err(Error::Scenario(format!("unknown event kind `{other}`"))),
+    }
+}
+
+fn event_to_json(e: &ScenarioEvent) -> Json {
+    match *e {
+        ScenarioEvent::Straggler { device, t_start, t_end, factor } => Json::obj(vec![
+            ("kind", Json::str("straggler")),
+            ("device", Json::num(device as f64)),
+            ("t_start", Json::num(t_start)),
+            ("t_end", Json::num(t_end)),
+            ("factor", Json::num(factor)),
+        ]),
+        ScenarioEvent::LinkDegrade { from, to, t_start, t_end, factor } => Json::obj(vec![
+            ("kind", Json::str("link_degrade")),
+            ("from", Json::num(from as f64)),
+            ("to", Json::num(to as f64)),
+            ("t_start", Json::num(t_start)),
+            ("t_end", Json::num(t_end)),
+            ("factor", Json::num(factor)),
+        ]),
+        ScenarioEvent::Dropout { device, at } => Json::obj(vec![
+            ("kind", Json::str("dropout")),
+            ("device", Json::num(device as f64)),
+            ("at", Json::num(at)),
+        ]),
+    }
+}
+
+// ---------------------------------------------------------------- compiled
+
+/// A speed-multiplier window on one resource.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub(crate) struct Window {
+    pub t0: f64,
+    pub t1: f64,
+    pub factor: f64,
+}
+
+/// Scenario compiled into per-resource piecewise-constant rate multipliers.
+#[derive(Debug, Clone, Default)]
+pub(crate) struct Compiled {
+    pub device_windows: Vec<Vec<Window>>,
+    pub link_windows: HashMap<(usize, usize), Vec<Window>>,
+    /// `(time, device)` sorted by time.
+    pub dropouts: Vec<(f64, usize)>,
+}
+
+impl Compiled {
+    pub fn empty(n: usize) -> Self {
+        Compiled {
+            device_windows: vec![Vec::new(); n],
+            link_windows: HashMap::new(),
+            dropouts: Vec::new(),
+        }
+    }
+
+    pub fn device(&self, d: usize) -> &[Window] {
+        self.device_windows.get(d).map_or(&[], Vec::as_slice)
+    }
+
+    pub fn link(&self, from: usize, to: usize) -> &[Window] {
+        self.link_windows.get(&(from, to)).map_or(&[], Vec::as_slice)
+    }
+}
+
+/// Finish time of a task that starts at `start` and needs `work` seconds at
+/// the nominal (multiplier-1) rate, under piecewise-constant rate windows.
+/// Overlapping windows multiply.  Errors if the rate is stuck at zero past
+/// the final window boundary (the task would starve forever).
+pub(crate) fn finish_after(windows: &[Window], start: f64, work: f64) -> Result<f64> {
+    if work <= 0.0 {
+        return Ok(start);
+    }
+    if windows.is_empty() {
+        return Ok(start + work);
+    }
+    let rate_at = |t: f64| -> f64 {
+        windows
+            .iter()
+            .filter(|w| w.t0 <= t && t < w.t1)
+            .map(|w| w.factor)
+            .fold(1.0, |a, b| a * b)
+    };
+    // Only finite boundaries participate in the sweep; an infinite-window
+    // zero rate is caught by the starvation guard below.
+    let mut pts: Vec<f64> = windows
+        .iter()
+        .flat_map(|w| [w.t0, w.t1])
+        .filter(|&t| t > start && t.is_finite())
+        .collect();
+    pts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    pts.dedup();
+
+    let mut t = start;
+    let mut remaining = work;
+    for &p in &pts {
+        let r = rate_at(t);
+        if r > 0.0 {
+            let capacity = (p - t) * r;
+            if capacity >= remaining {
+                return Ok(t + remaining / r);
+            }
+            remaining -= capacity;
+        }
+        t = p;
+    }
+    let r = rate_at(t);
+    if r <= 0.0 {
+        return Err(Error::Schedule(format!(
+            "task starves at t={t}: rate multiplier is 0 beyond the last scenario window"
+        )));
+    }
+    Ok(t + remaining / r)
+}
+
+// ------------------------------------------------------------------ report
+
+/// Aggregate result of one scheme × scenario simulation (produced by
+/// `train::simulate_scenario`; consumed by `metrics::ScenarioDeltaTable`).
+///
+/// Everything here is deterministically ordered — `link_bytes` is a
+/// `BTreeMap`, `starts`/`finishes` follow chunk emission order — so
+/// [`ScenarioRun::canonical_string`] is byte-identical across runs with the
+/// same seed and scenario script (the determinism golden tests rely on it).
+#[derive(Debug, Clone)]
+pub struct ScenarioRun {
+    pub scheme: Scheme,
+    pub scenario: String,
+    /// Rounds actually simulated.
+    pub rounds: usize,
+    /// Final simulated clock (absolute; includes every chunk).
+    pub makespan_s: f64,
+    /// Per-device busy seconds over the whole run.
+    pub device_busy: Vec<f64>,
+    /// Total bytes per directed link over the whole run.
+    pub link_bytes: BTreeMap<(usize, usize), usize>,
+    /// Absolute completion time of each simulated chunk (one per round).
+    pub chunk_makespans: Vec<f64>,
+    /// Task count per chunk (delimits `starts`/`finishes` per round).
+    pub chunk_task_counts: Vec<usize>,
+    /// Task start/finish times, concatenated in chunk emission order.
+    pub starts: Vec<f64>,
+    pub finishes: Vec<f64>,
+    /// Ring re-planning events triggered by dropouts.
+    pub replans: usize,
+    /// Devices that dropped out, in the order they died.
+    pub dropped: Vec<usize>,
+}
+
+impl ScenarioRun {
+    /// Busy fraction per device over the makespan.
+    pub fn utilization(&self) -> Vec<f64> {
+        self.device_busy
+            .iter()
+            .map(|&b| if self.makespan_s > 0.0 { b / self.makespan_s } else { 0.0 })
+            .collect()
+    }
+
+    pub fn total_link_bytes(&self) -> usize {
+        self.link_bytes.values().sum()
+    }
+
+    /// Mean utilization over devices that survived the whole run.
+    pub fn mean_surviving_utilization(&self) -> f64 {
+        let util = self.utilization();
+        let surviving: Vec<f64> = util
+            .iter()
+            .enumerate()
+            .filter(|(d, _)| !self.dropped.contains(d))
+            .map(|(_, &u)| u)
+            .collect();
+        if surviving.is_empty() {
+            0.0
+        } else {
+            surviving.iter().sum::<f64>() / surviving.len() as f64
+        }
+    }
+
+    /// Deterministic textual fingerprint: identical (seed, scenario, scheme)
+    /// runs produce byte-identical strings.  f64s print via `Display`
+    /// (shortest round-trip), so equal bits ⇒ equal text.
+    pub fn canonical_string(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = write!(
+            s,
+            "scheme={};scenario={};rounds={};replans={};dropped={:?};makespan={}",
+            self.scheme.name(),
+            self.scenario,
+            self.rounds,
+            self.replans,
+            self.dropped,
+            self.makespan_s,
+        );
+        let _ = write!(s, ";busy=[");
+        for (i, b) in self.device_busy.iter().enumerate() {
+            let _ = write!(s, "{}{b}", if i > 0 { "," } else { "" });
+        }
+        let _ = write!(s, "];chunks=[");
+        for (i, m) in self.chunk_makespans.iter().enumerate() {
+            let _ = write!(s, "{}{m}", if i > 0 { "," } else { "" });
+        }
+        let _ = write!(s, "];links=[");
+        for (i, ((u, v), bytes)) in self.link_bytes.iter().enumerate() {
+            let _ = write!(s, "{}({u},{v}):{bytes}", if i > 0 { "," } else { "" });
+        }
+        let _ = write!(s, "];starts=[");
+        for (i, t) in self.starts.iter().enumerate() {
+            let _ = write!(s, "{}{t}", if i > 0 { "," } else { "" });
+        }
+        let _ = write!(s, "];finishes=[");
+        for (i, t) in self.finishes.iter().enumerate() {
+            let _ = write!(s, "{}{t}", if i > 0 { "," } else { "" });
+        }
+        s.push(']');
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn straggler(device: usize, t0: f64, t1: f64, factor: f64) -> ScenarioEvent {
+        ScenarioEvent::Straggler { device, t_start: t0, t_end: t1, factor }
+    }
+
+    #[test]
+    fn json_round_trip_preserves_events() {
+        let sc = Scenario {
+            name: "rt".into(),
+            events: vec![
+                straggler(1, 0.5, 2.25, 0.3),
+                ScenarioEvent::LinkDegrade { from: 0, to: 2, t_start: 1.0, t_end: 3.0, factor: 0.0 },
+                ScenarioEvent::Dropout { device: 2, at: 7.5 },
+            ],
+        };
+        let text = sc.to_json().pretty();
+        let back = Scenario::parse(&text).unwrap();
+        assert_eq!(sc, back);
+    }
+
+    #[test]
+    fn validate_rejects_bad_events() {
+        let n = 3;
+        assert!(Scenario { name: "x".into(), events: vec![straggler(3, 0.0, 1.0, 0.5)] }
+            .validate(n)
+            .is_err());
+        assert!(Scenario { name: "x".into(), events: vec![straggler(0, 2.0, 1.0, 0.5)] }
+            .validate(n)
+            .is_err());
+        assert!(Scenario { name: "x".into(), events: vec![straggler(0, 0.0, 1.0, -0.5)] }
+            .validate(n)
+            .is_err());
+        let twice = Scenario {
+            name: "x".into(),
+            events: vec![
+                ScenarioEvent::Dropout { device: 1, at: 1.0 },
+                ScenarioEvent::Dropout { device: 1, at: 2.0 },
+            ],
+        };
+        assert!(twice.validate(n).is_err());
+        assert!(Scenario::healthy().validate(n).is_ok());
+    }
+
+    #[test]
+    fn finish_after_no_windows_is_linear() {
+        assert_eq!(finish_after(&[], 3.0, 2.0).unwrap(), 5.0);
+        assert_eq!(finish_after(&[], 3.0, 0.0).unwrap(), 3.0);
+    }
+
+    #[test]
+    fn finish_after_half_speed_window() {
+        // Work 2.0 starting at 0 under a [0, 10) half-speed window: rate
+        // 0.5 the whole way -> finish at 4.0.
+        let w = [Window { t0: 0.0, t1: 10.0, factor: 0.5 }];
+        assert!((finish_after(&w, 0.0, 2.0).unwrap() - 4.0).abs() < 1e-12);
+        // Window ends mid-task: 1.0 work done by t=2 (rate .5), remaining
+        // 1.0 at full speed -> finish 3.0.
+        let w = [Window { t0: 0.0, t1: 2.0, factor: 0.5 }];
+        assert!((finish_after(&w, 0.0, 2.0).unwrap() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn finish_after_outage_stalls_until_window_lifts() {
+        // Full outage [1, 5): task starts at 0 with 2.0 work; 1.0 done by
+        // t=1, stalled until t=5, finishes at 6.0.
+        let w = [Window { t0: 1.0, t1: 5.0, factor: 0.0 }];
+        assert!((finish_after(&w, 0.0, 2.0).unwrap() - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn finish_after_overlapping_windows_multiply() {
+        // Two half-speed windows overlapping on [0, 10): quarter speed.
+        let w = [
+            Window { t0: 0.0, t1: 10.0, factor: 0.5 },
+            Window { t0: 0.0, t1: 10.0, factor: 0.5 },
+        ];
+        assert!((finish_after(&w, 0.0, 1.0).unwrap() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn finish_after_starvation_is_an_error() {
+        // A permanent outage (infinite window at rate 0) can never finish;
+        // the guard reports it instead of looping or returning NaN.
+        let w = [Window { t0: 0.0, t1: f64::INFINITY, factor: 0.0 }];
+        assert!(finish_after(&w, 0.0, 1.0).is_err());
+    }
+
+    #[test]
+    fn synth_is_deterministic_and_valid() {
+        let a = Scenario::synth(7, 4, 100.0, 0.8);
+        let b = Scenario::synth(7, 4, 100.0, 0.8);
+        assert_eq!(a, b);
+        a.validate(4).unwrap();
+        assert!(!a.is_healthy());
+        assert_eq!(a.dropouts().len(), 1, "intensity 0.8 drops one device");
+        let c = Scenario::synth(8, 4, 100.0, 0.8);
+        assert_ne!(a, c, "different seeds differ");
+        assert!(Scenario::synth(7, 4, 100.0, 0.0).is_healthy());
+    }
+
+    #[test]
+    fn compile_groups_windows_by_resource() {
+        let sc = Scenario {
+            name: "c".into(),
+            events: vec![
+                straggler(0, 0.0, 1.0, 0.5),
+                straggler(0, 2.0, 3.0, 0.25),
+                ScenarioEvent::LinkDegrade { from: 1, to: 0, t_start: 0.0, t_end: 1.0, factor: 0.5 },
+                ScenarioEvent::Dropout { device: 2, at: 9.0 },
+            ],
+        };
+        let c = sc.compile(3);
+        assert_eq!(c.device(0).len(), 2);
+        assert!(c.device(1).is_empty());
+        assert_eq!(c.link(1, 0).len(), 1);
+        assert!(c.link(0, 1).is_empty());
+        assert_eq!(c.dropouts, vec![(9.0, 2)]);
+    }
+}

@@ -6,17 +6,17 @@
 //! 3. after the last round, the DAG is simulated once and each round's
 //!    completion time back-fills the loss curve's time axis.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 
-use crate::config::{ExperimentConfig, Scheme};
-use crate::coordinator::{Coordinator, PlannerCosts};
+use crate::config::{ClusterConfig, ExperimentConfig, Scheme, TrainingConfig};
+use crate::coordinator::{Coordinator, LayerAssignment, Planner, PlannerCosts};
 use crate::data::{QaConfig, SyntheticQa};
 use crate::error::{Error, Result};
 use crate::metrics::{LossCurve, SpanMetrics};
 use crate::model::{MemoryModel, ModelMeta};
 use crate::pipeline::{ScheduleBuilder, WireSizes};
 use crate::runtime::{Adam, DeviceWeights, Engine, HostTensor, ModelWeights, Rng, StageRunner};
-use crate::sim::{CostLut, Simulator};
+use crate::sim::{CostLut, Scenario, ScenarioRun, Simulator};
 
 /// Extra knobs the benches/examples tweak beyond [`ExperimentConfig`].
 #[derive(Debug, Clone)]
@@ -256,9 +256,24 @@ pub fn run_scheme_with(
         }
     }
 
-    // ---- Simulate the whole run once; back-fill the time axis.
+    // ---- Simulate the whole run once; back-fill the time axis.  An
+    // attached straggler/link scenario perturbs the clock; dropout scripts
+    // need the chunked re-planning driver (`simulate_scenario`) because the
+    // numerics path holds a single static assignment.
     let (tasks, _handles) = builder.into_tasks();
-    let mut simulator = Simulator::new(exp.cluster.clone(), lut);
+    let mut simulator = match &exp.scenario {
+        Some(sc) => {
+            if !sc.dropouts().is_empty() {
+                return Err(Error::Config(
+                    "dropout scenarios are timing-only: use train::simulate_scenario \
+                     (the numerics driver supports straggler/link scenarios)"
+                        .into(),
+                ));
+            }
+            Simulator::with_scenario(exp.cluster.clone(), lut, sc)?
+        }
+        None => Simulator::new(exp.cluster.clone(), lut),
+    };
     let sim_report = simulator.run(&tasks)?;
     // Completion time of round r = max finish over its tasks.
     let mut round_done = vec![0.0f64; exp.training.rounds];
@@ -334,6 +349,181 @@ fn clip_global_norm(
         }
     }
     Ok(())
+}
+
+// ====================================================================
+// Scenario simulation: timing-only runs under fault injection, with
+// ring re-planning on device dropout.  No artifacts / PJRT needed — the
+// LUT is analytic or pre-profiled, so this path exercises the whole
+// coordinator/planner/schedule/simulator stack on any machine.
+// ====================================================================
+
+/// Plan a ring over the surviving devices and rebuild the coordinator.
+///
+/// `Single` needs no planner: all blocks sit on the first survivor.
+fn plan_over_survivors(
+    scheme: Scheme,
+    planner: &Planner<'_>,
+    alive: &[usize],
+    meta: &ModelMeta,
+    cluster: &ClusterConfig,
+    training: &TrainingConfig,
+) -> Result<Coordinator> {
+    if alive.is_empty() {
+        return Err(Error::Plan("no surviving devices".into()));
+    }
+    let assignment = match scheme {
+        Scheme::Single => LayerAssignment::from_counts_for_devices(
+            vec![alive[0]],
+            &[meta.hyper.layers],
+            cluster.len(),
+        )?,
+        _ => planner.plan_for_devices(alive)?.assignment,
+    };
+    Coordinator::with_assignment_for_cluster(assignment, meta, cluster, training)
+}
+
+/// Run `scheme`'s schedule under a fault/heterogeneity [`Scenario`] and
+/// return the aggregate [`ScenarioRun`].
+///
+/// Mechanics (one chunk per round — the coordinator's natural control
+/// boundary):
+///
+/// 1. each round's steps are appended to the [`ScheduleBuilder`] and
+///    drained as one DAG chunk into the persistent [`Simulator`], whose
+///    resource clocks and scenario windows carry across chunks;
+/// 2. after each chunk, dropout events whose time has passed are applied:
+///    the device is marked fail-stopped (the fail-stop is *detected* at the
+///    round boundary), the planner re-plans the layer assignment over the
+///    survivors — original device ids preserved so clocks and `R_{u,u'}`
+///    stay valid — and a fresh builder resumes from the last applied
+///    adapter update (the chunk barrier keeps the pause rule's
+///    one-weight-version guarantee exact; see
+///    [`ScheduleBuilder::drain_chunk`]);
+/// 3. start/finish vectors, per-device busy time and link-byte totals
+///    accumulate into a deterministically-ordered report, so the same
+///    (seed, scenario) pair reproduces byte-identical output.
+pub fn simulate_scenario(
+    meta: &ModelMeta,
+    cluster: &ClusterConfig,
+    training: &TrainingConfig,
+    scheme: Scheme,
+    scenario: &Scenario,
+    lut: &CostLut,
+) -> Result<ScenarioRun> {
+    cluster.validate()?;
+    training.validate()?;
+    scenario.validate(cluster.len())?;
+    let layers = meta.hyper.layers;
+    let sizes = WireSizes {
+        activation_bytes: meta.activation_bytes(),
+        head_bytes: (meta.head_params * 4).max(4),
+    };
+    let costs = PlannerCosts {
+        block_fwd_s: lut.block_fwd_s,
+        activation_bytes: meta.activation_bytes(),
+    };
+    let planner = Planner::new(meta, cluster, costs);
+
+    let mut alive: Vec<usize> = (0..cluster.len()).collect();
+    let mut pending_drops: VecDeque<(f64, usize)> = scenario.dropouts().into();
+    let mut sim = Simulator::with_scenario(cluster.clone(), lut.clone(), scenario)?;
+
+    let mut coordinator =
+        plan_over_survivors(scheme, &planner, &alive, meta, cluster, training)?;
+    let mut builder =
+        ScheduleBuilder::new(coordinator.assignment.clone(), sizes, alive.len().max(2));
+
+    let mut device_busy = vec![0.0; cluster.len()];
+    let mut link_bytes: BTreeMap<(usize, usize), usize> = BTreeMap::new();
+    let mut chunk_makespans = Vec::with_capacity(training.rounds);
+    let mut chunk_task_counts = Vec::with_capacity(training.rounds);
+    let mut starts = Vec::new();
+    let mut finishes = Vec::new();
+    let mut replans = 0usize;
+    let mut dropped: Vec<usize> = Vec::new();
+
+    for round in 0..training.rounds {
+        let rp = coordinator.round_plan(round)?;
+        // The per-round mini-batch budget stays fixed at the original
+        // cluster size even after dropouts (the Fig. 3 comparability
+        // convention): every round trains the same number of batches, so
+        // scenario deltas measure *capacity* loss, not budget shrinkage.
+        // Surviving initiators absorb the dead devices' turns.
+        let turns = cluster.len();
+        let initiators: Vec<usize> = match scheme {
+            Scheme::Single => vec![alive[0]; turns],
+            _ => (0..turns).map(|t| rp.initiators[t % rp.initiators.len()]).collect(),
+        };
+        for (turn, &initiator) in initiators.iter().enumerate() {
+            for _ in 0..training.local_iters {
+                match scheme {
+                    Scheme::RingAda => builder.ringada_step(&rp, initiator)?,
+                    Scheme::PipeAdapter => builder.pipe_adapter_step(&rp, initiator)?,
+                    Scheme::Single => builder.single_step(&rp, alive[0], layers)?,
+                };
+            }
+            let next = initiators.get(turn + 1).copied();
+            if scheme != Scheme::Single {
+                if let Some(next) = next.filter(|&n| n != initiator) {
+                    builder.head_handoff(initiator, next, round)?;
+                }
+            }
+        }
+
+        let (tasks, _handles) = builder.drain_chunk();
+        let report = sim.run(&tasks)?;
+        for (d, b) in report.device_busy.iter().enumerate() {
+            device_busy[d] += b;
+        }
+        for (&link, &bytes) in &report.link_bytes {
+            *link_bytes.entry(link).or_insert(0) += bytes;
+        }
+        chunk_makespans.push(sim.now);
+        chunk_task_counts.push(tasks.len());
+        starts.extend_from_slice(&report.start);
+        finishes.extend_from_slice(&report.finish);
+
+        // Fail-stops detected at this round boundary.
+        let mut need_replan = false;
+        while pending_drops.front().map_or(false, |&(at, _)| at <= sim.now) {
+            let (_, d) = pending_drops.pop_front().unwrap();
+            sim.drop_device(d);
+            alive.retain(|&x| x != d);
+            dropped.push(d);
+            need_replan = true;
+        }
+        if need_replan && round + 1 < training.rounds {
+            if alive.is_empty() {
+                return Err(Error::Plan(
+                    "scenario dropped every device; nothing left to train on".into(),
+                ));
+            }
+            replans += 1;
+            coordinator =
+                plan_over_survivors(scheme, &planner, &alive, meta, cluster, training)?;
+            builder = ScheduleBuilder::new(
+                coordinator.assignment.clone(),
+                sizes,
+                alive.len().max(2),
+            );
+        }
+    }
+
+    Ok(ScenarioRun {
+        scheme,
+        scenario: scenario.name.clone(),
+        rounds: training.rounds,
+        makespan_s: sim.now,
+        device_busy,
+        link_bytes,
+        chunk_makespans,
+        chunk_task_counts,
+        starts,
+        finishes,
+        replans,
+        dropped,
+    })
 }
 
 /// F1/EM over a held-out set with greedy span decoding.

@@ -19,6 +19,13 @@
 //!                   coordinator's unfreeze schedule; updates are immediate
 //!                   (the pause rule guarantees one weight version).
 
+//! A second, artifact-free entry point, [`simulate_scenario`], runs the
+//! *timing* half alone under fault-injection scenarios (stragglers, link
+//! degradation, device dropout with ring re-planning) — see
+//! [`crate::sim::scenario`].
+
 mod driver;
 
-pub use driver::{evaluate, run_scheme, run_scheme_with, TrainOptions, TrainReport};
+pub use driver::{
+    evaluate, run_scheme, run_scheme_with, simulate_scenario, TrainOptions, TrainReport,
+};

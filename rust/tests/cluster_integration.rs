@@ -11,6 +11,9 @@ use ringada::runtime::{Engine, ModelWeights, Rng, StageRunner};
 const ART: &str = "artifacts/tiny";
 
 fn have_artifacts() -> bool {
+    if !ringada::runtime::pjrt_available() {
+        return false; // PJRT is stubbed in this build (see rust/xla)
+    }
     std::path::Path::new(ART).join("manifest.json").exists()
 }
 

@@ -13,6 +13,9 @@ const ART: &str = "artifacts/tiny";
 const ATOL: f32 = 2e-4;
 
 fn have_artifacts() -> bool {
+    if !ringada::runtime::pjrt_available() {
+        return false; // PJRT is stubbed in this build (see rust/xla)
+    }
     std::path::Path::new(ART).join("testvectors.json").exists()
 }
 

@@ -1,0 +1,393 @@
+//! Fault-injection integration battery: the scenario engine must keep the
+//! simulator deterministic, monotone (slowdowns never speed a schedule
+//! up), exclusive (one task at a time per resource), and resumable across
+//! dropout re-planning boundaries.
+
+use ringada::config::{ClusterConfig, Scheme, TrainingConfig};
+use ringada::model::manifest::ModelHyper;
+use ringada::model::ModelMeta;
+use ringada::prop_check;
+use ringada::runtime::Rng;
+use ringada::sim::{CostLut, Scenario, ScenarioEvent, Simulator};
+use ringada::train::simulate_scenario;
+use ringada::util::prop::forall;
+
+fn meta(layers: usize) -> ModelMeta {
+    ModelMeta::from_hyper(ModelHyper {
+        name: "chaos".into(),
+        vocab: 256,
+        hidden: 32,
+        layers,
+        heads: 4,
+        ffn: 64,
+        bottleneck: 8,
+        seq: 16,
+        batch: 2,
+        init_std: 0.02,
+    })
+}
+
+fn training(rounds: usize, seed: u64) -> TrainingConfig {
+    TrainingConfig {
+        rounds,
+        local_iters: 1,
+        unfreeze_interval: 2,
+        initial_depth: 1,
+        seed,
+        ..Default::default()
+    }
+}
+
+/// Edge-flavored cluster: slow heterogeneous devices, modest links.
+fn cluster(n: usize, rng: &mut Rng) -> ClusterConfig {
+    let mut cl = ClusterConfig::homogeneous(n, 25e6);
+    for d in &mut cl.devices {
+        d.compute_speed = 0.05 + 0.1 * rng.next_f64();
+    }
+    cl
+}
+
+/// Random slowdown-only scenario (factors <= 1, no dropout) over the
+/// given horizon.
+fn random_slowdown(rng: &mut Rng, n: usize, horizon: f64) -> Scenario {
+    let mut events = Vec::new();
+    for _ in 0..1 + rng.next_below(3) {
+        let t0 = rng.next_f64() * horizon * 0.8;
+        events.push(ScenarioEvent::Straggler {
+            device: rng.next_below(n),
+            t_start: t0,
+            t_end: t0 + (0.05 + rng.next_f64() * 0.5) * horizon,
+            factor: 0.1 + 0.9 * rng.next_f64(),
+        });
+    }
+    let from = rng.next_below(n);
+    let to = (from + 1 + rng.next_below(n - 1)) % n;
+    if from != to {
+        let t0 = rng.next_f64() * horizon * 0.8;
+        events.push(ScenarioEvent::LinkDegrade {
+            from,
+            to,
+            t_start: t0,
+            t_end: t0 + (0.05 + rng.next_f64() * 0.4) * horizon,
+            factor: rng.next_f64() * 0.9,
+        });
+    }
+    Scenario { name: "slowdown".into(), events }
+}
+
+#[test]
+fn prop_uniform_slowdown_scales_the_schedule() {
+    // A factor-f slowdown applied to EVERY device and EVERY link for the
+    // whole run turns the schedule into an exact 1/f replica: same greedy
+    // decisions, every duration stretched.  (Per-resource slowdowns are
+    // deliberately not asserted monotone — greedy list scheduling admits
+    // Graham-style anomalies, which is a property of the scheduler, not a
+    // bug in the scenario engine.)
+    forall(60, |rng| {
+        let n = 2 + rng.next_below(4); // 2..=5
+        let layers = n + rng.next_below(8);
+        let m = meta(layers);
+        let cl = cluster(n, rng);
+        let lut = CostLut::analytic(&m, 5.0);
+        let tr = training(2, 7);
+        let scheme = Scheme::ALL[rng.next_below(3)];
+
+        let healthy = simulate_scenario(&m, &cl, &tr, scheme, &Scenario::healthy(), &lut)
+            .map_err(|e| e.to_string())?;
+
+        let f = 0.2 + 0.7 * rng.next_f64(); // 0.2..0.9
+        let forever = 1e15; // finite, far beyond any simulated clock
+        let mut events = Vec::new();
+        for d in 0..n {
+            events.push(ScenarioEvent::Straggler {
+                device: d,
+                t_start: 0.0,
+                t_end: forever,
+                factor: f,
+            });
+        }
+        for a in 0..n {
+            for b in 0..n {
+                if a != b {
+                    events.push(ScenarioEvent::LinkDegrade {
+                        from: a,
+                        to: b,
+                        t_start: 0.0,
+                        t_end: forever,
+                        factor: f,
+                    });
+                }
+            }
+        }
+        let sc = Scenario { name: "uniform".into(), events };
+        let slow =
+            simulate_scenario(&m, &cl, &tr, scheme, &sc, &lut).map_err(|e| e.to_string())?;
+
+        prop_check!(
+            slow.makespan_s >= healthy.makespan_s,
+            "{scheme:?}: uniform slowdown sped the run up: {} < {}",
+            slow.makespan_s,
+            healthy.makespan_s
+        );
+        let want = healthy.makespan_s / f;
+        prop_check!(
+            (slow.makespan_s - want).abs() <= 1e-3 * want.max(1e-12),
+            "{scheme:?}: makespan {} != healthy/f {} (f = {f})",
+            slow.makespan_s,
+            want
+        );
+        // Start/finish sanity under perturbation.
+        prop_check!(
+            slow.starts.iter().zip(&slow.finishes).all(|(s, fin)| fin >= s),
+            "a task finished before it started"
+        );
+        prop_check!(
+            slow.starts.len() == healthy.starts.len(),
+            "perturbation changed the task count"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_compute_exclusivity_holds_under_scenarios() {
+    use ringada::coordinator::{Coordinator, LayerAssignment};
+    use ringada::pipeline::{Kind, ScheduleBuilder, WireSizes};
+
+    forall(40, |rng| {
+        let n = 2 + rng.next_below(3);
+        let layers = n + rng.next_below(6);
+        let m = meta(layers);
+        let cl = cluster(n, rng);
+        let assignment = LayerAssignment::uniform(n, layers);
+        let c = Coordinator::with_assignment(assignment.clone(), &m, &cl, &training(2, 3))
+            .map_err(|e| e.to_string())?;
+        let rp = c.round_plan(0).map_err(|e| e.to_string())?;
+        let mut b = ScheduleBuilder::new(
+            assignment,
+            WireSizes { activation_bytes: m.activation_bytes(), head_bytes: 64 },
+            n,
+        );
+        for s in 0..4 {
+            b.ringada_step(&rp, rp.initiators[s % n]).map_err(|e| e.to_string())?;
+        }
+        let (tasks, _) = b.into_tasks();
+
+        let lut = CostLut::analytic(&m, 5.0);
+        let mut probe_sim = Simulator::new(cl.clone(), lut.clone());
+        let probe = probe_sim.run(&tasks).map_err(|e| e.to_string())?.makespan;
+        let sc = random_slowdown(rng, n, probe.max(1e-6));
+        let mut sim =
+            Simulator::with_scenario(cl, lut, &sc).map_err(|e| e.to_string())?;
+        let r = sim.run(&tasks).map_err(|e| e.to_string())?;
+
+        // One compute at a time per device, even while windows stretch
+        // task durations.
+        for dev in 0..n {
+            let mut spans: Vec<(f64, f64)> = tasks
+                .iter()
+                .filter(|t| matches!(t.kind, Kind::Compute { device, .. } if device == dev))
+                .map(|t| (r.start[t.id], r.finish[t.id]))
+                .collect();
+            spans.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            for w in spans.windows(2) {
+                prop_check!(
+                    w[1].0 >= w[0].1 - 1e-9,
+                    "device {dev} overlap: [{:.6},{:.6}] then [{:.6},{:.6}]",
+                    w[0].0,
+                    w[0].1,
+                    w[1].0,
+                    w[1].1
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The composite scenario the acceptance criteria name: one straggler, one
+/// degraded link, one mid-run dropout forcing a re-plan.
+fn composite_scenario(horizon: f64) -> Scenario {
+    Scenario {
+        name: "straggler+degrade+dropout".into(),
+        events: vec![
+            ScenarioEvent::Straggler {
+                device: 1,
+                t_start: 0.1 * horizon,
+                t_end: 0.6 * horizon,
+                factor: 0.35,
+            },
+            ScenarioEvent::LinkDegrade {
+                from: 0,
+                to: 1,
+                t_start: 0.2 * horizon,
+                t_end: 0.5 * horizon,
+                factor: 0.2,
+            },
+            ScenarioEvent::Dropout { device: 2, at: 0.4 * horizon },
+        ],
+    }
+}
+
+#[test]
+fn golden_composite_scenario_is_byte_deterministic_for_all_schemes() {
+    let m = meta(10);
+    let mut rng = Rng::new(0xD0_0D);
+    let cl = cluster(4, &mut rng);
+    let lut = CostLut::analytic(&m, 5.0);
+    let tr = training(6, 42);
+
+    for scheme in Scheme::ALL {
+        let healthy =
+            simulate_scenario(&m, &cl, &tr, scheme, &Scenario::healthy(), &lut).unwrap();
+        let sc = composite_scenario(healthy.makespan_s);
+
+        let a = simulate_scenario(&m, &cl, &tr, scheme, &sc, &lut).unwrap();
+        let b = simulate_scenario(&m, &cl, &tr, scheme, &sc, &lut).unwrap();
+        assert_eq!(
+            a.canonical_string(),
+            b.canonical_string(),
+            "{} not byte-deterministic",
+            scheme.name()
+        );
+
+        // The dropout fired and forced exactly one re-plan.
+        assert_eq!(a.dropped, vec![2], "{}", scheme.name());
+        assert_eq!(a.replans, 1, "{}", scheme.name());
+        // Faults cost time, never gain it.
+        assert!(
+            a.makespan_s >= healthy.makespan_s - 1e-9,
+            "{}: {} < {}",
+            scheme.name(),
+            a.makespan_s,
+            healthy.makespan_s
+        );
+        // Start/finish vectors are chunk-ordered and non-time-traveling:
+        // chunk completion times never decrease.
+        assert!(a.chunk_makespans.windows(2).all(|w| w[1] >= w[0] - 1e-12));
+        // Healthy baseline is itself deterministic.
+        let h2 = simulate_scenario(&m, &cl, &tr, scheme, &Scenario::healthy(), &lut).unwrap();
+        assert_eq!(healthy.canonical_string(), h2.canonical_string());
+    }
+}
+
+#[test]
+fn golden_straggler_only_scenario_is_deterministic() {
+    let m = meta(8);
+    let cl = ClusterConfig::paper_default();
+    let lut = CostLut::analytic(&m, 5.0);
+    let tr = training(4, 9);
+    let healthy =
+        simulate_scenario(&m, &cl, &tr, Scheme::RingAda, &Scenario::healthy(), &lut).unwrap();
+    let sc = Scenario {
+        name: "straggler".into(),
+        events: vec![ScenarioEvent::Straggler {
+            device: 3,
+            t_start: 0.0,
+            t_end: healthy.makespan_s * 0.7,
+            factor: 0.25,
+        }],
+    };
+    let a = simulate_scenario(&m, &cl, &tr, Scheme::RingAda, &sc, &lut).unwrap();
+    let b = simulate_scenario(&m, &cl, &tr, Scheme::RingAda, &sc, &lut).unwrap();
+    assert_eq!(a.canonical_string(), b.canonical_string());
+    assert!(a.replans == 0 && a.dropped.is_empty());
+    // The straggling device is occupied strictly longer (its tasks stall
+    // inside the window), and the run as a whole never gets cheaper.
+    assert!(
+        a.device_busy[3] > healthy.device_busy[3],
+        "straggling device must be occupied strictly longer: {} vs {}",
+        a.device_busy[3],
+        healthy.device_busy[3]
+    );
+    assert!(a.makespan_s >= healthy.makespan_s - 1e-9);
+}
+
+#[test]
+fn regression_replanned_chunks_never_time_travel() {
+    // After the dropout, the re-planned ring redistributes blocks; the
+    // surviving devices' chunks must start at or after the sim clock at
+    // the re-plan, even where a device was idle before (the seed simulator
+    // let fresh chunks start at t = 0 on idle resources).
+    let m = meta(9);
+    let mut rng = Rng::new(77);
+    let cl = cluster(3, &mut rng);
+    let lut = CostLut::analytic(&m, 5.0);
+    let tr = training(5, 5);
+    let healthy =
+        simulate_scenario(&m, &cl, &tr, Scheme::RingAda, &Scenario::healthy(), &lut).unwrap();
+    let sc = Scenario {
+        name: "drop1".into(),
+        events: vec![ScenarioEvent::Dropout { device: 1, at: healthy.makespan_s * 0.3 }],
+    };
+    let run = simulate_scenario(&m, &cl, &tr, Scheme::RingAda, &sc, &lut).unwrap();
+    assert_eq!(run.dropped, vec![1]);
+    assert_eq!(run.replans, 1);
+
+    // Walk chunks: every task of chunk k must start >= the completion time
+    // of chunk k-1 (the release floor that makes clocks resumable).
+    let mut offset = 0;
+    for (k, &count) in run.chunk_task_counts.iter().enumerate() {
+        if k > 0 {
+            let release = run.chunk_makespans[k - 1];
+            for i in offset..offset + count {
+                assert!(
+                    run.starts[i] >= release - 1e-9,
+                    "chunk {k} task {i} starts {} before release {release}",
+                    run.starts[i]
+                );
+            }
+        }
+        offset += count;
+    }
+    assert_eq!(offset, run.starts.len());
+}
+
+#[test]
+fn prop_synth_scenarios_round_trip_and_validate() {
+    forall(100, |rng| {
+        let n = 2 + rng.next_below(6);
+        let seed = rng.next_u64();
+        let intensity = rng.next_f64();
+        let sc = Scenario::synth(seed, n, 50.0 + 200.0 * rng.next_f64(), intensity);
+        sc.validate(n).map_err(|e| e.to_string())?;
+        let back = Scenario::parse(&sc.to_json().pretty()).map_err(|e| e.to_string())?;
+        prop_check!(back == sc, "JSON round trip changed the scenario");
+        Ok(())
+    });
+}
+
+#[test]
+fn dropout_makespan_exceeds_healthy_for_every_scheme() {
+    // Losing a device mid-run shrinks the ring; with the same round budget
+    // the remaining devices shoulder more blocks, so the total time grows.
+    let m = meta(12);
+    let cl = ClusterConfig::paper_default();
+    let lut = CostLut::analytic(&m, 5.0);
+    let tr = training(6, 21);
+    for scheme in Scheme::ALL {
+        let healthy =
+            simulate_scenario(&m, &cl, &tr, scheme, &Scenario::healthy(), &lut).unwrap();
+        let sc = Scenario {
+            name: "drop".into(),
+            events: vec![ScenarioEvent::Dropout { device: 1, at: healthy.makespan_s * 0.25 }],
+        };
+        let run = simulate_scenario(&m, &cl, &tr, scheme, &sc, &lut).unwrap();
+        assert_eq!(run.replans, 1, "{}", scheme.name());
+        assert!(
+            run.makespan_s >= healthy.makespan_s - 1e-9,
+            "{}: dropout shortened the run ({} < {})",
+            scheme.name(),
+            run.makespan_s,
+            healthy.makespan_s
+        );
+        // The dead device does no work after its dropout: its busy time is
+        // bounded by what it accrued before dying (strictly less than the
+        // healthy run's).
+        assert!(
+            run.device_busy[1] <= healthy.device_busy[1] + 1e-9,
+            "{}: dead device kept working",
+            scheme.name()
+        );
+    }
+}

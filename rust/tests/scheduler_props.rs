@@ -1,0 +1,270 @@
+//! Property battery over the scheduler core, covering all three schemes
+//! (DESIGN goals restated by ISSUE 1): DAG acyclicity under arbitrary
+//! step/handoff mixes, backward early-stop never reaching below the
+//! terminator, and the RingAda pause rule yielding exactly one weight
+//! version per ring position and step.
+//!
+//! Complements `coordinator_invariants.rs` (which pins the RingAda-only
+//! invariants); here every property is driven across `Scheme::ALL` with
+//! randomized cluster sizes, block counts, unfreeze depths and rounds.
+
+use ringada::config::{ClusterConfig, Scheme, TrainingConfig};
+use ringada::coordinator::{Coordinator, LayerAssignment};
+use ringada::model::manifest::ModelHyper;
+use ringada::model::ModelMeta;
+use ringada::pipeline::{invariants, validate_dag, Kind, Op, ScheduleBuilder, WireSizes};
+use ringada::prop_check;
+use ringada::runtime::Rng;
+use ringada::util::prop::forall;
+
+fn meta(layers: usize) -> ModelMeta {
+    ModelMeta::from_hyper(ModelHyper {
+        name: "props".into(),
+        vocab: 256,
+        hidden: 32,
+        layers,
+        heads: 4,
+        ffn: 64,
+        bottleneck: 8,
+        seq: 16,
+        batch: 2,
+        init_std: 0.02,
+    })
+}
+
+fn random_assignment(rng: &mut Rng, devices: usize, layers: usize) -> LayerAssignment {
+    let mut counts = vec![1usize; devices];
+    for _ in 0..layers - devices {
+        counts[rng.next_below(devices)] += 1;
+    }
+    let mut order: Vec<usize> = (0..devices).collect();
+    rng.shuffle(&mut order);
+    LayerAssignment::from_counts(order, &counts).unwrap()
+}
+
+fn random_setup(rng: &mut Rng) -> (Coordinator, usize, usize) {
+    let devices = 2 + rng.next_below(5); // 2..=6
+    let layers = devices + rng.next_below(12);
+    let assignment = random_assignment(rng, devices, layers);
+    let training = TrainingConfig {
+        initial_depth: 1 + rng.next_below(layers),
+        unfreeze_interval: 1 + rng.next_below(20),
+        ..Default::default()
+    };
+    let c = Coordinator::with_assignment(
+        assignment,
+        &meta(layers),
+        &ClusterConfig::homogeneous(devices, 1e7),
+        &training,
+    )
+    .unwrap();
+    (c, devices, layers)
+}
+
+fn sizes() -> WireSizes {
+    WireSizes { activation_bytes: 1024, head_bytes: 64 }
+}
+
+fn random_scheme(rng: &mut Rng) -> Scheme {
+    Scheme::ALL[rng.next_below(3)]
+}
+
+/// Emit `steps` steps of `scheme` (rotating initiators, with handoffs for
+/// the ring schemes) and return the DAG.
+fn build_steps(
+    c: &Coordinator,
+    scheme: Scheme,
+    devices: usize,
+    layers: usize,
+    steps: usize,
+    round: usize,
+) -> Result<Vec<ringada::pipeline::Task>, String> {
+    let rp = c.round_plan(round).map_err(|e| e.to_string())?;
+    let mut b = ScheduleBuilder::new(c.assignment.clone(), sizes(), devices);
+    let mut prev_initiator: Option<usize> = None;
+    for s in 0..steps {
+        let initiator = rp.initiators[s % devices];
+        if scheme != Scheme::Single {
+            if let Some(p) = prev_initiator.filter(|&p| p != initiator) {
+                b.head_handoff(p, initiator, round).map_err(|e| e.to_string())?;
+            }
+        }
+        match scheme {
+            Scheme::RingAda => b.ringada_step(&rp, initiator),
+            Scheme::PipeAdapter => b.pipe_adapter_step(&rp, initiator),
+            Scheme::Single => b.single_step(&rp, 0, layers),
+        }
+        .map_err(|e| e.to_string())?;
+        prev_initiator = Some(initiator);
+    }
+    let (tasks, _) = b.into_tasks();
+    Ok(tasks)
+}
+
+#[test]
+fn prop_dag_is_acyclic_for_every_scheme_and_round() {
+    forall(120, |rng| {
+        let (c, devices, layers) = random_setup(rng);
+        let scheme = random_scheme(rng);
+        let round = rng.next_below(80);
+        let steps = 1 + rng.next_below(5);
+        let tasks = build_steps(&c, scheme, devices, layers, steps, round)?;
+        validate_dag(&tasks).map_err(|e| e.to_string())?;
+        // Dense ids in emission order = topological by construction; also
+        // every dep must resolve inside the chunk.
+        for t in &tasks {
+            for &d in &t.deps {
+                prop_check!(d < t.id, "task {} deps on later {d}", t.id);
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_backward_early_stop_never_emits_below_terminator() {
+    forall(120, |rng| {
+        let (c, devices, layers) = random_setup(rng);
+        let scheme = random_scheme(rng);
+        let round = rng.next_below(80);
+        let rp = c.round_plan(round).map_err(|e| e.to_string())?;
+        let tasks = build_steps(&c, scheme, devices, layers, 2, round)?;
+
+        // Per-step backward block count: early-stopped depth for RingAda,
+        // full model depth for both baselines.
+        let per_step = invariants::bwd_blocks_per_step(&tasks);
+        let want = match scheme {
+            Scheme::RingAda => rp.depth,
+            _ => layers,
+        };
+        for step in 0..2 {
+            let got = per_step.get(&step).copied().unwrap_or(0);
+            prop_check!(
+                got == want,
+                "step {step}: bwd blocks {got} != {want} ({scheme:?}, depth {}, layers {layers})",
+                rp.depth
+            );
+        }
+
+        // No backward compute may land on a ring position strictly below
+        // the terminator position (RingAda only; baselines walk the full
+        // ring by design).
+        if scheme == Scheme::RingAda {
+            for t in &tasks {
+                if let Kind::Compute { device, op: Op::BlockBwd { .. } } = t.kind {
+                    let pos = c.assignment.position_of_device(device).map_err(|e| e.to_string())?;
+                    prop_check!(
+                        pos >= rp.terminator_position,
+                        "bwd on position {pos} below terminator {}",
+                        rp.terminator_position
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pause_rule_yields_exactly_one_weight_version_per_position() {
+    forall(120, |rng| {
+        let (c, devices, layers) = random_setup(rng);
+        let round = rng.next_below(80);
+        let rp = c.round_plan(round).map_err(|e| e.to_string())?;
+        let steps = 2 + rng.next_below(3);
+        let tasks = build_steps(&c, Scheme::RingAda, devices, layers, steps, round)?;
+
+        let unfrozen = c.assignment.unfrozen_per_position(rp.terminator_block);
+        for pos in 0..devices {
+            let dev = c.assignment.order[pos];
+            // Exactly one AdapterUpdate per step on unfrozen positions;
+            // zero anywhere frozen — this is the "single weight version per
+            // position" guarantee in DAG form.
+            for step in 0..steps {
+                let updates = tasks
+                    .iter()
+                    .filter(|t| {
+                        t.step == step
+                            && matches!(
+                                t.kind,
+                                Kind::Compute { device: d, op: Op::AdapterUpdate { .. } } if d == dev
+                            )
+                    })
+                    .count();
+                let want = usize::from(unfrozen[pos] > 0);
+                prop_check!(
+                    updates == want,
+                    "position {pos} step {step}: {updates} updates, want {want}"
+                );
+            }
+            // And every later forward on an unfrozen position must hold a
+            // direct edge to that position's latest update (the pause rule).
+            if unfrozen[pos] > 0 {
+                prop_check!(
+                    invariants::fwd_waits_for_update(&tasks, dev),
+                    "unfrozen position {pos} (device {dev}) missing a pause edge"
+                );
+            }
+        }
+        let _ = layers;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pipeadapter_never_pauses_but_single_never_leaves_its_device() {
+    forall(100, |rng| {
+        let (c, devices, layers) = random_setup(rng);
+        let round = rng.next_below(40);
+
+        // PipeAdapter: stale forwarding — no forward ever waits on an
+        // adapter update (that is exactly what weight stashing buys).
+        let pipe = build_steps(&c, Scheme::PipeAdapter, devices, layers, 3, round)?;
+        for pos in 0..devices {
+            let dev = c.assignment.order[pos];
+            prop_check!(
+                !invariants::fwd_waits_for_update(&pipe, dev),
+                "PipeAdapter device {dev} has a pause edge"
+            );
+        }
+
+        // Single: every compute lands on device 0, full-depth backward.
+        let single = build_steps(&c, Scheme::Single, devices, layers, 2, round)?;
+        prop_check!(
+            single.iter().all(|t| matches!(t.kind, Kind::Compute { device: 0, .. })),
+            "Single emitted off-device or transfer tasks"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_round_plan_depth_and_terminator_agree_with_assignment() {
+    forall(150, |rng| {
+        let (c, devices, layers) = random_setup(rng);
+        let round = rng.next_below(200);
+        let rp = c.round_plan(round).map_err(|e| e.to_string())?;
+        prop_check!(
+            rp.terminator_block == layers - rp.depth,
+            "terminator {} != layers {layers} - depth {}",
+            rp.terminator_block,
+            rp.depth
+        );
+        let unfrozen = c.assignment.unfrozen_per_position(rp.terminator_block);
+        let total: usize = unfrozen.iter().sum();
+        prop_check!(total == rp.depth, "unfrozen total {total} != depth {}", rp.depth);
+        // The terminator position is the first with any unfrozen block.
+        for (pos, &u) in unfrozen.iter().enumerate() {
+            if pos < rp.terminator_position {
+                prop_check!(u == 0, "position {pos} below terminator has {u} unfrozen");
+            }
+        }
+        prop_check!(
+            unfrozen[rp.terminator_position] > 0,
+            "terminator position {} is fully frozen",
+            rp.terminator_position
+        );
+        let _ = devices;
+        Ok(())
+    });
+}

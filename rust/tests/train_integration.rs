@@ -9,6 +9,9 @@ use ringada::train::run_scheme;
 const ART: &str = "artifacts/tiny";
 
 fn have_artifacts() -> bool {
+    if !ringada::runtime::pjrt_available() {
+        return false; // PJRT is stubbed in this build (see rust/xla)
+    }
     std::path::Path::new(ART).join("manifest.json").exists()
 }
 

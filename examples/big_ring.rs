@@ -1,0 +1,132 @@
+//! Scale sweep: RingAda past the paper's 4–8 device clusters.
+//!
+//! Sweeps U ∈ {8, 16, 64, 128} synthetic edge clusters
+//! ([`ClusterConfig::synthetic`]) through all three schemes, healthy and
+//! under a seed-deterministic fault scenario (stragglers + link degradation
+//! + one mid-run dropout forcing a ring re-plan over the survivors).  At
+//! U ≤ 8 the beam + anneal planner is cross-checked against the exhaustive
+//! search; beyond that exhaustive search is U! and only the heuristic runs.
+//!
+//! Timing-only: analytic cost LUT, no AOT artifacts — works on any machine.
+//!
+//! ```bash
+//! cargo run --release --example big_ring
+//! ```
+
+use std::time::Instant;
+
+use ringada::config::{ClusterConfig, Scheme, TrainingConfig};
+use ringada::coordinator::{Planner, PlannerCosts};
+use ringada::metrics::TablePrinter;
+use ringada::model::manifest::ModelHyper;
+use ringada::model::ModelMeta;
+use ringada::sim::{CostLut, Scenario};
+use ringada::train::simulate_scenario;
+
+fn meta(layers: usize) -> ModelMeta {
+    ModelMeta::from_hyper(ModelHyper {
+        name: "big-ring".into(),
+        vocab: 8192,
+        hidden: 64,
+        layers,
+        heads: 4,
+        ffn: 256,
+        bottleneck: 16,
+        seq: 32,
+        batch: 4,
+        init_std: 0.02,
+    })
+}
+
+fn main() -> ringada::Result<()> {
+    let seed = 2026u64;
+    let sweep = [8usize, 16, 64, 128];
+    println!("big_ring: U sweep {sweep:?}, 2·U blocks per model, heterogeneity 0.6, seed {seed}");
+    println!("scenario per U: synth intensity 0.8 (stragglers + degraded link + one dropout)\n");
+
+    let mut table = TablePrinter::new(&[
+        "U",
+        "Scheme",
+        "Healthy (s)",
+        "Scenario (s)",
+        "Δ makespan",
+        "Util (%)",
+        "Re-plans",
+        "Dropped",
+    ]);
+
+    for &u in &sweep {
+        let m = meta(2 * u);
+        let cl = ClusterConfig::synthetic(u, seed, 0.6);
+        let lut = CostLut::analytic(&m, 5.0);
+        let costs = PlannerCosts {
+            block_fwd_s: lut.block_fwd_s,
+            activation_bytes: m.activation_bytes(),
+        };
+        let planner = Planner::new(&m, &cl, costs);
+
+        let t0 = Instant::now();
+        let plan = planner.plan()?;
+        let plan_ms = t0.elapsed().as_secs_f64() * 1e3;
+        println!(
+            "U = {u:>3}: planned {} ring positions over {} blocks in {plan_ms:.1} ms \
+             (bottleneck {:.4} s/batch)",
+            plan.assignment.num_positions(),
+            2 * u,
+            plan.bottleneck_s
+        );
+        if u <= 8 {
+            // Small enough to enumerate: the heuristic must tie the optimum.
+            let devices: Vec<usize> = (0..u).collect();
+            let ex = planner.plan_exhaustive(&devices)?;
+            let ba = planner.plan_beam_anneal(&devices)?;
+            println!(
+                "         beam/anneal vs exhaustive bottleneck: {:.6} vs {:.6} (ratio {:.6})",
+                ba.bottleneck_s,
+                ex.bottleneck_s,
+                ba.bottleneck_s / ex.bottleneck_s
+            );
+        }
+
+        // Fewer rounds at the largest sizes keeps the sweep interactive;
+        // every round still rotates the initiator through all U devices.
+        let tr = TrainingConfig {
+            rounds: if u >= 64 { 2 } else { 4 },
+            local_iters: 1,
+            unfreeze_interval: 1,
+            initial_depth: 1,
+            ..Default::default()
+        };
+        for scheme in Scheme::ALL {
+            let healthy =
+                simulate_scenario(&m, &cl, &tr, scheme, &Scenario::healthy(), &lut)?;
+            let scenario = Scenario::synth(seed, u, healthy.makespan_s, 0.8);
+            let run = simulate_scenario(&m, &cl, &tr, scheme, &scenario, &lut)?;
+            let delta = if healthy.makespan_s > 0.0 {
+                100.0 * (run.makespan_s - healthy.makespan_s) / healthy.makespan_s
+            } else {
+                0.0
+            };
+            table.row(vec![
+                u.to_string(),
+                scheme.name().to_string(),
+                format!("{:.2}", healthy.makespan_s),
+                format!("{:.2}", run.makespan_s),
+                format!("{delta:+.1}%"),
+                format!("{:.1}", 100.0 * run.mean_active_utilization()),
+                run.replans.to_string(),
+                run.dropped.len().to_string(),
+            ]);
+        }
+    }
+
+    println!("\nscheme x scale under faults (utilization = window-weighted, active capacity):\n");
+    println!("{}", table.render());
+    println!(
+        "reading: the beam/anneal planner keeps the bottleneck near the enumerated\n\
+         optimum where that is checkable, and planning time stays in milliseconds at\n\
+         128 devices where exhaustive search (128! orders) is unthinkable; the heap\n\
+         ready-queue keeps the 10^5-task scenario sweeps comfortably interactive."
+    );
+    Ok(())
+}

@@ -64,7 +64,7 @@ fn main() -> ringada::Result<()> {
             "[{:<11}] healthy makespan {:8.2}s   mean utilization {:5.1}%",
             scheme.name(),
             healthy.makespan_s,
-            100.0 * healthy.mean_surviving_utilization()
+            100.0 * healthy.mean_active_utilization()
         );
         let mut worst_delta = 0.0f64;
         for &intensity in &intensities {

@@ -1,0 +1,171 @@
+//! Scale benches: planner time vs cluster size, heap-simulator throughput
+//! vs the retained greedy-rescan reference, and beam/anneal bottleneck
+//! quality vs the exhaustive optimum.  Results are written to
+//! `BENCH_scale.json` (CI uploads it as an artifact) so the perf
+//! trajectory accumulates across PRs.
+//!
+//! Run: `cargo bench --bench scale` — or `cargo bench --bench scale --
+//! --smoke` (also honored via `RINGADA_BENCH_SMOKE=1`) for the quick CI
+//! profile: smaller sweeps, fewer samples, same JSON schema.
+
+use ringada::config::{ClusterConfig, TrainingConfig};
+use ringada::coordinator::{Coordinator, Planner, PlannerCosts, SearchParams};
+use ringada::model::manifest::ModelHyper;
+use ringada::model::ModelMeta;
+use ringada::pipeline::{ScheduleBuilder, WireSizes};
+use ringada::sim::{CostLut, Simulator};
+use ringada::util::bench::{black_box, Bencher};
+use ringada::util::json::Json;
+
+fn meta(layers: usize) -> ModelMeta {
+    ModelMeta::from_hyper(ModelHyper {
+        name: "scale".into(),
+        vocab: 2048,
+        hidden: 64,
+        layers,
+        heads: 4,
+        ffn: 256,
+        bottleneck: 16,
+        seq: 32,
+        batch: 4,
+        init_std: 0.02,
+    })
+}
+
+fn costs(lut: &CostLut, m: &ModelMeta) -> PlannerCosts {
+    PlannerCosts { block_fwd_s: lut.block_fwd_s, activation_bytes: m.activation_bytes() }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("RINGADA_BENCH_SMOKE").map_or(false, |v| v == "1");
+    let mut b = Bencher::coarse();
+    println!("== scale benches ({}) ==", if smoke { "smoke" } else { "full" });
+
+    // ---- planner time vs U (exhaustive where legal, beam/anneal beyond).
+    let plan_sweep: &[usize] = if smoke { &[8, 16, 32] } else { &[8, 16, 32, 64, 128] };
+    let params = if smoke { SearchParams::smoke() } else { SearchParams::default() };
+    let mut planner_rows = Vec::new();
+    for &u in plan_sweep {
+        let m = meta(2 * u);
+        let cl = ClusterConfig::synthetic(u, 11, 0.6);
+        let lut = CostLut::analytic(&m, 5.0);
+        let planner = Planner::new(&m, &cl, costs(&lut, &m));
+        let devices: Vec<usize> = (0..u).collect();
+        let (mean_s, min_s) = {
+            let r = b.bench(&format!("scale/plan_u{u}"), || {
+                let plan = if u <= 8 {
+                    planner.plan_exhaustive(&devices)
+                } else {
+                    planner.plan_beam_anneal_with(&devices, &params)
+                };
+                black_box(plan.unwrap());
+            });
+            (r.mean.as_secs_f64(), r.min.as_secs_f64())
+        };
+        planner_rows.push(Json::obj(vec![
+            ("u", Json::num(u as f64)),
+            ("layers", Json::num(2.0 * u as f64)),
+            ("mean_s", Json::num(mean_s)),
+            ("min_s", Json::num(min_s)),
+        ]));
+    }
+
+    // ---- simulator throughput: heap dispatch vs the reference rescan.
+    let sim_sweep: &[usize] = if smoke { &[16] } else { &[16, 64] };
+    let steps = if smoke { 8 } else { 32 };
+    let mut sim_rows = Vec::new();
+    for &u in sim_sweep {
+        let m = meta(2 * u);
+        let cl = ClusterConfig::synthetic(u, 13, 0.5);
+        let lut = CostLut::analytic(&m, 5.0);
+        let planner = Planner::new(&m, &cl, costs(&lut, &m));
+        let devices: Vec<usize> = (0..u).collect();
+        let plan = planner
+            .plan_beam_anneal_with(&devices, &params)
+            .expect("synthetic cluster must be plannable");
+        let tr = TrainingConfig {
+            rounds: 1,
+            local_iters: 1,
+            unfreeze_interval: 1,
+            initial_depth: 1,
+            ..Default::default()
+        };
+        let c = Coordinator::with_assignment(plan.assignment.clone(), &m, &cl, &tr).unwrap();
+        let rp = c.round_plan(0).unwrap();
+        let sizes = WireSizes { activation_bytes: m.activation_bytes(), head_bytes: 64 };
+        let mut builder = ScheduleBuilder::new(plan.assignment, sizes, u);
+        for s in 0..steps {
+            builder.ringada_step(&rp, rp.initiators[s % u]).unwrap();
+        }
+        let (tasks, _) = builder.into_tasks();
+        let n_tasks = tasks.len();
+        let heap_mean = {
+            let r = b.bench(&format!("scale/sim_heap_u{u}_{n_tasks}tasks"), || {
+                let mut sim = Simulator::new(cl.clone(), lut.clone());
+                black_box(sim.run(&tasks).unwrap());
+            });
+            r.mean.as_secs_f64()
+        };
+        let ref_mean = {
+            let r = b.bench(&format!("scale/sim_reference_u{u}_{n_tasks}tasks"), || {
+                let mut sim = Simulator::new(cl.clone(), lut.clone());
+                black_box(sim.run_reference(&tasks).unwrap());
+            });
+            r.mean.as_secs_f64()
+        };
+        println!(
+            "  -> u={u}: {n_tasks} tasks, heap {:.0} tasks/s, {:.2}x vs reference scan",
+            n_tasks as f64 / heap_mean.max(1e-12),
+            ref_mean / heap_mean.max(1e-12)
+        );
+        sim_rows.push(Json::obj(vec![
+            ("u", Json::num(u as f64)),
+            ("tasks", Json::num(n_tasks as f64)),
+            ("heap_mean_s", Json::num(heap_mean)),
+            ("reference_mean_s", Json::num(ref_mean)),
+            (
+                "heap_tasks_per_s",
+                Json::num(n_tasks as f64 / heap_mean.max(1e-12)),
+            ),
+            (
+                "speedup_vs_reference",
+                Json::num(ref_mean / heap_mean.max(1e-12)),
+            ),
+        ]));
+    }
+
+    // ---- bottleneck quality: beam/anneal vs exhaustive on enumerable U.
+    let q_sweep: &[usize] = if smoke { &[4, 6] } else { &[4, 6, 8] };
+    let q_seeds = if smoke { 3u64 } else { 8 };
+    let mut quality_rows = Vec::new();
+    for &u in q_sweep {
+        let mut worst_ratio = 1.0f64;
+        for s in 0..q_seeds {
+            let m = meta(2 * u);
+            let cl = ClusterConfig::synthetic(u, 100 + s, 0.7);
+            let lut = CostLut::analytic(&m, 5.0);
+            let planner = Planner::new(&m, &cl, costs(&lut, &m));
+            let devices: Vec<usize> = (0..u).collect();
+            let ex = planner.plan_exhaustive(&devices).unwrap();
+            let ba = planner.plan_beam_anneal_with(&devices, &params).unwrap();
+            worst_ratio = worst_ratio.max(ba.bottleneck_s / ex.bottleneck_s);
+        }
+        println!("  -> u={u}: worst beam/exhaustive bottleneck ratio {worst_ratio:.6}");
+        quality_rows.push(Json::obj(vec![
+            ("u", Json::num(u as f64)),
+            ("seeds", Json::num(q_seeds as f64)),
+            ("worst_ratio", Json::num(worst_ratio)),
+        ]));
+    }
+
+    let out = Json::obj(vec![
+        ("bench", Json::str("scale")),
+        ("smoke", Json::Bool(smoke)),
+        ("planner", Json::Arr(planner_rows)),
+        ("sim", Json::Arr(sim_rows)),
+        ("quality", Json::Arr(quality_rows)),
+    ]);
+    std::fs::write("BENCH_scale.json", out.pretty()).expect("write BENCH_scale.json");
+    println!("wrote BENCH_scale.json");
+}

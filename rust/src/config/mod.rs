@@ -8,6 +8,7 @@
 use std::path::PathBuf;
 
 use crate::error::{Error, Result};
+use crate::runtime::rng::Rng;
 use crate::sim::scenario::Scenario;
 use crate::util::json::Json;
 
@@ -93,6 +94,36 @@ impl ClusterConfig {
         c
     }
 
+    /// Seed-deterministic synthetic edge cluster for the scale experiments
+    /// (`examples/big_ring.rs`, `benches/scale.rs`): `n` devices at
+    /// paper-class speeds with a `heterogeneity`-controlled spread, fully
+    /// connected by ~200 Mbps D2D links whose rates jitter by the same
+    /// knob.
+    ///
+    /// `heterogeneity` is clamped to [0, 1]: 0 ⇒ identical devices and
+    /// links; 1 ⇒ up to ~10× compute spread (log-uniform, strictly
+    /// positive) and up to 5× link-rate spread.  Same
+    /// `(n, seed, heterogeneity)` ⇒ bit-identical cluster.
+    pub fn synthetic(n: usize, seed: u64, heterogeneity: f64) -> Self {
+        let h = heterogeneity.clamp(0.0, 1.0);
+        let mut rng = Rng::new(seed ^ 0xC1_05_7E_12);
+        let mut c = Self::homogeneous(n, 25e6);
+        for d in &mut c.devices {
+            // Log-uniform spread around the paper-class 0.1 relative speed.
+            let spread = 2.0 * rng.next_f64() - 1.0; // [-1, 1)
+            d.compute_speed = 0.1 * 10f64.powf(0.5 * h * spread);
+            d.mem_bytes = 6 << 30;
+        }
+        for i in 0..n {
+            for j in 0..n {
+                if i != j {
+                    c.rate_bytes_per_s[i][j] = 25e6 * (1.0 - 0.8 * h * rng.next_f64());
+                }
+            }
+        }
+        c
+    }
+
     pub fn len(&self) -> usize {
         self.devices.len()
     }
@@ -120,16 +151,32 @@ impl ClusterConfig {
                     d.id
                 )));
             }
-            if d.compute_speed <= 0.0 {
-                return Err(Error::Config(format!("device {i} has non-positive speed")));
+            // `!(x > 0.0)` also catches NaN, which `x <= 0.0` lets through.
+            if !(d.compute_speed > 0.0) || !d.compute_speed.is_finite() {
+                return Err(Error::Config(format!(
+                    "device {i} has non-positive or non-finite speed {}",
+                    d.compute_speed
+                )));
             }
         }
         for i in 0..n {
             for j in 0..n {
-                if i != j && self.rate_bytes_per_s[i][j] <= 0.0 {
-                    return Err(Error::Config(format!("link {i}->{j} has non-positive rate")));
+                if i == j {
+                    continue;
+                }
+                let r = self.rate_bytes_per_s[i][j];
+                if !(r > 0.0) || !r.is_finite() {
+                    return Err(Error::Config(format!(
+                        "link {i}->{j} has non-positive or non-finite rate {r}"
+                    )));
                 }
             }
+        }
+        if !self.link_latency_s.is_finite() || self.link_latency_s < 0.0 {
+            return Err(Error::Config(format!(
+                "link latency {} must be finite and >= 0",
+                self.link_latency_s
+            )));
         }
         Ok(())
     }
@@ -389,6 +436,49 @@ mod tests {
         let mut c = ClusterConfig::homogeneous(2, 1e6);
         c.devices[1].compute_speed = 0.0;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_nan_speed_and_nan_or_zero_rates() {
+        let mut c = ClusterConfig::homogeneous(2, 1e6);
+        c.devices[0].compute_speed = f64::NAN;
+        assert!(c.validate().is_err());
+        let mut c = ClusterConfig::homogeneous(2, 1e6);
+        c.rate_bytes_per_s[0][1] = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = ClusterConfig::homogeneous(2, 1e6);
+        c.rate_bytes_per_s[1][0] = f64::NAN;
+        assert!(c.validate().is_err());
+        let mut c = ClusterConfig::homogeneous(2, 1e6);
+        c.link_latency_s = f64::INFINITY;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn synthetic_cluster_is_deterministic_and_valid() {
+        let a = ClusterConfig::synthetic(64, 9, 0.8);
+        let b = ClusterConfig::synthetic(64, 9, 0.8);
+        a.validate().unwrap();
+        assert_eq!(a.len(), 64);
+        for (da, db) in a.devices.iter().zip(&b.devices) {
+            assert_eq!(da.compute_speed.to_bits(), db.compute_speed.to_bits());
+        }
+        assert_eq!(a.rate_bytes_per_s, b.rate_bytes_per_s);
+        // Heterogeneity 0 collapses to identical devices and links.
+        let flat = ClusterConfig::synthetic(8, 3, 0.0);
+        flat.validate().unwrap();
+        assert!(flat
+            .devices
+            .iter()
+            .all(|d| (d.compute_speed - 0.1).abs() < 1e-12));
+        assert!((flat.rate_bytes_per_s[0][1] - 25e6).abs() < 1e-3);
+        // Different seeds produce different clusters.
+        let c = ClusterConfig::synthetic(64, 10, 0.8);
+        assert!(a
+            .devices
+            .iter()
+            .zip(&c.devices)
+            .any(|(x, y)| x.compute_speed != y.compute_speed));
     }
 
     #[test]

@@ -8,7 +8,7 @@ pub mod planner;
 pub mod ring;
 pub mod unfreeze;
 
-pub use planner::{Plan, Planner, PlannerCosts};
+pub use planner::{Plan, Planner, PlannerCosts, SearchParams, EXHAUSTIVE_MAX_DEVICES};
 pub use ring::{InitiatorRotation, LayerAssignment};
 pub use unfreeze::UnfreezeSchedule;
 

@@ -7,16 +7,58 @@
 //!   `max_s work(s)/speed(dev_s) + transfer(s → s+1)`
 //!   over contiguous partitions and ring orderings;
 //! * method — exact contiguous-partition DP for a fixed device order
-//!   (O(U·L²)), wrapped in exhaustive order search for U ≤ 8 and a
-//!   speed-descending greedy order beyond;
+//!   (O(U·L²)), wrapped in exhaustive order search for U ≤ 8 and the
+//!   beam + simulated-annealing search below for larger clusters;
 //! * constraint — per-device memory budgets `C_u^mem` (checked with the
 //!   RingAda full-depth memory model, the worst case).
+//!
+//! ## Scale search (U > 8)
+//!
+//! Exhaustive order search is U!, so past 8 devices the planner switches to
+//! a two-stage heuristic ([`Planner::plan_beam_anneal`]):
+//!
+//! 1. **Beam search over partial orders.**  Partial rings grow one device
+//!    at a time from up to `beam_width` distinct seeds (the fastest
+//!    devices, covering rotations of the speed-descending seed order).  A
+//!    partial order is scored by a lower-bound surrogate — the max over
+//!    committed adjacent pairs `(a, b)` of
+//!    `block_fwd_s/speed_a + transfer(a → b)` (each stage holds ≥ 1 block,
+//!    so this never overestimates) — and only the best `beam_width`
+//!    partials survive each level.  Ties break on the order vector itself,
+//!    keeping the search fully deterministic.
+//! 2. **Simulated-annealing refinement.**  Starting from the best beam
+//!    order, `anneal_iters` moves are proposed — *pair-swap* (exchange two
+//!    ring positions) and *segment-reverse* (reverse a contiguous span,
+//!    the 2-opt move) with equal probability — and accepted when they
+//!    improve the bottleneck, or with probability `exp(-Δ/T)` under a
+//!    geometric temperature schedule from `T₀ = 0.2·score(seed order)`
+//!    down to `10⁻⁴·T₀`.  The move RNG is seeded from
+//!    [`SearchParams::seed`] only, so the same cluster always anneals the
+//!    same way (plans are reproducible; re-plans after a dropout too).
+//!
+//! The anneal's inner evaluator is not the O(U·L²) DP but an exact
+//! O(U·log) reformulation ([`min_bottleneck_for_order`]): stage cost is
+//! linear in the block count (`a_s·b + t_s`), so "is bottleneck ≤ T
+//! feasible?" is a greedy O(U) sweep and the optimum is found by bisection.
+//! The handful of surviving candidate orders are then re-planned through
+//! the same [`partition_dp`] + memory-feasibility path the exhaustive
+//! search uses, so the returned [`Plan`] is bit-identical to what the
+//! exhaustive search would produce for that order.
+//!
+//! Determinism guarantee: no wall-clock, no global RNG — same
+//! `(cluster, costs, devices, SearchParams)` in ⇒ same plan out.
 
 use crate::config::ClusterConfig;
 use crate::coordinator::ring::LayerAssignment;
 use crate::error::{Error, Result};
 use crate::model::{MemoryModel, ModelMeta};
 use crate::config::Scheme;
+use crate::runtime::rng::Rng;
+
+/// Largest cluster the exhaustive order search is allowed to chew on
+/// (8! = 40 320 permutations); beyond this [`Planner::plan_for_devices`]
+/// switches to the beam + anneal search.
+pub const EXHAUSTIVE_MAX_DEVICES: usize = 8;
 
 /// Planner inputs that come from profiling (the LUT) rather than configs.
 #[derive(Debug, Clone, Copy)]
@@ -25,6 +67,33 @@ pub struct PlannerCosts {
     pub block_fwd_s: f64,
     /// Bytes of one inter-stage activation transfer.
     pub activation_bytes: usize,
+}
+
+/// Tuning knobs for the non-exhaustive (U > 8) ring-order search.  The
+/// defaults are sized so a 128-device plan stays well under a second while
+/// matching the exhaustive optimum on every cluster small enough to check.
+#[derive(Debug, Clone, Copy)]
+pub struct SearchParams {
+    /// Partial orders kept per beam level (and distinct seed devices).
+    pub beam_width: usize,
+    /// Simulated-annealing move proposals.
+    pub anneal_iters: usize,
+    /// Seed for the annealing move RNG — fixed by default so plans are
+    /// deterministic for a given cluster.
+    pub seed: u64,
+}
+
+impl Default for SearchParams {
+    fn default() -> Self {
+        SearchParams { beam_width: 8, anneal_iters: 4000, seed: 0x52_49_4E_47 }
+    }
+}
+
+impl SearchParams {
+    /// Cheap profile for smoke-mode benches and huge sweeps.
+    pub fn smoke() -> Self {
+        SearchParams { beam_width: 4, anneal_iters: 400, ..Self::default() }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -36,14 +105,13 @@ pub struct Plan {
 }
 
 /// Exact DP over contiguous partitions for a fixed device order: minimize
-/// the max stage cost.  `stage_cost(dev, blocks)` must be monotone in
-/// `blocks`.
+/// the max stage cost.  `stage_cost(pos, blocks)` must be monotone in
+/// `blocks` (`pos` is the ring position, not the device id).
 fn partition_dp(
-    order: &[usize],
+    u: usize,
     layers: usize,
     stage_cost: &dyn Fn(usize, usize) -> f64,
 ) -> (Vec<usize>, f64) {
-    let u = order.len();
     // dp[s][l] = minimal bottleneck placing the first l blocks on the first
     // s ring positions, every position non-empty.
     let inf = f64::INFINITY;
@@ -53,7 +121,7 @@ fn partition_dp(
     for s in 1..=u {
         for l in s..=layers - (u - s) {
             for prev in (s - 1)..l {
-                let cost = stage_cost(order[s - 1], l - prev);
+                let cost = stage_cost(s - 1, l - prev);
                 let cand = dp[s - 1][prev].max(cost);
                 if cand < dp[s][l] {
                     dp[s][l] = cand;
@@ -73,6 +141,111 @@ fn partition_dp(
     (counts, dp[u][layers])
 }
 
+/// Exact min-bottleneck over contiguous partitions for a fixed order, in
+/// O(U · log) instead of the DP's O(U·L²) — the anneal's inner evaluator.
+///
+/// Stage cost at position `s` with `b` blocks is `a[s]·b + t[s]` (compute
+/// linear in blocks, transfer independent of them), so feasibility of a
+/// bottleneck bound `T` is a greedy sweep: each stage takes
+/// `min(⌊(T−t)/a⌋, blocks it may take while leaving one per remaining
+/// stage)` and `T` is feasible iff the sweep consumes every block.
+/// Bisection over `T` converges to the optimum; the return value is the
+/// max *achieved* stage cost of the feasible witness, which is exact up to
+/// bisection resolution (~1e-12 relative — candidate orders are re-scored
+/// through [`partition_dp`] before a plan is returned, so this error never
+/// reaches a [`Plan`]).
+fn min_bottleneck_for_order(a: &[f64], t: &[f64], layers: usize) -> Option<f64> {
+    let u = a.len();
+    if u == 0 || layers < u {
+        return None;
+    }
+    // Upper bound: the near-uniform split is a witness partition.
+    let base = layers / u;
+    let extra = layers % u;
+    let mut hi = 0.0f64;
+    for s in 0..u {
+        let b = base + usize::from(s < extra);
+        hi = hi.max(a[s] * b as f64 + t[s]);
+    }
+    if !greedy_feasible(a, t, layers, hi, None) {
+        // Can only happen through float pathology; report infeasible.
+        return None;
+    }
+    let mut lo = 0.0f64;
+    for _ in 0..100 {
+        if hi - lo <= f64::EPSILON * hi.max(1e-300) {
+            break;
+        }
+        let mid = 0.5 * (lo + hi);
+        if greedy_feasible(a, t, layers, mid, None) {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    let mut counts = Vec::new();
+    if !greedy_feasible(a, t, layers, hi, Some(&mut counts)) {
+        return None;
+    }
+    let mut achieved = 0.0f64;
+    for s in 0..u {
+        achieved = achieved.max(a[s] * counts[s] as f64 + t[s]);
+    }
+    Some(achieved)
+}
+
+/// Greedy feasibility sweep for `min_bottleneck_for_order`: can `layers`
+/// blocks be split so every stage cost `a[s]·b + t[s]` stays ≤ `cap_t`?
+/// Each stage takes the most blocks it can while leaving one per remaining
+/// stage — optimal because capacity depends only on the block *count*.  On
+/// success, the witness partition is written to `counts` when provided.
+fn greedy_feasible(
+    a: &[f64],
+    t: &[f64],
+    layers: usize,
+    cap_t: f64,
+    counts: Option<&mut Vec<usize>>,
+) -> bool {
+    let u = a.len();
+    let mut remaining = layers;
+    let mut out: Vec<usize> = Vec::with_capacity(u);
+    for s in 0..u {
+        let stages_left = u - 1 - s;
+        let raw = (cap_t - t[s]) / a[s];
+        let mut cap = if raw.is_finite() && raw >= 0.0 {
+            if raw >= layers as f64 {
+                layers
+            } else {
+                raw as usize
+            }
+        } else {
+            0
+        };
+        // `floor((T - t)/a)` can land one off in either direction at f64
+        // resolution; snap to the largest b with `a·b + t ≤ T` so an
+        // upper-bound witness partition is never misjudged infeasible
+        // (e.g. a binding stage whose cap rounds to b − ε).
+        if cap < layers && a[s] * (cap + 1) as f64 + t[s] <= cap_t {
+            cap += 1;
+        } else if cap > 0 && a[s] * cap as f64 + t[s] > cap_t {
+            cap -= 1;
+        }
+        let take = cap.min(remaining.saturating_sub(stages_left));
+        if take == 0 {
+            return false;
+        }
+        out.push(take);
+        remaining -= take;
+    }
+    if remaining != 0 {
+        return false;
+    }
+    if let Some(c) = counts {
+        *c = out;
+    }
+    true
+}
+
 /// The planner proper.
 pub struct Planner<'a> {
     pub meta: &'a ModelMeta,
@@ -85,12 +258,33 @@ impl<'a> Planner<'a> {
         Planner { meta, cluster, costs }
     }
 
+    /// One activation hop `dev → next_dev`: bytes over the link rate plus
+    /// the fixed per-message latency.  Every cost expression in this module
+    /// (the DP stage cost, the evaluator coefficients, the beam surrogate)
+    /// derives from this one helper so the search objectives cannot drift.
+    fn hop_cost(&self, dev: usize, next_dev: usize) -> f64 {
+        self.costs.activation_bytes as f64 / self.cluster.rate_bytes_per_s[dev][next_dev]
+            + self.cluster.link_latency_s
+    }
+
     fn stage_cost(&self, dev: usize, blocks: usize, next_dev: usize) -> f64 {
         let compute = self.costs.block_fwd_s * blocks as f64
             / self.cluster.devices[dev].compute_speed;
-        let rate = self.cluster.rate_bytes_per_s[dev][next_dev];
-        let transfer = self.costs.activation_bytes as f64 / rate + self.cluster.link_latency_s;
-        compute + transfer
+        compute + self.hop_cost(dev, next_dev)
+    }
+
+    /// Per-position linear stage-cost coefficients for `order`:
+    /// `cost(s, b) = a[s]·b + t[s]`.
+    fn order_coeffs(&self, order: &[usize]) -> (Vec<f64>, Vec<f64>) {
+        let u = order.len();
+        let mut a = Vec::with_capacity(u);
+        let mut t = Vec::with_capacity(u);
+        for (pos, &dev) in order.iter().enumerate() {
+            let next = order[(pos + 1) % u];
+            a.push(self.costs.block_fwd_s / self.cluster.devices[dev].compute_speed);
+            t.push(self.hop_cost(dev, next));
+        }
+        (a, t)
     }
 
     fn plan_for_order(&self, order: &[usize]) -> Option<Plan> {
@@ -99,14 +293,16 @@ impl<'a> Planner<'a> {
         if layers < u {
             return None;
         }
-        // Transfer cost depends on the *next* device in ring order; bind it
-        // via position lookup inside the DP cost closure.
-        let cost = |dev: usize, blocks: usize| {
-            let pos = order.iter().position(|&d| d == dev).unwrap();
+        // Transfer cost depends on the *next* device in ring order; the DP
+        // indexes by ring position, so bind device + successor up front —
+        // an O(1) lookup per DP cell instead of the old per-cost
+        // `order.iter().position()` scan.
+        let cost = |pos: usize, blocks: usize| {
+            let dev = order[pos];
             let next = order[(pos + 1) % u];
             self.stage_cost(dev, blocks, next)
         };
-        let (counts, bottleneck) = partition_dp(order, layers, &cost);
+        let (counts, bottleneck) = partition_dp(u, layers, &cost);
         if !bottleneck.is_finite() {
             return None;
         }
@@ -128,8 +324,8 @@ impl<'a> Planner<'a> {
         Some(Plan { assignment, bottleneck_s: bottleneck })
     }
 
-    /// Search ring orders: exhaustive for U ≤ 8, speed-descending greedy
-    /// otherwise.  Returns the best feasible plan.
+    /// Search ring orders: exhaustive for U ≤ [`EXHAUSTIVE_MAX_DEVICES`],
+    /// beam + anneal beyond.  Returns the best feasible plan.
     pub fn plan(&self) -> Result<Plan> {
         let all: Vec<usize> = (0..self.cluster.len()).collect();
         self.plan_for_devices(&all)
@@ -140,10 +336,23 @@ impl<'a> Planner<'a> {
     /// simulator's resource clocks and the rate matrix stay valid); the
     /// resulting ring simply has fewer positions.
     pub fn plan_for_devices(&self, devices: &[usize]) -> Result<Plan> {
-        let n = devices.len();
-        if n == 0 {
+        self.validate_devices(devices)?;
+        if devices.len() <= EXHAUSTIVE_MAX_DEVICES {
+            self.plan_exhaustive(devices)
+        } else {
+            self.plan_beam_anneal(devices)
+        }
+    }
+
+    /// Reject out-of-range ids, duplicate survivor ids, and devices whose
+    /// profiled compute speed is non-finite or non-positive (a NaN speed
+    /// used to panic the speed sort; a duplicate id used to silently plan a
+    /// ring visiting one device twice).
+    fn validate_devices(&self, devices: &[usize]) -> Result<()> {
+        if devices.is_empty() {
             return Err(Error::Plan("no surviving devices to plan over".into()));
         }
+        let mut seen = vec![false; self.cluster.len()];
         for &d in devices {
             if d >= self.cluster.len() {
                 return Err(Error::Plan(format!(
@@ -151,32 +360,225 @@ impl<'a> Planner<'a> {
                     self.cluster.len()
                 )));
             }
+            if seen[d] {
+                return Err(Error::Plan(format!("duplicate device id {d} in survivor set")));
+            }
+            seen[d] = true;
+            let speed = self.cluster.devices[d].compute_speed;
+            if !speed.is_finite() || speed <= 0.0 {
+                return Err(Error::Plan(format!(
+                    "device {d} has unusable compute speed {speed}"
+                )));
+            }
         }
+        Ok(())
+    }
+
+    /// Exhaustive order search — exact, U! permutations.  Public so the
+    /// parity tests (and benches) can compare the heuristic against it on
+    /// small clusters.
+    pub fn plan_exhaustive(&self, devices: &[usize]) -> Result<Plan> {
+        self.validate_devices(devices)?;
         let mut best: Option<Plan> = None;
-        let mut consider = |plan: Option<Plan>| {
-            if let Some(p) = plan {
+        let mut order: Vec<usize> = devices.to_vec();
+        permute(&mut order, 0, &mut |perm| {
+            if let Some(p) = self.plan_for_order(perm) {
                 if best.as_ref().map_or(true, |b| p.bottleneck_s < b.bottleneck_s) {
                     best = Some(p);
                 }
             }
-        };
-        if n <= 8 {
-            let mut order: Vec<usize> = devices.to_vec();
-            permute(&mut order, 0, &mut |perm| consider(self.plan_for_order(perm)));
-        } else {
-            let mut order: Vec<usize> = devices.to_vec();
-            order.sort_by(|&a, &b| {
-                self.cluster.devices[b]
-                    .compute_speed
-                    .partial_cmp(&self.cluster.devices[a].compute_speed)
-                    .unwrap()
-            });
-            consider(self.plan_for_order(&order));
-            consider(self.plan_for_order(&devices.to_vec()));
-        }
+        });
         best.ok_or_else(|| {
             Error::Plan("no feasible layer assignment (memory budgets too small?)".into())
         })
+    }
+
+    /// Beam + simulated-annealing order search with default
+    /// [`SearchParams`] — the U > 8 production path (see module docs).
+    pub fn plan_beam_anneal(&self, devices: &[usize]) -> Result<Plan> {
+        self.plan_beam_anneal_with(devices, &SearchParams::default())
+    }
+
+    pub fn plan_beam_anneal_with(
+        &self,
+        devices: &[usize],
+        params: &SearchParams,
+    ) -> Result<Plan> {
+        self.validate_devices(devices)?;
+        let layers = self.meta.hyper.layers;
+        let n = devices.len();
+        if layers < n {
+            return Err(Error::Plan(format!(
+                "{n} devices but only {layers} blocks — ring cannot fill every position"
+            )));
+        }
+        let eval = |order: &[usize]| -> f64 {
+            let (a, t) = self.order_coeffs(order);
+            min_bottleneck_for_order(&a, &t, layers).unwrap_or(f64::INFINITY)
+        };
+
+        // Stage 0: deterministic seed orders — speed-descending (ties by
+        // id, total order so NaN-free by validation) and the id order.
+        let mut speed_order: Vec<usize> = devices.to_vec();
+        speed_order.sort_by(|&x, &y| {
+            self.cluster.devices[y]
+                .compute_speed
+                .total_cmp(&self.cluster.devices[x].compute_speed)
+                .then(x.cmp(&y))
+        });
+        let mut id_order: Vec<usize> = devices.to_vec();
+        id_order.sort_unstable();
+
+        // Stage 1: beam search over partial orders.
+        let beamed = self.beam_orders(devices, &speed_order, params.beam_width.max(1));
+
+        // Candidate pool: scored, deduped, deterministic order.
+        let mut candidates: Vec<(f64, Vec<usize>)> = Vec::new();
+        let mut push = |cands: &mut Vec<(f64, Vec<usize>)>, order: Vec<usize>, score: f64| {
+            if !cands.iter().any(|(_, o)| *o == order) {
+                cands.push((score, order));
+            }
+        };
+        push(&mut candidates, speed_order.clone(), eval(&speed_order));
+        push(&mut candidates, id_order.clone(), eval(&id_order));
+        for order in beamed {
+            let s = eval(&order);
+            push(&mut candidates, order, s);
+        }
+        candidates.sort_by(|x, y| x.0.total_cmp(&y.0).then(x.1.cmp(&y.1)));
+
+        // Stage 2: simulated-annealing refinement from the best candidate.
+        if let Some((start_score, start)) = candidates.first().cloned() {
+            let (best_order, best_score) =
+                self.anneal(start, start_score, params, &eval);
+            push(&mut candidates, best_order, best_score);
+            candidates.sort_by(|x, y| x.0.total_cmp(&y.0).then(x.1.cmp(&y.1)));
+        }
+
+        // Re-plan the best candidates through the exact DP + memory check;
+        // the first feasible one wins (a lower-bottleneck order may be
+        // memory-infeasible while a slightly worse one fits).
+        for (_, order) in candidates.iter().take(params.beam_width.max(4) + 2) {
+            if let Some(plan) = self.plan_for_order(order) {
+                return Ok(plan);
+            }
+        }
+        Err(Error::Plan(
+            "no feasible layer assignment (memory budgets too small?)".into(),
+        ))
+    }
+
+    /// Beam search over partial ring orders (see module docs).  Seeds: the
+    /// `width` fastest devices each start one beam, covering rotations of
+    /// the speed-descending order.
+    fn beam_orders(
+        &self,
+        devices: &[usize],
+        speed_order: &[usize],
+        width: usize,
+    ) -> Vec<Vec<usize>> {
+        let n = devices.len();
+        // Surrogate edge cost: committed pair (a → b) contributes at least
+        // one block of compute on `a` plus the activation hop to `b`.
+        let edge = |a: usize, b: usize| -> f64 {
+            self.costs.block_fwd_s / self.cluster.devices[a].compute_speed
+                + self.hop_cost(a, b)
+        };
+        // Each beam item: (surrogate score, order so far, used flags).
+        let mut beam: Vec<(f64, Vec<usize>, Vec<bool>)> = Vec::new();
+        for &seed_dev in speed_order.iter().take(width) {
+            let mut used = vec![false; self.cluster.len()];
+            used[seed_dev] = true;
+            beam.push((0.0, vec![seed_dev], used));
+        }
+        for _level in 1..n {
+            let mut next: Vec<(f64, Vec<usize>, Vec<bool>)> = Vec::new();
+            for (score, order, used) in &beam {
+                let last = *order.last().unwrap();
+                for &d in devices {
+                    if used[d] {
+                        continue;
+                    }
+                    let s = score.max(edge(last, d));
+                    let mut o = order.clone();
+                    o.push(d);
+                    let mut u = used.clone();
+                    u[d] = true;
+                    next.push((s, o, u));
+                }
+            }
+            next.sort_by(|x, y| x.0.total_cmp(&y.0).then(x.1.cmp(&y.1)));
+            next.truncate(width);
+            beam = next;
+        }
+        // Close the ring (last → first edge) before final ranking.
+        let mut complete: Vec<(f64, Vec<usize>)> = beam
+            .into_iter()
+            .map(|(score, order, _)| {
+                let s = score.max(edge(*order.last().unwrap(), order[0]));
+                (s, order)
+            })
+            .collect();
+        complete.sort_by(|x, y| x.0.total_cmp(&y.0).then(x.1.cmp(&y.1)));
+        complete.into_iter().map(|(_, o)| o).collect()
+    }
+
+    /// Seed-deterministic simulated annealing over ring orders: pair-swap
+    /// and segment-reverse moves, geometric cooling (see module docs).
+    fn anneal(
+        &self,
+        start: Vec<usize>,
+        start_score: f64,
+        params: &SearchParams,
+        eval: &dyn Fn(&[usize]) -> f64,
+    ) -> (Vec<usize>, f64) {
+        let n = start.len();
+        if n < 2 || params.anneal_iters == 0 {
+            return (start, start_score);
+        }
+        let mut rng = Rng::new(params.seed);
+        let mut cur = start.clone();
+        let mut cur_score = if start_score.is_finite() { start_score } else { eval(&cur) };
+        let mut best = cur.clone();
+        let mut best_score = cur_score;
+        let t0 = (0.2 * cur_score).max(1e-12);
+        let t_end = 1e-4 * t0;
+        let decay = (t_end / t0).powf(1.0 / params.anneal_iters as f64);
+        let mut temp = t0;
+        for _ in 0..params.anneal_iters {
+            let i = rng.next_below(n);
+            let mut j = rng.next_below(n);
+            if i == j {
+                j = (j + 1) % n;
+            }
+            let (lo, hi) = if i < j { (i, j) } else { (j, i) };
+            let swap = rng.next_below(2) == 0;
+            if swap {
+                cur.swap(lo, hi);
+            } else {
+                cur[lo..=hi].reverse();
+            }
+            let score = eval(&cur);
+            let delta = score - cur_score;
+            let accept = delta < 0.0
+                || (temp > 0.0 && rng.next_f64() < (-delta / temp).exp());
+            if accept {
+                cur_score = score;
+                if score < best_score {
+                    best_score = score;
+                    best = cur.clone();
+                }
+            } else {
+                // Undo the move.
+                if swap {
+                    cur.swap(lo, hi);
+                } else {
+                    cur[lo..=hi].reverse();
+                }
+            }
+            temp *= decay;
+        }
+        (best, best_score)
     }
 
     /// Baseline for the ablation bench: uniform split in id order.
@@ -312,6 +714,29 @@ mod tests {
     }
 
     #[test]
+    fn rejects_duplicate_survivor_ids() {
+        let m = meta(8);
+        let cl = ClusterConfig::homogeneous(3, 1e9);
+        let p = Planner::new(&m, &cl, costs());
+        assert!(p.plan_for_devices(&[0, 0, 1]).is_err());
+        assert!(p.plan_for_devices(&[1, 1]).is_err());
+    }
+
+    #[test]
+    fn nan_compute_speed_is_an_error_not_a_panic() {
+        let m = meta(12);
+        let mut cl = ClusterConfig::homogeneous(10, 1e9); // > 8: heuristic path
+        cl.devices[3].compute_speed = f64::NAN;
+        let p = Planner::new(&m, &cl, costs());
+        assert!(p.plan().is_err());
+        let mut cl2 = ClusterConfig::homogeneous(3, 1e9);
+        cl2.devices[1].compute_speed = f64::NAN;
+        let m2 = meta(8);
+        let p2 = Planner::new(&m2, &cl2, costs());
+        assert!(p2.plan_for_devices(&[0, 1, 2]).is_err());
+    }
+
+    #[test]
     fn infeasible_when_fewer_blocks_than_devices() {
         let m = meta(2);
         let cl = ClusterConfig::homogeneous(4, 1e9);
@@ -331,5 +756,70 @@ mod tests {
         let pos0 = plan.assignment.position_of_device(0).unwrap();
         let counts = plan.assignment.counts();
         assert_eq!(counts[pos0], 2, "slow device should get 2 of 6: {counts:?}");
+    }
+
+    #[test]
+    fn fast_evaluator_matches_partition_dp() {
+        // The bisection evaluator and the DP must agree on the optimal
+        // bottleneck for arbitrary fixed orders.
+        let m = meta(13);
+        let mut cl = ClusterConfig::homogeneous(5, 25e6);
+        let speeds = [0.11, 0.05, 0.09, 0.14, 0.07];
+        for (d, s) in cl.devices.iter_mut().zip(speeds) {
+            d.compute_speed = s;
+        }
+        let p = Planner::new(&m, &cl, costs());
+        for order in [vec![0, 1, 2, 3, 4], vec![4, 2, 0, 3, 1], vec![3, 0, 4, 1, 2]] {
+            let (a, t) = p.order_coeffs(&order);
+            let fast = min_bottleneck_for_order(&a, &t, 13).unwrap();
+            let cost = |pos: usize, blocks: usize| {
+                p.stage_cost(order[pos], blocks, order[(pos + 1) % order.len()])
+            };
+            let (_, dp) = partition_dp(order.len(), 13, &cost);
+            assert!(
+                (fast - dp).abs() <= 1e-9 * dp.max(1e-12),
+                "order {order:?}: fast {fast} vs dp {dp}"
+            );
+        }
+    }
+
+    #[test]
+    fn fast_evaluator_survives_degenerate_homogeneous_costs() {
+        // Regression: with identical stages and near-zero transfer terms
+        // the binding stage's cap `(hi - t)/a` used to round just below
+        // the witness block count, declaring a trivially feasible order
+        // infeasible (every candidate then scored infinity).
+        let v = min_bottleneck_for_order(&[1.0, 1.0], &[1e-16, 1e-16], 2).unwrap();
+        assert!((v - 1.0).abs() < 1e-9, "{v}");
+        // Same path end-to-end on a homogeneous, zero-latency cluster.
+        let m = meta(8);
+        let mut cl = ClusterConfig::homogeneous(4, 25e6);
+        cl.link_latency_s = 0.0;
+        let p = Planner::new(&m, &cl, costs());
+        let ba = p.plan_beam_anneal(&[0, 1, 2, 3]).unwrap();
+        let ex = p.plan_exhaustive(&[0, 1, 2, 3]).unwrap();
+        assert!(
+            (ba.bottleneck_s - ex.bottleneck_s).abs() <= 1e-9 * ex.bottleneck_s,
+            "beam {} vs exhaustive {}",
+            ba.bottleneck_s,
+            ex.bottleneck_s
+        );
+    }
+
+    #[test]
+    fn beam_anneal_plans_a_large_cluster() {
+        let m = meta(48);
+        let cl = ClusterConfig::synthetic(24, 7, 0.6);
+        let plan = Planner::new(&m, &cl, costs()).plan().unwrap();
+        plan.assignment.validate(48).unwrap();
+        assert_eq!(plan.assignment.num_positions(), 24);
+        assert!(plan.bottleneck_s.is_finite() && plan.bottleneck_s > 0.0);
+        // Deterministic: planning twice gives the identical assignment.
+        let again = Planner::new(&m, &cl, costs()).plan().unwrap();
+        assert_eq!(plan.assignment, again.assignment);
+        assert_eq!(plan.bottleneck_s.to_bits(), again.bottleneck_s.to_bits());
+        // And it should beat (or match) the naive uniform id-order split.
+        let uni = Planner::new(&m, &cl, costs()).uniform_plan().unwrap();
+        assert!(plan.bottleneck_s <= uni.bottleneck_s + 1e-12);
     }
 }

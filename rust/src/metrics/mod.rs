@@ -203,7 +203,11 @@ pub struct ScenarioDeltaRow {
     pub scenario: String,
     pub makespan_s: f64,
     pub baseline_makespan_s: f64,
-    /// Mean utilization over surviving devices.
+    /// Window-weighted mean utilization of active capacity (per-chunk
+    /// busy/window, weighted by window length — see
+    /// [`ScenarioRun::mean_active_utilization`]).  The old surviving-device
+    /// busy/global-makespan ratio under-reported every chunk after the
+    /// first and skewed this table.
     pub utilization: f64,
     pub baseline_utilization: f64,
     pub replans: usize,
@@ -217,8 +221,8 @@ impl ScenarioDeltaRow {
             scenario: run.scenario.clone(),
             makespan_s: run.makespan_s,
             baseline_makespan_s: baseline.makespan_s,
-            utilization: run.mean_surviving_utilization(),
-            baseline_utilization: baseline.mean_surviving_utilization(),
+            utilization: run.mean_active_utilization(),
+            baseline_utilization: baseline.mean_active_utilization(),
             replans: run.replans,
             dropped: run.dropped.len(),
         }
@@ -297,6 +301,8 @@ mod tests {
             device_busy: vec![busy, busy],
             link_bytes: BTreeMap::new(),
             chunk_makespans: vec![makespan],
+            chunk_windows: vec![makespan],
+            chunk_utilizations: vec![busy / makespan],
             chunk_task_counts: vec![1],
             starts: vec![0.0],
             finishes: vec![makespan],
@@ -314,6 +320,21 @@ mod tests {
         assert!((row.utilization - 0.6).abs() < 1e-9); // 9/15
         assert!((row.baseline_utilization - 0.8).abs() < 1e-9);
         assert!((row.utilization_delta_points() + 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn delta_table_weighs_chunks_by_their_own_windows() {
+        // Two chunks: a fully-busy 2s window then a fully-busy 8s window.
+        // The window-weighted mean is 1.0; the old global ratio would have
+        // divided the first chunk's busy time by the 10s makespan.
+        let mut r = run(10.0, 10.0, 0);
+        r.chunk_windows = vec![2.0, 8.0];
+        r.chunk_utilizations = vec![1.0, 1.0];
+        r.chunk_makespans = vec![2.0, 10.0];
+        assert!((r.mean_active_utilization() - 1.0).abs() < 1e-12);
+        // Half-idle later window drags the mean by its weight: (2·1 + 8·0.5)/10.
+        r.chunk_utilizations = vec![1.0, 0.5];
+        assert!((r.mean_active_utilization() - 0.6).abs() < 1e-12);
     }
 
     #[test]

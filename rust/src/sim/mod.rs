@@ -9,6 +9,27 @@
 //! i.e. generation order).  Scheme *semantics* (pause rule, early stop,
 //! in-flight bounds) live entirely in the DAG's dependencies — the
 //! simulator never special-cases a scheme.
+//!
+//! ## Dispatch data structure (heap, O(T log T))
+//!
+//! [`Simulator::run`] keeps the ready set in a binary min-heap keyed by
+//! `(feasible start, task id)` — the same total order the policy above
+//! defines.  Keys go stale when a resource clock advances after the entry
+//! was pushed, so dispatch re-keys lazily: pop the minimum, recompute its
+//! true feasible start, and re-insert if the key was stale.  The invariants
+//! that make this byte-identical to a full rescan of the ready list:
+//!
+//! * resource clocks and the release floor are monotone — a heap key can
+//!   only *underestimate* a task's true feasible start, never overestimate;
+//! * a task's `ready_time` (max dep finish) is final before it is pushed
+//!   (all deps completed), so it never contributes staleness;
+//! * each task has exactly one live heap entry (pop-then-reinsert), so a
+//!   popped entry whose recomputed start equals its key is the true
+//!   minimum of the current ready set under `(start, id)`.
+//!
+//! The greedy O(T·R) rescan is retained as
+//! [`Simulator::run_reference`] — the executable specification the
+//! differential tests compare against, byte for byte.
 
 pub mod lut;
 pub mod scenario;
@@ -16,34 +37,84 @@ pub mod scenario;
 pub use lut::CostLut;
 pub use scenario::{Scenario, ScenarioEvent, ScenarioRun};
 
-use std::collections::HashMap;
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, HashMap};
 
 use crate::config::ClusterConfig;
 use crate::error::{Error, Result};
 use crate::pipeline::{Kind, Resource, Task, TaskId};
 
-/// Simulation output.
+/// Simulation output for one DAG chunk.
 #[derive(Debug, Clone)]
 pub struct SimReport {
     /// Finish time (s) per task id.
     pub finish: Vec<f64>,
     /// Start time (s) per task id.
     pub start: Vec<f64>,
-    /// Makespan: last finish time.
+    /// Makespan: the simulator's *global* clock after this chunk (absolute,
+    /// includes every earlier chunk's time).
     pub makespan: f64,
-    /// Per-device busy seconds (compute only).
+    /// Clock at which this chunk was released (`Simulator::now` when `run`
+    /// was called).
+    pub release: f64,
+    /// This chunk's own scheduling window, release → last finish (0 for an
+    /// empty chunk).  Utilization denominators use this, not the global
+    /// clock: dividing a later chunk's busy time by the absolute makespan
+    /// under-reports every chunk after the first.
+    pub window_s: f64,
+    /// Per-device busy seconds (compute only) within this chunk.
     pub device_busy: Vec<f64>,
     /// Total bytes moved per directed link.
     pub link_bytes: HashMap<(usize, usize), usize>,
 }
 
 impl SimReport {
-    /// Device utilization over the makespan.
+    /// Device utilization over this chunk's own window (release → last
+    /// finish).  For a single-chunk simulation from t = 0 this equals the
+    /// old busy/makespan ratio.
     pub fn utilization(&self) -> Vec<f64> {
+        self.device_busy
+            .iter()
+            .map(|&b| if self.window_s > 0.0 { b / self.window_s } else { 0.0 })
+            .collect()
+    }
+
+    /// Device utilization over the *global* clock — the pre-fix semantics,
+    /// kept for consumers that want busy time amortized over the whole run.
+    pub fn global_utilization(&self) -> Vec<f64> {
         self.device_busy
             .iter()
             .map(|&b| if self.makespan > 0.0 { b / self.makespan } else { 0.0 })
             .collect()
+    }
+}
+
+/// Heap key for the ready queue: ascending `(feasible start, task id)` —
+/// the same total order the greedy rescan uses, so dispatch decisions are
+/// identical.  `Ord` is reversed because [`BinaryHeap`] is a max-heap.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct ReadyKey {
+    start: f64,
+    id: TaskId,
+}
+
+impl Eq for ReadyKey {}
+
+impl Ord for ReadyKey {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed: smallest (start, id) surfaces at the heap top.  Start
+        // times are finite (validated cluster ⇒ finite durations), so
+        // total_cmp agrees with the arithmetic order.
+        other
+            .start
+            .total_cmp(&self.start)
+            .then_with(|| other.id.cmp(&self.id))
+    }
+}
+
+impl PartialOrd for ReadyKey {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
     }
 }
 
@@ -66,6 +137,9 @@ pub struct Simulator {
     perturb: scenario::Compiled,
     /// Fail-stopped devices (set via [`Simulator::drop_device`]).
     dead: Vec<bool>,
+    /// Cluster rates/speeds checked once (first chunk); a zero, negative or
+    /// NaN rate would otherwise surface as an inf/NaN makespan.
+    validated: bool,
     pub now: f64,
 }
 
@@ -79,6 +153,7 @@ impl Simulator {
             lut,
             device_free: vec![0.0; n],
             link_free: HashMap::new(),
+            validated: false,
             now: 0.0,
         }
     }
@@ -111,7 +186,8 @@ impl Simulator {
         !self.dead[device]
     }
 
-    /// Nominal duration (no scenario windows applied).
+    /// Nominal duration (no scenario windows applied).  Safe to divide by
+    /// the link rate: [`Simulator::check_chunk`] validated the cluster.
     fn duration(&self, task: &Task) -> f64 {
         match task.kind {
             Kind::Compute { device, op } => {
@@ -138,8 +214,26 @@ impl Simulator {
         }
     }
 
-    /// Execute one DAG chunk; resource clocks persist across calls.
-    pub fn run(&mut self, tasks: &[Task]) -> Result<SimReport> {
+    /// Earliest start of `task` given its dep-readiness, its resource's
+    /// clock, and the chunk release floor.  Both dispatch implementations
+    /// call exactly this, so their arithmetic is identical.
+    fn feasible_start(&self, task: &Task, ready_time: f64, release: f64) -> f64 {
+        let res_free = match task.resource() {
+            Resource::Device(d) => self.device_free[d],
+            Resource::Link(a, b) => *self.link_free.get(&(a, b)).unwrap_or(&0.0),
+        };
+        res_free.max(ready_time).max(release)
+    }
+
+    /// Chunk admission: cluster validity (once), DAG validity, and no task
+    /// touching a fail-stopped device.
+    fn check_chunk(&mut self, tasks: &[Task]) -> Result<()> {
+        if !self.validated {
+            self.cluster.validate().map_err(|e| {
+                Error::Schedule(format!("cluster rejected by the simulator: {e}"))
+            })?;
+            self.validated = true;
+        }
         crate::pipeline::validate_dag(tasks)?;
         for t in tasks {
             let touched_dead = match t.kind {
@@ -153,6 +247,14 @@ impl Simulator {
                 )));
             }
         }
+        Ok(())
+    }
+
+    /// Execute one DAG chunk; resource clocks persist across calls.
+    /// Dispatch is the lazily re-keyed binary heap described in the module
+    /// docs — O(T log T) over the chunk's T tasks.
+    pub fn run(&mut self, tasks: &[Task]) -> Result<SimReport> {
+        self.check_chunk(tasks)?;
         // Release floor: this chunk was handed to the cluster at the
         // current clock; nothing in it may start earlier.
         let release = self.now;
@@ -166,37 +268,38 @@ impl Simulator {
                 dependents[d].push(t.id);
             }
         }
-        // ready_time[i] = max over scheduled deps' finishes.
+        // ready_time[i] = max over scheduled deps' finishes; final by the
+        // time task i enters the heap.
         let mut ready_time = vec![0.0f64; n];
-        let mut ready: Vec<TaskId> = (0..n).filter(|&i| indeg[i] == 0).collect();
         let mut device_busy = vec![0.0; self.cluster.len()];
         let mut link_bytes: HashMap<(usize, usize), usize> = HashMap::new();
         let mut scheduled = 0usize;
 
+        let mut heap: BinaryHeap<ReadyKey> = BinaryHeap::with_capacity(n);
+        for (i, t) in tasks.iter().enumerate() {
+            if indeg[i] == 0 {
+                heap.push(ReadyKey {
+                    start: self.feasible_start(t, ready_time[i], release),
+                    id: i,
+                });
+            }
+        }
+
         while scheduled < n {
-            if ready.is_empty() {
+            let Some(key) = heap.pop() else {
                 return Err(Error::Schedule(
                     "deadlock: no ready tasks but DAG unfinished".into(),
                 ));
-            }
-            // Pick the ready task with the earliest feasible start
-            // (tie-break: lowest id = generation order).
-            let mut best: Option<(f64, usize, usize)> = None; // (start, id, ready_idx)
-            for (ri, &tid) in ready.iter().enumerate() {
-                let t = &tasks[tid];
-                let res_free = match t.resource() {
-                    Resource::Device(d) => self.device_free[d],
-                    Resource::Link(a, b) => *self.link_free.get(&(a, b)).unwrap_or(&0.0),
-                };
-                let s = res_free.max(ready_time[tid]).max(release);
-                let key = (s, tid, ri);
-                if best.map_or(true, |(bs, bid, _)| (s, tid) < (bs, bid)) {
-                    best = Some(key);
-                }
-            }
-            let (s, tid, ri) = best.unwrap();
-            ready.swap_remove(ri);
+            };
+            let tid = key.id;
             let t = &tasks[tid];
+            let s = self.feasible_start(t, ready_time[tid], release);
+            if s > key.start {
+                // Stale key: the resource clock advanced after this entry
+                // was pushed.  Re-insert at the true feasible start.
+                heap.push(ReadyKey { start: s, id: tid });
+                continue;
+            }
             let f = self.finish_time(t, s)?;
             start[tid] = s;
             finish[tid] = f;
@@ -217,6 +320,87 @@ impl Simulator {
                 ready_time[dep] = ready_time[dep].max(f);
                 indeg[dep] -= 1;
                 if indeg[dep] == 0 {
+                    heap.push(ReadyKey {
+                        start: self.feasible_start(&tasks[dep], ready_time[dep], release),
+                        id: dep,
+                    });
+                }
+            }
+        }
+
+        Ok(SimReport {
+            makespan: self.now,
+            release,
+            window_s: self.now - release,
+            finish,
+            start,
+            device_busy,
+            link_bytes,
+        })
+    }
+
+    /// The seed O(T·R) greedy dispatch — rescans the whole ready list every
+    /// step.  Kept as the executable specification of the scheduling
+    /// policy: [`Simulator::run`] must produce byte-identical reports
+    /// (`tests/scale_and_robustness.rs` compares them on random DAGs and on
+    /// the determinism-golden scenarios).  Not for production use.
+    #[doc(hidden)]
+    pub fn run_reference(&mut self, tasks: &[Task]) -> Result<SimReport> {
+        self.check_chunk(tasks)?;
+        let release = self.now;
+        let n = tasks.len();
+        let mut finish = vec![f64::NAN; n];
+        let mut start = vec![f64::NAN; n];
+        let mut indeg: Vec<usize> = tasks.iter().map(|t| t.deps.len()).collect();
+        let mut dependents: Vec<Vec<TaskId>> = vec![Vec::new(); n];
+        for t in tasks {
+            for &d in &t.deps {
+                dependents[d].push(t.id);
+            }
+        }
+        let mut ready_time = vec![0.0f64; n];
+        let mut ready: Vec<TaskId> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut device_busy = vec![0.0; self.cluster.len()];
+        let mut link_bytes: HashMap<(usize, usize), usize> = HashMap::new();
+        let mut scheduled = 0usize;
+
+        while scheduled < n {
+            if ready.is_empty() {
+                return Err(Error::Schedule(
+                    "deadlock: no ready tasks but DAG unfinished".into(),
+                ));
+            }
+            // Pick the ready task with the earliest feasible start
+            // (tie-break: lowest id = generation order).
+            let mut best: Option<(f64, usize, usize)> = None; // (start, id, ready_idx)
+            for (ri, &tid) in ready.iter().enumerate() {
+                let s = self.feasible_start(&tasks[tid], ready_time[tid], release);
+                if best.map_or(true, |(bs, bid, _)| (s, tid) < (bs, bid)) {
+                    best = Some((s, tid, ri));
+                }
+            }
+            let (s, tid, ri) = best.unwrap();
+            ready.swap_remove(ri);
+            let t = &tasks[tid];
+            let f = self.finish_time(t, s)?;
+            start[tid] = s;
+            finish[tid] = f;
+            match t.kind {
+                Kind::Compute { device, .. } => {
+                    self.device_free[device] = f;
+                    device_busy[device] += f - s;
+                }
+                Kind::Transfer { from, to, bytes } => {
+                    self.link_free.insert((from, to), f);
+                    *link_bytes.entry((from, to)).or_insert(0) += bytes;
+                }
+            }
+            self.now = self.now.max(f);
+            scheduled += 1;
+            for &dep in &dependents[tid] {
+                ready_time[dep] = ready_time[dep].max(f);
+                indeg[dep] -= 1;
+                if indeg[dep] == 0 {
                     ready.push(dep);
                 }
             }
@@ -224,6 +408,8 @@ impl Simulator {
 
         Ok(SimReport {
             makespan: self.now,
+            release,
+            window_s: self.now - release,
             finish,
             start,
             device_busy,
@@ -338,6 +524,41 @@ mod tests {
     }
 
     #[test]
+    fn later_chunk_utilization_uses_its_own_window() {
+        // Two equal chunks on one device: both are fully busy inside their
+        // windows, so both must report utilization 1.0.  (The seed divided
+        // the second chunk's busy time by the *global* clock — 0.5.)
+        let mut s = sim(1);
+        let r1 = s.run(&[compute(0, 0, 2, vec![])]).unwrap();
+        let r2 = s.run(&[compute(0, 0, 2, vec![])]).unwrap();
+        assert!((r1.utilization()[0] - 1.0).abs() < 1e-9);
+        assert!((r2.utilization()[0] - 1.0).abs() < 1e-9, "{}", r2.utilization()[0]);
+        assert!((r2.release - r1.makespan).abs() < 1e-12);
+        assert!((r2.window_s - (r2.makespan - r2.release)).abs() < 1e-12);
+        // The global-clock ratio is still available, and smaller.
+        assert!(r2.global_utilization()[0] < r2.utilization()[0]);
+    }
+
+    #[test]
+    fn zero_or_negative_link_rate_is_rejected_up_front() {
+        let mut cl = ClusterConfig::homogeneous(2, 1000.0);
+        cl.rate_bytes_per_s[0][1] = 0.0;
+        let mut s = Simulator::new(cl, CostLut::analytic(&meta(), 1.0));
+        let err = s.run(&[compute(0, 0, 1, vec![])]).unwrap_err();
+        assert!(matches!(err, Error::Schedule(_)), "got {err}");
+
+        let mut cl2 = ClusterConfig::homogeneous(2, 1000.0);
+        cl2.rate_bytes_per_s[1][0] = -5.0;
+        let mut s2 = Simulator::new(cl2, CostLut::analytic(&meta(), 1.0));
+        assert!(s2.run(&[compute(0, 0, 1, vec![])]).is_err());
+
+        let mut cl3 = ClusterConfig::homogeneous(2, 1000.0);
+        cl3.devices[1].compute_speed = f64::NAN;
+        let mut s3 = Simulator::new(cl3, CostLut::analytic(&meta(), 1.0));
+        assert!(s3.run(&[compute(0, 0, 1, vec![])]).is_err());
+    }
+
+    #[test]
     fn speed_difference_shows_in_makespan() {
         let mut cl = ClusterConfig::homogeneous(2, 1e9);
         cl.devices[1].compute_speed = 0.5;
@@ -435,5 +656,26 @@ mod tests {
         // The surviving device keeps working, with clocks intact.
         let r = s.run(&[compute(0, 1, 1, vec![])]).unwrap();
         assert!(r.start[0] >= 0.0);
+    }
+
+    #[test]
+    fn heap_and_reference_dispatch_agree_on_a_contended_dag() {
+        // A small DAG with resource contention and cross-device deps; the
+        // heavier differential coverage lives in the integration battery.
+        let tasks = vec![
+            compute(0, 0, 3, vec![]),
+            compute(1, 1, 1, vec![]),
+            compute(2, 0, 1, vec![1]),
+            compute(3, 1, 2, vec![0]),
+            compute(4, 0, 1, vec![2, 3]),
+        ];
+        let mut a = sim(2);
+        let mut b = sim(2);
+        let ra = a.run(&tasks).unwrap();
+        let rb = b.run_reference(&tasks).unwrap();
+        assert_eq!(ra.start, rb.start);
+        assert_eq!(ra.finish, rb.finish);
+        assert_eq!(ra.device_busy, rb.device_busy);
+        assert_eq!(ra.makespan.to_bits(), rb.makespan.to_bits());
     }
 }

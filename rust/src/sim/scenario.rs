@@ -8,7 +8,11 @@
 //!   co-tenant interference, battery-saver governors);
 //! * [`ScenarioEvent::LinkDegrade`] — the directed link `from → to` runs at
 //!   `factor ×` its configured rate `R_{u,u'}` during the window
-//!   (`factor = 0` models a full outage: transfers stall until it lifts);
+//!   (`factor = 0` models a full outage: transfers stall until it lifts).
+//!   The factor scales a transfer's whole occupancy — byte time *and* the
+//!   per-message `link_latency_s` — modelling congestion that delays small
+//!   control messages too; the uniform-slowdown property test pins this
+//!   (`factor f` everywhere ⇒ exactly `1/f` the makespan);
 //! * [`ScenarioEvent::Dropout`] — a device fail-stops at time `at`.  The
 //!   simulator refuses further tasks on it; the training driver detects the
 //!   failure at the next round boundary, re-plans the layer assignment over
@@ -430,6 +434,14 @@ pub struct ScenarioRun {
     pub link_bytes: BTreeMap<(usize, usize), usize>,
     /// Absolute completion time of each simulated chunk (one per round).
     pub chunk_makespans: Vec<f64>,
+    /// Per-chunk scheduling window (release → last finish), one per round.
+    /// Windows tile the timeline: they sum to the final makespan.
+    pub chunk_windows: Vec<f64>,
+    /// Per-chunk mean utilization over the devices alive *during* that
+    /// chunk (busy seconds / window).  This is the per-chunk-window metric
+    /// ISSUE 2 asked for: a later chunk's utilization is measured against
+    /// its own window, never against the global clock.
+    pub chunk_utilizations: Vec<f64>,
     /// Task count per chunk (delimits `starts`/`finishes` per round).
     pub chunk_task_counts: Vec<usize>,
     /// Task start/finish times, concatenated in chunk emission order.
@@ -442,7 +454,8 @@ pub struct ScenarioRun {
 }
 
 impl ScenarioRun {
-    /// Busy fraction per device over the makespan.
+    /// Busy fraction per device over the *global* makespan (a whole-run
+    /// average; for the per-chunk-window view use `chunk_utilizations`).
     pub fn utilization(&self) -> Vec<f64> {
         self.device_busy
             .iter()
@@ -454,20 +467,23 @@ impl ScenarioRun {
         self.link_bytes.values().sum()
     }
 
-    /// Mean utilization over devices that survived the whole run.
-    pub fn mean_surviving_utilization(&self) -> f64 {
-        let util = self.utilization();
-        let surviving: Vec<f64> = util
-            .iter()
-            .enumerate()
-            .filter(|(d, _)| !self.dropped.contains(d))
-            .map(|(_, &u)| u)
-            .collect();
-        if surviving.is_empty() {
-            0.0
-        } else {
-            surviving.iter().sum::<f64>() / surviving.len() as f64
+    /// Window-weighted mean utilization of *active* capacity: each chunk
+    /// contributes its alive-device mean busy/window ratio, weighted by its
+    /// window length.  Unlike the old surviving-device busy/makespan ratio
+    /// this neither dilutes a later chunk by earlier chunks' elapsed time
+    /// nor counts a dead device's post-mortem idleness — the metrics skew
+    /// ISSUE 2 names.  [`crate::metrics::ScenarioDeltaTable`] reports this.
+    pub fn mean_active_utilization(&self) -> f64 {
+        let total: f64 = self.chunk_windows.iter().sum();
+        if total <= 0.0 {
+            return 0.0;
         }
+        self.chunk_utilizations
+            .iter()
+            .zip(&self.chunk_windows)
+            .map(|(u, w)| u * w)
+            .sum::<f64>()
+            / total
     }
 
     /// Deterministic textual fingerprint: identical (seed, scenario, scheme)
@@ -493,6 +509,10 @@ impl ScenarioRun {
         let _ = write!(s, "];chunks=[");
         for (i, m) in self.chunk_makespans.iter().enumerate() {
             let _ = write!(s, "{}{m}", if i > 0 { "," } else { "" });
+        }
+        let _ = write!(s, "];windows=[");
+        for (i, w) in self.chunk_windows.iter().enumerate() {
+            let _ = write!(s, "{}{w}", if i > 0 { "," } else { "" });
         }
         let _ = write!(s, "];links=[");
         for (i, ((u, v), bytes)) in self.link_bytes.iter().enumerate() {

@@ -437,6 +437,8 @@ pub fn simulate_scenario(
     let mut device_busy = vec![0.0; cluster.len()];
     let mut link_bytes: BTreeMap<(usize, usize), usize> = BTreeMap::new();
     let mut chunk_makespans = Vec::with_capacity(training.rounds);
+    let mut chunk_windows = Vec::with_capacity(training.rounds);
+    let mut chunk_utilizations = Vec::with_capacity(training.rounds);
     let mut chunk_task_counts = Vec::with_capacity(training.rounds);
     let mut starts = Vec::new();
     let mut finishes = Vec::new();
@@ -481,6 +483,17 @@ pub fn simulate_scenario(
         }
         chunk_makespans.push(sim.now);
         chunk_task_counts.push(tasks.len());
+        // Per-chunk utilization over this chunk's own window (release →
+        // last finish) and the devices alive while it ran — dividing by the
+        // global clock would under-report every chunk after the first.
+        chunk_windows.push(report.window_s);
+        let chunk_util = if report.window_s > 0.0 && !alive.is_empty() {
+            alive.iter().map(|&d| report.device_busy[d]).sum::<f64>()
+                / (report.window_s * alive.len() as f64)
+        } else {
+            0.0
+        };
+        chunk_utilizations.push(chunk_util);
         starts.extend_from_slice(&report.start);
         finishes.extend_from_slice(&report.finish);
 
@@ -518,6 +531,8 @@ pub fn simulate_scenario(
         device_busy,
         link_bytes,
         chunk_makespans,
+        chunk_windows,
+        chunk_utilizations,
         chunk_task_counts,
         starts,
         finishes,

@@ -1,0 +1,417 @@
+//! ISSUE 2 battery: the scale subsystem and the robustness fixes it rode in
+//! with.
+//!
+//! * planner parity — the beam + anneal search must match the exhaustive
+//!   search's bottleneck on every cluster small enough to enumerate, both
+//!   for full clusters and post-dropout survivor subsets;
+//! * heap-dispatch differential — [`Simulator::run`] must produce
+//!   byte-identical `SimReport`s to the retained greedy-rescan reference
+//!   (`run_reference`) on random chunked DAGs and on a golden composite
+//!   scenario with scenario windows, release floors and a mid-run dropout;
+//! * regressions for the three ISSUE 2 bugfixes: per-chunk utilization
+//!   windows, up-front cluster validation (no inf/NaN makespans), and
+//!   duplicate/NaN-speed survivor rejection.
+
+use ringada::config::{ClusterConfig, Scheme, TrainingConfig};
+use ringada::coordinator::{Coordinator, Planner, PlannerCosts};
+use ringada::model::manifest::ModelHyper;
+use ringada::model::ModelMeta;
+use ringada::pipeline::{ScheduleBuilder, Task, WireSizes};
+use ringada::prop_check;
+use ringada::runtime::Rng;
+use ringada::sim::{CostLut, Scenario, ScenarioEvent, SimReport, Simulator};
+use ringada::train::simulate_scenario;
+use ringada::util::prop::forall;
+use ringada::Error;
+
+fn meta(layers: usize) -> ModelMeta {
+    ModelMeta::from_hyper(ModelHyper {
+        name: "scale".into(),
+        vocab: 256,
+        hidden: 32,
+        layers,
+        heads: 4,
+        ffn: 64,
+        bottleneck: 8,
+        seq: 16,
+        batch: 2,
+        init_std: 0.02,
+    })
+}
+
+fn costs() -> PlannerCosts {
+    PlannerCosts { block_fwd_s: 0.010, activation_bytes: 32768 }
+}
+
+/// Heterogeneous cluster with jittered speeds *and* link rates — the
+/// adversarial setting for ring-order search (both terms of the stage cost
+/// vary per device/edge).
+fn random_cluster(rng: &mut Rng, n: usize) -> ClusterConfig {
+    let mut cl = ClusterConfig::homogeneous(n, 25e6);
+    for d in &mut cl.devices {
+        d.compute_speed = 0.05 + 0.1 * rng.next_f64();
+    }
+    for i in 0..n {
+        for j in 0..n {
+            if i != j {
+                cl.rate_bytes_per_s[i][j] = 10e6 + 30e6 * rng.next_f64();
+            }
+        }
+    }
+    cl
+}
+
+// ------------------------------------------------------------- planner
+
+#[test]
+fn prop_beam_anneal_matches_exhaustive_on_small_clusters() {
+    forall(30, |rng| {
+        let n = 2 + rng.next_below(6); // 2..=7
+        let layers = n + rng.next_below(8);
+        let m = meta(layers);
+        let cl = random_cluster(rng, n);
+        let p = Planner::new(&m, &cl, costs());
+        let all: Vec<usize> = (0..n).collect();
+        let ex = p.plan_exhaustive(&all).map_err(|e| e.to_string())?;
+        let ba = p.plan_beam_anneal(&all).map_err(|e| e.to_string())?;
+        prop_check!(
+            (ba.bottleneck_s - ex.bottleneck_s).abs()
+                <= 1e-9 * ex.bottleneck_s.max(1e-12),
+            "beam/anneal {} vs exhaustive {} (n = {n}, layers = {layers})",
+            ba.bottleneck_s,
+            ex.bottleneck_s
+        );
+        // Both plans must be structurally valid and cover every block.
+        ba.assignment.validate(layers).map_err(|e| e.to_string())?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_beam_anneal_matches_exhaustive_on_survivor_subsets() {
+    // The post-dropout re-planning path: survivors keep their original
+    // cluster ids, so the search runs over a sparse id set.
+    forall(15, |rng| {
+        let n = 6 + rng.next_below(4); // cluster size 6..=9
+        let k = 2 + rng.next_below(4); // survivors 2..=5
+        let layers = k + rng.next_below(8);
+        let m = meta(layers);
+        let cl = random_cluster(rng, n);
+        let mut ids: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut ids);
+        let mut subset: Vec<usize> = ids[..k].to_vec();
+        subset.sort_unstable();
+        let p = Planner::new(&m, &cl, costs());
+        let ex = p.plan_exhaustive(&subset).map_err(|e| e.to_string())?;
+        let ba = p.plan_beam_anneal(&subset).map_err(|e| e.to_string())?;
+        prop_check!(
+            (ba.bottleneck_s - ex.bottleneck_s).abs()
+                <= 1e-9 * ex.bottleneck_s.max(1e-12),
+            "subset {subset:?} of {n}: beam/anneal {} vs exhaustive {}",
+            ba.bottleneck_s,
+            ex.bottleneck_s
+        );
+        ba.assignment
+            .validate_for_devices(layers, n)
+            .map_err(|e| e.to_string())?;
+        Ok(())
+    });
+}
+
+#[test]
+fn planner_rejects_duplicate_survivor_ids() {
+    let m = meta(8);
+    let cl = ClusterConfig::homogeneous(4, 25e6);
+    let p = Planner::new(&m, &cl, costs());
+    assert!(p.plan_for_devices(&[0, 0, 1]).is_err());
+    assert!(p.plan_for_devices(&[2, 1, 2]).is_err());
+    assert!(p.plan_for_devices(&[0, 1, 2]).is_ok());
+}
+
+#[test]
+fn planner_errors_on_nan_speed_instead_of_panicking() {
+    let m = meta(24);
+    // > 8 devices: the seed's speed sort on this path `unwrap()`ed a
+    // `partial_cmp` and panicked on NaN.
+    let mut cl = ClusterConfig::synthetic(12, 5, 0.5);
+    cl.devices[7].compute_speed = f64::NAN;
+    let p = Planner::new(&m, &cl, costs());
+    match p.plan() {
+        Err(Error::Plan(msg)) => assert!(msg.contains("speed"), "{msg}"),
+        other => panic!("expected Plan error, got {other:?}"),
+    }
+}
+
+// ----------------------------------------------------- heap differential
+
+fn assert_reports_identical(a: &SimReport, b: &SimReport, ctx: &str) {
+    assert_eq!(a.start, b.start, "{ctx}: start vectors differ");
+    assert_eq!(a.finish, b.finish, "{ctx}: finish vectors differ");
+    assert_eq!(a.device_busy, b.device_busy, "{ctx}: busy vectors differ");
+    assert_eq!(a.link_bytes, b.link_bytes, "{ctx}: link bytes differ");
+    assert_eq!(
+        a.makespan.to_bits(),
+        b.makespan.to_bits(),
+        "{ctx}: makespan differs ({} vs {})",
+        a.makespan,
+        b.makespan
+    );
+    assert_eq!(a.release.to_bits(), b.release.to_bits(), "{ctx}: release differs");
+    assert_eq!(a.window_s.to_bits(), b.window_s.to_bits(), "{ctx}: window differs");
+}
+
+/// Emit `steps` RingAda steps on a fresh builder over `assignment`.
+fn emit_chunk(
+    c: &Coordinator,
+    builder: &mut ScheduleBuilder,
+    steps: usize,
+    round: usize,
+) -> Result<Vec<Task>, String> {
+    let rp = c.round_plan(round).map_err(|e| e.to_string())?;
+    for s in 0..steps {
+        let initiator = rp.initiators[s % rp.initiators.len()];
+        builder.ringada_step(&rp, initiator).map_err(|e| e.to_string())?;
+    }
+    Ok(builder.drain_chunk().0)
+}
+
+#[test]
+fn prop_heap_dispatch_is_byte_identical_to_reference_scan() {
+    forall(25, |rng| {
+        let n = 2 + rng.next_below(4); // 2..=5
+        let layers = n + rng.next_below(6);
+        let m = meta(layers);
+        let cl = random_cluster(rng, n);
+        let assignment = ringada::coordinator::LayerAssignment::uniform(n, layers);
+        let tr = TrainingConfig {
+            rounds: 2,
+            local_iters: 1,
+            unfreeze_interval: 2,
+            initial_depth: 1,
+            ..Default::default()
+        };
+        let c = Coordinator::with_assignment(assignment.clone(), &m, &cl, &tr)
+            .map_err(|e| e.to_string())?;
+        let sizes = WireSizes { activation_bytes: m.activation_bytes(), head_bytes: 64 };
+        let mut builder = ScheduleBuilder::new(assignment, sizes, n);
+
+        // Random slowdown windows make durations start-time dependent, so a
+        // single mis-ordered dispatch decision changes the report.
+        let mut events = Vec::new();
+        for _ in 0..1 + rng.next_below(3) {
+            let t0 = rng.next_f64() * 2.0;
+            events.push(ScenarioEvent::Straggler {
+                device: rng.next_below(n),
+                t_start: t0,
+                t_end: t0 + 0.5 + rng.next_f64() * 3.0,
+                factor: 0.1 + 0.9 * rng.next_f64(),
+            });
+        }
+        let sc = Scenario { name: "slow".into(), events };
+        let lut = CostLut::analytic(&m, 5.0);
+        let mut heap_sim =
+            Simulator::with_scenario(cl, lut, &sc).map_err(|e| e.to_string())?;
+        let mut ref_sim = heap_sim.clone();
+
+        for round in 0..2 {
+            let steps = 1 + rng.next_below(4);
+            let chunk = emit_chunk(&c, &mut builder, steps, round)?;
+            let ra = heap_sim.run(&chunk).map_err(|e| e.to_string())?;
+            let rb = ref_sim.run_reference(&chunk).map_err(|e| e.to_string())?;
+            if ra.start != rb.start
+                || ra.finish != rb.finish
+                || ra.device_busy != rb.device_busy
+                || ra.makespan.to_bits() != rb.makespan.to_bits()
+            {
+                return Err(format!("round {round}: heap and reference reports differ"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn golden_heap_matches_reference_through_windows_and_dropout() {
+    // The determinism-golden shape: scenario windows spanning chunk
+    // boundaries, release floors between chunks, and a mid-run dropout
+    // forcing a survivor-subset chunk — dispatched by both implementations.
+    let layers = 9;
+    let m = meta(layers);
+    let mut rng = Rng::new(0xD0_0D);
+    let cl = {
+        let mut cl = ClusterConfig::homogeneous(3, 25e6);
+        for d in &mut cl.devices {
+            d.compute_speed = 0.05 + 0.1 * rng.next_f64();
+        }
+        cl
+    };
+    let sc = Scenario {
+        name: "golden".into(),
+        events: vec![
+            ScenarioEvent::Straggler { device: 1, t_start: 0.05, t_end: 2.5, factor: 0.3 },
+            ScenarioEvent::LinkDegrade {
+                from: 0,
+                to: 1,
+                t_start: 0.1,
+                t_end: 1.8,
+                factor: 0.2,
+            },
+        ],
+    };
+    let lut = CostLut::analytic(&m, 5.0);
+    let tr = TrainingConfig {
+        rounds: 3,
+        local_iters: 1,
+        unfreeze_interval: 2,
+        initial_depth: 1,
+        ..Default::default()
+    };
+    let sizes = WireSizes { activation_bytes: m.activation_bytes(), head_bytes: 64 };
+    let planner = Planner::new(&m, &cl, costs());
+
+    let mut heap_sim = Simulator::with_scenario(cl.clone(), lut.clone(), &sc).unwrap();
+    let mut ref_sim = heap_sim.clone();
+
+    // Chunks 1–2: the full 3-device ring.
+    let full = planner.plan().unwrap();
+    let c = Coordinator::with_assignment(full.assignment.clone(), &m, &cl, &tr).unwrap();
+    let mut builder = ScheduleBuilder::new(full.assignment, sizes, 3);
+    for round in 0..2 {
+        let chunk = emit_chunk(&c, &mut builder, 2, round).unwrap();
+        let ra = heap_sim.run(&chunk).unwrap();
+        let rb = ref_sim.run_reference(&chunk).unwrap();
+        assert_reports_identical(&ra, &rb, &format!("full-ring chunk {round}"));
+    }
+
+    // Device 2 fail-stops; chunk 3 runs on the survivor subset {0, 1} with
+    // device 2's clock frozen — the release floor must hold in both.
+    heap_sim.drop_device(2);
+    ref_sim.drop_device(2);
+    let sub = planner.plan_for_devices(&[0, 1]).unwrap();
+    let c2 =
+        Coordinator::with_assignment_for_cluster(sub.assignment.clone(), &m, &cl, &tr).unwrap();
+    let mut builder2 = ScheduleBuilder::new(sub.assignment, sizes, 2);
+    let chunk = emit_chunk(&c2, &mut builder2, 2, 2).unwrap();
+    let ra = heap_sim.run(&chunk).unwrap();
+    let rb = ref_sim.run_reference(&chunk).unwrap();
+    assert_reports_identical(&ra, &rb, "survivor chunk");
+    assert!(ra.start.iter().all(|&s| s >= ra.release - 1e-12), "release floor broken");
+}
+
+// --------------------------------------------------------- regressions
+
+#[test]
+fn simulator_rejects_degenerate_rates_instead_of_inf_makespan() {
+    let m = meta(4);
+    let lut = CostLut::analytic(&m, 5.0);
+    let transfer = Task {
+        id: 0,
+        kind: ringada::pipeline::Kind::Transfer { from: 0, to: 1, bytes: 4096 },
+        deps: vec![],
+        step: 0,
+        round: 0,
+    };
+    // Zero rate: the seed returned makespan = inf silently.
+    let mut cl = ClusterConfig::homogeneous(2, 25e6);
+    cl.rate_bytes_per_s[0][1] = 0.0;
+    let mut sim = Simulator::new(cl, lut.clone());
+    match sim.run(std::slice::from_ref(&transfer)) {
+        Err(Error::Schedule(msg)) => assert!(msg.contains("rate"), "{msg}"),
+        other => panic!("expected Schedule error, got {other:?}"),
+    }
+    // Negative and NaN rates are equally rejected.
+    for bad in [-1.0, f64::NAN] {
+        let mut cl = ClusterConfig::homogeneous(2, 25e6);
+        cl.rate_bytes_per_s[0][1] = bad;
+        let mut sim = Simulator::new(cl, lut.clone());
+        assert!(sim.run(std::slice::from_ref(&transfer)).is_err(), "rate {bad}");
+    }
+}
+
+#[test]
+fn scenario_run_reports_per_chunk_windows_that_tile_the_makespan() {
+    let m = meta(10);
+    let cl = ClusterConfig::paper_default();
+    let lut = CostLut::analytic(&m, 5.0);
+    let tr = TrainingConfig {
+        rounds: 5,
+        local_iters: 1,
+        unfreeze_interval: 2,
+        initial_depth: 1,
+        ..Default::default()
+    };
+    let healthy =
+        simulate_scenario(&m, &cl, &tr, Scheme::RingAda, &Scenario::healthy(), &lut).unwrap();
+    assert_eq!(healthy.chunk_windows.len(), tr.rounds);
+    assert_eq!(healthy.chunk_utilizations.len(), tr.rounds);
+    // Windows tile the timeline exactly.
+    let sum: f64 = healthy.chunk_windows.iter().sum();
+    assert!(
+        (sum - healthy.makespan_s).abs() <= 1e-9 * healthy.makespan_s,
+        "windows sum {sum} != makespan {}",
+        healthy.makespan_s
+    );
+    // Per-chunk utilizations are proper fractions and do not decay with
+    // chunk index (the seed bug divided later chunks by the global clock,
+    // which forced exactly that decay).
+    for (k, &u) in healthy.chunk_utilizations.iter().enumerate() {
+        assert!((0.0..=1.0 + 1e-9).contains(&u), "chunk {k} utilization {u}");
+    }
+    let first = healthy.chunk_utilizations[0];
+    let last = *healthy.chunk_utilizations.last().unwrap();
+    assert!(
+        last >= first * 0.5,
+        "later chunks under-reported: first {first} vs last {last}"
+    );
+    let mean = healthy.mean_active_utilization();
+    assert!((0.0..=1.0 + 1e-9).contains(&mean));
+
+    // Under a dropout the dead device's idle tail must not dilute the
+    // active-capacity mean: every post-drop chunk utilization is measured
+    // over survivors only.
+    let sc = Scenario {
+        name: "drop".into(),
+        events: vec![ScenarioEvent::Dropout { device: 1, at: healthy.makespan_s * 0.3 }],
+    };
+    let run = simulate_scenario(&m, &cl, &tr, Scheme::RingAda, &sc, &lut).unwrap();
+    assert_eq!(run.dropped, vec![1]);
+    let sum: f64 = run.chunk_windows.iter().sum();
+    assert!((sum - run.makespan_s).abs() <= 1e-9 * run.makespan_s);
+    assert!(run.mean_active_utilization() > 0.0);
+}
+
+#[test]
+fn large_cluster_scenario_sweep_survives_dropout_replanning() {
+    // A miniature of examples/big_ring.rs small enough for the test suite:
+    // 12 devices (heuristic planner path), scenario with a dropout, full
+    // re-plan over 11 survivors.
+    let u = 12;
+    let m = meta(2 * u);
+    let cl = ClusterConfig::synthetic(u, 42, 0.6);
+    let lut = CostLut::analytic(&m, 5.0);
+    let tr = TrainingConfig {
+        rounds: 3,
+        local_iters: 1,
+        unfreeze_interval: 1,
+        initial_depth: 1,
+        ..Default::default()
+    };
+    let healthy =
+        simulate_scenario(&m, &cl, &tr, Scheme::RingAda, &Scenario::healthy(), &lut).unwrap();
+    assert!(healthy.makespan_s > 0.0);
+    let sc = Scenario::synth(7, u, healthy.makespan_s, 0.8);
+    assert!(!sc.dropouts().is_empty(), "intensity 0.8 should script a dropout");
+    let run = simulate_scenario(&m, &cl, &tr, Scheme::RingAda, &sc, &lut).unwrap();
+    // Byte-determinism holds on the heuristic-planner path too.
+    let run2 = simulate_scenario(&m, &cl, &tr, Scheme::RingAda, &sc, &lut).unwrap();
+    assert_eq!(run.canonical_string(), run2.canonical_string());
+    // Slight margin: greedy list scheduling admits Graham-style anomalies,
+    // so per-resource slowdowns are not strictly monotone — but a fault
+    // sweep materially *shortening* the run would be a real bug.
+    assert!(
+        run.makespan_s >= 0.9 * healthy.makespan_s,
+        "faulted makespan {} collapsed below healthy {}",
+        run.makespan_s,
+        healthy.makespan_s
+    );
+}

@@ -1,0 +1,87 @@
+//! Multi-tenant fleet serving: 64 concurrent RingAda fine-tuning jobs
+//! multiplexed over a shared 128-device edge pool, three allocation
+//! policies, healthy vs an intensity-0.8 fault scenario (stragglers +
+//! degraded link + one device dropout that forces the holding job's ring
+//! re-plan).
+//!
+//! Timing-only: analytic cost LUT, no AOT artifacts — works on any machine.
+//!
+//! ```bash
+//! cargo run --release --example fleet_serving
+//! ```
+
+use ringada::config::FleetConfig;
+use ringada::fleet::{
+    serve, AllocationPolicy, FifoWholeRing, SmallestRingFirst, UtilizationAware,
+};
+use ringada::metrics::{FleetDeltaTable, FleetReport};
+use ringada::sim::Scenario;
+
+fn summarize(label: &str, r: &FleetReport) {
+    println!(
+        "[{label}] {:<14} done {:>2}  failed {}  unserved {}  horizon {:>7.1}s  \
+         thr {:>5.1} j/h  mean JCT {:>6.1}s  p95 {:>6.1}s  util {:>4.1}%  jain {:.3}",
+        r.policy,
+        r.completed(),
+        r.failed_jobs(),
+        r.unserved(),
+        r.horizon_s,
+        r.throughput_jobs_per_hour(),
+        r.mean_jct_s(),
+        r.p95_jct_s(),
+        100.0 * r.pool_utilization(),
+        r.jain_fairness(),
+    );
+}
+
+fn main() -> ringada::Result<()> {
+    let seed = 2026u64;
+    let mut healthy = FleetConfig::synthetic(128, 64, seed);
+    healthy.mean_interarrival_s = 15.0;
+    // Anchor the fault script to the expected serving window.
+    let horizon = healthy.mean_interarrival_s * healthy.jobs as f64;
+    let mut faulted = healthy.clone();
+    faulted.scenario = Some(Scenario::synth(seed, healthy.pool.len(), horizon, 0.8));
+
+    println!(
+        "fleet_serving: {} jobs over a {}-device pool, mean inter-arrival {:.0}s, seed {seed}",
+        healthy.jobs,
+        healthy.pool.len(),
+        healthy.mean_interarrival_s
+    );
+    println!("scenario: synth intensity 0.8 (stragglers + degraded link + one dropout)\n");
+
+    let policies: [&dyn AllocationPolicy; 3] =
+        [&FifoWholeRing, &SmallestRingFirst, &UtilizationAware];
+    let mut table = FleetDeltaTable::new();
+    let mut baseline: Option<FleetReport> = None; // FIFO on the healthy pool
+
+    for (cfg, label) in [(&healthy, "healthy"), (&faulted, "intensity-0.8")] {
+        for policy in policies {
+            let report = serve(cfg, policy)?;
+            summarize(label, &report);
+            assert!(
+                report.completed() >= 64,
+                "{label}/{}: only {} of 64 jobs completed",
+                policy.name(),
+                report.completed()
+            );
+            let base = baseline.get_or_insert_with(|| report.clone());
+            table.push(base, &report);
+        }
+        println!();
+    }
+
+    println!("per-policy deltas vs FIFO on the healthy pool:\n");
+    println!("{}", table.render());
+    println!(
+        "reading: smallest-ring-first packs the pool tighter (higher throughput,\n\
+         lower wait) at a fairness cost to wide-ring jobs; the utilization-aware\n\
+         policy sizes rings with the planner's bottleneck estimate, trading a\n\
+         little peak throughput for deadline hits and Jain fairness.  Under the\n\
+         intensity-0.8 script the dropout lands on whichever job holds the\n\
+         device — its ring re-plans over the survivors and the pool shrinks by\n\
+         one for everyone after."
+    );
+    Ok(())
+}

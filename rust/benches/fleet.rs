@@ -1,0 +1,100 @@
+//! Fleet benches: end-to-end multi-tenant serving cost per allocation
+//! policy (trace generation, healthy and faulted `serve` runs), written to
+//! `BENCH_fleet.json` so the serving-layer perf trajectory accumulates
+//! across PRs next to `BENCH_scale.json` (CI runs the smoke profile and
+//! uploads the artifact).
+//!
+//! Run: `cargo bench --bench fleet` — or `cargo bench --bench fleet --
+//! --smoke` (also honored via `RINGADA_BENCH_SMOKE=1`) for the quick CI
+//! profile: smaller pool and stream, same JSON schema.
+
+use ringada::config::FleetConfig;
+use ringada::fleet::{
+    serve, AllocationPolicy, FifoWholeRing, JobTrace, SmallestRingFirst, UtilizationAware,
+};
+use ringada::sim::Scenario;
+use ringada::util::bench::{black_box, Bencher};
+use ringada::util::json::Json;
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("RINGADA_BENCH_SMOKE").map_or(false, |v| v == "1");
+    let mut b = Bencher::coarse();
+    println!("== fleet benches ({}) ==", if smoke { "smoke" } else { "full" });
+
+    let (pool, jobs) = if smoke { (32, 12) } else { (128, 64) };
+    let mut cfg = FleetConfig::synthetic(pool, jobs, 2026);
+    cfg.mean_interarrival_s = 15.0;
+    let horizon = cfg.mean_interarrival_s * jobs as f64;
+    let mut faulted = cfg.clone();
+    faulted.scenario = Some(Scenario::synth(2026, pool, horizon, 0.8));
+
+    // Trace generation: the pure admission-side cost, no simulation.
+    let trace_mean_s = {
+        let r = b.bench("fleet/trace_synth", || {
+            black_box(JobTrace::synthetic(&cfg));
+        });
+        r.mean.as_secs_f64()
+    };
+
+    let policies: [&dyn AllocationPolicy; 3] =
+        [&FifoWholeRing, &SmallestRingFirst, &UtilizationAware];
+    let mut rows = Vec::new();
+    for (label, c) in [("healthy", &cfg), ("faulted", &faulted)] {
+        for policy in policies {
+            let report = serve(c, policy).expect("fleet run must succeed");
+            let serve_mean_s = {
+                let r = b.bench(&format!("fleet/serve_{label}_{}", policy.name()), || {
+                    black_box(serve(c, policy).unwrap());
+                });
+                r.mean.as_secs_f64()
+            };
+            println!(
+                "  -> {label}/{}: {} completed, thr {:.1} j/h, util {:.1}%, jain {:.3}, \
+                 {:.0} sim-jobs/s",
+                policy.name(),
+                report.completed(),
+                report.throughput_jobs_per_hour(),
+                100.0 * report.pool_utilization(),
+                report.jain_fairness(),
+                jobs as f64 / serve_mean_s.max(1e-12),
+            );
+            rows.push(Json::obj(vec![
+                ("scenario", Json::str(label)),
+                ("policy", Json::str(policy.name())),
+                ("pool", Json::num(pool as f64)),
+                ("jobs", Json::num(jobs as f64)),
+                ("serve_mean_s", Json::num(serve_mean_s)),
+                (
+                    "sim_jobs_per_s",
+                    Json::num(jobs as f64 / serve_mean_s.max(1e-12)),
+                ),
+                ("completed", Json::num(report.completed() as f64)),
+                ("failed", Json::num(report.failed_jobs() as f64)),
+                ("unserved", Json::num(report.unserved() as f64)),
+                (
+                    "throughput_jobs_per_hour",
+                    Json::num(report.throughput_jobs_per_hour()),
+                ),
+                ("mean_jct_s", Json::num(report.mean_jct_s())),
+                ("p95_jct_s", Json::num(report.p95_jct_s())),
+                ("mean_wait_s", Json::num(report.mean_wait_s())),
+                ("pool_utilization", Json::num(report.pool_utilization())),
+                ("jain_fairness", Json::num(report.jain_fairness())),
+                (
+                    "deadline_hit_rate",
+                    Json::num(report.deadline_hit_rate()),
+                ),
+            ]));
+        }
+    }
+
+    let out = Json::obj(vec![
+        ("bench", Json::str("fleet")),
+        ("smoke", Json::Bool(smoke)),
+        ("trace_synth_mean_s", Json::num(trace_mean_s)),
+        ("runs", Json::Arr(rows)),
+    ]);
+    std::fs::write("BENCH_fleet.json", out.pretty()).expect("write BENCH_fleet.json");
+    println!("wrote BENCH_fleet.json");
+}

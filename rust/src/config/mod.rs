@@ -56,6 +56,19 @@ impl DeviceSpec {
     }
 }
 
+/// Parse an RNG seed from JSON.  Seeds are serialized as *strings*: JSON
+/// numbers are f64, which silently corrupts u64 seeds ≥ 2^53 — fatal for
+/// the replay contract.  Plain numbers stay accepted for hand-written
+/// files with small seeds.
+fn seed_from_json(v: &Json) -> Result<u64> {
+    match v {
+        Json::Str(s) => s
+            .parse::<u64>()
+            .map_err(|_| Error::Config(format!("seed `{s}` is not a u64"))),
+        other => other.as_u64(),
+    }
+}
+
 /// The edge cluster: devices plus the D2D link-rate matrix `R_{u,u'}`.
 #[derive(Debug, Clone)]
 pub struct ClusterConfig {
@@ -180,6 +193,75 @@ impl ClusterConfig {
         }
         Ok(())
     }
+
+    /// Parse a cluster from JSON.  Two forms are accepted: the explicit
+    /// device/rate-matrix object the `ExperimentConfig` format has always
+    /// used, and a compact `{"synthetic": {"n", "seed", "heterogeneity"}}`
+    /// spec that expands through [`ClusterConfig::synthetic`] — fleet pools
+    /// of 128+ devices are described in one line instead of a 128×128
+    /// matrix.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        if let Some(s) = v.get("synthetic") {
+            return Ok(Self::synthetic(
+                s.req("n")?.as_usize()?,
+                seed_from_json(s.req("seed")?)?,
+                s.req("heterogeneity")?.as_f64()?,
+            ));
+        }
+        let devices = v
+            .req("devices")?
+            .as_arr()?
+            .iter()
+            .map(|d| {
+                Ok(DeviceSpec {
+                    id: d.req("id")?.as_usize()?,
+                    compute_speed: d.req("compute_speed")?.as_f64()?,
+                    mem_bytes: d.req("mem_bytes")?.as_usize()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let rate_bytes_per_s = v
+            .req("rate_bytes_per_s")?
+            .as_arr()?
+            .iter()
+            .map(Json::f64_vec)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ClusterConfig {
+            devices,
+            rate_bytes_per_s,
+            link_latency_s: v.req("link_latency_s")?.as_f64()?,
+        })
+    }
+
+    /// Serialize in the explicit form.  f64 fields round-trip bit-exactly
+    /// (shortest round-trip printing); integer fields pass through JSON
+    /// numbers and so are exact up to 2^53 — far above any real device id
+    /// or memory budget, but not a blanket guarantee.
+    pub fn to_json(&self) -> Json {
+        let devices = Json::Arr(
+            self.devices
+                .iter()
+                .map(|d| {
+                    Json::obj(vec![
+                        ("id", Json::num(d.id as f64)),
+                        ("compute_speed", Json::num(d.compute_speed)),
+                        ("mem_bytes", Json::num(d.mem_bytes as f64)),
+                    ])
+                })
+                .collect(),
+        );
+        let rates = Json::Arr(
+            self.rate_bytes_per_s
+                .iter()
+                .map(|r| Json::arr_f64(r))
+                .collect(),
+        );
+        Json::obj(vec![
+            ("devices", devices),
+            ("rate_bytes_per_s", rates),
+            ("link_latency_s", Json::num(self.link_latency_s)),
+        ])
+    }
 }
 
 /// Training hyperparameters (paper §V + Algorithm 1 inputs).
@@ -293,33 +375,10 @@ impl ExperimentConfig {
     }
 
     pub fn from_json(v: &Json) -> Result<Self> {
-        let cl = v.req("cluster")?;
-        let devices = cl
-            .req("devices")?
-            .as_arr()?
-            .iter()
-            .map(|d| {
-                Ok(DeviceSpec {
-                    id: d.req("id")?.as_usize()?,
-                    compute_speed: d.req("compute_speed")?.as_f64()?,
-                    mem_bytes: d.req("mem_bytes")?.as_usize()?,
-                })
-            })
-            .collect::<Result<Vec<_>>>()?;
-        let rate_bytes_per_s = cl
-            .req("rate_bytes_per_s")?
-            .as_arr()?
-            .iter()
-            .map(Json::f64_vec)
-            .collect::<Result<Vec<_>>>()?;
         let tr = v.req("training")?;
         Ok(ExperimentConfig {
             artifact_dir: PathBuf::from(v.req("artifact_dir")?.as_str()?),
-            cluster: ClusterConfig {
-                devices,
-                rate_bytes_per_s,
-                link_latency_s: cl.req("link_latency_s")?.as_f64()?,
-            },
+            cluster: ClusterConfig::from_json(v.req("cluster")?)?,
             training: TrainingConfig {
                 rounds: tr.req("rounds")?.as_usize()?,
                 local_iters: tr.req("local_iters")?.as_usize()?,
@@ -340,39 +399,12 @@ impl ExperimentConfig {
     }
 
     pub fn to_json(&self) -> Json {
-        let devices = Json::Arr(
-            self.cluster
-                .devices
-                .iter()
-                .map(|d| {
-                    Json::obj(vec![
-                        ("id", Json::num(d.id as f64)),
-                        ("compute_speed", Json::num(d.compute_speed)),
-                        ("mem_bytes", Json::num(d.mem_bytes as f64)),
-                    ])
-                })
-                .collect(),
-        );
-        let rates = Json::Arr(
-            self.cluster
-                .rate_bytes_per_s
-                .iter()
-                .map(|r| Json::arr_f64(r))
-                .collect(),
-        );
         let mut pairs = vec![
             (
                 "artifact_dir",
                 Json::str(self.artifact_dir.to_string_lossy().to_string()),
             ),
-            (
-                "cluster",
-                Json::obj(vec![
-                    ("devices", devices),
-                    ("rate_bytes_per_s", rates),
-                    ("link_latency_s", Json::num(self.cluster.link_latency_s)),
-                ]),
-            ),
+            ("cluster", self.cluster.to_json()),
             (
                 "training",
                 Json::obj(vec![
@@ -400,6 +432,133 @@ impl ExperimentConfig {
                 Json::num(self.samples_per_device as f64),
             ),
             ("eval_samples", Json::num(self.eval_samples as f64)),
+        ];
+        if let Some(sc) = &self.scenario {
+            pairs.push(("scenario", sc.to_json()));
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// A multi-tenant serving experiment (the `fleet` subsystem): one shared
+/// edge-device pool, a seed-deterministic synthetic job stream, and an
+/// optional pool-level fault scenario.  Same `seed` ⇒ identical trace ⇒
+/// byte-identical `FleetReport` (the fleet determinism property).
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// The shared device pool every job's ring is carved from.
+    pub pool: ClusterConfig,
+    /// Jobs in the synthetic arrival trace.
+    pub jobs: usize,
+    /// Mean of the exponential inter-arrival gap (Poisson-like arrivals).
+    pub mean_interarrival_s: f64,
+    /// Seed for the trace generator and the per-job training seeds.
+    pub seed: u64,
+    /// Per-job model-size range in transformer blocks (inclusive).  The
+    /// floor is 4: ring requests need at least 2 blocks per position.
+    pub min_layers: usize,
+    pub max_layers: usize,
+    /// Per-job epoch-budget range in rounds (inclusive).
+    pub min_rounds: usize,
+    pub max_rounds: usize,
+    /// Local iterations per initiator turn, uniform across jobs.
+    pub local_iters: usize,
+    /// Optional pool-level fault script: a dropout hits whichever job holds
+    /// the device (triggering its re-plan path) or shrinks the free pool.
+    pub scenario: Option<Scenario>,
+}
+
+impl FleetConfig {
+    /// Synthetic fleet over a [`ClusterConfig::synthetic`] pool with
+    /// paper-class job sizes — the examples/benches/tests entry point.
+    pub fn synthetic(pool_devices: usize, jobs: usize, seed: u64) -> Self {
+        FleetConfig {
+            pool: ClusterConfig::synthetic(pool_devices, seed, 0.6),
+            jobs,
+            mean_interarrival_s: 20.0,
+            seed,
+            min_layers: 8,
+            max_layers: 24,
+            min_rounds: 2,
+            max_rounds: 4,
+            local_iters: 1,
+            scenario: None,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        self.pool.validate()?;
+        if self.jobs == 0 {
+            return Err(Error::Config("fleet needs at least one job".into()));
+        }
+        if !self.mean_interarrival_s.is_finite() || self.mean_interarrival_s <= 0.0 {
+            return Err(Error::Config(format!(
+                "mean_interarrival_s {} must be finite and > 0",
+                self.mean_interarrival_s
+            )));
+        }
+        if self.min_layers < 4 || self.max_layers < self.min_layers {
+            return Err(Error::Config(format!(
+                "layer range [{}, {}] invalid (min 4, min <= max)",
+                self.min_layers, self.max_layers
+            )));
+        }
+        if self.min_rounds == 0 || self.max_rounds < self.min_rounds {
+            return Err(Error::Config(format!(
+                "round range [{}, {}] invalid (min 1, min <= max)",
+                self.min_rounds, self.max_rounds
+            )));
+        }
+        if self.local_iters == 0 {
+            return Err(Error::Config("local_iters must be > 0".into()));
+        }
+        if let Some(sc) = &self.scenario {
+            sc.validate(self.pool.len())?;
+        }
+        Ok(())
+    }
+
+    pub fn from_json_file(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let cfg = Self::from_json(&Json::parse(&text)?)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let seed = seed_from_json(v.req("seed")?)?;
+        Ok(FleetConfig {
+            pool: ClusterConfig::from_json(v.req("pool")?)?,
+            jobs: v.req("jobs")?.as_usize()?,
+            mean_interarrival_s: v.req("mean_interarrival_s")?.as_f64()?,
+            seed,
+            min_layers: v.req("min_layers")?.as_usize()?,
+            max_layers: v.req("max_layers")?.as_usize()?,
+            min_rounds: v.req("min_rounds")?.as_usize()?,
+            max_rounds: v.req("max_rounds")?.as_usize()?,
+            local_iters: v.req("local_iters")?.as_usize()?,
+            scenario: match v.get("scenario") {
+                Some(s) => Some(Scenario::from_json(s)?),
+                None => None,
+            },
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("pool", self.pool.to_json()),
+            ("jobs", Json::num(self.jobs as f64)),
+            (
+                "mean_interarrival_s",
+                Json::num(self.mean_interarrival_s),
+            ),
+            // String, not number: u64 seeds don't fit f64 (see from_json).
+            ("seed", Json::str(self.seed.to_string())),
+            ("min_layers", Json::num(self.min_layers as f64)),
+            ("max_layers", Json::num(self.max_layers as f64)),
+            ("min_rounds", Json::num(self.min_rounds as f64)),
+            ("max_rounds", Json::num(self.max_rounds as f64)),
+            ("local_iters", Json::num(self.local_iters as f64)),
         ];
         if let Some(sc) = &self.scenario {
             pairs.push(("scenario", sc.to_json()));
@@ -521,5 +680,83 @@ mod tests {
     fn scheme_names() {
         assert_eq!(Scheme::RingAda.name(), "RingAda");
         assert_eq!(Scheme::ALL.len(), 3);
+    }
+
+    #[test]
+    fn cluster_json_round_trips_bit_exactly() {
+        let c = ClusterConfig::synthetic(6, 5, 0.7);
+        let back = ClusterConfig::from_json(&Json::parse(&c.to_json().pretty()).unwrap()).unwrap();
+        back.validate().unwrap();
+        for (a, b) in c.devices.iter().zip(&back.devices) {
+            assert_eq!(a.compute_speed.to_bits(), b.compute_speed.to_bits());
+            assert_eq!(a.mem_bytes, b.mem_bytes);
+        }
+        assert_eq!(c.rate_bytes_per_s, back.rate_bytes_per_s);
+    }
+
+    #[test]
+    fn cluster_json_accepts_synthetic_spec() {
+        let text = r#"{"synthetic": {"n": 16, "seed": 9, "heterogeneity": 0.8}}"#;
+        let c = ClusterConfig::from_json(&Json::parse(text).unwrap()).unwrap();
+        c.validate().unwrap();
+        assert_eq!(c.len(), 16);
+        let direct = ClusterConfig::synthetic(16, 9, 0.8);
+        for (a, b) in c.devices.iter().zip(&direct.devices) {
+            assert_eq!(a.compute_speed.to_bits(), b.compute_speed.to_bits());
+        }
+        // String seeds are accepted here too, so > 2^53 seeds survive.
+        let text = r#"{"synthetic": {"n": 4, "seed": "1152921504606846977", "heterogeneity": 0.2}}"#;
+        let c2 = ClusterConfig::from_json(&Json::parse(text).unwrap()).unwrap();
+        let d2 = ClusterConfig::synthetic(4, (1u64 << 60) + 1, 0.2);
+        assert_eq!(
+            c2.devices[0].compute_speed.to_bits(),
+            d2.devices[0].compute_speed.to_bits()
+        );
+    }
+
+    #[test]
+    fn fleet_config_validates_and_round_trips() {
+        let mut cfg = FleetConfig::synthetic(8, 6, 11);
+        cfg.scenario = Some(crate::sim::Scenario::synth(11, 8, 500.0, 0.5));
+        cfg.validate().unwrap();
+        let back = FleetConfig::from_json(&Json::parse(&cfg.to_json().pretty()).unwrap()).unwrap();
+        back.validate().unwrap();
+        assert_eq!(back.jobs, cfg.jobs);
+        assert_eq!(back.seed, cfg.seed);
+        assert_eq!(back.pool.len(), cfg.pool.len());
+        assert_eq!(back.scenario, cfg.scenario);
+        assert_eq!(
+            back.mean_interarrival_s.to_bits(),
+            cfg.mean_interarrival_s.to_bits()
+        );
+        // Seeds above 2^53 survive the round trip (string-encoded; a JSON
+        // number would truncate through f64 and break replayability).
+        let mut big = FleetConfig::synthetic(4, 2, (1u64 << 60) + 1);
+        big.scenario = None;
+        let back = FleetConfig::from_json(&Json::parse(&big.to_json().pretty()).unwrap()).unwrap();
+        assert_eq!(back.seed, (1u64 << 60) + 1);
+    }
+
+    #[test]
+    fn fleet_config_rejects_bad_ranges() {
+        let mut cfg = FleetConfig::synthetic(4, 4, 1);
+        cfg.min_layers = 2; // below the ring-request floor
+        assert!(cfg.validate().is_err());
+        let mut cfg = FleetConfig::synthetic(4, 4, 1);
+        cfg.max_rounds = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = FleetConfig::synthetic(4, 4, 1);
+        cfg.mean_interarrival_s = 0.0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = FleetConfig::synthetic(4, 0, 1);
+        cfg.jobs = 0;
+        assert!(cfg.validate().is_err());
+        // A scenario referencing devices beyond the pool fails validate.
+        let mut cfg = FleetConfig::synthetic(4, 4, 1);
+        cfg.scenario = Some(crate::sim::Scenario {
+            name: "bad".into(),
+            events: vec![crate::sim::ScenarioEvent::Dropout { device: 9, at: 1.0 }],
+        });
+        assert!(cfg.validate().is_err());
     }
 }

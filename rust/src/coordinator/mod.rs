@@ -137,12 +137,14 @@ impl Coordinator {
             meta.hyper.layers,
         );
         // First initiator: position 0's device (the block-0 holder), then
-        // best-channel greedy (paper §IV.3) over the ring's members.
+        // best-channel greedy (paper §IV.3) over the ring's members.  The
+        // rotation validates the survivor set (`first ∈ among`, ids in
+        // range) and errors instead of building a corrupt order.
         let rotation = InitiatorRotation::best_channel_among(
             &cluster.rate_bytes_per_s,
             assignment.order[0],
             &assignment.order,
-        );
+        )?;
         Ok(Coordinator {
             assignment,
             unfreeze,

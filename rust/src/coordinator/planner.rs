@@ -78,6 +78,14 @@ pub struct SearchParams {
     pub beam_width: usize,
     /// Simulated-annealing move proposals.
     pub anneal_iters: usize,
+    /// Iteration budget for the anneal stage, counted in
+    /// bottleneck-evaluator invocations; `0` = unlimited.  Candidate
+    /// scoring always spends its `beam_width + 2` evaluator calls (and the
+    /// final feasibility pass its DP re-plans); the anneal then runs
+    /// `min(anneal_iters, max_evals - candidates_scored)` moves.  Net
+    /// effect: repeated fleet-scale re-planning has a deterministic,
+    /// bounded planner cost regardless of how large `anneal_iters` is.
+    pub max_evals: usize,
     /// Seed for the annealing move RNG — fixed by default so plans are
     /// deterministic for a given cluster.
     pub seed: u64,
@@ -85,7 +93,7 @@ pub struct SearchParams {
 
 impl Default for SearchParams {
     fn default() -> Self {
-        SearchParams { beam_width: 8, anneal_iters: 4000, seed: 0x52_49_4E_47 }
+        SearchParams { beam_width: 8, anneal_iters: 4000, max_evals: 0, seed: 0x52_49_4E_47 }
     }
 }
 
@@ -324,6 +332,22 @@ impl<'a> Planner<'a> {
         Some(Plan { assignment, bottleneck_s: bottleneck })
     }
 
+    /// `devices` sorted by profiled compute speed, descending, ties by id
+    /// — the canonical device order shared by the beam seed, the cheap
+    /// bottleneck estimate, and the fleet's utilization-aware policy.  The
+    /// tie-break is determinism-critical: every consumer must rank devices
+    /// identically or plans drift between components.
+    pub fn speed_order(&self, devices: &[usize]) -> Vec<usize> {
+        let mut order: Vec<usize> = devices.to_vec();
+        order.sort_by(|&x, &y| {
+            self.cluster.devices[y]
+                .compute_speed
+                .total_cmp(&self.cluster.devices[x].compute_speed)
+                .then(x.cmp(&y))
+        });
+        order
+    }
+
     /// Search ring orders: exhaustive for U ≤ [`EXHAUSTIVE_MAX_DEVICES`],
     /// beam + anneal beyond.  Returns the best feasible plan.
     pub fn plan(&self) -> Result<Plan> {
@@ -419,18 +443,24 @@ impl<'a> Planner<'a> {
 
         // Stage 0: deterministic seed orders — speed-descending (ties by
         // id, total order so NaN-free by validation) and the id order.
-        let mut speed_order: Vec<usize> = devices.to_vec();
-        speed_order.sort_by(|&x, &y| {
-            self.cluster.devices[y]
-                .compute_speed
-                .total_cmp(&self.cluster.devices[x].compute_speed)
-                .then(x.cmp(&y))
-        });
+        let speed_order = self.speed_order(devices);
         let mut id_order: Vec<usize> = devices.to_vec();
         id_order.sort_unstable();
 
         // Stage 1: beam search over partial orders.
         let beamed = self.beam_orders(devices, &speed_order, params.beam_width.max(1));
+
+        // Iteration budget (`max_evals`): every candidate below costs one
+        // evaluator call, and each anneal move costs exactly one more, so
+        // capping the anneal at the remaining budget bounds total search
+        // cost deterministically.
+        let scored = 2 + beamed.len();
+        let anneal_iters = if params.max_evals == 0 {
+            params.anneal_iters
+        } else {
+            params.anneal_iters.min(params.max_evals.saturating_sub(scored))
+        };
+        let budgeted = SearchParams { anneal_iters, ..*params };
 
         // Candidate pool: scored, deduped, deterministic order.
         let mut candidates: Vec<(f64, Vec<usize>)> = Vec::new();
@@ -450,7 +480,7 @@ impl<'a> Planner<'a> {
         // Stage 2: simulated-annealing refinement from the best candidate.
         if let Some((start_score, start)) = candidates.first().cloned() {
             let (best_order, best_score) =
-                self.anneal(start, start_score, params, &eval);
+                self.anneal(start, start_score, &budgeted, &eval);
             push(&mut candidates, best_order, best_score);
             candidates.sort_by(|x, y| x.0.total_cmp(&y.0).then(x.1.cmp(&y.1)));
         }
@@ -579,6 +609,27 @@ impl<'a> Planner<'a> {
             temp *= decay;
         }
         (best, best_score)
+    }
+
+    /// Cheap bottleneck estimate for a candidate ring over `devices`:
+    /// the speed-descending order (ties by id) pushed through the exact
+    /// O(U·log) bisection evaluator — no beam, no anneal, no memory check.
+    /// An upper bound on the searched optimum for the same subset (one
+    /// fixed order vs the best order), used by fleet allocation policies
+    /// that must size many candidate rings per admission decision.
+    pub fn estimate_bottleneck_for_devices(&self, devices: &[usize]) -> Result<f64> {
+        self.validate_devices(devices)?;
+        let layers = self.meta.hyper.layers;
+        if layers < devices.len() {
+            return Err(Error::Plan(format!(
+                "{} devices but only {layers} blocks — ring cannot fill every position",
+                devices.len()
+            )));
+        }
+        let order = self.speed_order(devices);
+        let (a, t) = self.order_coeffs(&order);
+        min_bottleneck_for_order(&a, &t, layers)
+            .ok_or_else(|| Error::Plan("no feasible partition for the estimate order".into()))
     }
 
     /// Baseline for the ablation bench: uniform split in id order.
@@ -804,6 +855,57 @@ mod tests {
             ba.bottleneck_s,
             ex.bottleneck_s
         );
+    }
+
+    #[test]
+    fn eval_budget_caps_anneal_cost_deterministically() {
+        let m = meta(32);
+        let cl = ClusterConfig::synthetic(16, 21, 0.7);
+        let p = Planner::new(&m, &cl, costs());
+        let devices: Vec<usize> = (0..16).collect();
+        let tight = SearchParams { beam_width: 4, anneal_iters: 10_000, max_evals: 64, seed: 7 };
+        let a = p.plan_beam_anneal_with(&devices, &tight).unwrap();
+        let b = p.plan_beam_anneal_with(&devices, &tight).unwrap();
+        assert_eq!(a.assignment, b.assignment, "budgeted search must be deterministic");
+        assert_eq!(a.bottleneck_s.to_bits(), b.bottleneck_s.to_bits());
+        a.assignment.validate(32).unwrap();
+        // A budget too small for any anneal move still returns a feasible
+        // plan (seed orders + beam candidates alone).
+        let none = SearchParams { max_evals: 1, ..tight };
+        let c = p.plan_beam_anneal_with(&devices, &none).unwrap();
+        c.assignment.validate(32).unwrap();
+        // Lifting the cap with the same seed never yields a worse plan.
+        let unbounded = SearchParams { max_evals: 0, ..tight };
+        let d = p.plan_beam_anneal_with(&devices, &unbounded).unwrap();
+        assert!(
+            d.bottleneck_s <= c.bottleneck_s * (1.0 + 1e-9),
+            "unbounded {} vs capped {}",
+            d.bottleneck_s,
+            c.bottleneck_s
+        );
+    }
+
+    #[test]
+    fn bottleneck_estimate_tracks_the_full_planner() {
+        let m = meta(24);
+        let cl = ClusterConfig::synthetic(6, 17, 0.5);
+        let p = Planner::new(&m, &cl, costs());
+        let devices: Vec<usize> = (0..6).collect();
+        let est = p.estimate_bottleneck_for_devices(&devices).unwrap();
+        let opt = p.plan_exhaustive(&devices).unwrap().bottleneck_s;
+        // One fixed order can never beat the searched optimum...
+        assert!(est >= opt * (1.0 - 1e-9), "estimate {est} below optimum {opt}");
+        // ...and the speed-descending order stays in its ballpark.
+        assert!(est <= opt * 2.0, "estimate {est} wildly off optimum {opt}");
+        // Subset estimates work with original cluster ids.
+        let sub = p.estimate_bottleneck_for_devices(&[1, 3, 4]).unwrap();
+        assert!(sub.is_finite() && sub > 0.0);
+        // Validation mirrors the planner: empty sets and too-small models
+        // are errors.
+        assert!(p.estimate_bottleneck_for_devices(&[]).is_err());
+        let m2 = meta(3);
+        let p2 = Planner::new(&m2, &cl, costs());
+        assert!(p2.estimate_bottleneck_for_devices(&devices).is_err());
     }
 
     #[test]

@@ -167,14 +167,43 @@ pub struct InitiatorRotation {
 impl InitiatorRotation {
     /// Greedy best-channel ordering over the link-rate matrix, starting at
     /// `first`.
-    pub fn best_channel(rate: &[Vec<f64>], first: usize) -> Self {
+    pub fn best_channel(rate: &[Vec<f64>], first: usize) -> Result<Self> {
         let all: Vec<usize> = (0..rate.len()).collect();
         Self::best_channel_among(rate, first, &all)
     }
 
     /// Greedy best-channel ordering restricted to the `among` devices (the
-    /// survivors after a dropout).  `first` must be in `among`.
-    pub fn best_channel_among(rate: &[Vec<f64>], first: usize, among: &[usize]) -> Self {
+    /// survivors after a dropout).  `first` must be one of `among` and all
+    /// ids must index the rate matrix — violations are rejected with
+    /// [`Error::Schedule`], mirroring the planner's survivor-set
+    /// validation.  (Previously `first ∉ among` silently built a corrupt
+    /// rotation visiting `first` *plus* a truncated survivor list.)
+    pub fn best_channel_among(rate: &[Vec<f64>], first: usize, among: &[usize]) -> Result<Self> {
+        if among.is_empty() {
+            return Err(Error::Schedule(
+                "initiator rotation over an empty survivor set".into(),
+            ));
+        }
+        let mut seen = vec![false; rate.len()];
+        for &d in among {
+            if d >= rate.len() {
+                return Err(Error::Schedule(format!(
+                    "rotation device {d} out of range (rate matrix is {0}x{0})",
+                    rate.len()
+                )));
+            }
+            if seen[d] {
+                return Err(Error::Schedule(format!(
+                    "duplicate device id {d} in rotation survivor set"
+                )));
+            }
+            seen[d] = true;
+        }
+        if !among.contains(&first) {
+            return Err(Error::Schedule(format!(
+                "first initiator {first} is not among the surviving devices {among:?}"
+            )));
+        }
         let mut candidates: Vec<usize> = among.to_vec();
         candidates.sort_unstable(); // id order makes greedy ties deterministic
         let mut order = vec![first];
@@ -195,7 +224,7 @@ impl InitiatorRotation {
             used[next] = true;
             order.push(next);
         }
-        InitiatorRotation { order }
+        Ok(InitiatorRotation { order })
     }
 }
 
@@ -275,9 +304,49 @@ mod tests {
         ];
         // Device 1 dead: greedy from 0 over {0, 2, 3} -> 0, then 3 (rate 2
         // beats 1), then 2.
-        let r = InitiatorRotation::best_channel_among(&rate, 0, &[0, 2, 3]);
+        let r = InitiatorRotation::best_channel_among(&rate, 0, &[0, 2, 3]).unwrap();
         assert_eq!(r.order, vec![0, 3, 2]);
         assert!(!r.order.contains(&1));
+    }
+
+    #[test]
+    fn rotation_rejects_first_not_among_survivors() {
+        let rate = vec![vec![1.0; 3]; 3];
+        // `first` dropped out: must be an error, not a corrupt rotation.
+        assert!(InitiatorRotation::best_channel_among(&rate, 1, &[0, 2]).is_err());
+        // `first` beyond the matrix used to panic on `used[first]`.
+        assert!(InitiatorRotation::best_channel_among(&rate, 5, &[0, 2]).is_err());
+        // Empty survivor set and out-of-range survivors are rejected too.
+        assert!(InitiatorRotation::best_channel_among(&rate, 0, &[]).is_err());
+        assert!(InitiatorRotation::best_channel_among(&rate, 0, &[0, 7]).is_err());
+        // Duplicate survivor ids used to panic the greedy loop (only
+        // distinct devices can ever be marked used).
+        assert!(InitiatorRotation::best_channel_among(&rate, 0, &[0, 0, 2]).is_err());
+        // The valid subset still works and visits exactly the survivors.
+        let ok = InitiatorRotation::best_channel_among(&rate, 2, &[0, 2]).unwrap();
+        assert_eq!(ok.order.len(), 2);
+        assert_eq!(ok.order[0], 2);
+        assert!(ok.order.contains(&0));
+    }
+
+    #[test]
+    fn from_counts_for_devices_edge_cases() {
+        // Empty device set.
+        assert!(LayerAssignment::from_counts_for_devices(vec![], &[], 4).is_err());
+        // order/counts length mismatch.
+        assert!(LayerAssignment::from_counts_for_devices(vec![0, 1], &[6], 4).is_err());
+        // Device id >= cluster size.
+        assert!(LayerAssignment::from_counts_for_devices(vec![0, 4], &[3, 3], 4).is_err());
+        // Duplicate ids in the subset.
+        assert!(LayerAssignment::from_counts_for_devices(vec![1, 1], &[3, 3], 4).is_err());
+        // Counts summing to more or fewer blocks than the model has.
+        let a = LayerAssignment::from_counts_for_devices(vec![0, 1], &[3, 3], 4).unwrap();
+        a.validate_for_devices(6, 4).unwrap();
+        assert!(a.validate_for_devices(7, 4).is_err());
+        assert!(a.validate_for_devices(5, 4).is_err());
+        // The same assignment re-checked against a smaller cluster fails
+        // (device 1 no longer exists).
+        assert!(a.validate_for_devices(6, 1).is_err());
     }
 
     #[test]
@@ -288,7 +357,7 @@ mod tests {
             vec![1.0, 9.0, 0.0, 2.0],
             vec![1.0, 1.0, 2.0, 0.0],
         ];
-        let r = InitiatorRotation::best_channel(&rate, 0);
+        let r = InitiatorRotation::best_channel(&rate, 0).unwrap();
         let mut sorted = r.order.clone();
         sorted.sort_unstable();
         assert_eq!(sorted, vec![0, 1, 2, 3]);

@@ -1,0 +1,193 @@
+//! Job model for the multi-tenant fleet scheduler: per-user fine-tuning
+//! requests drawn from a seed-deterministic synthetic arrival trace.
+//!
+//! A [`JobSpec`] is one user's personalization request — a model size
+//! (transformer blocks), an epoch budget (rounds), a requested ring width,
+//! and a deadline class.  [`JobTrace::synthetic`] generates a Poisson-like
+//! stream of them from a [`FleetConfig`] seed, à la
+//! `ClusterConfig::synthetic`: exponential inter-arrival gaps, log-free
+//! uniform size draws, and a fixed deadline-class mix.  Same config ⇒
+//! bit-identical trace, which is what makes whole fleet runs replayable.
+
+use crate::config::FleetConfig;
+use crate::model::manifest::ModelHyper;
+use crate::model::ModelMeta;
+use crate::runtime::rng::Rng;
+
+/// How tight a job's completion deadline is, relative to its
+/// contention-free service-time estimate ([`JobSpec::nominal_service_s`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeadlineClass {
+    /// Interactive personalization: finish within 2× nominal.
+    Strict,
+    /// Default batch: within 4× nominal.
+    Standard,
+    /// Background refresh: within 10× nominal.
+    Relaxed,
+}
+
+impl DeadlineClass {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DeadlineClass::Strict => "strict",
+            DeadlineClass::Standard => "standard",
+            DeadlineClass::Relaxed => "relaxed",
+        }
+    }
+
+    /// Deadline slack multiplier over the nominal service time.
+    pub fn slack(&self) -> f64 {
+        match self {
+            DeadlineClass::Strict => 2.0,
+            DeadlineClass::Standard => 4.0,
+            DeadlineClass::Relaxed => 10.0,
+        }
+    }
+}
+
+/// One fine-tuning job in the fleet's arrival stream.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    /// Trace index; doubles as the arrival-order rank.
+    pub id: usize,
+    /// Absolute arrival time on the fleet clock (seconds).
+    pub arrival_s: f64,
+    /// Transformer blocks in this job's model.
+    pub layers: usize,
+    /// Epoch budget: fine-tuning rounds before the job completes.
+    pub rounds: usize,
+    /// Local iterations per initiator turn.
+    pub local_iters: usize,
+    /// Requested ring width (devices); policies may resize within limits.
+    pub ring_size: usize,
+    pub deadline: DeadlineClass,
+}
+
+impl JobSpec {
+    /// The job's model, sized analytically (paper-class narrow transformer
+    /// with `self.layers` blocks) — no artifacts needed on the fleet path.
+    pub fn model_meta(&self) -> ModelMeta {
+        ModelMeta::from_hyper(ModelHyper {
+            name: format!("job-{}", self.id),
+            vocab: 8192,
+            hidden: 64,
+            layers: self.layers,
+            heads: 4,
+            ffn: 256,
+            bottleneck: 16,
+            seq: 32,
+            batch: 4,
+            init_std: 0.02,
+        })
+    }
+
+    /// Crude contention-free service-time estimate, used only for deadline
+    /// budgeting and slowdown normalization: every round runs `ring_size`
+    /// initiator turns × `local_iters` steps, each a forward plus an
+    /// early-stopped backward (~2× forward work) over all blocks, spread
+    /// across the ring on paper-class (0.1× LUT-reference) devices.
+    pub fn nominal_service_s(&self, block_fwd_s: f64) -> f64 {
+        let steps = (self.rounds * self.ring_size * self.local_iters) as f64;
+        steps * self.layers as f64 * block_fwd_s * 2.0 / (0.1 * self.ring_size as f64)
+    }
+
+    /// Absolute deadline on the fleet clock.
+    pub fn deadline_s(&self, block_fwd_s: f64) -> f64 {
+        self.arrival_s + self.deadline.slack() * self.nominal_service_s(block_fwd_s)
+    }
+}
+
+/// Synthetic arrival-trace generator (see module docs).
+pub struct JobTrace;
+
+impl JobTrace {
+    /// Seed-deterministic Poisson-like job stream: exponential
+    /// inter-arrival gaps at `cfg.mean_interarrival_s`, model sizes and
+    /// epoch budgets uniform over the configured ranges, ring requests in
+    /// `[2, 8]` capped at half the model's blocks (each ring position must
+    /// keep ≥ 2 blocks so one dropout never starves a position), and a
+    /// 20/40/40 strict/standard/relaxed deadline mix.
+    pub fn synthetic(cfg: &FleetConfig) -> Vec<JobSpec> {
+        let mut rng = Rng::new(cfg.seed ^ 0xF1EE_7A8B);
+        let mut t = 0.0f64;
+        let mut jobs = Vec::with_capacity(cfg.jobs);
+        for id in 0..cfg.jobs {
+            let u = rng.next_f64();
+            t += -cfg.mean_interarrival_s * (1.0 - u).ln();
+            let layers = cfg.min_layers + rng.next_below(cfg.max_layers - cfg.min_layers + 1);
+            let rounds = cfg.min_rounds + rng.next_below(cfg.max_rounds - cfg.min_rounds + 1);
+            let ring_size = (2 + rng.next_below(7)).min((layers / 2).max(1));
+            let deadline = {
+                let d = rng.next_f64();
+                if d < 0.2 {
+                    DeadlineClass::Strict
+                } else if d < 0.6 {
+                    DeadlineClass::Standard
+                } else {
+                    DeadlineClass::Relaxed
+                }
+            };
+            jobs.push(JobSpec {
+                id,
+                arrival_s: t,
+                layers,
+                rounds,
+                local_iters: cfg.local_iters,
+                ring_size,
+                deadline,
+            });
+        }
+        jobs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::FleetConfig;
+
+    #[test]
+    fn trace_is_deterministic_and_well_formed() {
+        let cfg = FleetConfig::synthetic(16, 24, 11);
+        let a = JobTrace::synthetic(&cfg);
+        let b = JobTrace::synthetic(&cfg);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 24);
+        let mut prev = 0.0f64;
+        for (i, j) in a.iter().enumerate() {
+            assert_eq!(j.id, i);
+            assert!(j.arrival_s >= prev, "arrivals must be nondecreasing");
+            prev = j.arrival_s;
+            assert!((cfg.min_layers..=cfg.max_layers).contains(&j.layers));
+            assert!((cfg.min_rounds..=cfg.max_rounds).contains(&j.rounds));
+            assert!(j.ring_size >= 2 && j.ring_size <= 8);
+            assert!(j.ring_size * 2 <= j.layers, "ring needs >= 2 blocks/position");
+        }
+        // Different seeds give different traces.
+        let c = JobTrace::synthetic(&FleetConfig::synthetic(16, 24, 12));
+        assert_ne!(a, c);
+        // All three deadline classes appear at this trace length.
+        for class in [DeadlineClass::Strict, DeadlineClass::Standard, DeadlineClass::Relaxed] {
+            assert!(a.iter().any(|j| j.deadline == class), "missing {class:?}");
+        }
+    }
+
+    #[test]
+    fn nominal_service_scales_with_work() {
+        let j = JobSpec {
+            id: 0,
+            arrival_s: 10.0,
+            layers: 16,
+            rounds: 2,
+            local_iters: 1,
+            ring_size: 4,
+            deadline: DeadlineClass::Standard,
+        };
+        let base = j.nominal_service_s(0.01);
+        let mut big = j.clone();
+        big.rounds = 4;
+        assert!((big.nominal_service_s(0.01) / base - 2.0).abs() < 1e-12);
+        assert!((j.deadline_s(0.01) - (10.0 + 4.0 * base)).abs() < 1e-9);
+        assert_eq!(j.model_meta().hyper.layers, 16);
+    }
+}

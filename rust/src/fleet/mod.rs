@@ -1,0 +1,463 @@
+//! Multi-tenant fleet scheduler: many concurrent RingAda fine-tuning jobs
+//! multiplexed over one shared edge-device pool.
+//!
+//! The paper frames on-device fine-tuning as a per-user personalization
+//! service; at serving scale that means a *fleet* — a stream of jobs
+//! arriving against a finite pool of heterogeneous edge devices.  This
+//! module is that serving layer, built entirely on the existing stack:
+//!
+//! * a seed-deterministic synthetic arrival trace ([`JobTrace`]) supplies
+//!   jobs with per-job model size, epoch budget, ring request and deadline
+//!   class;
+//! * an [`AllocationPolicy`] decides which waiting jobs to admit onto
+//!   which free devices ([`FifoWholeRing`], [`SmallestRingFirst`],
+//!   [`UtilizationAware`]);
+//! * each admitted job gets its ring planned by
+//!   `Planner::plan_for_devices`-style subset search on its allocation,
+//!   then advances round-by-round through the existing [`Simulator`] —
+//!   its own clock starting at the admission time (the chunk release
+//!   floor), under the *pool-level* [`Scenario`]'s straggler and
+//!   link-degradation windows;
+//! * a scripted dropout hits whichever job holds the device when it fires:
+//!   the job detects it at its next round boundary, re-plans over the
+//!   survivors (the existing re-plan path), and the device never returns
+//!   to the pool.  Dropouts on free devices just shrink the pool.
+//! * on completion the job's surviving devices return to the free set and
+//!   the policy gets another admission pass.
+//!
+//! ## Event loop
+//!
+//! [`serve`] is event-driven over a min-heap of `(time, kind, id)` events
+//! — scripted dropouts, job completions, job arrivals, in that order at
+//! equal times.  Because concurrent jobs occupy *disjoint* device subsets
+//! and all faults are scripted in absolute time, an admitted job's entire
+//! simulation is independent of every other job's given its allocation;
+//! the scheduler therefore simulates each job to completion at admission
+//! and enqueues its completion event.  All state transitions are
+//! deterministic, so the same [`FleetConfig`] (same seed) produces a
+//! byte-identical [`FleetReport::canonical_string`] — the fleet
+//! determinism property pinned by `tests/fleet.rs`.
+
+pub mod job;
+pub mod policy;
+
+pub use job::{DeadlineClass, JobSpec, JobTrace};
+pub use policy::{
+    Allocation, AllocationPolicy, FifoWholeRing, PoolView, SmallestRingFirst, UtilizationAware,
+};
+
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, VecDeque};
+
+use crate::config::{FleetConfig, TrainingConfig};
+use crate::coordinator::{Coordinator, LayerAssignment, Planner, PlannerCosts, SearchParams};
+use crate::error::{Error, Result};
+use crate::metrics::{FleetJobRow, FleetReport};
+use crate::pipeline::{ScheduleBuilder, WireSizes};
+use crate::sim::{CostLut, Scenario, Simulator};
+
+/// Effective GFLOP/s of the analytic LUT every fleet job prices its model
+/// with (the scale examples use the same figure).
+pub(crate) const LUT_GFLOPS: f64 = 5.0;
+
+/// Rings at or below this width plan exhaustively (4! = 24 orders); wider
+/// rings use the budgeted beam + anneal search.  Fleet admission plans
+/// hundreds of rings per run, so per-ring planner cost must stay bounded.
+const FLEET_EXHAUSTIVE_MAX_DEVICES: usize = 4;
+
+/// Search profile for fleet (re-)planning: small beam plus the
+/// [`SearchParams::max_evals`] budget knob — deterministic and cheap
+/// enough to run at every admission and dropout re-plan.
+fn fleet_search() -> SearchParams {
+    SearchParams {
+        beam_width: 4,
+        anneal_iters: 600,
+        max_evals: 800,
+        ..SearchParams::default()
+    }
+}
+
+const RANK_DROP: u8 = 0;
+const RANK_DONE: u8 = 1;
+const RANK_ARRIVE: u8 = 2;
+
+/// Fleet event: min-heap key ordered by `(time, rank, id)` — dropouts
+/// before completions before arrivals at equal times, ties on the
+/// device/job id.  `Ord` is reversed because [`BinaryHeap`] is a max-heap.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Event {
+    t: f64,
+    rank: u8,
+    id: usize,
+}
+
+impl Eq for Event {}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .t
+            .total_cmp(&self.t)
+            .then_with(|| other.rank.cmp(&self.rank))
+            .then_with(|| other.id.cmp(&self.id))
+    }
+}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Everything the scheduler needs back from one job's simulation.
+struct JobRun {
+    completed_s: f64,
+    replans: usize,
+    /// Devices that fail-stopped while the job held them.
+    dropped: Vec<usize>,
+    /// Devices still alive at completion (returned to the pool).
+    survivors: Vec<usize>,
+    /// Busy seconds per pool device (non-zero only on the allocation).
+    busy: Vec<f64>,
+    nominal_s: f64,
+    deadline_s: f64,
+    failed: bool,
+}
+
+/// Plan a ring over `devices`: exhaustive for tiny rings, budgeted beam +
+/// anneal beyond (see [`fleet_search`]).
+fn plan_ring(planner: &Planner<'_>, devices: &[usize]) -> Result<LayerAssignment> {
+    let plan = if devices.len() <= FLEET_EXHAUSTIVE_MAX_DEVICES {
+        planner.plan_exhaustive(devices)?
+    } else {
+        planner.plan_beam_anneal_with(devices, &fleet_search())?
+    };
+    Ok(plan.assignment)
+}
+
+/// Simulate one admitted job to completion: RingAda schedule, per-round
+/// chunks, pool-scenario clock, dropout detection at round boundaries with
+/// re-planning over the survivors (mirrors `train::simulate_scenario`, but
+/// against a pool subset with the clock starting at admission).
+fn run_job(
+    cfg: &FleetConfig,
+    scenario: &Scenario,
+    spec: &JobSpec,
+    devices: &[usize],
+    admit_s: f64,
+) -> Result<JobRun> {
+    let meta = spec.model_meta();
+    let lut = CostLut::analytic(&meta, LUT_GFLOPS);
+    let costs = PlannerCosts {
+        block_fwd_s: lut.block_fwd_s,
+        activation_bytes: meta.activation_bytes(),
+    };
+    let nominal_s = spec.nominal_service_s(lut.block_fwd_s);
+    let deadline_s = spec.deadline_s(lut.block_fwd_s);
+    let planner = Planner::new(&meta, &cfg.pool, costs);
+    let training = TrainingConfig {
+        rounds: spec.rounds,
+        local_iters: spec.local_iters,
+        unfreeze_interval: 1,
+        initial_depth: 1,
+        seed: cfg.seed ^ (spec.id as u64),
+        ..TrainingConfig::default()
+    };
+    let sizes = WireSizes {
+        activation_bytes: meta.activation_bytes(),
+        head_bytes: (meta.head_params * 4).max(4),
+    };
+    let mut alive: Vec<usize> = devices.to_vec();
+    alive.sort_unstable();
+    let mut busy = vec![0.0f64; cfg.pool.len()];
+
+    let assignment = match plan_ring(&planner, &alive) {
+        Ok(a) => a,
+        Err(_) => {
+            // This subset cannot host the model (memory budgets): a failed
+            // job, not a fleet-wide error — its devices go straight back.
+            // Deliberately fail-fast rather than re-queue: the policy
+            // granted these devices, and re-queuing an infeasible grant
+            // would retry the identical decision every event (livelock).
+            // A memory-aware sizing policy is the real fix and slots into
+            // the AllocationPolicy trait without scheduler changes.
+            return Ok(JobRun {
+                completed_s: admit_s,
+                replans: 0,
+                dropped: Vec::new(),
+                survivors: alive,
+                busy,
+                nominal_s,
+                deadline_s,
+                failed: true,
+            });
+        }
+    };
+    let mut coordinator =
+        Coordinator::with_assignment_for_cluster(assignment, &meta, &cfg.pool, &training)?;
+    let mut builder =
+        ScheduleBuilder::new(coordinator.assignment.clone(), sizes, alive.len().max(2));
+    let mut sim = Simulator::with_scenario(cfg.pool.clone(), lut, scenario)?;
+    sim.now = admit_s; // release floor: nothing starts before admission
+    let mut pending: VecDeque<(f64, usize)> = scenario
+        .dropouts()
+        .into_iter()
+        .filter(|&(at, d)| at > admit_s && alive.contains(&d))
+        .collect();
+    let mut replans = 0usize;
+    let mut dropped: Vec<usize> = Vec::new();
+    let mut failed = false;
+    // Per-round batch budget stays fixed at the original ring width even
+    // after dropouts (the Fig. 3 comparability convention): survivors
+    // absorb the dead devices' initiator turns.
+    let turns = devices.len();
+
+    for round in 0..spec.rounds {
+        let rp = coordinator.round_plan(round)?;
+        for turn in 0..turns {
+            let initiator = rp.initiators[turn % rp.initiators.len()];
+            for _ in 0..spec.local_iters {
+                builder.ringada_step(&rp, initiator)?;
+            }
+            if turn + 1 < turns {
+                let next = rp.initiators[(turn + 1) % rp.initiators.len()];
+                if next != initiator {
+                    builder.head_handoff(initiator, next, round)?;
+                }
+            }
+        }
+        let (tasks, _handles) = builder.drain_chunk();
+        let report = sim.run(&tasks)?;
+        for (d, b) in report.device_busy.iter().enumerate() {
+            busy[d] += b;
+        }
+        // Fail-stops detected at this round boundary.
+        let mut need_replan = false;
+        while pending.front().map_or(false, |&(at, _)| at <= sim.now) {
+            let (_, d) = pending.pop_front().unwrap();
+            sim.drop_device(d);
+            alive.retain(|&x| x != d);
+            dropped.push(d);
+            need_replan = true;
+        }
+        if need_replan && round + 1 < spec.rounds {
+            if alive.is_empty() {
+                failed = true;
+                break;
+            }
+            replans += 1;
+            match plan_ring(&planner, &alive) {
+                Ok(a) => {
+                    coordinator =
+                        Coordinator::with_assignment_for_cluster(a, &meta, &cfg.pool, &training)?;
+                    builder = ScheduleBuilder::new(
+                        coordinator.assignment.clone(),
+                        sizes,
+                        alive.len().max(2),
+                    );
+                }
+                Err(_) => {
+                    failed = true;
+                    break;
+                }
+            }
+        }
+    }
+
+    Ok(JobRun {
+        completed_s: sim.now,
+        replans,
+        dropped,
+        survivors: alive,
+        busy,
+        nominal_s,
+        deadline_s,
+        failed,
+    })
+}
+
+/// Run the configured job stream through `policy` over the shared pool and
+/// return the aggregate [`FleetReport`] (see module docs for mechanics).
+pub fn serve(cfg: &FleetConfig, policy: &dyn AllocationPolicy) -> Result<FleetReport> {
+    cfg.validate()?;
+    let n = cfg.pool.len();
+    let scenario = cfg.scenario.clone().unwrap_or_else(Scenario::healthy);
+    let specs = JobTrace::synthetic(cfg);
+
+    let mut heap: BinaryHeap<Event> = BinaryHeap::new();
+    for s in &specs {
+        heap.push(Event { t: s.arrival_s, rank: RANK_ARRIVE, id: s.id });
+    }
+    for (at, d) in scenario.dropouts() {
+        heap.push(Event { t: at, rank: RANK_DROP, id: d });
+    }
+
+    let mut free: Vec<usize> = (0..n).collect();
+    let mut dead = vec![false; n];
+    let mut waiting: Vec<usize> = Vec::new();
+    let mut held: Vec<Vec<usize>> = vec![Vec::new(); specs.len()];
+    let mut rows: Vec<Option<FleetJobRow>> = vec![None; specs.len()];
+    let mut pool_busy = vec![0.0f64; n];
+    let mut last_done = 0.0f64;
+
+    while let Some(ev) = heap.pop() {
+        let now = ev.t;
+        match ev.rank {
+            RANK_DROP => {
+                dead[ev.id] = true;
+                free.retain(|&x| x != ev.id);
+            }
+            RANK_DONE => {
+                // A job that failed at admission (plan infeasible) did
+                // zero work and must not inflate the serving window that
+                // throughput/utilization divide by; mid-run failures did
+                // occupy the pool, so their end still counts.
+                if rows[ev.id]
+                    .as_ref()
+                    .map_or(false, |r| !r.failed || r.busy_s > 0.0)
+                {
+                    last_done = last_done.max(now);
+                }
+                let hs = std::mem::take(&mut held[ev.id]);
+                for d in hs {
+                    if !dead[d] {
+                        free.push(d);
+                    }
+                }
+                free.sort_unstable();
+            }
+            _ => waiting.push(ev.id),
+        }
+        if waiting.is_empty() || free.is_empty() {
+            continue;
+        }
+        let queue: Vec<&JobSpec> = waiting.iter().map(|&j| &specs[j]).collect();
+        let allocs = policy.allocate(
+            &queue,
+            &PoolView { cluster: &cfg.pool, free: &free, now },
+        );
+        for a in allocs {
+            let Some(wpos) = waiting.iter().position(|&j| j == a.job) else {
+                return Err(Error::Schedule(format!(
+                    "policy {} admitted job {} which is not waiting",
+                    policy.name(),
+                    a.job
+                )));
+            };
+            if a.devices.is_empty() {
+                return Err(Error::Schedule(format!(
+                    "policy {} allocated an empty ring to job {}",
+                    policy.name(),
+                    a.job
+                )));
+            }
+            for &d in &a.devices {
+                let Some(fpos) = free.iter().position(|&x| x == d) else {
+                    return Err(Error::Schedule(format!(
+                        "policy {} allocated device {d} which is not free",
+                        policy.name()
+                    )));
+                };
+                free.remove(fpos);
+            }
+            waiting.remove(wpos);
+            let spec = &specs[a.job];
+            let run = run_job(cfg, &scenario, spec, &a.devices, now)?;
+            for &d in &run.dropped {
+                dead[d] = true;
+            }
+            for (d, b) in run.busy.iter().enumerate() {
+                pool_busy[d] += b;
+            }
+            rows[a.job] = Some(FleetJobRow {
+                job: a.job,
+                arrival_s: spec.arrival_s,
+                admitted_s: now,
+                completed_s: run.completed_s,
+                ring: a.devices.len(),
+                replans: run.replans,
+                dropped: run.dropped.len(),
+                busy_s: run.busy.iter().sum(),
+                nominal_s: run.nominal_s,
+                deadline_s: run.deadline_s,
+                deadline_class: spec.deadline.name().to_string(),
+                failed: run.failed,
+            });
+            held[a.job] = run.survivors;
+            heap.push(Event { t: run.completed_s, rank: RANK_DONE, id: a.job });
+        }
+    }
+
+    let rows: Vec<FleetJobRow> = rows
+        .into_iter()
+        .enumerate()
+        .map(|(id, row)| {
+            row.unwrap_or_else(|| {
+                // The run ended with this job still waiting (pool too dead
+                // or the policy never found it a ring).
+                let s = &specs[id];
+                FleetJobRow {
+                    job: id,
+                    arrival_s: s.arrival_s,
+                    admitted_s: -1.0,
+                    completed_s: -1.0,
+                    ring: 0,
+                    replans: 0,
+                    dropped: 0,
+                    busy_s: 0.0,
+                    nominal_s: 0.0,
+                    deadline_s: 0.0,
+                    deadline_class: s.deadline.name().to_string(),
+                    failed: true,
+                }
+            })
+        })
+        .collect();
+
+    Ok(FleetReport {
+        policy: policy.name().to_string(),
+        scenario: scenario.name.clone(),
+        pool_devices: n,
+        rows,
+        horizon_s: last_done,
+        pool_device_busy: pool_busy,
+        dead_devices: dead.iter().filter(|&&d| d).count(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::FleetConfig;
+
+    #[test]
+    fn event_order_is_drop_done_arrive_at_equal_times() {
+        let mut h: BinaryHeap<Event> = BinaryHeap::new();
+        h.push(Event { t: 1.0, rank: RANK_ARRIVE, id: 0 });
+        h.push(Event { t: 1.0, rank: RANK_DROP, id: 3 });
+        h.push(Event { t: 1.0, rank: RANK_DONE, id: 2 });
+        h.push(Event { t: 0.5, rank: RANK_ARRIVE, id: 9 });
+        let order: Vec<(u8, usize)> = std::iter::from_fn(|| h.pop())
+            .map(|e| (e.rank, e.id))
+            .collect();
+        assert_eq!(
+            order,
+            vec![(RANK_ARRIVE, 9), (RANK_DROP, 3), (RANK_DONE, 2), (RANK_ARRIVE, 0)]
+        );
+    }
+
+    #[test]
+    fn single_job_fleet_completes() {
+        let mut cfg = FleetConfig::synthetic(6, 1, 5);
+        cfg.mean_interarrival_s = 5.0;
+        let report = serve(&cfg, &FifoWholeRing).unwrap();
+        assert_eq!(report.rows.len(), 1);
+        assert_eq!(report.completed(), 1);
+        let row = &report.rows[0];
+        assert!(row.admitted_s >= row.arrival_s - 1e-12);
+        assert!(row.completed_s > row.admitted_s);
+        assert!(row.busy_s > 0.0);
+        assert!(report.horizon_s > 0.0);
+        assert!(report.pool_utilization() > 0.0 && report.pool_utilization() <= 1.0);
+    }
+}

@@ -1,0 +1,248 @@
+//! Allocation policies: how the fleet scheduler carves per-job rings out
+//! of the shared device pool.
+//!
+//! A policy sees the waiting queue (arrival order) and the current free
+//! set, and returns the admissions to perform *now*.  Policies are pure
+//! and deterministic — same queue + pool state ⇒ same allocations — which
+//! is half of the fleet determinism guarantee (the other half being the
+//! seed-deterministic trace and simulator).
+//!
+//! Three built-ins span the classic serving trade-offs:
+//!
+//! * [`FifoWholeRing`] — strict FIFO, each job gets exactly its requested
+//!   ring; the head of the queue blocks everyone behind it (the baseline
+//!   every delta table compares against).
+//! * [`SmallestRingFirst`] — bin-packing: repeatedly admit the waiting job
+//!   with the smallest ring request that fits.  Better packing and
+//!   throughput, at a fairness cost to big jobs (visible in the Jain
+//!   column).
+//! * [`UtilizationAware`] — sizes rings with the planner's cheap
+//!   bottleneck estimate ([`Planner::estimate_bottleneck_for_devices`])
+//!   instead of taking the request literally: candidate widths around the
+//!   request are scored on the fastest free devices, strict-deadline jobs
+//!   take the width minimizing the bottleneck (fastest finish), everyone
+//!   else the width minimizing device-seconds per batch (best packing).
+
+use crate::config::ClusterConfig;
+use crate::coordinator::{Planner, PlannerCosts};
+use crate::sim::CostLut;
+
+use super::job::{DeadlineClass, JobSpec};
+use super::LUT_GFLOPS;
+
+/// Immutable pool state handed to an allocation policy.
+pub struct PoolView<'a> {
+    pub cluster: &'a ClusterConfig,
+    /// Free device ids, ascending.
+    pub free: &'a [usize],
+    /// Current fleet clock (seconds).
+    pub now: f64,
+}
+
+/// One admission decision: `job` starts now on `devices`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Allocation {
+    pub job: usize,
+    pub devices: Vec<usize>,
+}
+
+/// The policy interface.  `queue` is in arrival order; returned
+/// allocations must use disjoint subsets of `pool.free` and jobs from the
+/// queue — the scheduler validates both and errors on violations.
+pub trait AllocationPolicy {
+    fn name(&self) -> &'static str;
+    fn allocate(&self, queue: &[&JobSpec], pool: &PoolView<'_>) -> Vec<Allocation>;
+}
+
+/// Strict FIFO with whole-ring grants and head-of-line blocking.
+pub struct FifoWholeRing;
+
+impl AllocationPolicy for FifoWholeRing {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn allocate(&self, queue: &[&JobSpec], pool: &PoolView<'_>) -> Vec<Allocation> {
+        let mut free: Vec<usize> = pool.free.to_vec();
+        let mut out = Vec::new();
+        for job in queue {
+            if job.ring_size > free.len() {
+                break; // head-of-line blocking: nobody may jump the queue
+            }
+            let devices: Vec<usize> = free.drain(..job.ring_size).collect();
+            out.push(Allocation { job: job.id, devices });
+        }
+        out
+    }
+}
+
+/// Bin-packing: admit the smallest fitting ring request first (ties by
+/// arrival order).
+pub struct SmallestRingFirst;
+
+impl AllocationPolicy for SmallestRingFirst {
+    fn name(&self) -> &'static str {
+        "smallest-first"
+    }
+
+    fn allocate(&self, queue: &[&JobSpec], pool: &PoolView<'_>) -> Vec<Allocation> {
+        let mut free: Vec<usize> = pool.free.to_vec();
+        let mut remaining: Vec<&JobSpec> = queue.to_vec();
+        let mut out = Vec::new();
+        loop {
+            let mut pick: Option<usize> = None;
+            for (i, j) in remaining.iter().enumerate() {
+                if j.ring_size <= free.len()
+                    && pick.map_or(true, |p| j.ring_size < remaining[p].ring_size)
+                {
+                    pick = Some(i);
+                }
+            }
+            let Some(i) = pick else { break };
+            let job = remaining.remove(i);
+            let devices: Vec<usize> = free.drain(..job.ring_size).collect();
+            out.push(Allocation { job: job.id, devices });
+        }
+        out
+    }
+}
+
+/// Planner-guided ring sizing on the fastest free devices (see module
+/// docs).  Serves the queue in arrival order but skips jobs it cannot size
+/// yet (no head-of-line blocking).
+pub struct UtilizationAware;
+
+impl AllocationPolicy for UtilizationAware {
+    fn name(&self) -> &'static str {
+        "util-aware"
+    }
+
+    fn allocate(&self, queue: &[&JobSpec], pool: &PoolView<'_>) -> Vec<Allocation> {
+        let mut free: Vec<usize> = pool.free.to_vec();
+        let mut out = Vec::new();
+        for job in queue {
+            if free.is_empty() {
+                break;
+            }
+            // Candidate widths around the request, never below 2 (a
+            // 1-device ring would fail outright on its first dropout) and
+            // never past the free set, the model, or the 8-wide fleet cap.
+            // Checked before any planner construction: admission passes
+            // run on every fleet event, so skipped jobs must cost nothing.
+            let max_k = free.len().min(job.layers).min(8);
+            let min_k = (job.ring_size / 2).max(2);
+            if max_k < min_k {
+                continue; // cannot size this job yet; try the next
+            }
+            let meta = job.model_meta();
+            let lut = CostLut::analytic(&meta, LUT_GFLOPS);
+            let costs = PlannerCosts {
+                block_fwd_s: lut.block_fwd_s,
+                activation_bytes: meta.activation_bytes(),
+            };
+            let planner = Planner::new(&meta, pool.cluster, costs);
+            // Fastest free devices first (the planner's canonical
+            // speed-descending, ties-by-id order) — the subset any
+            // candidate width is scored on.
+            let by_speed = planner.speed_order(&free);
+            let mut cands = vec![
+                job.ring_size.clamp(min_k, max_k),
+                min_k,
+                (job.ring_size * 2).clamp(min_k, max_k),
+            ];
+            cands.sort_unstable();
+            cands.dedup();
+            let mut best: Option<(f64, usize)> = None;
+            for &k in &cands {
+                let Ok(bottleneck) = planner.estimate_bottleneck_for_devices(&by_speed[..k])
+                else {
+                    continue;
+                };
+                let score = match job.deadline {
+                    DeadlineClass::Strict => bottleneck,
+                    _ => bottleneck * k as f64, // device-seconds per batch
+                };
+                if best.map_or(true, |(s, bk)| score < s || (score == s && k < bk)) {
+                    best = Some((score, k));
+                }
+            }
+            let Some((_, k)) = best else { continue };
+            let mut devices: Vec<usize> = by_speed[..k].to_vec();
+            devices.sort_unstable();
+            free.retain(|d| !devices.contains(d));
+            out.push(Allocation { job: job.id, devices });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    fn job(id: usize, ring: usize, layers: usize) -> JobSpec {
+        JobSpec {
+            id,
+            arrival_s: id as f64,
+            layers,
+            rounds: 2,
+            local_iters: 1,
+            ring_size: ring,
+            deadline: DeadlineClass::Standard,
+        }
+    }
+
+    #[test]
+    fn fifo_blocks_behind_the_head() {
+        let cl = ClusterConfig::synthetic(4, 1, 0.3);
+        let j0 = job(0, 6, 16); // does not fit a 4-device pool
+        let j1 = job(1, 2, 16); // would fit, but FIFO must not skip ahead
+        let free = [0, 1, 2, 3];
+        let view = PoolView { cluster: &cl, free: &free, now: 0.0 };
+        let allocs = FifoWholeRing.allocate(&[&j0, &j1], &view);
+        assert!(allocs.is_empty(), "head-of-line blocking violated: {allocs:?}");
+        // Once the head fits, both go, in order, on disjoint devices.
+        let j0 = job(0, 2, 16);
+        let allocs = FifoWholeRing.allocate(&[&j0, &j1], &view);
+        assert_eq!(allocs.len(), 2);
+        assert_eq!(allocs[0], Allocation { job: 0, devices: vec![0, 1] });
+        assert_eq!(allocs[1], Allocation { job: 1, devices: vec![2, 3] });
+    }
+
+    #[test]
+    fn smallest_first_packs_around_a_big_head() {
+        let cl = ClusterConfig::synthetic(4, 1, 0.3);
+        let j0 = job(0, 6, 16);
+        let j1 = job(1, 3, 16);
+        let j2 = job(2, 2, 16);
+        let free = [0, 1, 2, 3];
+        let view = PoolView { cluster: &cl, free: &free, now: 0.0 };
+        let allocs = SmallestRingFirst.allocate(&[&j0, &j1, &j2], &view);
+        // Smallest request (job 2, ring 2) admitted first; the remaining 2
+        // free devices fit neither job 1 (ring 3) nor the head (ring 6).
+        assert_eq!(allocs.len(), 1);
+        assert_eq!(allocs[0].job, 2);
+        assert_eq!(allocs[0].devices.len(), 2);
+    }
+
+    #[test]
+    fn util_aware_sizes_rings_and_skips_unfittable_jobs() {
+        let cl = ClusterConfig::synthetic(8, 7, 0.6);
+        let j0 = job(0, 8, 8); // request 8, model only supports small rings
+        let j1 = job(1, 2, 16);
+        let free: Vec<usize> = (0..8).collect();
+        let view = PoolView { cluster: &cl, free: &free, now: 0.0 };
+        let allocs = UtilizationAware.allocate(&[&j0, &j1], &view);
+        assert!(!allocs.is_empty());
+        // All grants are disjoint, within the pool, and at least 2 wide.
+        let mut seen = vec![false; 8];
+        for a in &allocs {
+            assert!(a.devices.len() >= 2);
+            for &d in &a.devices {
+                assert!(d < 8 && !seen[d], "overlapping grant on device {d}");
+                seen[d] = true;
+            }
+        }
+    }
+}

@@ -25,6 +25,7 @@
 //! | fault/heterogeneity scenario scripts   | [`sim::scenario`] |
 //! | dropout re-planning, chaos driver      | [`train`] (`simulate_scenario`) |
 //! | per-device memory accounting (Table I) | [`model::memory`] |
+//! | multi-tenant fleet serving             | [`fleet`] |
 //! | device actors + D2D links              | [`cluster`] |
 //! | PJRT execution of AOT artifacts        | [`runtime`] |
 //! | SQuAD-stand-in synthetic QA            | [`data`] |
@@ -69,12 +70,34 @@
 //! `ExperimentConfig` JSON file may carry one under the `"scenario"` key,
 //! and `examples/chaos_ring.rs` sweeps failure intensity across all three
 //! schemes.
+//!
+//! ## Multi-tenant fleet serving
+//!
+//! The [`fleet`] subsystem multiplexes a *stream* of fine-tuning jobs over
+//! one shared device pool: synthetic Poisson-like arrivals, pluggable
+//! allocation policies, per-job rings planned on pool subsets, and
+//! pool-level fault scenarios that hit whichever job holds the device:
+//!
+//! ```
+//! use ringada::config::FleetConfig;
+//! use ringada::fleet::{serve, FifoWholeRing};
+//!
+//! let cfg = FleetConfig::synthetic(8, 3, 7); // 8-device pool, 3 jobs
+//! let report = serve(&cfg, &FifoWholeRing).unwrap();
+//! assert_eq!(report.rows.len(), 3);
+//! assert!(report.completed() > 0);
+//! ```
+//!
+//! `examples/fleet_serving.rs` runs 64 jobs over a 128-device pool under
+//! all three policies, healthy and faulted, and prints the per-policy
+//! throughput / JCT / fairness delta table.
 
 pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod error;
+pub mod fleet;
 pub mod metrics;
 pub mod model;
 pub mod pipeline;
@@ -88,13 +111,17 @@ pub use error::{Error, Result};
 /// Convenient glob-import surface for examples and downstream users.
 pub mod prelude {
     pub use crate::config::{
-        ClusterConfig, DeviceSpec, ExperimentConfig, Scheme, TrainingConfig,
+        ClusterConfig, DeviceSpec, ExperimentConfig, FleetConfig, Scheme, TrainingConfig,
     };
     pub use crate::cluster::RingCluster;
     pub use crate::coordinator::{Coordinator, LayerAssignment, Planner, PlannerCosts, UnfreezeSchedule};
     pub use crate::data::{Batch, QaConfig, SyntheticQa};
     pub use crate::error::{Error, Result};
-    pub use crate::metrics::{LossCurve, SpanMetrics, TablePrinter};
+    pub use crate::fleet::{
+        serve, AllocationPolicy, DeadlineClass, FifoWholeRing, JobSpec, JobTrace,
+        SmallestRingFirst, UtilizationAware,
+    };
+    pub use crate::metrics::{FleetDeltaTable, FleetReport, LossCurve, SpanMetrics, TablePrinter};
     pub use crate::model::{MemoryModel, ModelMeta};
     pub use crate::pipeline::{ScheduleBuilder, WireSizes};
     pub use crate::runtime::{Engine, HostTensor, ModelWeights, StageRunner};

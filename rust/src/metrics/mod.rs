@@ -286,6 +286,351 @@ impl ScenarioDeltaTable {
     }
 }
 
+// ------------------------------------------------------------------- fleet
+
+/// One job's outcome inside a [`FleetReport`] (produced by
+/// `fleet::serve`).  Times are absolute fleet-clock seconds; a negative
+/// `admitted_s`/`completed_s` marks a job the run ended without serving.
+#[derive(Debug, Clone)]
+pub struct FleetJobRow {
+    pub job: usize,
+    pub arrival_s: f64,
+    /// Admission time, or `-1.0` if the job was never admitted.
+    pub admitted_s: f64,
+    /// Completion (or failure-detection) time, `-1.0` if never admitted.
+    pub completed_s: f64,
+    /// Devices in the job's initial ring (0 if never admitted).
+    pub ring: usize,
+    /// Ring re-plans forced by device dropouts.
+    pub replans: usize,
+    /// Devices that fail-stopped while this job held them.
+    pub dropped: usize,
+    /// Device-busy seconds the job consumed across its ring.
+    pub busy_s: f64,
+    /// Contention-free service-time estimate (slowdown / deadline basis).
+    pub nominal_s: f64,
+    /// Absolute deadline (arrival + class slack × nominal).
+    pub deadline_s: f64,
+    /// Deadline class name ("strict" / "standard" / "relaxed").
+    pub deadline_class: String,
+    /// True when the job lost every device (or a re-plan failed).
+    pub failed: bool,
+}
+
+impl FleetJobRow {
+    pub fn completed(&self) -> bool {
+        !self.failed && self.completed_s >= 0.0
+    }
+
+    /// Job completion time: arrival → completion (queueing included).
+    pub fn jct_s(&self) -> f64 {
+        self.completed_s - self.arrival_s
+    }
+
+    /// Queueing delay: arrival → admission.
+    pub fn wait_s(&self) -> f64 {
+        self.admitted_s - self.arrival_s
+    }
+
+    /// JCT over the contention-free estimate (1.0 = no slowdown).
+    pub fn slowdown(&self) -> f64 {
+        if self.nominal_s > 0.0 {
+            self.jct_s() / self.nominal_s
+        } else {
+            1.0
+        }
+    }
+
+    pub fn met_deadline(&self) -> bool {
+        self.completed() && self.completed_s <= self.deadline_s
+    }
+}
+
+/// Aggregate result of one fleet serving run: one row per job plus
+/// pool-level capacity accounting.  Everything is deterministically
+/// ordered (rows by job id), so [`FleetReport::canonical_string`] is
+/// byte-identical for identical `(FleetConfig, policy)` inputs.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub policy: String,
+    pub scenario: String,
+    /// Devices in the shared pool.
+    pub pool_devices: usize,
+    /// Per-job outcomes in job-id (= arrival) order.
+    pub rows: Vec<FleetJobRow>,
+    /// Last job completion time — the serving window every rate below is
+    /// measured over (0 if nothing completed).
+    pub horizon_s: f64,
+    /// Busy seconds per pool device, summed over every job that held it.
+    pub pool_device_busy: Vec<f64>,
+    /// Devices fail-stopped by the scenario over the run.
+    pub dead_devices: usize,
+}
+
+impl FleetReport {
+    pub fn completed(&self) -> usize {
+        self.rows.iter().filter(|r| r.completed()).count()
+    }
+
+    /// Jobs admitted but lost to faults (every ring device died, or a
+    /// post-dropout re-plan was infeasible).
+    pub fn failed_jobs(&self) -> usize {
+        self.rows
+            .iter()
+            .filter(|r| r.failed && r.admitted_s >= 0.0)
+            .count()
+    }
+
+    /// Jobs the run ended without admitting.
+    pub fn unserved(&self) -> usize {
+        self.rows.iter().filter(|r| r.admitted_s < 0.0).count()
+    }
+
+    pub fn throughput_jobs_per_hour(&self) -> f64 {
+        if self.horizon_s > 0.0 {
+            self.completed() as f64 * 3600.0 / self.horizon_s
+        } else {
+            0.0
+        }
+    }
+
+    fn completed_jcts(&self) -> Vec<f64> {
+        let mut jcts: Vec<f64> = self
+            .rows
+            .iter()
+            .filter(|r| r.completed())
+            .map(FleetJobRow::jct_s)
+            .collect();
+        jcts.sort_by(|a, b| a.total_cmp(b));
+        jcts
+    }
+
+    pub fn mean_jct_s(&self) -> f64 {
+        let jcts = self.completed_jcts();
+        if jcts.is_empty() {
+            0.0
+        } else {
+            jcts.iter().sum::<f64>() / jcts.len() as f64
+        }
+    }
+
+    /// 95th-percentile JCT (nearest-rank; deterministic integer math).
+    pub fn p95_jct_s(&self) -> f64 {
+        let jcts = self.completed_jcts();
+        if jcts.is_empty() {
+            return 0.0;
+        }
+        let n = jcts.len();
+        let idx = ((n * 95 + 99) / 100).max(1) - 1;
+        jcts[idx]
+    }
+
+    /// Mean queueing delay over admitted jobs.
+    pub fn mean_wait_s(&self) -> f64 {
+        let waits: Vec<f64> = self
+            .rows
+            .iter()
+            .filter(|r| r.admitted_s >= 0.0)
+            .map(FleetJobRow::wait_s)
+            .collect();
+        if waits.is_empty() {
+            0.0
+        } else {
+            waits.iter().sum::<f64>() / waits.len() as f64
+        }
+    }
+
+    /// Busy fraction of the whole pool's capacity over the serving window
+    /// (dead devices stay in the denominator — lost capacity is lost).
+    pub fn pool_utilization(&self) -> f64 {
+        let cap = self.pool_devices as f64 * self.horizon_s;
+        if cap > 0.0 {
+            self.pool_device_busy.iter().sum::<f64>() / cap
+        } else {
+            0.0
+        }
+    }
+
+    /// Jain fairness index over completed jobs' normalized service rates
+    /// `nominal / JCT` (1 = contention-free service).  1.0 = perfectly
+    /// fair, 1/n = one job got everything, 0 = nothing completed.
+    pub fn jain_fairness(&self) -> f64 {
+        let xs: Vec<f64> = self
+            .rows
+            .iter()
+            .filter(|r| r.completed() && r.jct_s() > 0.0 && r.nominal_s > 0.0)
+            .map(|r| r.nominal_s / r.jct_s())
+            .collect();
+        if xs.is_empty() {
+            return 0.0;
+        }
+        let sum: f64 = xs.iter().sum();
+        let sq: f64 = xs.iter().map(|x| x * x).sum();
+        if sq > 0.0 {
+            sum * sum / (xs.len() as f64 * sq)
+        } else {
+            0.0
+        }
+    }
+
+    /// Fraction of *all* jobs in the stream that finished inside their
+    /// deadline.  Failed and unserved jobs count as misses — a policy must
+    /// not score higher by abandoning its slow jobs instead of finishing
+    /// them late.
+    pub fn deadline_hit_rate(&self) -> f64 {
+        if self.rows.is_empty() {
+            return 0.0;
+        }
+        self.rows.iter().filter(|r| r.met_deadline()).count() as f64 / self.rows.len() as f64
+    }
+
+    /// Deterministic textual fingerprint: identical `(FleetConfig, policy)`
+    /// runs produce byte-identical strings (f64s print via `Display`, so
+    /// equal bits ⇒ equal text).  The fleet determinism property test and
+    /// golden comparisons pin this.
+    pub fn canonical_string(&self) -> String {
+        let mut s = String::new();
+        let _ = write!(
+            s,
+            "policy={};scenario={};pool={};horizon={};dead={}",
+            self.policy, self.scenario, self.pool_devices, self.horizon_s, self.dead_devices,
+        );
+        let _ = write!(s, ";jobs=[");
+        for (i, r) in self.rows.iter().enumerate() {
+            let _ = write!(
+                s,
+                "{}{{id={},arr={},adm={},done={},ring={},replans={},dropped={},busy={},nominal={},deadline={},class={},failed={}}}",
+                if i > 0 { "," } else { "" },
+                r.job,
+                r.arrival_s,
+                r.admitted_s,
+                r.completed_s,
+                r.ring,
+                r.replans,
+                r.dropped,
+                r.busy_s,
+                r.nominal_s,
+                r.deadline_s,
+                r.deadline_class,
+                r.failed,
+            );
+        }
+        let _ = write!(s, "];busy=[");
+        for (i, b) in self.pool_device_busy.iter().enumerate() {
+            let _ = write!(s, "{}{b}", if i > 0 { "," } else { "" });
+        }
+        s.push(']');
+        s
+    }
+}
+
+/// One policy × scenario fleet outcome, with deltas against a baseline
+/// policy's run on the same job stream (conventionally FIFO on the healthy
+/// pool).
+#[derive(Debug, Clone)]
+pub struct FleetDeltaRow {
+    pub policy: String,
+    pub scenario: String,
+    pub baseline_policy: String,
+    pub completed: usize,
+    pub failed: usize,
+    pub unserved: usize,
+    pub throughput_jph: f64,
+    pub throughput_delta_pct: f64,
+    pub mean_jct_s: f64,
+    pub jct_delta_pct: f64,
+    pub p95_jct_s: f64,
+    pub mean_wait_s: f64,
+    pub utilization: f64,
+    pub jain: f64,
+    pub deadline_rate: f64,
+}
+
+impl FleetDeltaRow {
+    pub fn from_reports(baseline: &FleetReport, run: &FleetReport) -> Self {
+        let thr_b = baseline.throughput_jobs_per_hour();
+        let thr = run.throughput_jobs_per_hour();
+        let jct_b = baseline.mean_jct_s();
+        let jct = run.mean_jct_s();
+        FleetDeltaRow {
+            policy: run.policy.clone(),
+            scenario: run.scenario.clone(),
+            baseline_policy: baseline.policy.clone(),
+            completed: run.completed(),
+            failed: run.failed_jobs(),
+            unserved: run.unserved(),
+            throughput_jph: thr,
+            throughput_delta_pct: if thr_b > 0.0 {
+                100.0 * (thr - thr_b) / thr_b
+            } else {
+                0.0
+            },
+            mean_jct_s: jct,
+            jct_delta_pct: if jct_b > 0.0 { 100.0 * (jct - jct_b) / jct_b } else { 0.0 },
+            p95_jct_s: run.p95_jct_s(),
+            mean_wait_s: run.mean_wait_s(),
+            utilization: run.pool_utilization(),
+            jain: run.jain_fairness(),
+            deadline_rate: run.deadline_hit_rate(),
+        }
+    }
+}
+
+/// Renders fleet sweeps: one row per policy × scenario with throughput /
+/// JCT deltas against the baseline policy on the same job stream.
+#[derive(Debug, Clone, Default)]
+pub struct FleetDeltaTable {
+    pub rows: Vec<FleetDeltaRow>,
+}
+
+impl FleetDeltaTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, baseline: &FleetReport, run: &FleetReport) {
+        self.rows.push(FleetDeltaRow::from_reports(baseline, run));
+    }
+
+    pub fn render(&self) -> String {
+        let mut t = TablePrinter::new(&[
+            "Policy",
+            "Scenario",
+            "Done",
+            "Fail",
+            "Unserved",
+            "Thr (j/h)",
+            "Δ thr",
+            "Mean JCT (s)",
+            "Δ JCT",
+            "p95 JCT (s)",
+            "Wait (s)",
+            "Util (%)",
+            "Jain",
+            "DL hit (%)",
+        ]);
+        for r in &self.rows {
+            t.row(vec![
+                r.policy.clone(),
+                r.scenario.clone(),
+                r.completed.to_string(),
+                r.failed.to_string(),
+                r.unserved.to_string(),
+                format!("{:.1}", r.throughput_jph),
+                format!("{:+.1}%", r.throughput_delta_pct),
+                format!("{:.1}", r.mean_jct_s),
+                format!("{:+.1}%", r.jct_delta_pct),
+                format!("{:.1}", r.p95_jct_s),
+                format!("{:.1}", r.mean_wait_s),
+                format!("{:.1}", 100.0 * r.utilization),
+                format!("{:.3}", r.jain),
+                format!("{:.1}", 100.0 * r.deadline_rate),
+            ]);
+        }
+        t.render()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -429,6 +774,98 @@ mod tests {
         let s = t.render();
         assert!(s.contains("| Scheme "));
         assert!(s.contains("| RingAda"));
+        assert_eq!(s.lines().count(), 3);
+    }
+
+    fn fleet_row(job: usize, arr: f64, adm: f64, done: f64, nominal: f64) -> FleetJobRow {
+        FleetJobRow {
+            job,
+            arrival_s: arr,
+            admitted_s: adm,
+            completed_s: done,
+            ring: 4,
+            replans: 0,
+            dropped: 0,
+            busy_s: 5.0,
+            nominal_s: nominal,
+            deadline_s: arr + 4.0 * nominal,
+            deadline_class: "standard".into(),
+            failed: false,
+        }
+    }
+
+    fn fleet_report(rows: Vec<FleetJobRow>) -> FleetReport {
+        FleetReport {
+            policy: "fifo".into(),
+            scenario: "healthy".into(),
+            pool_devices: 4,
+            rows,
+            horizon_s: 100.0,
+            pool_device_busy: vec![10.0, 10.0, 0.0, 0.0],
+            dead_devices: 0,
+        }
+    }
+
+    #[test]
+    fn fleet_report_aggregates() {
+        let mut unserved = fleet_row(2, 5.0, -1.0, -1.0, 0.0);
+        unserved.failed = true;
+        unserved.ring = 0;
+        let r = fleet_report(vec![
+            fleet_row(0, 0.0, 0.0, 10.0, 5.0),  // jct 10, rate 0.5
+            fleet_row(1, 0.0, 2.0, 20.0, 5.0),  // jct 20, rate 0.25
+            unserved,
+        ]);
+        assert_eq!(r.completed(), 2);
+        assert_eq!(r.failed_jobs(), 0);
+        assert_eq!(r.unserved(), 1);
+        assert!((r.throughput_jobs_per_hour() - 72.0).abs() < 1e-9);
+        assert!((r.mean_jct_s() - 15.0).abs() < 1e-9);
+        assert!((r.p95_jct_s() - 20.0).abs() < 1e-9);
+        assert!((r.mean_wait_s() - 1.0).abs() < 1e-9);
+        assert!((r.pool_utilization() - 0.05).abs() < 1e-12);
+        // Jain over rates [0.5, 0.25]: (0.75)^2 / (2 * 0.3125) = 0.9.
+        assert!((r.jain_fairness() - 0.9).abs() < 1e-9);
+        // Both completions landed inside arrival + 4x nominal = 20, but
+        // the unserved job counts as a miss: 2 of 3.
+        assert!((r.deadline_hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fleet_jain_is_one_when_service_is_even() {
+        let r = fleet_report(vec![
+            fleet_row(0, 0.0, 0.0, 10.0, 5.0),
+            fleet_row(1, 10.0, 10.0, 20.0, 5.0),
+        ]);
+        assert!((r.jain_fairness() - 1.0).abs() < 1e-12);
+        let empty = fleet_report(vec![]);
+        assert_eq!(empty.jain_fairness(), 0.0);
+        assert_eq!(empty.p95_jct_s(), 0.0);
+    }
+
+    #[test]
+    fn fleet_canonical_string_is_deterministic_and_distinct() {
+        let a = fleet_report(vec![fleet_row(0, 0.0, 0.0, 10.0, 5.0)]);
+        let b = fleet_report(vec![fleet_row(0, 0.0, 0.0, 10.0, 5.0)]);
+        assert_eq!(a.canonical_string(), b.canonical_string());
+        let c = fleet_report(vec![fleet_row(0, 0.0, 0.0, 10.5, 5.0)]);
+        assert_ne!(a.canonical_string(), c.canonical_string());
+        assert!(a.canonical_string().starts_with("policy=fifo;scenario=healthy"));
+    }
+
+    #[test]
+    fn fleet_delta_table_renders_deltas() {
+        let base = fleet_report(vec![fleet_row(0, 0.0, 0.0, 10.0, 5.0)]);
+        let mut faster = fleet_report(vec![fleet_row(0, 0.0, 0.0, 5.0, 5.0)]);
+        faster.policy = "smallest-first".into();
+        let mut t = FleetDeltaTable::new();
+        t.push(&base, &faster);
+        let row = &t.rows[0];
+        assert!((row.jct_delta_pct + 50.0).abs() < 1e-9);
+        assert_eq!(row.baseline_policy, "fifo");
+        let s = t.render();
+        assert!(s.contains("smallest-first"));
+        assert!(s.contains("-50.0%"));
         assert_eq!(s.lines().count(), 3);
     }
 }

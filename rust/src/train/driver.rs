@@ -403,6 +403,12 @@ fn plan_over_survivors(
 /// 3. start/finish vectors, per-device busy time and link-byte totals
 ///    accumulate into a deterministically-ordered report, so the same
 ///    (seed, scenario) pair reproduces byte-identical output.
+///
+/// `fleet::run_job` mirrors this round-advance / boundary-detect / re-plan
+/// protocol against a pool *subset* (RingAda only, clock released at
+/// admission) — a semantic change to dropout detection or re-planning here
+/// must be applied there too, or fleet runs and single-job scenario runs
+/// will disagree on the same script.
 pub fn simulate_scenario(
     meta: &ModelMeta,
     cluster: &ClusterConfig,

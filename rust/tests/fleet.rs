@@ -1,0 +1,162 @@
+//! Fleet scheduler battery: seed determinism (the acceptance property —
+//! same `FleetConfig` seed ⇒ byte-identical `FleetReport` canonical
+//! string), policy invariants, fault handling, and config round-trips.
+
+use ringada::config::FleetConfig;
+use ringada::fleet::{
+    serve, AllocationPolicy, FifoWholeRing, JobTrace, SmallestRingFirst, UtilizationAware,
+};
+use ringada::metrics::FleetDeltaTable;
+use ringada::sim::Scenario;
+use ringada::util::json::Json;
+
+fn policies() -> [&'static dyn AllocationPolicy; 3] {
+    [&FifoWholeRing, &SmallestRingFirst, &UtilizationAware]
+}
+
+fn small_cfg(seed: u64) -> FleetConfig {
+    let mut cfg = FleetConfig::synthetic(16, 12, seed);
+    cfg.mean_interarrival_s = 10.0;
+    cfg
+}
+
+#[test]
+fn fleet_runs_are_seed_deterministic_for_every_policy() {
+    for policy in policies() {
+        let cfg = small_cfg(3);
+        let a = serve(&cfg, policy).unwrap();
+        let b = serve(&cfg, policy).unwrap();
+        assert_eq!(
+            a.canonical_string(),
+            b.canonical_string(),
+            "policy {} is not deterministic",
+            policy.name()
+        );
+    }
+}
+
+#[test]
+fn different_seeds_change_the_report() {
+    let a = serve(&small_cfg(3), &FifoWholeRing).unwrap();
+    let b = serve(&small_cfg(4), &FifoWholeRing).unwrap();
+    assert_ne!(a.canonical_string(), b.canonical_string());
+}
+
+#[test]
+fn faulted_fleet_is_deterministic_and_accounts_for_every_job() {
+    // Property sweep over seeds: job conservation (completed + failed +
+    // unserved = jobs), dropout accounting, and byte-identical replays
+    // under an intensity-0.8 scenario (stragglers + degraded link + one
+    // dropout).
+    for seed in [5, 7, 11] {
+        let mut cfg = small_cfg(seed);
+        cfg.scenario = Some(Scenario::synth(seed, 16, 2000.0, 0.8));
+        let n_drops = cfg.scenario.as_ref().unwrap().dropouts().len();
+        assert_eq!(n_drops, 1, "intensity 0.8 scripts one dropout");
+        for policy in policies() {
+            let a = serve(&cfg, policy).unwrap();
+            let b = serve(&cfg, policy).unwrap();
+            assert_eq!(a.canonical_string(), b.canonical_string());
+            assert_eq!(
+                a.completed() + a.failed_jobs() + a.unserved(),
+                cfg.jobs,
+                "job conservation violated (seed {seed}, policy {})",
+                policy.name()
+            );
+            assert_eq!(a.dead_devices, n_drops);
+            assert!(a.pool_utilization() >= 0.0 && a.pool_utilization() <= 1.0);
+        }
+    }
+}
+
+#[test]
+fn fifo_admits_in_arrival_order() {
+    let report = serve(&small_cfg(5), &FifoWholeRing).unwrap();
+    // Rows are in job-id = arrival order; FIFO must never admit a later
+    // job before an earlier one.
+    let admitted: Vec<f64> = report
+        .rows
+        .iter()
+        .filter(|r| r.admitted_s >= 0.0)
+        .map(|r| r.admitted_s)
+        .collect();
+    assert!(!admitted.is_empty());
+    assert!(
+        admitted.windows(2).all(|w| w[0] <= w[1] + 1e-12),
+        "FIFO admission order violated: {admitted:?}"
+    );
+}
+
+#[test]
+fn all_jobs_complete_on_a_big_healthy_pool() {
+    let cfg = FleetConfig::synthetic(64, 24, 9);
+    for policy in policies() {
+        let report = serve(&cfg, policy).unwrap();
+        assert_eq!(
+            report.completed(),
+            24,
+            "policy {} left jobs unfinished on an oversized healthy pool",
+            policy.name()
+        );
+        assert!(report.throughput_jobs_per_hour() > 0.0);
+        assert!(report.mean_jct_s() > 0.0);
+        assert!(report.p95_jct_s() >= report.mean_jct_s() * 0.5);
+        let jain = report.jain_fairness();
+        assert!(jain > 0.0 && jain <= 1.0 + 1e-12, "jain {jain} out of range");
+        // Every row carries consistent bookkeeping.
+        for r in &report.rows {
+            assert!(r.admitted_s >= r.arrival_s - 1e-12);
+            assert!(r.completed_s > r.admitted_s);
+            assert!(r.ring >= 2);
+            assert!(r.busy_s > 0.0);
+            assert!(r.nominal_s > 0.0);
+        }
+    }
+}
+
+#[test]
+fn trace_generation_is_shared_by_serve() {
+    // serve() must consume exactly the trace JobTrace::synthetic yields:
+    // arrivals in the report match the standalone generator.
+    let cfg = small_cfg(13);
+    let trace = JobTrace::synthetic(&cfg);
+    let report = serve(&cfg, &FifoWholeRing).unwrap();
+    assert_eq!(report.rows.len(), trace.len());
+    for (row, spec) in report.rows.iter().zip(&trace) {
+        assert_eq!(row.job, spec.id);
+        assert_eq!(row.arrival_s.to_bits(), spec.arrival_s.to_bits());
+        assert_eq!(row.deadline_class, spec.deadline.name());
+    }
+}
+
+#[test]
+fn fleet_config_json_round_trips_through_serve() {
+    // A config rebuilt from its own JSON produces a byte-identical run.
+    let mut cfg = small_cfg(7);
+    cfg.scenario = Some(Scenario::synth(7, 16, 1000.0, 0.5));
+    let back = FleetConfig::from_json(&Json::parse(&cfg.to_json().pretty()).unwrap()).unwrap();
+    let a = serve(&cfg, &SmallestRingFirst).unwrap();
+    let b = serve(&back, &SmallestRingFirst).unwrap();
+    assert_eq!(a.canonical_string(), b.canonical_string());
+}
+
+#[test]
+fn delta_table_compares_policies_on_one_stream() {
+    let cfg = small_cfg(3);
+    let base = serve(&cfg, &FifoWholeRing).unwrap();
+    let mut table = FleetDeltaTable::new();
+    table.push(&base, &base);
+    for policy in [&SmallestRingFirst as &dyn AllocationPolicy, &UtilizationAware] {
+        let run = serve(&cfg, policy).unwrap();
+        table.push(&base, &run);
+    }
+    let rendered = table.render();
+    assert!(rendered.contains("fifo"));
+    assert!(rendered.contains("smallest-first"));
+    assert!(rendered.contains("util-aware"));
+    // Header + separator + 3 rows.
+    assert_eq!(rendered.lines().count(), 5);
+    // The self-delta row is exactly zero.
+    assert!((table.rows[0].jct_delta_pct).abs() < 1e-12);
+    assert!((table.rows[0].throughput_delta_pct).abs() < 1e-12);
+}

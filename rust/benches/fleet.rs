@@ -8,9 +8,10 @@
 //! --smoke` (also honored via `RINGADA_BENCH_SMOKE=1`) for the quick CI
 //! profile: smaller pool and stream, same JSON schema.
 
-use ringada::config::FleetConfig;
+use ringada::config::{AdmissionControl, FleetConfig};
 use ringada::fleet::{
-    serve, AllocationPolicy, FifoWholeRing, JobTrace, SmallestRingFirst, UtilizationAware,
+    serve, AllocationPolicy, DeadlineEdf, FifoWholeRing, JobTrace, SmallestRingFirst,
+    UtilizationAware,
 };
 use ringada::sim::Scenario;
 use ringada::util::bench::{black_box, Bencher};
@@ -37,10 +38,24 @@ fn main() {
         r.mean.as_secs_f64()
     };
 
-    let policies: [&dyn AllocationPolicy; 3] =
-        [&FifoWholeRing, &SmallestRingFirst, &UtilizationAware];
+    // A contended profile exercising the round-granular paths: priority
+    // preemption + feasibility admission under the fault script (only
+    // DeadlineEdf acts on those hooks; the others run it as a plain
+    // overloaded pool).
+    let mut preempting = faulted.clone();
+    preempting.mean_interarrival_s = if smoke { 2.0 } else { 4.0 };
+    preempting.priority_mix = [0.3, 0.4, 0.3];
+    preempting.preemption = true;
+    preempting.admission = AdmissionControl::Feasibility;
+
+    let policies: [&dyn AllocationPolicy; 4] =
+        [&FifoWholeRing, &SmallestRingFirst, &UtilizationAware, &DeadlineEdf];
     let mut rows = Vec::new();
-    for (label, c) in [("healthy", &cfg), ("faulted", &faulted)] {
+    for (label, c) in [
+        ("healthy", &cfg),
+        ("faulted", &faulted),
+        ("preempting", &preempting),
+    ] {
         for policy in policies {
             let report = serve(c, policy).expect("fleet run must succeed");
             let serve_mean_s = {
@@ -85,6 +100,9 @@ fn main() {
                     "deadline_hit_rate",
                     Json::num(report.deadline_hit_rate()),
                 ),
+                ("preemptions", Json::num(report.preemptions() as f64)),
+                ("resizes", Json::num(report.resizes() as f64)),
+                ("rejected", Json::num(report.rejected_jobs() as f64)),
             ]));
         }
     }

@@ -440,6 +440,41 @@ impl ExperimentConfig {
     }
 }
 
+/// How the fleet scheduler admission-controls the waiting queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionControl {
+    /// Every job eventually gets a ring if the pool can host one (the
+    /// pre-admission-control behavior; the legacy differential path
+    /// requires it).
+    Open,
+    /// The policy may permanently reject a not-yet-started job whose
+    /// *estimated best-case* finish (planner bottleneck estimate over the
+    /// pool's fastest alive devices — a heuristic shed threshold, not a
+    /// proof of infeasibility) already misses its deadline.  Rejected
+    /// jobs count as deadline misses — rejection sheds load, it does not
+    /// launder the hit-rate metric.
+    Feasibility,
+}
+
+impl AdmissionControl {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdmissionControl::Open => "open",
+            AdmissionControl::Feasibility => "feasibility",
+        }
+    }
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "open" => Ok(AdmissionControl::Open),
+            "feasibility" => Ok(AdmissionControl::Feasibility),
+            other => Err(Error::Config(format!(
+                "admission `{other}` is not one of: open, feasibility"
+            ))),
+        }
+    }
+}
+
 /// A multi-tenant serving experiment (the `fleet` subsystem): one shared
 /// edge-device pool, a seed-deterministic synthetic job stream, and an
 /// optional pool-level fault scenario.  Same `seed` ⇒ identical trace ⇒
@@ -466,6 +501,15 @@ pub struct FleetConfig {
     /// Optional pool-level fault script: a dropout hits whichever job holds
     /// the device (triggering its re-plan path) or shrinks the free pool.
     pub scenario: Option<Scenario>,
+    /// Priority-class weights `[high, normal, low]` for the synthetic
+    /// trace (normalized internally; need not sum to 1).
+    pub priority_mix: [f64; 3],
+    /// Allow preemption-capable policies to pause lower-priority running
+    /// jobs at round boundaries and reclaim their devices.  Off by
+    /// default: the legacy differential path has no pause mechanism.
+    pub preemption: bool,
+    /// Admission-control mode (see [`AdmissionControl`]).
+    pub admission: AdmissionControl,
 }
 
 impl FleetConfig {
@@ -483,11 +527,21 @@ impl FleetConfig {
             max_rounds: 4,
             local_iters: 1,
             scenario: None,
+            priority_mix: [0.2, 0.5, 0.3],
+            preemption: false,
+            admission: AdmissionControl::Open,
         }
     }
 
     pub fn validate(&self) -> Result<()> {
         self.pool.validate()?;
+        let mix_sum: f64 = self.priority_mix.iter().sum();
+        if self.priority_mix.iter().any(|w| !w.is_finite() || *w < 0.0) || !(mix_sum > 0.0) {
+            return Err(Error::Config(format!(
+                "priority_mix {:?} must be finite, non-negative, and sum > 0",
+                self.priority_mix
+            )));
+        }
         if self.jobs == 0 {
             return Err(Error::Config("fleet needs at least one job".into()));
         }
@@ -527,6 +581,30 @@ impl FleetConfig {
 
     pub fn from_json(v: &Json) -> Result<Self> {
         let seed = seed_from_json(v.req("seed")?)?;
+        // Serving knobs are optional so pre-existing fleet JSON keeps
+        // parsing with the legacy behavior (all-default: open admission,
+        // no preemption, the default priority mix).
+        let priority_mix = match v.get("priority_mix") {
+            Some(m) => {
+                let ws = m.f64_vec()?;
+                if ws.len() != 3 {
+                    return Err(Error::Config(format!(
+                        "priority_mix must have exactly 3 weights [high, normal, low], got {}",
+                        ws.len()
+                    )));
+                }
+                [ws[0], ws[1], ws[2]]
+            }
+            None => [0.2, 0.5, 0.3],
+        };
+        let preemption = match v.get("preemption") {
+            Some(b) => b.as_bool()?,
+            None => false,
+        };
+        let admission = match v.get("admission") {
+            Some(a) => AdmissionControl::from_str(a.as_str()?)?,
+            None => AdmissionControl::Open,
+        };
         Ok(FleetConfig {
             pool: ClusterConfig::from_json(v.req("pool")?)?,
             jobs: v.req("jobs")?.as_usize()?,
@@ -541,6 +619,9 @@ impl FleetConfig {
                 Some(s) => Some(Scenario::from_json(s)?),
                 None => None,
             },
+            priority_mix,
+            preemption,
+            admission,
         })
     }
 
@@ -559,6 +640,9 @@ impl FleetConfig {
             ("min_rounds", Json::num(self.min_rounds as f64)),
             ("max_rounds", Json::num(self.max_rounds as f64)),
             ("local_iters", Json::num(self.local_iters as f64)),
+            ("priority_mix", Json::arr_f64(&self.priority_mix)),
+            ("preemption", Json::Bool(self.preemption)),
+            ("admission", Json::str(self.admission.name())),
         ];
         if let Some(sc) = &self.scenario {
             pairs.push(("scenario", sc.to_json()));
@@ -718,6 +802,9 @@ mod tests {
     fn fleet_config_validates_and_round_trips() {
         let mut cfg = FleetConfig::synthetic(8, 6, 11);
         cfg.scenario = Some(crate::sim::Scenario::synth(11, 8, 500.0, 0.5));
+        cfg.priority_mix = [0.5, 0.25, 0.25];
+        cfg.preemption = true;
+        cfg.admission = AdmissionControl::Feasibility;
         cfg.validate().unwrap();
         let back = FleetConfig::from_json(&Json::parse(&cfg.to_json().pretty()).unwrap()).unwrap();
         back.validate().unwrap();
@@ -729,6 +816,24 @@ mod tests {
             back.mean_interarrival_s.to_bits(),
             cfg.mean_interarrival_s.to_bits()
         );
+        assert_eq!(back.priority_mix, cfg.priority_mix);
+        assert!(back.preemption);
+        assert_eq!(back.admission, AdmissionControl::Feasibility);
+        // Old fleet JSON without the serving knobs still parses, with the
+        // legacy defaults.
+        let legacy = FleetConfig::synthetic(4, 2, 3);
+        let Json::Obj(pairs) = legacy.to_json() else { panic!("fleet json is an object") };
+        let n_before = pairs.len();
+        let stripped: Vec<(String, Json)> = pairs
+            .into_iter()
+            .filter(|(k, _)| !matches!(k.as_str(), "priority_mix" | "preemption" | "admission"))
+            .collect();
+        assert_eq!(stripped.len(), n_before - 3, "all three knobs serialize");
+        let back = FleetConfig::from_json(&Json::Obj(stripped)).unwrap();
+        back.validate().unwrap();
+        assert_eq!(back.priority_mix, [0.2, 0.5, 0.3]);
+        assert!(!back.preemption);
+        assert_eq!(back.admission, AdmissionControl::Open);
         // Seeds above 2^53 survive the round trip (string-encoded; a JSON
         // number would truncate through f64 and break replayability).
         let mut big = FleetConfig::synthetic(4, 2, (1u64 << 60) + 1);
@@ -758,5 +863,25 @@ mod tests {
             events: vec![crate::sim::ScenarioEvent::Dropout { device: 9, at: 1.0 }],
         });
         assert!(cfg.validate().is_err());
+        // Degenerate priority mixes are rejected.
+        let mut cfg = FleetConfig::synthetic(4, 4, 1);
+        cfg.priority_mix = [0.0, 0.0, 0.0];
+        assert!(cfg.validate().is_err());
+        let mut cfg = FleetConfig::synthetic(4, 4, 1);
+        cfg.priority_mix = [0.5, -0.1, 0.6];
+        assert!(cfg.validate().is_err());
+        let mut cfg = FleetConfig::synthetic(4, 4, 1);
+        cfg.priority_mix = [f64::NAN, 0.5, 0.5];
+        assert!(cfg.validate().is_err());
+        // And a 2- or 4-weight JSON mix fails to parse.
+        let mut j = FleetConfig::synthetic(4, 4, 1).to_json();
+        if let Json::Obj(pairs) = &mut j {
+            for (k, v) in pairs.iter_mut() {
+                if k.as_str() == "priority_mix" {
+                    *v = Json::arr_f64(&[0.5, 0.5]);
+                }
+            }
+        }
+        assert!(FleetConfig::from_json(&j).is_err());
     }
 }

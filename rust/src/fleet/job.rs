@@ -3,16 +3,44 @@
 //!
 //! A [`JobSpec`] is one user's personalization request — a model size
 //! (transformer blocks), an epoch budget (rounds), a requested ring width,
-//! and a deadline class.  [`JobTrace::synthetic`] generates a Poisson-like
-//! stream of them from a [`FleetConfig`] seed, à la
-//! `ClusterConfig::synthetic`: exponential inter-arrival gaps, log-free
-//! uniform size draws, and a fixed deadline-class mix.  Same config ⇒
-//! bit-identical trace, which is what makes whole fleet runs replayable.
+//! a deadline class, and a scheduling [`Priority`].
+//! [`JobTrace::synthetic`] generates a Poisson-like stream of them from a
+//! [`FleetConfig`] seed, à la `ClusterConfig::synthetic`: exponential
+//! inter-arrival gaps, log-free uniform size draws, a fixed
+//! deadline-class mix, and priorities from the configured
+//! `priority_mix`.  Same config ⇒ bit-identical trace, which is what
+//! makes whole fleet runs replayable.
 
 use crate::config::FleetConfig;
 use crate::model::manifest::ModelHyper;
 use crate::model::ModelMeta;
-use crate::runtime::rng::Rng;
+use crate::runtime::rng::{mix, Rng};
+
+/// Scheduling priority of a fleet job.  Orthogonal to [`DeadlineClass`]
+/// (how tight the deadline is): priority decides who may preempt whom —
+/// a preemption-capable policy may pause a strictly lower-priority running
+/// job at a round boundary to reclaim its devices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Priority {
+    /// Background refresh: first to be paused under pool pressure.
+    Low,
+    /// The default class.
+    Normal,
+    /// Interactive personalization: may preempt Low and Normal jobs.
+    High,
+}
+
+impl Priority {
+    pub const ALL: [Priority; 3] = [Priority::Low, Priority::Normal, Priority::High];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Priority::Low => "low",
+            Priority::Normal => "normal",
+            Priority::High => "high",
+        }
+    }
+}
 
 /// How tight a job's completion deadline is, relative to its
 /// contention-free service-time estimate ([`JobSpec::nominal_service_s`]).
@@ -61,6 +89,8 @@ pub struct JobSpec {
     /// Requested ring width (devices); policies may resize within limits.
     pub ring_size: usize,
     pub deadline: DeadlineClass,
+    /// Scheduling priority (preemption ordering; see [`Priority`]).
+    pub priority: Priority,
 }
 
 impl JobSpec {
@@ -105,10 +135,18 @@ impl JobTrace {
     /// inter-arrival gaps at `cfg.mean_interarrival_s`, model sizes and
     /// epoch budgets uniform over the configured ranges, ring requests in
     /// `[2, 8]` capped at half the model's blocks (each ring position must
-    /// keep ≥ 2 blocks so one dropout never starves a position), and a
-    /// 20/40/40 strict/standard/relaxed deadline mix.
+    /// keep ≥ 2 blocks so one dropout never starves a position), a
+    /// 20/40/40 strict/standard/relaxed deadline mix, and priorities drawn
+    /// from `cfg.priority_mix` ([high, normal, low] weights).
+    ///
+    /// Priorities come from a *separate* SplitMix-forked stream so the
+    /// base trace (arrivals, sizes, budgets, rings, deadlines) is
+    /// bit-identical for a given seed regardless of the configured mix.
     pub fn synthetic(cfg: &FleetConfig) -> Vec<JobSpec> {
         let mut rng = Rng::new(cfg.seed ^ 0xF1EE_7A8B);
+        let mut prio_rng = Rng::new(mix(cfg.seed, 0x5EED_9A10));
+        let [w_high, w_normal, w_low] = cfg.priority_mix;
+        let w_sum = w_high + w_normal + w_low;
         let mut t = 0.0f64;
         let mut jobs = Vec::with_capacity(cfg.jobs);
         for id in 0..cfg.jobs {
@@ -127,6 +165,16 @@ impl JobTrace {
                     DeadlineClass::Relaxed
                 }
             };
+            let priority = {
+                let p = prio_rng.next_f64() * w_sum;
+                if p < w_high {
+                    Priority::High
+                } else if p < w_high + w_normal {
+                    Priority::Normal
+                } else {
+                    Priority::Low
+                }
+            };
             jobs.push(JobSpec {
                 id,
                 arrival_s: t,
@@ -135,6 +183,7 @@ impl JobTrace {
                 local_iters: cfg.local_iters,
                 ring_size,
                 deadline,
+                priority,
             });
         }
         jobs
@@ -173,6 +222,32 @@ mod tests {
     }
 
     #[test]
+    fn priority_mix_is_respected_without_perturbing_the_base_trace() {
+        let cfg = FleetConfig::synthetic(16, 48, 11);
+        let a = JobTrace::synthetic(&cfg);
+        // Default mix yields all three priority classes at this length.
+        for p in Priority::ALL {
+            assert!(a.iter().any(|j| j.priority == p), "missing {p:?}");
+        }
+        // Changing the mix changes priorities only — the base trace
+        // (arrivals, sizes, budgets, rings, deadlines) is untouched.
+        let mut all_high = cfg.clone();
+        all_high.priority_mix = [1.0, 0.0, 0.0];
+        let b = JobTrace::synthetic(&all_high);
+        assert!(b.iter().all(|j| j.priority == Priority::High));
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival_s.to_bits(), y.arrival_s.to_bits());
+            assert_eq!(x.layers, y.layers);
+            assert_eq!(x.rounds, y.rounds);
+            assert_eq!(x.ring_size, y.ring_size);
+            assert_eq!(x.deadline, y.deadline);
+        }
+        let mut all_low = cfg.clone();
+        all_low.priority_mix = [0.0, 0.0, 3.5];
+        assert!(JobTrace::synthetic(&all_low).iter().all(|j| j.priority == Priority::Low));
+    }
+
+    #[test]
     fn nominal_service_scales_with_work() {
         let j = JobSpec {
             id: 0,
@@ -182,6 +257,7 @@ mod tests {
             local_iters: 1,
             ring_size: 4,
             deadline: DeadlineClass::Standard,
+            priority: Priority::Normal,
         };
         let base = j.nominal_service_s(0.01);
         let mut big = j.clone();

@@ -7,11 +7,11 @@
 //! module is that serving layer, built entirely on the existing stack:
 //!
 //! * a seed-deterministic synthetic arrival trace ([`JobTrace`]) supplies
-//!   jobs with per-job model size, epoch budget, ring request and deadline
-//!   class;
+//!   jobs with per-job model size, epoch budget, ring request, deadline
+//!   class, and priority;
 //! * an [`AllocationPolicy`] decides which waiting jobs to admit onto
 //!   which free devices ([`FifoWholeRing`], [`SmallestRingFirst`],
-//!   [`UtilizationAware`]);
+//!   [`UtilizationAware`], [`DeadlineEdf`]);
 //! * each admitted job gets its ring planned by
 //!   `Planner::plan_for_devices`-style subset search on its allocation,
 //!   then advances round-by-round through the existing [`Simulator`] —
@@ -25,35 +25,65 @@
 //! * on completion the job's surviving devices return to the free set and
 //!   the policy gets another admission pass.
 //!
-//! ## Event loop
+//! ## Round-granular event loop
 //!
 //! [`serve`] is event-driven over a min-heap of `(time, kind, id)` events
-//! — scripted dropouts, job completions, job arrivals, in that order at
-//! equal times.  Because concurrent jobs occupy *disjoint* device subsets
-//! and all faults are scripted in absolute time, an admitted job's entire
-//! simulation is independent of every other job's given its allocation;
-//! the scheduler therefore simulates each job to completion at admission
-//! and enqueues its completion event.  All state transitions are
-//! deterministic, so the same [`FleetConfig`] (same seed) produces a
-//! byte-identical [`FleetReport::canonical_string`] — the fleet
-//! determinism property pinned by `tests/fleet.rs`.
+//! — scripted dropouts, job completions, per-job round steps, and job
+//! arrivals, in that order at equal times.  Each admitted job is a
+//! persistent [`JobExec`] state machine (coordinator, schedule builder,
+//! simulator clock, per-job dropout queue, busy ledger) advanced **one
+//! round per `RANK_STEP` event**: the step at a round boundary builds the
+//! round's chunk, runs it on the job's simulator, drains the dropouts
+//! that landed inside the round, re-plans over the survivors if needed,
+//! and schedules the next step at the new boundary.  Because concurrent
+//! jobs occupy *disjoint* device subsets and all faults are scripted in
+//! absolute time, this interleaved execution is byte-identical to
+//! simulating each job to completion at admission — the retained legacy
+//! path ([`serve_reference`], mirroring `Simulator::run_reference` from
+//! the scale work) and the differential tests in `tests/fleet.rs` pin
+//! exactly that.
+//!
+//! What admit-time simulation could never do, a resumable round boundary
+//! can:
+//!
+//! * **Preemption** — with [`crate::config::FleetConfig::preemption`] on,
+//!   a policy may mark a running job ([`AllocationPolicy::preempt`]); at
+//!   its next round boundary the job pauses *at the chunk barrier* (so
+//!   the one-weight-version pause rule holds — no weight-version skew
+//!   across a pause), its devices return to the free pool, and the job
+//!   re-enters the waiting queue.
+//! * **Elastic resizing** — a resumed job re-plans over whatever
+//!   grown/shrunk subset the policy grants it, through the same
+//!   `plan_for_devices` search as dropout re-planning.
+//! * **Admission control** — with `FleetConfig::admission` set to
+//!   `Feasibility`, a policy may permanently reject a not-yet-started
+//!   job whose best-case finish (planner bottleneck estimate) already
+//!   misses its deadline ([`AllocationPolicy::reject`]).
+//!
+//! All state transitions remain deterministic, so the same
+//! [`FleetConfig`] (same seed) produces a byte-identical
+//! [`FleetReport::canonical_string`] — the fleet determinism property
+//! pinned by `tests/fleet.rs`.
 
 pub mod job;
 pub mod policy;
 
-pub use job::{DeadlineClass, JobSpec, JobTrace};
+pub use job::{DeadlineClass, JobSpec, JobTrace, Priority};
 pub use policy::{
-    Allocation, AllocationPolicy, FifoWholeRing, PoolView, SmallestRingFirst, UtilizationAware,
+    Allocation, AllocationPolicy, DeadlineEdf, FifoWholeRing, PoolView, RunningJob,
+    SmallestRingFirst, UtilizationAware,
 };
 
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, VecDeque};
 
-use crate::config::{FleetConfig, TrainingConfig};
+use crate::config::{AdmissionControl, FleetConfig, TrainingConfig};
 use crate::coordinator::{Coordinator, LayerAssignment, Planner, PlannerCosts, SearchParams};
 use crate::error::{Error, Result};
 use crate::metrics::{FleetJobRow, FleetReport};
+use crate::model::ModelMeta;
 use crate::pipeline::{ScheduleBuilder, WireSizes};
+use crate::runtime::rng::mix;
 use crate::sim::{CostLut, Scenario, Simulator};
 
 /// Effective GFLOP/s of the analytic LUT every fleet job prices its model
@@ -67,7 +97,7 @@ const FLEET_EXHAUSTIVE_MAX_DEVICES: usize = 4;
 
 /// Search profile for fleet (re-)planning: small beam plus the
 /// [`SearchParams::max_evals`] budget knob — deterministic and cheap
-/// enough to run at every admission and dropout re-plan.
+/// enough to run at every admission, resume, and dropout re-plan.
 fn fleet_search() -> SearchParams {
     SearchParams {
         beam_width: 4,
@@ -77,13 +107,29 @@ fn fleet_search() -> SearchParams {
     }
 }
 
+/// Per-job simulator/training seed.  A SplitMix64 mix of the fleet seed
+/// and the job id — never plain XOR, whose non-injective collision family
+/// (`s ^ i == (s^1) ^ (i^1)`) made "different-seed" fleet runs share
+/// correlated per-job streams (the PR-4 seed-derivation bugfix; see
+/// [`mix`]).
+fn job_seed(cfg: &FleetConfig, job: usize) -> u64 {
+    mix(cfg.seed, job as u64)
+}
+
 const RANK_DROP: u8 = 0;
 const RANK_DONE: u8 = 1;
-const RANK_ARRIVE: u8 = 2;
+const RANK_STEP: u8 = 2;
+const RANK_ARRIVE: u8 = 3;
 
 /// Fleet event: min-heap key ordered by `(time, rank, id)` — dropouts
-/// before completions before arrivals at equal times, ties on the
-/// device/job id.  `Ord` is reversed because [`BinaryHeap`] is a max-heap.
+/// before completions before round steps before arrivals at equal times,
+/// ties on the device/job id.  `Ord` is reversed because [`BinaryHeap`]
+/// is a max-heap.
+///
+/// Round steps order *after* completions (a finishing job frees devices
+/// that the admission pass at that instant may re-grant) and *before*
+/// arrivals only by convention — a step neither reads nor mutates pool
+/// state unless it pauses, so the rank merely keeps the order total.
 #[derive(Debug, Clone, Copy, PartialEq)]
 struct Event {
     t: f64,
@@ -109,7 +155,812 @@ impl PartialOrd for Event {
     }
 }
 
-/// Everything the scheduler needs back from one job's simulation.
+/// Plan a ring over `devices`: exhaustive for tiny rings, budgeted beam +
+/// anneal beyond (see [`fleet_search`]).
+fn plan_ring(planner: &Planner<'_>, devices: &[usize]) -> Result<LayerAssignment> {
+    let plan = if devices.len() <= FLEET_EXHAUSTIVE_MAX_DEVICES {
+        planner.plan_exhaustive(devices)?
+    } else {
+        planner.plan_beam_anneal_with(devices, &fleet_search())?
+    };
+    Ok(plan.assignment)
+}
+
+/// What one round step did to the job (see [`JobExec::step`]).
+enum StepOutcome {
+    /// More rounds remain; the next boundary is the job's `sim.now`.
+    Continue,
+    /// The epoch budget is exhausted — the job completed at `sim.now`.
+    Done,
+    /// The job lost every device or a re-plan was infeasible.
+    Failed,
+}
+
+/// One admitted job's persistent execution state: everything
+/// `run_job` kept on its stack, lifted into a state machine the event
+/// loop can advance one round at a time and pause at chunk barriers.
+struct JobExec {
+    job: usize,
+    admitted_s: f64,
+    /// Width of the first grant (reported as the job's ring size).
+    initial_ring: usize,
+    /// Width of the current segment's grant: the per-round initiator-turn
+    /// budget.  Fixed across dropout re-plans inside a segment (the
+    /// Fig. 3 comparability convention: survivors absorb dead devices'
+    /// turns) and reset by an elastic resume.
+    segment_width: usize,
+    rounds_done: usize,
+    meta: ModelMeta,
+    training: TrainingConfig,
+    sizes: WireSizes,
+    block_fwd_s: f64,
+    coordinator: Coordinator,
+    builder: ScheduleBuilder,
+    sim: Simulator,
+    /// Ring members still alive, ascending.
+    alive: Vec<usize>,
+    /// Scripted dropouts this segment has yet to detect, time-ascending.
+    pending: VecDeque<(f64, usize)>,
+    /// Busy seconds per pool device, accumulated across segments.
+    busy: Vec<f64>,
+    replans: usize,
+    dropped: Vec<usize>,
+    preemptions: usize,
+    resizes: usize,
+    /// Set by a policy's preempt decision; consumed at the next boundary.
+    preempt_pending: bool,
+    /// Paused at a chunk barrier, devices released, waiting to resume.
+    paused: bool,
+}
+
+impl JobExec {
+    fn costs(&self) -> PlannerCosts {
+        PlannerCosts {
+            block_fwd_s: self.block_fwd_s,
+            activation_bytes: self.sizes.activation_bytes,
+        }
+    }
+
+    /// Build the state machine for a fresh admission: plan the ring over
+    /// the grant, spin up coordinator/builder/simulator with the clock
+    /// floored at the admission time.  `Ok(None)` means the grant cannot
+    /// host the model (memory budgets) — a failed job, not a fleet-wide
+    /// error.  Deliberately fail-fast rather than re-queue: the policy
+    /// granted these devices, and re-queuing an infeasible grant would
+    /// retry the identical decision every event (livelock).
+    fn admit(
+        cfg: &FleetConfig,
+        scenario: &Scenario,
+        spec: &JobSpec,
+        devices: &[usize],
+        admit_s: f64,
+    ) -> Result<Option<JobExec>> {
+        let meta = spec.model_meta();
+        let lut = CostLut::analytic(&meta, LUT_GFLOPS);
+        let block_fwd_s = lut.block_fwd_s;
+        let costs = PlannerCosts {
+            block_fwd_s,
+            activation_bytes: meta.activation_bytes(),
+        };
+        let planner = Planner::new(&meta, &cfg.pool, costs);
+        let training = TrainingConfig {
+            rounds: spec.rounds,
+            local_iters: spec.local_iters,
+            unfreeze_interval: 1,
+            initial_depth: 1,
+            seed: job_seed(cfg, spec.id),
+            ..TrainingConfig::default()
+        };
+        let sizes = WireSizes {
+            activation_bytes: meta.activation_bytes(),
+            head_bytes: (meta.head_params * 4).max(4),
+        };
+        let mut alive: Vec<usize> = devices.to_vec();
+        alive.sort_unstable();
+
+        let assignment = match plan_ring(&planner, &alive) {
+            Ok(a) => a,
+            Err(_) => return Ok(None),
+        };
+        let coordinator =
+            Coordinator::with_assignment_for_cluster(assignment, &meta, &cfg.pool, &training)?;
+        let builder =
+            ScheduleBuilder::new(coordinator.assignment.clone(), sizes, alive.len().max(2));
+        let mut sim = Simulator::with_scenario(cfg.pool.clone(), lut, scenario)?;
+        sim.now = admit_s; // release floor: nothing starts before admission
+        let pending: VecDeque<(f64, usize)> = scenario
+            .dropouts()
+            .into_iter()
+            .filter(|&(at, d)| at > admit_s && alive.contains(&d))
+            .collect();
+        Ok(Some(JobExec {
+            job: spec.id,
+            admitted_s: admit_s,
+            initial_ring: devices.len(),
+            segment_width: devices.len(),
+            rounds_done: 0,
+            block_fwd_s,
+            meta,
+            training,
+            sizes,
+            coordinator,
+            builder,
+            sim,
+            alive,
+            pending,
+            busy: vec![0.0f64; cfg.pool.len()],
+            replans: 0,
+            dropped: Vec::new(),
+            preemptions: 0,
+            resizes: 0,
+            preempt_pending: false,
+            paused: false,
+        }))
+    }
+
+    /// Advance exactly one round: build the round's chunk, run it on the
+    /// job's simulator, drain the dropouts that landed inside it, and
+    /// re-plan over the survivors when rounds remain.  The per-round body
+    /// is the legacy `run_job` loop body verbatim — the differential
+    /// tests rely on that.
+    fn step(&mut self, cfg: &FleetConfig, spec: &JobSpec) -> Result<StepOutcome> {
+        let round = self.rounds_done;
+        let rp = self.coordinator.round_plan(round)?;
+        for turn in 0..self.segment_width {
+            let initiator = rp.initiators[turn % rp.initiators.len()];
+            for _ in 0..spec.local_iters {
+                self.builder.ringada_step(&rp, initiator)?;
+            }
+            if turn + 1 < self.segment_width {
+                let next = rp.initiators[(turn + 1) % rp.initiators.len()];
+                if next != initiator {
+                    self.builder.head_handoff(initiator, next, round)?;
+                }
+            }
+        }
+        let (tasks, _handles) = self.builder.drain_chunk();
+        let report = self.sim.run(&tasks)?;
+        for (d, b) in report.device_busy.iter().enumerate() {
+            self.busy[d] += b;
+        }
+        self.rounds_done += 1;
+        // Fail-stops detected at this round boundary.  `<=` keeps a
+        // dropout landing *exactly* on the final boundary inside the job:
+        // the device is recorded dropped and never returned as a survivor
+        // (the final-round bookkeeping pinned by `tests/fleet.rs`).
+        let mut need_replan = false;
+        while self.pending.front().map_or(false, |&(at, _)| at <= self.sim.now) {
+            let (_, d) = self.pending.pop_front().unwrap();
+            self.sim.drop_device(d);
+            self.alive.retain(|&x| x != d);
+            self.dropped.push(d);
+            need_replan = true;
+        }
+        if self.rounds_done == spec.rounds {
+            return Ok(StepOutcome::Done);
+        }
+        if need_replan {
+            if self.alive.is_empty() {
+                return Ok(StepOutcome::Failed);
+            }
+            self.replans += 1;
+            let planner = Planner::new(&self.meta, &cfg.pool, self.costs());
+            match plan_ring(&planner, &self.alive) {
+                Ok(a) => {
+                    self.coordinator = Coordinator::with_assignment_for_cluster(
+                        a,
+                        &self.meta,
+                        &cfg.pool,
+                        &self.training,
+                    )?;
+                    self.builder = ScheduleBuilder::new(
+                        self.coordinator.assignment.clone(),
+                        self.sizes,
+                        self.alive.len().max(2),
+                    );
+                }
+                Err(_) => return Ok(StepOutcome::Failed),
+            }
+        }
+        Ok(StepOutcome::Continue)
+    }
+
+    /// Resume a paused job on a (possibly resized) grant at `now`: the
+    /// elastic path.  Re-plans through the same subset search as dropout
+    /// re-planning; a width change counts as a resize.  `Ok(false)` means
+    /// the grant cannot host the model — the caller fails the job and
+    /// returns the grant (same fail-fast contract as [`JobExec::admit`]).
+    fn resume(
+        &mut self,
+        cfg: &FleetConfig,
+        scenario: &Scenario,
+        devices: &[usize],
+        now: f64,
+    ) -> Result<bool> {
+        debug_assert!(self.paused, "resume on a running job");
+        let mut alive: Vec<usize> = devices.to_vec();
+        alive.sort_unstable();
+        let planner = Planner::new(&self.meta, &cfg.pool, self.costs());
+        let assignment = match plan_ring(&planner, &alive) {
+            Ok(a) => a,
+            Err(_) => return Ok(false),
+        };
+        self.coordinator = Coordinator::with_assignment_for_cluster(
+            assignment,
+            &self.meta,
+            &cfg.pool,
+            &self.training,
+        )?;
+        self.builder = ScheduleBuilder::new(
+            self.coordinator.assignment.clone(),
+            self.sizes,
+            alive.len().max(2),
+        );
+        if alive.len() != self.segment_width {
+            self.resizes += 1;
+        }
+        self.segment_width = alive.len();
+        // The pause gap: the job's clock jumps to the resume instant (it
+        // can never move backwards — resumes happen at or after the
+        // pause boundary).
+        self.sim.now = self.sim.now.max(now);
+        self.pending = scenario
+            .dropouts()
+            .into_iter()
+            .filter(|&(at, d)| at > now && alive.contains(&d))
+            .collect();
+        self.alive = alive;
+        self.paused = false;
+        Ok(true)
+    }
+
+    /// Devices a pause releases right now.  At a boundary every member of
+    /// `alive` is a genuine survivor: drains cover dropouts up to the
+    /// boundary time, and later scripted dropouts have not fired yet.
+    fn pause(&mut self) -> Vec<usize> {
+        debug_assert!(!self.paused);
+        self.preempt_pending = false;
+        self.preemptions += 1;
+        self.paused = true;
+        self.alive.clone()
+    }
+}
+
+/// All mutable state of one [`serve`] run, so the event handlers and the
+/// admission pass can live in named methods instead of one giant loop.
+struct FleetRun<'a> {
+    cfg: &'a FleetConfig,
+    policy: &'a dyn AllocationPolicy,
+    scenario: Scenario,
+    specs: Vec<JobSpec>,
+    heap: BinaryHeap<Event>,
+    /// Free device ids, ascending, never dead.
+    free: Vec<usize>,
+    /// Fail-stopped devices (set when the scripted event fires).
+    dead: Vec<bool>,
+    /// Devices some job detected as dropped (possibly before the
+    /// pool-level event fires — jobs drain at round boundaries, which the
+    /// event loop reaches ahead of the wall clock).  Only the scripted
+    /// `RANK_DROP` event marks `dead`; this ledger just keeps the
+    /// conservation audit exact in the detection window.
+    detected: Vec<bool>,
+    /// Waiting job ids, ascending (= arrival order): fresh arrivals and
+    /// paused jobs awaiting re-admission.
+    waiting: Vec<usize>,
+    execs: Vec<Option<JobExec>>,
+    /// Devices staged to return to the pool at a pending `RANK_DONE`
+    /// (survivors of finished jobs, grants of failed admissions).
+    release_at_done: Vec<Vec<usize>>,
+    rows: Vec<Option<FleetJobRow>>,
+    pool_busy: Vec<f64>,
+    last_done: f64,
+}
+
+impl<'a> FleetRun<'a> {
+    fn new(cfg: &'a FleetConfig, policy: &'a dyn AllocationPolicy) -> Self {
+        let n = cfg.pool.len();
+        let scenario = cfg.scenario.clone().unwrap_or_else(Scenario::healthy);
+        let specs = JobTrace::synthetic(cfg);
+        let mut heap: BinaryHeap<Event> = BinaryHeap::new();
+        for s in &specs {
+            heap.push(Event { t: s.arrival_s, rank: RANK_ARRIVE, id: s.id });
+        }
+        for (at, d) in scenario.dropouts() {
+            heap.push(Event { t: at, rank: RANK_DROP, id: d });
+        }
+        let jobs = specs.len();
+        FleetRun {
+            cfg,
+            policy,
+            scenario,
+            specs,
+            heap,
+            free: (0..n).collect(),
+            dead: vec![false; n],
+            detected: vec![false; n],
+            waiting: Vec::new(),
+            execs: (0..jobs).map(|_| None).collect(),
+            release_at_done: vec![Vec::new(); jobs],
+            rows: vec![None; jobs],
+            pool_busy: vec![0.0f64; n],
+            last_done: 0.0,
+        }
+    }
+
+    /// Fold a finished (or failed) exec into its report row, stage its
+    /// survivors for release, and enqueue the completion event at the
+    /// job's clock.
+    fn finish_job(&mut self, id: usize, failed: bool) {
+        let exec = self.execs[id].take().expect("finish_job without execution state");
+        let spec = &self.specs[id];
+        // Pause/resume must never skip or repeat a round (the chunk
+        // barrier holds one weight version): a *completed* job ran its
+        // exact epoch budget, however many times it was preempted.
+        debug_assert!(
+            failed || exec.rounds_done == spec.rounds,
+            "job {id} completed with {} of {} rounds",
+            exec.rounds_done,
+            spec.rounds
+        );
+        let done_s = exec.sim.now;
+        for (d, b) in exec.busy.iter().enumerate() {
+            self.pool_busy[d] += b;
+        }
+        self.rows[id] = Some(FleetJobRow {
+            job: id,
+            arrival_s: spec.arrival_s,
+            admitted_s: exec.admitted_s,
+            completed_s: done_s,
+            ring: exec.initial_ring,
+            replans: exec.replans,
+            dropped: exec.dropped.len(),
+            busy_s: exec.busy.iter().sum(),
+            nominal_s: spec.nominal_service_s(exec.block_fwd_s),
+            deadline_s: spec.deadline_s(exec.block_fwd_s),
+            deadline_class: spec.deadline.name().to_string(),
+            priority: spec.priority.name().to_string(),
+            preemptions: exec.preemptions,
+            resizes: exec.resizes,
+            rejected: false,
+            failed,
+        });
+        self.release_at_done[id] = exec.alive;
+        self.heap.push(Event { t: done_s, rank: RANK_DONE, id });
+    }
+
+    /// A failed admission (the grant cannot host the model): record the
+    /// failure and bounce the grant back at a completion event *now* —
+    /// exactly the legacy path's contract.
+    fn fail_admission(&mut self, id: usize, devices: Vec<usize>, now: f64) {
+        let spec = &self.specs[id];
+        let lut = CostLut::analytic(&spec.model_meta(), LUT_GFLOPS);
+        self.rows[id] = Some(FleetJobRow {
+            job: id,
+            arrival_s: spec.arrival_s,
+            admitted_s: now,
+            completed_s: now,
+            ring: devices.len(),
+            replans: 0,
+            dropped: 0,
+            busy_s: 0.0,
+            nominal_s: spec.nominal_service_s(lut.block_fwd_s),
+            deadline_s: spec.deadline_s(lut.block_fwd_s),
+            deadline_class: spec.deadline.name().to_string(),
+            priority: spec.priority.name().to_string(),
+            preemptions: 0,
+            resizes: 0,
+            rejected: false,
+            failed: true,
+        });
+        self.release_at_done[id] = devices;
+        self.heap.push(Event { t: now, rank: RANK_DONE, id });
+    }
+
+    fn handle_done(&mut self, id: usize, now: f64) {
+        // A job that failed at admission (plan infeasible) did zero work
+        // and must not inflate the serving window that throughput and
+        // utilization divide by; mid-run failures did occupy the pool,
+        // so their end still counts.
+        if self.rows[id]
+            .as_ref()
+            .map_or(false, |r| !r.failed || r.busy_s > 0.0)
+        {
+            self.last_done = self.last_done.max(now);
+        }
+        let hs = std::mem::take(&mut self.release_at_done[id]);
+        for d in hs {
+            if !self.dead[d] {
+                self.free.push(d);
+            }
+        }
+        self.free.sort_unstable();
+    }
+
+    /// Advance one job by one round (or pause it at the boundary).
+    /// Returns true when the pool state changed (a pause released
+    /// devices), so the caller runs an admission pass.
+    fn handle_step(&mut self, id: usize) -> Result<bool> {
+        let exec = self.execs[id]
+            .as_mut()
+            .expect("step event for a job with no execution state");
+        debug_assert!(!exec.paused, "step event for a paused job");
+        if self.cfg.preemption && exec.preempt_pending {
+            let freed = exec.pause();
+            for d in freed {
+                debug_assert!(!self.dead[d], "pause released a dead device");
+                if !self.dead[d] {
+                    self.free.push(d);
+                }
+            }
+            self.free.sort_unstable();
+            self.waiting.push(id);
+            self.waiting.sort_unstable();
+            return Ok(true);
+        }
+        let spec = &self.specs[id];
+        let outcome = exec.step(self.cfg, spec)?;
+        let next = Event { t: exec.sim.now, rank: RANK_STEP, id };
+        for &d in &exec.dropped {
+            self.detected[d] = true;
+        }
+        match outcome {
+            StepOutcome::Continue => self.heap.push(next),
+            StepOutcome::Done => self.finish_job(id, false),
+            StepOutcome::Failed => self.finish_job(id, true),
+        }
+        Ok(false)
+    }
+
+    /// One admission pass: reject (admission control), mark preemptions,
+    /// then let the policy allocate — run after every event that changed
+    /// the pool or the queue, never after a plain round step (so the
+    /// pass points match the legacy path exactly).
+    fn admission_pass(&mut self, now: f64) -> Result<()> {
+        if self.waiting.is_empty() {
+            return Ok(());
+        }
+        // Rejection and preemption run even when nothing is free — a
+        // fully-occupied pool is exactly the state preemption exists for
+        // (and where past-due jobs must still be shed).  Only the
+        // allocate call needs free devices, mirroring the legacy loop's
+        // guard so the differential property holds.
+        if self.cfg.admission == AdmissionControl::Feasibility {
+            self.rejection_pass(now)?;
+            if self.waiting.is_empty() {
+                return Ok(());
+            }
+        }
+        if self.cfg.preemption {
+            self.preemption_pass(now)?;
+        }
+        if self.free.is_empty() {
+            return Ok(());
+        }
+        let queue: Vec<&JobSpec> = self.waiting.iter().map(|&j| &self.specs[j]).collect();
+        let allocs = self.policy.allocate(
+            &queue,
+            &PoolView { cluster: &self.cfg.pool, free: &self.free, dead: &self.dead, now },
+        );
+        for a in allocs {
+            let Some(wpos) = self.waiting.iter().position(|&j| j == a.job) else {
+                return Err(Error::Schedule(format!(
+                    "policy {} admitted job {} which is not waiting",
+                    self.policy.name(),
+                    a.job
+                )));
+            };
+            if a.devices.is_empty() {
+                return Err(Error::Schedule(format!(
+                    "policy {} allocated an empty ring to job {}",
+                    self.policy.name(),
+                    a.job
+                )));
+            }
+            for &d in &a.devices {
+                let Some(fpos) = self.free.iter().position(|&x| x == d) else {
+                    return Err(Error::Schedule(format!(
+                        "policy {} allocated device {d} which is not free",
+                        self.policy.name()
+                    )));
+                };
+                self.free.remove(fpos);
+            }
+            self.waiting.remove(wpos);
+            if self.execs[a.job].is_some() {
+                // A paused job: resume on the (possibly resized) grant.
+                let resumed = {
+                    let exec = self.execs[a.job].as_mut().unwrap();
+                    exec.resume(self.cfg, &self.scenario, &a.devices, now)?
+                };
+                if resumed {
+                    self.heap.push(Event { t: now, rank: RANK_STEP, id: a.job });
+                } else {
+                    // The resized grant cannot host the model: the job
+                    // fails here, its prior work already billed.
+                    let exec = self.execs[a.job].as_mut().unwrap();
+                    exec.alive = a.devices;
+                    exec.sim.now = exec.sim.now.max(now);
+                    self.finish_job(a.job, true);
+                }
+            } else {
+                match JobExec::admit(self.cfg, &self.scenario, &self.specs[a.job], &a.devices, now)?
+                {
+                    Some(exec) => {
+                        self.execs[a.job] = Some(exec);
+                        self.heap.push(Event { t: now, rank: RANK_STEP, id: a.job });
+                    }
+                    None => self.fail_admission(a.job, a.devices, now),
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Admission control: offer the policy every waiting job that has
+    /// not yet run a round; validate and retire the rejected ones.
+    /// Rejected jobs keep their row (admitted/completed `-1`, `rejected`,
+    /// `failed`) and count as deadline misses.
+    fn rejection_pass(&mut self, now: f64) -> Result<()> {
+        let fresh: Vec<&JobSpec> = self
+            .waiting
+            .iter()
+            .filter(|&&j| self.execs[j].is_none())
+            .map(|&j| &self.specs[j])
+            .collect();
+        if fresh.is_empty() {
+            return Ok(());
+        }
+        let rejected = self.policy.reject(
+            &fresh,
+            &PoolView { cluster: &self.cfg.pool, free: &self.free, dead: &self.dead, now },
+        );
+        for id in rejected {
+            // Membership re-checked against the live queue (not just the
+            // snapshot) so duplicate ids from a buggy policy error
+            // instead of panicking.
+            let Some(wpos) = self
+                .waiting
+                .iter()
+                .position(|&j| j == id && self.execs[j].is_none())
+            else {
+                return Err(Error::Schedule(format!(
+                    "policy {} rejected job {id} which is not an unstarted waiting job",
+                    self.policy.name()
+                )));
+            };
+            self.waiting.remove(wpos);
+            let spec = &self.specs[id];
+            let lut = CostLut::analytic(&spec.model_meta(), LUT_GFLOPS);
+            self.rows[id] = Some(FleetJobRow {
+                job: id,
+                arrival_s: spec.arrival_s,
+                admitted_s: -1.0,
+                completed_s: -1.0,
+                ring: 0,
+                replans: 0,
+                dropped: 0,
+                busy_s: 0.0,
+                nominal_s: spec.nominal_service_s(lut.block_fwd_s),
+                deadline_s: spec.deadline_s(lut.block_fwd_s),
+                deadline_class: spec.deadline.name().to_string(),
+                priority: spec.priority.name().to_string(),
+                preemptions: 0,
+                resizes: 0,
+                rejected: true,
+                failed: true,
+            });
+        }
+        Ok(())
+    }
+
+    /// Preemption: show the policy the running set and mark its picks to
+    /// pause at their next round boundary.
+    fn preemption_pass(&mut self, now: f64) -> Result<()> {
+        let running: Vec<RunningJob> = self
+            .execs
+            .iter()
+            .flatten()
+            .filter(|e| !e.paused)
+            .map(|e| RunningJob {
+                job: e.job,
+                priority: self.specs[e.job].priority,
+                deadline_s: self.specs[e.job].deadline_s(e.block_fwd_s),
+                devices: e.alive.iter().filter(|&&d| !self.dead[d]).count(),
+                rounds_done: e.rounds_done,
+                rounds_total: self.specs[e.job].rounds,
+                preempt_pending: e.preempt_pending,
+            })
+            .collect();
+        if running.is_empty() {
+            return Ok(());
+        }
+        let queue: Vec<&JobSpec> = self.waiting.iter().map(|&j| &self.specs[j]).collect();
+        let picks = self.policy.preempt(
+            &queue,
+            &running,
+            &PoolView { cluster: &self.cfg.pool, free: &self.free, dead: &self.dead, now },
+        );
+        for id in picks {
+            let valid = self.execs.get(id).map_or(false, |e| {
+                e.as_ref().map_or(false, |e| !e.paused && !e.preempt_pending)
+            });
+            if !valid {
+                return Err(Error::Schedule(format!(
+                    "policy {} preempted job {id} which is not running (or already marked)",
+                    self.policy.name()
+                )));
+            }
+            self.execs[id].as_mut().unwrap().preempt_pending = true;
+        }
+        Ok(())
+    }
+
+    /// Device conservation audit (debug builds only): every non-dead,
+    /// never-detected-dropped device is claimed by exactly one of the
+    /// free list, a running job's ring, or a pending release; nothing is
+    /// claimed twice; nothing dead sits in the free list.
+    #[cfg(debug_assertions)]
+    fn check_conservation(&self) {
+        let n = self.cfg.pool.len();
+        let mut claims = vec![0usize; n];
+        for &d in &self.free {
+            claims[d] += 1;
+            assert!(!self.dead[d], "dead device {d} in the free list");
+        }
+        for e in self.execs.iter().flatten() {
+            if !e.paused {
+                for &d in &e.alive {
+                    claims[d] += 1;
+                }
+            }
+        }
+        for hs in &self.release_at_done {
+            for &d in hs {
+                claims[d] += 1;
+            }
+        }
+        for (d, &c) in claims.iter().enumerate() {
+            assert!(c <= 1, "device {d} claimed {c} times");
+            if c == 0 {
+                assert!(
+                    self.dead[d] || self.detected[d],
+                    "alive device {d} leaked (not free, not held, not staged)"
+                );
+            }
+        }
+    }
+
+    fn into_report(self) -> FleetReport {
+        let FleetRun {
+            cfg,
+            policy,
+            scenario,
+            specs,
+            execs,
+            rows,
+            mut pool_busy,
+            mut last_done,
+            dead,
+            ..
+        } = self;
+        let mut out_rows: Vec<FleetJobRow> = Vec::with_capacity(rows.len());
+        for (id, (row, exec)) in rows.into_iter().zip(execs).enumerate() {
+            if let Some(row) = row {
+                // Finished/failed/rejected jobs folded their busy ledger
+                // in when the row was built; their exec is gone.
+                debug_assert!(exec.is_none(), "job {id} has both a row and live state");
+                out_rows.push(row);
+                continue;
+            }
+            let s = &specs[id];
+            out_rows.push(match exec {
+                // Paused when the stream ended (the pool died or the
+                // policy never re-admitted it): it did real work — bill
+                // its busy seconds — but never completed.
+                Some(e) => {
+                    debug_assert!(e.paused, "job {id} still running after the heap drained");
+                    for (d, b) in e.busy.iter().enumerate() {
+                        pool_busy[d] += b;
+                    }
+                    // The job occupied the pool until its pause: its busy
+                    // seconds are billed, so the serving window must cover
+                    // them (same convention as mid-run failures) — else
+                    // pool_utilization could exceed 1.0.
+                    if e.busy.iter().any(|&b| b > 0.0) {
+                        last_done = last_done.max(e.sim.now);
+                    }
+                    FleetJobRow {
+                        job: id,
+                        arrival_s: s.arrival_s,
+                        admitted_s: e.admitted_s,
+                        completed_s: -1.0,
+                        ring: e.initial_ring,
+                        replans: e.replans,
+                        dropped: e.dropped.len(),
+                        busy_s: e.busy.iter().sum(),
+                        nominal_s: s.nominal_service_s(e.block_fwd_s),
+                        deadline_s: s.deadline_s(e.block_fwd_s),
+                        deadline_class: s.deadline.name().to_string(),
+                        priority: s.priority.name().to_string(),
+                        preemptions: e.preemptions,
+                        resizes: e.resizes,
+                        rejected: false,
+                        failed: true,
+                    }
+                }
+                // Never admitted: the run ended with the job still
+                // waiting (pool too dead or the policy never found it a
+                // ring).
+                None => FleetJobRow {
+                    job: id,
+                    arrival_s: s.arrival_s,
+                    admitted_s: -1.0,
+                    completed_s: -1.0,
+                    ring: 0,
+                    replans: 0,
+                    dropped: 0,
+                    busy_s: 0.0,
+                    nominal_s: 0.0,
+                    deadline_s: 0.0,
+                    deadline_class: s.deadline.name().to_string(),
+                    priority: s.priority.name().to_string(),
+                    preemptions: 0,
+                    resizes: 0,
+                    rejected: false,
+                    failed: true,
+                },
+            });
+        }
+        FleetReport {
+            policy: policy.name().to_string(),
+            scenario: scenario.name.clone(),
+            pool_devices: cfg.pool.len(),
+            rows: out_rows,
+            horizon_s: last_done,
+            pool_device_busy: pool_busy,
+            dead_devices: dead.iter().filter(|&&d| d).count(),
+        }
+    }
+}
+
+/// Run the configured job stream through `policy` over the shared pool
+/// and return the aggregate [`FleetReport`] (see module docs for
+/// mechanics).  Round-granular: jobs advance one round per event and may
+/// be paused, resized, or rejected when the config enables those paths.
+pub fn serve(cfg: &FleetConfig, policy: &dyn AllocationPolicy) -> Result<FleetReport> {
+    cfg.validate()?;
+    let mut run = FleetRun::new(cfg, policy);
+    while let Some(ev) = run.heap.pop() {
+        let now = ev.t;
+        let pool_changed = match ev.rank {
+            RANK_DROP => {
+                run.dead[ev.id] = true;
+                run.free.retain(|&x| x != ev.id);
+                true
+            }
+            RANK_DONE => {
+                run.handle_done(ev.id, now);
+                true
+            }
+            RANK_STEP => run.handle_step(ev.id)?,
+            _ => {
+                run.waiting.push(ev.id);
+                run.waiting.sort_unstable();
+                true
+            }
+        };
+        if pool_changed {
+            run.admission_pass(now)?;
+        }
+        #[cfg(debug_assertions)]
+        run.check_conservation();
+    }
+    Ok(run.into_report())
+}
+
+// --------------------------------------------------------------- legacy
+
+/// Everything the legacy scheduler needs back from one job's simulation.
 struct JobRun {
     completed_s: f64,
     replans: usize,
@@ -124,21 +975,10 @@ struct JobRun {
     failed: bool,
 }
 
-/// Plan a ring over `devices`: exhaustive for tiny rings, budgeted beam +
-/// anneal beyond (see [`fleet_search`]).
-fn plan_ring(planner: &Planner<'_>, devices: &[usize]) -> Result<LayerAssignment> {
-    let plan = if devices.len() <= FLEET_EXHAUSTIVE_MAX_DEVICES {
-        planner.plan_exhaustive(devices)?
-    } else {
-        planner.plan_beam_anneal_with(devices, &fleet_search())?
-    };
-    Ok(plan.assignment)
-}
-
-/// Simulate one admitted job to completion: RingAda schedule, per-round
-/// chunks, pool-scenario clock, dropout detection at round boundaries with
-/// re-planning over the survivors (mirrors `train::simulate_scenario`, but
-/// against a pool subset with the clock starting at admission).
+/// Simulate one admitted job to completion: the legacy admit-time path.
+/// Kept verbatim (modulo shared helpers) as the executable specification
+/// of job execution — [`serve`] must reproduce it byte-identically; see
+/// [`serve_reference`].
 fn run_job(
     cfg: &FleetConfig,
     scenario: &Scenario,
@@ -160,7 +1000,7 @@ fn run_job(
         local_iters: spec.local_iters,
         unfreeze_interval: 1,
         initial_depth: 1,
-        seed: cfg.seed ^ (spec.id as u64),
+        seed: job_seed(cfg, spec.id),
         ..TrainingConfig::default()
     };
     let sizes = WireSizes {
@@ -176,11 +1016,6 @@ fn run_job(
         Err(_) => {
             // This subset cannot host the model (memory budgets): a failed
             // job, not a fleet-wide error — its devices go straight back.
-            // Deliberately fail-fast rather than re-queue: the policy
-            // granted these devices, and re-queuing an infeasible grant
-            // would retry the identical decision every event (livelock).
-            // A memory-aware sizing policy is the real fix and slots into
-            // the AllocationPolicy trait without scheduler changes.
             return Ok(JobRun {
                 completed_s: admit_s,
                 replans: 0,
@@ -231,7 +1066,9 @@ fn run_job(
         for (d, b) in report.device_busy.iter().enumerate() {
             busy[d] += b;
         }
-        // Fail-stops detected at this round boundary.
+        // Fail-stops detected at this round boundary (`<=`: a dropout on
+        // the final boundary itself still lands inside the job — never
+        // returned as a survivor).
         let mut need_replan = false;
         while pending.front().map_or(false, |&(at, _)| at <= sim.now) {
             let (_, d) = pending.pop_front().unwrap();
@@ -276,10 +1113,22 @@ fn run_job(
     })
 }
 
-/// Run the configured job stream through `policy` over the shared pool and
-/// return the aggregate [`FleetReport`] (see module docs for mechanics).
-pub fn serve(cfg: &FleetConfig, policy: &dyn AllocationPolicy) -> Result<FleetReport> {
+/// The retained legacy scheduler: whole-job simulation at admission time,
+/// exactly the pre-round-granular event loop.  The executable
+/// specification [`serve`] is differentially tested against (the
+/// `Simulator::run_reference` pattern): for any config without
+/// preemption or admission control, `serve` and `serve_reference` must
+/// produce byte-identical [`FleetReport::canonical_string`]s.  Errors on
+/// configs that enable the new paths — this scheduler cannot express
+/// them.
+#[doc(hidden)]
+pub fn serve_reference(cfg: &FleetConfig, policy: &dyn AllocationPolicy) -> Result<FleetReport> {
     cfg.validate()?;
+    if cfg.preemption || cfg.admission != AdmissionControl::Open {
+        return Err(Error::Schedule(
+            "serve_reference cannot express preemption or admission control".into(),
+        ));
+    }
     let n = cfg.pool.len();
     let scenario = cfg.scenario.clone().unwrap_or_else(Scenario::healthy);
     let specs = JobTrace::synthetic(cfg);
@@ -308,10 +1157,6 @@ pub fn serve(cfg: &FleetConfig, policy: &dyn AllocationPolicy) -> Result<FleetRe
                 free.retain(|&x| x != ev.id);
             }
             RANK_DONE => {
-                // A job that failed at admission (plan infeasible) did
-                // zero work and must not inflate the serving window that
-                // throughput/utilization divide by; mid-run failures did
-                // occupy the pool, so their end still counts.
                 if rows[ev.id]
                     .as_ref()
                     .map_or(false, |r| !r.failed || r.busy_s > 0.0)
@@ -334,7 +1179,7 @@ pub fn serve(cfg: &FleetConfig, policy: &dyn AllocationPolicy) -> Result<FleetRe
         let queue: Vec<&JobSpec> = waiting.iter().map(|&j| &specs[j]).collect();
         let allocs = policy.allocate(
             &queue,
-            &PoolView { cluster: &cfg.pool, free: &free, now },
+            &PoolView { cluster: &cfg.pool, free: &free, dead: &dead, now },
         );
         for a in allocs {
             let Some(wpos) = waiting.iter().position(|&j| j == a.job) else {
@@ -381,6 +1226,10 @@ pub fn serve(cfg: &FleetConfig, policy: &dyn AllocationPolicy) -> Result<FleetRe
                 nominal_s: run.nominal_s,
                 deadline_s: run.deadline_s,
                 deadline_class: spec.deadline.name().to_string(),
+                priority: spec.priority.name().to_string(),
+                preemptions: 0,
+                resizes: 0,
+                rejected: false,
                 failed: run.failed,
             });
             held[a.job] = run.survivors;
@@ -408,6 +1257,10 @@ pub fn serve(cfg: &FleetConfig, policy: &dyn AllocationPolicy) -> Result<FleetRe
                     nominal_s: 0.0,
                     deadline_s: 0.0,
                     deadline_class: s.deadline.name().to_string(),
+                    priority: s.priority.name().to_string(),
+                    preemptions: 0,
+                    resizes: 0,
+                    rejected: false,
                     failed: true,
                 }
             })
@@ -431,10 +1284,11 @@ mod tests {
     use crate::config::FleetConfig;
 
     #[test]
-    fn event_order_is_drop_done_arrive_at_equal_times() {
+    fn event_order_is_drop_done_step_arrive_at_equal_times() {
         let mut h: BinaryHeap<Event> = BinaryHeap::new();
         h.push(Event { t: 1.0, rank: RANK_ARRIVE, id: 0 });
         h.push(Event { t: 1.0, rank: RANK_DROP, id: 3 });
+        h.push(Event { t: 1.0, rank: RANK_STEP, id: 5 });
         h.push(Event { t: 1.0, rank: RANK_DONE, id: 2 });
         h.push(Event { t: 0.5, rank: RANK_ARRIVE, id: 9 });
         let order: Vec<(u8, usize)> = std::iter::from_fn(|| h.pop())
@@ -442,7 +1296,13 @@ mod tests {
             .collect();
         assert_eq!(
             order,
-            vec![(RANK_ARRIVE, 9), (RANK_DROP, 3), (RANK_DONE, 2), (RANK_ARRIVE, 0)]
+            vec![
+                (RANK_ARRIVE, 9),
+                (RANK_DROP, 3),
+                (RANK_DONE, 2),
+                (RANK_STEP, 5),
+                (RANK_ARRIVE, 0)
+            ]
         );
     }
 
@@ -459,5 +1319,17 @@ mod tests {
         assert!(row.busy_s > 0.0);
         assert!(report.horizon_s > 0.0);
         assert!(report.pool_utilization() > 0.0 && report.pool_utilization() <= 1.0);
+    }
+
+    #[test]
+    fn job_seed_is_decorrelated_across_adjacent_configs() {
+        // The XOR derivation collided: seed s job i == seed s^1 job i^1.
+        let a = FleetConfig::synthetic(4, 4, 6);
+        let b = FleetConfig::synthetic(4, 4, 7); // 6 ^ 1 == 7
+        assert_ne!(job_seed(&a, 2), job_seed(&b, 3)); // 2 ^ 1 == 3
+        assert_ne!(job_seed(&a, 0), job_seed(&b, 1));
+        for i in 0..4 {
+            assert_ne!(job_seed(&a, i), job_seed(&b, i));
+        }
     }
 }

@@ -22,12 +22,21 @@
 //!   request are scored on the fastest free devices, strict-deadline jobs
 //!   take the width minimizing the bottleneck (fastest finish), everyone
 //!   else the width minimizing device-seconds per batch (best packing).
+//! * [`DeadlineEdf`] — earliest-deadline-first *within priority class*
+//!   (higher classes always served first), with optional admission
+//!   control (reject jobs whose *best-case* finish, priced by the
+//!   planner's bottleneck estimate on the pool's fastest *alive*
+//!   devices, already misses the deadline) and optional preemption
+//!   (pause strictly lower-priority running jobs at their next round
+//!   boundary when a waiting job cannot start otherwise).  The rejection
+//!   and preemption hooks only fire when `FleetConfig::admission` /
+//!   `FleetConfig::preemption` enable them.
 
 use crate::config::ClusterConfig;
 use crate::coordinator::{Planner, PlannerCosts};
 use crate::sim::CostLut;
 
-use super::job::{DeadlineClass, JobSpec};
+use super::job::{DeadlineClass, JobSpec, Priority};
 use super::LUT_GFLOPS;
 
 /// Immutable pool state handed to an allocation policy.
@@ -35,6 +44,10 @@ pub struct PoolView<'a> {
     pub cluster: &'a ClusterConfig,
     /// Free device ids, ascending.
     pub free: &'a [usize],
+    /// Per-device fail-stop flags (`dead[d]` ⇒ device `d` never returns).
+    /// Distinguishes dead from merely-busy: feasibility estimates must
+    /// not price work on silicon that no longer exists.
+    pub dead: &'a [bool],
     /// Current fleet clock (seconds).
     pub now: f64,
 }
@@ -46,12 +59,58 @@ pub struct Allocation {
     pub devices: Vec<usize>,
 }
 
+/// A running job's state, as shown to [`AllocationPolicy::preempt`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunningJob {
+    pub job: usize,
+    pub priority: Priority,
+    /// Absolute deadline on the fleet clock.
+    pub deadline_s: f64,
+    /// Devices currently held (alive ring members — what a pause frees).
+    pub devices: usize,
+    pub rounds_done: usize,
+    pub rounds_total: usize,
+    /// Already marked to pause at its next round boundary; preempting it
+    /// again frees nothing extra.
+    pub preempt_pending: bool,
+}
+
 /// The policy interface.  `queue` is in arrival order; returned
 /// allocations must use disjoint subsets of `pool.free` and jobs from the
 /// queue — the scheduler validates both and errors on violations.
+///
+/// [`AllocationPolicy::reject`] and [`AllocationPolicy::preempt`] are the
+/// admission-control and preemption hooks of the round-granular
+/// scheduler; they default to no-ops and only fire when the matching
+/// [`crate::config::FleetConfig`] knob enables them.  Like `allocate`,
+/// they must be pure and deterministic.
 pub trait AllocationPolicy {
     fn name(&self) -> &'static str;
     fn allocate(&self, queue: &[&JobSpec], pool: &PoolView<'_>) -> Vec<Allocation>;
+
+    /// Permanently reject waiting jobs (admission control).  Only
+    /// consulted for jobs that have not yet run a round — a job that
+    /// already consumed pool time is never retroactively rejected.
+    /// Returned ids must come from `queue`; the scheduler validates.
+    fn reject(&self, queue: &[&JobSpec], pool: &PoolView<'_>) -> Vec<usize> {
+        let _ = (queue, pool);
+        Vec::new()
+    }
+
+    /// Running jobs to pause at their next round boundary (the chunk
+    /// barrier, so the one-weight-version pause rule holds).  The paused
+    /// job's devices return to the pool and the job re-enters the
+    /// waiting queue for re-admission (possibly on a resized ring).
+    /// Returned ids must name running jobs; the scheduler validates.
+    fn preempt(
+        &self,
+        queue: &[&JobSpec],
+        running: &[RunningJob],
+        pool: &PoolView<'_>,
+    ) -> Vec<usize> {
+        let _ = (queue, running, pool);
+        Vec::new()
+    }
 }
 
 /// Strict FIFO with whole-ring grants and head-of-line blocking.
@@ -176,6 +235,230 @@ impl AllocationPolicy for UtilizationAware {
     }
 }
 
+/// Earliest-deadline-first serving within priority classes, with
+/// feasibility admission control and priority preemption (see module
+/// docs).  Deterministic: every ordering ties on the job id.
+///
+/// Deadlines and best-case service times are pure functions of the spec
+/// but are re-priced on every pass (the trait is stateless by contract:
+/// no interior-mutability cache), costing one analytic LUT + planner
+/// estimate per waiting job per pool event — fine at fleet scale today;
+/// memoize scheduler-side if BENCH_fleet.json ever shows it dominating.
+pub struct DeadlineEdf;
+
+impl DeadlineEdf {
+    /// Absolute deadline of `job` on the fleet clock (the per-job
+    /// analytic LUT prices the model, as everywhere on the fleet path).
+    fn deadline_of(job: &JobSpec) -> f64 {
+        let meta = job.model_meta();
+        let lut = CostLut::analytic(&meta, LUT_GFLOPS);
+        job.deadline_s(lut.block_fwd_s)
+    }
+
+    /// The ring width EDF grants `job` out of `n_free` devices: the
+    /// request, floored at 2 (a 1-device ring fails on its first
+    /// dropout) and capped by the free set, the model (≥ 2 blocks per
+    /// position), and the 8-wide fleet cap.  `None` when even the floor
+    /// does not fit.
+    fn width_for(job: &JobSpec, n_free: usize) -> Option<usize> {
+        let cap = n_free.min(job.layers / 2).min(8);
+        if cap < 2 {
+            return None;
+        }
+        Some(job.ring_size.clamp(2, cap))
+    }
+
+    /// Estimated best-case finish for `job` started *now* on the fastest
+    /// devices of the *whole pool* — not just the currently free set,
+    /// because waiting can earn a bigger or faster ring.  Each round
+    /// issues `w × local_iters` pipelined steps and each step occupies
+    /// the bottleneck stage at least once, so the estimate is
+    /// `rounds × w × local_iters × bottleneck(w)`, minimized over
+    /// candidate widths (on heterogeneous pools a narrow ring on the two
+    /// fastest devices can beat a wide ring gated by a slow one).
+    ///
+    /// This is a *heuristic shed threshold*, not a proof of
+    /// infeasibility: [`Planner::estimate_bottleneck_for_devices`] prices
+    /// the speed-descending order, an upper bound on the beam/anneal
+    /// optimum the scheduler actually plans with, and only widths
+    /// {2, 4, cap} are probed — so a marginally-schedulable job near the
+    /// boundary may still be shed.  Under the overload conditions where
+    /// admission control matters, shedding marginal jobs is the point;
+    /// the `now > deadline` branch in [`DeadlineEdf::reject`] stays
+    /// exact.  `None` when no candidate is feasible (the pool is too
+    /// small for the model) — a "cannot judge" answer, not a rejection.
+    fn best_case_finish(job: &JobSpec, pool: &PoolView<'_>) -> Option<f64> {
+        let cap = Self::width_for(job, pool.cluster.len())?;
+        let meta = job.model_meta();
+        let lut = CostLut::analytic(&meta, LUT_GFLOPS);
+        let costs = PlannerCosts {
+            block_fwd_s: lut.block_fwd_s,
+            activation_bytes: meta.activation_bytes(),
+        };
+        let planner = Planner::new(&meta, pool.cluster, costs);
+        // Alive devices only: dead silicon must not make a doomed job
+        // look schedulable.
+        let all: Vec<usize> = (0..pool.cluster.len()).filter(|&d| !pool.dead[d]).collect();
+        let cap = cap.min(all.len());
+        if cap < 2 {
+            return None;
+        }
+        let fastest = planner.speed_order(&all);
+        let mut cands = vec![2, 4, cap];
+        cands.retain(|&w| (2..=cap).contains(&w));
+        cands.sort_unstable();
+        cands.dedup();
+        let mut best: Option<f64> = None;
+        for w in cands {
+            let Ok(bottleneck) = planner.estimate_bottleneck_for_devices(&fastest[..w]) else {
+                continue;
+            };
+            let finish = pool.now + (job.rounds * w * job.local_iters) as f64 * bottleneck;
+            best = Some(best.map_or(finish, |b: f64| b.min(finish)));
+        }
+        best
+    }
+}
+
+impl AllocationPolicy for DeadlineEdf {
+    fn name(&self) -> &'static str {
+        "deadline-edf"
+    }
+
+    fn allocate(&self, queue: &[&JobSpec], pool: &PoolView<'_>) -> Vec<Allocation> {
+        // EDF *within* priority class — higher classes first, then
+        // absolute deadline, ties by id (deterministic).  Class-major
+        // order is what makes preemption coherent: when a victim pauses
+        // for a higher-priority job, pure-deadline order could hand the
+        // freed devices straight back to the victim (its deadline is
+        // often earlier) and starve the very job the pause was for.
+        let mut by_deadline: Vec<(f64, &JobSpec)> =
+            queue.iter().map(|j| (Self::deadline_of(j), *j)).collect();
+        by_deadline.sort_by(|a, b| {
+            b.1.priority
+                .cmp(&a.1.priority)
+                .then(a.0.total_cmp(&b.0))
+                .then(a.1.id.cmp(&b.1.id))
+        });
+        let mut free: Vec<usize> = pool.free.to_vec();
+        let mut out = Vec::new();
+        for (_, job) in by_deadline {
+            if free.len() < 2 {
+                break;
+            }
+            // No head-of-line blocking: a job that cannot be sized yet is
+            // skipped, not waited for.
+            let Some(k) = Self::width_for(job, free.len()) else { continue };
+            let meta = job.model_meta();
+            let lut = CostLut::analytic(&meta, LUT_GFLOPS);
+            let costs = PlannerCosts {
+                block_fwd_s: lut.block_fwd_s,
+                activation_bytes: meta.activation_bytes(),
+            };
+            let planner = Planner::new(&meta, pool.cluster, costs);
+            // Fastest free devices: tight deadlines get the best silicon.
+            let mut devices: Vec<usize> = planner.speed_order(&free)[..k].to_vec();
+            devices.sort_unstable();
+            free.retain(|d| !devices.contains(d));
+            out.push(Allocation { job: job.id, devices });
+        }
+        out
+    }
+
+    fn reject(&self, queue: &[&JobSpec], pool: &PoolView<'_>) -> Vec<usize> {
+        let mut out = Vec::new();
+        for job in queue {
+            let deadline = Self::deadline_of(job);
+            // Already past due: even instantaneous service misses.
+            if pool.now > deadline {
+                out.push(job.id);
+                continue;
+            }
+            // Best-case finish on the pool's fastest devices already
+            // misses: shedding the job now frees capacity for jobs that
+            // can still hit their deadlines.  (As the clock advances an
+            // ever-waiting job eventually fails this test and is shed.)
+            if let Some(finish) = Self::best_case_finish(job, pool) {
+                if finish > deadline {
+                    out.push(job.id);
+                }
+            }
+        }
+        out
+    }
+
+    fn preempt(
+        &self,
+        queue: &[&JobSpec],
+        running: &[RunningJob],
+        pool: &PoolView<'_>,
+    ) -> Vec<usize> {
+        // The highest-class, tightest-deadline waiting job that cannot be
+        // admitted from the free set alone drives preemption — the same
+        // class-major order allocate serves in, so the freed devices go
+        // to the job the pause was for.
+        let mut by_deadline: Vec<(f64, &JobSpec)> =
+            queue.iter().map(|j| (Self::deadline_of(j), *j)).collect();
+        by_deadline.sort_by(|a, b| {
+            b.1.priority
+                .cmp(&a.1.priority)
+                .then(a.0.total_cmp(&b.0))
+                .then(a.1.id.cmp(&b.1.id))
+        });
+        for (_, job) in by_deadline {
+            // Consistent with allocate's elastic sizing: a job that can
+            // be admitted *right now* at some (possibly narrow) width is
+            // not worth pausing anyone for — allocate will start it in
+            // this same pass.  Preempt only for jobs that cannot start at
+            // all from the current free set.
+            if Self::width_for(job, pool.free.len()).is_some() {
+                continue;
+            }
+            let Some(k) = Self::width_for(job, usize::MAX) else { continue };
+            let mut reclaimable: Vec<&RunningJob> = running
+                .iter()
+                .filter(|r| r.priority < job.priority && !r.preempt_pending)
+                .collect();
+            if reclaimable.is_empty() {
+                continue;
+            }
+            // Pause the cheapest victims first: lowest priority, then
+            // latest deadline (most slack), then most remaining rounds
+            // (least sunk work destroyed by a pause), then fewest
+            // devices, then id.
+            reclaimable.sort_by(|a, b| {
+                let rem_a = a.rounds_total.saturating_sub(a.rounds_done);
+                let rem_b = b.rounds_total.saturating_sub(b.rounds_done);
+                a.priority
+                    .cmp(&b.priority)
+                    .then(b.deadline_s.total_cmp(&a.deadline_s))
+                    .then(rem_b.cmp(&rem_a))
+                    .then(a.devices.cmp(&b.devices))
+                    .then(a.job.cmp(&b.job))
+            });
+            let mut freed = pool.free.len();
+            let mut picks = Vec::new();
+            for r in reclaimable {
+                if freed >= k {
+                    break;
+                }
+                freed += r.devices;
+                picks.push(r.job);
+            }
+            // Full request width if reclaimable, else any viable ring:
+            // allocate is elastic (class-major), so freeing >= 2 devices
+            // is enough to start the job — demanding the full k here
+            // would refuse to preempt exactly when one victim suffices.
+            if freed >= 2 && !picks.is_empty() {
+                return picks;
+            }
+            // No lower-priority capacity worth reclaiming for this job;
+            // try the next waiting job instead.
+        }
+        Vec::new()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -190,6 +473,7 @@ mod tests {
             local_iters: 1,
             ring_size: ring,
             deadline: DeadlineClass::Standard,
+            priority: Priority::Normal,
         }
     }
 
@@ -199,7 +483,8 @@ mod tests {
         let j0 = job(0, 6, 16); // does not fit a 4-device pool
         let j1 = job(1, 2, 16); // would fit, but FIFO must not skip ahead
         let free = [0, 1, 2, 3];
-        let view = PoolView { cluster: &cl, free: &free, now: 0.0 };
+        let no_dead = [false; 4];
+        let view = PoolView { cluster: &cl, free: &free, dead: &no_dead, now: 0.0 };
         let allocs = FifoWholeRing.allocate(&[&j0, &j1], &view);
         assert!(allocs.is_empty(), "head-of-line blocking violated: {allocs:?}");
         // Once the head fits, both go, in order, on disjoint devices.
@@ -217,7 +502,8 @@ mod tests {
         let j1 = job(1, 3, 16);
         let j2 = job(2, 2, 16);
         let free = [0, 1, 2, 3];
-        let view = PoolView { cluster: &cl, free: &free, now: 0.0 };
+        let no_dead = [false; 4];
+        let view = PoolView { cluster: &cl, free: &free, dead: &no_dead, now: 0.0 };
         let allocs = SmallestRingFirst.allocate(&[&j0, &j1, &j2], &view);
         // Smallest request (job 2, ring 2) admitted first; the remaining 2
         // free devices fit neither job 1 (ring 3) nor the head (ring 6).
@@ -227,12 +513,116 @@ mod tests {
     }
 
     #[test]
+    fn edf_admits_in_deadline_order_on_the_fastest_devices() {
+        let cl = ClusterConfig::synthetic(8, 7, 0.6);
+        // Same shape, different arrival ⇒ job 1's absolute deadline is
+        // later than job 0's; a relaxed class pushes job 2's later still.
+        let j0 = job(0, 2, 16);
+        let j1 = job(1, 2, 16);
+        let mut j2 = job(2, 2, 16);
+        j2.deadline = DeadlineClass::Relaxed;
+        let free: Vec<usize> = (0..8).collect();
+        let no_dead = [false; 8];
+        let view = PoolView { cluster: &cl, free: &free, dead: &no_dead, now: 0.0 };
+        // Present the queue out of order: EDF must re-sort it.
+        let allocs = DeadlineEdf.allocate(&[&j2, &j1, &j0], &view);
+        assert_eq!(allocs.len(), 3);
+        assert_eq!(allocs[0].job, 0);
+        assert_eq!(allocs[1].job, 1);
+        assert_eq!(allocs[2].job, 2);
+        // Disjoint grants, each 2 wide (the request).
+        let mut seen = vec![false; 8];
+        for a in &allocs {
+            assert_eq!(a.devices.len(), 2);
+            for &d in &a.devices {
+                assert!(!seen[d], "overlapping grant on device {d}");
+                seen[d] = true;
+            }
+        }
+    }
+
+    #[test]
+    fn edf_rejects_only_infeasible_jobs() {
+        let cl = ClusterConfig::synthetic(8, 7, 0.6);
+        let free: Vec<usize> = (0..8).collect();
+        let no_dead = [false; 8];
+        // Generous deadline at t=0: kept.
+        let ok = job(0, 4, 16);
+        let view = PoolView { cluster: &cl, free: &free, dead: &no_dead, now: 0.0 };
+        assert!(DeadlineEdf.reject(&[&ok], &view).is_empty());
+        // Same job consulted long after its deadline passed: rejected.
+        let lut = CostLut::analytic(&ok.model_meta(), LUT_GFLOPS);
+        let past_due = ok.deadline_s(lut.block_fwd_s) + 1.0;
+        let view = PoolView { cluster: &cl, free: &free, dead: &no_dead, now: past_due };
+        assert_eq!(DeadlineEdf.reject(&[&ok], &view), vec![0]);
+        // Feasibility is judged on the whole pool, not the free set: a
+        // feasible job stays queued even when almost nothing is free.
+        let view = PoolView { cluster: &cl, free: &free[..1], dead: &no_dead, now: 0.0 };
+        assert!(DeadlineEdf.reject(&[&ok], &view).is_empty());
+    }
+
+    #[test]
+    fn edf_preempts_strictly_lower_priority_victims_only() {
+        let cl = ClusterConfig::synthetic(8, 7, 0.6);
+        let mut urgent = job(9, 4, 16);
+        urgent.priority = Priority::High;
+        let running = |job, priority, devices, pending| RunningJob {
+            job,
+            priority,
+            deadline_s: 1e6,
+            devices,
+            rounds_done: 1,
+            rounds_total: 3,
+            preempt_pending: pending,
+        };
+        let free = [0usize; 0];
+        let no_dead = [false; 8];
+        let view = PoolView { cluster: &cl, free: &free, dead: &no_dead, now: 0.0 };
+        // Low-priority victims are paused until the urgent job fits.
+        let picks = DeadlineEdf.preempt(
+            &[&urgent],
+            &[
+                running(0, Priority::Normal, 2, false),
+                running(1, Priority::Low, 2, false),
+                running(2, Priority::Low, 2, false),
+            ],
+            &view,
+        );
+        assert_eq!(picks, vec![1, 2], "lowest priority first, ties by id");
+        // Equal-or-higher-priority jobs are never victims; reclaiming the
+        // Normal job's 2 devices cannot host the requested 4-ring, but
+        // allocate is elastic (a 2-ring is viable), so the Normal victim
+        // is still paused — partial reclamation beats starving the
+        // High-priority job.
+        let picks = DeadlineEdf.preempt(
+            &[&urgent],
+            &[
+                running(0, Priority::High, 4, false),
+                running(1, Priority::Normal, 2, false),
+            ],
+            &view,
+        );
+        assert_eq!(picks, vec![1], "only the strictly-lower-priority job is a victim");
+        // Already-pending victims free nothing extra.
+        let picks = DeadlineEdf.preempt(
+            &[&urgent],
+            &[
+                running(0, Priority::Low, 2, true),
+                running(1, Priority::Low, 2, true),
+            ],
+            &view,
+        );
+        assert!(picks.is_empty());
+    }
+
+    #[test]
     fn util_aware_sizes_rings_and_skips_unfittable_jobs() {
         let cl = ClusterConfig::synthetic(8, 7, 0.6);
         let j0 = job(0, 8, 8); // request 8, model only supports small rings
         let j1 = job(1, 2, 16);
         let free: Vec<usize> = (0..8).collect();
-        let view = PoolView { cluster: &cl, free: &free, now: 0.0 };
+        let no_dead = [false; 8];
+        let view = PoolView { cluster: &cl, free: &free, dead: &no_dead, now: 0.0 };
         let allocs = UtilizationAware.allocate(&[&j0, &j1], &view);
         assert!(!allocs.is_empty());
         // All grants are disjoint, within the pool, and at least 2 wide.

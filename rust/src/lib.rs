@@ -88,9 +88,16 @@
 //! assert!(report.completed() > 0);
 //! ```
 //!
+//! Jobs execute round-granularly (one round per scheduler event), so
+//! policies can preempt a lower-priority job at a chunk barrier, resume
+//! it later on a resized ring, and admission-control against deadline
+//! feasibility — see [`fleet`]'s module docs and `FleetConfig`'s
+//! `priority_mix` / `preemption` / `admission` knobs.
 //! `examples/fleet_serving.rs` runs 64 jobs over a 128-device pool under
-//! all three policies, healthy and faulted, and prints the per-policy
-//! throughput / JCT / fairness delta table.
+//! all four policies, healthy and faulted, prints the per-policy
+//! throughput / JCT / fairness delta table, and demonstrates
+//! `DeadlineEdf` + preemption beating FIFO on deadline hit rate on a
+//! contended pool.
 
 pub mod cluster;
 pub mod config;
@@ -111,15 +118,18 @@ pub use error::{Error, Result};
 /// Convenient glob-import surface for examples and downstream users.
 pub mod prelude {
     pub use crate::config::{
-        ClusterConfig, DeviceSpec, ExperimentConfig, FleetConfig, Scheme, TrainingConfig,
+        AdmissionControl, ClusterConfig, DeviceSpec, ExperimentConfig, FleetConfig, Scheme,
+        TrainingConfig,
     };
     pub use crate::cluster::RingCluster;
-    pub use crate::coordinator::{Coordinator, LayerAssignment, Planner, PlannerCosts, UnfreezeSchedule};
+    pub use crate::coordinator::{
+        Coordinator, LayerAssignment, Planner, PlannerCosts, UnfreezeSchedule,
+    };
     pub use crate::data::{Batch, QaConfig, SyntheticQa};
     pub use crate::error::{Error, Result};
     pub use crate::fleet::{
-        serve, AllocationPolicy, DeadlineClass, FifoWholeRing, JobSpec, JobTrace,
-        SmallestRingFirst, UtilizationAware,
+        serve, AllocationPolicy, DeadlineClass, DeadlineEdf, FifoWholeRing, JobSpec, JobTrace,
+        Priority, SmallestRingFirst, UtilizationAware,
     };
     pub use crate::metrics::{FleetDeltaTable, FleetReport, LossCurve, SpanMetrics, TablePrinter};
     pub use crate::model::{MemoryModel, ModelMeta};

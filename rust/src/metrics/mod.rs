@@ -313,6 +313,17 @@ pub struct FleetJobRow {
     pub deadline_s: f64,
     /// Deadline class name ("strict" / "standard" / "relaxed").
     pub deadline_class: String,
+    /// Priority class name ("high" / "normal" / "low").
+    pub priority: String,
+    /// Times a policy paused this job at a round boundary to reclaim its
+    /// devices (round-granular scheduler only; 0 on the legacy path).
+    pub preemptions: usize,
+    /// Ring-width changes across pause/resume cycles (elastic resizing).
+    pub resizes: usize,
+    /// True when admission control permanently rejected the job (its
+    /// best-case finish already missed the deadline).  Rejected jobs are
+    /// also `failed` and count as deadline misses.
+    pub rejected: bool,
     /// True when the job lost every device (or a re-plan failed).
     pub failed: bool,
 }
@@ -344,6 +355,20 @@ impl FleetJobRow {
     pub fn met_deadline(&self) -> bool {
         self.completed() && self.completed_s <= self.deadline_s
     }
+}
+
+/// One priority class's slice of a [`FleetReport`] (see
+/// [`FleetReport::class_stats`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClassStat {
+    pub class: String,
+    /// Jobs of this class in the stream.
+    pub jobs: usize,
+    pub completed: usize,
+    /// Mean JCT over the class's completed jobs (0.0 = none completed).
+    pub mean_jct_s: f64,
+    /// Deadline hit rate within the class (1.0 for an empty class).
+    pub deadline_rate: f64,
 }
 
 /// Aggregate result of one fleet serving run: one row per job plus
@@ -381,9 +406,24 @@ impl FleetReport {
             .count()
     }
 
-    /// Jobs the run ended without admitting.
+    /// Jobs the run ended without admitting (rejections included).
     pub fn unserved(&self) -> usize {
         self.rows.iter().filter(|r| r.admitted_s < 0.0).count()
+    }
+
+    /// Jobs permanently rejected by admission control.
+    pub fn rejected_jobs(&self) -> usize {
+        self.rows.iter().filter(|r| r.rejected).count()
+    }
+
+    /// Total round-boundary pauses across the run.
+    pub fn preemptions(&self) -> usize {
+        self.rows.iter().map(|r| r.preemptions).sum()
+    }
+
+    /// Total ring-width changes across pause/resume cycles.
+    pub fn resizes(&self) -> usize {
+        self.rows.iter().map(|r| r.resizes).sum()
     }
 
     pub fn throughput_jobs_per_hour(&self) -> f64 {
@@ -405,6 +445,11 @@ impl FleetReport {
         jcts
     }
 
+    /// Mean JCT over *completed* jobs.
+    ///
+    /// Degenerate edges (documented contract, pinned by unit tests):
+    /// empty stream or all-failed run ⇒ `0.0` ("no completed jobs", not
+    /// "zero seconds"); single completed job ⇒ that job's JCT.
     pub fn mean_jct_s(&self) -> f64 {
         let jcts = self.completed_jcts();
         if jcts.is_empty() {
@@ -415,6 +460,10 @@ impl FleetReport {
     }
 
     /// 95th-percentile JCT (nearest-rank; deterministic integer math).
+    ///
+    /// Degenerate edges: empty stream or all-failed run ⇒ `0.0` ("no
+    /// completed jobs"); single completed job ⇒ that job's JCT (the
+    /// nearest-rank percentile of one sample is the sample).
     pub fn p95_jct_s(&self) -> f64 {
         let jcts = self.completed_jcts();
         if jcts.is_empty() {
@@ -425,7 +474,12 @@ impl FleetReport {
         jcts[idx]
     }
 
-    /// Mean queueing delay over admitted jobs.
+    /// Mean queueing delay over *admitted* jobs.
+    ///
+    /// Degenerate edges: nothing admitted (empty stream, or every job
+    /// rejected/unserved) ⇒ `0.0` ("no admissions", not "zero wait");
+    /// a single admitted job ⇒ its own wait.  Failed-after-admission
+    /// jobs still count — they queued like everyone else.
     pub fn mean_wait_s(&self) -> f64 {
         let waits: Vec<f64> = self
             .rows
@@ -453,7 +507,13 @@ impl FleetReport {
 
     /// Jain fairness index over completed jobs' normalized service rates
     /// `nominal / JCT` (1 = contention-free service).  1.0 = perfectly
-    /// fair, 1/n = one job got everything, 0 = nothing completed.
+    /// fair, 1/n = one job got everything.
+    ///
+    /// Degenerate edges: empty stream or all-failed run ⇒ `0.0` (the
+    /// index is undefined with no samples; 0.0 is the documented
+    /// sentinel, distinguishable because it is outside the index's
+    /// (0, 1] range over n ≥ 1 samples); a single completed job ⇒ `1.0`
+    /// (one sample is trivially fair).
     pub fn jain_fairness(&self) -> f64 {
         let xs: Vec<f64> = self
             .rows
@@ -474,14 +534,57 @@ impl FleetReport {
     }
 
     /// Fraction of *all* jobs in the stream that finished inside their
-    /// deadline.  Failed and unserved jobs count as misses — a policy must
-    /// not score higher by abandoning its slow jobs instead of finishing
-    /// them late.
+    /// deadline.  Failed, rejected, and unserved jobs count as misses — a
+    /// policy must not score higher by abandoning its slow jobs instead
+    /// of finishing them late.
+    ///
+    /// Degenerate edges: empty stream ⇒ `1.0` (vacuously, no job missed;
+    /// the previous silent `0.0` read as "everything missed"); all-failed
+    /// run ⇒ `0.0` (every job genuinely missed); single completed job ⇒
+    /// `0.0` or `1.0` by its own deadline.
     pub fn deadline_hit_rate(&self) -> f64 {
         if self.rows.is_empty() {
-            return 0.0;
+            return 1.0;
         }
         self.rows.iter().filter(|r| r.met_deadline()).count() as f64 / self.rows.len() as f64
+    }
+
+    /// Per-priority-class outcome summary in `[high, normal, low]` order:
+    /// `(class name, jobs, completed, mean JCT over completed, deadline
+    /// hit rate within the class)`.  Classes absent from the stream get a
+    /// `(name, 0, 0, 0.0, 1.0)` row (same degenerate contract as the
+    /// fleet-wide metrics).  Feeds the per-class rows of
+    /// [`FleetDeltaTable`].
+    pub fn class_stats(&self) -> Vec<ClassStat> {
+        use crate::fleet::Priority;
+        // Names come from the enum so a variant rename cannot silently
+        // decouple this table from the rows the fleet writes.
+        [Priority::High, Priority::Normal, Priority::Low]
+            .iter()
+            .map(|p| p.name())
+            .map(|name| {
+                let rows: Vec<&FleetJobRow> =
+                    self.rows.iter().filter(|r| r.priority == name).collect();
+                let done: Vec<&&FleetJobRow> = rows.iter().filter(|r| r.completed()).collect();
+                let mean_jct_s = if done.is_empty() {
+                    0.0
+                } else {
+                    done.iter().map(|r| r.jct_s()).sum::<f64>() / done.len() as f64
+                };
+                let deadline_rate = if rows.is_empty() {
+                    1.0
+                } else {
+                    rows.iter().filter(|r| r.met_deadline()).count() as f64 / rows.len() as f64
+                };
+                ClassStat {
+                    class: name.to_string(),
+                    jobs: rows.len(),
+                    completed: done.len(),
+                    mean_jct_s,
+                    deadline_rate,
+                }
+            })
+            .collect()
     }
 
     /// Deterministic textual fingerprint: identical `(FleetConfig, policy)`
@@ -499,7 +602,7 @@ impl FleetReport {
         for (i, r) in self.rows.iter().enumerate() {
             let _ = write!(
                 s,
-                "{}{{id={},arr={},adm={},done={},ring={},replans={},dropped={},busy={},nominal={},deadline={},class={},failed={}}}",
+                "{}{{id={},arr={},adm={},done={},ring={},replans={},dropped={},busy={},nominal={},deadline={},class={},prio={},preempt={},resize={},rejected={},failed={}}}",
                 if i > 0 { "," } else { "" },
                 r.job,
                 r.arrival_s,
@@ -512,6 +615,10 @@ impl FleetReport {
                 r.nominal_s,
                 r.deadline_s,
                 r.deadline_class,
+                r.priority,
+                r.preemptions,
+                r.resizes,
+                r.rejected,
                 r.failed,
             );
         }
@@ -544,6 +651,12 @@ pub struct FleetDeltaRow {
     pub utilization: f64,
     pub jain: f64,
     pub deadline_rate: f64,
+    pub preemptions: usize,
+    pub resizes: usize,
+    pub rejected: usize,
+    /// Per-priority-class slice of the run (`[high, normal, low]`), for
+    /// [`FleetDeltaTable::render_by_class`].
+    pub class_stats: Vec<ClassStat>,
 }
 
 impl FleetDeltaRow {
@@ -572,6 +685,10 @@ impl FleetDeltaRow {
             utilization: run.pool_utilization(),
             jain: run.jain_fairness(),
             deadline_rate: run.deadline_hit_rate(),
+            preemptions: run.preemptions(),
+            resizes: run.resizes(),
+            rejected: run.rejected_jobs(),
+            class_stats: run.class_stats(),
         }
     }
 }
@@ -608,6 +725,9 @@ impl FleetDeltaTable {
             "Util (%)",
             "Jain",
             "DL hit (%)",
+            "Pre",
+            "Rsz",
+            "Rej",
         ]);
         for r in &self.rows {
             t.row(vec![
@@ -625,7 +745,41 @@ impl FleetDeltaTable {
                 format!("{:.1}", 100.0 * r.utilization),
                 format!("{:.3}", r.jain),
                 format!("{:.1}", 100.0 * r.deadline_rate),
+                r.preemptions.to_string(),
+                r.resizes.to_string(),
+                r.rejected.to_string(),
             ]);
+        }
+        t.render()
+    }
+
+    /// Per-priority-class companion table: one row per policy × scenario
+    /// × class with the class's job counts, mean JCT, and deadline hit
+    /// rate — how each policy trades the classes off against each other
+    /// (preempting policies should hold `high` hit rates under pressure
+    /// at some cost to `low`).
+    pub fn render_by_class(&self) -> String {
+        let mut t = TablePrinter::new(&[
+            "Policy",
+            "Scenario",
+            "Class",
+            "Jobs",
+            "Done",
+            "Mean JCT (s)",
+            "DL hit (%)",
+        ]);
+        for r in &self.rows {
+            for c in &r.class_stats {
+                t.row(vec![
+                    r.policy.clone(),
+                    r.scenario.clone(),
+                    c.class.clone(),
+                    c.jobs.to_string(),
+                    c.completed.to_string(),
+                    format!("{:.1}", c.mean_jct_s),
+                    format!("{:.1}", 100.0 * c.deadline_rate),
+                ]);
+            }
         }
         t.render()
     }
@@ -790,6 +944,10 @@ mod tests {
             nominal_s: nominal,
             deadline_s: arr + 4.0 * nominal,
             deadline_class: "standard".into(),
+            priority: "normal".into(),
+            preemptions: 0,
+            resizes: 0,
+            rejected: false,
             failed: false,
         }
     }
@@ -838,9 +996,73 @@ mod tests {
             fleet_row(1, 10.0, 10.0, 20.0, 5.0),
         ]);
         assert!((r.jain_fairness() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_stream_metrics_follow_the_documented_contract() {
+        // Empty stream: 0.0 sentinels for the sample statistics, vacuous
+        // 1.0 for the deadline hit rate (no job missed).
         let empty = fleet_report(vec![]);
         assert_eq!(empty.jain_fairness(), 0.0);
         assert_eq!(empty.p95_jct_s(), 0.0);
+        assert_eq!(empty.mean_jct_s(), 0.0);
+        assert_eq!(empty.mean_wait_s(), 0.0);
+        assert_eq!(empty.deadline_hit_rate(), 1.0);
+        for c in empty.class_stats() {
+            assert_eq!(c.jobs, 0);
+            assert_eq!(c.deadline_rate, 1.0);
+            assert_eq!(c.mean_jct_s, 0.0);
+        }
+    }
+
+    #[test]
+    fn all_failed_run_metrics_follow_the_documented_contract() {
+        // Admitted-then-failed jobs: no completions, so the JCT/Jain
+        // sentinels stay 0.0, the hit rate is a genuine 0.0, and waits
+        // still average (the jobs did queue).
+        let mut a = fleet_row(0, 0.0, 2.0, 8.0, 5.0);
+        a.failed = true;
+        let mut b = fleet_row(1, 1.0, 5.0, 9.0, 5.0);
+        b.failed = true;
+        let r = fleet_report(vec![a, b]);
+        assert_eq!(r.completed(), 0);
+        assert_eq!(r.mean_jct_s(), 0.0);
+        assert_eq!(r.p95_jct_s(), 0.0);
+        assert_eq!(r.jain_fairness(), 0.0);
+        assert_eq!(r.deadline_hit_rate(), 0.0);
+        assert!((r.mean_wait_s() - 3.0).abs() < 1e-12); // (2 + 4) / 2
+    }
+
+    #[test]
+    fn single_job_run_metrics_follow_the_documented_contract() {
+        // One completed job: every statistic collapses to that job.
+        let r = fleet_report(vec![fleet_row(0, 1.0, 3.0, 11.0, 5.0)]);
+        assert!((r.mean_jct_s() - 10.0).abs() < 1e-12);
+        assert!((r.p95_jct_s() - 10.0).abs() < 1e-12, "p95 of one sample is the sample");
+        assert_eq!(r.jain_fairness(), 1.0, "one sample is trivially fair");
+        assert!((r.mean_wait_s() - 2.0).abs() < 1e-12);
+        assert_eq!(r.deadline_hit_rate(), 1.0); // 11 <= 1 + 4*5
+    }
+
+    #[test]
+    fn class_stats_slice_by_priority() {
+        let mut hi = fleet_row(0, 0.0, 0.0, 10.0, 5.0);
+        hi.priority = "high".into();
+        let mut lo = fleet_row(1, 0.0, 0.0, 200.0, 5.0); // misses 0 + 4*5
+        lo.priority = "low".into();
+        let r = fleet_report(vec![hi, lo]);
+        let stats = r.class_stats();
+        assert_eq!(stats.len(), 3);
+        assert_eq!(stats[0].class, "high");
+        assert_eq!((stats[0].jobs, stats[0].completed), (1, 1));
+        assert!((stats[0].mean_jct_s - 10.0).abs() < 1e-12);
+        assert_eq!(stats[0].deadline_rate, 1.0);
+        assert_eq!(stats[1].class, "normal");
+        assert_eq!(stats[1].jobs, 0);
+        assert_eq!(stats[1].deadline_rate, 1.0, "empty class is vacuously on time");
+        assert_eq!(stats[2].class, "low");
+        assert_eq!(stats[2].deadline_rate, 0.0);
+        assert!((stats[2].mean_jct_s - 200.0).abs() < 1e-12);
     }
 
     #[test]
@@ -866,6 +1088,13 @@ mod tests {
         let s = t.render();
         assert!(s.contains("smallest-first"));
         assert!(s.contains("-50.0%"));
+        assert!(s.contains("| Pre "));
         assert_eq!(s.lines().count(), 3);
+        // Per-class companion table: 3 class rows per delta row.
+        let by_class = t.render_by_class();
+        assert!(by_class.contains("| high "));
+        assert!(by_class.contains("| normal "));
+        assert!(by_class.contains("| low "));
+        assert_eq!(by_class.lines().count(), 2 + 3);
     }
 }

@@ -13,6 +13,20 @@ pub struct Rng {
     spare: Option<f64>,
 }
 
+/// Mix `(seed, stream)` into one decorrelated u64 via the SplitMix64
+/// finalizer.  Use this — never plain XOR — to derive per-entity seeds
+/// from a base seed: XOR is not injective across configs (`s ^ i ==
+/// (s^1) ^ (i^1)`, so "different-seed" runs share correlated per-entity
+/// streams), while one SplitMix64 round avalanches every input bit.
+pub fn mix(seed: u64, stream: u64) -> u64 {
+    let mut z = seed
+        .wrapping_add(stream.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+        .wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
 impl Rng {
     pub fn new(seed: u64) -> Self {
         Rng { state: seed, spare: None }
@@ -117,6 +131,23 @@ mod tests {
         let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f32>() / xs.len() as f32;
         assert!(mean.abs() < 0.03, "mean {mean}");
         assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn mix_avoids_the_xor_collision_family() {
+        // XOR's failure mode: s ^ i == (s ^ 1) ^ (i ^ 1).  The mixer must
+        // not collide on that family (or on adjacent seeds generally).
+        for s in [0u64, 7, 42, u64::MAX - 3] {
+            for i in 0u64..64 {
+                assert_ne!(mix(s, i), mix(s ^ 1, i ^ 1), "xor family collision at s={s} i={i}");
+                assert_ne!(mix(s, i), mix(s + 1, i), "adjacent-seed collision at s={s} i={i}");
+                if i > 0 {
+                    assert_ne!(mix(s, i), mix(s, i - 1), "stream collision at s={s} i={i}");
+                }
+            }
+        }
+        // Deterministic.
+        assert_eq!(mix(123, 456), mix(123, 456));
     }
 
     #[test]

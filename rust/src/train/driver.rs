@@ -404,11 +404,14 @@ fn plan_over_survivors(
 ///    accumulate into a deterministically-ordered report, so the same
 ///    (seed, scenario) pair reproduces byte-identical output.
 ///
-/// `fleet::run_job` mirrors this round-advance / boundary-detect / re-plan
-/// protocol against a pool *subset* (RingAda only, clock released at
-/// admission) — a semantic change to dropout detection or re-planning here
-/// must be applied there too, or fleet runs and single-job scenario runs
-/// will disagree on the same script.
+/// The fleet scheduler mirrors this round-advance / boundary-detect /
+/// re-plan protocol against a pool *subset* (RingAda only, clock released
+/// at admission) in two places pinned byte-identical to each other:
+/// `fleet::JobExec::step` (the round-granular serving path) and the
+/// retained legacy `fleet::run_job` (`serve_reference`).  A semantic
+/// change to dropout detection or re-planning here must be applied to
+/// both, or fleet runs and single-job scenario runs will disagree on the
+/// same script.
 pub fn simulate_scenario(
     meta: &ModelMeta,
     cluster: &ClusterConfig,

@@ -1,17 +1,20 @@
 //! Fleet scheduler battery: seed determinism (the acceptance property —
 //! same `FleetConfig` seed ⇒ byte-identical `FleetReport` canonical
-//! string), policy invariants, fault handling, and config round-trips.
+//! string), the round-granular/legacy differential property, preemption
+//! and admission-control invariants, fault handling, and config
+//! round-trips.
 
-use ringada::config::FleetConfig;
+use ringada::config::{AdmissionControl, FleetConfig};
 use ringada::fleet::{
-    serve, AllocationPolicy, FifoWholeRing, JobTrace, SmallestRingFirst, UtilizationAware,
+    serve, serve_reference, AllocationPolicy, Allocation, DeadlineEdf, FifoWholeRing, JobSpec,
+    JobTrace, PoolView, Priority, RunningJob, SmallestRingFirst, UtilizationAware,
 };
 use ringada::metrics::FleetDeltaTable;
-use ringada::sim::Scenario;
+use ringada::sim::{Scenario, ScenarioEvent};
 use ringada::util::json::Json;
 
-fn policies() -> [&'static dyn AllocationPolicy; 3] {
-    [&FifoWholeRing, &SmallestRingFirst, &UtilizationAware]
+fn policies() -> [&'static dyn AllocationPolicy; 4] {
+    [&FifoWholeRing, &SmallestRingFirst, &UtilizationAware, &DeadlineEdf]
 }
 
 fn small_cfg(seed: u64) -> FleetConfig {
@@ -138,6 +141,261 @@ fn fleet_config_json_round_trips_through_serve() {
     let a = serve(&cfg, &SmallestRingFirst).unwrap();
     let b = serve(&back, &SmallestRingFirst).unwrap();
     assert_eq!(a.canonical_string(), b.canonical_string());
+}
+
+// ---------------------------------------------------------- differential
+
+#[test]
+fn round_granular_loop_matches_legacy_byte_identically_healthy() {
+    // The tentpole property: for every policy and seed, the resumable
+    // round-granular event loop reproduces the retained admit-time legacy
+    // path byte-for-byte (`canonical_string`), healthy pool.
+    for seed in [3, 5, 9, 13] {
+        let cfg = small_cfg(seed);
+        for policy in policies() {
+            let new = serve(&cfg, policy).unwrap();
+            let old = serve_reference(&cfg, policy).unwrap();
+            assert_eq!(
+                new.canonical_string(),
+                old.canonical_string(),
+                "divergence (healthy, seed {seed}, policy {})",
+                policy.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn round_granular_loop_matches_legacy_byte_identically_faulted() {
+    // Same property under intensity-0.8 faults: stragglers, degraded
+    // links, and a dropout that lands on whichever job holds the device.
+    for seed in [5, 7, 11] {
+        let mut cfg = small_cfg(seed);
+        cfg.scenario = Some(Scenario::synth(seed, 16, 2000.0, 0.8));
+        for policy in policies() {
+            let new = serve(&cfg, policy).unwrap();
+            let old = serve_reference(&cfg, policy).unwrap();
+            assert_eq!(
+                new.canonical_string(),
+                old.canonical_string(),
+                "divergence (faulted, seed {seed}, policy {})",
+                policy.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn serve_reference_refuses_the_paths_it_cannot_express() {
+    let mut cfg = small_cfg(3);
+    cfg.preemption = true;
+    assert!(serve_reference(&cfg, &DeadlineEdf).is_err());
+    let mut cfg = small_cfg(3);
+    cfg.admission = AdmissionControl::Feasibility;
+    assert!(serve_reference(&cfg, &DeadlineEdf).is_err());
+    // serve() itself accepts both.
+    let mut cfg = small_cfg(3);
+    cfg.preemption = true;
+    cfg.admission = AdmissionControl::Feasibility;
+    serve(&cfg, &DeadlineEdf).unwrap();
+}
+
+// ------------------------------------------- final-round dropout boundary
+
+#[test]
+fn dropout_exactly_on_the_final_boundary_is_never_a_survivor() {
+    // Phase 1: run healthy to learn the single job's exact completion
+    // time; FIFO grants the job devices [0, ring) so device 0 is in its
+    // ring.
+    let mut cfg = FleetConfig::synthetic(6, 1, 5);
+    cfg.mean_interarrival_s = 5.0;
+    let healthy = serve(&cfg, &FifoWholeRing).unwrap();
+    let done_s = healthy.rows[0].completed_s;
+    assert!(done_s > 0.0);
+
+    // Phase 2: script a fail-stop at *exactly* that boundary (bitwise).
+    let mut faulted = cfg.clone();
+    faulted.scenario = Some(Scenario {
+        name: "final-boundary".into(),
+        events: vec![ScenarioEvent::Dropout { device: 0, at: done_s }],
+    });
+    let report = serve(&faulted, &FifoWholeRing).unwrap();
+    let row = &report.rows[0];
+    // The dropout lands inside the job's last chunk: it is recorded as
+    // dropped (not a survivor), the job still completes (the work was
+    // done at the barrier), no re-plan happens (no rounds remain), and
+    // the device is dead exactly once at the pool level.
+    assert!(!row.failed, "a final-boundary dropout must not fail the job");
+    assert_eq!(row.dropped, 1, "boundary dropout must be detected by the job");
+    assert_eq!(row.replans, 0, "no rounds remain, so no re-plan");
+    assert_eq!(report.dead_devices, 1);
+    assert_eq!(
+        row.completed_s.to_bits(),
+        done_s.to_bits(),
+        "a boundary dropout must not change the completion time"
+    );
+    // And the legacy path agrees byte-for-byte on this exact edge.
+    let old = serve_reference(&faulted, &FifoWholeRing).unwrap();
+    assert_eq!(report.canonical_string(), old.canonical_string());
+
+    // A dropout one ulp *after* the boundary is the pool's problem, not
+    // the job's: zero dropped on the row, device still dead pool-side.
+    let mut after = cfg.clone();
+    after.scenario = Some(Scenario {
+        name: "after-boundary".into(),
+        events: vec![ScenarioEvent::Dropout { device: 0, at: done_s * (1.0 + 1e-15) }],
+    });
+    let report = serve(&after, &FifoWholeRing).unwrap();
+    assert_eq!(report.rows[0].dropped, 0);
+    assert!(!report.rows[0].failed);
+    assert_eq!(report.dead_devices, 1);
+}
+
+// ---------------------------------------------------- per-job seed mixing
+
+#[test]
+fn adjacent_seeds_decorrelate_the_whole_report() {
+    // Regression for the XOR derivation (seed s job i == seed s^1 job
+    // i^1): fleet runs one seed apart must not share any per-job
+    // outcome stream.  The traces differ outright (arrivals are drawn
+    // from the seed), so pin the per-job *training seeds* through the
+    // public surface: identical pools, identical hand-pinned arrival
+    // behavior is impossible here, so assert report-level divergence
+    // plus trace-level decorrelation.
+    let a = JobTrace::synthetic(&small_cfg(6));
+    let b = JobTrace::synthetic(&small_cfg(7)); // 6 ^ 1
+    // No aligned pair of jobs shares its draw chain: layers+rounds+ring
+    // colliding across ALL jobs would mean correlated streams.
+    let identical = a
+        .iter()
+        .zip(&b)
+        .filter(|(x, y)| {
+            x.arrival_s.to_bits() == y.arrival_s.to_bits()
+                && x.layers == y.layers
+                && x.rounds == y.rounds
+                && x.ring_size == y.ring_size
+        })
+        .count();
+    assert_eq!(identical, 0, "adjacent seeds produced {identical} identical jobs");
+    let ra = serve(&small_cfg(6), &FifoWholeRing).unwrap();
+    let rb = serve(&small_cfg(7), &FifoWholeRing).unwrap();
+    assert_ne!(ra.canonical_string(), rb.canonical_string());
+}
+
+// -------------------------------------------- preemption and admission
+
+/// Test-only policy: FIFO grants, but every running job is marked for
+/// preemption whenever anything waits — guarantees pauses under
+/// contention so the invariants below actually exercise the pause path.
+struct PreemptEverything;
+
+impl AllocationPolicy for PreemptEverything {
+    fn name(&self) -> &'static str {
+        "preempt-everything"
+    }
+
+    fn allocate(&self, queue: &[&JobSpec], pool: &PoolView<'_>) -> Vec<Allocation> {
+        FifoWholeRing.allocate(queue, pool)
+    }
+
+    fn preempt(
+        &self,
+        queue: &[&JobSpec],
+        running: &[RunningJob],
+        _pool: &PoolView<'_>,
+    ) -> Vec<usize> {
+        if queue.is_empty() {
+            return Vec::new();
+        }
+        running
+            .iter()
+            .filter(|r| !r.preempt_pending)
+            .map(|r| r.job)
+            .collect()
+    }
+}
+
+#[test]
+fn preemption_pauses_at_chunk_barriers_and_conserves_devices() {
+    // A pool that fits one ring at a time and arrivals far faster than
+    // service: the aggressive test policy is guaranteed to pause the
+    // running job when the next one arrives.  Device conservation is
+    // audited after every event by the scheduler's debug assertions
+    // (this test runs under `cargo test`, i.e. debug), and a completed
+    // job must have run its full epoch budget regardless of how many
+    // times it was paused (the one-weight-version pause rule proxy).
+    let mut cfg = FleetConfig::synthetic(8, 6, 11);
+    cfg.mean_interarrival_s = 0.05; // arrivals land mid-first-round
+    cfg.preemption = true;
+    let report = serve(&cfg, &PreemptEverything).unwrap();
+    assert_eq!(
+        report.completed() + report.failed_jobs() + report.unserved(),
+        cfg.jobs,
+        "job conservation violated under preemption"
+    );
+    assert!(
+        report.preemptions() >= 1,
+        "contended run with an always-preempting policy never paused"
+    );
+    // Paused-and-resumed jobs complete: nothing is stranded forever.
+    assert!(report.completed() >= 1);
+    for r in report.rows.iter().filter(|r| r.preemptions > 0) {
+        // A paused job's busy time and JCT both grew past a clean run's,
+        // but its bookkeeping stays sane.
+        assert!(r.busy_s > 0.0);
+        if r.completed_s >= 0.0 && !r.failed {
+            assert!(r.completed_s > r.admitted_s);
+        }
+    }
+    // Determinism holds on the preempting path too.
+    let again = serve(&cfg, &PreemptEverything).unwrap();
+    assert_eq!(report.canonical_string(), again.canonical_string());
+}
+
+#[test]
+fn edf_with_preemption_and_admission_is_deterministic_and_conserves() {
+    for seed in [5, 9] {
+        let mut cfg = FleetConfig::synthetic(12, 16, seed);
+        cfg.mean_interarrival_s = 2.0;
+        cfg.preemption = true;
+        cfg.admission = AdmissionControl::Feasibility;
+        cfg.priority_mix = [0.3, 0.4, 0.3];
+        cfg.scenario = Some(Scenario::synth(seed, 12, 2000.0, 0.8));
+        let a = serve(&cfg, &DeadlineEdf).unwrap();
+        let b = serve(&cfg, &DeadlineEdf).unwrap();
+        assert_eq!(a.canonical_string(), b.canonical_string());
+        assert_eq!(
+            a.completed() + a.failed_jobs() + a.unserved(),
+            cfg.jobs,
+            "job conservation violated (seed {seed})"
+        );
+        // Rejected jobs are a subset of unserved and always count failed.
+        assert!(a.rejected_jobs() <= a.unserved());
+        for r in &a.rows {
+            if r.rejected {
+                assert!(r.failed && r.admitted_s < 0.0 && r.completed_s < 0.0);
+                assert_eq!(r.busy_s, 0.0, "a rejected job must never bill pool time");
+            }
+        }
+    }
+}
+
+#[test]
+fn priority_classes_flow_into_rows_and_class_stats() {
+    let cfg = small_cfg(3);
+    let trace = JobTrace::synthetic(&cfg);
+    let report = serve(&cfg, &FifoWholeRing).unwrap();
+    for (row, spec) in report.rows.iter().zip(&trace) {
+        assert_eq!(row.priority, spec.priority.name());
+    }
+    let stats = report.class_stats();
+    assert_eq!(stats.len(), 3);
+    let total: usize = stats.iter().map(|c| c.jobs).sum();
+    assert_eq!(total, cfg.jobs, "class stats must partition the stream");
+    // The trace draws all three classes at this length with the default
+    // mix, so at least two classes are non-empty.
+    assert!(stats.iter().filter(|c| c.jobs > 0).count() >= 2);
+    let _ = Priority::ALL; // the public surface stays exported
 }
 
 #[test]

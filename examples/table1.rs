@@ -43,7 +43,8 @@ fn main() -> Result<()> {
     ]);
 
     for (scheme, paper) in Scheme::ALL.iter().zip(PAPER) {
-        let r = run_scheme_with(&exp, *scheme, &TrainOptions { eval: true, verbose: false, loss_threshold: 0.5 })?;
+        let opts = TrainOptions { eval: true, verbose: false, loss_threshold: 0.5 };
+        let r = run_scheme_with(&exp, *scheme, &opts)?;
         let m = r.eval_metrics.clone().unwrap_or_default();
         let conv_round = r.epochs_to_convergence().unwrap_or(exp.training.rounds as f64);
         let conv_time = r.time_to_convergence().unwrap_or(r.total_time_s);

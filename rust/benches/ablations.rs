@@ -69,7 +69,8 @@ fn steps_per_second(
 fn ablation_planner() {
     println!("\n== ablation 1: capability-aware planner vs uniform split ==");
     let m = meta();
-    let mut table = TablePrinter::new(&["cluster", "uniform bottleneck (s)", "planned (s)", "gain"]);
+    let mut table =
+        TablePrinter::new(&["cluster", "uniform bottleneck (s)", "planned (s)", "gain"]);
     for (name, speeds) in [
         ("homogeneous", vec![0.1, 0.1, 0.1, 0.1]),
         ("paper 4:5:2:3-ish", vec![0.10, 0.125, 0.05, 0.075]),

@@ -38,8 +38,8 @@ fn main() {
     std::fs::create_dir_all("results").ok();
     let mut curves = Vec::new();
     for scheme in Scheme::ALL {
-        let r = run_scheme_with(&exp, scheme, &TrainOptions { eval: false, verbose: false, loss_threshold: 0.5 })
-            .expect("run");
+        let opts = TrainOptions { eval: false, verbose: false, loss_threshold: 0.5 };
+        let r = run_scheme_with(&exp, scheme, &opts).expect("run");
         let path = format!("results/fig3_{}.csv", scheme.name().to_lowercase());
         r.curve.write_csv(&path).expect("csv");
         eprintln!("wrote {path}");

@@ -53,8 +53,8 @@ fn main() {
     let mut results = Vec::new();
     for (scheme, paper) in Scheme::ALL.iter().zip(PAPER) {
         let t0 = std::time::Instant::now();
-        let r = run_scheme_with(&exp, *scheme, &TrainOptions { eval: true, verbose: false, loss_threshold: 0.5 })
-            .expect("run");
+        let opts = TrainOptions { eval: true, verbose: false, loss_threshold: 0.5 };
+        let r = run_scheme_with(&exp, *scheme, &opts).expect("run");
         eprintln!("{} ran in {:.1}s host time", scheme.name(), t0.elapsed().as_secs_f64());
         let m = r.eval_metrics.clone().unwrap_or_default();
         // Threshold-based convergence (loss EMA <= 0.5): comparable across

@@ -149,7 +149,10 @@ impl Coordinator {
             assignment,
             unfreeze,
             rotation,
-            tracker: ConvergenceTracker::new(training.convergence_tol, training.convergence_patience),
+            tracker: ConvergenceTracker::new(
+                training.convergence_tol,
+                training.convergence_patience,
+            ),
             layers: meta.hyper.layers,
         })
     }

@@ -129,7 +129,11 @@ Common flags: --artifacts DIR (default artifacts/tiny), --rounds N,
 fn cmd_train(flags: &HashMap<String, String>) -> CliResult<()> {
     let exp = experiment_from_flags(flags)?;
     let scheme = scheme_from_flags(flags)?;
-    let opts = TrainOptions { eval: true, verbose: !flags.contains_key("quiet"), ..Default::default() };
+    let opts = TrainOptions {
+        eval: true,
+        verbose: !flags.contains_key("quiet"),
+        ..Default::default()
+    };
     let report = run_scheme_with(&exp, scheme, &opts)?;
     println!(
         "\n[{}] rounds={} final_loss={:.4} sim_time={:.2}s mem={:.1}MB",

@@ -175,7 +175,14 @@ impl Manifest {
                 self.manifest_version, SUPPORTED_MANIFEST_VERSION
             )));
         }
-        for exe in ["embed_fwd", "block_fwd", "block_bwd", "head_fwd", "head_loss_grad", "head_predict"] {
+        for exe in [
+            "embed_fwd",
+            "block_fwd",
+            "block_bwd",
+            "head_fwd",
+            "head_loss_grad",
+            "head_predict",
+        ] {
             if !self.executables.contains_key(exe) {
                 return Err(Error::Manifest(format!("missing executable `{exe}`")));
             }

@@ -93,11 +93,26 @@ impl ScheduleBuilder {
         id
     }
 
-    fn compute(&mut self, device: usize, op: Op, deps: Vec<TaskId>, step: usize, round: usize) -> TaskId {
+    fn compute(
+        &mut self,
+        device: usize,
+        op: Op,
+        deps: Vec<TaskId>,
+        step: usize,
+        round: usize,
+    ) -> TaskId {
         self.push(Kind::Compute { device, op }, deps, step, round)
     }
 
-    fn transfer(&mut self, from: usize, to: usize, bytes: usize, deps: Vec<TaskId>, step: usize, round: usize) -> TaskId {
+    fn transfer(
+        &mut self,
+        from: usize,
+        to: usize,
+        bytes: usize,
+        deps: Vec<TaskId>,
+        step: usize,
+        round: usize,
+    ) -> TaskId {
         debug_assert_ne!(from, to);
         self.push(Kind::Transfer { from, to, bytes }, deps, step, round)
     }
@@ -106,7 +121,13 @@ impl ScheduleBuilder {
     /// and per-position unfrozen counts come from the coordinator's
     /// [`RoundPlan`].
     pub fn ringada_step(&mut self, rp: &RoundPlan, initiator: usize) -> Result<StepHandles> {
-        self.step_common(rp, initiator, /*pause_rule=*/ true, rp.terminator_position, rp.terminator_block)
+        self.step_common(
+            rp,
+            initiator,
+            /*pause_rule=*/ true,
+            rp.terminator_position,
+            rp.terminator_block,
+        )
     }
 
     /// Emit one PipeAdapter step: full-depth backward, stale forwarding
@@ -222,7 +243,12 @@ impl ScheduleBuilder {
 
     /// Emit one Single-device step (classic adapter fine-tuning): everything
     /// on `device`, full-depth backward, no transfers.
-    pub fn single_step(&mut self, rp: &RoundPlan, device: usize, layers: usize) -> Result<StepHandles> {
+    pub fn single_step(
+        &mut self,
+        rp: &RoundPlan,
+        device: usize,
+        layers: usize,
+    ) -> Result<StepHandles> {
         let step = self.next_step;
         self.next_step += 1;
         let round = rp.round;
@@ -554,7 +580,9 @@ mod tests {
         let emb_of = |step: usize| {
             chunk2
                 .iter()
-                .find(|t| t.step == step && matches!(t.kind, Kind::Compute { op: Op::EmbedFwd, .. }))
+                .find(|t| {
+                    t.step == step && matches!(t.kind, Kind::Compute { op: Op::EmbedFwd, .. })
+                })
                 .unwrap()
         };
         assert!(emb_of(2).deps.is_empty());

@@ -100,8 +100,20 @@ mod tests {
     #[test]
     fn validate_accepts_topological() {
         let tasks = vec![
-            Task { id: 0, kind: Kind::Compute { device: 0, op: Op::EmbedFwd }, deps: vec![], step: 0, round: 0 },
-            Task { id: 1, kind: Kind::Transfer { from: 0, to: 1, bytes: 8 }, deps: vec![0], step: 0, round: 0 },
+            Task {
+                id: 0,
+                kind: Kind::Compute { device: 0, op: Op::EmbedFwd },
+                deps: vec![],
+                step: 0,
+                round: 0,
+            },
+            Task {
+                id: 1,
+                kind: Kind::Transfer { from: 0, to: 1, bytes: 8 },
+                deps: vec![0],
+                step: 0,
+                round: 0,
+            },
         ];
         validate_dag(&tasks).unwrap();
     }
@@ -120,9 +132,21 @@ mod tests {
 
     #[test]
     fn resource_mapping() {
-        let c = Task { id: 0, kind: Kind::Compute { device: 2, op: Op::HeadUpdate }, deps: vec![], step: 0, round: 0 };
+        let c = Task {
+            id: 0,
+            kind: Kind::Compute { device: 2, op: Op::HeadUpdate },
+            deps: vec![],
+            step: 0,
+            round: 0,
+        };
         assert_eq!(c.resource(), Resource::Device(2));
-        let t = Task { id: 0, kind: Kind::Transfer { from: 1, to: 3, bytes: 4 }, deps: vec![], step: 0, round: 0 };
+        let t = Task {
+            id: 0,
+            kind: Kind::Transfer { from: 1, to: 3, bytes: 4 },
+            deps: vec![],
+            step: 0,
+            round: 0,
+        };
         assert_eq!(t.resource(), Resource::Link(1, 3));
     }
 }

@@ -545,7 +545,13 @@ mod tests {
             name: "rt".into(),
             events: vec![
                 straggler(1, 0.5, 2.25, 0.3),
-                ScenarioEvent::LinkDegrade { from: 0, to: 2, t_start: 1.0, t_end: 3.0, factor: 0.0 },
+                ScenarioEvent::LinkDegrade {
+                    from: 0,
+                    to: 2,
+                    t_start: 1.0,
+                    t_end: 3.0,
+                    factor: 0.0,
+                },
                 ScenarioEvent::Dropout { device: 2, at: 7.5 },
             ],
         };
@@ -641,7 +647,13 @@ mod tests {
             events: vec![
                 straggler(0, 0.0, 1.0, 0.5),
                 straggler(0, 2.0, 3.0, 0.25),
-                ScenarioEvent::LinkDegrade { from: 1, to: 0, t_start: 0.0, t_end: 1.0, factor: 0.5 },
+                ScenarioEvent::LinkDegrade {
+                    from: 1,
+                    to: 0,
+                    t_start: 0.0,
+                    t_end: 1.0,
+                    factor: 0.5,
+                },
                 ScenarioEvent::Dropout { device: 2, at: 9.0 },
             ],
         };

@@ -169,7 +169,10 @@ fn prop_pause_rule_only_on_unfrozen_positions() {
             } else {
                 // Frozen-prefix devices never update adapters at all.
                 let updates = tasks.iter().any(|t| {
-                    matches!(t.kind, Kind::Compute { device, op: Op::AdapterUpdate { .. } } if device == dev)
+                    matches!(
+                        t.kind,
+                        Kind::Compute { device, op: Op::AdapterUpdate { .. } } if device == dev
+                    )
                 });
                 prop_check!(!updates, "frozen device {dev} has updates");
             }

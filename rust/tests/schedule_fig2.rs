@@ -91,12 +91,17 @@ fn fig2_frozen_prefix_streams_while_upper_ring_backprops() {
     // on device 3.
     let fwd1_u1_start = tasks
         .iter()
-        .find(|t| t.step == 1 && matches!(t.kind, Kind::Compute { device: 0, op: Op::BlockFwd { .. } }))
+        .find(|t| {
+            t.step == 1 && matches!(t.kind, Kind::Compute { device: 0, op: Op::BlockFwd { .. } })
+        })
         .map(|t| report.start[t.id])
         .unwrap();
     let upd0_u4_finish = tasks
         .iter()
-        .find(|t| t.step == 0 && matches!(t.kind, Kind::Compute { device: 3, op: Op::AdapterUpdate { .. } }))
+        .find(|t| {
+            t.step == 0
+                && matches!(t.kind, Kind::Compute { device: 3, op: Op::AdapterUpdate { .. } })
+        })
         .map(|t| report.finish[t.id])
         .unwrap();
     assert!(
@@ -108,7 +113,9 @@ fn fig2_frozen_prefix_streams_while_upper_ring_backprops() {
     // batch-0 update (the pause rule).
     let fwd1_u4_start = tasks
         .iter()
-        .find(|t| t.step == 1 && matches!(t.kind, Kind::Compute { device: 3, op: Op::BlockFwd { .. } }))
+        .find(|t| {
+            t.step == 1 && matches!(t.kind, Kind::Compute { device: 3, op: Op::BlockFwd { .. } })
+        })
         .map(|t| report.start[t.id])
         .unwrap();
     assert!(

@@ -10,8 +10,8 @@
 
 use ringada::config::{AdmissionControl, FleetConfig};
 use ringada::fleet::{
-    serve, AllocationPolicy, DeadlineEdf, FifoWholeRing, JobTrace, SmallestRingFirst,
-    UtilizationAware,
+    serve, serve_with_stats, AllocationPolicy, DeadlineEdf, FifoWholeRing, JobTrace,
+    SmallestRingFirst, UtilizationAware,
 };
 use ringada::sim::Scenario;
 use ringada::util::bench::{black_box, Bencher};
@@ -57,22 +57,30 @@ fn main() {
         ("preempting", &preempting),
     ] {
         for policy in policies {
-            let report = serve(c, policy).expect("fleet run must succeed");
+            let (report, stats) = serve_with_stats(c, policy).expect("fleet run must succeed");
             let serve_mean_s = {
                 let r = b.bench(&format!("fleet/serve_{label}_{}", policy.name()), || {
                     black_box(serve(c, policy).unwrap());
                 });
                 r.mean.as_secs_f64()
             };
+            let hit_rate = if stats.plans > 0 {
+                stats.plan_cache_hits as f64 / stats.plans as f64
+            } else {
+                0.0
+            };
             println!(
                 "  -> {label}/{}: {} completed, thr {:.1} j/h, util {:.1}%, jain {:.3}, \
-                 {:.0} sim-jobs/s",
+                 {:.0} sim-jobs/s, plan cache {}/{} ({:.0}%)",
                 policy.name(),
                 report.completed(),
                 report.throughput_jobs_per_hour(),
                 100.0 * report.pool_utilization(),
                 report.jain_fairness(),
                 jobs as f64 / serve_mean_s.max(1e-12),
+                stats.plan_cache_hits,
+                stats.plans,
+                100.0 * hit_rate,
             );
             rows.push(Json::obj(vec![
                 ("scenario", Json::str(label)),
@@ -103,6 +111,9 @@ fn main() {
                 ("preemptions", Json::num(report.preemptions() as f64)),
                 ("resizes", Json::num(report.resizes() as f64)),
                 ("rejected", Json::num(report.rejected_jobs() as f64)),
+                ("plans", Json::num(stats.plans as f64)),
+                ("plan_cache_hits", Json::num(stats.plan_cache_hits as f64)),
+                ("plan_cache_hit_rate", Json::num(hit_rate)),
             ]));
         }
     }

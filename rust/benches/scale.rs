@@ -1,8 +1,17 @@
 //! Scale benches: planner time vs cluster size, heap-simulator throughput
-//! vs the retained greedy-rescan reference, and beam/anneal bottleneck
-//! quality vs the exhaustive optimum.  Results are written to
-//! `BENCH_scale.json` (CI uploads it as an artifact) so the perf
-//! trajectory accumulates across PRs.
+//! vs the retained greedy-rescan reference, beam/anneal bottleneck
+//! quality vs the exhaustive optimum, and the incremental anneal
+//! evaluator vs the retained full-bisection reference at U up to 4096.
+//! Results are written to `BENCH_scale.json` (CI uploads it as an
+//! artifact) so the perf trajectory accumulates across PRs.
+//!
+//! The `incremental` rows double as a differential test at scales the
+//! unit batteries cannot afford: both evaluator paths must produce
+//! bit-identical plans and accepted-move trajectories, and in smoke mode
+//! the U = 256 evaluator-call counts are gated against committed caps —
+//! counts are seed-deterministic, so the gate catches an accidental
+//! return to one-bisection-per-move without any flaky wall-clock
+//! threshold.
 //!
 //! Run: `cargo bench --bench scale` — or `cargo bench --bench scale --
 //! --smoke` (also honored via `RINGADA_BENCH_SMOKE=1`) for the quick CI
@@ -159,12 +168,106 @@ fn main() {
         ]));
     }
 
+    // ---- incremental anneal evaluator vs the retained full reference.
+    // Single timed runs per path (counts are deterministic; the plans are
+    // asserted bit-identical, which is the differential property the
+    // parity battery pins at small U).
+    //
+    // CI gate (smoke, U = 256, `SearchParams::smoke`): a pruning
+    // regression makes every proposal pay a full bisection, i.e.
+    // `full_evals == anneal_moves == 400`.  The cap sits at 70% of that —
+    // genuinely accepted (plateau) moves must pay full evaluations to
+    // keep the trajectory bit-exact, so the cap leaves room for
+    // accept-heavy landscapes while still failing the
+    // one-bisection-per-move regression; the sweep-reduction floor
+    // (total feasibility sweeps, reference / incremental) backs it up
+    // from the other side.  Both counts are seed-deterministic.
+    const U256_FULL_EVAL_CAP: usize = 280;
+    const U256_MIN_SWEEP_REDUCTION: f64 = 1.25;
+    let incr_sweep: &[usize] = if smoke { &[64, 256] } else { &[64, 256, 1024, 4096] };
+    let mut incr_rows = Vec::new();
+    for &u in incr_sweep {
+        let m = meta(2 * u);
+        let cl = ClusterConfig::synthetic(u, 17, 0.6);
+        let lut = CostLut::analytic(&m, 5.0);
+        let planner = Planner::new(&m, &cl, costs(&lut, &m));
+        let devices: Vec<usize> = (0..u).collect();
+        let p_inc = SearchParams { incremental: true, ..params };
+        let p_ref = SearchParams { incremental: false, ..params };
+        let t0 = std::time::Instant::now();
+        let (plan_inc, st_inc) = planner
+            .plan_beam_anneal_traced(&devices, &p_inc)
+            .expect("synthetic cluster must be plannable");
+        let incr_s = t0.elapsed().as_secs_f64();
+        let t0 = std::time::Instant::now();
+        let (plan_ref, st_ref) = planner
+            .plan_beam_anneal_traced(&devices, &p_ref)
+            .expect("synthetic cluster must be plannable");
+        let full_s = t0.elapsed().as_secs_f64();
+        assert_eq!(
+            plan_inc.assignment, plan_ref.assignment,
+            "u={u}: incremental plan diverged from the full evaluator"
+        );
+        assert_eq!(plan_inc.bottleneck_s.to_bits(), plan_ref.bottleneck_s.to_bits());
+        assert_eq!(
+            st_inc.accepted, st_ref.accepted,
+            "u={u}: accepted-move trajectories diverged"
+        );
+        let sweep_reduction = st_ref.anneal_sweeps as f64 / st_inc.anneal_sweeps.max(1) as f64;
+        println!(
+            "  -> u={u}: {} moves, {} full evals ({} pruned), sweeps {} vs {} \
+             ({sweep_reduction:.1}x fewer), plan {:.3}s vs {:.3}s",
+            st_inc.anneal_moves,
+            st_inc.full_evals,
+            st_inc.pruned_moves,
+            st_inc.anneal_sweeps,
+            st_ref.anneal_sweeps,
+            incr_s,
+            full_s,
+        );
+        incr_rows.push(Json::obj(vec![
+            ("u", Json::num(u as f64)),
+            ("layers", Json::num(2.0 * u as f64)),
+            ("anneal_moves", Json::num(st_inc.anneal_moves as f64)),
+            ("full_evals", Json::num(st_inc.full_evals as f64)),
+            ("pruned_moves", Json::num(st_inc.pruned_moves as f64)),
+            ("anneal_sweeps", Json::num(st_inc.anneal_sweeps as f64)),
+            (
+                "anneal_sweeps_reference",
+                Json::num(st_ref.anneal_sweeps as f64),
+            ),
+            (
+                "full_evals_reference",
+                Json::num(st_ref.full_evals as f64),
+            ),
+            ("sweep_reduction", Json::num(sweep_reduction)),
+            ("plan_s", Json::num(incr_s)),
+            ("plan_s_reference", Json::num(full_s)),
+            ("bottleneck_s", Json::num(plan_inc.bottleneck_s)),
+        ]));
+        if smoke && u == 256 {
+            assert!(
+                st_inc.full_evals <= U256_FULL_EVAL_CAP,
+                "perf smoke gate: {} full evaluator calls at u=256 exceeds the \
+                 committed cap {U256_FULL_EVAL_CAP} — the incremental pruning \
+                 path has regressed toward one bisection per move",
+                st_inc.full_evals,
+            );
+            assert!(
+                sweep_reduction >= U256_MIN_SWEEP_REDUCTION,
+                "perf smoke gate: sweep reduction {sweep_reduction:.2}x at u=256 \
+                 below the committed floor {U256_MIN_SWEEP_REDUCTION}x",
+            );
+        }
+    }
+
     let out = Json::obj(vec![
         ("bench", Json::str("scale")),
         ("smoke", Json::Bool(smoke)),
         ("planner", Json::Arr(planner_rows)),
         ("sim", Json::Arr(sim_rows)),
         ("quality", Json::Arr(quality_rows)),
+        ("incremental", Json::Arr(incr_rows)),
     ]);
     std::fs::write("BENCH_scale.json", out.pretty()).expect("write BENCH_scale.json");
     println!("wrote BENCH_scale.json");

@@ -8,7 +8,10 @@ pub mod planner;
 pub mod ring;
 pub mod unfreeze;
 
-pub use planner::{Plan, Planner, PlannerCosts, SearchParams, EXHAUSTIVE_MAX_DEVICES};
+pub use planner::{
+    AcceptedMove, Plan, Planner, PlannerCosts, SearchParams, SearchStats,
+    DP_EXACT_MAX_DEVICES, EXHAUSTIVE_MAX_DEVICES,
+};
 pub use ring::{InitiatorRotation, LayerAssignment};
 pub use unfreeze::UnfreezeSchedule;
 

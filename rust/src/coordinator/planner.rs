@@ -42,8 +42,50 @@
 //! feasible?" is a greedy O(U) sweep and the optimum is found by bisection.
 //! The handful of surviving candidate orders are then re-planned through
 //! the same [`partition_dp`] + memory-feasibility path the exhaustive
-//! search uses, so the returned [`Plan`] is bit-identical to what the
-//! exhaustive search would produce for that order.
+//! search uses (rings wider than [`DP_EXACT_MAX_DEVICES`] use the
+//! bisection's greedy witness partition instead — the DP's O(U·L²) table
+//! does not reach thousand-device rings), so the returned [`Plan`] is
+//! bit-identical to what the exhaustive search would produce for that
+//! order wherever the exhaustive search can run at all.
+//!
+//! ## Incremental anneal evaluator (the U ≥ 1000 serving path)
+//!
+//! A pair-swap or segment-reverse move only perturbs the stage-cost
+//! coefficients at the affected ring positions: `a[s]` depends on
+//! `order[s]` alone and `t[s]` on the `(order[s], order[s+1])` edge, so
+//! the incremental path (on by default, [`SearchParams::incremental`])
+//! maintains both arrays under the move instead of rebuilding them, and
+//! decides most proposals with one or two O(U) feasibility sweeps instead
+//! of the full O(U·log) bisection:
+//!
+//! 1. sweep at the **current score** — infeasible proves the move strictly
+//!    worsening (`Δ > 0`), feasible falls through to a full evaluation
+//!    (the move may improve and an accepted move's score must be the full
+//!    evaluator's, bit for bit);
+//! 2. for a proven-worsening move, draw the Metropolis uniform `r` (the
+//!    same draw the full path would make) and sweep at the acceptance
+//!    threshold `cur + T·(−ln r)`, widened by a 1e-9 relative slack that
+//!    dominates every float-rounding effect in the `ln`/`exp` round-trip
+//!    — infeasible proves the full path would reject, so the move is
+//!    rejected with **no** bisection at all.
+//!
+//! Only moves that survive both sweeps (candidates for acceptance, plus a
+//! vanishing sliver within 1e-9 of the threshold) pay for the full
+//! evaluator, whose value and accept decision are then bitwise identical
+//! to the retained reference path ([`SearchParams { incremental: false,
+//! .. }`]).  Same seed ⇒ same proposals, same RNG consumption, same
+//! accepted-move sequence, same [`Plan`] — the parity battery in
+//! `tests/planner_incremental.rs` pins exactly that, and
+//! [`SearchStats`] reports the evaluator-call accounting
+//! (`benches/scale.rs` records it in `BENCH_scale.json` and smoke mode
+//! gates the U = 256 counts).
+//!
+//! Budget semantics under the incremental path: [`SearchParams::max_evals`]
+//! counts *proposed moves*, not bisections — a pruned delta-eval consumes
+//! one unit exactly like a full evaluation, so a budgeted search visits
+//! the identical move sequence (and returns the identical plan) whichever
+//! evaluator implementation runs it.  The budget is an upper bound on
+//! full evaluator calls, not an exact count of them.
 //!
 //! Determinism guarantee: no wall-clock, no global RNG — same
 //! `(cluster, costs, devices, SearchParams)` in ⇒ same plan out.
@@ -59,6 +101,21 @@ use crate::runtime::rng::Rng;
 /// (8! = 40 320 permutations); beyond this [`Planner::plan_for_devices`]
 /// switches to the beam + anneal search.
 pub const EXHAUSTIVE_MAX_DEVICES: usize = 8;
+
+/// Widest ring the final re-plan partitions with the exact O(U·L²)
+/// [`partition_dp`]; wider rings use the bisection evaluator's greedy
+/// witness partition (same optimal bottleneck up to ~1e-12 relative, but
+/// O(U·log) — the DP table alone would be ~10¹¹ cell updates at
+/// U = 4096).  Every pre-existing call site plans at or below this
+/// width, so the threshold changes no committed plan bytes.
+pub const DP_EXACT_MAX_DEVICES: usize = 128;
+
+/// Relative slack widening the incremental evaluator's rejection-proof
+/// sweeps (see module docs): a move is pruned only when it is infeasible
+/// even `PRUNE_SLACK` *above* the exact acceptance threshold, so the
+/// handful of ulps lost in the `ln`/`exp`/division round-trip can never
+/// flip a decision the full evaluator would have made the other way.
+const PRUNE_SLACK: f64 = 1e-9;
 
 /// Planner inputs that come from profiling (the LUT) rather than configs.
 #[derive(Debug, Clone, Copy)]
@@ -89,11 +146,22 @@ pub struct SearchParams {
     /// Seed for the annealing move RNG — fixed by default so plans are
     /// deterministic for a given cluster.
     pub seed: u64,
+    /// Use the incremental delta evaluator in the anneal (the default).
+    /// `false` runs the retained full-bisection reference path; both
+    /// produce bitwise-identical plans and accepted-move sequences (the
+    /// parity battery pins it), differing only in evaluator-call counts.
+    pub incremental: bool,
 }
 
 impl Default for SearchParams {
     fn default() -> Self {
-        SearchParams { beam_width: 8, anneal_iters: 4000, max_evals: 0, seed: 0x52_49_4E_47 }
+        SearchParams {
+            beam_width: 8,
+            anneal_iters: 4000,
+            max_evals: 0,
+            seed: 0x52_49_4E_47,
+            incremental: true,
+        }
     }
 }
 
@@ -110,6 +178,46 @@ pub struct Plan {
     /// Predicted bottleneck stage time (seconds/batch) — the planner's
     /// objective value.
     pub bottleneck_s: f64,
+}
+
+/// One accepted anneal move — enough to pin that two evaluator
+/// implementations walked the identical search trajectory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AcceptedMove {
+    /// Anneal iteration the move was accepted at.
+    pub iter: u32,
+    /// Ring positions of the move (`lo < hi`).
+    pub lo: u32,
+    pub hi: u32,
+    /// `true` = pair-swap, `false` = segment-reverse.
+    pub swap: bool,
+    /// Bit pattern of the accepted score — bitwise equality or nothing.
+    pub score_bits: u64,
+}
+
+/// Evaluator-call accounting for one [`Planner::plan_beam_anneal_traced`]
+/// run.  Counts are seed-deterministic (same inputs ⇒ same counts), which
+/// is what lets `benches/scale.rs` gate them in CI without wall-clock
+/// thresholds.  One "sweep" is one O(U) greedy feasibility pass — the
+/// natural work unit: a full bisection evaluation costs ~55 of them,
+/// a pruned incremental decision 1–2.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SearchStats {
+    /// Full evaluations spent scoring seed + beam candidates (both paths
+    /// pay these identically).
+    pub candidate_evals: usize,
+    /// Sweeps inside candidate scoring.
+    pub candidate_sweeps: usize,
+    /// Anneal move proposals examined (= budget units consumed).
+    pub anneal_moves: usize,
+    /// Full bisection evaluations run by the anneal.
+    pub full_evals: usize,
+    /// Proposals rejected by delta sweeps alone (incremental path only).
+    pub pruned_moves: usize,
+    /// Total feasibility sweeps spent by the anneal, bisection included.
+    pub anneal_sweeps: usize,
+    /// Accepted moves in acceptance order — the trajectory fingerprint.
+    pub accepted: Vec<AcceptedMove>,
 }
 
 /// Exact DP over contiguous partitions for a fixed device order: minimize
@@ -163,6 +271,20 @@ fn partition_dp(
 /// through [`partition_dp`] before a plan is returned, so this error never
 /// reaches a [`Plan`]).
 fn min_bottleneck_for_order(a: &[f64], t: &[f64], layers: usize) -> Option<f64> {
+    min_bottleneck_partition(a, t, layers, &mut 0).map(|(_, v)| v)
+}
+
+/// [`min_bottleneck_for_order`]'s core: also returns the greedy witness
+/// partition (the block counts achieving the bottleneck — what
+/// [`Planner::plan_for_order`] uses above [`DP_EXACT_MAX_DEVICES`]) and
+/// counts every feasibility sweep into `sweeps` for the evaluator-call
+/// accounting in [`SearchStats`].
+fn min_bottleneck_partition(
+    a: &[f64],
+    t: &[f64],
+    layers: usize,
+    sweeps: &mut usize,
+) -> Option<(Vec<usize>, f64)> {
     let u = a.len();
     if u == 0 || layers < u {
         return None;
@@ -175,6 +297,7 @@ fn min_bottleneck_for_order(a: &[f64], t: &[f64], layers: usize) -> Option<f64> 
         let b = base + usize::from(s < extra);
         hi = hi.max(a[s] * b as f64 + t[s]);
     }
+    *sweeps += 1;
     if !greedy_feasible(a, t, layers, hi, None) {
         // Can only happen through float pathology; report infeasible.
         return None;
@@ -185,6 +308,7 @@ fn min_bottleneck_for_order(a: &[f64], t: &[f64], layers: usize) -> Option<f64> 
             break;
         }
         let mid = 0.5 * (lo + hi);
+        *sweeps += 1;
         if greedy_feasible(a, t, layers, mid, None) {
             hi = mid;
         } else {
@@ -192,6 +316,7 @@ fn min_bottleneck_for_order(a: &[f64], t: &[f64], layers: usize) -> Option<f64> 
         }
     }
     let mut counts = Vec::new();
+    *sweeps += 1;
     if !greedy_feasible(a, t, layers, hi, Some(&mut counts)) {
         return None;
     }
@@ -199,14 +324,18 @@ fn min_bottleneck_for_order(a: &[f64], t: &[f64], layers: usize) -> Option<f64> 
     for s in 0..u {
         achieved = achieved.max(a[s] * counts[s] as f64 + t[s]);
     }
-    Some(achieved)
+    Some((counts, achieved))
 }
 
 /// Greedy feasibility sweep for `min_bottleneck_for_order`: can `layers`
 /// blocks be split so every stage cost `a[s]·b + t[s]` stays ≤ `cap_t`?
 /// Each stage takes the most blocks it can while leaving one per remaining
 /// stage — optimal because capacity depends only on the block *count*.  On
-/// success, the witness partition is written to `counts` when provided.
+/// success, the witness partition is written to `counts` when provided;
+/// on failure a provided `counts` may hold a partial prefix (no caller
+/// reads it).  The witness is only materialized when requested — the
+/// overwhelming majority of sweeps are bisection/prune probes, and an
+/// allocation per probe would dominate the incremental evaluator's cost.
 fn greedy_feasible(
     a: &[f64],
     t: &[f64],
@@ -216,7 +345,11 @@ fn greedy_feasible(
 ) -> bool {
     let u = a.len();
     let mut remaining = layers;
-    let mut out: Vec<usize> = Vec::with_capacity(u);
+    let mut out = counts;
+    if let Some(c) = out.as_deref_mut() {
+        c.clear();
+        c.reserve(u);
+    }
     for s in 0..u {
         let stages_left = u - 1 - s;
         let raw = (cap_t - t[s]) / a[s];
@@ -242,16 +375,12 @@ fn greedy_feasible(
         if take == 0 {
             return false;
         }
-        out.push(take);
+        if let Some(c) = out.as_deref_mut() {
+            c.push(take);
+        }
         remaining -= take;
     }
-    if remaining != 0 {
-        return false;
-    }
-    if let Some(c) = counts {
-        *c = out;
-    }
-    true
+    remaining == 0
 }
 
 /// The planner proper.
@@ -301,16 +430,24 @@ impl<'a> Planner<'a> {
         if layers < u {
             return None;
         }
-        // Transfer cost depends on the *next* device in ring order; the DP
-        // indexes by ring position, so bind device + successor up front —
-        // an O(1) lookup per DP cell instead of the old per-cost
-        // `order.iter().position()` scan.
-        let cost = |pos: usize, blocks: usize| {
-            let dev = order[pos];
-            let next = order[(pos + 1) % u];
-            self.stage_cost(dev, blocks, next)
+        let (counts, bottleneck) = if u <= DP_EXACT_MAX_DEVICES {
+            // Transfer cost depends on the *next* device in ring order; the
+            // DP indexes by ring position, so bind device + successor up
+            // front — an O(1) lookup per DP cell instead of the old
+            // per-cost `order.iter().position()` scan.
+            let cost = |pos: usize, blocks: usize| {
+                let dev = order[pos];
+                let next = order[(pos + 1) % u];
+                self.stage_cost(dev, blocks, next)
+            };
+            partition_dp(u, layers, &cost)
+        } else {
+            // Thousand-device rings: the bisection evaluator's greedy
+            // witness partition (optimal bottleneck to ~1e-12 relative) in
+            // O(U·log) instead of the DP's O(U·L²).
+            let (a, t) = self.order_coeffs(order);
+            min_bottleneck_partition(&a, &t, layers, &mut 0)?
         };
-        let (counts, bottleneck) = partition_dp(u, layers, &cost);
         if !bottleneck.is_finite() {
             return None;
         }
@@ -428,6 +565,17 @@ impl<'a> Planner<'a> {
         devices: &[usize],
         params: &SearchParams,
     ) -> Result<Plan> {
+        self.plan_beam_anneal_traced(devices, params).map(|(plan, _)| plan)
+    }
+
+    /// [`Planner::plan_beam_anneal_with`] plus the evaluator-call
+    /// accounting and accepted-move trajectory ([`SearchStats`]) — what
+    /// the parity battery and `benches/scale.rs` consume.
+    pub fn plan_beam_anneal_traced(
+        &self,
+        devices: &[usize],
+        params: &SearchParams,
+    ) -> Result<(Plan, SearchStats)> {
         self.validate_devices(devices)?;
         let layers = self.meta.hyper.layers;
         let n = devices.len();
@@ -436,9 +584,13 @@ impl<'a> Planner<'a> {
                 "{n} devices but only {layers} blocks — ring cannot fill every position"
             )));
         }
-        let eval = |order: &[usize]| -> f64 {
+        let mut stats = SearchStats::default();
+        let eval = |order: &[usize], stats: &mut SearchStats| -> f64 {
             let (a, t) = self.order_coeffs(order);
-            min_bottleneck_for_order(&a, &t, layers).unwrap_or(f64::INFINITY)
+            stats.candidate_evals += 1;
+            min_bottleneck_partition(&a, &t, layers, &mut stats.candidate_sweeps)
+                .map(|(_, v)| v)
+                .unwrap_or(f64::INFINITY)
         };
 
         // Stage 0: deterministic seed orders — speed-descending (ties by
@@ -451,9 +603,11 @@ impl<'a> Planner<'a> {
         let beamed = self.beam_orders(devices, &speed_order, params.beam_width.max(1));
 
         // Iteration budget (`max_evals`): every candidate below costs one
-        // evaluator call, and each anneal move costs exactly one more, so
-        // capping the anneal at the remaining budget bounds total search
-        // cost deterministically.
+        // evaluator call, and each anneal move costs exactly one more —
+        // a pruned incremental delta-eval included, so budgeted searches
+        // visit the same move sequence under either evaluator (see module
+        // docs).  Capping the anneal at the remaining budget bounds total
+        // search cost deterministically.
         let scored = 2 + beamed.len();
         let anneal_iters = if params.max_evals == 0 {
             params.anneal_iters
@@ -464,23 +618,28 @@ impl<'a> Planner<'a> {
 
         // Candidate pool: scored, deduped, deterministic order.
         let mut candidates: Vec<(f64, Vec<usize>)> = Vec::new();
-        let mut push = |cands: &mut Vec<(f64, Vec<usize>)>, order: Vec<usize>, score: f64| {
+        let push = |cands: &mut Vec<(f64, Vec<usize>)>, order: Vec<usize>, score: f64| {
             if !cands.iter().any(|(_, o)| *o == order) {
                 cands.push((score, order));
             }
         };
-        push(&mut candidates, speed_order.clone(), eval(&speed_order));
-        push(&mut candidates, id_order.clone(), eval(&id_order));
+        let s = eval(&speed_order, &mut stats);
+        push(&mut candidates, speed_order.clone(), s);
+        let s = eval(&id_order, &mut stats);
+        push(&mut candidates, id_order.clone(), s);
         for order in beamed {
-            let s = eval(&order);
+            let s = eval(&order, &mut stats);
             push(&mut candidates, order, s);
         }
         candidates.sort_by(|x, y| x.0.total_cmp(&y.0).then(x.1.cmp(&y.1)));
 
         // Stage 2: simulated-annealing refinement from the best candidate.
         if let Some((start_score, start)) = candidates.first().cloned() {
-            let (best_order, best_score) =
-                self.anneal(start, start_score, &budgeted, &eval);
+            let (best_order, best_score) = if params.incremental {
+                self.anneal_incremental(layers, start, start_score, &budgeted, &mut stats)
+            } else {
+                self.anneal_reference(layers, start, start_score, &budgeted, &mut stats)
+            };
             push(&mut candidates, best_order, best_score);
             candidates.sort_by(|x, y| x.0.total_cmp(&y.0).then(x.1.cmp(&y.1)));
         }
@@ -490,7 +649,7 @@ impl<'a> Planner<'a> {
         // memory-infeasible while a slightly worse one fits).
         for (_, order) in candidates.iter().take(params.beam_width.max(4) + 2) {
             if let Some(plan) = self.plan_for_order(order) {
-                return Ok(plan);
+                return Ok((plan, stats));
             }
         }
         Err(Error::Plan(
@@ -501,6 +660,14 @@ impl<'a> Planner<'a> {
     /// Beam search over partial ring orders (see module docs).  Seeds: the
     /// `width` fastest devices each start one beam, covering rotations of
     /// the speed-descending order.
+    ///
+    /// Children are ranked as `(score, parent, appended device)` and only
+    /// the `width` survivors are materialized — ranking by the full child
+    /// order vector (the original formulation) is identical because
+    /// same-length children compare lexicographically by parent order
+    /// first (beam orders are pairwise distinct), then by the appended
+    /// device; cloning every child order made the beam O(width·U³) bytes
+    /// and capped it far below thousand-device rings.
     fn beam_orders(
         &self,
         devices: &[usize],
@@ -521,24 +688,43 @@ impl<'a> Planner<'a> {
             used[seed_dev] = true;
             beam.push((0.0, vec![seed_dev], used));
         }
+        let mut cands: Vec<(f64, usize, usize)> = Vec::new();
         for _level in 1..n {
-            let mut next: Vec<(f64, Vec<usize>, Vec<bool>)> = Vec::new();
-            for (score, order, used) in &beam {
+            // Rank parents by their order vectors so the candidate key
+            // `(score, parent rank, dev)` reproduces the full
+            // `(score, child order)` lexicographic comparison.
+            let mut by_order: Vec<usize> = (0..beam.len()).collect();
+            by_order.sort_by(|&x, &y| beam[x].1.cmp(&beam[y].1));
+            let mut rank_of = vec![0usize; beam.len()];
+            for (rank, &p) in by_order.iter().enumerate() {
+                rank_of[p] = rank;
+            }
+            cands.clear();
+            for (pi, (score, order, used)) in beam.iter().enumerate() {
                 let last = *order.last().unwrap();
                 for &d in devices {
                     if used[d] {
                         continue;
                     }
-                    let s = score.max(edge(last, d));
-                    let mut o = order.clone();
+                    cands.push((score.max(edge(last, d)), rank_of[pi], d));
+                }
+            }
+            cands.sort_by(|x, y| {
+                x.0.total_cmp(&y.0).then(x.1.cmp(&y.1)).then(x.2.cmp(&y.2))
+            });
+            cands.truncate(width);
+            let next: Vec<(f64, Vec<usize>, Vec<bool>)> = cands
+                .iter()
+                .map(|&(score, rank, d)| {
+                    let (_, order, used) = &beam[by_order[rank]];
+                    let mut o = Vec::with_capacity(order.len() + 1);
+                    o.extend_from_slice(order);
                     o.push(d);
                     let mut u = used.clone();
                     u[d] = true;
-                    next.push((s, o, u));
-                }
-            }
-            next.sort_by(|x, y| x.0.total_cmp(&y.0).then(x.1.cmp(&y.1)));
-            next.truncate(width);
+                    (score, o, u)
+                })
+                .collect();
             beam = next;
         }
         // Close the ring (last → first edge) before final ranking.
@@ -555,27 +741,40 @@ impl<'a> Planner<'a> {
 
     /// Seed-deterministic simulated annealing over ring orders: pair-swap
     /// and segment-reverse moves, geometric cooling (see module docs).
-    fn anneal(
+    /// The retained reference path — one full bisection evaluation per
+    /// proposed move; [`Planner::anneal_incremental`] must reproduce its
+    /// trajectory bit for bit.
+    fn anneal_reference(
         &self,
+        layers: usize,
         start: Vec<usize>,
         start_score: f64,
         params: &SearchParams,
-        eval: &dyn Fn(&[usize]) -> f64,
+        stats: &mut SearchStats,
     ) -> (Vec<usize>, f64) {
         let n = start.len();
         if n < 2 || params.anneal_iters == 0 {
             return (start, start_score);
         }
+        let eval = |order: &[usize], stats: &mut SearchStats| -> f64 {
+            let (a, t) = self.order_coeffs(order);
+            stats.full_evals += 1;
+            min_bottleneck_partition(&a, &t, layers, &mut stats.anneal_sweeps)
+                .map(|(_, v)| v)
+                .unwrap_or(f64::INFINITY)
+        };
         let mut rng = Rng::new(params.seed);
         let mut cur = start.clone();
-        let mut cur_score = if start_score.is_finite() { start_score } else { eval(&cur) };
+        let mut cur_score =
+            if start_score.is_finite() { start_score } else { eval(&cur, stats) };
         let mut best = cur.clone();
         let mut best_score = cur_score;
         let t0 = (0.2 * cur_score).max(1e-12);
         let t_end = 1e-4 * t0;
         let decay = (t_end / t0).powf(1.0 / params.anneal_iters as f64);
         let mut temp = t0;
-        for _ in 0..params.anneal_iters {
+        for iter in 0..params.anneal_iters {
+            stats.anneal_moves += 1;
             let i = rng.next_below(n);
             let mut j = rng.next_below(n);
             if i == j {
@@ -588,12 +787,19 @@ impl<'a> Planner<'a> {
             } else {
                 cur[lo..=hi].reverse();
             }
-            let score = eval(&cur);
+            let score = eval(&cur, stats);
             let delta = score - cur_score;
             let accept = delta < 0.0
                 || (temp > 0.0 && rng.next_f64() < (-delta / temp).exp());
             if accept {
                 cur_score = score;
+                stats.accepted.push(AcceptedMove {
+                    iter: iter as u32,
+                    lo: lo as u32,
+                    hi: hi as u32,
+                    swap,
+                    score_bits: score.to_bits(),
+                });
                 if score < best_score {
                     best_score = score;
                     best = cur.clone();
@@ -609,6 +815,143 @@ impl<'a> Planner<'a> {
             temp *= decay;
         }
         (best, best_score)
+    }
+
+    /// The incremental anneal (see module docs): identical proposals, RNG
+    /// consumption, accept decisions, and scores to
+    /// [`Planner::anneal_reference`], but coefficient arrays are
+    /// delta-updated per move and provably-rejected proposals are decided
+    /// by one or two O(U) feasibility sweeps instead of a full bisection.
+    fn anneal_incremental(
+        &self,
+        layers: usize,
+        start: Vec<usize>,
+        start_score: f64,
+        params: &SearchParams,
+        stats: &mut SearchStats,
+    ) -> (Vec<usize>, f64) {
+        let n = start.len();
+        if n < 2 || params.anneal_iters == 0 {
+            return (start, start_score);
+        }
+        let full_eval = |a: &[f64], t: &[f64], stats: &mut SearchStats| -> f64 {
+            stats.full_evals += 1;
+            min_bottleneck_partition(a, t, layers, &mut stats.anneal_sweeps)
+                .map(|(_, v)| v)
+                .unwrap_or(f64::INFINITY)
+        };
+        let mut rng = Rng::new(params.seed);
+        let mut cur = start.clone();
+        let (mut a, mut t) = self.order_coeffs(&cur);
+        let mut cur_score =
+            if start_score.is_finite() { start_score } else { full_eval(&a, &t, stats) };
+        let mut best = cur.clone();
+        let mut best_score = cur_score;
+        let t0 = (0.2 * cur_score).max(1e-12);
+        let t_end = 1e-4 * t0;
+        let decay = (t_end / t0).powf(1.0 / params.anneal_iters as f64);
+        let mut temp = t0;
+        for iter in 0..params.anneal_iters {
+            stats.anneal_moves += 1;
+            let i = rng.next_below(n);
+            let mut j = rng.next_below(n);
+            if i == j {
+                j = (j + 1) % n;
+            }
+            let (lo, hi) = if i < j { (i, j) } else { (j, i) };
+            let swap = rng.next_below(2) == 0;
+            self.apply_move(&mut cur, &mut a, &mut t, lo, hi, swap);
+            stats.anneal_sweeps += 1;
+            let (accept, score) = if greedy_feasible(&a, &t, layers, cur_score, None) {
+                // The new order packs under the current score: the move is
+                // a potential improvement, so full-evaluate and decide
+                // exactly as the reference does (same draw, same branch).
+                let score = full_eval(&a, &t, stats);
+                let delta = score - cur_score;
+                let accept = delta < 0.0
+                    || (temp > 0.0 && rng.next_f64() < (-delta / temp).exp());
+                (accept, score)
+            } else if !(temp > 0.0) {
+                // Proven worsening (Δ > 0) and the temperature admits no
+                // uphill move: the reference's `temp > 0.0` short-circuit
+                // rejects without drawing — so must we.
+                (false, f64::NAN)
+            } else {
+                // Proven worsening: the reference draws its Metropolis
+                // uniform next.  Reject is `r ≥ exp(−Δ/temp)`, i.e.
+                // `score ≥ cur + temp·(−ln r)`; a sweep that fails even
+                // `PRUNE_SLACK` above that threshold proves it without a
+                // bisection.
+                let r = rng.next_f64();
+                let cap = (cur_score + temp * (-r.ln())) * (1.0 + PRUNE_SLACK);
+                let pruned = cap.is_finite() && {
+                    stats.anneal_sweeps += 1;
+                    !greedy_feasible(&a, &t, layers, cap, None)
+                };
+                if pruned {
+                    stats.pruned_moves += 1;
+                    (false, f64::NAN)
+                } else {
+                    let score = full_eval(&a, &t, stats);
+                    let delta = score - cur_score;
+                    (r < (-delta / temp).exp(), score)
+                }
+            };
+            if accept {
+                cur_score = score;
+                stats.accepted.push(AcceptedMove {
+                    iter: iter as u32,
+                    lo: lo as u32,
+                    hi: hi as u32,
+                    swap,
+                    score_bits: score.to_bits(),
+                });
+                if score < best_score {
+                    best_score = score;
+                    best = cur.clone();
+                }
+            } else {
+                // Undo: swap and reverse are involutions, and the hop
+                // costs are recomputed from the restored order by the same
+                // pure function — coefficients return to their exact bits.
+                self.apply_move(&mut cur, &mut a, &mut t, lo, hi, swap);
+            }
+            temp *= decay;
+        }
+        (best, best_score)
+    }
+
+    /// Apply a pair-swap (`swap`) or segment-reverse move at `[lo, hi]` to
+    /// `order`, delta-updating the evaluator coefficients: `a[s]` moves
+    /// with its device, and every hop cost whose `(src, dst)` pair changed
+    /// is recomputed through [`Planner::hop_cost`] — the same pure
+    /// function [`Planner::order_coeffs`] uses, so maintained arrays stay
+    /// bitwise equal to freshly built ones.
+    fn apply_move(
+        &self,
+        order: &mut [usize],
+        a: &mut [f64],
+        t: &mut [f64],
+        lo: usize,
+        hi: usize,
+        swap: bool,
+    ) {
+        let n = order.len();
+        let prev = (lo + n - 1) % n;
+        if swap {
+            order.swap(lo, hi);
+            a.swap(lo, hi);
+            for p in [prev, lo, (hi + n - 1) % n, hi] {
+                t[p] = self.hop_cost(order[p], order[(p + 1) % n]);
+            }
+        } else {
+            order[lo..=hi].reverse();
+            a[lo..=hi].reverse();
+            t[prev] = self.hop_cost(order[prev], order[(prev + 1) % n]);
+            for p in lo..=hi {
+                t[p] = self.hop_cost(order[p], order[(p + 1) % n]);
+            }
+        }
     }
 
     /// Cheap bottleneck estimate for a candidate ring over `devices`:
@@ -863,7 +1206,13 @@ mod tests {
         let cl = ClusterConfig::synthetic(16, 21, 0.7);
         let p = Planner::new(&m, &cl, costs());
         let devices: Vec<usize> = (0..16).collect();
-        let tight = SearchParams { beam_width: 4, anneal_iters: 10_000, max_evals: 64, seed: 7 };
+        let tight = SearchParams {
+            beam_width: 4,
+            anneal_iters: 10_000,
+            max_evals: 64,
+            seed: 7,
+            ..SearchParams::default()
+        };
         let a = p.plan_beam_anneal_with(&devices, &tight).unwrap();
         let b = p.plan_beam_anneal_with(&devices, &tight).unwrap();
         assert_eq!(a.assignment, b.assignment, "budgeted search must be deterministic");
@@ -906,6 +1255,78 @@ mod tests {
         let m2 = meta(3);
         let p2 = Planner::new(&m2, &cl, costs());
         assert!(p2.estimate_bottleneck_for_devices(&devices).is_err());
+    }
+
+    #[test]
+    fn apply_move_keeps_coefficients_bitwise_fresh() {
+        // The incremental evaluator's foundation: after any chain of
+        // swaps/reverses (and undos), the maintained (a, t) arrays equal
+        // a fresh order_coeffs build bit for bit.
+        let m = meta(24);
+        let cl = ClusterConfig::synthetic(12, 77, 0.8);
+        let p = Planner::new(&m, &cl, costs());
+        let mut order: Vec<usize> = (0..12).collect();
+        let (mut a, mut t) = p.order_coeffs(&order);
+        let mut rng = Rng::new(99);
+        for step in 0..200 {
+            let i = rng.next_below(12);
+            let mut j = rng.next_below(12);
+            if i == j {
+                j = (j + 1) % 12;
+            }
+            let (lo, hi) = if i < j { (i, j) } else { (j, i) };
+            let swap = rng.next_below(2) == 0;
+            p.apply_move(&mut order, &mut a, &mut t, lo, hi, swap);
+            if step % 3 == 0 {
+                // Sometimes undo, exercising the involution path.
+                p.apply_move(&mut order, &mut a, &mut t, lo, hi, swap);
+            }
+            let (fa, ft) = p.order_coeffs(&order);
+            for s in 0..12 {
+                assert_eq!(
+                    a[s].to_bits(),
+                    fa[s].to_bits(),
+                    "a[{s}] drifted at step {step} (move {lo}..{hi} swap={swap})"
+                );
+                assert_eq!(
+                    t[s].to_bits(),
+                    ft[s].to_bits(),
+                    "t[{s}] drifted at step {step} (move {lo}..{hi} swap={swap})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn witness_partition_agrees_with_dp_above_the_threshold() {
+        // Above DP_EXACT_MAX_DEVICES plan_for_order switches to the
+        // bisection witness; both must find the same optimal bottleneck
+        // (the witness is exact to bisection resolution) and a full-cover
+        // partition.
+        let u = DP_EXACT_MAX_DEVICES + 2;
+        let layers = 2 * u;
+        let m = meta(layers);
+        let cl = ClusterConfig::synthetic(u, 31, 0.6);
+        let p = Planner::new(&m, &cl, costs());
+        let order: Vec<usize> = (0..u).collect();
+        let (a, t) = p.order_coeffs(&order);
+        let (counts, witness) = min_bottleneck_partition(&a, &t, layers, &mut 0).unwrap();
+        assert_eq!(counts.iter().sum::<usize>(), layers);
+        let cost =
+            |pos: usize, blocks: usize| p.stage_cost(order[pos], blocks, order[(pos + 1) % u]);
+        let (_, dp) = partition_dp(u, layers, &cost);
+        assert!(
+            (witness - dp).abs() <= 1e-9 * dp.max(1e-12),
+            "witness {witness} vs dp {dp}"
+        );
+        // End-to-end: the wide ring plans, covers every block, and is
+        // deterministic.
+        let params = SearchParams { anneal_iters: 200, beam_width: 4, ..Default::default() };
+        let plan = p.plan_beam_anneal_with(&order, &params).unwrap();
+        plan.assignment.validate(layers).unwrap();
+        let again = p.plan_beam_anneal_with(&order, &params).unwrap();
+        assert_eq!(plan.assignment, again.assignment);
+        assert_eq!(plan.bottleneck_s.to_bits(), again.bottleneck_s.to_bits());
     }
 
     #[test]

@@ -64,6 +64,30 @@
 //! [`FleetConfig`] (same seed) produces a byte-identical
 //! [`FleetReport::canonical_string`] — the fleet determinism property
 //! pinned by `tests/fleet.rs`.
+//!
+//! ## Plan cache
+//!
+//! Every admission, dropout re-plan, preemption-resume, and elastic
+//! resize runs the ring-order search; at serving scale the same searches
+//! repeat constantly (jobs with equal layer counts granted the same
+//! just-freed devices, a job resumed on the subset it paused on).
+//! [`serve`] therefore memoizes `plan_ring` per run in a [`PlanCache`]
+//! keyed by `(layer count, planner costs, canonicalized survivor
+//! profile)` — the profile is the ascending-id device list's speed bits,
+//! memory budgets, and pairwise link rates, prefixed by the pool link
+//! latency and the model's size fingerprint (param counts + hyper
+//! fields): *every* input the search and its memory check read.  Two id
+//! sets with identical profiles search isomorphically
+//! (all planner tie-breaks are relative-order-preserving), so a cached
+//! plan is stored position-indexed and remapped onto the requesting ids,
+//! returning bit-identical assignments to a fresh search.  Invalidation:
+//! none needed — pool hardware is immutable for the life of a run, a
+//! dropout shrinks the requested id set (a different key), and the cache
+//! dies with the run.  The legacy [`serve_reference`] stays uncached (it
+//! is the executable specification), which makes the differential
+//! battery in `tests/fleet.rs` pin the cache's transparency for free.
+//! [`serve_with_stats`] reports hit/miss counts (recorded in
+//! `BENCH_fleet.json`).
 
 pub mod job;
 pub mod policy;
@@ -75,7 +99,7 @@ pub use policy::{
 };
 
 use std::cmp::Ordering;
-use std::collections::{BinaryHeap, VecDeque};
+use std::collections::{BinaryHeap, HashMap, VecDeque};
 
 use crate::config::{AdmissionControl, FleetConfig, TrainingConfig};
 use crate::coordinator::{Coordinator, LayerAssignment, Planner, PlannerCosts, SearchParams};
@@ -166,6 +190,169 @@ fn plan_ring(planner: &Planner<'_>, devices: &[usize]) -> Result<LayerAssignment
     Ok(plan.assignment)
 }
 
+/// Kept-sorted free-device pool: ascending ids, binary-search
+/// insert/remove instead of the old linear `position` + `remove` scans
+/// and full re-sorts.  Iteration order is identical to the sorted `Vec`
+/// it replaces, so every policy sees byte-identical `PoolView::free`
+/// slices (the `canonical_string` differential battery pins it).
+#[derive(Debug, Clone)]
+struct FreePool {
+    ids: Vec<usize>,
+}
+
+impl FreePool {
+    fn with_all(n: usize) -> Self {
+        FreePool { ids: (0..n).collect() }
+    }
+
+    fn as_slice(&self) -> &[usize] {
+        &self.ids
+    }
+
+    fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    /// Return `device` to the pool.  A double free would be a scheduler
+    /// bug (the conservation audit catches it in debug builds); release
+    /// builds keep the set duplicate-free rather than corrupting order.
+    fn insert(&mut self, device: usize) {
+        match self.ids.binary_search(&device) {
+            Ok(_) => debug_assert!(false, "device {device} freed twice"),
+            Err(pos) => self.ids.insert(pos, device),
+        }
+    }
+
+    /// Take `device` out of the pool; `false` when it was not free.
+    fn remove(&mut self, device: usize) -> bool {
+        match self.ids.binary_search(&device) {
+            Ok(pos) => {
+                self.ids.remove(pos);
+                true
+            }
+            Err(_) => false,
+        }
+    }
+}
+
+/// Per-run ring-plan memoization (see module docs).  Keys canonicalize
+/// everything the search reads; values store the winning order as
+/// *positions into the ascending-id device list* plus per-position block
+/// counts, so a hit remaps onto the requesting ids and rebuilds the
+/// assignment through the same constructor a fresh search uses.
+#[derive(Debug, Default)]
+struct PlanCache {
+    map: HashMap<PlanKey, Option<CachedPlan>>,
+    hits: usize,
+    misses: usize,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct PlanKey {
+    layers: usize,
+    block_fwd_bits: u64,
+    activation_bytes: usize,
+    /// Canonical survivor profile: a model/pool fingerprint prefix (param
+    /// counts, hyper fields, link latency — see [`PlanKey::new`]), then
+    /// per device `(speed bits, mem)` and the pairwise rate matrix bits,
+    /// row-major over the ascending ids.
+    profile: Vec<u64>,
+}
+
+impl PlanKey {
+    fn new(planner: &Planner<'_>, devices: &[usize]) -> Self {
+        debug_assert!(devices.windows(2).all(|w| w[0] < w[1]), "unsorted grant");
+        let mut profile = Vec::with_capacity(devices.len() * (devices.len() + 1) + 13);
+        // Model fingerprint beyond the layer count, plus the pool-wide
+        // link latency: every remaining numeric input the ring search and
+        // its memory-feasibility check read.  Per-run these are constant
+        // today (one pool; `JobSpec::model_meta` varies only `layers`),
+        // but the key must not silently rely on that — a future
+        // cross-run/cross-pool cache reuses it unchanged.
+        let meta = planner.meta;
+        let h = &meta.hyper;
+        profile.extend_from_slice(&[
+            meta.embed_params as u64,
+            meta.block_backbone_params as u64,
+            meta.block_adapter_params as u64,
+            meta.head_params as u64,
+            h.vocab as u64,
+            h.hidden as u64,
+            h.heads as u64,
+            h.ffn as u64,
+            h.bottleneck as u64,
+            h.seq as u64,
+            h.batch as u64,
+            h.init_std.to_bits() as u64,
+            planner.cluster.link_latency_s.to_bits(),
+        ]);
+        for &d in devices {
+            profile.push(planner.cluster.devices[d].compute_speed.to_bits());
+            profile.push(planner.cluster.devices[d].mem_bytes as u64);
+        }
+        for &d in devices {
+            for &e in devices {
+                if d != e {
+                    profile.push(planner.cluster.rate_bytes_per_s[d][e].to_bits());
+                }
+            }
+        }
+        PlanKey {
+            layers: planner.meta.hyper.layers,
+            block_fwd_bits: planner.costs.block_fwd_s.to_bits(),
+            activation_bytes: planner.costs.activation_bytes,
+            profile,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+struct CachedPlan {
+    order_pos: Vec<usize>,
+    counts: Vec<usize>,
+}
+
+/// [`plan_ring`] through the per-run cache.  `devices` must be sorted
+/// ascending (every fleet call site sorts its grant first).  Infeasible
+/// grants are cached too — the callers discard the error message, so a
+/// synthesized one preserves behavior while skipping the re-search.
+fn plan_ring_cached(
+    planner: &Planner<'_>,
+    devices: &[usize],
+    cache: &mut PlanCache,
+    pool_len: usize,
+) -> Result<LayerAssignment> {
+    let key = PlanKey::new(planner, devices);
+    if let Some(cached) = cache.map.get(&key) {
+        cache.hits += 1;
+        return match cached {
+            Some(c) => {
+                let order: Vec<usize> = c.order_pos.iter().map(|&p| devices[p]).collect();
+                LayerAssignment::from_counts_for_devices(order, &c.counts, pool_len)
+            }
+            None => Err(Error::Plan("no feasible layer assignment (cached)".into())),
+        };
+    }
+    cache.misses += 1;
+    match plan_ring(planner, devices) {
+        Ok(assignment) => {
+            let order_pos: Vec<usize> = assignment
+                .order
+                .iter()
+                .map(|d| devices.binary_search(d).expect("planned device not in grant"))
+                .collect();
+            cache
+                .map
+                .insert(key, Some(CachedPlan { order_pos, counts: assignment.counts() }));
+            Ok(assignment)
+        }
+        Err(e) => {
+            cache.map.insert(key, None);
+            Err(e)
+        }
+    }
+}
+
 /// What one round step did to the job (see [`JobExec::step`]).
 enum StepOutcome {
     /// More rounds remain; the next boundary is the job's `sim.now`.
@@ -234,6 +421,7 @@ impl JobExec {
         spec: &JobSpec,
         devices: &[usize],
         admit_s: f64,
+        cache: &mut PlanCache,
     ) -> Result<Option<JobExec>> {
         let meta = spec.model_meta();
         let lut = CostLut::analytic(&meta, LUT_GFLOPS);
@@ -258,7 +446,7 @@ impl JobExec {
         let mut alive: Vec<usize> = devices.to_vec();
         alive.sort_unstable();
 
-        let assignment = match plan_ring(&planner, &alive) {
+        let assignment = match plan_ring_cached(&planner, &alive, cache, cfg.pool.len()) {
             Ok(a) => a,
             Err(_) => return Ok(None),
         };
@@ -303,7 +491,12 @@ impl JobExec {
     /// re-plan over the survivors when rounds remain.  The per-round body
     /// is the legacy `run_job` loop body verbatim — the differential
     /// tests rely on that.
-    fn step(&mut self, cfg: &FleetConfig, spec: &JobSpec) -> Result<StepOutcome> {
+    fn step(
+        &mut self,
+        cfg: &FleetConfig,
+        spec: &JobSpec,
+        cache: &mut PlanCache,
+    ) -> Result<StepOutcome> {
         let round = self.rounds_done;
         let rp = self.coordinator.round_plan(round)?;
         for turn in 0..self.segment_width {
@@ -345,7 +538,7 @@ impl JobExec {
             }
             self.replans += 1;
             let planner = Planner::new(&self.meta, &cfg.pool, self.costs());
-            match plan_ring(&planner, &self.alive) {
+            match plan_ring_cached(&planner, &self.alive, cache, cfg.pool.len()) {
                 Ok(a) => {
                     self.coordinator = Coordinator::with_assignment_for_cluster(
                         a,
@@ -376,12 +569,13 @@ impl JobExec {
         scenario: &Scenario,
         devices: &[usize],
         now: f64,
+        cache: &mut PlanCache,
     ) -> Result<bool> {
         debug_assert!(self.paused, "resume on a running job");
         let mut alive: Vec<usize> = devices.to_vec();
         alive.sort_unstable();
         let planner = Planner::new(&self.meta, &cfg.pool, self.costs());
-        let assignment = match plan_ring(&planner, &alive) {
+        let assignment = match plan_ring_cached(&planner, &alive, cache, cfg.pool.len()) {
             Ok(a) => a,
             Err(_) => return Ok(false),
         };
@@ -435,7 +629,9 @@ struct FleetRun<'a> {
     specs: Vec<JobSpec>,
     heap: BinaryHeap<Event>,
     /// Free device ids, ascending, never dead.
-    free: Vec<usize>,
+    free: FreePool,
+    /// Per-run ring-plan memoization (admissions, re-plans, resumes).
+    plan_cache: PlanCache,
     /// Fail-stopped devices (set when the scripted event fires).
     dead: Vec<bool>,
     /// Devices some job detected as dropped (possibly before the
@@ -475,7 +671,8 @@ impl<'a> FleetRun<'a> {
             scenario,
             specs,
             heap,
-            free: (0..n).collect(),
+            free: FreePool::with_all(n),
+            plan_cache: PlanCache::default(),
             dead: vec![false; n],
             detected: vec![false; n],
             waiting: Vec::new(),
@@ -570,10 +767,9 @@ impl<'a> FleetRun<'a> {
         let hs = std::mem::take(&mut self.release_at_done[id]);
         for d in hs {
             if !self.dead[d] {
-                self.free.push(d);
+                self.free.insert(d);
             }
         }
-        self.free.sort_unstable();
     }
 
     /// Advance one job by one round (or pause it at the boundary).
@@ -589,16 +785,15 @@ impl<'a> FleetRun<'a> {
             for d in freed {
                 debug_assert!(!self.dead[d], "pause released a dead device");
                 if !self.dead[d] {
-                    self.free.push(d);
+                    self.free.insert(d);
                 }
             }
-            self.free.sort_unstable();
             self.waiting.push(id);
             self.waiting.sort_unstable();
             return Ok(true);
         }
         let spec = &self.specs[id];
-        let outcome = exec.step(self.cfg, spec)?;
+        let outcome = exec.step(self.cfg, spec, &mut self.plan_cache)?;
         let next = Event { t: exec.sim.now, rank: RANK_STEP, id };
         for &d in &exec.dropped {
             self.detected[d] = true;
@@ -639,7 +834,12 @@ impl<'a> FleetRun<'a> {
         let queue: Vec<&JobSpec> = self.waiting.iter().map(|&j| &self.specs[j]).collect();
         let allocs = self.policy.allocate(
             &queue,
-            &PoolView { cluster: &self.cfg.pool, free: &self.free, dead: &self.dead, now },
+            &PoolView {
+                cluster: &self.cfg.pool,
+                free: self.free.as_slice(),
+                dead: &self.dead,
+                now,
+            },
         );
         for a in allocs {
             let Some(wpos) = self.waiting.iter().position(|&j| j == a.job) else {
@@ -657,20 +857,19 @@ impl<'a> FleetRun<'a> {
                 )));
             }
             for &d in &a.devices {
-                let Some(fpos) = self.free.iter().position(|&x| x == d) else {
+                if !self.free.remove(d) {
                     return Err(Error::Schedule(format!(
                         "policy {} allocated device {d} which is not free",
                         self.policy.name()
                     )));
-                };
-                self.free.remove(fpos);
+                }
             }
             self.waiting.remove(wpos);
             if self.execs[a.job].is_some() {
                 // A paused job: resume on the (possibly resized) grant.
                 let resumed = {
                     let exec = self.execs[a.job].as_mut().unwrap();
-                    exec.resume(self.cfg, &self.scenario, &a.devices, now)?
+                    exec.resume(self.cfg, &self.scenario, &a.devices, now, &mut self.plan_cache)?
                 };
                 if resumed {
                     self.heap.push(Event { t: now, rank: RANK_STEP, id: a.job });
@@ -683,8 +882,14 @@ impl<'a> FleetRun<'a> {
                     self.finish_job(a.job, true);
                 }
             } else {
-                match JobExec::admit(self.cfg, &self.scenario, &self.specs[a.job], &a.devices, now)?
-                {
+                match JobExec::admit(
+                    self.cfg,
+                    &self.scenario,
+                    &self.specs[a.job],
+                    &a.devices,
+                    now,
+                    &mut self.plan_cache,
+                )? {
                     Some(exec) => {
                         self.execs[a.job] = Some(exec);
                         self.heap.push(Event { t: now, rank: RANK_STEP, id: a.job });
@@ -712,7 +917,12 @@ impl<'a> FleetRun<'a> {
         }
         let rejected = self.policy.reject(
             &fresh,
-            &PoolView { cluster: &self.cfg.pool, free: &self.free, dead: &self.dead, now },
+            &PoolView {
+                cluster: &self.cfg.pool,
+                free: self.free.as_slice(),
+                dead: &self.dead,
+                now,
+            },
         );
         for id in rejected {
             // Membership re-checked against the live queue (not just the
@@ -778,7 +988,12 @@ impl<'a> FleetRun<'a> {
         let picks = self.policy.preempt(
             &queue,
             &running,
-            &PoolView { cluster: &self.cfg.pool, free: &self.free, dead: &self.dead, now },
+            &PoolView {
+                cluster: &self.cfg.pool,
+                free: self.free.as_slice(),
+                dead: &self.dead,
+                now,
+            },
         );
         for id in picks {
             let valid = self.execs.get(id).map_or(false, |e| {
@@ -803,7 +1018,7 @@ impl<'a> FleetRun<'a> {
     fn check_conservation(&self) {
         let n = self.cfg.pool.len();
         let mut claims = vec![0usize; n];
-        for &d in &self.free {
+        for &d in self.free.as_slice() {
             claims[d] += 1;
             assert!(!self.dead[d], "dead device {d} in the free list");
         }
@@ -923,11 +1138,33 @@ impl<'a> FleetRun<'a> {
     }
 }
 
+/// Serving-side performance counters for one [`serve`] run.  Not part of
+/// [`FleetReport`] (whose `canonical_string` is pinned byte-identical
+/// across scheduler generations) — purely observability for the benches.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServeStats {
+    /// Ring-plan requests: admissions + dropout re-plans + resumes.
+    pub plans: usize,
+    /// Requests answered from the plan cache.
+    pub plan_cache_hits: usize,
+    /// Requests that ran the full ring-order search.
+    pub plan_cache_misses: usize,
+}
+
 /// Run the configured job stream through `policy` over the shared pool
 /// and return the aggregate [`FleetReport`] (see module docs for
 /// mechanics).  Round-granular: jobs advance one round per event and may
 /// be paused, resized, or rejected when the config enables those paths.
 pub fn serve(cfg: &FleetConfig, policy: &dyn AllocationPolicy) -> Result<FleetReport> {
+    serve_with_stats(cfg, policy).map(|(report, _)| report)
+}
+
+/// [`serve`] plus the serving-side counters ([`ServeStats`]): identical
+/// report, same determinism guarantees.
+pub fn serve_with_stats(
+    cfg: &FleetConfig,
+    policy: &dyn AllocationPolicy,
+) -> Result<(FleetReport, ServeStats)> {
     cfg.validate()?;
     let mut run = FleetRun::new(cfg, policy);
     while let Some(ev) = run.heap.pop() {
@@ -935,7 +1172,7 @@ pub fn serve(cfg: &FleetConfig, policy: &dyn AllocationPolicy) -> Result<FleetRe
         let pool_changed = match ev.rank {
             RANK_DROP => {
                 run.dead[ev.id] = true;
-                run.free.retain(|&x| x != ev.id);
+                run.free.remove(ev.id);
                 true
             }
             RANK_DONE => {
@@ -955,7 +1192,12 @@ pub fn serve(cfg: &FleetConfig, policy: &dyn AllocationPolicy) -> Result<FleetRe
         #[cfg(debug_assertions)]
         run.check_conservation();
     }
-    Ok(run.into_report())
+    let stats = ServeStats {
+        plans: run.plan_cache.hits + run.plan_cache.misses,
+        plan_cache_hits: run.plan_cache.hits,
+        plan_cache_misses: run.plan_cache.misses,
+    };
+    Ok((run.into_report(), stats))
 }
 
 // --------------------------------------------------------------- legacy
@@ -1319,6 +1561,61 @@ mod tests {
         assert!(row.busy_s > 0.0);
         assert!(report.horizon_s > 0.0);
         assert!(report.pool_utilization() > 0.0 && report.pool_utilization() <= 1.0);
+    }
+
+    #[test]
+    fn free_pool_stays_sorted_and_deduplicated() {
+        let mut pool = FreePool::with_all(4);
+        assert_eq!(pool.as_slice(), &[0, 1, 2, 3]);
+        assert!(pool.remove(2));
+        assert!(!pool.remove(2), "double remove must report absence");
+        assert_eq!(pool.as_slice(), &[0, 1, 3]);
+        pool.insert(2);
+        assert_eq!(pool.as_slice(), &[0, 1, 2, 3]);
+        assert!(!pool.is_empty());
+        for d in 0..4 {
+            assert!(pool.remove(d));
+        }
+        assert!(pool.is_empty());
+        // Out-of-order reinsertion lands sorted.
+        pool.insert(3);
+        pool.insert(0);
+        pool.insert(1);
+        assert_eq!(pool.as_slice(), &[0, 1, 3]);
+    }
+
+    #[test]
+    fn plan_cache_hits_return_the_identical_assignment() {
+        let cfg = FleetConfig::synthetic(12, 1, 9);
+        let spec = JobSpec {
+            id: 0,
+            arrival_s: 0.0,
+            layers: 16,
+            rounds: 2,
+            local_iters: 1,
+            ring_size: 4,
+            deadline: DeadlineClass::Standard,
+            priority: Priority::Normal,
+        };
+        let meta = spec.model_meta();
+        let lut = CostLut::analytic(&meta, LUT_GFLOPS);
+        let costs = PlannerCosts {
+            block_fwd_s: lut.block_fwd_s,
+            activation_bytes: meta.activation_bytes(),
+        };
+        let planner = Planner::new(&meta, &cfg.pool, costs);
+        let mut cache = PlanCache::default();
+        let devices = [1usize, 3, 5, 8, 9];
+        let fresh = plan_ring_cached(&planner, &devices, &mut cache, 12).unwrap();
+        assert_eq!((cache.hits, cache.misses), (0, 1));
+        let cached = plan_ring_cached(&planner, &devices, &mut cache, 12).unwrap();
+        assert_eq!((cache.hits, cache.misses), (1, 1));
+        assert_eq!(fresh, cached, "cache hit must be bit-identical");
+        assert_eq!(fresh, plan_ring(&planner, &devices).unwrap());
+        // A different subset is a different key (distinct speed profile).
+        let other = [0usize, 2, 4, 6, 7];
+        let _ = plan_ring_cached(&planner, &other, &mut cache, 12).unwrap();
+        assert_eq!((cache.hits, cache.misses), (1, 2));
     }
 
     #[test]

@@ -228,7 +228,10 @@ impl AllocationPolicy for UtilizationAware {
             let Some((_, k)) = best else { continue };
             let mut devices: Vec<usize> = by_speed[..k].to_vec();
             devices.sort_unstable();
-            free.retain(|d| !devices.contains(d));
+            // `devices` is sorted: binary search instead of the linear
+            // `contains` scan (the grant-removal hot path runs on every
+            // pool event).
+            free.retain(|d| devices.binary_search(d).is_err());
             out.push(Allocation { job: job.id, devices });
         }
         out
@@ -359,7 +362,8 @@ impl AllocationPolicy for DeadlineEdf {
             // Fastest free devices: tight deadlines get the best silicon.
             let mut devices: Vec<usize> = planner.speed_order(&free)[..k].to_vec();
             devices.sort_unstable();
-            free.retain(|d| !devices.contains(d));
+            // Sorted grant ⇒ binary search beats the linear scan.
+            free.retain(|d| devices.binary_search(d).is_err());
             out.push(Allocation { job: job.id, devices });
         }
         out

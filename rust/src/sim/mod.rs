@@ -118,6 +118,39 @@ impl PartialOrd for ReadyKey {
     }
 }
 
+/// Reusable per-chunk dispatch scratch: the dependents adjacency, indegree
+/// and ready-time tables, and the ready heap were rebuilt (allocated) on
+/// every [`Simulator::run`] call — for fleet runs that is thousands of
+/// chunks against one simulator, all allocator traffic.  The buffers are
+/// fully overwritten per chunk (`reset` clears and re-sizes), so reuse is
+/// invisible in the report bytes; `run_reference` deliberately keeps its
+/// per-call allocations as the executable specification.
+#[derive(Debug, Clone, Default)]
+struct DispatchScratch {
+    dependents: Vec<Vec<TaskId>>,
+    indeg: Vec<usize>,
+    ready_time: Vec<f64>,
+    heap: BinaryHeap<ReadyKey>,
+}
+
+impl DispatchScratch {
+    /// Clear for a chunk of `n` tasks, keeping prior capacity (inner
+    /// adjacency vectors included).
+    fn reset(&mut self, n: usize) {
+        let keep = self.dependents.len().min(n);
+        for d in &mut self.dependents[..keep] {
+            d.clear();
+        }
+        self.dependents.truncate(n);
+        self.dependents.resize_with(n, Vec::new);
+        self.indeg.clear();
+        self.indeg.resize(n, 0);
+        self.ready_time.clear();
+        self.ready_time.resize(n, 0.0);
+        self.heap.clear();
+    }
+}
+
 /// The simulator: owns resource clocks so multi-round simulations can feed
 /// successive DAG chunks while time accumulates.
 ///
@@ -140,6 +173,8 @@ pub struct Simulator {
     /// Cluster rates/speeds checked once (first chunk); a zero, negative or
     /// NaN rate would otherwise surface as an inf/NaN makespan.
     validated: bool,
+    /// Reusable dispatch buffers (see [`DispatchScratch`]).
+    scratch: DispatchScratch,
     pub now: f64,
 }
 
@@ -154,6 +189,7 @@ impl Simulator {
             device_free: vec![0.0; n],
             link_free: HashMap::new(),
             validated: false,
+            scratch: DispatchScratch::default(),
             now: 0.0,
         }
     }
@@ -261,43 +297,47 @@ impl Simulator {
         let n = tasks.len();
         let mut finish = vec![f64::NAN; n];
         let mut start = vec![f64::NAN; n];
-        let mut indeg: Vec<usize> = tasks.iter().map(|t| t.deps.len()).collect();
-        let mut dependents: Vec<Vec<TaskId>> = vec![Vec::new(); n];
+        // Dispatch tables come from the reusable scratch (taken out of
+        // `self` so the resource-clock methods stay borrowable, put back
+        // below; an error path drops it and the next chunk re-allocates).
+        let mut scr = std::mem::take(&mut self.scratch);
+        scr.reset(n);
+        for (i, t) in tasks.iter().enumerate() {
+            scr.indeg[i] = t.deps.len();
+        }
         for t in tasks {
             for &d in &t.deps {
-                dependents[d].push(t.id);
+                scr.dependents[d].push(t.id);
             }
         }
-        // ready_time[i] = max over scheduled deps' finishes; final by the
-        // time task i enters the heap.
-        let mut ready_time = vec![0.0f64; n];
+        // scr.ready_time[i] = max over scheduled deps' finishes; final by
+        // the time task i enters the heap.
         let mut device_busy = vec![0.0; self.cluster.len()];
         let mut link_bytes: HashMap<(usize, usize), usize> = HashMap::new();
         let mut scheduled = 0usize;
 
-        let mut heap: BinaryHeap<ReadyKey> = BinaryHeap::with_capacity(n);
         for (i, t) in tasks.iter().enumerate() {
-            if indeg[i] == 0 {
-                heap.push(ReadyKey {
-                    start: self.feasible_start(t, ready_time[i], release),
+            if scr.indeg[i] == 0 {
+                scr.heap.push(ReadyKey {
+                    start: self.feasible_start(t, scr.ready_time[i], release),
                     id: i,
                 });
             }
         }
 
         while scheduled < n {
-            let Some(key) = heap.pop() else {
+            let Some(key) = scr.heap.pop() else {
                 return Err(Error::Schedule(
                     "deadlock: no ready tasks but DAG unfinished".into(),
                 ));
             };
             let tid = key.id;
             let t = &tasks[tid];
-            let s = self.feasible_start(t, ready_time[tid], release);
+            let s = self.feasible_start(t, scr.ready_time[tid], release);
             if s > key.start {
                 // Stale key: the resource clock advanced after this entry
                 // was pushed.  Re-insert at the true feasible start.
-                heap.push(ReadyKey { start: s, id: tid });
+                scr.heap.push(ReadyKey { start: s, id: tid });
                 continue;
             }
             let f = self.finish_time(t, s)?;
@@ -316,18 +356,20 @@ impl Simulator {
             }
             self.now = self.now.max(f);
             scheduled += 1;
-            for &dep in &dependents[tid] {
-                ready_time[dep] = ready_time[dep].max(f);
-                indeg[dep] -= 1;
-                if indeg[dep] == 0 {
-                    heap.push(ReadyKey {
-                        start: self.feasible_start(&tasks[dep], ready_time[dep], release),
+            for di in 0..scr.dependents[tid].len() {
+                let dep = scr.dependents[tid][di];
+                scr.ready_time[dep] = scr.ready_time[dep].max(f);
+                scr.indeg[dep] -= 1;
+                if scr.indeg[dep] == 0 {
+                    scr.heap.push(ReadyKey {
+                        start: self.feasible_start(&tasks[dep], scr.ready_time[dep], release),
                         id: dep,
                     });
                 }
             }
         }
 
+        self.scratch = scr;
         Ok(SimReport {
             makespan: self.now,
             release,
@@ -656,6 +698,33 @@ mod tests {
         // The surviving device keeps working, with clocks intact.
         let r = s.run(&[compute(0, 1, 1, vec![])]).unwrap();
         assert!(r.start[0] >= 0.0);
+    }
+
+    #[test]
+    fn scratch_reuse_is_invisible_across_chunks_of_changing_size() {
+        // Chunks of growing then shrinking task counts through one
+        // simulator (scratch reused across all three) vs the reference
+        // scan (allocates per call) on a clone with identical clocks.
+        // Reports must match byte for byte.
+        let chunks: Vec<Vec<Task>> = vec![
+            vec![compute(0, 0, 2, vec![])],
+            vec![
+                compute(0, 0, 1, vec![]),
+                compute(1, 1, 2, vec![0]),
+                compute(2, 0, 1, vec![0]),
+            ],
+            vec![compute(0, 1, 3, vec![])],
+        ];
+        let mut reused = sim(2);
+        let mut fresh = reused.clone();
+        for (k, chunk) in chunks.iter().enumerate() {
+            let ra = reused.run(chunk).unwrap();
+            let rb = fresh.run_reference(chunk).unwrap();
+            assert_eq!(ra.start, rb.start, "chunk {k}");
+            assert_eq!(ra.finish, rb.finish, "chunk {k}");
+            assert_eq!(ra.device_busy, rb.device_busy, "chunk {k}");
+            assert_eq!(ra.makespan.to_bits(), rb.makespan.to_bits(), "chunk {k}");
+        }
     }
 
     #[test]

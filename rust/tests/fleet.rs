@@ -6,8 +6,9 @@
 
 use ringada::config::{AdmissionControl, FleetConfig};
 use ringada::fleet::{
-    serve, serve_reference, AllocationPolicy, Allocation, DeadlineEdf, FifoWholeRing, JobSpec,
-    JobTrace, PoolView, Priority, RunningJob, SmallestRingFirst, UtilizationAware,
+    serve, serve_reference, serve_with_stats, AllocationPolicy, Allocation, DeadlineEdf,
+    FifoWholeRing, JobSpec, JobTrace, PoolView, Priority, RunningJob, SmallestRingFirst,
+    UtilizationAware,
 };
 use ringada::metrics::FleetDeltaTable;
 use ringada::sim::{Scenario, ScenarioEvent};
@@ -70,6 +71,31 @@ fn faulted_fleet_is_deterministic_and_accounts_for_every_job() {
             assert!(a.pool_utilization() >= 0.0 && a.pool_utilization() <= 1.0);
         }
     }
+}
+
+#[test]
+fn plan_cache_is_transparent_and_hits_on_repeated_grants() {
+    // 8 equal-sized jobs served strictly serially by FIFO over a fully
+    // free pool: every grant is the prefix {0..ring}, and with 8 draws
+    // over 7 possible ring widths some width must repeat — a guaranteed
+    // plan-cache hit, with zero report-visible effect.
+    let mut cfg = FleetConfig::synthetic(12, 8, 42);
+    cfg.min_layers = 16;
+    cfg.max_layers = 16;
+    cfg.mean_interarrival_s = 10_000.0; // serial admissions: grants repeat
+    let (report, stats) = serve_with_stats(&cfg, &FifoWholeRing).unwrap();
+    assert_eq!(stats.plans, stats.plan_cache_hits + stats.plan_cache_misses);
+    assert!(
+        stats.plan_cache_hits >= 1,
+        "8 same-sized jobs over 7 ring widths must repeat a grant: {stats:?}"
+    );
+    assert!(stats.plan_cache_misses >= 1);
+    // Transparent: byte-identical to the uncached legacy scheduler and to
+    // a cold-cache replay.
+    let legacy = serve_reference(&cfg, &FifoWholeRing).unwrap();
+    assert_eq!(report.canonical_string(), legacy.canonical_string());
+    let replay = serve(&cfg, &FifoWholeRing).unwrap();
+    assert_eq!(report.canonical_string(), replay.canonical_string());
 }
 
 #[test]

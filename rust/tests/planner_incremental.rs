@@ -1,0 +1,240 @@
+//! ISSUE 5 battery: the incremental anneal evaluator and its budget
+//! accounting.
+//!
+//! * differential parity — `SearchParams { incremental: true }` (the
+//!   default) must reproduce the retained full-bisection reference path
+//!   bit for bit: identical plans, identical bottleneck bits, identical
+//!   accepted-move trajectories.  Covered on every enumerable cluster
+//!   (full + survivor subsets, mirroring `tests/scale_and_robustness.rs`)
+//!   and on randomized clusters at U ∈ {64, 256, 1024};
+//! * evaluator-call accounting — the incremental path must actually do
+//!   less work (fewer full bisections, fewer total feasibility sweeps),
+//!   with counts that are seed-deterministic;
+//! * `SearchParams::max_evals` audit — the budget counts *proposed
+//!   moves* (a pruned delta-eval consumes one unit exactly like a full
+//!   evaluation), so budgeted searches consume identical budgets and
+//!   return identical plans under either evaluator.
+
+use ringada::config::ClusterConfig;
+use ringada::coordinator::{Planner, PlannerCosts, SearchParams};
+use ringada::model::manifest::ModelHyper;
+use ringada::model::ModelMeta;
+use ringada::prop_check;
+use ringada::runtime::Rng;
+use ringada::util::prop::forall;
+
+fn meta(layers: usize) -> ModelMeta {
+    ModelMeta::from_hyper(ModelHyper {
+        name: "incr".into(),
+        vocab: 256,
+        hidden: 32,
+        layers,
+        heads: 4,
+        ffn: 64,
+        bottleneck: 8,
+        seq: 16,
+        batch: 2,
+        init_std: 0.02,
+    })
+}
+
+fn costs() -> PlannerCosts {
+    PlannerCosts { block_fwd_s: 0.010, activation_bytes: 32768 }
+}
+
+/// Heterogeneous cluster with jittered speeds *and* link rates — both
+/// terms of the stage cost vary per device/edge, the adversarial setting
+/// for evaluator parity (asymmetric rates make segment-reverse moves
+/// change every interior hop cost).
+fn random_cluster(rng: &mut Rng, n: usize) -> ClusterConfig {
+    let mut cl = ClusterConfig::homogeneous(n, 25e6);
+    for d in &mut cl.devices {
+        d.compute_speed = 0.05 + 0.1 * rng.next_f64();
+    }
+    for i in 0..n {
+        for j in 0..n {
+            if i != j {
+                cl.rate_bytes_per_s[i][j] = 10e6 + 30e6 * rng.next_f64();
+            }
+        }
+    }
+    cl
+}
+
+/// Run both evaluator paths and assert bitwise-identical outcomes;
+/// returns the (incremental, reference) stats for count assertions.
+fn assert_paths_identical(
+    planner: &Planner<'_>,
+    devices: &[usize],
+    params: &SearchParams,
+    ctx: &str,
+) -> Result<
+    (
+        ringada::coordinator::SearchStats,
+        ringada::coordinator::SearchStats,
+    ),
+    String,
+> {
+    let p_inc = SearchParams { incremental: true, ..*params };
+    let p_ref = SearchParams { incremental: false, ..*params };
+    let (plan_inc, st_inc) = planner
+        .plan_beam_anneal_traced(devices, &p_inc)
+        .map_err(|e| format!("{ctx}: incremental failed: {e}"))?;
+    let (plan_ref, st_ref) = planner
+        .plan_beam_anneal_traced(devices, &p_ref)
+        .map_err(|e| format!("{ctx}: reference failed: {e}"))?;
+    if plan_inc.assignment != plan_ref.assignment {
+        return Err(format!("{ctx}: plans diverged"));
+    }
+    if plan_inc.bottleneck_s.to_bits() != plan_ref.bottleneck_s.to_bits() {
+        return Err(format!(
+            "{ctx}: bottleneck bits diverged ({} vs {})",
+            plan_inc.bottleneck_s, plan_ref.bottleneck_s
+        ));
+    }
+    if st_inc.accepted != st_ref.accepted {
+        return Err(format!(
+            "{ctx}: accepted-move trajectories diverged ({} vs {} accepts)",
+            st_inc.accepted.len(),
+            st_ref.accepted.len()
+        ));
+    }
+    if st_inc.anneal_moves != st_ref.anneal_moves {
+        return Err(format!("{ctx}: proposal counts diverged"));
+    }
+    if st_inc.full_evals > st_ref.full_evals {
+        return Err(format!(
+            "{ctx}: incremental ran MORE full evals ({} vs {})",
+            st_inc.full_evals, st_ref.full_evals
+        ));
+    }
+    Ok((st_inc, st_ref))
+}
+
+#[test]
+fn prop_incremental_matches_reference_on_enumerable_clusters() {
+    forall(30, |rng| {
+        let n = 2 + rng.next_below(6); // 2..=7
+        let layers = n + rng.next_below(8);
+        let m = meta(layers);
+        let cl = random_cluster(rng, n);
+        let p = Planner::new(&m, &cl, costs());
+        let all: Vec<usize> = (0..n).collect();
+        let params = SearchParams::default();
+        assert_paths_identical(&p, &all, &params, &format!("n={n} layers={layers}"))?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_incremental_matches_reference_on_survivor_subsets() {
+    // The post-dropout re-planning path: survivors keep their original
+    // cluster ids, so the search runs over a sparse id set.
+    forall(15, |rng| {
+        let n = 6 + rng.next_below(4); // cluster size 6..=9
+        let k = 2 + rng.next_below(4); // survivors 2..=5
+        let layers = k + rng.next_below(8);
+        let m = meta(layers);
+        let cl = random_cluster(rng, n);
+        let mut ids: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut ids);
+        let mut subset: Vec<usize> = ids[..k].to_vec();
+        subset.sort_unstable();
+        let p = Planner::new(&m, &cl, costs());
+        let params = SearchParams::default();
+        assert_paths_identical(&p, &subset, &params, &format!("subset {subset:?} of {n}"))?;
+        // And the incremental default still matches the exhaustive
+        // optimum (transitively with the existing scale battery, but pin
+        // it directly here too).
+        let ex = p.plan_exhaustive(&subset).map_err(|e| e.to_string())?;
+        let ba = p.plan_beam_anneal(&subset).map_err(|e| e.to_string())?;
+        prop_check!(
+            (ba.bottleneck_s - ex.bottleneck_s).abs() <= 1e-9 * ex.bottleneck_s.max(1e-12),
+            "beam/anneal {} vs exhaustive {}",
+            ba.bottleneck_s,
+            ex.bottleneck_s
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn incremental_matches_reference_on_large_random_clusters() {
+    // The scales the unit suite can afford in debug builds; the bench's
+    // `incremental` rows extend the same differential to U = 4096.
+    for (u, iters, seed) in [(64usize, 250usize, 3u64), (256, 250, 4), (1024, 150, 5)] {
+        let m = meta(2 * u);
+        let cl = ClusterConfig::synthetic(u, seed, 0.6);
+        let p = Planner::new(&m, &cl, costs());
+        let devices: Vec<usize> = (0..u).collect();
+        let params = SearchParams {
+            beam_width: 3,
+            anneal_iters: iters,
+            max_evals: 0,
+            seed: 0xA11E + seed,
+            incremental: true,
+        };
+        let (st_inc, st_ref) =
+            assert_paths_identical(&p, &devices, &params, &format!("u={u}")).unwrap();
+        // The whole point: strictly fewer full bisections and sweeps.
+        assert!(
+            st_inc.full_evals < st_ref.full_evals,
+            "u={u}: {} vs {} full evals",
+            st_inc.full_evals,
+            st_ref.full_evals
+        );
+        assert!(
+            st_inc.anneal_sweeps < st_ref.anneal_sweeps,
+            "u={u}: {} vs {} sweeps",
+            st_inc.anneal_sweeps,
+            st_ref.anneal_sweeps
+        );
+        // Counts are seed-deterministic — the property the CI smoke gate
+        // in benches/scale.rs relies on.
+        let (st_inc2, _) =
+            assert_paths_identical(&p, &devices, &params, &format!("u={u} replay")).unwrap();
+        assert_eq!(st_inc.full_evals, st_inc2.full_evals);
+        assert_eq!(st_inc.pruned_moves, st_inc2.pruned_moves);
+        assert_eq!(st_inc.anneal_sweeps, st_inc2.anneal_sweeps);
+    }
+}
+
+#[test]
+fn max_evals_budget_counts_proposals_under_both_evaluators() {
+    // The audit (ISSUE 5 satellite): a pruned delta-eval consumes one
+    // budget unit exactly like a full evaluation, so a budgeted search
+    // proposes the identical move sequence — and returns the identical
+    // plan — under either evaluator implementation.
+    let m = meta(32);
+    let cl = ClusterConfig::synthetic(16, 21, 0.7);
+    let p = Planner::new(&m, &cl, costs());
+    let devices: Vec<usize> = (0..16).collect();
+    let params = SearchParams {
+        beam_width: 4,
+        anneal_iters: 10_000,
+        max_evals: 64,
+        seed: 7,
+        incremental: true,
+    };
+    let (st_inc, st_ref) =
+        assert_paths_identical(&p, &devices, &params, "budgeted").unwrap();
+    // Budget pinning: 2 seed orders + beam_width beam candidates are
+    // scored first, the anneal gets exactly the remainder in proposals.
+    let scored = 2 + params.beam_width;
+    assert_eq!(st_inc.candidate_evals, scored);
+    assert_eq!(st_inc.anneal_moves, params.max_evals - scored);
+    assert_eq!(st_ref.anneal_moves, params.max_evals - scored);
+    // The reference pays one bisection per proposal; the budget is an
+    // upper bound (not an exact count) for the incremental path.
+    assert_eq!(st_ref.full_evals, st_ref.anneal_moves);
+    assert!(st_inc.full_evals <= st_inc.anneal_moves);
+    // A budget too small for any anneal move still planned identically.
+    let tiny = SearchParams { max_evals: 1, ..params };
+    let (st_tiny, _) = assert_paths_identical(&p, &devices, &tiny, "max_evals=1").unwrap();
+    assert_eq!(st_tiny.anneal_moves, 0);
+    assert_eq!(st_tiny.full_evals, 0);
+    // An unbudgeted run consumes exactly anneal_iters proposals.
+    let free = SearchParams { max_evals: 0, anneal_iters: 500, ..params };
+    let (st_free, _) = assert_paths_identical(&p, &devices, &free, "unbudgeted").unwrap();
+    assert_eq!(st_free.anneal_moves, 500);
+}

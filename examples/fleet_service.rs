@@ -1,0 +1,121 @@
+//! Long-lived fleet service: the operational loop around `FleetState`.
+//!
+//! Four drills, each a piece of running the fleet scheduler as a
+//! *service* rather than a one-shot simulation:
+//!
+//! 1. **JSONL ingestion** — materialize the synthetic job stream to a
+//!    versioned JSONL trace file and serve from it; the report must be
+//!    byte-identical to serving the generator directly.
+//! 2. **Crash/restore** — step a third of the way through the event
+//!    stream, write the snapshot to disk, "crash", resume a fresh
+//!    process from the file, and finish; the final report must match the
+//!    uninterrupted run byte-for-byte.
+//! 3. **Plan-cache persistence** — export the ring-plan cache after the
+//!    first run and import it into a restarted service over the same
+//!    pool: the warm run answers its plan requests from the cache.
+//! 4. **Bounded-memory serving** — the streaming mode folds every
+//!    completed job into fixed-size aggregates instead of materializing
+//!    per-job rows; peak resident rows stays at the in-flight count.
+//!
+//! Timing-only: analytic cost LUT, no AOT artifacts — works anywhere.
+//!
+//! ```bash
+//! cargo run --release --example fleet_service
+//! ```
+
+use ringada::config::FleetConfig;
+use ringada::fleet::{
+    serve, serve_streaming, DeadlineEdf, FleetState, JobTrace, JSONL_TRACE_VERSION,
+};
+use ringada::util::json::Json;
+
+fn main() -> ringada::Result<()> {
+    let seed = 7u64;
+    let mut cfg = FleetConfig::synthetic(24, 32, seed);
+    cfg.mean_interarrival_s = 6.0;
+    let policy = &DeadlineEdf;
+
+    // ---- 1. JSONL ingestion ------------------------------------------
+    let tmp = std::env::temp_dir();
+    let trace_path = tmp.join(format!("ringada_service_trace_{}.jsonl", std::process::id()));
+    let jobs = JobTrace::synthetic(&cfg);
+    std::fs::write(&trace_path, JobTrace::to_jsonl(&jobs)).expect("write trace");
+    let synth_canon = serve(&cfg, policy)?.canonical_string();
+    cfg.trace_path = Some(trace_path.to_string_lossy().into_owned());
+    let report = serve(&cfg, policy)?;
+    assert_eq!(report.canonical_string(), synth_canon, "JSONL replay must be invisible");
+    println!(
+        "[ingest]  {} jobs from {} (trace v{}) — report identical to the generator: \
+         {} completed, mean JCT {:.1}s, p95 {:.1}s",
+        jobs.len(),
+        trace_path.display(),
+        JSONL_TRACE_VERSION,
+        report.completed(),
+        report.mean_jct_s(),
+        report.p95_jct_s(),
+    );
+
+    // ---- 2. crash mid-run, restore from the snapshot file ------------
+    let mut events = 0usize;
+    let mut probe = FleetState::new(&cfg, policy)?;
+    while probe.step_event()? {
+        events += 1;
+    }
+    let crash_at = events / 3;
+    let mut live = FleetState::new(&cfg, policy)?;
+    for _ in 0..crash_at {
+        live.step_event()?;
+    }
+    let snap_path = tmp.join(format!("ringada_service_snap_{}.json", std::process::id()));
+    let snap_text = live.snapshot()?.to_string();
+    std::fs::write(&snap_path, &snap_text).expect("write snapshot");
+    drop(live); // the "crash": all in-memory state gone
+
+    let loaded = std::fs::read_to_string(&snap_path).expect("read snapshot");
+    let mut restored = FleetState::resume(&cfg, policy, &Json::parse(&loaded)?)?;
+    restored.run_to_end()?;
+    let cache = restored.export_plan_cache();
+    let resumed = restored.into_report()?;
+    assert_eq!(
+        resumed.canonical_string(),
+        report.canonical_string(),
+        "restored run must replay the uninterrupted one byte-for-byte"
+    );
+    println!(
+        "[restore] crashed after event {crash_at}/{events}, snapshot {} bytes on disk; \
+         resumed run byte-identical",
+        snap_text.len(),
+    );
+
+    // ---- 3. plan cache survives the restart --------------------------
+    let mut warm = FleetState::new(&cfg, policy)?;
+    let imported = warm.import_plan_cache(&cache)?;
+    warm.run_to_end()?;
+    let stats = warm.stats();
+    assert!(stats.plan_cache_hits > 0, "warm run must hit the imported cache");
+    println!(
+        "[cache]   imported {imported} plans; warm restart answered {}/{} plan requests \
+         from cache ({:.0}%)",
+        stats.plan_cache_hits,
+        stats.plans,
+        100.0 * stats.plan_cache_hits as f64 / stats.plans.max(1) as f64,
+    );
+
+    // ---- 4. bounded-memory streaming serve ---------------------------
+    let (agg, sstats) = serve_streaming(&cfg, policy)?;
+    assert_eq!(agg.completed, report.completed());
+    assert_eq!(agg.mean_jct_s().to_bits(), report.mean_jct_s().to_bits());
+    assert!(sstats.peak_resident_rows < cfg.jobs);
+    println!(
+        "[stream]  aggregates match the materialized report (means bitwise, p95 within \
+         one {:.0}s bucket): peak {} resident rows vs {} materialized",
+        agg.sketch().width(),
+        sstats.peak_resident_rows,
+        cfg.jobs,
+    );
+
+    std::fs::remove_file(&trace_path).ok();
+    std::fs::remove_file(&snap_path).ok();
+    println!("\nfleet_service: all four drills passed");
+    Ok(())
+}

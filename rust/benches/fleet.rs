@@ -10,8 +10,8 @@
 
 use ringada::config::{AdmissionControl, FleetConfig};
 use ringada::fleet::{
-    serve, serve_with_stats, AllocationPolicy, DeadlineEdf, FifoWholeRing, JobTrace,
-    SmallestRingFirst, UtilizationAware,
+    serve, serve_streaming, serve_with_stats, AllocationPolicy, DeadlineEdf, FifoWholeRing,
+    JobTrace, SmallestRingFirst, UtilizationAware,
 };
 use ringada::sim::Scenario;
 use ringada::util::bench::{black_box, Bencher};
@@ -126,4 +126,76 @@ fn main() {
     ]);
     std::fs::write("BENCH_fleet.json", out.pretty()).expect("write BENCH_fleet.json");
     println!("wrote BENCH_fleet.json");
+
+    // Streaming profile: bounded-memory serving vs the materialized
+    // report, written to `BENCH_stream.json`.  The asserts are gating,
+    // not advisory — counts and sketch contents are seed-deterministic,
+    // so a red run means the streaming fold regressed, not timing noise.
+    let mut stream_rows = Vec::new();
+    for (label, c) in [
+        ("healthy", &cfg),
+        ("faulted", &faulted),
+        ("preempting", &preempting),
+    ] {
+        for policy in policies {
+            let (report, mat_stats) = serve_with_stats(c, policy).expect("fleet run must succeed");
+            let (agg, stream_stats) =
+                serve_streaming(c, policy).expect("streaming run must succeed");
+            let stream_mean_s = {
+                let r = b.bench(&format!("fleet/stream_{label}_{}", policy.name()), || {
+                    black_box(serve_streaming(c, policy).unwrap());
+                });
+                r.mean.as_secs_f64()
+            };
+            let width = agg.sketch().width();
+            let err = agg.p95_jct_s() - report.p95_jct_s();
+            assert!(
+                err >= -1e-12 && err <= width * (1.0 + 1e-9),
+                "sketch p95 gate: off by {err} (bucket width {width}) on {label}/{}",
+                policy.name()
+            );
+            assert!(
+                stream_stats.peak_resident_rows <= mat_stats.peak_resident_rows,
+                "streaming retained more rows than materialized on {label}/{}",
+                policy.name()
+            );
+            println!(
+                "  -> stream {label}/{}: resident rows {} vs {} materialized, \
+                 p95 sketch {:.1}s vs exact {:.1}s (bucket {:.1}s)",
+                policy.name(),
+                stream_stats.peak_resident_rows,
+                mat_stats.peak_resident_rows,
+                agg.p95_jct_s(),
+                report.p95_jct_s(),
+                width,
+            );
+            stream_rows.push(Json::obj(vec![
+                ("scenario", Json::str(label)),
+                ("policy", Json::str(policy.name())),
+                ("pool", Json::num(pool as f64)),
+                ("jobs", Json::num(jobs as f64)),
+                ("stream_serve_mean_s", Json::num(stream_mean_s)),
+                (
+                    "peak_resident_rows_streaming",
+                    Json::num(stream_stats.peak_resident_rows as f64),
+                ),
+                (
+                    "peak_resident_rows_materialized",
+                    Json::num(mat_stats.peak_resident_rows as f64),
+                ),
+                ("p95_sketch_s", Json::num(agg.p95_jct_s())),
+                ("p95_exact_s", Json::num(report.p95_jct_s())),
+                ("sketch_width_s", Json::num(width)),
+                ("completed", Json::num(agg.completed as f64)),
+            ]));
+        }
+    }
+
+    let stream_out = Json::obj(vec![
+        ("bench", Json::str("fleet_stream")),
+        ("smoke", Json::Bool(smoke)),
+        ("runs", Json::Arr(stream_rows)),
+    ]);
+    std::fs::write("BENCH_stream.json", stream_out.pretty()).expect("write BENCH_stream.json");
+    println!("wrote BENCH_stream.json");
 }

@@ -510,6 +510,11 @@ pub struct FleetConfig {
     pub preemption: bool,
     /// Admission-control mode (see [`AdmissionControl`]).
     pub admission: AdmissionControl,
+    /// Optional versioned JSONL trace to serve instead of the synthetic
+    /// generator (see `fleet::JsonlSource`).  The synthetic knobs above
+    /// still size per-job training; `jobs` is ignored when a trace is set
+    /// (the stream ends when the file does).
+    pub trace_path: Option<String>,
 }
 
 impl FleetConfig {
@@ -530,6 +535,7 @@ impl FleetConfig {
             priority_mix: [0.2, 0.5, 0.3],
             preemption: false,
             admission: AdmissionControl::Open,
+            trace_path: None,
         }
     }
 
@@ -622,6 +628,10 @@ impl FleetConfig {
             priority_mix,
             preemption,
             admission,
+            trace_path: match v.get("trace_path") {
+                Some(p) => Some(p.as_str()?.to_string()),
+                None => None,
+            },
         })
     }
 
@@ -646,6 +656,9 @@ impl FleetConfig {
         ];
         if let Some(sc) = &self.scenario {
             pairs.push(("scenario", sc.to_json()));
+        }
+        if let Some(path) = &self.trace_path {
+            pairs.push(("trace_path", Json::str(path)));
         }
         Json::obj(pairs)
     }

@@ -11,10 +11,14 @@
 //! `priority_mix`.  Same config ⇒ bit-identical trace, which is what
 //! makes whole fleet runs replayable.
 
+use std::io::BufRead;
+
 use crate::config::FleetConfig;
+use crate::error::{Error, Result};
 use crate::model::manifest::ModelHyper;
 use crate::model::ModelMeta;
 use crate::runtime::rng::{mix, Rng};
+use crate::util::json::Json;
 
 /// Scheduling priority of a fleet job.  Orthogonal to [`DeadlineClass`]
 /// (how tight the deadline is): priority decides who may preempt whom —
@@ -40,6 +44,16 @@ impl Priority {
             Priority::High => "high",
         }
     }
+
+    /// Inverse of [`Priority::name`] (trace parsing / snapshot restore).
+    pub fn from_name(name: &str) -> Result<Priority> {
+        match name {
+            "low" => Ok(Priority::Low),
+            "normal" => Ok(Priority::Normal),
+            "high" => Ok(Priority::High),
+            _ => Err(Error::Config(format!("unknown priority `{name}`"))),
+        }
+    }
 }
 
 /// How tight a job's completion deadline is, relative to its
@@ -60,6 +74,17 @@ impl DeadlineClass {
             DeadlineClass::Strict => "strict",
             DeadlineClass::Standard => "standard",
             DeadlineClass::Relaxed => "relaxed",
+        }
+    }
+
+    /// Inverse of [`DeadlineClass::name`] (trace parsing / snapshot
+    /// restore).
+    pub fn from_name(name: &str) -> Result<DeadlineClass> {
+        match name {
+            "strict" => Ok(DeadlineClass::Strict),
+            "standard" => Ok(DeadlineClass::Standard),
+            "relaxed" => Ok(DeadlineClass::Relaxed),
+            _ => Err(Error::Config(format!("unknown deadline class `{name}`"))),
         }
     }
 
@@ -125,6 +150,353 @@ impl JobSpec {
     pub fn deadline_s(&self, block_fwd_s: f64) -> f64 {
         self.arrival_s + self.deadline.slack() * self.nominal_service_s(block_fwd_s)
     }
+
+    /// One JSONL trace line (also the per-job snapshot form).  `arrival_s`
+    /// stays human-readable: the serializer prints finite f64s with a
+    /// shortest-round-trip representation, so parsing it back is
+    /// bit-exact for the non-negative arrivals a trace carries.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::u64(self.id as u64)),
+            ("arrival_s", Json::num(self.arrival_s)),
+            ("layers", Json::u64(self.layers as u64)),
+            ("rounds", Json::u64(self.rounds as u64)),
+            ("local_iters", Json::u64(self.local_iters as u64)),
+            ("ring_size", Json::u64(self.ring_size as u64)),
+            ("deadline", Json::str(self.deadline.name())),
+            ("priority", Json::str(self.priority.name())),
+        ])
+    }
+
+    /// Inverse of [`JobSpec::to_json`].  Field presence and enum names are
+    /// checked; stream-level invariants (id ordering, arrival monotonicity)
+    /// are the source's job ([`JsonlSource`]).
+    pub fn from_json(v: &Json) -> Result<JobSpec> {
+        Ok(JobSpec {
+            id: v.req("id")?.as_usize()?,
+            arrival_s: v.req("arrival_s")?.as_f64()?,
+            layers: v.req("layers")?.as_usize()?,
+            rounds: v.req("rounds")?.as_usize()?,
+            local_iters: v.req("local_iters")?.as_usize()?,
+            ring_size: v.req("ring_size")?.as_usize()?,
+            deadline: DeadlineClass::from_name(v.req("deadline")?.as_str()?)?,
+            priority: Priority::from_name(v.req("priority")?.as_str()?)?,
+        })
+    }
+}
+
+/// Serialize an [`Rng`] for a checkpoint (state word + the cached
+/// Box–Muller spare as a bit pattern, so a mid-pair snapshot replays the
+/// exact second normal).
+pub(crate) fn rng_to_json(rng: &Rng) -> Json {
+    let (state, spare) = rng.state();
+    Json::obj(vec![
+        ("state", Json::u64(state)),
+        (
+            "spare_bits",
+            match spare {
+                Some(s) => Json::u64(s.to_bits()),
+                None => Json::Null,
+            },
+        ),
+    ])
+}
+
+/// Inverse of [`rng_to_json`].
+pub(crate) fn rng_from_json(v: &Json) -> Result<Rng> {
+    let state = v.req("state")?.as_u64()?;
+    let spare = match v.req("spare_bits")? {
+        Json::Null => None,
+        other => Some(f64::from_bits(other.as_u64()?)),
+    };
+    Ok(Rng::from_state(state, spare))
+}
+
+/// Pull-based job stream for the long-lived serve loop.  Sources are
+/// exhausted (`Ok(None)`) or checkpointable mid-stream via
+/// [`JobSource::snapshot`]; jobs arrive with strictly ascending ids and
+/// nondecreasing `arrival_s` (the serve loop re-validates both).
+pub trait JobSource {
+    /// The next job, or `Ok(None)` when the stream is exhausted.
+    fn next_job(&mut self) -> Result<Option<JobSpec>>;
+
+    /// Jobs emitted so far (the next job's id).
+    fn emitted(&self) -> usize;
+
+    /// Checkpoint the source's position for [`source_from_snapshot`].
+    fn snapshot(&self) -> Result<Json>;
+}
+
+/// The synthetic generator of [`JobTrace::synthetic`], wrapped as a
+/// pull-based [`JobSource`]: identical draw order, so draining it yields
+/// the bit-identical trace, one job at a time.
+pub struct SyntheticSource {
+    jobs: usize,
+    mean_interarrival_s: f64,
+    min_layers: usize,
+    max_layers: usize,
+    min_rounds: usize,
+    max_rounds: usize,
+    local_iters: usize,
+    priority_mix: [f64; 3],
+    rng: Rng,
+    prio_rng: Rng,
+    t: f64,
+    emitted: usize,
+}
+
+impl SyntheticSource {
+    pub fn new(cfg: &FleetConfig) -> Self {
+        SyntheticSource {
+            jobs: cfg.jobs,
+            mean_interarrival_s: cfg.mean_interarrival_s,
+            min_layers: cfg.min_layers,
+            max_layers: cfg.max_layers,
+            min_rounds: cfg.min_rounds,
+            max_rounds: cfg.max_rounds,
+            local_iters: cfg.local_iters,
+            priority_mix: cfg.priority_mix,
+            rng: Rng::new(cfg.seed ^ 0xF1EE_7A8B),
+            prio_rng: Rng::new(mix(cfg.seed, 0x5EED_9A10)),
+            t: 0.0,
+            emitted: 0,
+        }
+    }
+
+    /// Rebuild a mid-stream generator from [`JobSource::snapshot`] output.
+    /// `cfg` must be the config the snapshot was taken under (the fleet
+    /// snapshot's compatibility rule) — the trace parameters come from it,
+    /// only the generator position comes from the snapshot.
+    pub fn resume(cfg: &FleetConfig, v: &Json) -> Result<Self> {
+        let mut src = Self::new(cfg);
+        src.rng = rng_from_json(v.req("rng")?)?;
+        src.prio_rng = rng_from_json(v.req("prio_rng")?)?;
+        src.t = f64::from_bits(v.req("t_bits")?.as_u64()?);
+        src.emitted = v.req("emitted")?.as_usize()?;
+        if src.emitted > src.jobs {
+            return Err(Error::Config(format!(
+                "synthetic source snapshot emitted {} of a {}-job stream",
+                src.emitted, src.jobs
+            )));
+        }
+        Ok(src)
+    }
+}
+
+impl JobSource for SyntheticSource {
+    fn next_job(&mut self) -> Result<Option<JobSpec>> {
+        if self.emitted >= self.jobs {
+            return Ok(None);
+        }
+        let id = self.emitted;
+        let [w_high, w_normal, w_low] = self.priority_mix;
+        let w_sum = w_high + w_normal + w_low;
+        let u = self.rng.next_f64();
+        self.t += -self.mean_interarrival_s * (1.0 - u).ln();
+        let layers = self.min_layers + self.rng.next_below(self.max_layers - self.min_layers + 1);
+        let rounds = self.min_rounds + self.rng.next_below(self.max_rounds - self.min_rounds + 1);
+        let ring_size = (2 + self.rng.next_below(7)).min((layers / 2).max(1));
+        let deadline = {
+            let d = self.rng.next_f64();
+            if d < 0.2 {
+                DeadlineClass::Strict
+            } else if d < 0.6 {
+                DeadlineClass::Standard
+            } else {
+                DeadlineClass::Relaxed
+            }
+        };
+        let priority = {
+            let p = self.prio_rng.next_f64() * w_sum;
+            if p < w_high {
+                Priority::High
+            } else if p < w_high + w_normal {
+                Priority::Normal
+            } else {
+                Priority::Low
+            }
+        };
+        self.emitted += 1;
+        Ok(Some(JobSpec {
+            id,
+            arrival_s: self.t,
+            layers,
+            rounds,
+            local_iters: self.local_iters,
+            ring_size,
+            deadline,
+            priority,
+        }))
+    }
+
+    fn emitted(&self) -> usize {
+        self.emitted
+    }
+
+    fn snapshot(&self) -> Result<Json> {
+        Ok(Json::obj(vec![
+            ("kind", Json::str("synthetic")),
+            ("rng", rng_to_json(&self.rng)),
+            ("prio_rng", rng_to_json(&self.prio_rng)),
+            ("t_bits", Json::u64(self.t.to_bits())),
+            ("emitted", Json::u64(self.emitted as u64)),
+        ]))
+    }
+}
+
+/// Version tag a JSONL trace's header line must carry:
+/// `{"ringada_jobs": 1}`.
+pub const JSONL_TRACE_VERSION: u64 = 1;
+
+/// Streaming JSONL trace reader: one [`JobSpec`] per line after the
+/// version header, blank lines ignored.  Malformed input is a *run*
+/// error ([`Error::Config`] with the line number), not a job failure —
+/// a corrupt trace means the whole stream is untrustworthy.
+pub struct JsonlSource {
+    reader: Box<dyn BufRead>,
+    /// Backing file, if any — required for [`JobSource::snapshot`].
+    path: Option<String>,
+    emitted: usize,
+    last_arrival_s: f64,
+    line_no: usize,
+}
+
+impl JsonlSource {
+    /// Open a trace file and consume its version header.
+    pub fn open(path: &str) -> Result<Self> {
+        let file = std::fs::File::open(path)?;
+        Self::from_reader(Box::new(std::io::BufReader::new(file)), Some(path.to_string()))
+    }
+
+    /// Read a trace from an in-memory string (tests / generated traces).
+    /// Not checkpointable: a snapshot needs a path to re-open.
+    pub fn from_text(text: &str) -> Result<Self> {
+        Self::from_reader(Box::new(std::io::Cursor::new(text.to_string())), None)
+    }
+
+    fn from_reader(reader: Box<dyn BufRead>, path: Option<String>) -> Result<Self> {
+        let mut src =
+            JsonlSource { reader, path, emitted: 0, last_arrival_s: 0.0, line_no: 0 };
+        let mut header = String::new();
+        if src.reader.read_line(&mut header)? == 0 {
+            return Err(Error::Config("empty JSONL trace (missing version header)".into()));
+        }
+        src.line_no = 1;
+        let v = Json::parse(header.trim())
+            .map_err(|e| Error::Config(format!("trace header: {e}")))?;
+        let version = v.req("ringada_jobs")?.as_u64()?;
+        if version != JSONL_TRACE_VERSION {
+            return Err(Error::Config(format!(
+                "unsupported trace version {version} (this build reads {JSONL_TRACE_VERSION})"
+            )));
+        }
+        Ok(src)
+    }
+
+    /// Re-open the checkpointed trace and skip past the jobs already
+    /// emitted, re-validating them (a changed file is detected by the
+    /// arrival-clock mismatch, not replayed silently).
+    pub fn resume(v: &Json) -> Result<Self> {
+        let path = v.req("path")?.as_str()?;
+        let emitted = v.req("emitted")?.as_usize()?;
+        let mut src = Self::open(path)?;
+        for _ in 0..emitted {
+            if src.next_job()?.is_none() {
+                return Err(Error::Config(format!(
+                    "trace `{path}` ended before the {emitted} checkpointed jobs"
+                )));
+            }
+        }
+        let want = v.req("last_arrival_bits")?.as_u64()?;
+        if emitted > 0 && src.last_arrival_s.to_bits() != want {
+            return Err(Error::Config(format!(
+                "trace `{path}` changed since the checkpoint (arrival clock mismatch)"
+            )));
+        }
+        Ok(src)
+    }
+}
+
+impl JobSource for JsonlSource {
+    fn next_job(&mut self) -> Result<Option<JobSpec>> {
+        loop {
+            let mut line = String::new();
+            if self.reader.read_line(&mut line)? == 0 {
+                return Ok(None);
+            }
+            self.line_no += 1;
+            let trimmed = line.trim();
+            if trimmed.is_empty() {
+                continue;
+            }
+            let line_no = self.line_no;
+            let spec = Json::parse(trimmed)
+                .and_then(|v| JobSpec::from_json(&v))
+                .map_err(|e| Error::Config(format!("trace line {line_no}: {e}")))?;
+            if spec.id != self.emitted {
+                return Err(Error::Config(format!(
+                    "trace line {line_no}: job id {} out of order (expected {})",
+                    spec.id, self.emitted
+                )));
+            }
+            if !spec.arrival_s.is_finite()
+                || spec.arrival_s < 0.0
+                || spec.arrival_s < self.last_arrival_s
+            {
+                return Err(Error::Config(format!(
+                    "trace line {line_no}: arrival {} is not finite, non-negative and \
+                     nondecreasing (previous {})",
+                    spec.arrival_s, self.last_arrival_s
+                )));
+            }
+            if spec.layers < 1 || spec.rounds < 1 || spec.local_iters < 1 || spec.ring_size < 2 {
+                return Err(Error::Config(format!(
+                    "trace line {line_no}: job {} has a degenerate shape \
+                     (layers {}, rounds {}, local_iters {}, ring {})",
+                    spec.id, spec.layers, spec.rounds, spec.local_iters, spec.ring_size
+                )));
+            }
+            self.last_arrival_s = spec.arrival_s;
+            self.emitted += 1;
+            return Ok(Some(spec));
+        }
+    }
+
+    fn emitted(&self) -> usize {
+        self.emitted
+    }
+
+    fn snapshot(&self) -> Result<Json> {
+        let Some(path) = &self.path else {
+            return Err(Error::Config(
+                "an in-memory JSONL source cannot be checkpointed (no path to re-open)".into(),
+            ));
+        };
+        Ok(Json::obj(vec![
+            ("kind", Json::str("jsonl")),
+            ("path", Json::str(path)),
+            ("emitted", Json::u64(self.emitted as u64)),
+            ("last_arrival_bits", Json::u64(self.last_arrival_s.to_bits())),
+        ]))
+    }
+}
+
+/// The source a [`FleetConfig`] asks for: the JSONL trace at
+/// `cfg.trace_path` when set, else the synthetic generator.
+pub fn default_source(cfg: &FleetConfig) -> Result<Box<dyn JobSource>> {
+    match &cfg.trace_path {
+        Some(path) => Ok(Box::new(JsonlSource::open(path)?)),
+        None => Ok(Box::new(SyntheticSource::new(cfg))),
+    }
+}
+
+/// Rebuild a [`JobSource`] from its [`JobSource::snapshot`] output.
+pub fn source_from_snapshot(cfg: &FleetConfig, v: &Json) -> Result<Box<dyn JobSource>> {
+    match v.req("kind")?.as_str()? {
+        "synthetic" => Ok(Box::new(SyntheticSource::resume(cfg, v)?)),
+        "jsonl" => Ok(Box::new(JsonlSource::resume(v)?)),
+        kind => Err(Error::Config(format!("unknown job source kind `{kind}`"))),
+    }
 }
 
 /// Synthetic arrival-trace generator (see module docs).
@@ -143,50 +515,25 @@ impl JobTrace {
     /// base trace (arrivals, sizes, budgets, rings, deadlines) is
     /// bit-identical for a given seed regardless of the configured mix.
     pub fn synthetic(cfg: &FleetConfig) -> Vec<JobSpec> {
-        let mut rng = Rng::new(cfg.seed ^ 0xF1EE_7A8B);
-        let mut prio_rng = Rng::new(mix(cfg.seed, 0x5EED_9A10));
-        let [w_high, w_normal, w_low] = cfg.priority_mix;
-        let w_sum = w_high + w_normal + w_low;
-        let mut t = 0.0f64;
+        // Draining the pull-based source keeps the materialized trace and
+        // the streaming serve loop on one generator by construction.
+        let mut src = SyntheticSource::new(cfg);
         let mut jobs = Vec::with_capacity(cfg.jobs);
-        for id in 0..cfg.jobs {
-            let u = rng.next_f64();
-            t += -cfg.mean_interarrival_s * (1.0 - u).ln();
-            let layers = cfg.min_layers + rng.next_below(cfg.max_layers - cfg.min_layers + 1);
-            let rounds = cfg.min_rounds + rng.next_below(cfg.max_rounds - cfg.min_rounds + 1);
-            let ring_size = (2 + rng.next_below(7)).min((layers / 2).max(1));
-            let deadline = {
-                let d = rng.next_f64();
-                if d < 0.2 {
-                    DeadlineClass::Strict
-                } else if d < 0.6 {
-                    DeadlineClass::Standard
-                } else {
-                    DeadlineClass::Relaxed
-                }
-            };
-            let priority = {
-                let p = prio_rng.next_f64() * w_sum;
-                if p < w_high {
-                    Priority::High
-                } else if p < w_high + w_normal {
-                    Priority::Normal
-                } else {
-                    Priority::Low
-                }
-            };
-            jobs.push(JobSpec {
-                id,
-                arrival_s: t,
-                layers,
-                rounds,
-                local_iters: cfg.local_iters,
-                ring_size,
-                deadline,
-                priority,
-            });
+        while let Ok(Some(j)) = src.next_job() {
+            jobs.push(j);
         }
         jobs
+    }
+
+    /// Render a trace in the versioned JSONL format [`JsonlSource`]
+    /// reads: header line, then one [`JobSpec::to_json`] object per line.
+    pub fn to_jsonl(jobs: &[JobSpec]) -> String {
+        let mut out = format!("{{\"ringada_jobs\": {JSONL_TRACE_VERSION}}}\n");
+        for j in jobs {
+            out.push_str(&j.to_json().to_string());
+            out.push('\n');
+        }
+        out
     }
 }
 
@@ -245,6 +592,97 @@ mod tests {
         let mut all_low = cfg.clone();
         all_low.priority_mix = [0.0, 0.0, 3.5];
         assert!(JobTrace::synthetic(&all_low).iter().all(|j| j.priority == Priority::Low));
+    }
+
+    #[test]
+    fn synthetic_source_drains_to_the_materialized_trace() {
+        let cfg = FleetConfig::synthetic(16, 24, 11);
+        let trace = JobTrace::synthetic(&cfg);
+        let mut src = SyntheticSource::new(&cfg);
+        // Snapshot mid-stream (including mid Box–Muller state) and resume:
+        // the tail must match the materialized trace bit-for-bit.
+        let mut head = Vec::new();
+        for _ in 0..10 {
+            head.push(src.next_job().unwrap().unwrap());
+        }
+        let snap = src.snapshot().unwrap();
+        let mut resumed =
+            SyntheticSource::resume(&cfg, &Json::parse(&snap.to_string()).unwrap()).unwrap();
+        assert_eq!(resumed.emitted(), 10);
+        let mut tail = Vec::new();
+        while let Some(j) = resumed.next_job().unwrap() {
+            tail.push(j);
+        }
+        head.extend(tail);
+        assert_eq!(head.len(), trace.len());
+        for (a, b) in head.iter().zip(&trace) {
+            assert_eq!(a, b);
+            assert_eq!(a.arrival_s.to_bits(), b.arrival_s.to_bits());
+        }
+        // Exhausted source stays exhausted.
+        let mut done = SyntheticSource::new(&cfg);
+        while done.next_job().unwrap().is_some() {}
+        assert!(done.next_job().unwrap().is_none());
+        assert_eq!(done.emitted(), cfg.jobs);
+    }
+
+    #[test]
+    fn jsonl_round_trips_the_synthetic_trace() {
+        let cfg = FleetConfig::synthetic(16, 24, 11);
+        let trace = JobTrace::synthetic(&cfg);
+        let text = JobTrace::to_jsonl(&trace);
+        let mut src = JsonlSource::from_text(&text).unwrap();
+        let mut back = Vec::new();
+        while let Some(j) = src.next_job().unwrap() {
+            back.push(j);
+        }
+        assert_eq!(back.len(), trace.len());
+        for (a, b) in back.iter().zip(&trace) {
+            assert_eq!(a, b);
+            assert_eq!(a.arrival_s.to_bits(), b.arrival_s.to_bits(), "arrival round-trip");
+        }
+        // In-memory sources refuse to checkpoint (no path to re-open).
+        assert!(src.snapshot().is_err());
+    }
+
+    #[test]
+    fn jsonl_rejects_malformed_traces() {
+        let line = |id: usize, arr: f64| {
+            format!(
+                "{{\"id\": {id}, \"arrival_s\": {arr}, \"layers\": 8, \"rounds\": 2, \
+                 \"local_iters\": 1, \"ring_size\": 2, \"deadline\": \"standard\", \
+                 \"priority\": \"normal\"}}\n"
+            )
+        };
+        let header = "{\"ringada_jobs\": 1}\n";
+        // Missing / wrong-version header.
+        assert!(JsonlSource::from_text("").is_err());
+        assert!(JsonlSource::from_text(&line(0, 1.0)).is_err());
+        assert!(JsonlSource::from_text("{\"ringada_jobs\": 2}\n").is_err());
+        // Id out of order.
+        let mut src = JsonlSource::from_text(&format!("{header}{}", line(1, 1.0))).unwrap();
+        assert!(src.next_job().is_err());
+        // Decreasing arrival.
+        let mut src =
+            JsonlSource::from_text(&format!("{header}{}{}", line(0, 5.0), line(1, 4.0))).unwrap();
+        assert!(src.next_job().unwrap().is_some());
+        assert!(src.next_job().is_err());
+        // Degenerate ring.
+        let bad_ring = line(0, 1.0).replace("\"ring_size\": 2", "\"ring_size\": 1");
+        let mut src = JsonlSource::from_text(&format!("{header}{bad_ring}")).unwrap();
+        assert!(src.next_job().is_err());
+        // Unknown enum name.
+        let bad_prio = line(0, 1.0).replace("\"normal\"", "\"urgent\"");
+        let mut src = JsonlSource::from_text(&format!("{header}{bad_prio}")).unwrap();
+        let err = src.next_job().unwrap_err().to_string();
+        assert!(err.contains("line 2"), "error should carry the line number: {err}");
+        // Blank lines are fine.
+        let mut src =
+            JsonlSource::from_text(&format!("{header}\n{}\n{}", line(0, 1.0), line(1, 2.0)))
+                .unwrap();
+        assert!(src.next_job().unwrap().is_some());
+        assert!(src.next_job().unwrap().is_some());
+        assert!(src.next_job().unwrap().is_none());
     }
 
     #[test]

@@ -92,10 +92,13 @@
 pub mod job;
 pub mod policy;
 
-pub use job::{DeadlineClass, JobSpec, JobTrace, Priority};
+pub use job::{
+    default_source, source_from_snapshot, DeadlineClass, JobSource, JobSpec, JobTrace,
+    JsonlSource, Priority, SyntheticSource, JSONL_TRACE_VERSION,
+};
 pub use policy::{
-    Allocation, AllocationPolicy, DeadlineEdf, FifoWholeRing, PoolView, RunningJob,
-    SmallestRingFirst, UtilizationAware,
+    builtin_policy, Allocation, AllocationPolicy, DeadlineEdf, FifoWholeRing, PoolView,
+    RunningJob, SmallestRingFirst, UtilizationAware,
 };
 
 use std::cmp::Ordering;
@@ -104,15 +107,23 @@ use std::collections::{BinaryHeap, HashMap, VecDeque};
 use crate::config::{AdmissionControl, FleetConfig, TrainingConfig};
 use crate::coordinator::{Coordinator, LayerAssignment, Planner, PlannerCosts, SearchParams};
 use crate::error::{Error, Result};
-use crate::metrics::{FleetJobRow, FleetReport};
+use crate::metrics::{FleetAggregates, FleetJobRow, FleetReport};
 use crate::model::ModelMeta;
 use crate::pipeline::{ScheduleBuilder, WireSizes};
 use crate::runtime::rng::mix;
-use crate::sim::{CostLut, Scenario, Simulator};
+use crate::sim::{ClockState, CostLut, Scenario, Simulator};
+use crate::util::json::Json;
 
 /// Effective GFLOP/s of the analytic LUT every fleet job prices its model
 /// with (the scale examples use the same figure).
 pub(crate) const LUT_GFLOPS: f64 = 5.0;
+
+/// Version stamp of [`FleetState::snapshot`] documents.  Compatibility
+/// rule: a snapshot resumes only under the exact version, policy, and
+/// config (seed-checked) that wrote it — there is no cross-version
+/// migration, because the byte-identity contract would be unverifiable
+/// across diverging schedulers.
+pub const FLEET_SNAPSHOT_VERSION: u64 = 1;
 
 /// Rings at or below this width plan exhaustively (4! = 24 orders); wider
 /// rings use the budgeted beam + anneal search.  Fleet admission plans
@@ -140,15 +151,72 @@ fn job_seed(cfg: &FleetConfig, job: usize) -> u64 {
     mix(cfg.seed, job as u64)
 }
 
-const RANK_DROP: u8 = 0;
-const RANK_DONE: u8 = 1;
-const RANK_STEP: u8 = 2;
-const RANK_ARRIVE: u8 = 3;
+/// What a fleet event *is* — with the id it carries typed by the kind.
+/// `Drop` carries a **device** id; the other three carry **job** ids.
+/// The seed encoded the kind as a bare rank byte next to a shared `id`
+/// field, which a serialized heap could not distinguish — a restored
+/// `RANK_DROP` device id was one field confusion away from being read as
+/// a job id.  The enum makes that unrepresentable, and
+/// [`EventKind::name`]/[`EventKind::from_parts`] give the snapshot a
+/// self-describing encoding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum EventKind {
+    /// Scripted device fail-stop (device id).
+    Drop(usize),
+    /// Job completion: its staged devices return to the pool (job id).
+    Done(usize),
+    /// One round step of a running job (job id).
+    Step(usize),
+    /// Job arrival into the waiting queue (job id).
+    Arrive(usize),
+}
 
-/// Fleet event: min-heap key ordered by `(time, rank, id)` — dropouts
-/// before completions before round steps before arrivals at equal times,
-/// ties on the device/job id.  `Ord` is reversed because [`BinaryHeap`]
-/// is a max-heap.
+impl EventKind {
+    /// Same-time ordering rank: dropouts before completions before round
+    /// steps before arrivals (the seed's `RANK_*` order, pinned by the
+    /// golden event-order test).
+    fn rank(&self) -> u8 {
+        match self {
+            EventKind::Drop(_) => 0,
+            EventKind::Done(_) => 1,
+            EventKind::Step(_) => 2,
+            EventKind::Arrive(_) => 3,
+        }
+    }
+
+    /// The carried device id (`Drop`) or job id (the rest) — only for
+    /// tie-breaking and display; handlers match on the variant.
+    fn id(&self) -> usize {
+        match *self {
+            EventKind::Drop(d) => d,
+            EventKind::Done(j) | EventKind::Step(j) | EventKind::Arrive(j) => j,
+        }
+    }
+
+    /// Snapshot tag (see [`EventKind::from_parts`]).
+    fn name(&self) -> &'static str {
+        match self {
+            EventKind::Drop(_) => "drop",
+            EventKind::Done(_) => "done",
+            EventKind::Step(_) => "step",
+            EventKind::Arrive(_) => "arrive",
+        }
+    }
+
+    fn from_parts(name: &str, id: usize) -> Result<EventKind> {
+        match name {
+            "drop" => Ok(EventKind::Drop(id)),
+            "done" => Ok(EventKind::Done(id)),
+            "step" => Ok(EventKind::Step(id)),
+            "arrive" => Ok(EventKind::Arrive(id)),
+            _ => Err(Error::Schedule(format!("unknown event kind `{name}` in snapshot"))),
+        }
+    }
+}
+
+/// Fleet event: min-heap key ordered by `(time, kind rank, carried id)` —
+/// dropouts before completions before round steps before arrivals at
+/// equal times.  `Ord` is reversed because [`BinaryHeap`] is a max-heap.
 ///
 /// Round steps order *after* completions (a finishing job frees devices
 /// that the admission pass at that instant may re-grant) and *before*
@@ -157,8 +225,7 @@ const RANK_ARRIVE: u8 = 3;
 #[derive(Debug, Clone, Copy, PartialEq)]
 struct Event {
     t: f64,
-    rank: u8,
-    id: usize,
+    kind: EventKind,
 }
 
 impl Eq for Event {}
@@ -168,8 +235,8 @@ impl Ord for Event {
         other
             .t
             .total_cmp(&self.t)
-            .then_with(|| other.rank.cmp(&self.rank))
-            .then_with(|| other.id.cmp(&self.id))
+            .then_with(|| other.kind.rank().cmp(&self.kind.rank()))
+            .then_with(|| other.kind.id().cmp(&self.kind.id()))
     }
 }
 
@@ -177,6 +244,14 @@ impl PartialOrd for Event {
     fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
         Some(self.cmp(other))
     }
+}
+
+/// Chronological (pop-order) comparator for serializing the heap: the
+/// *forward* `(t, rank, id)` order, i.e. [`Event`]'s `Ord` un-reversed.
+fn event_chronological(a: &Event, b: &Event) -> Ordering {
+    a.t.total_cmp(&b.t)
+        .then_with(|| a.kind.rank().cmp(&b.kind.rank()))
+        .then_with(|| a.kind.id().cmp(&b.kind.id()))
 }
 
 /// Plan a ring over `devices`: exhaustive for tiny rings, budgeted beam +
@@ -247,7 +322,7 @@ struct PlanCache {
     misses: usize,
 }
 
-#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
 struct PlanKey {
     layers: usize,
     block_fwd_bits: u64,
@@ -312,6 +387,91 @@ struct CachedPlan {
     counts: Vec<usize>,
 }
 
+impl PlanCache {
+    fn entry_to_json(key: &PlanKey, plan: &Option<CachedPlan>) -> Json {
+        Json::obj(vec![
+            ("layers", Json::u64(key.layers as u64)),
+            ("block_fwd_bits", Json::u64(key.block_fwd_bits)),
+            ("activation_bytes", Json::u64(key.activation_bytes as u64)),
+            ("profile", Json::arr_u64(&key.profile)),
+            (
+                "plan",
+                match plan {
+                    Some(c) => Json::obj(vec![
+                        ("order_pos", Json::arr_usize(&c.order_pos)),
+                        ("counts", Json::arr_usize(&c.counts)),
+                    ]),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    fn entry_from_json(e: &Json) -> Result<(PlanKey, Option<CachedPlan>)> {
+        let key = PlanKey {
+            layers: e.req("layers")?.as_usize()?,
+            block_fwd_bits: e.req("block_fwd_bits")?.as_u64()?,
+            activation_bytes: e.req("activation_bytes")?.as_usize()?,
+            profile: e.req("profile")?.u64_vec()?,
+        };
+        let plan = match e.req("plan")? {
+            Json::Null => None,
+            p => Some(CachedPlan {
+                order_pos: p.req("order_pos")?.usize_vec()?,
+                counts: p.req("counts")?.usize_vec()?,
+            }),
+        };
+        Ok((key, plan))
+    }
+
+    /// Serialize the cache with entries in the derived [`PlanKey`] order
+    /// — `HashMap` iteration order must never leak into a snapshot.
+    fn to_json(&self) -> Json {
+        let mut entries: Vec<(&PlanKey, &Option<CachedPlan>)> = self.map.iter().collect();
+        entries.sort_by(|a, b| a.0.cmp(b.0));
+        Json::obj(vec![
+            ("hits", Json::u64(self.hits as u64)),
+            ("misses", Json::u64(self.misses as u64)),
+            (
+                "entries",
+                Json::Arr(entries.into_iter().map(|(k, v)| Self::entry_to_json(k, v)).collect()),
+            ),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<PlanCache> {
+        let mut cache = PlanCache {
+            map: HashMap::new(),
+            hits: v.req("hits")?.as_usize()?,
+            misses: v.req("misses")?.as_usize()?,
+        };
+        for e in v.req("entries")?.as_arr()? {
+            let (key, plan) = Self::entry_from_json(e)?;
+            cache.map.insert(key, plan);
+        }
+        Ok(cache)
+    }
+
+    /// Merge entries from an exported cache (see
+    /// [`FleetState::export_plan_cache`]), keeping existing ones; returns
+    /// how many were added.  Hit/miss counters are *not* imported — they
+    /// describe the donor run.  No invalidation is needed: the key
+    /// fingerprints every input the ring search reads (model params,
+    /// hyper fields, per-device speeds/memory, pairwise link rates), so a
+    /// stale entry is unreachable rather than wrong.
+    fn absorb(&mut self, v: &Json) -> Result<usize> {
+        let mut added = 0usize;
+        for e in v.req("entries")?.as_arr()? {
+            let (key, plan) = Self::entry_from_json(e)?;
+            if let std::collections::hash_map::Entry::Vacant(slot) = self.map.entry(key) {
+                slot.insert(plan);
+                added += 1;
+            }
+        }
+        Ok(added)
+    }
+}
+
 /// [`plan_ring`] through the per-run cache.  `devices` must be sorted
 /// ascending (every fleet call site sorts its grant first).  Infeasible
 /// grants are cached too — the callers discard the error message, so a
@@ -327,7 +487,21 @@ fn plan_ring_cached(
         cache.hits += 1;
         return match cached {
             Some(c) => {
-                let order: Vec<usize> = c.order_pos.iter().map(|&p| devices[p]).collect();
+                // A corrupt entry (e.g. an imported cache with positions
+                // past the grant width) fails this plan request, not the
+                // process — the seed indexed `devices[p]` and panicked.
+                let order: Vec<usize> = c
+                    .order_pos
+                    .iter()
+                    .map(|&p| {
+                        devices.get(p).copied().ok_or_else(|| {
+                            Error::Schedule(format!(
+                                "cached plan position {p} outside a {}-device grant",
+                                devices.len()
+                            ))
+                        })
+                    })
+                    .collect::<Result<_>>()?;
                 LayerAssignment::from_counts_for_devices(order, &c.counts, pool_len)
             }
             None => Err(Error::Plan("no feasible layer assignment (cached)".into())),
@@ -339,8 +513,12 @@ fn plan_ring_cached(
             let order_pos: Vec<usize> = assignment
                 .order
                 .iter()
-                .map(|d| devices.binary_search(d).expect("planned device not in grant"))
-                .collect();
+                .map(|d| {
+                    devices.binary_search(d).map_err(|_| {
+                        Error::Schedule(format!("planner returned device {d} outside the grant"))
+                    })
+                })
+                .collect::<Result<_>>()?;
             cache
                 .map
                 .insert(key, Some(CachedPlan { order_pos, counts: assignment.counts() }));
@@ -618,14 +796,255 @@ impl JobExec {
         self.paused = true;
         self.alive.clone()
     }
+
+    /// Serialize the machine's mid-round state.  Everything derivable
+    /// from `(cfg, scenario, spec)` — model meta, LUT, training config,
+    /// wire sizes, planner — is *not* stored; [`JobExec::restore`]
+    /// rebuilds it through the same constructors admission uses.  The
+    /// assignment is stored as `(order, counts)`: the exact inputs
+    /// `LayerAssignment::from_counts_for_devices` (the cache-hit rebuild
+    /// path) consumes.
+    fn snapshot(&self) -> Json {
+        let clock = self.sim.clock_state();
+        Json::obj(vec![
+            ("job", Json::u64(self.job as u64)),
+            ("admitted_bits", Json::u64(self.admitted_s.to_bits())),
+            ("initial_ring", Json::u64(self.initial_ring as u64)),
+            ("segment_width", Json::u64(self.segment_width as u64)),
+            ("rounds_done", Json::u64(self.rounds_done as u64)),
+            ("order", Json::arr_usize(&self.coordinator.assignment.order)),
+            ("counts", Json::arr_usize(&self.coordinator.assignment.counts())),
+            ("alive", Json::arr_usize(&self.alive)),
+            (
+                "pending",
+                Json::Arr(
+                    self.pending
+                        .iter()
+                        .map(|&(at, d)| {
+                            Json::obj(vec![
+                                ("at_bits", Json::u64(at.to_bits())),
+                                ("device", Json::u64(d as u64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("busy_bits", f64_bits_to_json(&self.busy)),
+            ("replans", Json::u64(self.replans as u64)),
+            ("dropped", Json::arr_usize(&self.dropped)),
+            ("preemptions", Json::u64(self.preemptions as u64)),
+            ("resizes", Json::u64(self.resizes as u64)),
+            ("preempt_pending", Json::Bool(self.preempt_pending)),
+            ("paused", Json::Bool(self.paused)),
+            ("clock", clock_to_json(&clock)),
+        ])
+    }
+
+    /// Rebuild the machine from a [`JobExec::snapshot`].  Deterministic
+    /// re-derivation is safe because between events the builder is always
+    /// freshly drained (`drain_chunk` clears all cross-chunk state) and
+    /// the simulator's behavior is fully determined by its clocks — both
+    /// facts the kill-at-every-event battery pins.
+    fn restore(
+        cfg: &FleetConfig,
+        scenario: &Scenario,
+        spec: &JobSpec,
+        v: &Json,
+    ) -> Result<JobExec> {
+        let n = cfg.pool.len();
+        let meta = spec.model_meta();
+        let lut = CostLut::analytic(&meta, LUT_GFLOPS);
+        let block_fwd_s = lut.block_fwd_s;
+        let training = TrainingConfig {
+            rounds: spec.rounds,
+            local_iters: spec.local_iters,
+            unfreeze_interval: 1,
+            initial_depth: 1,
+            seed: job_seed(cfg, spec.id),
+            ..TrainingConfig::default()
+        };
+        let sizes = WireSizes {
+            activation_bytes: meta.activation_bytes(),
+            head_bytes: (meta.head_params * 4).max(4),
+        };
+        let order = v.req("order")?.usize_vec()?;
+        let counts = v.req("counts")?.usize_vec()?;
+        let assignment = LayerAssignment::from_counts_for_devices(order, &counts, n)?;
+        let coordinator =
+            Coordinator::with_assignment_for_cluster(assignment, &meta, &cfg.pool, &training)?;
+        let alive = v.req("alive")?.usize_vec()?;
+        let builder =
+            ScheduleBuilder::new(coordinator.assignment.clone(), sizes, alive.len().max(2));
+        let mut sim = Simulator::with_scenario(cfg.pool.clone(), lut, scenario)?;
+        sim.restore_clocks(&clock_from_json(v.req("clock")?)?)?;
+        let busy = f64_bits_from_json(v.req("busy_bits")?)?;
+        if busy.len() != n {
+            return Err(Error::Schedule(format!(
+                "snapshot busy ledger covers {} of {n} devices",
+                busy.len()
+            )));
+        }
+        let pending = v
+            .req("pending")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                Ok((
+                    f64::from_bits(p.req("at_bits")?.as_u64()?),
+                    p.req("device")?.as_usize()?,
+                ))
+            })
+            .collect::<Result<VecDeque<(f64, usize)>>>()?;
+        Ok(JobExec {
+            job: spec.id,
+            admitted_s: f64::from_bits(v.req("admitted_bits")?.as_u64()?),
+            initial_ring: v.req("initial_ring")?.as_usize()?,
+            segment_width: v.req("segment_width")?.as_usize()?,
+            rounds_done: v.req("rounds_done")?.as_usize()?,
+            meta,
+            training,
+            sizes,
+            block_fwd_s,
+            coordinator,
+            builder,
+            sim,
+            alive,
+            pending,
+            busy,
+            replans: v.req("replans")?.as_usize()?,
+            dropped: v.req("dropped")?.usize_vec()?,
+            preemptions: v.req("preemptions")?.as_usize()?,
+            resizes: v.req("resizes")?.as_usize()?,
+            preempt_pending: v.req("preempt_pending")?.as_bool()?,
+            paused: v.req("paused")?.as_bool()?,
+        })
+    }
+}
+
+/// `f64` slices cross the snapshot as IEEE-754 bit patterns: `Display`
+/// would lose the sign of `-0.0`; bits always round-trip.
+fn f64_bits_to_json(xs: &[f64]) -> Json {
+    Json::Arr(xs.iter().map(|x| Json::u64(x.to_bits())).collect())
+}
+
+fn f64_bits_from_json(v: &Json) -> Result<Vec<f64>> {
+    Ok(v.u64_vec()?.into_iter().map(f64::from_bits).collect())
+}
+
+fn bools_to_json(xs: &[bool]) -> Json {
+    Json::Arr(xs.iter().map(|&b| Json::Bool(b)).collect())
+}
+
+fn bools_from_json(v: &Json) -> Result<Vec<bool>> {
+    v.as_arr()?.iter().map(|b| b.as_bool()).collect()
+}
+
+fn clock_to_json(c: &ClockState) -> Json {
+    Json::obj(vec![
+        ("device_free_bits", f64_bits_to_json(&c.device_free)),
+        (
+            "links",
+            Json::Arr(
+                c.link_free
+                    .iter()
+                    .map(|&(a, b, t)| {
+                        Json::obj(vec![
+                            ("from", Json::u64(a as u64)),
+                            ("to", Json::u64(b as u64)),
+                            ("free_bits", Json::u64(t.to_bits())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("dead", bools_to_json(&c.dead)),
+        ("now_bits", Json::u64(c.now.to_bits())),
+    ])
+}
+
+fn clock_from_json(v: &Json) -> Result<ClockState> {
+    Ok(ClockState {
+        device_free: f64_bits_from_json(v.req("device_free_bits")?)?,
+        link_free: v
+            .req("links")?
+            .as_arr()?
+            .iter()
+            .map(|l| {
+                Ok((
+                    l.req("from")?.as_usize()?,
+                    l.req("to")?.as_usize()?,
+                    f64::from_bits(l.req("free_bits")?.as_u64()?),
+                ))
+            })
+            .collect::<Result<Vec<_>>>()?,
+        dead: bools_from_json(v.req("dead")?)?,
+        now: f64::from_bits(v.req("now_bits")?.as_u64()?),
+    })
+}
+
+/// Report rows cross the snapshot with every `f64` as bits (the row is
+/// part of `canonical_string`, so even a ULP of drift would break the
+/// byte-identity contract).
+fn row_to_json(r: &FleetJobRow) -> Json {
+    Json::obj(vec![
+        ("job", Json::u64(r.job as u64)),
+        ("arrival_bits", Json::u64(r.arrival_s.to_bits())),
+        ("admitted_bits", Json::u64(r.admitted_s.to_bits())),
+        ("completed_bits", Json::u64(r.completed_s.to_bits())),
+        ("ring", Json::u64(r.ring as u64)),
+        ("replans", Json::u64(r.replans as u64)),
+        ("dropped", Json::u64(r.dropped as u64)),
+        ("busy_bits", Json::u64(r.busy_s.to_bits())),
+        ("nominal_bits", Json::u64(r.nominal_s.to_bits())),
+        ("deadline_bits", Json::u64(r.deadline_s.to_bits())),
+        ("deadline_class", Json::str(&r.deadline_class)),
+        ("priority", Json::str(&r.priority)),
+        ("preemptions", Json::u64(r.preemptions as u64)),
+        ("resizes", Json::u64(r.resizes as u64)),
+        ("rejected", Json::Bool(r.rejected)),
+        ("failed", Json::Bool(r.failed)),
+    ])
+}
+
+fn row_from_json(v: &Json) -> Result<FleetJobRow> {
+    Ok(FleetJobRow {
+        job: v.req("job")?.as_usize()?,
+        arrival_s: f64::from_bits(v.req("arrival_bits")?.as_u64()?),
+        admitted_s: f64::from_bits(v.req("admitted_bits")?.as_u64()?),
+        completed_s: f64::from_bits(v.req("completed_bits")?.as_u64()?),
+        ring: v.req("ring")?.as_usize()?,
+        replans: v.req("replans")?.as_usize()?,
+        dropped: v.req("dropped")?.as_usize()?,
+        busy_s: f64::from_bits(v.req("busy_bits")?.as_u64()?),
+        nominal_s: f64::from_bits(v.req("nominal_bits")?.as_u64()?),
+        deadline_s: f64::from_bits(v.req("deadline_bits")?.as_u64()?),
+        deadline_class: v.req("deadline_class")?.as_str()?.to_string(),
+        priority: v.req("priority")?.as_str()?.to_string(),
+        preemptions: v.req("preemptions")?.as_usize()?,
+        resizes: v.req("resizes")?.as_usize()?,
+        rejected: v.req("rejected")?.as_bool()?,
+        failed: v.req("failed")?.as_bool()?,
+    })
 }
 
 /// All mutable state of one [`serve`] run, so the event handlers and the
 /// admission pass can live in named methods instead of one giant loop.
+///
+/// Since the long-lived-service work this is a *streaming* machine: jobs
+/// are pulled from a [`JobSource`] one arrival ahead of the event clock
+/// (never pre-seeded), per-job state is boxed and dropped as soon as the
+/// job retires, and every retired row folds into the bounded-memory
+/// [`FleetAggregates`].  With `retain_rows` set the rows are additionally
+/// kept for a materialized [`FleetReport`] — the differential reference
+/// the streaming aggregates are pinned against.
 struct FleetRun<'a> {
     cfg: &'a FleetConfig,
     policy: &'a dyn AllocationPolicy,
     scenario: Scenario,
+    /// Arrival stream; exactly one un-popped arrival is held in `heap`.
+    source: Box<dyn JobSource>,
+    /// Specs of every job pulled so far (ids are dense: `specs[id].id ==
+    /// id`).
     specs: Vec<JobSpec>,
     heap: BinaryHeap<Event>,
     /// Free device ids, ascending, never dead.
@@ -637,58 +1056,136 @@ struct FleetRun<'a> {
     /// Devices some job detected as dropped (possibly before the
     /// pool-level event fires — jobs drain at round boundaries, which the
     /// event loop reaches ahead of the wall clock).  Only the scripted
-    /// `RANK_DROP` event marks `dead`; this ledger just keeps the
+    /// `Drop` event marks `dead`; this ledger just keeps the
     /// conservation audit exact in the detection window.
     detected: Vec<bool>,
     /// Waiting job ids, ascending (= arrival order): fresh arrivals and
     /// paused jobs awaiting re-admission.
     waiting: Vec<usize>,
-    execs: Vec<Option<JobExec>>,
-    /// Devices staged to return to the pool at a pending `RANK_DONE`
+    execs: Vec<Option<Box<JobExec>>>,
+    /// Devices staged to return to the pool at a pending `Done`
     /// (survivors of finished jobs, grants of failed admissions).
     release_at_done: Vec<Vec<usize>>,
-    rows: Vec<Option<FleetJobRow>>,
+    /// Retired report rows.  In streaming mode a row lives only from its
+    /// creation to its `Done` event (rejections drop immediately); with
+    /// `retain_rows` every row survives for [`FleetRun::into_report`].
+    rows: Vec<Option<Box<FleetJobRow>>>,
+    /// Streaming aggregates: every retired row is folded exactly once.
+    agg: FleetAggregates,
+    /// Per-job flag: the row was folded into `agg` (residual sweeps in
+    /// `into_aggregates` skip these).
+    folded: Vec<bool>,
+    retain_rows: bool,
+    resident_rows: usize,
+    peak_resident_rows: usize,
     pool_busy: Vec<f64>,
     last_done: f64,
 }
 
 impl<'a> FleetRun<'a> {
-    fn new(cfg: &'a FleetConfig, policy: &'a dyn AllocationPolicy) -> Self {
+    fn new(
+        cfg: &'a FleetConfig,
+        policy: &'a dyn AllocationPolicy,
+        source: Box<dyn JobSource>,
+        retain_rows: bool,
+        bucket_width_s: f64,
+    ) -> Result<Self> {
         let n = cfg.pool.len();
         let scenario = cfg.scenario.clone().unwrap_or_else(Scenario::healthy);
-        let specs = JobTrace::synthetic(cfg);
         let mut heap: BinaryHeap<Event> = BinaryHeap::new();
-        for s in &specs {
-            heap.push(Event { t: s.arrival_s, rank: RANK_ARRIVE, id: s.id });
-        }
         for (at, d) in scenario.dropouts() {
-            heap.push(Event { t: at, rank: RANK_DROP, id: d });
+            heap.push(Event { t: at, kind: EventKind::Drop(d) });
         }
-        let jobs = specs.len();
-        FleetRun {
+        let agg = FleetAggregates::new(policy.name(), &scenario.name, n, bucket_width_s);
+        let mut run = FleetRun {
             cfg,
             policy,
             scenario,
-            specs,
+            source,
+            specs: Vec::new(),
             heap,
             free: FreePool::with_all(n),
             plan_cache: PlanCache::default(),
             dead: vec![false; n],
             detected: vec![false; n],
             waiting: Vec::new(),
-            execs: (0..jobs).map(|_| None).collect(),
-            release_at_done: vec![Vec::new(); jobs],
-            rows: vec![None; jobs],
+            execs: Vec::new(),
+            release_at_done: Vec::new(),
+            rows: Vec::new(),
+            agg,
+            folded: Vec::new(),
+            retain_rows,
+            resident_rows: 0,
+            peak_resident_rows: 0,
             pool_busy: vec![0.0f64; n],
             last_done: 0.0,
+        };
+        run.pull_next_arrival()?;
+        Ok(run)
+    }
+
+    /// Pull the next job from the source into the tables and the heap.
+    /// Holding exactly **one** pending arrival preserves pop order versus
+    /// pre-seeding the whole trace: arrivals are nondecreasing in time
+    /// with strictly ascending ids, `Arrive` is the last rank at equal
+    /// times, and the successor is pushed while handling its predecessor
+    /// — before the next pop — so the held arrival is always the
+    /// earliest un-emitted event of its kind.
+    fn pull_next_arrival(&mut self) -> Result<()> {
+        let Some(spec) = self.source.next_job()? else {
+            return Ok(());
+        };
+        if spec.id != self.specs.len() {
+            return Err(Error::Schedule(format!(
+                "job source emitted id {} where {} was expected",
+                spec.id,
+                self.specs.len()
+            )));
+        }
+        if !spec.arrival_s.is_finite()
+            || spec.arrival_s < 0.0
+            || self.specs.last().map_or(false, |p| spec.arrival_s < p.arrival_s)
+        {
+            return Err(Error::Schedule(format!(
+                "job {} arrival {} is not a nondecreasing finite time",
+                spec.id, spec.arrival_s
+            )));
+        }
+        self.heap.push(Event { t: spec.arrival_s, kind: EventKind::Arrive(spec.id) });
+        self.specs.push(spec);
+        self.execs.push(None);
+        self.release_at_done.push(Vec::new());
+        self.rows.push(None);
+        self.folded.push(false);
+        Ok(())
+    }
+
+    /// Retire a row: fold it into the streaming aggregates and decide
+    /// whether the struct itself stays resident.  `keep` marks rows a
+    /// later `Done` event still reads (finished/failed jobs; rejections
+    /// have no completion event and pass `false`).
+    fn store_row(&mut self, id: usize, row: FleetJobRow, keep: bool) {
+        debug_assert!(!self.folded[id] && self.rows[id].is_none(), "job {id} retired twice");
+        self.agg.observe(&row);
+        self.folded[id] = true;
+        if keep || self.retain_rows {
+            self.rows[id] = Some(Box::new(row));
+            self.resident_rows += 1;
+            if self.resident_rows > self.peak_resident_rows {
+                self.peak_resident_rows = self.resident_rows;
+            }
         }
     }
 
     /// Fold a finished (or failed) exec into its report row, stage its
     /// survivors for release, and enqueue the completion event at the
-    /// job's clock.
-    fn finish_job(&mut self, id: usize, failed: bool) {
-        let exec = self.execs[id].take().expect("finish_job without execution state");
+    /// job's clock.  A missing execution state is a scheduler bug (or a
+    /// forged snapshot) — it fails the run with an error instead of the
+    /// seed's process-killing `expect`.
+    fn finish_job(&mut self, id: usize, failed: bool) -> Result<()> {
+        let Some(exec) = self.execs.get_mut(id).and_then(Option::take) else {
+            return Err(Error::Schedule(format!("job {id} finished without execution state")));
+        };
         let spec = &self.specs[id];
         // Pause/resume must never skip or repeat a round (the chunk
         // barrier holds one weight version): a *completed* job ran its
@@ -703,7 +1200,7 @@ impl<'a> FleetRun<'a> {
         for (d, b) in exec.busy.iter().enumerate() {
             self.pool_busy[d] += b;
         }
-        self.rows[id] = Some(FleetJobRow {
+        let row = FleetJobRow {
             job: id,
             arrival_s: spec.arrival_s,
             admitted_s: exec.admitted_s,
@@ -720,9 +1217,11 @@ impl<'a> FleetRun<'a> {
             resizes: exec.resizes,
             rejected: false,
             failed,
-        });
+        };
+        self.store_row(id, row, true);
         self.release_at_done[id] = exec.alive;
-        self.heap.push(Event { t: done_s, rank: RANK_DONE, id });
+        self.heap.push(Event { t: done_s, kind: EventKind::Done(id) });
+        Ok(())
     }
 
     /// A failed admission (the grant cannot host the model): record the
@@ -731,7 +1230,7 @@ impl<'a> FleetRun<'a> {
     fn fail_admission(&mut self, id: usize, devices: Vec<usize>, now: f64) {
         let spec = &self.specs[id];
         let lut = CostLut::analytic(&spec.model_meta(), LUT_GFLOPS);
-        self.rows[id] = Some(FleetJobRow {
+        let row = FleetJobRow {
             job: id,
             arrival_s: spec.arrival_s,
             admitted_s: now,
@@ -748,9 +1247,10 @@ impl<'a> FleetRun<'a> {
             resizes: 0,
             rejected: false,
             failed: true,
-        });
+        };
+        self.store_row(id, row, true);
         self.release_at_done[id] = devices;
-        self.heap.push(Event { t: now, rank: RANK_DONE, id });
+        self.heap.push(Event { t: now, kind: EventKind::Done(id) });
     }
 
     fn handle_done(&mut self, id: usize, now: f64) {
@@ -764,6 +1264,11 @@ impl<'a> FleetRun<'a> {
         {
             self.last_done = self.last_done.max(now);
         }
+        // The completion event was the row's last reader: in streaming
+        // mode its memory is released here (already folded into `agg`).
+        if !self.retain_rows && self.rows[id].take().is_some() {
+            self.resident_rows -= 1;
+        }
         let hs = std::mem::take(&mut self.release_at_done[id]);
         for d in hs {
             if !self.dead[d] {
@@ -776,9 +1281,11 @@ impl<'a> FleetRun<'a> {
     /// Returns true when the pool state changed (a pause released
     /// devices), so the caller runs an admission pass.
     fn handle_step(&mut self, id: usize) -> Result<bool> {
-        let exec = self.execs[id]
-            .as_mut()
-            .expect("step event for a job with no execution state");
+        let Some(exec) = self.execs.get_mut(id).and_then(|e| e.as_mut()) else {
+            return Err(Error::Schedule(format!(
+                "step event for job {id} with no execution state"
+            )));
+        };
         debug_assert!(!exec.paused, "step event for a paused job");
         if self.cfg.preemption && exec.preempt_pending {
             let freed = exec.pause();
@@ -794,14 +1301,14 @@ impl<'a> FleetRun<'a> {
         }
         let spec = &self.specs[id];
         let outcome = exec.step(self.cfg, spec, &mut self.plan_cache)?;
-        let next = Event { t: exec.sim.now, rank: RANK_STEP, id };
+        let next = Event { t: exec.sim.now, kind: EventKind::Step(id) };
         for &d in &exec.dropped {
             self.detected[d] = true;
         }
         match outcome {
             StepOutcome::Continue => self.heap.push(next),
-            StepOutcome::Done => self.finish_job(id, false),
-            StepOutcome::Failed => self.finish_job(id, true),
+            StepOutcome::Done => self.finish_job(id, false)?,
+            StepOutcome::Failed => self.finish_job(id, true)?,
         }
         Ok(false)
     }
@@ -865,21 +1372,34 @@ impl<'a> FleetRun<'a> {
                 }
             }
             self.waiting.remove(wpos);
-            if self.execs[a.job].is_some() {
+            if self.execs.get(a.job).map_or(false, |e| e.is_some()) {
                 // A paused job: resume on the (possibly resized) grant.
+                // The exec is re-fetched fallibly on each use — a state
+                // that vanished mid-pass is a scheduler bug reported as
+                // an error, not an unwrap panic.
                 let resumed = {
-                    let exec = self.execs[a.job].as_mut().unwrap();
+                    let Some(exec) = self.execs.get_mut(a.job).and_then(|e| e.as_mut()) else {
+                        return Err(Error::Schedule(format!(
+                            "job {} lost its execution state during resume",
+                            a.job
+                        )));
+                    };
                     exec.resume(self.cfg, &self.scenario, &a.devices, now, &mut self.plan_cache)?
                 };
                 if resumed {
-                    self.heap.push(Event { t: now, rank: RANK_STEP, id: a.job });
+                    self.heap.push(Event { t: now, kind: EventKind::Step(a.job) });
                 } else {
                     // The resized grant cannot host the model: the job
                     // fails here, its prior work already billed.
-                    let exec = self.execs[a.job].as_mut().unwrap();
+                    let Some(exec) = self.execs.get_mut(a.job).and_then(|e| e.as_mut()) else {
+                        return Err(Error::Schedule(format!(
+                            "job {} lost its execution state during resume",
+                            a.job
+                        )));
+                    };
                     exec.alive = a.devices;
                     exec.sim.now = exec.sim.now.max(now);
-                    self.finish_job(a.job, true);
+                    self.finish_job(a.job, true)?;
                 }
             } else {
                 match JobExec::admit(
@@ -891,8 +1411,8 @@ impl<'a> FleetRun<'a> {
                     &mut self.plan_cache,
                 )? {
                     Some(exec) => {
-                        self.execs[a.job] = Some(exec);
-                        self.heap.push(Event { t: now, rank: RANK_STEP, id: a.job });
+                        self.execs[a.job] = Some(Box::new(exec));
+                        self.heap.push(Event { t: now, kind: EventKind::Step(a.job) });
                     }
                     None => self.fail_admission(a.job, a.devices, now),
                 }
@@ -941,7 +1461,7 @@ impl<'a> FleetRun<'a> {
             self.waiting.remove(wpos);
             let spec = &self.specs[id];
             let lut = CostLut::analytic(&spec.model_meta(), LUT_GFLOPS);
-            self.rows[id] = Some(FleetJobRow {
+            let row = FleetJobRow {
                 job: id,
                 arrival_s: spec.arrival_s,
                 admitted_s: -1.0,
@@ -958,7 +1478,10 @@ impl<'a> FleetRun<'a> {
                 resizes: 0,
                 rejected: true,
                 failed: true,
-            });
+            };
+            // No completion event will ever read a rejected row: it is
+            // folded and (in streaming mode) dropped right here.
+            self.store_row(id, row, false);
         }
         Ok(())
     }
@@ -1005,7 +1528,9 @@ impl<'a> FleetRun<'a> {
                     self.policy.name()
                 )));
             }
-            self.execs[id].as_mut().unwrap().preempt_pending = true;
+            if let Some(exec) = self.execs.get_mut(id).and_then(|e| e.as_mut()) {
+                exec.preempt_pending = true;
+            }
         }
         Ok(())
     }
@@ -1045,7 +1570,55 @@ impl<'a> FleetRun<'a> {
         }
     }
 
-    fn into_report(self) -> FleetReport {
+    /// One event, fully handled: the body of the old [`serve`] loop.
+    fn dispatch(&mut self, ev: Event) -> Result<()> {
+        let now = ev.t;
+        let pool_changed = match ev.kind {
+            EventKind::Drop(d) => {
+                let Some(slot) = self.dead.get_mut(d) else {
+                    return Err(Error::Schedule(format!(
+                        "dropout event for device {d} outside the pool"
+                    )));
+                };
+                *slot = true;
+                self.free.remove(d);
+                true
+            }
+            EventKind::Done(id) => {
+                self.handle_done(id, now);
+                true
+            }
+            EventKind::Step(id) => self.handle_step(id)?,
+            EventKind::Arrive(id) => {
+                self.waiting.push(id);
+                self.waiting.sort_unstable();
+                self.pull_next_arrival()?;
+                true
+            }
+        };
+        if pool_changed {
+            self.admission_pass(now)?;
+        }
+        #[cfg(debug_assertions)]
+        self.check_conservation();
+        Ok(())
+    }
+
+    fn stats(&self) -> ServeStats {
+        ServeStats {
+            plans: self.plan_cache.hits + self.plan_cache.misses,
+            plan_cache_hits: self.plan_cache.hits,
+            plan_cache_misses: self.plan_cache.misses,
+            peak_resident_rows: self.peak_resident_rows,
+        }
+    }
+
+    fn into_report(self) -> Result<FleetReport> {
+        if !self.retain_rows {
+            return Err(Error::Schedule(
+                "streaming serve retains no rows; use into_aggregates".into(),
+            ));
+        }
         let FleetRun {
             cfg,
             policy,
@@ -1064,7 +1637,7 @@ impl<'a> FleetRun<'a> {
                 // Finished/failed/rejected jobs folded their busy ledger
                 // in when the row was built; their exec is gone.
                 debug_assert!(exec.is_none(), "job {id} has both a row and live state");
-                out_rows.push(row);
+                out_rows.push(*row);
                 continue;
             }
             let s = &specs[id];
@@ -1126,7 +1699,7 @@ impl<'a> FleetRun<'a> {
                 },
             });
         }
-        FleetReport {
+        Ok(FleetReport {
             policy: policy.name().to_string(),
             scenario: scenario.name.clone(),
             pool_devices: cfg.pool.len(),
@@ -1134,7 +1707,295 @@ impl<'a> FleetRun<'a> {
             horizon_s: last_done,
             pool_device_busy: pool_busy,
             dead_devices: dead.iter().filter(|&&d| d).count(),
+        })
+    }
+
+    /// Finalize the bounded-memory aggregates.  The residual sweep
+    /// mirrors [`FleetRun::into_report`] row for row — same residual
+    /// rows, same id-ascending busy/horizon folds — so on identical
+    /// trajectories the aggregates match the materialized report
+    /// *bitwise* (ExactSum makes the shared sums order-independent on
+    /// top of that).
+    fn into_aggregates(mut self) -> FleetAggregates {
+        let specs = std::mem::take(&mut self.specs);
+        let execs = std::mem::take(&mut self.execs);
+        for (id, exec) in execs.into_iter().enumerate() {
+            if self.folded[id] {
+                continue;
+            }
+            let s = &specs[id];
+            let row = match exec {
+                Some(e) => {
+                    debug_assert!(e.paused, "job {id} still running after the heap drained");
+                    for (d, b) in e.busy.iter().enumerate() {
+                        self.pool_busy[d] += b;
+                    }
+                    if e.busy.iter().any(|&b| b > 0.0) {
+                        self.last_done = self.last_done.max(e.sim.now);
+                    }
+                    FleetJobRow {
+                        job: id,
+                        arrival_s: s.arrival_s,
+                        admitted_s: e.admitted_s,
+                        completed_s: -1.0,
+                        ring: e.initial_ring,
+                        replans: e.replans,
+                        dropped: e.dropped.len(),
+                        busy_s: e.busy.iter().sum(),
+                        nominal_s: s.nominal_service_s(e.block_fwd_s),
+                        deadline_s: s.deadline_s(e.block_fwd_s),
+                        deadline_class: s.deadline.name().to_string(),
+                        priority: s.priority.name().to_string(),
+                        preemptions: e.preemptions,
+                        resizes: e.resizes,
+                        rejected: false,
+                        failed: true,
+                    }
+                }
+                None => FleetJobRow {
+                    job: id,
+                    arrival_s: s.arrival_s,
+                    admitted_s: -1.0,
+                    completed_s: -1.0,
+                    ring: 0,
+                    replans: 0,
+                    dropped: 0,
+                    busy_s: 0.0,
+                    nominal_s: 0.0,
+                    deadline_s: 0.0,
+                    deadline_class: s.deadline.name().to_string(),
+                    priority: s.priority.name().to_string(),
+                    preemptions: 0,
+                    resizes: 0,
+                    rejected: false,
+                    failed: true,
+                },
+            };
+            self.agg.observe(&row);
         }
+        let dead_devices = self.dead.iter().filter(|&&d| d).count();
+        let mut agg = self.agg;
+        agg.finalize(self.last_done, &self.pool_busy, dead_devices, self.peak_resident_rows);
+        agg
+    }
+
+    /// Serialize the full mid-event state.  Every `f64` crosses as bits;
+    /// the heap is written in chronological (pop) order — never
+    /// `BinaryHeap` internal order, and never via `into_sorted_vec`
+    /// (whose reversed `Ord` would emit newest-first).
+    fn snapshot(&self) -> Result<Json> {
+        let mut events: Vec<&Event> = self.heap.iter().collect();
+        events.sort_by(|a, b| event_chronological(a, b));
+        let events_json: Vec<Json> = events
+            .into_iter()
+            .map(|e| {
+                Json::obj(vec![
+                    ("t_bits", Json::u64(e.t.to_bits())),
+                    ("kind", Json::str(e.kind.name())),
+                    ("id", Json::u64(e.kind.id() as u64)),
+                ])
+            })
+            .collect();
+        let folded_ids: Vec<usize> = self
+            .folded
+            .iter()
+            .enumerate()
+            .filter_map(|(i, &f)| f.then_some(i))
+            .collect();
+        let mut release = Vec::new();
+        for (id, hs) in self.release_at_done.iter().enumerate() {
+            if !hs.is_empty() {
+                release.push(Json::obj(vec![
+                    ("job", Json::u64(id as u64)),
+                    ("devices", Json::arr_usize(hs)),
+                ]));
+            }
+        }
+        Ok(Json::obj(vec![
+            ("version", Json::u64(FLEET_SNAPSHOT_VERSION)),
+            ("policy", Json::str(self.policy.name())),
+            ("seed", Json::u64(self.cfg.seed)),
+            ("streaming", Json::Bool(!self.retain_rows)),
+            ("events", Json::Arr(events_json)),
+            ("source", self.source.snapshot()?),
+            ("specs", Json::Arr(self.specs.iter().map(|s| s.to_json()).collect())),
+            ("free", Json::arr_usize(self.free.as_slice())),
+            ("dead", bools_to_json(&self.dead)),
+            ("detected", bools_to_json(&self.detected)),
+            ("waiting", Json::arr_usize(&self.waiting)),
+            (
+                "execs",
+                Json::Arr(self.execs.iter().flatten().map(|e| e.snapshot()).collect()),
+            ),
+            ("release", Json::Arr(release)),
+            (
+                "rows",
+                Json::Arr(self.rows.iter().flatten().map(|r| row_to_json(r)).collect()),
+            ),
+            ("folded", Json::arr_usize(&folded_ids)),
+            ("pool_busy_bits", f64_bits_to_json(&self.pool_busy)),
+            ("last_done_bits", Json::u64(self.last_done.to_bits())),
+            ("plan_cache", self.plan_cache.to_json()),
+            ("agg", self.agg.to_json()),
+            ("resident_rows", Json::u64(self.resident_rows as u64)),
+            ("peak_resident_rows", Json::u64(self.peak_resident_rows as u64)),
+        ]))
+    }
+
+    /// Rebuild a run from a [`FleetRun::snapshot`] under the *same*
+    /// config and policy (both are checked — a snapshot is resumable only
+    /// against the configuration that produced it).
+    fn restore(
+        cfg: &'a FleetConfig,
+        policy: &'a dyn AllocationPolicy,
+        v: &Json,
+    ) -> Result<FleetRun<'a>> {
+        cfg.validate()?;
+        let version = v.req("version")?.as_u64()?;
+        if version != FLEET_SNAPSHOT_VERSION {
+            return Err(Error::Schedule(format!(
+                "fleet snapshot version {version} (this build reads {FLEET_SNAPSHOT_VERSION})"
+            )));
+        }
+        let snap_policy = v.req("policy")?.as_str()?;
+        if snap_policy != policy.name() {
+            return Err(Error::Schedule(format!(
+                "snapshot was taken under policy {snap_policy}, resuming under {}",
+                policy.name()
+            )));
+        }
+        let snap_seed = v.req("seed")?.as_u64()?;
+        if snap_seed != cfg.seed {
+            return Err(Error::Schedule(format!(
+                "snapshot was taken under seed {snap_seed}, resuming under {}",
+                cfg.seed
+            )));
+        }
+        let streaming = v.req("streaming")?.as_bool()?;
+        let n = cfg.pool.len();
+        let scenario = cfg.scenario.clone().unwrap_or_else(Scenario::healthy);
+        let source = source_from_snapshot(cfg, v.req("source")?)?;
+        let specs: Vec<JobSpec> = v
+            .req("specs")?
+            .as_arr()?
+            .iter()
+            .map(JobSpec::from_json)
+            .collect::<Result<_>>()?;
+        for (i, s) in specs.iter().enumerate() {
+            if s.id != i {
+                return Err(Error::Schedule(format!(
+                    "snapshot spec {i} carries id {} (ids must be dense)",
+                    s.id
+                )));
+            }
+        }
+        if source.emitted() != specs.len() {
+            return Err(Error::Schedule(format!(
+                "snapshot source emitted {} jobs but stores {} specs",
+                source.emitted(),
+                specs.len()
+            )));
+        }
+        let jobs = specs.len();
+        let mut heap: BinaryHeap<Event> = BinaryHeap::new();
+        for e in v.req("events")?.as_arr()? {
+            let t = f64::from_bits(e.req("t_bits")?.as_u64()?);
+            let kind = EventKind::from_parts(e.req("kind")?.as_str()?, e.req("id")?.as_usize()?)?;
+            let bound = match kind {
+                EventKind::Drop(d) => (d, n, "device"),
+                EventKind::Done(j) | EventKind::Step(j) | EventKind::Arrive(j) => {
+                    (j, jobs, "job")
+                }
+            };
+            if bound.0 >= bound.1 || !t.is_finite() {
+                return Err(Error::Schedule(format!(
+                    "snapshot event {} {} {} out of range (t {t})",
+                    kind.name(),
+                    bound.2,
+                    bound.0
+                )));
+            }
+            heap.push(Event { t, kind });
+        }
+        let free_ids = v.req("free")?.usize_vec()?;
+        if !free_ids.windows(2).all(|w| w[0] < w[1]) || free_ids.iter().any(|&d| d >= n) {
+            return Err(Error::Schedule("snapshot free list not sorted within the pool".into()));
+        }
+        let dead = bools_from_json(v.req("dead")?)?;
+        let detected = bools_from_json(v.req("detected")?)?;
+        if dead.len() != n || detected.len() != n {
+            return Err(Error::Schedule("snapshot device flags do not cover the pool".into()));
+        }
+        let waiting = v.req("waiting")?.usize_vec()?;
+        if waiting.iter().any(|&j| j >= jobs) {
+            return Err(Error::Schedule("snapshot waiting queue references unknown jobs".into()));
+        }
+        let mut execs: Vec<Option<Box<JobExec>>> = (0..jobs).map(|_| None).collect();
+        for ej in v.req("execs")?.as_arr()? {
+            let id = ej.req("job")?.as_usize()?;
+            if id >= jobs || execs[id].is_some() {
+                return Err(Error::Schedule(format!("snapshot exec for invalid job {id}")));
+            }
+            execs[id] = Some(Box::new(JobExec::restore(cfg, &scenario, &specs[id], ej)?));
+        }
+        let mut release_at_done: Vec<Vec<usize>> = vec![Vec::new(); jobs];
+        for r in v.req("release")?.as_arr()? {
+            let id = r.req("job")?.as_usize()?;
+            if id >= jobs {
+                return Err(Error::Schedule(format!("snapshot release for unknown job {id}")));
+            }
+            release_at_done[id] = r.req("devices")?.usize_vec()?;
+        }
+        let mut rows: Vec<Option<Box<FleetJobRow>>> = (0..jobs).map(|_| None).collect();
+        let mut resident = 0usize;
+        for rj in v.req("rows")?.as_arr()? {
+            let row = row_from_json(rj)?;
+            if row.job >= jobs || rows[row.job].is_some() {
+                return Err(Error::Schedule(format!("snapshot row for invalid job {}", row.job)));
+            }
+            resident += 1;
+            rows[row.job] = Some(Box::new(row));
+        }
+        let mut folded = vec![false; jobs];
+        for id in v.req("folded")?.usize_vec()? {
+            if id >= jobs {
+                return Err(Error::Schedule(format!("snapshot folded flag for unknown job {id}")));
+            }
+            folded[id] = true;
+        }
+        let pool_busy = f64_bits_from_json(v.req("pool_busy_bits")?)?;
+        if pool_busy.len() != n {
+            return Err(Error::Schedule("snapshot busy ledger does not cover the pool".into()));
+        }
+        let resident_rows = v.req("resident_rows")?.as_usize()?;
+        if resident_rows != resident {
+            return Err(Error::Schedule(format!(
+                "snapshot claims {resident_rows} resident rows but stores {resident}"
+            )));
+        }
+        Ok(FleetRun {
+            cfg,
+            policy,
+            scenario,
+            source,
+            specs,
+            heap,
+            free: FreePool { ids: free_ids },
+            plan_cache: PlanCache::from_json(v.req("plan_cache")?)?,
+            dead,
+            detected,
+            waiting,
+            execs,
+            release_at_done,
+            rows,
+            agg: FleetAggregates::from_json(v.req("agg")?)?,
+            folded,
+            retain_rows: !streaming,
+            resident_rows,
+            peak_resident_rows: v.req("peak_resident_rows")?.as_usize()?,
+            pool_busy,
+            last_done: f64::from_bits(v.req("last_done_bits")?.as_u64()?),
+        })
     }
 }
 
@@ -1149,6 +2010,136 @@ pub struct ServeStats {
     pub plan_cache_hits: usize,
     /// Requests that ran the full ring-order search.
     pub plan_cache_misses: usize,
+    /// High-water mark of concurrently resident [`FleetJobRow`] structs.
+    /// Streaming mode bounds this by the in-flight job count; the
+    /// materialized path grows it to the full trace.
+    pub peak_resident_rows: usize,
+}
+
+/// Default quantile-sketch bucket width for streaming serves: one mean
+/// interarrival of the configured trace — coarse enough to keep the
+/// sketch tiny, fine enough that the pinned `p95 ≤ exact + width` bound
+/// stays informative at fleet scale.
+pub fn stream_bucket_width_s(cfg: &FleetConfig) -> f64 {
+    cfg.mean_interarrival_s.max(1e-6)
+}
+
+/// A long-lived, resumable fleet serve: the event loop of [`serve`]
+/// exposed one event at a time, with [`FleetState::snapshot`] /
+/// [`FleetState::resume`] serializing the complete mid-run state —
+/// event heap, per-job execution machines, busy ledgers, pending
+/// dropouts, RNG streams, plan cache, streaming aggregates — such that
+/// stop-at-any-event + resume replays the uninterrupted run
+/// byte-identically (`FleetReport::canonical_string` equality, pinned by
+/// `tests/fleet_restore.rs`).
+pub struct FleetState<'a> {
+    run: FleetRun<'a>,
+}
+
+impl<'a> FleetState<'a> {
+    /// Materialized service over the configured source ([`JobTrace`]
+    /// synthetic generator, or the `trace_path` JSONL stream when set).
+    pub fn new(cfg: &'a FleetConfig, policy: &'a dyn AllocationPolicy) -> Result<FleetState<'a>> {
+        cfg.validate()?;
+        let source = default_source(cfg)?;
+        Ok(FleetState {
+            run: FleetRun::new(cfg, policy, source, true, stream_bucket_width_s(cfg))?,
+        })
+    }
+
+    /// Materialized service over an explicit [`JobSource`].
+    pub fn with_source(
+        cfg: &'a FleetConfig,
+        policy: &'a dyn AllocationPolicy,
+        source: Box<dyn JobSource>,
+    ) -> Result<FleetState<'a>> {
+        cfg.validate()?;
+        Ok(FleetState {
+            run: FleetRun::new(cfg, policy, source, true, stream_bucket_width_s(cfg))?,
+        })
+    }
+
+    /// Bounded-memory service: rows retire into [`FleetAggregates`] as
+    /// soon as their completion event fires, so resident state scales
+    /// with the *in-flight* job count, not the trace length.  No
+    /// [`FleetReport`] is available ([`FleetState::into_report`] errors);
+    /// finish with [`FleetState::into_aggregates`].
+    pub fn streaming(
+        cfg: &'a FleetConfig,
+        policy: &'a dyn AllocationPolicy,
+    ) -> Result<FleetState<'a>> {
+        cfg.validate()?;
+        let source = default_source(cfg)?;
+        Ok(FleetState {
+            run: FleetRun::new(cfg, policy, source, false, stream_bucket_width_s(cfg))?,
+        })
+    }
+
+    /// Pop and fully handle one event; `Ok(false)` when the stream is
+    /// drained.  Snapshots taken between calls are exact.
+    pub fn step_event(&mut self) -> Result<bool> {
+        let Some(ev) = self.run.heap.pop() else {
+            return Ok(false);
+        };
+        self.run.dispatch(ev)?;
+        Ok(true)
+    }
+
+    /// Drive the service until the event stream drains.
+    pub fn run_to_end(&mut self) -> Result<()> {
+        while self.step_event()? {}
+        Ok(())
+    }
+
+    /// Serialize the complete mid-run state (see [`FLEET_SNAPSHOT_VERSION`]
+    /// for the compatibility rule).  Every float crosses as IEEE-754 bit
+    /// patterns, so the document text itself round-trips losslessly.
+    pub fn snapshot(&self) -> Result<Json> {
+        self.run.snapshot()
+    }
+
+    /// Rebuild a service from a [`FleetState::snapshot`] under the same
+    /// config and policy.  The restored state replays the remainder of
+    /// the run byte-identically to the uninterrupted original.
+    pub fn resume(
+        cfg: &'a FleetConfig,
+        policy: &'a dyn AllocationPolicy,
+        snapshot: &Json,
+    ) -> Result<FleetState<'a>> {
+        Ok(FleetState { run: FleetRun::restore(cfg, policy, snapshot)? })
+    }
+
+    /// Serving-side counters so far (plan cache, resident-row peak).
+    pub fn stats(&self) -> ServeStats {
+        self.run.stats()
+    }
+
+    /// Export the ring-plan cache for reuse by a later run over the same
+    /// pool hardware.  The cache key fingerprints every input the ring
+    /// search reads (model size, planner costs, per-device speeds and
+    /// memory, pairwise link rates), so entries never need invalidation:
+    /// a changed pool simply misses.
+    pub fn export_plan_cache(&self) -> Json {
+        self.run.plan_cache.to_json()
+    }
+
+    /// Merge a previously exported plan cache into this run; returns how
+    /// many entries were added.  Cached plans are bit-identical to fresh
+    /// searches (pinned by the plan-cache test), so importing never
+    /// changes results — only skips searches.
+    pub fn import_plan_cache(&mut self, exported: &Json) -> Result<usize> {
+        self.run.plan_cache.absorb(exported)
+    }
+
+    /// The materialized [`FleetReport`]; errors on a streaming service.
+    pub fn into_report(self) -> Result<FleetReport> {
+        self.run.into_report()
+    }
+
+    /// Finalize into the bounded-memory aggregates (works in both modes).
+    pub fn into_aggregates(self) -> FleetAggregates {
+        self.run.into_aggregates()
+    }
 }
 
 /// Run the configured job stream through `policy` over the shared pool
@@ -1165,39 +2156,25 @@ pub fn serve_with_stats(
     cfg: &FleetConfig,
     policy: &dyn AllocationPolicy,
 ) -> Result<(FleetReport, ServeStats)> {
-    cfg.validate()?;
-    let mut run = FleetRun::new(cfg, policy);
-    while let Some(ev) = run.heap.pop() {
-        let now = ev.t;
-        let pool_changed = match ev.rank {
-            RANK_DROP => {
-                run.dead[ev.id] = true;
-                run.free.remove(ev.id);
-                true
-            }
-            RANK_DONE => {
-                run.handle_done(ev.id, now);
-                true
-            }
-            RANK_STEP => run.handle_step(ev.id)?,
-            _ => {
-                run.waiting.push(ev.id);
-                run.waiting.sort_unstable();
-                true
-            }
-        };
-        if pool_changed {
-            run.admission_pass(now)?;
-        }
-        #[cfg(debug_assertions)]
-        run.check_conservation();
-    }
-    let stats = ServeStats {
-        plans: run.plan_cache.hits + run.plan_cache.misses,
-        plan_cache_hits: run.plan_cache.hits,
-        plan_cache_misses: run.plan_cache.misses,
-    };
-    Ok((run.into_report(), stats))
+    let mut state = FleetState::new(cfg, policy)?;
+    state.run_to_end()?;
+    let stats = state.stats();
+    Ok((state.into_report()?, stats))
+}
+
+/// Bounded-memory serve: identical trajectory to [`serve`], but rows
+/// stream into [`FleetAggregates`] instead of materializing a report.
+/// The aggregates match the materialized run's [`FleetReport`] exactly
+/// (counts and sums bitwise; p95 within one sketch bucket) — pinned by
+/// `tests/fleet_restore.rs`.
+pub fn serve_streaming(
+    cfg: &FleetConfig,
+    policy: &dyn AllocationPolicy,
+) -> Result<(FleetAggregates, ServeStats)> {
+    let mut state = FleetState::streaming(cfg, policy)?;
+    state.run_to_end()?;
+    let stats = state.stats();
+    Ok((state.into_aggregates(), stats))
 }
 
 // --------------------------------------------------------------- legacy
@@ -1377,10 +2354,10 @@ pub fn serve_reference(cfg: &FleetConfig, policy: &dyn AllocationPolicy) -> Resu
 
     let mut heap: BinaryHeap<Event> = BinaryHeap::new();
     for s in &specs {
-        heap.push(Event { t: s.arrival_s, rank: RANK_ARRIVE, id: s.id });
+        heap.push(Event { t: s.arrival_s, kind: EventKind::Arrive(s.id) });
     }
     for (at, d) in scenario.dropouts() {
-        heap.push(Event { t: at, rank: RANK_DROP, id: d });
+        heap.push(Event { t: at, kind: EventKind::Drop(d) });
     }
 
     let mut free: Vec<usize> = (0..n).collect();
@@ -1393,19 +2370,19 @@ pub fn serve_reference(cfg: &FleetConfig, policy: &dyn AllocationPolicy) -> Resu
 
     while let Some(ev) = heap.pop() {
         let now = ev.t;
-        match ev.rank {
-            RANK_DROP => {
-                dead[ev.id] = true;
-                free.retain(|&x| x != ev.id);
+        match ev.kind {
+            EventKind::Drop(d) => {
+                dead[d] = true;
+                free.retain(|&x| x != d);
             }
-            RANK_DONE => {
-                if rows[ev.id]
+            EventKind::Done(id) => {
+                if rows[id]
                     .as_ref()
                     .map_or(false, |r| !r.failed || r.busy_s > 0.0)
                 {
                     last_done = last_done.max(now);
                 }
-                let hs = std::mem::take(&mut held[ev.id]);
+                let hs = std::mem::take(&mut held[id]);
                 for d in hs {
                     if !dead[d] {
                         free.push(d);
@@ -1413,7 +2390,9 @@ pub fn serve_reference(cfg: &FleetConfig, policy: &dyn AllocationPolicy) -> Resu
                 }
                 free.sort_unstable();
             }
-            _ => waiting.push(ev.id),
+            // The legacy path never schedules round steps; arrivals (and
+            // nothing else) enter the waiting queue.
+            EventKind::Step(j) | EventKind::Arrive(j) => waiting.push(j),
         }
         if waiting.is_empty() || free.is_empty() {
             continue;
@@ -1475,7 +2454,7 @@ pub fn serve_reference(cfg: &FleetConfig, policy: &dyn AllocationPolicy) -> Resu
                 failed: run.failed,
             });
             held[a.job] = run.survivors;
-            heap.push(Event { t: run.completed_s, rank: RANK_DONE, id: a.job });
+            heap.push(Event { t: run.completed_s, kind: EventKind::Done(a.job) });
         }
     }
 
@@ -1527,25 +2506,47 @@ mod tests {
 
     #[test]
     fn event_order_is_drop_done_step_arrive_at_equal_times() {
+        // Golden: the seed's `(time, rank, id)` pop order, now expressed
+        // through `EventKind` — any re-rank of the variants breaks this.
         let mut h: BinaryHeap<Event> = BinaryHeap::new();
-        h.push(Event { t: 1.0, rank: RANK_ARRIVE, id: 0 });
-        h.push(Event { t: 1.0, rank: RANK_DROP, id: 3 });
-        h.push(Event { t: 1.0, rank: RANK_STEP, id: 5 });
-        h.push(Event { t: 1.0, rank: RANK_DONE, id: 2 });
-        h.push(Event { t: 0.5, rank: RANK_ARRIVE, id: 9 });
-        let order: Vec<(u8, usize)> = std::iter::from_fn(|| h.pop())
-            .map(|e| (e.rank, e.id))
-            .collect();
+        h.push(Event { t: 1.0, kind: EventKind::Arrive(0) });
+        h.push(Event { t: 1.0, kind: EventKind::Drop(3) });
+        h.push(Event { t: 1.0, kind: EventKind::Step(5) });
+        h.push(Event { t: 1.0, kind: EventKind::Done(2) });
+        h.push(Event { t: 0.5, kind: EventKind::Arrive(9) });
+        let order: Vec<EventKind> = std::iter::from_fn(|| h.pop()).map(|e| e.kind).collect();
         assert_eq!(
             order,
             vec![
-                (RANK_ARRIVE, 9),
-                (RANK_DROP, 3),
-                (RANK_DONE, 2),
-                (RANK_STEP, 5),
-                (RANK_ARRIVE, 0)
+                EventKind::Arrive(9),
+                EventKind::Drop(3),
+                EventKind::Done(2),
+                EventKind::Step(5),
+                EventKind::Arrive(0)
             ]
         );
+        assert_eq!(
+            order.iter().map(|k| k.rank()).collect::<Vec<u8>>(),
+            vec![3, 0, 1, 2, 3],
+            "variant ranks must keep the seed's RANK_* numbering"
+        );
+    }
+
+    #[test]
+    fn event_kind_round_trips_through_names() {
+        // A `Drop` carries a *device* id: the round trip must come back
+        // as the same variant, never re-typed as a job event.
+        let kinds = [
+            EventKind::Drop(7),
+            EventKind::Done(7),
+            EventKind::Step(7),
+            EventKind::Arrive(7),
+        ];
+        for k in kinds {
+            assert_eq!(EventKind::from_parts(k.name(), k.id()).unwrap(), k);
+        }
+        assert!(EventKind::from_parts("dropp", 0).is_err());
+        assert!(EventKind::from_parts("", 0).is_err());
     }
 
     #[test]
@@ -1628,5 +2629,85 @@ mod tests {
         for i in 0..4 {
             assert_ne!(job_seed(&a, i), job_seed(&b, i));
         }
+    }
+
+    #[test]
+    fn poisoned_plan_cache_fails_the_request_not_the_process() {
+        // Regression: the cached-hit remap indexed `devices[p]` and the
+        // miss path `expect`ed membership — a corrupt (e.g. imported)
+        // entry killed the whole service.  Both now surface
+        // `Error::Schedule`, failing only the requesting job.
+        let cfg = FleetConfig::synthetic(12, 1, 9);
+        let spec = JobSpec {
+            id: 0,
+            arrival_s: 0.0,
+            layers: 16,
+            rounds: 2,
+            local_iters: 1,
+            ring_size: 4,
+            deadline: DeadlineClass::Standard,
+            priority: Priority::Normal,
+        };
+        let meta = spec.model_meta();
+        let lut = CostLut::analytic(&meta, LUT_GFLOPS);
+        let costs = PlannerCosts {
+            block_fwd_s: lut.block_fwd_s,
+            activation_bytes: meta.activation_bytes(),
+        };
+        let planner = Planner::new(&meta, &cfg.pool, costs);
+        let devices = [1usize, 3, 5, 8, 9];
+        let mut cache = PlanCache::default();
+        let key = PlanKey::new(&planner, &devices);
+        cache
+            .map
+            .insert(key, Some(CachedPlan { order_pos: vec![99, 0, 1, 2, 3], counts: vec![16] }));
+        let err = plan_ring_cached(&planner, &devices, &mut cache, 12).unwrap_err();
+        assert!(
+            matches!(err, Error::Schedule(_)),
+            "poisoned cache must fail with Error::Schedule, got {err:?}"
+        );
+    }
+
+    #[test]
+    fn missing_execution_state_is_an_error_not_a_panic() {
+        // Regression for the seed's `expect`s in finish_job/handle_step
+        // and the admission-pass unwraps: events referencing a job with
+        // no live state now error out instead of aborting the process.
+        let mut cfg = FleetConfig::synthetic(6, 2, 5);
+        cfg.mean_interarrival_s = 5.0;
+        let source = default_source(&cfg).unwrap();
+        let mut run =
+            FleetRun::new(&cfg, &FifoWholeRing, source, true, stream_bucket_width_s(&cfg))
+                .unwrap();
+        assert!(matches!(run.handle_step(0), Err(Error::Schedule(_))));
+        assert!(matches!(run.handle_step(999), Err(Error::Schedule(_))));
+        assert!(matches!(run.finish_job(0, false), Err(Error::Schedule(_))));
+        // A dropout event aimed outside the pool is rejected the same way.
+        let bad = Event { t: 0.0, kind: EventKind::Drop(777) };
+        assert!(matches!(run.dispatch(bad), Err(Error::Schedule(_))));
+    }
+
+    #[test]
+    fn snapshot_resumes_a_small_fleet_byte_identically() {
+        // In-module smoke for the checkpoint contract; the exhaustive
+        // kill-at-every-event battery lives in tests/fleet_restore.rs.
+        let mut cfg = FleetConfig::synthetic(6, 3, 11);
+        cfg.mean_interarrival_s = 8.0;
+        let baseline = serve(&cfg, &FifoWholeRing).unwrap().canonical_string();
+        let mut state = FleetState::new(&cfg, &FifoWholeRing).unwrap();
+        for _ in 0..3 {
+            assert!(state.step_event().unwrap());
+        }
+        let snap = state.snapshot().unwrap();
+        // Round-trip through *text*: the on-disk form must be lossless.
+        let reparsed = Json::parse(&snap.to_string()).unwrap();
+        let mut resumed = FleetState::resume(&cfg, &FifoWholeRing, &reparsed).unwrap();
+        resumed.run_to_end().unwrap();
+        assert_eq!(resumed.into_report().unwrap().canonical_string(), baseline);
+        // Wrong policy or seed: refused up front.
+        assert!(FleetState::resume(&cfg, &DeadlineEdf, &reparsed).is_err());
+        let mut other = cfg.clone();
+        other.seed = 12;
+        assert!(FleetState::resume(&other, &FifoWholeRing, &reparsed).is_err());
     }
 }

@@ -463,6 +463,19 @@ impl AllocationPolicy for DeadlineEdf {
     }
 }
 
+/// Resolve a built-in policy by its [`AllocationPolicy::name`] — the
+/// string a fleet snapshot records, so a service process can rebuild the
+/// right policy from the checkpoint alone.  `None` for unknown names.
+pub fn builtin_policy(name: &str) -> Option<Box<dyn AllocationPolicy>> {
+    match name {
+        "fifo" => Some(Box::new(FifoWholeRing)),
+        "smallest-first" => Some(Box::new(SmallestRingFirst)),
+        "util-aware" => Some(Box::new(UtilizationAware)),
+        "deadline-edf" => Some(Box::new(DeadlineEdf)),
+        _ => None,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -479,6 +492,20 @@ mod tests {
             deadline: DeadlineClass::Standard,
             priority: Priority::Normal,
         }
+    }
+
+    #[test]
+    fn builtin_policy_resolves_every_snapshot_name() {
+        for p in [
+            &FifoWholeRing as &dyn AllocationPolicy,
+            &SmallestRingFirst,
+            &UtilizationAware,
+            &DeadlineEdf,
+        ] {
+            let resolved = builtin_policy(p.name()).expect(p.name());
+            assert_eq!(resolved.name(), p.name());
+        }
+        assert!(builtin_policy("round-robin").is_none());
     }
 
     #[test]

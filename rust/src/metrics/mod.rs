@@ -6,8 +6,9 @@
 use std::fmt::Write as _;
 use std::path::Path;
 
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::sim::ScenarioRun;
+use crate::util::json::Json;
 
 /// SQuAD-style span metrics over inclusive (start, end) spans.
 #[derive(Debug, Clone, Default, PartialEq)]
@@ -455,7 +456,11 @@ impl FleetReport {
         if jcts.is_empty() {
             0.0
         } else {
-            jcts.iter().sum::<f64>() / jcts.len() as f64
+            let mut sum = ExactSum::new();
+            for &x in &jcts {
+                sum.add(x);
+            }
+            sum.value() / jcts.len() as f64
         }
     }
 
@@ -481,16 +486,16 @@ impl FleetReport {
     /// a single admitted job ⇒ its own wait.  Failed-after-admission
     /// jobs still count — they queued like everyone else.
     pub fn mean_wait_s(&self) -> f64 {
-        let waits: Vec<f64> = self
-            .rows
-            .iter()
-            .filter(|r| r.admitted_s >= 0.0)
-            .map(FleetJobRow::wait_s)
-            .collect();
-        if waits.is_empty() {
+        let mut sum = ExactSum::new();
+        let mut n = 0usize;
+        for r in self.rows.iter().filter(|r| r.admitted_s >= 0.0) {
+            sum.add(r.wait_s());
+            n += 1;
+        }
+        if n == 0 {
             0.0
         } else {
-            waits.iter().sum::<f64>() / waits.len() as f64
+            sum.value() / n as f64
         }
     }
 
@@ -515,19 +520,25 @@ impl FleetReport {
     /// (0, 1] range over n ≥ 1 samples); a single completed job ⇒ `1.0`
     /// (one sample is trivially fair).
     pub fn jain_fairness(&self) -> f64 {
-        let xs: Vec<f64> = self
+        let mut sum = ExactSum::new();
+        let mut sq = ExactSum::new();
+        let mut n = 0usize;
+        for r in self
             .rows
             .iter()
             .filter(|r| r.completed() && r.jct_s() > 0.0 && r.nominal_s > 0.0)
-            .map(|r| r.nominal_s / r.jct_s())
-            .collect();
-        if xs.is_empty() {
+        {
+            let x = r.nominal_s / r.jct_s();
+            sum.add(x);
+            sq.add(x * x);
+            n += 1;
+        }
+        if n == 0 {
             return 0.0;
         }
-        let sum: f64 = xs.iter().sum();
-        let sq: f64 = xs.iter().map(|x| x * x).sum();
-        if sq > 0.0 {
-            sum * sum / (xs.len() as f64 * sq)
+        let (s, q) = (sum.value(), sq.value());
+        if q > 0.0 {
+            s * s / (n as f64 * q)
         } else {
             0.0
         }
@@ -628,6 +639,425 @@ impl FleetReport {
         }
         s.push(']');
         s
+    }
+}
+
+/// Exactly rounded running sum (Shewchuk's adaptive partials, as in
+/// Python's `math.fsum`).  The value is the true real-number sum of every
+/// `add` rounded once to f64 — in particular it is *independent of the
+/// order* inputs arrive in, which is what lets the streaming
+/// [`FleetAggregates`] reproduce the materialized [`FleetReport`] means
+/// and Jain index bit-for-bit.  Inputs must be finite.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ExactSum {
+    /// Non-overlapping partials, increasing magnitude (Shewchuk invariant).
+    partials: Vec<f64>,
+}
+
+impl ExactSum {
+    pub fn new() -> Self {
+        ExactSum { partials: Vec::new() }
+    }
+
+    /// Fold `x` into the partials (error-free two-sum cascade).
+    pub fn add(&mut self, x: f64) {
+        debug_assert!(x.is_finite(), "ExactSum requires finite inputs");
+        let mut x = x;
+        let mut i = 0;
+        for j in 0..self.partials.len() {
+            let mut y = self.partials[j];
+            if x.abs() < y.abs() {
+                std::mem::swap(&mut x, &mut y);
+            }
+            let hi = x + y;
+            let lo = y - (hi - x);
+            if lo != 0.0 {
+                self.partials[i] = lo;
+                i += 1;
+            }
+            x = hi;
+        }
+        self.partials.truncate(i);
+        self.partials.push(x);
+    }
+
+    /// The correctly rounded sum (CPython `fsum` final collapse, including
+    /// the round-half-even correction for an exactly-representable tie).
+    pub fn value(&self) -> f64 {
+        let p = &self.partials;
+        let mut n = p.len();
+        if n == 0 {
+            return 0.0;
+        }
+        n -= 1;
+        let mut hi = p[n];
+        let mut lo = 0.0;
+        while n > 0 {
+            let x = hi;
+            n -= 1;
+            let y = p[n];
+            hi = x + y;
+            lo = y - (hi - x);
+            if lo != 0.0 {
+                break;
+            }
+        }
+        if n > 0 && ((lo < 0.0 && p[n - 1] < 0.0) || (lo > 0.0 && p[n - 1] > 0.0)) {
+            let y = lo * 2.0;
+            let x = hi + y;
+            if y == x - hi {
+                hi = x;
+            }
+        }
+        hi
+    }
+
+    /// Raw partials for checkpointing (restore with
+    /// [`ExactSum::from_partials`]).
+    pub fn partials(&self) -> &[f64] {
+        &self.partials
+    }
+
+    /// Rebuild from [`ExactSum::partials`] output.  The slice must come
+    /// from `partials()` verbatim — the Shewchuk invariant is not
+    /// re-established here.
+    pub fn from_partials(partials: Vec<f64>) -> Self {
+        ExactSum { partials }
+    }
+}
+
+/// Hard cap on sketch buckets: the last bucket absorbs everything beyond
+/// `MAX_BUCKETS * width` (and [`QuantileSketch::overflowed`] reports it),
+/// so a pathological JCT cannot grow the sketch without bound.
+pub const MAX_SKETCH_BUCKETS: usize = 4096;
+
+/// Deterministic fixed-width-bucket quantile sketch.  Buckets are
+/// `[b·w, (b+1)·w)`; a quantile query returns the *upper edge* of the
+/// bucket holding the nearest-rank sample, so for sub-cap buckets the
+/// estimate is within one bucket width above the exact nearest-rank
+/// value.  Same integer rank arithmetic as [`FleetReport::p95_jct_s`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantileSketch {
+    width: f64,
+    /// Bucket occupancy, grown lazily up to [`MAX_SKETCH_BUCKETS`].
+    counts: Vec<u64>,
+    n: usize,
+    overflow: bool,
+}
+
+impl QuantileSketch {
+    /// `width` must be positive and finite.
+    pub fn new(width: f64) -> Self {
+        assert!(width.is_finite() && width > 0.0, "sketch width must be positive");
+        QuantileSketch { width, counts: Vec::new(), n: 0, overflow: false }
+    }
+
+    pub fn record(&mut self, x: f64) {
+        let b = if x <= 0.0 { 0 } else { (x / self.width).floor() as usize };
+        let b = if b >= MAX_SKETCH_BUCKETS {
+            self.overflow = true;
+            MAX_SKETCH_BUCKETS - 1
+        } else {
+            b
+        };
+        if b >= self.counts.len() {
+            self.counts.resize(b + 1, 0);
+        }
+        self.counts[b] += 1;
+        self.n += 1;
+    }
+
+    /// Nearest-rank `pct`-th percentile, reported as the holding bucket's
+    /// upper edge (0.0 with no samples).
+    pub fn quantile(&self, pct: usize) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let rank = ((self.n * pct + 99) / 100).max(1);
+        let mut cum = 0usize;
+        for (b, &c) in self.counts.iter().enumerate() {
+            cum += c as usize;
+            if cum >= rank {
+                return (b + 1) as f64 * self.width;
+            }
+        }
+        self.counts.len() as f64 * self.width
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.quantile(95)
+    }
+
+    pub fn width(&self) -> f64 {
+        self.width
+    }
+
+    pub fn samples(&self) -> usize {
+        self.n
+    }
+
+    /// True if any sample landed beyond the bucket cap — the one-bucket
+    /// error bound no longer holds for quantiles in the overflow bucket.
+    pub fn overflowed(&self) -> bool {
+        self.overflow
+    }
+}
+
+/// Streaming replacement for the O(jobs) [`FleetReport`] row vector:
+/// every metric the report exposes, maintained in bounded memory as rows
+/// are observed one at a time.  Counters and formulas mirror the report's
+/// exactly — [`ExactSum`] makes the means and Jain index bit-identical to
+/// the materialized path regardless of observation order, and the p95
+/// comes from a [`QuantileSketch`] (within one bucket width).
+#[derive(Debug, Clone)]
+pub struct FleetAggregates {
+    pub policy: String,
+    pub scenario: String,
+    pub pool_devices: usize,
+    /// Jobs observed (one per [`FleetJobRow`]).
+    pub jobs: usize,
+    pub completed: usize,
+    /// Admitted but lost to faults (mirrors [`FleetReport::failed_jobs`]).
+    pub failed_jobs: usize,
+    /// Never admitted, rejections included ([`FleetReport::unserved`]).
+    pub unserved: usize,
+    pub rejected: usize,
+    pub deadline_hits: usize,
+    pub preemptions: usize,
+    pub resizes: usize,
+    admitted: usize,
+    jct_sum: ExactSum,
+    wait_sum: ExactSum,
+    rate_sum: ExactSum,
+    rate_sq_sum: ExactSum,
+    rate_n: usize,
+    sketch: QuantileSketch,
+    /// Set by [`FleetAggregates::finalize`].
+    pub horizon_s: f64,
+    pub pool_busy_s: f64,
+    pub dead_devices: usize,
+    /// High-water mark of row structs resident at once in the streaming
+    /// serve loop (the bounded-memory claim, reported by the bench).
+    pub peak_resident_rows: usize,
+}
+
+impl FleetAggregates {
+    pub fn new(policy: &str, scenario: &str, pool_devices: usize, bucket_width_s: f64) -> Self {
+        FleetAggregates {
+            policy: policy.to_string(),
+            scenario: scenario.to_string(),
+            pool_devices,
+            jobs: 0,
+            completed: 0,
+            failed_jobs: 0,
+            unserved: 0,
+            rejected: 0,
+            deadline_hits: 0,
+            preemptions: 0,
+            resizes: 0,
+            admitted: 0,
+            jct_sum: ExactSum::new(),
+            wait_sum: ExactSum::new(),
+            rate_sum: ExactSum::new(),
+            rate_sq_sum: ExactSum::new(),
+            rate_n: 0,
+            sketch: QuantileSketch::new(bucket_width_s),
+            horizon_s: 0.0,
+            pool_busy_s: 0.0,
+            dead_devices: 0,
+            peak_resident_rows: 0,
+        }
+    }
+
+    /// Fold one job outcome in.  The guards are verbatim from the
+    /// corresponding [`FleetReport`] metric filters.
+    pub fn observe(&mut self, r: &FleetJobRow) {
+        self.jobs += 1;
+        if r.admitted_s >= 0.0 {
+            self.admitted += 1;
+            self.wait_sum.add(r.wait_s());
+        } else {
+            self.unserved += 1;
+        }
+        if r.failed && r.admitted_s >= 0.0 {
+            self.failed_jobs += 1;
+        }
+        if r.rejected {
+            self.rejected += 1;
+        }
+        if r.completed() {
+            self.completed += 1;
+            let jct = r.jct_s();
+            self.jct_sum.add(jct);
+            self.sketch.record(jct);
+            if jct > 0.0 && r.nominal_s > 0.0 {
+                let x = r.nominal_s / jct;
+                self.rate_sum.add(x);
+                self.rate_sq_sum.add(x * x);
+                self.rate_n += 1;
+            }
+        }
+        if r.met_deadline() {
+            self.deadline_hits += 1;
+        }
+        self.preemptions += r.preemptions;
+        self.resizes += r.resizes;
+    }
+
+    /// Record end-of-run pool state (horizon, per-device busy ledger, dead
+    /// count, resident-row high-water mark).  The busy ledger is reduced
+    /// with the same left-to-right sum [`FleetReport::pool_utilization`]
+    /// uses, so the utilization ratio matches it bitwise.
+    pub fn finalize(
+        &mut self,
+        horizon_s: f64,
+        pool_busy: &[f64],
+        dead_devices: usize,
+        peak_resident_rows: usize,
+    ) {
+        self.horizon_s = horizon_s;
+        self.pool_busy_s = pool_busy.iter().sum::<f64>();
+        self.dead_devices = dead_devices;
+        self.peak_resident_rows = peak_resident_rows;
+    }
+
+    /// Mirrors [`FleetReport::mean_jct_s`] (bitwise, via [`ExactSum`]).
+    pub fn mean_jct_s(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.jct_sum.value() / self.completed as f64
+        }
+    }
+
+    /// Sketch p95 — within one bucket width of [`FleetReport::p95_jct_s`]
+    /// while [`QuantileSketch::overflowed`] is false.
+    pub fn p95_jct_s(&self) -> f64 {
+        self.sketch.p95()
+    }
+
+    /// Mirrors [`FleetReport::mean_wait_s`] (bitwise).
+    pub fn mean_wait_s(&self) -> f64 {
+        if self.admitted == 0 {
+            0.0
+        } else {
+            self.wait_sum.value() / self.admitted as f64
+        }
+    }
+
+    /// Mirrors [`FleetReport::jain_fairness`] (bitwise).
+    pub fn jain_fairness(&self) -> f64 {
+        if self.rate_n == 0 {
+            return 0.0;
+        }
+        let (s, q) = (self.rate_sum.value(), self.rate_sq_sum.value());
+        if q > 0.0 {
+            s * s / (self.rate_n as f64 * q)
+        } else {
+            0.0
+        }
+    }
+
+    /// Mirrors [`FleetReport::pool_utilization`] (bitwise).
+    pub fn pool_utilization(&self) -> f64 {
+        let cap = self.pool_devices as f64 * self.horizon_s;
+        if cap > 0.0 {
+            self.pool_busy_s / cap
+        } else {
+            0.0
+        }
+    }
+
+    /// Mirrors [`FleetReport::deadline_hit_rate`] (bitwise).
+    pub fn deadline_hit_rate(&self) -> f64 {
+        if self.jobs == 0 {
+            return 1.0;
+        }
+        self.deadline_hits as f64 / self.jobs as f64
+    }
+
+    pub fn sketch(&self) -> &QuantileSketch {
+        &self.sketch
+    }
+
+    /// Serialize for a fleet snapshot.  f64 state goes through `to_bits`
+    /// so the restore is bit-exact (Display would lose the sign of `-0.0`;
+    /// bit patterns always round-trip).
+    pub fn to_json(&self) -> Json {
+        let bits = |xs: &[f64]| Json::arr_u64(&xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>());
+        Json::obj(vec![
+            ("policy", Json::str(&self.policy)),
+            ("scenario", Json::str(&self.scenario)),
+            ("pool_devices", Json::u64(self.pool_devices as u64)),
+            ("jobs", Json::u64(self.jobs as u64)),
+            ("completed", Json::u64(self.completed as u64)),
+            ("failed_jobs", Json::u64(self.failed_jobs as u64)),
+            ("unserved", Json::u64(self.unserved as u64)),
+            ("rejected", Json::u64(self.rejected as u64)),
+            ("deadline_hits", Json::u64(self.deadline_hits as u64)),
+            ("preemptions", Json::u64(self.preemptions as u64)),
+            ("resizes", Json::u64(self.resizes as u64)),
+            ("admitted", Json::u64(self.admitted as u64)),
+            ("jct_partials", bits(self.jct_sum.partials())),
+            ("wait_partials", bits(self.wait_sum.partials())),
+            ("rate_partials", bits(self.rate_sum.partials())),
+            ("rate_sq_partials", bits(self.rate_sq_sum.partials())),
+            ("rate_n", Json::u64(self.rate_n as u64)),
+            ("sketch_width_bits", Json::u64(self.sketch.width.to_bits())),
+            ("sketch_counts", Json::arr_u64(&self.sketch.counts)),
+            ("sketch_n", Json::u64(self.sketch.n as u64)),
+            ("sketch_overflow", Json::Bool(self.sketch.overflow)),
+            ("horizon_bits", Json::u64(self.horizon_s.to_bits())),
+            ("pool_busy_bits", Json::u64(self.pool_busy_s.to_bits())),
+            ("dead_devices", Json::u64(self.dead_devices as u64)),
+            ("peak_resident_rows", Json::u64(self.peak_resident_rows as u64)),
+        ])
+    }
+
+    /// Rebuild from [`FleetAggregates::to_json`] output.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let partials = |key: &str| -> Result<ExactSum> {
+            let xs = v.req(key)?.u64_vec()?;
+            Ok(ExactSum::from_partials(xs.into_iter().map(f64::from_bits).collect()))
+        };
+        let width = f64::from_bits(v.req("sketch_width_bits")?.as_u64()?);
+        if !(width.is_finite() && width > 0.0) {
+            return Err(Error::other(format!("invalid sketch width {width} in aggregates")));
+        }
+        let mut sketch = QuantileSketch::new(width);
+        sketch.counts = v.req("sketch_counts")?.u64_vec()?;
+        if sketch.counts.len() > MAX_SKETCH_BUCKETS {
+            return Err(Error::other(format!(
+                "sketch has {} buckets, cap is {MAX_SKETCH_BUCKETS}",
+                sketch.counts.len()
+            )));
+        }
+        sketch.n = v.req("sketch_n")?.as_usize()?;
+        sketch.overflow = v.req("sketch_overflow")?.as_bool()?;
+        Ok(FleetAggregates {
+            policy: v.req("policy")?.as_str()?.to_string(),
+            scenario: v.req("scenario")?.as_str()?.to_string(),
+            pool_devices: v.req("pool_devices")?.as_usize()?,
+            jobs: v.req("jobs")?.as_usize()?,
+            completed: v.req("completed")?.as_usize()?,
+            failed_jobs: v.req("failed_jobs")?.as_usize()?,
+            unserved: v.req("unserved")?.as_usize()?,
+            rejected: v.req("rejected")?.as_usize()?,
+            deadline_hits: v.req("deadline_hits")?.as_usize()?,
+            preemptions: v.req("preemptions")?.as_usize()?,
+            resizes: v.req("resizes")?.as_usize()?,
+            admitted: v.req("admitted")?.as_usize()?,
+            jct_sum: partials("jct_partials")?,
+            wait_sum: partials("wait_partials")?,
+            rate_sum: partials("rate_partials")?,
+            rate_sq_sum: partials("rate_sq_partials")?,
+            rate_n: v.req("rate_n")?.as_usize()?,
+            sketch,
+            horizon_s: f64::from_bits(v.req("horizon_bits")?.as_u64()?),
+            pool_busy_s: f64::from_bits(v.req("pool_busy_bits")?.as_u64()?),
+            dead_devices: v.req("dead_devices")?.as_usize()?,
+            peak_resident_rows: v.req("peak_resident_rows")?.as_usize()?,
+        })
     }
 }
 
@@ -1073,6 +1503,151 @@ mod tests {
         let c = fleet_report(vec![fleet_row(0, 0.0, 0.0, 10.5, 5.0)]);
         assert_ne!(a.canonical_string(), c.canonical_string());
         assert!(a.canonical_string().starts_with("policy=fifo;scenario=healthy"));
+    }
+
+    #[test]
+    fn exact_sum_is_order_independent() {
+        use crate::runtime::rng::Rng;
+        // Pathological magnitudes: a naive fold gives different bits for
+        // different orders; ExactSum must not.
+        let mut xs = vec![1e16, 1.0, -1e16, 1e-8, 3.14159, -2.5e9, 2.5e9, 1e-30];
+        for i in 0..40 {
+            xs.push((i as f64 + 0.1) * 1e-3);
+        }
+        let reference = {
+            let mut s = ExactSum::new();
+            for &x in &xs {
+                s.add(x);
+            }
+            s.value()
+        };
+        let mut rng = Rng::new(42);
+        for _ in 0..20 {
+            rng.shuffle(&mut xs);
+            let mut s = ExactSum::new();
+            for &x in &xs {
+                s.add(x);
+            }
+            assert_eq!(s.value().to_bits(), reference.to_bits());
+        }
+        assert_eq!(ExactSum::new().value(), 0.0);
+        // Partials round-trip bit-exactly.
+        let mut s = ExactSum::new();
+        for &x in &xs {
+            s.add(x);
+        }
+        let back = ExactSum::from_partials(s.partials().to_vec());
+        assert_eq!(back.value().to_bits(), s.value().to_bits());
+    }
+
+    #[test]
+    fn quantile_sketch_p95_is_within_one_bucket() {
+        use crate::runtime::rng::Rng;
+        let width = 2.0;
+        let mut sketch = QuantileSketch::new(width);
+        let mut rng = Rng::new(7);
+        let mut xs: Vec<f64> = (0..500).map(|_| rng.next_f64() * 300.0).collect();
+        for &x in &xs {
+            sketch.record(x);
+        }
+        xs.sort_by(|a, b| a.total_cmp(b));
+        let n = xs.len();
+        let exact = xs[((n * 95 + 99) / 100).max(1) - 1];
+        let est = sketch.p95();
+        assert!(!sketch.overflowed());
+        assert!(est >= exact, "sketch reports the bucket upper edge");
+        assert!((est - exact).abs() <= width * (1.0 + 1e-9), "est {est} exact {exact}");
+        // Overflow is capped and flagged.
+        let mut tiny = QuantileSketch::new(1e-3);
+        tiny.record(1e6);
+        assert!(tiny.overflowed());
+        assert_eq!(tiny.samples(), 1);
+        // Empty sketch.
+        assert_eq!(QuantileSketch::new(1.0).p95(), 0.0);
+    }
+
+    #[test]
+    fn streaming_aggregates_mirror_the_report_bitwise() {
+        use crate::runtime::rng::Rng;
+        let mut rows = Vec::new();
+        for i in 0..60 {
+            let arr = i as f64 * 3.0;
+            let mut r = fleet_row(i, arr, arr + (i % 5) as f64, arr + 10.0 + (i % 17) as f64, 5.0);
+            match i % 9 {
+                7 => {
+                    // Admitted, then lost to a fault.
+                    r.failed = true;
+                }
+                8 => {
+                    // Rejected by admission control.
+                    r.admitted_s = -1.0;
+                    r.completed_s = -1.0;
+                    r.rejected = true;
+                    r.failed = true;
+                }
+                _ => {}
+            }
+            r.preemptions = i % 3;
+            r.resizes = i % 2;
+            rows.push(r);
+        }
+        let report = fleet_report(rows.clone());
+
+        // Observation order must not matter: stream the rows shuffled.
+        let mut shuffled = rows;
+        Rng::new(5).shuffle(&mut shuffled);
+        let mut agg = FleetAggregates::new("fifo", "healthy", 4, 2.0);
+        for r in &shuffled {
+            agg.observe(r);
+        }
+        agg.finalize(report.horizon_s, &report.pool_device_busy, report.dead_devices, 3);
+
+        assert_eq!(agg.jobs, report.rows.len());
+        assert_eq!(agg.completed, report.completed());
+        assert_eq!(agg.failed_jobs, report.failed_jobs());
+        assert_eq!(agg.unserved, report.unserved());
+        assert_eq!(agg.rejected, report.rejected_jobs());
+        assert_eq!(agg.preemptions, report.preemptions());
+        assert_eq!(agg.resizes, report.resizes());
+        assert_eq!(agg.mean_jct_s().to_bits(), report.mean_jct_s().to_bits());
+        assert_eq!(agg.mean_wait_s().to_bits(), report.mean_wait_s().to_bits());
+        assert_eq!(agg.jain_fairness().to_bits(), report.jain_fairness().to_bits());
+        assert_eq!(agg.pool_utilization().to_bits(), report.pool_utilization().to_bits());
+        assert_eq!(agg.deadline_hit_rate().to_bits(), report.deadline_hit_rate().to_bits());
+        let (est, exact) = (agg.p95_jct_s(), report.p95_jct_s());
+        assert!((est - exact).abs() <= agg.sketch().width() * (1.0 + 1e-9));
+        assert_eq!(agg.peak_resident_rows, 3);
+    }
+
+    #[test]
+    fn fleet_aggregates_round_trip_through_json() {
+        let mut agg = FleetAggregates::new("edf", "faulted", 8, 1.5);
+        for i in 0..25 {
+            let arr = i as f64 * 2.0;
+            agg.observe(&fleet_row(i, arr, arr + 1.0, arr + 7.0 + i as f64, 5.0));
+        }
+        agg.finalize(321.5, &[10.0, 5.5, 0.0], 2, 4);
+        let text = agg.to_json().to_string();
+        let back = FleetAggregates::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.policy, "edf");
+        assert_eq!(back.scenario, "faulted");
+        assert_eq!(back.jobs, agg.jobs);
+        assert_eq!(back.completed, agg.completed);
+        assert_eq!(back.mean_jct_s().to_bits(), agg.mean_jct_s().to_bits());
+        assert_eq!(back.mean_wait_s().to_bits(), agg.mean_wait_s().to_bits());
+        assert_eq!(back.jain_fairness().to_bits(), agg.jain_fairness().to_bits());
+        assert_eq!(back.p95_jct_s().to_bits(), agg.p95_jct_s().to_bits());
+        assert_eq!(back.pool_utilization().to_bits(), agg.pool_utilization().to_bits());
+        assert_eq!(back.horizon_s.to_bits(), agg.horizon_s.to_bits());
+        assert_eq!(back.peak_resident_rows, 4);
+        // Streams resumed from the snapshot keep folding identically.
+        let mut a = agg.clone();
+        let mut b = back;
+        let extra = fleet_row(25, 60.0, 61.0, 99.0, 5.0);
+        a.observe(&extra);
+        b.observe(&extra);
+        assert_eq!(a.mean_jct_s().to_bits(), b.mean_jct_s().to_bits());
+        assert_eq!(a.jain_fairness().to_bits(), b.jain_fairness().to_bits());
     }
 
     #[test]

@@ -160,6 +160,17 @@ impl DispatchScratch {
 /// release floor).  This is what makes clocks resumable across re-planning
 /// boundaries: a post-dropout chunk on a previously idle device cannot
 /// time-travel to t = 0.
+/// Snapshot of the simulator's resource clocks (see
+/// [`Simulator::clock_state`]).  Links are sorted by `(from, to)` so the
+/// serialized form is deterministic.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClockState {
+    pub device_free: Vec<f64>,
+    pub link_free: Vec<(usize, usize, f64)>,
+    pub dead: Vec<bool>,
+    pub now: f64,
+}
+
 #[derive(Debug, Clone)]
 pub struct Simulator {
     cluster: ClusterConfig,
@@ -220,6 +231,48 @@ impl Simulator {
 
     pub fn is_alive(&self, device: usize) -> bool {
         !self.dead[device]
+    }
+
+    /// Checkpointable clock state: resource clocks, dead set, and the
+    /// global clock.  Everything else in the simulator is either derived
+    /// from the cluster/scenario (`perturb`), overwritten per chunk
+    /// (`scratch`), or behaviorally inert to re-run (`validated`), so this
+    /// is sufficient for a byte-identical resume.
+    pub fn clock_state(&self) -> ClockState {
+        let mut link_free: Vec<(usize, usize, f64)> =
+            self.link_free.iter().map(|(&(a, b), &t)| (a, b, t)).collect();
+        link_free.sort_unstable_by(|x, y| (x.0, x.1).cmp(&(y.0, y.1)));
+        ClockState {
+            device_free: self.device_free.clone(),
+            link_free,
+            dead: self.dead.clone(),
+            now: self.now,
+        }
+    }
+
+    /// Restore clocks captured by [`Simulator::clock_state`] onto a fresh
+    /// simulator built from the same cluster + scenario.
+    pub fn restore_clocks(&mut self, state: &ClockState) -> Result<()> {
+        let n = self.cluster.len();
+        if state.device_free.len() != n || state.dead.len() != n {
+            return Err(Error::Schedule(format!(
+                "clock state for {} devices restored onto a {n}-device cluster",
+                state.device_free.len()
+            )));
+        }
+        for &(a, b, _) in &state.link_free {
+            if a >= n || b >= n {
+                return Err(Error::Schedule(format!(
+                    "clock state references link ({a}, {b}) outside a {n}-device cluster"
+                )));
+            }
+        }
+        self.device_free.clone_from(&state.device_free);
+        self.link_free =
+            state.link_free.iter().map(|&(a, b, t)| ((a, b), t)).collect();
+        self.dead.clone_from(&state.dead);
+        self.now = state.now;
+        Ok(())
     }
 
     /// Nominal duration (no scenario windows applied).  Safe to divide by
@@ -563,6 +616,37 @@ mod tests {
         let r2 = s.run(&t2).unwrap();
         assert!(r2.start[0] >= r1.finish[0]);
         assert!(s.now >= r2.finish[0] - 1e-12);
+    }
+
+    #[test]
+    fn clock_state_round_trips_onto_a_fresh_simulator() {
+        let mut s = sim(2);
+        let chunk = vec![
+            compute(0, 0, 2, vec![]),
+            compute(1, 1, 2, vec![0]),
+            Task {
+                id: 2,
+                kind: Kind::Transfer { from: 0, to: 1, bytes: 500 },
+                deps: vec![0],
+                step: 0,
+                round: 0,
+            },
+        ];
+        s.run(&chunk).unwrap();
+        s.drop_device(1);
+        let state = s.clock_state();
+
+        let mut fresh = sim(2);
+        fresh.restore_clocks(&state).unwrap();
+        assert_eq!(fresh.clock_state(), state);
+        assert!(!fresh.is_alive(1));
+        assert_eq!(fresh.now.to_bits(), s.now.to_bits());
+
+        // A mismatched cluster size or out-of-range link is rejected.
+        assert!(sim(3).restore_clocks(&state).is_err());
+        let mut bad = state.clone();
+        bad.link_free.push((7, 0, 1.0));
+        assert!(sim(2).restore_clocks(&bad).is_err());
     }
 
     #[test]

@@ -3,22 +3,52 @@
 //! This build is fully offline — `serde_json` is not in the baked crate
 //! set — so the manifest/config/test-vector plumbing runs on this small,
 //! well-tested recursive-descent parser instead.  Supports the full JSON
-//! grammar; numbers are f64 (ample for shapes, rates and f32 payloads).
+//! grammar.  Integer literals (no fraction, no exponent) parse to the
+//! exact [`Json::Int`] variant; everything else numeric is f64.  The
+//! exact path exists because checkpoints serialize u64 RNG states and
+//! f64 bit patterns, which an f64 detour would silently corrupt above
+//! 2^53.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
 use crate::error::{Error, Result};
 
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone)]
 pub enum Json {
     Null,
     Bool(bool),
     Num(f64),
+    /// Lossless integer.  i128 covers the full u64 and i64 ranges, so
+    /// RNG states and `f64::to_bits()` payloads round-trip exactly.
+    Int(i128),
     Str(String),
     Arr(Vec<Json>),
     /// BTreeMap gives deterministic serialization order.
     Obj(BTreeMap<String, Json>),
+}
+
+/// Structural equality, except numbers compare by *value* across the
+/// `Int`/`Num` divide: `Int(4) == Num(4.0)`.  Cross-variant equality is
+/// exact — an integer f64 cannot represent is never equal to any `Num`
+/// (both directions of the round trip are checked, so `Int(2^53 + 1)`
+/// does not alias `Num(2^53)`).
+impl PartialEq for Json {
+    fn eq(&self, other: &Self) -> bool {
+        match (self, other) {
+            (Json::Null, Json::Null) => true,
+            (Json::Bool(a), Json::Bool(b)) => a == b,
+            (Json::Num(a), Json::Num(b)) => a == b,
+            (Json::Int(a), Json::Int(b)) => a == b,
+            (Json::Int(i), Json::Num(x)) | (Json::Num(x), Json::Int(i)) => {
+                *x == *i as f64 && *x as i128 == *i
+            }
+            (Json::Str(a), Json::Str(b)) => a == b,
+            (Json::Arr(a), Json::Arr(b)) => a == b,
+            (Json::Obj(a), Json::Obj(b)) => a == b,
+            _ => false,
+        }
+    }
 }
 
 impl Json {
@@ -54,20 +84,54 @@ impl Json {
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Json::Num(x) => Ok(*x),
+            Json::Int(i) => Ok(*i as f64),
             _ => Err(Error::other("JSON value is not a number")),
         }
     }
 
     pub fn as_usize(&self) -> Result<usize> {
-        let x = self.as_f64()?;
-        if x < 0.0 || x.fract() != 0.0 {
-            return Err(Error::other(format!("JSON number {x} is not a usize")));
-        }
-        Ok(x as usize)
+        let x = self.as_u64()?;
+        usize::try_from(x)
+            .map_err(|_| Error::other(format!("JSON integer {x} does not fit usize")))
     }
 
+    /// Exact u64 conversion.  `Int` values convert losslessly (range
+    /// check only); `Num` values are accepted only when integral,
+    /// non-negative, and strictly below 2^53 — the last f64 that still
+    /// represents every smaller integer exactly.  Anything else is an
+    /// error, never a silent truncation.
     pub fn as_u64(&self) -> Result<u64> {
-        Ok(self.as_usize()? as u64)
+        match self {
+            Json::Int(i) => u64::try_from(*i)
+                .map_err(|_| Error::other(format!("JSON integer {i} is not a u64"))),
+            Json::Num(x) => {
+                if !(*x >= 0.0) || x.fract() != 0.0 || *x >= 9007199254740992.0 {
+                    return Err(Error::other(format!(
+                        "JSON number {x} is not an exactly-representable u64"
+                    )));
+                }
+                Ok(*x as u64)
+            }
+            _ => Err(Error::other("JSON value is not a number")),
+        }
+    }
+
+    /// Exact i64 conversion, with the same no-silent-truncation contract
+    /// as [`Json::as_u64`].
+    pub fn as_i64(&self) -> Result<i64> {
+        match self {
+            Json::Int(i) => i64::try_from(*i)
+                .map_err(|_| Error::other(format!("JSON integer {i} is not an i64"))),
+            Json::Num(x) => {
+                if x.fract() != 0.0 || x.abs() >= 9007199254740992.0 {
+                    return Err(Error::other(format!(
+                        "JSON number {x} is not an exactly-representable i64"
+                    )));
+                }
+                Ok(*x as i64)
+            }
+            _ => Err(Error::other("JSON value is not a number")),
+        }
     }
 
     pub fn as_f32(&self) -> Result<f32> {
@@ -107,6 +171,11 @@ impl Json {
         self.as_arr()?.iter().map(Json::as_usize).collect()
     }
 
+    /// Lossless `Vec<u64>` (RNG states, `f64::to_bits` payloads).
+    pub fn u64_vec(&self) -> Result<Vec<u64>> {
+        self.as_arr()?.iter().map(Json::as_u64).collect()
+    }
+
     pub fn f32_vec(&self) -> Result<Vec<f32>> {
         self.as_arr()?.iter().map(Json::as_f32).collect()
     }
@@ -122,7 +191,11 @@ impl Json {
     }
 
     pub fn arr_usize(xs: &[usize]) -> Json {
-        Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+        Json::Arr(xs.iter().map(|&x| Json::Int(x as i128)).collect())
+    }
+
+    pub fn arr_u64(xs: &[u64]) -> Json {
+        Json::Arr(xs.iter().map(|&x| Json::Int(x as i128)).collect())
     }
 
     pub fn arr_f64(xs: &[f64]) -> Json {
@@ -139,6 +212,16 @@ impl Json {
 
     pub fn num(x: f64) -> Json {
         Json::Num(x)
+    }
+
+    /// Lossless u64 constructor — the full range survives the round
+    /// trip, unlike `Json::num(x as f64)` above 2^53.
+    pub fn u64(x: u64) -> Json {
+        Json::Int(x as i128)
+    }
+
+    pub fn int(x: i64) -> Json {
+        Json::Int(x as i128)
     }
 
     // ------------------------------------------------------------ serialize
@@ -165,6 +248,9 @@ impl Json {
                 } else {
                     let _ = write!(out, "{x}");
                 }
+            }
+            Json::Int(i) => {
+                let _ = write!(out, "{i}");
             }
             Json::Str(s) => write_escaped(out, s),
             Json::Arr(a) => {
@@ -290,13 +376,16 @@ impl<'a> Parser<'a> {
         while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
             self.i += 1;
         }
+        let mut integral = true;
         if self.peek() == Some(b'.') {
+            integral = false;
             self.i += 1;
             while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
                 self.i += 1;
             }
         }
         if matches!(self.peek(), Some(b'e' | b'E')) {
+            integral = false;
             self.i += 1;
             if matches!(self.peek(), Some(b'+' | b'-')) {
                 self.i += 1;
@@ -307,6 +396,13 @@ impl<'a> Parser<'a> {
         }
         let text = std::str::from_utf8(&self.b[start..self.i])
             .map_err(|_| self.err("invalid utf8 in number"))?;
+        // Integer literals parse losslessly; the f64 fallback only fires
+        // for magnitudes beyond i128 (~1.7e38), where exactness is moot.
+        if integral {
+            if let Ok(i) = text.parse::<i128>() {
+                return Ok(Json::Int(i));
+            }
+        }
         text.parse::<f64>()
             .map(Json::Num)
             .map_err(|_| self.err("invalid number"))
@@ -476,6 +572,53 @@ mod tests {
     fn integers_serialize_without_fraction() {
         assert_eq!(Json::Num(42.0).to_string(), "42");
         assert_eq!(Json::Num(0.5).to_string(), "0.5");
+    }
+
+    #[test]
+    fn u64_round_trips_exactly_at_the_extremes() {
+        // u64::MAX, 2^53 - 1, 2^53, 2^53 + 1: every one survives the
+        // serialize→parse→as_u64 loop bit-exactly.  The old f64 detour
+        // collapsed 2^53 + 1 onto 2^53.
+        for x in [u64::MAX, (1 << 53) - 1, 1 << 53, (1 << 53) + 1, 0] {
+            let text = Json::u64(x).to_string();
+            let back = Json::parse(&text).unwrap();
+            assert_eq!(back.as_u64().unwrap(), x, "u64 {x} corrupted via `{text}`");
+        }
+        assert_eq!(
+            Json::parse("18446744073709551615").unwrap().as_u64().unwrap(),
+            u64::MAX
+        );
+        assert_eq!(Json::parse("9007199254740993").unwrap().as_u64().unwrap(), (1 << 53) + 1);
+        assert_eq!(Json::parse("-42").unwrap().as_i64().unwrap(), -42);
+    }
+
+    #[test]
+    fn as_u64_rejects_lossy_and_out_of_range_values() {
+        // Negative, fractional, u64-overflowing Ints all error.
+        assert!(Json::parse("-1").unwrap().as_u64().is_err());
+        assert!(Json::parse("1.5").unwrap().as_u64().is_err());
+        assert!(Json::parse("18446744073709551616").unwrap().as_u64().is_err());
+        // Num values at or above 2^53 are ambiguous — rejected, never
+        // silently truncated (this is the satellite bug).
+        assert!(Json::Num(9007199254740992.0).as_u64().is_err());
+        assert!(Json::Num(f64::NAN).as_u64().is_err());
+        assert!(Json::Num(1e300).as_u64().is_err());
+        // Small integral Nums (hand-built via Json::num, or parsed from
+        // an exponent literal) still convert — they are unambiguous.
+        assert_eq!(Json::Num(42.0).as_u64().unwrap(), 42);
+        assert_eq!(Json::parse("1e2").unwrap().as_u64().unwrap(), 100);
+        assert!(matches!(Json::parse("1e2").unwrap(), Json::Num(_)));
+    }
+
+    #[test]
+    fn int_and_num_compare_by_value_exactly() {
+        assert_eq!(Json::Int(4), Json::Num(4.0));
+        assert_eq!(Json::Num(-150.0), Json::Int(-150));
+        // 2^53 + 1 is not representable as f64: no cross-variant alias.
+        assert_ne!(Json::Int((1 << 53) + 1), Json::Num(9007199254740992.0));
+        assert_ne!(Json::Int(1), Json::Num(1.5));
+        // Nested containers inherit the numeric equality.
+        assert_eq!(Json::parse("[1, 2]").unwrap(), Json::arr_f64(&[1.0, 2.0]));
     }
 
     #[test]

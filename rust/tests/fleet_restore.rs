@@ -1,0 +1,252 @@
+//! Checkpoint/restore and streaming-aggregate battery for the long-lived
+//! fleet service: kill-at-every-event byte-identity (snapshot after each
+//! popped event, restore into a fresh `FleetState`, finish, compare
+//! `FleetReport::canonical_string`), snapshot idempotence across a
+//! 64-job trace, streaming aggregates versus the materialized report,
+//! and JSONL trace ingestion.
+
+use ringada::config::{AdmissionControl, FleetConfig};
+use ringada::fleet::{
+    serve, serve_streaming, serve_with_stats, AllocationPolicy, DeadlineEdf, FifoWholeRing,
+    FleetState, JobTrace, SmallestRingFirst, UtilizationAware,
+};
+use ringada::sim::Scenario;
+use ringada::util::json::Json;
+
+fn policies() -> [&'static dyn AllocationPolicy; 4] {
+    [&FifoWholeRing, &SmallestRingFirst, &UtilizationAware, &DeadlineEdf]
+}
+
+/// Small enough that the quadratic kill-at-every-event sweep stays cheap
+/// in debug builds, large enough to exercise queueing and re-planning.
+fn battery_cfg(seed: u64) -> FleetConfig {
+    let mut cfg = FleetConfig::synthetic(10, 8, seed);
+    cfg.mean_interarrival_s = 12.0;
+    cfg
+}
+
+/// Run `k` events, snapshot, round-trip the snapshot through its *text*
+/// form, resume into a fresh state, run to the end, and return the
+/// canonical report string.
+fn killed_at(cfg: &FleetConfig, policy: &dyn AllocationPolicy, k: usize) -> String {
+    let mut state = FleetState::new(cfg, policy).unwrap();
+    for i in 0..k {
+        assert!(state.step_event().unwrap(), "event stream ended early at {i}/{k}");
+    }
+    let text = state.snapshot().unwrap().to_string();
+    drop(state);
+    let reparsed = Json::parse(&text).unwrap();
+    let mut resumed = FleetState::resume(cfg, policy, &reparsed).unwrap();
+    resumed.run_to_end().unwrap();
+    resumed.into_report().unwrap().canonical_string()
+}
+
+/// The satellite property: for **every** event index, stopping there and
+/// resuming from the (text round-tripped) snapshot replays the
+/// uninterrupted run byte-for-byte.
+fn kill_battery(cfg: &FleetConfig, policy: &dyn AllocationPolicy) {
+    let want = serve(cfg, policy).unwrap().canonical_string();
+    let mut counter = FleetState::new(cfg, policy).unwrap();
+    let mut total = 0usize;
+    while counter.step_event().unwrap() {
+        total += 1;
+    }
+    assert!(total > 20, "battery config too small: only {total} events");
+    for k in 0..=total {
+        assert_eq!(
+            killed_at(cfg, policy, k),
+            want,
+            "kill at event {k}/{total} diverged (policy {})",
+            policy.name()
+        );
+    }
+}
+
+#[test]
+fn kill_at_every_event_replays_byte_identical_healthy() {
+    for seed in [3, 11] {
+        for policy in [&FifoWholeRing as &dyn AllocationPolicy, &DeadlineEdf] {
+            kill_battery(&battery_cfg(seed), policy);
+        }
+    }
+}
+
+#[test]
+fn kill_at_every_event_replays_byte_identical_faulted() {
+    for seed in [5, 11] {
+        let mut cfg = battery_cfg(seed);
+        cfg.scenario = Some(Scenario::synth(seed, 10, 2000.0, 0.8));
+        for policy in [&FifoWholeRing as &dyn AllocationPolicy, &DeadlineEdf] {
+            kill_battery(&cfg, policy);
+        }
+    }
+}
+
+#[test]
+fn kill_at_every_event_replays_with_preemption_and_admission() {
+    let mut cfg = battery_cfg(7);
+    cfg.preemption = true;
+    cfg.admission = AdmissionControl::Feasibility;
+    kill_battery(&cfg, &DeadlineEdf);
+}
+
+#[test]
+fn chained_resume_covers_every_event_of_a_64_job_trace() {
+    // Linear-cost version of the acceptance sweep: at every event the
+    // live state is snapshotted, the snapshot round-trips through text,
+    // and the run *continues on the restored state* — any representation
+    // loss compounds instead of being masked.  Snapshot idempotence
+    // (resume → snapshot → identical text) plus the final canonical
+    // equality covers kill-at-k for every k of the 64-job trace.
+    let mut cfg = FleetConfig::synthetic(24, 64, 2026);
+    cfg.mean_interarrival_s = 8.0;
+    for policy in policies() {
+        let want = serve(&cfg, policy).unwrap().canonical_string();
+        let mut live = FleetState::new(&cfg, policy).unwrap();
+        let mut events = 0usize;
+        loop {
+            let text = live.snapshot().unwrap().to_string();
+            let reparsed = Json::parse(&text).unwrap();
+            let resumed = FleetState::resume(&cfg, policy, &reparsed).unwrap();
+            assert_eq!(
+                resumed.snapshot().unwrap().to_string(),
+                text,
+                "snapshot not idempotent at event {events} (policy {})",
+                policy.name()
+            );
+            live = resumed;
+            if !live.step_event().unwrap() {
+                break;
+            }
+            events += 1;
+        }
+        assert!(events > 150, "expected a long event stream, got {events}");
+        assert_eq!(
+            live.into_report().unwrap().canonical_string(),
+            want,
+            "chained resume diverged (policy {})",
+            policy.name()
+        );
+    }
+}
+
+#[test]
+fn sampled_full_restarts_on_the_64_job_trace() {
+    // Direct (non-chained) spot checks of the same trace: cold restart
+    // from scratch at a stride of event indices.
+    let mut cfg = FleetConfig::synthetic(24, 64, 2026);
+    cfg.mean_interarrival_s = 8.0;
+    let want = serve(&cfg, &FifoWholeRing).unwrap().canonical_string();
+    let mut counter = FleetState::new(&cfg, &FifoWholeRing).unwrap();
+    let mut total = 0usize;
+    while counter.step_event().unwrap() {
+        total += 1;
+    }
+    for k in (0..=total).step_by(41) {
+        assert_eq!(killed_at(&cfg, &FifoWholeRing, k), want, "restart at {k}/{total} diverged");
+    }
+    assert_eq!(killed_at(&cfg, &FifoWholeRing, total), want);
+}
+
+#[test]
+fn streaming_aggregates_match_the_materialized_report() {
+    // Acceptance: on all four policies, healthy and faulted, the
+    // bounded-memory aggregates reproduce the materialized report —
+    // counts and sums bitwise, p95 within one sketch bucket.
+    let mut healthy = FleetConfig::synthetic(16, 24, 7);
+    healthy.mean_interarrival_s = 10.0;
+    let mut faulted = healthy.clone();
+    faulted.scenario = Some(Scenario::synth(7, 16, 2500.0, 0.8));
+    for cfg in [&healthy, &faulted] {
+        for policy in policies() {
+            let (report, _) = serve_with_stats(cfg, policy).unwrap();
+            let (agg, stats) = serve_streaming(cfg, policy).unwrap();
+            let tag = format!("policy {} scenario {}", policy.name(), report.scenario);
+            assert_eq!(agg.jobs, report.rows.len(), "jobs ({tag})");
+            assert_eq!(agg.completed, report.completed(), "completed ({tag})");
+            assert_eq!(agg.failed_jobs, report.failed_jobs(), "failed ({tag})");
+            assert_eq!(agg.unserved, report.unserved(), "unserved ({tag})");
+            assert_eq!(agg.rejected, report.rejected_jobs(), "rejected ({tag})");
+            assert_eq!(agg.preemptions, report.preemptions(), "preemptions ({tag})");
+            assert_eq!(agg.resizes, report.resizes(), "resizes ({tag})");
+            assert_eq!(agg.dead_devices, report.dead_devices, "dead ({tag})");
+            assert_eq!(agg.horizon_s.to_bits(), report.horizon_s.to_bits(), "horizon ({tag})");
+            let busy: f64 = report.pool_device_busy.iter().sum();
+            assert_eq!(agg.pool_busy_s.to_bits(), busy.to_bits(), "busy ({tag})");
+            for (a, b, name) in [
+                (agg.mean_jct_s(), report.mean_jct_s(), "mean_jct_s"),
+                (agg.mean_wait_s(), report.mean_wait_s(), "mean_wait_s"),
+                (agg.jain_fairness(), report.jain_fairness(), "jain_fairness"),
+                (agg.pool_utilization(), report.pool_utilization(), "pool_utilization"),
+                (agg.deadline_hit_rate(), report.deadline_hit_rate(), "deadline_hit_rate"),
+            ] {
+                assert_eq!(a.to_bits(), b.to_bits(), "{name} diverged ({tag})");
+            }
+            // The sketch quotes a bucket's upper edge: within one width
+            // above the exact nearest-rank p95, never below it.
+            let width = agg.sketch().width();
+            let err = agg.p95_jct_s() - report.p95_jct_s();
+            assert!(
+                err >= -1e-12 && err <= width * (1.0 + 1e-9),
+                "p95 off by {err} (width {width}, {tag})"
+            );
+            // Bounded memory: resident rows never approached the trace
+            // length (completed rows retire at their Done event).
+            assert!(
+                stats.peak_resident_rows > 0 && stats.peak_resident_rows < cfg.jobs,
+                "peak resident rows {} of {} jobs ({tag})",
+                stats.peak_resident_rows,
+                cfg.jobs
+            );
+        }
+    }
+}
+
+#[test]
+fn streaming_state_snapshots_and_resumes() {
+    // Streaming mode checkpoints too: kill mid-run, resume, and the
+    // final aggregates match the uninterrupted streaming serve bitwise.
+    let cfg = battery_cfg(9);
+    let (want, _) = serve_streaming(&cfg, &DeadlineEdf).unwrap();
+    let mut state = FleetState::streaming(&cfg, &DeadlineEdf).unwrap();
+    for _ in 0..12 {
+        assert!(state.step_event().unwrap());
+    }
+    let text = state.snapshot().unwrap().to_string();
+    let resumed = FleetState::resume(&cfg, &DeadlineEdf, &Json::parse(&text).unwrap()).unwrap();
+    assert!(resumed.into_report().is_err(), "streaming state must refuse a report");
+    let mut resumed = FleetState::resume(&cfg, &DeadlineEdf, &Json::parse(&text).unwrap()).unwrap();
+    resumed.run_to_end().unwrap();
+    let got = resumed.into_aggregates();
+    assert_eq!(got.to_json().to_string(), want.to_json().to_string());
+}
+
+#[test]
+fn jsonl_trace_replays_the_synthetic_stream_byte_identically() {
+    // Serving the materialized synthetic trace back through the JSONL
+    // source must be invisible: same canonical report, and mid-stream
+    // snapshots resume through the re-opened file.
+    let mut cfg = FleetConfig::synthetic(12, 10, 13);
+    cfg.mean_interarrival_s = 9.0;
+    let want = serve(&cfg, &FifoWholeRing).unwrap().canonical_string();
+    let jobs = JobTrace::synthetic(&cfg);
+    let path = std::env::temp_dir().join(format!("ringada_trace_{}.jsonl", std::process::id()));
+    std::fs::write(&path, JobTrace::to_jsonl(&jobs)).unwrap();
+    let mut traced = cfg.clone();
+    traced.trace_path = Some(path.to_string_lossy().into_owned());
+
+    let whole = serve(&traced, &FifoWholeRing).unwrap().canonical_string();
+    let mut state = FleetState::new(&traced, &FifoWholeRing).unwrap();
+    for _ in 0..10 {
+        assert!(state.step_event().unwrap());
+    }
+    let text = state.snapshot().unwrap().to_string();
+    drop(state);
+    let mut resumed =
+        FleetState::resume(&traced, &FifoWholeRing, &Json::parse(&text).unwrap()).unwrap();
+    resumed.run_to_end().unwrap();
+    let resumed_canon = resumed.into_report().unwrap().canonical_string();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(whole, want, "JSONL ingestion changed the report");
+    assert_eq!(resumed_canon, want, "mid-stream JSONL resume diverged");
+}

@@ -1,0 +1,11 @@
+//! `ringada-lint`: the gating determinism & robustness static-analysis
+//! pass.  All logic lives in `ringada::lint` so the rules, lexer, and
+//! ratchet are unit-testable; this wrapper only maps the CLI onto a
+//! process exit code (0 clean, 1 findings, 2 usage/I-O error).
+
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    ExitCode::from(ringada::lint::run_cli(&args))
+}

@@ -5,7 +5,7 @@
 //! deferred until the update lands (paper §IV.2 — this is what keeps every
 //! batch on one weight version without stashing).
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, VecDeque};
 use std::path::PathBuf;
 use std::sync::mpsc::{Receiver, Sender};
 use std::thread::JoinHandle;
@@ -86,9 +86,9 @@ struct DeviceState {
     peers: Vec<PeerSender>,
     events: Sender<Event>,
     /// batch_id → stored inputs of this position's *unfrozen* blocks.
-    stored: HashMap<u64, Vec<(usize, HostTensor)>>,
+    stored: BTreeMap<u64, Vec<(usize, HostTensor)>>,
     /// batch_id → labels (initiator only; never serialized to peers).
-    labels: HashMap<u64, (HostTensor, HostTensor)>,
+    labels: BTreeMap<u64, (HostTensor, HostTensor)>,
     /// Batches forwarded here whose adapter update hasn't landed yet.
     awaiting_update: usize,
     /// Deferred forwards (the pause rule).
@@ -130,8 +130,8 @@ fn device_main(init: DeviceInit) -> Result<()> {
         num_positions: init.num_positions,
         peers: init.peers,
         events: init.events,
-        stored: HashMap::new(),
-        labels: HashMap::new(),
+        stored: BTreeMap::new(),
+        labels: BTreeMap::new(),
         awaiting_update: 0,
         deferred: VecDeque::new(),
     };

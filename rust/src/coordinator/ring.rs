@@ -216,9 +216,12 @@ impl InitiatorRotation {
                 .copied()
                 .filter(|&v| !used[v])
                 .max_by(|&a, &b| {
-                    rate[cur][a]
-                        .partial_cmp(&rate[cur][b])
-                        .unwrap_or(std::cmp::Ordering::Equal)
+                    // total_cmp: validated rates are finite, so this agrees
+                    // with the old arithmetic order; the id tie-break keeps
+                    // the historical largest-id-wins choice among equal
+                    // rates explicit instead of an artifact of max_by
+                    // returning the last maximum.
+                    rate[cur][a].total_cmp(&rate[cur][b]).then(a.cmp(&b))
                 })
                 .unwrap();
             used[next] = true;

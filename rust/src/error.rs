@@ -21,6 +21,7 @@ pub enum Error {
     Schedule(String),
     Cluster(String),
     Scenario(String),
+    Lint(String),
     Other(String),
 }
 
@@ -42,6 +43,7 @@ impl fmt::Display for Error {
             Error::Schedule(msg) => write!(f, "schedule error: {msg}"),
             Error::Cluster(msg) => write!(f, "cluster error: {msg}"),
             Error::Scenario(msg) => write!(f, "scenario error: {msg}"),
+            Error::Lint(msg) => write!(f, "lint error: {msg}"),
             Error::Other(msg) => write!(f, "{msg}"),
         }
     }

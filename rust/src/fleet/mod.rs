@@ -102,7 +102,7 @@ pub use policy::{
 };
 
 use std::cmp::Ordering;
-use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::collections::{BTreeMap, BinaryHeap, VecDeque};
 
 use crate::config::{AdmissionControl, FleetConfig, TrainingConfig};
 use crate::coordinator::{Coordinator, LayerAssignment, Planner, PlannerCosts, SearchParams};
@@ -317,7 +317,7 @@ impl FreePool {
 /// assignment through the same constructor a fresh search uses.
 #[derive(Debug, Default)]
 struct PlanCache {
-    map: HashMap<PlanKey, Option<CachedPlan>>,
+    map: BTreeMap<PlanKey, Option<CachedPlan>>,
     hits: usize,
     misses: usize,
 }
@@ -424,11 +424,11 @@ impl PlanCache {
         Ok((key, plan))
     }
 
-    /// Serialize the cache with entries in the derived [`PlanKey`] order
-    /// — `HashMap` iteration order must never leak into a snapshot.
+    /// Serialize the cache with entries in the derived [`PlanKey`] order;
+    /// `map` is a `BTreeMap`, so its iteration order *is* that order and
+    /// snapshots stay byte-identical to the old explicitly-sorted dump.
     fn to_json(&self) -> Json {
-        let mut entries: Vec<(&PlanKey, &Option<CachedPlan>)> = self.map.iter().collect();
-        entries.sort_by(|a, b| a.0.cmp(b.0));
+        let entries: Vec<(&PlanKey, &Option<CachedPlan>)> = self.map.iter().collect();
         Json::obj(vec![
             ("hits", Json::u64(self.hits as u64)),
             ("misses", Json::u64(self.misses as u64)),
@@ -441,7 +441,7 @@ impl PlanCache {
 
     fn from_json(v: &Json) -> Result<PlanCache> {
         let mut cache = PlanCache {
-            map: HashMap::new(),
+            map: BTreeMap::new(),
             hits: v.req("hits")?.as_usize()?,
             misses: v.req("misses")?.as_usize()?,
         };
@@ -463,7 +463,7 @@ impl PlanCache {
         let mut added = 0usize;
         for e in v.req("entries")?.as_arr()? {
             let (key, plan) = Self::entry_from_json(e)?;
-            if let std::collections::hash_map::Entry::Vacant(slot) = self.map.entry(key) {
+            if let std::collections::btree_map::Entry::Vacant(slot) = self.map.entry(key) {
                 slot.insert(plan);
                 added += 1;
             }

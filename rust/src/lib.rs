@@ -99,12 +99,39 @@
 //! `DeadlineEdf` + preemption beating FIFO on deadline hit rate on a
 //! contended pool.
 
+// Curated clippy posture for the gating `cargo clippy -- -D warnings` CI
+// step (ci.yml).  Policy: correctness, suspicious, and perf lints stay on;
+// the allows below are style/complexity lints that conflict with this
+// crate's deliberate idiom — hand-rolled zero-dependency infrastructure
+// (inherent `to_string` on `util::json::Json`, builder-less `new()`s),
+// index-heavy numeric kernels (single-char math names, explicit range
+// loops), and wide config/report structs (argument and type complexity).
+// Curate here, never via CI flags, so local `cargo clippy` matches CI.
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::type_complexity)]
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::new_without_default)]
+#![allow(clippy::len_without_is_empty)]
+#![allow(clippy::inherent_to_string)]
+#![allow(clippy::many_single_char_names)]
+#![allow(clippy::comparison_chain)]
+#![allow(clippy::collapsible_if)]
+#![allow(clippy::collapsible_else_if)]
+#![allow(clippy::manual_range_contains)]
+#![allow(clippy::ptr_arg)]
+#![allow(clippy::assign_op_pattern)]
+#![allow(clippy::large_enum_variant)]
+#![allow(clippy::result_large_err)]
+#![allow(clippy::should_implement_trait)]
+#![allow(clippy::module_inception)]
+
 pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod error;
 pub mod fleet;
+pub mod lint;
 pub mod metrics;
 pub mod model;
 pub mod pipeline;

@@ -1,0 +1,407 @@
+//! Minimal Rust source lexer for the in-tree linter: strips comments and
+//! string/char-literal *contents*, splits each line into a code part and a
+//! `//`-comment part, and marks `#[cfg(test)]` / `#[test]` item spans as
+//! exempt.
+//!
+//! This is deliberately not a full Rust lexer — it understands exactly
+//! enough token structure (line and nested block comments, plain / raw /
+//! byte strings, char literals vs lifetimes, brace nesting) to make the
+//! substring rules in [`crate::lint::rules`] sound: a banned pattern inside
+//! a comment, a string literal, or a test-only item must never fire, and
+//! the same pattern in live library code must always fire.  Line numbers
+//! are preserved exactly (multi-line strings and block comments emit empty
+//! code lines), so findings point at real source lines.
+
+/// One source line after lexing.
+#[derive(Debug, Clone, Default)]
+pub struct Line {
+    /// Code with comments removed and literal contents blanked: the
+    /// delimiting quotes survive (as an empty `""`), their contents do
+    /// not, and char literals vanish entirely.  Lifetimes keep their
+    /// leading quote.
+    pub code: String,
+    /// Concatenated text of `//` comments that *start* on this line (the
+    /// `//` itself is dropped).  `lint: allow(...)` annotations are parsed
+    /// out of this.
+    pub comment: String,
+}
+
+/// Lexed file: per-line code/comment split plus test-span exemptions.
+#[derive(Debug, Clone, Default)]
+pub struct Stripped {
+    pub lines: Vec<Line>,
+    /// `exempt[i]` ⇔ line `i` lies inside (or is) a `#[cfg(test)]` /
+    /// `#[test]` item — its braces, the attribute line itself included.
+    pub exempt: Vec<bool>,
+}
+
+impl Stripped {
+    /// Number of source lines (always ≥ 1, even for an empty file).
+    pub fn len(&self) -> usize {
+        self.lines.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lines.is_empty()
+    }
+}
+
+/// Lexer state: what kind of region the scan head is inside.
+enum State {
+    Code,
+    LineComment,
+    /// Nested block comment at the given depth.
+    Block(usize),
+    /// Plain or byte string literal.
+    Str,
+    /// Raw string closed by `"` followed by this many `#`s.
+    RawStr(usize),
+    /// Char literal body (the opening quote and any escape head were
+    /// consumed on entry); ends at the next `'`.
+    CharLit,
+}
+
+/// Lex `src` into per-line code/comment parts and test-span exemptions.
+pub fn strip(src: &str) -> Stripped {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut lines: Vec<Line> = Vec::new();
+    let mut cur = Line::default();
+    let mut st = State::Code;
+    let mut i = 0usize;
+
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            // A newline terminates line comments; every other state
+            // continues onto the next source line.
+            if matches!(st, State::LineComment) {
+                st = State::Code;
+            }
+            lines.push(std::mem::take(&mut cur));
+            i += 1;
+            continue;
+        }
+        match st {
+            State::Code => {
+                if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+                    st = State::LineComment;
+                    i += 2;
+                } else if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    st = State::Block(1);
+                    i += 2;
+                } else if c == '"' {
+                    cur.code.push('"');
+                    st = State::Str;
+                    i += 1;
+                } else if (c == 'r' || c == 'b') && !prev_is_ident(&chars, i) {
+                    if let Some((hashes, skip)) = raw_string_open(&chars, i) {
+                        cur.code.push('"');
+                        st = State::RawStr(hashes);
+                        i += skip;
+                    } else if c == 'b' && i + 1 < n && chars[i + 1] == '"' {
+                        cur.code.push('"');
+                        st = State::Str;
+                        i += 2;
+                    } else {
+                        cur.code.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    // Char literal vs lifetime.  A literal is `'x'` or an
+                    // escape `'\…'`; anything else (`'a` in `<'a>`) is a
+                    // lifetime and stays in the code stream.  Escape heads
+                    // are consumed here so `'\''` and `'\\'` close
+                    // correctly in the CharLit state.
+                    if i + 1 < n && chars[i + 1] == '\\' {
+                        st = State::CharLit;
+                        i += 3;
+                    } else if i + 2 < n && chars[i + 2] == '\'' {
+                        i += 3;
+                    } else {
+                        cur.code.push('\'');
+                        i += 1;
+                    }
+                } else {
+                    cur.code.push(c);
+                    i += 1;
+                }
+            }
+            State::LineComment => {
+                cur.comment.push(c);
+                i += 1;
+            }
+            State::Block(d) => {
+                if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    st = State::Block(d + 1);
+                    i += 2;
+                } else if c == '*' && i + 1 < n && chars[i + 1] == '/' {
+                    st = if d == 1 { State::Code } else { State::Block(d - 1) };
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    // Skip the escaped char — unless it is a newline
+                    // (string continuation), which the top of the loop
+                    // must see so line numbers stay aligned.
+                    if i + 1 < n && chars[i + 1] == '\n' {
+                        i += 1;
+                    } else {
+                        i += 2;
+                    }
+                } else if c == '"' {
+                    cur.code.push('"');
+                    st = State::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            State::RawStr(h) => {
+                if c == '"' && closes_raw(&chars, i, h) {
+                    cur.code.push('"');
+                    st = State::Code;
+                    i += 1 + h;
+                } else {
+                    i += 1;
+                }
+            }
+            State::CharLit => {
+                if c == '\'' {
+                    st = State::Code;
+                }
+                i += 1;
+            }
+        }
+    }
+    lines.push(cur);
+    let exempt = mark_test_spans(&lines);
+    Stripped { lines, exempt }
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+fn prev_is_ident(chars: &[char], i: usize) -> bool {
+    i > 0 && is_ident_char(chars[i - 1])
+}
+
+/// If `chars[i..]` opens a raw (or raw byte) string — `r"`, `r#"`, `br##"`,
+/// … — return `(hash_count, chars_consumed_by_the_opener)`.
+fn raw_string_open(chars: &[char], i: usize) -> Option<(usize, usize)> {
+    let mut j = i;
+    if chars[j] == 'b' {
+        j += 1;
+        if j >= chars.len() || chars[j] != 'r' {
+            return None;
+        }
+    }
+    j += 1; // past the `r`
+    let mut hashes = 0usize;
+    while j < chars.len() && chars[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j < chars.len() && chars[j] == '"' {
+        Some((hashes, j + 1 - i))
+    } else {
+        None
+    }
+}
+
+/// Does the `"` at `chars[i]` close a raw string with `h` trailing `#`s?
+fn closes_raw(chars: &[char], i: usize, h: usize) -> bool {
+    if i + h >= chars.len() && h > 0 {
+        return false;
+    }
+    (1..=h).all(|k| i + k < chars.len() && chars[i + k] == '#')
+}
+
+/// Mark every line inside a `#[cfg(test)]` / `#[test]` item span.  The
+/// attribute sets a pending flag; the next `{` at statement level opens an
+/// exempt brace span (a `;` before it — a braceless item — clears the
+/// flag).  Spans nest; brace depth is tracked over the *stripped* code, so
+/// braces in strings or comments cannot desynchronize it.
+fn mark_test_spans(lines: &[Line]) -> Vec<bool> {
+    let mut exempt = vec![false; lines.len()];
+    let mut depth = 0usize;
+    // Paren/bracket depth: a `;` inside `(…)` / `[…]` (e.g. `[u8; 4]`)
+    // must not clear a pending attribute.
+    let mut pb = 0usize;
+    let mut pending = false;
+    let mut spans: Vec<usize> = Vec::new();
+    for (li, line) in lines.iter().enumerate() {
+        if line.code.contains("#[cfg(test)]") || line.code.contains("#[test]") {
+            pending = true;
+        }
+        if pending || !spans.is_empty() {
+            exempt[li] = true;
+        }
+        for ch in line.code.chars() {
+            match ch {
+                '{' => {
+                    depth += 1;
+                    if pending {
+                        spans.push(depth);
+                        pending = false;
+                    }
+                }
+                '}' => {
+                    if spans.last() == Some(&depth) {
+                        spans.pop();
+                    }
+                    depth = depth.saturating_sub(1);
+                }
+                '(' | '[' => pb += 1,
+                ')' | ']' => pb = pb.saturating_sub(1),
+                ';' => {
+                    if pending && pb == 0 {
+                        pending = false;
+                    }
+                }
+                _ => {}
+            }
+        }
+        if !spans.is_empty() {
+            exempt[li] = true;
+        }
+    }
+    exempt
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn codes(src: &str) -> Vec<String> {
+        strip(src).lines.into_iter().map(|l| l.code).collect()
+    }
+
+    #[test]
+    fn comments_are_removed_and_captured() {
+        let s = strip("let x = 1; // trailing HashMap note\n// full line\nlet y = 2;\n");
+        assert_eq!(s.lines[0].code, "let x = 1; ");
+        assert_eq!(s.lines[0].comment, " trailing HashMap note");
+        assert_eq!(s.lines[1].code, "");
+        assert_eq!(s.lines[1].comment, " full line");
+        assert_eq!(s.lines[2].code, "let y = 2;");
+    }
+
+    #[test]
+    fn block_comments_nest_and_preserve_line_count() {
+        let src = "a\n/* one /* two\nstill */ still */ b\nc\n";
+        let c = codes(src);
+        assert_eq!(c.len(), 5, "trailing newline yields a final empty line");
+        assert_eq!(c[0], "a");
+        assert_eq!(c[1], "");
+        assert_eq!(c[2], " b");
+        assert_eq!(c[3], "c");
+    }
+
+    #[test]
+    fn string_contents_are_blanked() {
+        let c = codes("let s = \"HashMap::new() // not code\"; let t = 1;\n");
+        assert_eq!(c[0], "let s = \"\"; let t = 1;");
+        // Escaped quote stays inside the literal.
+        let c = codes("let s = \"a\\\"HashMap\"; x();\n");
+        assert_eq!(c[0], "let s = \"\"; x();");
+    }
+
+    #[test]
+    fn raw_and_byte_strings_are_blanked() {
+        let c = codes("let s = r#\"Instant::now() \" inner\"#; y();\n");
+        assert_eq!(c[0], "let s = \"\"; y();");
+        let c = codes("let s = r\"plain raw\"; z();\n");
+        assert_eq!(c[0], "let s = \"\"; z();");
+        let c = codes("let s = b\"bytes\"; let r = br#\"raw bytes\"#; w();\n");
+        assert_eq!(c[0], "let s = \"\"; let r = \"\"; w();");
+    }
+
+    #[test]
+    fn multi_line_strings_keep_line_numbers() {
+        let src = "let s = \"line one\nline two with HashMap\nend\"; tail();\nnext();\n";
+        let c = codes(src);
+        assert_eq!(c.len(), 5);
+        assert_eq!(c[0], "let s = \"");
+        assert_eq!(c[1], "");
+        assert_eq!(c[2], "\"; tail();");
+        assert_eq!(c[3], "next();");
+    }
+
+    #[test]
+    fn char_literals_vanish_but_lifetimes_survive() {
+        let c = codes("let q = '\"'; let nl = '\\n'; let bs = '\\\\'; let qq = '\\''; f();\n");
+        assert_eq!(c[0], "let q = ; let nl = ; let bs = ; let qq = ; f();");
+        let c = codes("fn f<'a>(x: &'a str) -> &'a str { x }\n");
+        assert_eq!(c[0], "fn f<'a>(x: &'a str) -> &'a str { x }");
+    }
+
+    #[test]
+    fn identifier_ending_in_r_or_b_is_not_a_raw_string() {
+        let c = codes("let var = 1; let grab = 2; f(var, grab);\n");
+        assert_eq!(c[0], "let var = 1; let grab = 2; f(var, grab);");
+    }
+
+    #[test]
+    fn cfg_test_mod_is_exempt_to_its_closing_brace() {
+        let src = "\
+fn live() {}
+#[cfg(test)]
+mod tests {
+    fn t() { inner(); }
+}
+fn also_live() {}
+";
+        let s = strip(src);
+        assert!(!s.exempt[0]);
+        assert!(s.exempt[1], "the attribute line itself is exempt");
+        assert!(s.exempt[2] && s.exempt[3] && s.exempt[4]);
+        assert!(!s.exempt[5]);
+    }
+
+    #[test]
+    fn test_fn_attribute_is_exempt() {
+        let src = "\
+fn live() {}
+#[test]
+fn check(x: [u8; 4]) {
+    body();
+}
+fn live2() {}
+";
+        let s = strip(src);
+        assert!(!s.exempt[0]);
+        assert!(s.exempt[1] && s.exempt[2] && s.exempt[3] && s.exempt[4]);
+        assert!(!s.exempt[5], "span ends at the closing brace");
+    }
+
+    #[test]
+    fn braceless_cfg_test_item_does_not_leak() {
+        let src = "\
+#[cfg(test)]
+use crate::something;
+fn live() {}
+";
+        let s = strip(src);
+        assert!(s.exempt[0] && s.exempt[1]);
+        assert!(!s.exempt[2], "the `;` ends the attribute's reach");
+    }
+
+    #[test]
+    fn braces_inside_strings_do_not_desync_spans() {
+        let src = "\
+#[cfg(test)]
+mod tests {
+    const S: &str = \"}}}{{{\";
+}
+fn live() {}
+";
+        let s = strip(src);
+        assert!(s.exempt[2] && s.exempt[3]);
+        assert!(!s.exempt[4]);
+    }
+}

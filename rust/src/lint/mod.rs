@@ -1,0 +1,428 @@
+//! `ringada-lint`: in-tree static analysis gating the crate's determinism
+//! and robustness contract (README "Determinism contract", ROADMAP item 1).
+//!
+//! The simulator's core claim is bit-identical replay: the same scenario,
+//! seed, and policy must produce the same report byte for byte, on every
+//! host, forever.  The rules below are the recurring ways Rust code quietly
+//! breaks that claim (or panics a long-lived service), caught at the source
+//! level before they can reach a run:
+//!
+//! - `hash-collections` (R1) — no `HashMap`/`HashSet` in live library
+//!   code.  Their iteration order is seeded per-process; anything iterated,
+//!   reported, or serialized out of one is nondeterministic.  Use
+//!   `BTreeMap`/`BTreeSet` or a kept-sorted `Vec`.
+//! - `partial-cmp` (R2) — no `partial_cmp` outside a `fn partial_cmp`
+//!   definition.  NaN compares as `None`: `.unwrap()` panics mid-run and
+//!   `unwrap_or(Equal)` silently scrambles order.  Use `f64::total_cmp`.
+//! - `ambient-entropy` (R3) — no `Instant::now`, `SystemTime`,
+//!   `RandomState`, or `thread_rng` in `src/`; replay requires simulated
+//!   clocks and seeded `Rng` streams.
+//! - `unwrap-ratchet` (R4) — `.unwrap()`/`.expect(` calls in live code are
+//!   budgeted per file by the committed `lint_ratchet.json`; counts may
+//!   only decrease (see [`ratchet`]).
+//! - `sort-tie-break` (R5) — float sorts over a *projected* key (`a.0`,
+//!   `x.score`, `rate[i][j]`) must chain an explicit `.then`/`.then_with`
+//!   tie-break, or equal keys leave the order at the mercy of the input
+//!   permutation.
+//!
+//! Any rule except `bad-allow` can be waived line-by-line with a comment
+//! annotation, which requires a reason:
+//!
+//! ```text
+//! let t0 = std::time::Instant::now(); // lint: allow(ambient-entropy, bench harness timing)
+//! ```
+//!
+//! An annotation on a comment-only line applies to the next line with
+//! code.  A malformed annotation (unknown rule, missing reason) is itself
+//! a gating `bad-allow` finding, so waivers cannot rot silently.
+//!
+//! The binary scans `$CARGO_MANIFEST_DIR/src` by default, prints findings
+//! as `file:line rule message` plus a machine-readable JSON summary line,
+//! and exits 0 (clean) / 1 (findings) / 2 (usage or I/O error) — red in CI
+//! on anything but 0.
+
+pub mod lexer;
+pub mod ratchet;
+pub mod rules;
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+use lexer::Stripped;
+use ratchet::Ratchet;
+use rules::{Finding, Rule, Scope};
+
+/// Result of scanning one source file.
+#[derive(Debug, Clone, Default)]
+pub struct FileScan {
+    /// Findings from the always-on rules (R1/R2/R3/R5 plus `bad-allow`),
+    /// sorted by (line, rule).
+    pub findings: Vec<Finding>,
+    /// 1-based lines of live `.unwrap()`/`.expect(` calls, for the ratchet.
+    pub unwrap_lines: Vec<usize>,
+}
+
+/// Result of scanning a source tree.
+#[derive(Debug, Clone, Default)]
+pub struct TreeScan {
+    pub findings: Vec<Finding>,
+    /// Display path → live unwrap/expect call lines (files with none are
+    /// omitted).
+    pub unwrap_lines: BTreeMap<String, Vec<usize>>,
+    pub files_scanned: usize,
+}
+
+/// Scan one file's source text.  `display_path` is used verbatim in
+/// findings and as the ratchet key (e.g. `src/sim/mod.rs`).
+pub fn scan_source(display_path: &str, src: &str) -> FileScan {
+    let stripped = lexer::strip(src);
+    let (allows, mut findings) = parse_allows(display_path, &stripped);
+    let skip = |li: usize, rule: Rule| -> bool {
+        stripped.exempt.get(li).copied().unwrap_or(false)
+            || allows.get(&li).map_or(false, |rs| rs.contains(&rule))
+    };
+    let scope = Scope { stripped: &stripped, skip: &skip };
+    rules::check_hash_collections(display_path, &scope, &mut findings);
+    rules::check_partial_cmp(display_path, &scope, &mut findings);
+    rules::check_ambient_entropy(display_path, &scope, &mut findings);
+    rules::check_sort_tie_break(display_path, &scope, &mut findings);
+    let unwrap_lines = rules::unwrap_lines(&scope);
+    findings.sort_by(|a, b| a.line.cmp(&b.line).then(a.rule.cmp(&b.rule)));
+    FileScan { findings, unwrap_lines }
+}
+
+/// Scan every `.rs` file under `root` (recursively, in sorted path order).
+/// Display paths are relative to `root`'s parent, so the default root
+/// `…/rust/src` yields ratchet-stable keys like `src/sim/mod.rs`.
+pub fn scan_tree(root: &Path) -> Result<TreeScan> {
+    let mut files = Vec::new();
+    collect_rs_files(root, &mut files)
+        .map_err(|e| Error::Lint(format!("walking {}: {e}", root.display())))?;
+    let base = root.parent().unwrap_or(root);
+    let mut out = TreeScan { files_scanned: files.len(), ..TreeScan::default() };
+    for path in &files {
+        let rel = match path.strip_prefix(base) {
+            Ok(r) => r,
+            Err(_) => path.as_path(),
+        };
+        let display = rel.to_string_lossy().into_owned();
+        let src = fs::read_to_string(path)
+            .map_err(|e| Error::Lint(format!("reading {}: {e}", path.display())))?;
+        let scan = scan_source(&display, &src);
+        out.findings.extend(scan.findings);
+        if !scan.unwrap_lines.is_empty() {
+            out.unwrap_lines.insert(display, scan.unwrap_lines);
+        }
+    }
+    Ok(out)
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<PathBuf> = Vec::new();
+    for entry in fs::read_dir(dir)? {
+        entries.push(entry?.path());
+    }
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().map_or(false, |ext| ext == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// The annotation marker.  Built from pieces so the linter's self-scan
+/// never mistakes this constant's own source line for an annotation.
+const ALLOW_MARKER: &str = "lint: allow(";
+
+/// Parse `lint: allow` annotations out of the per-line comments.  Returns
+/// the per-target-line allowed rules plus `bad-allow` findings for
+/// malformed annotations.
+fn parse_allows(file: &str, stripped: &Stripped) -> (BTreeMap<usize, Vec<Rule>>, Vec<Finding>) {
+    let mut allows: BTreeMap<usize, Vec<Rule>> = BTreeMap::new();
+    let mut findings = Vec::new();
+    for (li, line) in stripped.lines.iter().enumerate() {
+        let text = line.comment.trim();
+        let Some(rest) = text.strip_prefix(ALLOW_MARKER) else {
+            continue;
+        };
+        match parse_allow_body(rest) {
+            Ok(rule) => {
+                // An annotation on a comment-only line covers the next
+                // line that has code; otherwise it covers its own line.
+                let target = if line.code.trim().is_empty() {
+                    (li + 1..stripped.len())
+                        .find(|&j| !stripped.lines[j].code.trim().is_empty())
+                        .unwrap_or(li)
+                } else {
+                    li
+                };
+                allows.entry(target).or_default().push(rule);
+            }
+            Err(msg) => findings.push(Finding {
+                file: file.to_string(),
+                line: li + 1,
+                rule: Rule::BadAllow,
+                message: msg,
+            }),
+        }
+    }
+    (allows, findings)
+}
+
+fn parse_allow_body(rest: &str) -> std::result::Result<Rule, String> {
+    let Some(close) = rest.rfind(')') else {
+        return Err("malformed allow annotation: missing `)`".to_string());
+    };
+    let Some((id, reason)) = rest[..close].split_once(',') else {
+        return Err("malformed allow annotation: expected `allow(<rule>, <reason>)`".to_string());
+    };
+    let id = id.trim();
+    let reason = reason.trim();
+    let Some(rule) = Rule::from_id(id) else {
+        return Err(format!("allow annotation names unknown rule `{id}`"));
+    };
+    if !Rule::ALLOWABLE.contains(&rule) {
+        return Err(format!("rule `{id}` cannot be allowed"));
+    }
+    if reason.is_empty() {
+        return Err("allow annotation requires a non-empty reason".to_string());
+    }
+    Ok(rule)
+}
+
+// ------------------------------------------------------------------- CLI
+
+#[derive(Debug, Clone)]
+struct Opts {
+    root: PathBuf,
+    ratchet: PathBuf,
+    update_ratchet: bool,
+    json: bool,
+}
+
+const USAGE: &str = "usage: ringada-lint [--root DIR] [--ratchet FILE] [--update-ratchet] [--json]";
+
+fn parse_args(args: &[String]) -> Result<Opts> {
+    let manifest = std::env::var("CARGO_MANIFEST_DIR").ok().map(PathBuf::from);
+    let mut root: Option<PathBuf> = None;
+    let mut ratchet: Option<PathBuf> = None;
+    let mut update_ratchet = false;
+    let mut json = false;
+    let mut it = args.iter();
+    while let Some(arg) = it.next() {
+        match arg.as_str() {
+            "--root" => root = Some(PathBuf::from(next_value(&mut it, "--root")?)),
+            "--ratchet" => ratchet = Some(PathBuf::from(next_value(&mut it, "--ratchet")?)),
+            "--update-ratchet" => update_ratchet = true,
+            "--json" => json = true,
+            other => {
+                return Err(Error::Lint(format!("unknown argument `{other}` ({USAGE})")));
+            }
+        }
+    }
+    let root = match (root, &manifest) {
+        (Some(r), _) => r,
+        (None, Some(m)) => m.join("src"),
+        (None, None) => {
+            return Err(Error::Lint(format!(
+                "--root is required when CARGO_MANIFEST_DIR is unset ({USAGE})"
+            )));
+        }
+    };
+    let ratchet = match (ratchet, manifest) {
+        (Some(r), _) => r,
+        (None, Some(m)) => m.join("lint_ratchet.json"),
+        (None, None) => {
+            return Err(Error::Lint(format!(
+                "--ratchet is required when CARGO_MANIFEST_DIR is unset ({USAGE})"
+            )));
+        }
+    };
+    Ok(Opts { root, ratchet, update_ratchet, json })
+}
+
+fn next_value<'a>(it: &mut std::slice::Iter<'a, String>, flag: &str) -> Result<&'a str> {
+    match it.next() {
+        Some(v) => Ok(v.as_str()),
+        None => Err(Error::Lint(format!("{flag} requires a value ({USAGE})"))),
+    }
+}
+
+/// Run the lint pass over `root` and resolve the ratchet: either gate
+/// against `ratchet_path` (a missing file means all budgets are zero) or,
+/// with `update_ratchet`, rewrite it from the live counts.  Returns all
+/// findings sorted by (file, line, rule) plus the scan.
+pub fn run(root: &Path, ratchet_path: &Path, update_ratchet: bool) -> Result<(Vec<Finding>, TreeScan)> {
+    let scan = scan_tree(root)?;
+    let mut findings = scan.findings.clone();
+    if update_ratchet {
+        let counts: BTreeMap<String, usize> =
+            scan.unwrap_lines.iter().map(|(f, ls)| (f.clone(), ls.len())).collect();
+        let next = Ratchet::from_counts(&counts);
+        fs::write(ratchet_path, format!("{}\n", next.to_json_string()))
+            .map_err(|e| Error::Lint(format!("writing {}: {e}", ratchet_path.display())))?;
+    } else {
+        let budget = match fs::read_to_string(ratchet_path) {
+            Ok(text) => Ratchet::parse(&text)?,
+            Err(e) if e.kind() == io::ErrorKind::NotFound => Ratchet::default(),
+            Err(e) => {
+                return Err(Error::Lint(format!("reading {}: {e}", ratchet_path.display())));
+            }
+        };
+        findings.extend(budget.compare(&scan.unwrap_lines));
+    }
+    findings.sort_by(|a, b| {
+        a.file.cmp(&b.file).then(a.line.cmp(&b.line)).then(a.rule.cmp(&b.rule))
+    });
+    Ok((findings, scan))
+}
+
+/// Machine-readable summary: file/finding counts plus per-rule totals; the
+/// full findings list rides along under `findings_list` when requested.
+fn summary_json(findings: &[Finding], scan: &TreeScan, with_list: bool) -> Json {
+    let mut by_rule: BTreeMap<String, Json> = BTreeMap::new();
+    for rule in [
+        Rule::HashCollections,
+        Rule::PartialCmp,
+        Rule::AmbientEntropy,
+        Rule::SortTieBreak,
+        Rule::UnwrapRatchet,
+        Rule::BadAllow,
+    ] {
+        let n = findings.iter().filter(|f| f.rule == rule).count();
+        by_rule.insert(rule.id().to_string(), Json::u64(n as u64));
+    }
+    let mut fields = vec![
+        ("files", Json::u64(scan.files_scanned as u64)),
+        ("findings", Json::u64(findings.len() as u64)),
+        ("by_rule", Json::Obj(by_rule)),
+    ];
+    if with_list {
+        let list = findings
+            .iter()
+            .map(|f| {
+                Json::obj(vec![
+                    ("file", Json::str(&f.file)),
+                    ("line", Json::u64(f.line as u64)),
+                    ("rule", Json::str(f.rule.id())),
+                    ("message", Json::str(&f.message)),
+                ])
+            })
+            .collect();
+        fields.push(("findings_list", Json::Arr(list)));
+    }
+    Json::obj(fields)
+}
+
+/// CLI entry point; returns the process exit code (0 clean, 1 findings,
+/// 2 usage or I/O error).
+pub fn run_cli(args: &[String]) -> u8 {
+    let opts = match parse_args(args) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("ringada-lint: {e}");
+            return 2;
+        }
+    };
+    let (findings, scan) = match run(&opts.root, &opts.ratchet, opts.update_ratchet) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("ringada-lint: {e}");
+            return 2;
+        }
+    };
+    if opts.json {
+        let line = summary_json(&findings, &scan, true).to_string();
+        println!("{line}");
+    } else {
+        for f in &findings {
+            println!("{}", f.render());
+        }
+        let line = summary_json(&findings, &scan, false).to_string();
+        println!("{line}");
+    }
+    if findings.is_empty() {
+        0
+    } else {
+        1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allow_on_own_line_waives_the_finding() {
+        let src = "let t = Instant::now(); // lint: allow(ambient-entropy, bench timing)\n";
+        let scan = scan_source("f.rs", src);
+        assert!(scan.findings.is_empty());
+        // Without the annotation the same line fires.
+        let scan = scan_source("f.rs", "let t = Instant::now();\n");
+        assert_eq!(scan.findings.len(), 1);
+    }
+
+    #[test]
+    fn allow_on_comment_only_line_covers_the_next_code_line() {
+        let src = "\
+// lint: allow(hash-collections, fixture explains itself)
+use std::collections::HashMap;
+use std::collections::HashSet;
+";
+        let scan = scan_source("f.rs", src);
+        assert_eq!(scan.findings.len(), 1, "only the annotated line is waived");
+        assert_eq!(scan.findings[0].line, 3);
+    }
+
+    #[test]
+    fn allow_waives_only_the_named_rule() {
+        let src = "let m: HashMap<u32, Instant> = q(Instant::now()); \
+                   // lint: allow(ambient-entropy, narrow waiver)\n";
+        let scan = scan_source("f.rs", src);
+        assert_eq!(scan.findings.len(), 1);
+        assert_eq!(scan.findings[0].rule, Rule::HashCollections);
+    }
+
+    #[test]
+    fn malformed_allows_are_gating_findings() {
+        let bad = [
+            "x(); // lint: allow(no-such-rule, reason)\n",
+            "x(); // lint: allow(hash-collections)\n",
+            "x(); // lint: allow(hash-collections, )\n",
+            "x(); // lint: allow(bad-allow, cannot waive the waiver rule)\n",
+        ];
+        for src in bad {
+            let scan = scan_source("f.rs", src);
+            assert_eq!(scan.findings.len(), 1, "{src:?}");
+            assert_eq!(scan.findings[0].rule, Rule::BadAllow, "{src:?}");
+        }
+    }
+
+    #[test]
+    fn allow_gates_the_unwrap_count_too() {
+        let src = "\
+a.unwrap();
+b.unwrap(); // lint: allow(unwrap-ratchet, provably non-empty here)
+";
+        let scan = scan_source("f.rs", src);
+        assert_eq!(scan.unwrap_lines, vec![1]);
+    }
+
+    #[test]
+    fn findings_are_sorted_by_line_then_rule() {
+        let src = "\
+let b = x.partial_cmp(&y);
+use std::collections::HashMap;
+";
+        let scan = scan_source("f.rs", src);
+        let lines: Vec<usize> = scan.findings.iter().map(|f| f.line).collect();
+        assert_eq!(lines, vec![1, 2]);
+    }
+}

@@ -1,0 +1,187 @@
+//! The `unwrap-ratchet` budget file (`lint_ratchet.json`).
+//!
+//! `.unwrap()` / `.expect(` calls in live library code are panic paths a
+//! long-lived fleet service must not cross, but converting all of them at
+//! once is not realistic — so the committed ratchet freezes today's
+//! per-file counts and only lets them *fall*.  A count above its budget is
+//! a gating finding (handle the error, or annotate the one provably-safe
+//! call); a count below it is a *stale-ratchet* finding, fixed by running
+//! `ringada-lint --update-ratchet` and committing the tightened file, so
+//! the budget monotonically decreases over the repo's history.
+
+use std::collections::BTreeMap;
+
+use super::rules::{Finding, Rule};
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Current on-disk format version.
+pub const RATCHET_VERSION: u64 = 1;
+
+/// Committed per-file `.unwrap()`/`.expect(` budgets.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Ratchet {
+    /// Display path (e.g. `src/fleet/mod.rs`) → budget.  Files with a
+    /// zero budget are omitted.
+    pub files: BTreeMap<String, usize>,
+}
+
+impl Ratchet {
+    pub fn from_counts(counts: &BTreeMap<String, usize>) -> Ratchet {
+        Ratchet {
+            files: counts.iter().filter(|(_, &c)| c > 0).map(|(f, &c)| (f.clone(), c)).collect(),
+        }
+    }
+
+    pub fn parse(text: &str) -> Result<Ratchet> {
+        let v = Json::parse(text)?;
+        let version = v.req("version")?.as_u64()?;
+        if version != RATCHET_VERSION {
+            return Err(Error::Lint(format!(
+                "lint_ratchet.json version {version} (this binary understands {RATCHET_VERSION})"
+            )));
+        }
+        let rule = v.req("rule")?.as_str()?;
+        if rule != Rule::UnwrapRatchet.id() {
+            return Err(Error::Lint(format!("lint_ratchet.json gates unknown rule `{rule}`")));
+        }
+        let mut files = BTreeMap::new();
+        for (path, count) in v.req("files")?.as_obj()? {
+            files.insert(path.clone(), count.as_usize()?);
+        }
+        Ok(Ratchet { files })
+    }
+
+    /// Serialized form; object keys are a `BTreeMap` underneath, so the
+    /// output is byte-deterministic.
+    pub fn to_json_string(&self) -> String {
+        let files: BTreeMap<String, Json> =
+            self.files.iter().map(|(f, &c)| (f.clone(), Json::u64(c as u64))).collect();
+        Json::obj(vec![
+            ("version", Json::u64(RATCHET_VERSION)),
+            ("rule", Json::str(Rule::UnwrapRatchet.id())),
+            ("files", Json::Obj(files)),
+        ])
+        .pretty()
+    }
+
+    /// Compare live counts against the budgets.  `lines` carries the
+    /// 1-based source line of every live call per file, so an over-budget
+    /// finding points at the first call *past* the budget.
+    pub fn compare(&self, lines: &BTreeMap<String, Vec<usize>>) -> Vec<Finding> {
+        let mut out = Vec::new();
+        for (file, file_lines) in lines {
+            let actual = file_lines.len();
+            let budget = self.files.get(file).copied().unwrap_or(0);
+            if actual > budget {
+                let line = file_lines.get(budget).copied().unwrap_or(1);
+                out.push(Finding {
+                    file: file.clone(),
+                    line,
+                    rule: Rule::UnwrapRatchet,
+                    message: format!(
+                        "{actual} unwrap()/expect() calls exceed the ratchet budget of \
+                         {budget}; convert the new call to a Result (or annotate the one \
+                         provably-unreachable panic) — budgets never go up"
+                    ),
+                });
+            } else if actual < budget {
+                out.push(Finding {
+                    file: file.clone(),
+                    line: 1,
+                    rule: Rule::UnwrapRatchet,
+                    message: format!(
+                        "ratchet is stale: {actual} live unwrap()/expect() calls against a \
+                         budget of {budget}; run `ringada-lint --update-ratchet` and commit \
+                         the tightened lint_ratchet.json"
+                    ),
+                });
+            }
+        }
+        // Budgets for files that no longer exist (or now count zero) are
+        // stale too.
+        for (file, &budget) in &self.files {
+            if budget > 0 && !lines.contains_key(file) {
+                out.push(Finding {
+                    file: file.clone(),
+                    line: 1,
+                    rule: Rule::UnwrapRatchet,
+                    message: format!(
+                        "ratchet is stale: file no longer exists (budget {budget}); run \
+                         `ringada-lint --update-ratchet`"
+                    ),
+                });
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lines(entries: &[(&str, &[usize])]) -> BTreeMap<String, Vec<usize>> {
+        entries.iter().map(|(f, l)| (f.to_string(), l.to_vec())).collect()
+    }
+
+    fn ratchet(entries: &[(&str, usize)]) -> Ratchet {
+        Ratchet {
+            files: entries.iter().map(|(f, c)| (f.to_string(), *c)).collect(),
+        }
+    }
+
+    #[test]
+    fn equal_counts_pass() {
+        let r = ratchet(&[("src/a.rs", 2)]);
+        assert!(r.compare(&lines(&[("src/a.rs", &[10, 20])])).is_empty());
+    }
+
+    #[test]
+    fn increase_fires_at_the_first_call_past_budget() {
+        let r = ratchet(&[("src/a.rs", 2)]);
+        let f = r.compare(&lines(&[("src/a.rs", &[10, 20, 30])]));
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, Rule::UnwrapRatchet);
+        assert_eq!(f[0].line, 30, "points at the third call, the one over budget");
+        // A file absent from the ratchet has budget zero.
+        let f = r.compare(&lines(&[("src/a.rs", &[10, 20]), ("src/b.rs", &[5])]));
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].file, "src/b.rs");
+        assert_eq!(f[0].line, 5);
+    }
+
+    #[test]
+    fn decrease_is_a_stale_ratchet_finding() {
+        let r = ratchet(&[("src/a.rs", 3)]);
+        let f = r.compare(&lines(&[("src/a.rs", &[10])]));
+        assert_eq!(f.len(), 1);
+        assert!(f[0].message.contains("stale"));
+        // Deleted file with a leftover budget is stale too.
+        let f = r.compare(&lines(&[]));
+        assert_eq!(f.len(), 1);
+        assert!(f[0].message.contains("no longer exists"));
+    }
+
+    #[test]
+    fn json_round_trip_is_exact() {
+        let r = ratchet(&[("src/a.rs", 2), ("src/z.rs", 7)]);
+        let text = r.to_json_string();
+        let back = Ratchet::parse(&text).expect("round trip");
+        assert_eq!(r, back);
+        // Zero-count files are dropped on construction from counts.
+        let counts: BTreeMap<String, usize> =
+            [("src/a.rs".to_string(), 0), ("src/b.rs".to_string(), 1)].into_iter().collect();
+        let r = Ratchet::from_counts(&counts);
+        assert_eq!(r.files.len(), 1);
+        assert!(r.files.contains_key("src/b.rs"));
+    }
+
+    #[test]
+    fn bad_version_or_rule_is_rejected() {
+        assert!(Ratchet::parse("{\"version\": 99, \"rule\": \"unwrap-ratchet\", \"files\": {}}")
+            .is_err());
+        assert!(Ratchet::parse("{\"version\": 1, \"rule\": \"other\", \"files\": {}}").is_err());
+        assert!(Ratchet::parse("not json").is_err());
+    }
+}

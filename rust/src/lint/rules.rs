@@ -1,0 +1,450 @@
+//! The determinism & robustness rule set (see [`crate::lint`] module docs
+//! for the contract each rule enforces).  Every rule works on the stripped
+//! code produced by [`crate::lint::lexer`], so patterns inside comments,
+//! strings, or `#[cfg(test)]` spans never fire.
+
+use super::lexer::Stripped;
+
+/// A lint rule.  Stable string ids are the `lint: allow(<id>, …)` names
+/// and the keys of the machine-readable summary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    /// R1 — no `HashMap`/`HashSet` in live library code: their iteration
+    /// order is seeded per-process, so anything iterated, reported, or
+    /// serialized out of one is nondeterministic.
+    HashCollections,
+    /// R2 — no `partial_cmp` outside a `PartialOrd` impl: floats compare
+    /// as `None` on NaN (panicking `.unwrap()` sorts) or silently equal
+    /// (`unwrap_or(Equal)`), both replay hazards.  Use `total_cmp` / `Ord`.
+    PartialCmp,
+    /// R3 — no wall-clock or ambient-entropy sources in library code:
+    /// `Instant::now`, `SystemTime`, `RandomState`, `thread_rng`.
+    AmbientEntropy,
+    /// R5 — a float sort/min/max over a *projected* key must chain an
+    /// explicit `.then`/`.then_with` tie-break, or equal keys leave the
+    /// result order at the mercy of the input permutation.
+    SortTieBreak,
+    /// R4 — `.unwrap()`/`.expect(` in live library code, gated by the
+    /// committed ratchet file: per-file counts may only go down.
+    UnwrapRatchet,
+    /// A malformed `lint: allow(...)` annotation (unknown rule id or
+    /// missing reason).  Not itself allowable.
+    BadAllow,
+}
+
+impl Rule {
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::HashCollections => "hash-collections",
+            Rule::PartialCmp => "partial-cmp",
+            Rule::AmbientEntropy => "ambient-entropy",
+            Rule::SortTieBreak => "sort-tie-break",
+            Rule::UnwrapRatchet => "unwrap-ratchet",
+            Rule::BadAllow => "bad-allow",
+        }
+    }
+
+    pub fn from_id(id: &str) -> Option<Rule> {
+        match id {
+            "hash-collections" => Some(Rule::HashCollections),
+            "partial-cmp" => Some(Rule::PartialCmp),
+            "ambient-entropy" => Some(Rule::AmbientEntropy),
+            "sort-tie-break" => Some(Rule::SortTieBreak),
+            "unwrap-ratchet" => Some(Rule::UnwrapRatchet),
+            "bad-allow" => Some(Rule::BadAllow),
+            _ => None,
+        }
+    }
+
+    /// Every rule an annotation may name.
+    pub const ALLOWABLE: [Rule; 5] = [
+        Rule::HashCollections,
+        Rule::PartialCmp,
+        Rule::AmbientEntropy,
+        Rule::SortTieBreak,
+        Rule::UnwrapRatchet,
+    ];
+}
+
+/// One reported violation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Display path, e.g. `src/sim/mod.rs`.
+    pub file: String,
+    /// 1-based source line.
+    pub line: usize,
+    pub rule: Rule,
+    pub message: String,
+}
+
+impl Finding {
+    pub fn render(&self) -> String {
+        format!("{}:{} {} {}", self.file, self.line, self.rule.id(), self.message)
+    }
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Byte offsets of identifier-boundary occurrences of `pat` in `code`.
+/// The boundary check applies only on sides where the pattern itself
+/// starts/ends with an identifier char, so `.unwrap()` matches after `x`
+/// while `Map` does not match inside `HashMap`.
+pub(crate) fn find_word(code: &str, pat: &str) -> Vec<usize> {
+    let bytes = code.as_bytes();
+    let pat_bytes = pat.as_bytes();
+    let check_pre = pat_bytes.first().map_or(false, |&b| is_ident_byte(b));
+    let check_post = pat_bytes.last().map_or(false, |&b| is_ident_byte(b));
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while from + pat.len() <= code.len() {
+        let Some(rel) = code[from..].find(pat) else { break };
+        let start = from + rel;
+        let end = start + pat.len();
+        let pre_ok = !check_pre || start == 0 || !is_ident_byte(bytes[start - 1]);
+        let post_ok = !check_post || end >= bytes.len() || !is_ident_byte(bytes[end]);
+        if pre_ok && post_ok {
+            out.push(start);
+        }
+        from = start + 1;
+    }
+    out
+}
+
+/// Context passed to the per-line rules: which lines are out of scope.
+pub(crate) struct Scope<'a> {
+    pub stripped: &'a Stripped,
+    /// `skip(line_idx, rule)` ⇔ the line is `#[cfg(test)]`-exempt or
+    /// carries a matching `lint: allow`.
+    pub skip: &'a dyn Fn(usize, Rule) -> bool,
+}
+
+/// R1: `HashMap` / `HashSet` anywhere in live code (imports included —
+/// removing the import is the point).
+pub(crate) fn check_hash_collections(file: &str, scope: &Scope<'_>, out: &mut Vec<Finding>) {
+    for (li, line) in scope.stripped.lines.iter().enumerate() {
+        if (scope.skip)(li, Rule::HashCollections) {
+            continue;
+        }
+        for pat in ["HashMap", "HashSet"] {
+            if !find_word(&line.code, pat).is_empty() {
+                out.push(Finding {
+                    file: file.to_string(),
+                    line: li + 1,
+                    rule: Rule::HashCollections,
+                    message: format!(
+                        "{pat} has nondeterministic iteration order; use BTreeMap/BTreeSet \
+                         or a kept-sorted Vec for anything iterated, reported, or serialized"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// R2: `partial_cmp` outside a `fn partial_cmp` definition (the
+/// `PartialOrd` impl that merely delegates to `Ord` is the one legitimate
+/// appearance).
+pub(crate) fn check_partial_cmp(file: &str, scope: &Scope<'_>, out: &mut Vec<Finding>) {
+    for (li, line) in scope.stripped.lines.iter().enumerate() {
+        if (scope.skip)(li, Rule::PartialCmp) {
+            continue;
+        }
+        if line.code.contains("fn partial_cmp") {
+            continue;
+        }
+        if !find_word(&line.code, "partial_cmp").is_empty() {
+            out.push(Finding {
+                file: file.to_string(),
+                line: li + 1,
+                rule: Rule::PartialCmp,
+                message: "partial_cmp treats NaN as incomparable (panic or silent Equal); \
+                          use f64::total_cmp for floats or Ord::cmp for ordered types"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+/// R3: wall-clock / ambient-entropy sources.
+pub(crate) fn check_ambient_entropy(file: &str, scope: &Scope<'_>, out: &mut Vec<Finding>) {
+    for (li, line) in scope.stripped.lines.iter().enumerate() {
+        if (scope.skip)(li, Rule::AmbientEntropy) {
+            continue;
+        }
+        for pat in ["Instant::now", "SystemTime", "RandomState", "thread_rng"] {
+            if !find_word(&line.code, pat).is_empty() {
+                out.push(Finding {
+                    file: file.to_string(),
+                    line: li + 1,
+                    rule: Rule::AmbientEntropy,
+                    message: format!(
+                        "{pat} is a wall-clock/ambient-entropy source; deterministic replay \
+                         requires simulated clocks and seeded Rng streams"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// R5: `sort_by` / `sort_unstable_by` / `max_by` / `min_by` whose argument
+/// compares floats (`total_cmp` / `partial_cmp`) on a *projection* of the
+/// element (`a.0`, `x.score`, `rate[i][j]`, …) without a `.then` /
+/// `.then_with` tie-break.  Whole-element comparisons (`|a, b|
+/// a.total_cmp(b)`, `f64::total_cmp`) are total by construction and pass.
+pub(crate) fn check_sort_tie_break(file: &str, scope: &Scope<'_>, out: &mut Vec<Finding>) {
+    // Join the stripped code so closures spanning lines are scanned whole.
+    let mut joined = String::new();
+    let mut line_starts: Vec<usize> = Vec::with_capacity(scope.stripped.len());
+    for line in &scope.stripped.lines {
+        line_starts.push(joined.len());
+        joined.push_str(&line.code);
+        joined.push('\n');
+    }
+    let line_of = |byte: usize| -> usize {
+        line_starts.partition_point(|&s| s <= byte).saturating_sub(1)
+    };
+
+    for method in ["sort_by", "sort_unstable_by", "max_by", "min_by"] {
+        for start in find_word(&joined, method) {
+            let li = line_of(start);
+            if (scope.skip)(li, Rule::SortTieBreak) {
+                continue;
+            }
+            let Some(arg) = call_argument(&joined, start + method.len()) else {
+                continue;
+            };
+            if arg.contains(".then") {
+                continue;
+            }
+            let mut projected = false;
+            for cmp in ["total_cmp", "partial_cmp"] {
+                for off in find_word(arg, cmp) {
+                    if off == 0 {
+                        continue;
+                    }
+                    let prev = arg.as_bytes()[off - 1];
+                    if prev == b':' {
+                        // Path form (`f64::total_cmp`): the whole element
+                        // is the key.
+                        continue;
+                    }
+                    if prev == b'.' && receiver_is_projection(arg, off - 1) {
+                        projected = true;
+                    }
+                }
+            }
+            if projected {
+                out.push(Finding {
+                    file: file.to_string(),
+                    line: li + 1,
+                    rule: Rule::SortTieBreak,
+                    message: format!(
+                        "{method} compares floats on a projected key with no explicit \
+                         tie-break; chain .then/.then_with down to a total key so equal \
+                         scores cannot reorder"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// After a method name, skip whitespace to `(` and return the argument
+/// text up to the matching `)`.
+fn call_argument(joined: &str, after_name: usize) -> Option<&str> {
+    let bytes = joined.as_bytes();
+    let mut i = after_name;
+    while i < bytes.len() && (bytes[i] as char).is_whitespace() {
+        i += 1;
+    }
+    if i >= bytes.len() || bytes[i] != b'(' {
+        return None;
+    }
+    let open = i;
+    let mut depth = 0usize;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'(' => depth += 1,
+            b')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(&joined[open + 1..i]);
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    None
+}
+
+/// Walk the receiver expression ending at the `.` at `dot` backwards; a
+/// receiver containing a field/tuple access or an index (`a.0`,
+/// `r.score`, `m[i]`) is a projection of the element, while a bare
+/// identifier is the element itself.
+fn receiver_is_projection(arg: &str, dot: usize) -> bool {
+    let bytes = arg.as_bytes();
+    let mut k = dot; // exclusive end of the receiver span
+    let mut saw_inner_dot = false;
+    let mut saw_index = false;
+    while k > 0 {
+        let c = bytes[k - 1];
+        if is_ident_byte(c) {
+            k -= 1;
+        } else if c == b'.' {
+            saw_inner_dot = true;
+            k -= 1;
+        } else if c == b']' {
+            saw_index = true;
+            let mut depth = 0usize;
+            while k > 0 {
+                let b = bytes[k - 1];
+                if b == b']' {
+                    depth += 1;
+                } else if b == b'[' {
+                    depth -= 1;
+                    if depth == 0 {
+                        k -= 1;
+                        break;
+                    }
+                }
+                k -= 1;
+            }
+        } else {
+            break;
+        }
+    }
+    saw_inner_dot || saw_index
+}
+
+/// R4 support: 1-based lines of each live `.unwrap()` / `.expect(` call.
+/// The ratchet layer turns these into findings when a file's count grows.
+pub(crate) fn unwrap_lines(scope: &Scope<'_>) -> Vec<usize> {
+    let mut out = Vec::new();
+    for (li, line) in scope.stripped.lines.iter().enumerate() {
+        if (scope.skip)(li, Rule::UnwrapRatchet) {
+            continue;
+        }
+        for pat in [".unwrap()", ".expect("] {
+            for _ in find_word(&line.code, pat) {
+                out.push(li + 1);
+            }
+        }
+    }
+    out.sort_unstable();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::lexer::strip;
+
+    fn run_all(src: &str) -> Vec<Finding> {
+        let stripped = strip(src);
+        let skip = {
+            let exempt = stripped.exempt.clone();
+            move |li: usize, _r: Rule| exempt.get(li).copied().unwrap_or(false)
+        };
+        let scope = Scope { stripped: &stripped, skip: &skip };
+        let mut out = Vec::new();
+        check_hash_collections("f.rs", &scope, &mut out);
+        check_partial_cmp("f.rs", &scope, &mut out);
+        check_ambient_entropy("f.rs", &scope, &mut out);
+        check_sort_tie_break("f.rs", &scope, &mut out);
+        out
+    }
+
+    #[test]
+    fn word_boundaries_are_respected() {
+        assert_eq!(find_word("HashMap::new()", "HashMap"), vec![0]);
+        assert!(find_word("MyHashMapLike", "HashMap").is_empty());
+        assert!(find_word("sort_by_key(f)", "sort_by").is_empty());
+        assert_eq!(find_word("x.unwrap().y", ".unwrap()"), vec![1]);
+        assert_eq!(find_word("a.expect(m)", ".expect("), vec![1]);
+    }
+
+    #[test]
+    fn hash_map_in_code_fires_but_not_in_strings_or_comments() {
+        let f = run_all("use std::collections::HashMap;\n");
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, Rule::HashCollections);
+        assert_eq!(f[0].line, 1);
+        assert!(run_all("// HashMap in a comment\nlet s = \"HashMap\";\n").is_empty());
+    }
+
+    #[test]
+    fn cfg_test_exemption_applies() {
+        let src = "#[cfg(test)]\nmod tests {\n    use std::collections::HashMap;\n}\n";
+        assert!(run_all(src).is_empty());
+    }
+
+    #[test]
+    fn partial_cmp_fires_except_in_its_own_impl_fn() {
+        let f = run_all("xs.sort_by(|a, b| a.partial_cmp(b).unwrap());\n");
+        assert_eq!(f.iter().filter(|f| f.rule == Rule::PartialCmp).count(), 1);
+        let ok = "fn partial_cmp(&self, other: &Self) -> Option<Ordering> {\n\
+                  Some(self.cmp(other))\n}\n";
+        assert!(run_all(ok).is_empty());
+    }
+
+    #[test]
+    fn ambient_entropy_patterns_fire() {
+        let f = run_all("let t = Instant::now();\n");
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, Rule::AmbientEntropy);
+        assert_eq!(run_all("let t = std::time::SystemTime::now();\n").len(), 1);
+        assert!(run_all("let d = Duration::from_secs(1);\n").is_empty());
+    }
+
+    #[test]
+    fn projected_float_sort_without_tie_break_fires() {
+        let f = run_all("v.sort_by(|a, b| a.0.total_cmp(&b.0));\n");
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, Rule::SortTieBreak);
+        // Index projections count too, and the closure may span lines.
+        let f = run_all("v.max_by(|&a, &b| {\n    rate[cur][a].total_cmp(&rate[cur][b])\n});\n");
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].line, 1, "finding anchors at the call site");
+    }
+
+    #[test]
+    fn tie_broken_or_whole_element_sorts_pass() {
+        assert!(run_all("v.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));\n").is_empty());
+        assert!(run_all("xs.sort_by(|a, b| a.total_cmp(b));\n").is_empty());
+        assert!(run_all("xs.sort_unstable_by(f64::total_cmp);\n").is_empty());
+        assert!(run_all("v.sort_by(|a, b| a.id.cmp(&b.id));\n").is_empty());
+    }
+
+    #[test]
+    fn unwrap_lines_count_live_code_only() {
+        let src = "\
+fn f() {
+    a.unwrap();
+    b.expect(\"msg\");
+}
+#[cfg(test)]
+mod tests {
+    fn t() { c.unwrap(); }
+}
+";
+        let stripped = strip(src);
+        let skip = {
+            let exempt = stripped.exempt.clone();
+            move |li: usize, _r: Rule| exempt.get(li).copied().unwrap_or(false)
+        };
+        let scope = Scope { stripped: &stripped, skip: &skip };
+        assert_eq!(unwrap_lines(&scope), vec![2, 3]);
+    }
+
+    #[test]
+    fn unwrap_or_variants_do_not_count() {
+        let stripped = strip("let x = m.get(&k).unwrap_or(&0.0); let y = o.unwrap_or_default();\n");
+        let skip = |_: usize, _: Rule| false;
+        let scope = Scope { stripped: &stripped, skip: &skip };
+        assert!(unwrap_lines(&scope).is_empty());
+    }
+}

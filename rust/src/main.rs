@@ -13,7 +13,7 @@
 //! ringada info     --artifacts DIR          # manifest + memory summary
 //! ```
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::process::ExitCode;
 
 use ringada::config::{ExperimentConfig, Scheme};
@@ -39,8 +39,8 @@ fn main() -> ExitCode {
     }
 }
 
-fn parse_flags(args: &[String]) -> (HashMap<String, String>, Vec<String>) {
-    let mut flags = HashMap::new();
+fn parse_flags(args: &[String]) -> (BTreeMap<String, String>, Vec<String>) {
+    let mut flags = BTreeMap::new();
     let mut positional = Vec::new();
     let mut i = 0;
     while i < args.len() {
@@ -61,7 +61,7 @@ fn parse_flags(args: &[String]) -> (HashMap<String, String>, Vec<String>) {
     (flags, positional)
 }
 
-fn experiment_from_flags(flags: &HashMap<String, String>) -> CliResult<ExperimentConfig> {
+fn experiment_from_flags(flags: &BTreeMap<String, String>) -> CliResult<ExperimentConfig> {
     if let Some(path) = flags.get("config") {
         return Ok(ExperimentConfig::from_json_file(path)?);
     }
@@ -91,7 +91,7 @@ fn experiment_from_flags(flags: &HashMap<String, String>) -> CliResult<Experimen
     Ok(exp)
 }
 
-fn scheme_from_flags(flags: &HashMap<String, String>) -> CliResult<Scheme> {
+fn scheme_from_flags(flags: &BTreeMap<String, String>) -> CliResult<Scheme> {
     match flags.get("scheme").map(String::as_str).unwrap_or("ringada") {
         "ringada" => Ok(Scheme::RingAda),
         "pipeadapter" => Ok(Scheme::PipeAdapter),
@@ -126,7 +126,7 @@ const HELP: &str = "ringada — RingAda reproduction (see README.md)
 Common flags: --artifacts DIR (default artifacts/tiny), --rounds N,
   --scheme ringada|pipeadapter|single, --csv PATH, --quiet";
 
-fn cmd_train(flags: &HashMap<String, String>) -> CliResult<()> {
+fn cmd_train(flags: &BTreeMap<String, String>) -> CliResult<()> {
     let exp = experiment_from_flags(flags)?;
     let scheme = scheme_from_flags(flags)?;
     let opts = TrainOptions {
@@ -161,7 +161,7 @@ fn cmd_train(flags: &HashMap<String, String>) -> CliResult<()> {
     Ok(())
 }
 
-fn cmd_plan(flags: &HashMap<String, String>) -> CliResult<()> {
+fn cmd_plan(flags: &BTreeMap<String, String>) -> CliResult<()> {
     let exp = experiment_from_flags(flags)?;
     let engine = Engine::load(&exp.artifact_dir)?;
     let meta = ModelMeta::from_manifest(engine.manifest())?;
@@ -189,7 +189,7 @@ fn cmd_plan(flags: &HashMap<String, String>) -> CliResult<()> {
     Ok(())
 }
 
-fn cmd_table1(flags: &HashMap<String, String>) -> CliResult<()> {
+fn cmd_table1(flags: &BTreeMap<String, String>) -> CliResult<()> {
     let exp = experiment_from_flags(flags)?;
     let mut table = TablePrinter::new(&[
         "Scheme", "Memory (MB)", "Epochs->conv", "Conv time (s)", "F1", "EM",
@@ -210,7 +210,7 @@ fn cmd_table1(flags: &HashMap<String, String>) -> CliResult<()> {
     Ok(())
 }
 
-fn cmd_cluster(flags: &HashMap<String, String>) -> CliResult<()> {
+fn cmd_cluster(flags: &BTreeMap<String, String>) -> CliResult<()> {
     use ringada::cluster::RingCluster;
     use ringada::coordinator::LayerAssignment;
     use ringada::data::{QaConfig, SyntheticQa};
@@ -251,7 +251,7 @@ fn cmd_cluster(flags: &HashMap<String, String>) -> CliResult<()> {
     Ok(())
 }
 
-fn cmd_info(flags: &HashMap<String, String>) -> CliResult<()> {
+fn cmd_info(flags: &BTreeMap<String, String>) -> CliResult<()> {
     let exp = experiment_from_flags(flags)?;
     let engine = Engine::load(&exp.artifact_dir)?;
     let m = engine.manifest();

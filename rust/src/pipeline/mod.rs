@@ -320,12 +320,12 @@ impl ScheduleBuilder {
 /// DAG-level scheme invariants (used by tests and the property suite).
 pub mod invariants {
     use super::*;
-    use std::collections::HashMap;
+    use std::collections::BTreeMap;
 
     /// Count BlockBwd blocks per step: RingAda must equal `layers -
     /// terminator_block` (early stop), baselines must equal `layers`.
-    pub fn bwd_blocks_per_step(tasks: &[Task]) -> HashMap<usize, usize> {
-        let mut m = HashMap::new();
+    pub fn bwd_blocks_per_step(tasks: &[Task]) -> BTreeMap<usize, usize> {
+        let mut m = BTreeMap::new();
         for t in tasks {
             if let Kind::Compute { op: Op::BlockBwd { n }, .. } = t.kind {
                 *m.entry(t.step).or_insert(0) += n;

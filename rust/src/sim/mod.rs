@@ -38,7 +38,7 @@ pub use lut::CostLut;
 pub use scenario::{Scenario, ScenarioEvent, ScenarioRun};
 
 use std::cmp::Ordering;
-use std::collections::{BinaryHeap, HashMap};
+use std::collections::{BTreeMap, BinaryHeap};
 
 use crate::config::ClusterConfig;
 use crate::error::{Error, Result};
@@ -64,8 +64,10 @@ pub struct SimReport {
     pub window_s: f64,
     /// Per-device busy seconds (compute only) within this chunk.
     pub device_busy: Vec<f64>,
-    /// Total bytes moved per directed link.
-    pub link_bytes: HashMap<(usize, usize), usize>,
+    /// Total bytes moved per directed link.  Ordered map: reports are
+    /// iterated and serialized, so iteration order is part of the replay
+    /// contract (lint rule `hash-collections`).
+    pub link_bytes: BTreeMap<(usize, usize), usize>,
 }
 
 impl SimReport {
@@ -176,7 +178,7 @@ pub struct Simulator {
     cluster: ClusterConfig,
     lut: CostLut,
     device_free: Vec<f64>,
-    link_free: HashMap<(usize, usize), f64>,
+    link_free: BTreeMap<(usize, usize), f64>,
     /// Scenario-derived rate windows (empty for a healthy cluster).
     perturb: scenario::Compiled,
     /// Fail-stopped devices (set via [`Simulator::drop_device`]).
@@ -198,7 +200,7 @@ impl Simulator {
             cluster,
             lut,
             device_free: vec![0.0; n],
-            link_free: HashMap::new(),
+            link_free: BTreeMap::new(),
             validated: false,
             scratch: DispatchScratch::default(),
             now: 0.0,
@@ -239,9 +241,11 @@ impl Simulator {
     /// (`scratch`), or behaviorally inert to re-run (`validated`), so this
     /// is sufficient for a byte-identical resume.
     pub fn clock_state(&self) -> ClockState {
-        let mut link_free: Vec<(usize, usize, f64)> =
+        // `link_free` is a BTreeMap, so this iterates in (a, b) order
+        // already — the snapshot stays byte-identical to the old
+        // explicitly-sorted capture.
+        let link_free: Vec<(usize, usize, f64)> =
             self.link_free.iter().map(|(&(a, b), &t)| (a, b, t)).collect();
-        link_free.sort_unstable_by(|x, y| (x.0, x.1).cmp(&(y.0, y.1)));
         ClockState {
             device_free: self.device_free.clone(),
             link_free,
@@ -366,7 +370,7 @@ impl Simulator {
         // scr.ready_time[i] = max over scheduled deps' finishes; final by
         // the time task i enters the heap.
         let mut device_busy = vec![0.0; self.cluster.len()];
-        let mut link_bytes: HashMap<(usize, usize), usize> = HashMap::new();
+        let mut link_bytes: BTreeMap<(usize, usize), usize> = BTreeMap::new();
         let mut scheduled = 0usize;
 
         for (i, t) in tasks.iter().enumerate() {
@@ -456,7 +460,7 @@ impl Simulator {
         let mut ready_time = vec![0.0f64; n];
         let mut ready: Vec<TaskId> = (0..n).filter(|&i| indeg[i] == 0).collect();
         let mut device_busy = vec![0.0; self.cluster.len()];
-        let mut link_bytes: HashMap<(usize, usize), usize> = HashMap::new();
+        let mut link_bytes: BTreeMap<(usize, usize), usize> = BTreeMap::new();
         let mut scheduled = 0usize;
 
         while scheduled < n {

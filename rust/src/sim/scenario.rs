@@ -40,7 +40,7 @@
 //! }
 //! ```
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::BTreeMap;
 
 use crate::config::Scheme;
 use crate::error::{Error, Result};
@@ -98,7 +98,7 @@ impl Scenario {
                 _ => None,
             })
             .collect();
-        d.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        d.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
         d
     }
 
@@ -257,7 +257,7 @@ impl Scenario {
             }
         }
         c.dropouts
-            .sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+            .sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
         c
     }
 }
@@ -338,7 +338,7 @@ pub(crate) struct Window {
 #[derive(Debug, Clone, Default)]
 pub(crate) struct Compiled {
     pub device_windows: Vec<Vec<Window>>,
-    pub link_windows: HashMap<(usize, usize), Vec<Window>>,
+    pub link_windows: BTreeMap<(usize, usize), Vec<Window>>,
     /// `(time, device)` sorted by time.
     pub dropouts: Vec<(f64, usize)>,
 }
@@ -347,7 +347,7 @@ impl Compiled {
     pub fn empty(n: usize) -> Self {
         Compiled {
             device_windows: vec![Vec::new(); n],
-            link_windows: HashMap::new(),
+            link_windows: BTreeMap::new(),
             dropouts: Vec::new(),
         }
     }
@@ -386,7 +386,7 @@ pub(crate) fn finish_after(windows: &[Window], start: f64, work: f64) -> Result<
         .flat_map(|w| [w.t0, w.t1])
         .filter(|&t| t > start && t.is_finite())
         .collect();
-    pts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    pts.sort_by(|a, b| a.total_cmp(b));
     pts.dedup();
 
     let mut t = start;

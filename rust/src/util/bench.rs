@@ -79,9 +79,9 @@ impl Bencher {
     pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
         // Warmup + calibration.
         let mut iters: u64 = 1;
-        let warm_start = Instant::now();
+        let warm_start = Instant::now(); // lint: allow(ambient-entropy, bench harness timer)
         loop {
-            let t = Instant::now();
+            let t = Instant::now(); // lint: allow(ambient-entropy, bench harness timer)
             for _ in 0..iters {
                 f();
             }
@@ -101,7 +101,7 @@ impl Bencher {
         let mut per_iter: Vec<f64> = Vec::with_capacity(self.samples);
         let mut min = f64::INFINITY;
         for _ in 0..self.samples {
-            let t = Instant::now();
+            let t = Instant::now(); // lint: allow(ambient-entropy, bench harness timer)
             for _ in 0..iters {
                 f();
             }

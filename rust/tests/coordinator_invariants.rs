@@ -257,3 +257,39 @@ fn prop_single_weight_version_no_stashes_in_ringada() {
         Ok(())
     });
 }
+
+// ------------------------------------------------------------------
+// Sort-regression pin for the total_cmp conversion in the initiator
+// rotation (`best_channel_among` used `partial_cmp(..).unwrap_or(Equal)`
+// under `max_by`, whose last-max semantics picked the largest id among
+// equal rates; the explicit `.then(a.cmp(&b))` tie-break must preserve
+// that choice exactly).
+
+#[test]
+fn rotation_tie_break_keeps_the_historical_largest_id_choice() {
+    use ringada::coordinator::InitiatorRotation;
+    // All rates equal: from 0 the greedy must pick 3, then 2, then 1.
+    let flat = vec![vec![1.0; 4]; 4];
+    let r = InitiatorRotation::best_channel(&flat, 0).unwrap();
+    assert_eq!(r.order, vec![0, 3, 2, 1]);
+    // Distinct rates: greedy follows the best outgoing channel.
+    let rate = vec![
+        vec![0.0, 5.0, 9.0, 1.0],
+        vec![5.0, 0.0, 2.0, 8.0],
+        vec![9.0, 2.0, 0.0, 4.0],
+        vec![1.0, 8.0, 4.0, 0.0],
+    ];
+    let r = InitiatorRotation::best_channel(&rate, 0).unwrap();
+    assert_eq!(r.order, vec![0, 2, 3, 1]);
+    // Partial tie inside the candidate set: 1 → 3 is the unique best hop,
+    // then from 3 the remaining candidates 0 and 2 tie at 6.0.
+    let tie = vec![
+        vec![0.0, 5.0, 2.0, 6.0],
+        vec![5.0, 0.0, 2.0, 8.0],
+        vec![2.0, 2.0, 0.0, 6.0],
+        vec![6.0, 8.0, 6.0, 0.0],
+    ];
+    let r = InitiatorRotation::best_channel(&tie, 1).unwrap();
+    // 1 → 3 (8.0 best), 3 → ties 0 and 2 at 6.0 → largest id 2 wins, then 0.
+    assert_eq!(r.order, vec![1, 3, 2, 0]);
+}

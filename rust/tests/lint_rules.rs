@@ -1,0 +1,285 @@
+//! Fixture battery for the `ringada-lint` static-analysis pass: every rule
+//! has must-fire and must-pass snippets, the `cfg(test)` exemption and
+//! `lint: allow` annotations are exercised end-to-end, ratchet
+//! increase/decrease behavior is pinned, and — the gate itself — the
+//! crate's own `src/` tree must scan clean against the committed
+//! `lint_ratchet.json`.
+//!
+//! Fixtures live in string literals here in `tests/`, which the lint pass
+//! never scans (its root is `src/`), so nothing in this file can trip the
+//! real gate.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use ringada::lint::ratchet::Ratchet;
+use ringada::lint::rules::Rule;
+use ringada::lint::{run, scan_source};
+
+/// Shorthand: (line, rule) pairs of all findings in a fixture.
+fn findings(src: &str) -> Vec<(usize, Rule)> {
+    scan_source("fixture.rs", src).findings.iter().map(|f| (f.line, f.rule)).collect()
+}
+
+fn unwraps(src: &str) -> Vec<usize> {
+    scan_source("fixture.rs", src).unwrap_lines
+}
+
+// ------------------------------------------------------------ R1
+
+#[test]
+fn hash_collections_must_fire() {
+    assert_eq!(
+        findings("use std::collections::HashMap;\n"),
+        vec![(1, Rule::HashCollections)]
+    );
+    assert_eq!(
+        findings("fn f() -> HashSet<u32> { todo!() }\n"),
+        vec![(1, Rule::HashCollections)]
+    );
+}
+
+#[test]
+fn hash_collections_must_pass() {
+    assert!(findings("use std::collections::{BTreeMap, BTreeSet};\n").is_empty());
+    // Identifier containing the pattern is not the pattern.
+    assert!(findings("struct MyHashMapLike;\n").is_empty());
+    // Comments and strings never fire.
+    assert!(findings("// a HashMap would be wrong here\nlet s = \"HashMap\";\n").is_empty());
+}
+
+// ------------------------------------------------------------ R2
+
+#[test]
+fn partial_cmp_must_fire() {
+    assert_eq!(
+        findings("xs.sort_by(|a, b| a.partial_cmp(b).unwrap());\n"),
+        vec![(1, Rule::PartialCmp)],
+        "the sort itself is whole-element, so only R2 fires"
+    );
+}
+
+#[test]
+fn partial_cmp_must_pass() {
+    // The legitimate appearance: a PartialOrd impl delegating to Ord.
+    let ok = "\
+impl PartialOrd for Key {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+";
+    assert!(findings(ok).is_empty());
+    assert!(findings("xs.sort_by(|a, b| a.total_cmp(b));\n").is_empty());
+}
+
+// ------------------------------------------------------------ R3
+
+#[test]
+fn ambient_entropy_must_fire() {
+    for src in [
+        "let t = Instant::now();\n",
+        "let t = std::time::SystemTime::now();\n",
+        "let h: RandomState = Default::default();\n",
+        "let r = thread_rng();\n",
+    ] {
+        assert_eq!(
+            findings(src),
+            vec![(1, Rule::AmbientEntropy)],
+            "fixture {src:?}"
+        );
+    }
+}
+
+#[test]
+fn ambient_entropy_must_pass() {
+    assert!(findings("let d = Duration::from_secs_f64(1.5);\n").is_empty());
+    assert!(findings("let r = Rng::new(seed);\n").is_empty());
+}
+
+// ------------------------------------------------------------ R5
+
+#[test]
+fn sort_tie_break_must_fire() {
+    // Tuple projection, field projection, index projection — with no
+    // `.then` chain, all three leave equal keys input-order dependent.
+    assert_eq!(
+        findings("v.sort_by(|a, b| a.0.total_cmp(&b.0));\n"),
+        vec![(1, Rule::SortTieBreak)]
+    );
+    assert_eq!(
+        findings("v.sort_unstable_by(|a, b| a.score.total_cmp(&b.score));\n"),
+        vec![(1, Rule::SortTieBreak)]
+    );
+    // Multi-line closure anchors the finding at the call site.
+    let f = findings("let m = xs\n    .max_by(|&a, &b| {\n        rate[cur][a].total_cmp(&rate[cur][b])\n    });\n");
+    assert_eq!(f, vec![(2, Rule::SortTieBreak)]);
+}
+
+#[test]
+fn sort_tie_break_must_pass() {
+    assert!(findings("v.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));\n").is_empty());
+    assert!(
+        findings("v.max_by(|a, b| a.s.total_cmp(&b.s).then_with(|| a.id.cmp(&b.id)));\n")
+            .is_empty()
+    );
+    // Whole-element comparisons are total by construction.
+    assert!(findings("xs.sort_by(|a, b| a.total_cmp(b));\n").is_empty());
+    assert!(findings("xs.sort_unstable_by(f64::total_cmp);\n").is_empty());
+    // Key-projection sorts through Ord are not float sorts at all.
+    assert!(findings("v.sort_by_key(|a| a.id);\n").is_empty());
+    assert!(findings("v.sort_by(|a, b| a.id.cmp(&b.id));\n").is_empty());
+}
+
+// ------------------------------------------------------ cfg(test) spans
+
+#[test]
+fn cfg_test_items_are_exempt_from_every_rule() {
+    let src = "\
+fn live() {}
+#[cfg(test)]
+mod tests {
+    use std::collections::HashMap;
+    fn t() {
+        let i = Instant::now();
+        xs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        v.unwrap();
+    }
+}
+";
+    let scan = scan_source("fixture.rs", src);
+    assert!(scan.findings.is_empty(), "{:?}", scan.findings);
+    assert!(scan.unwrap_lines.is_empty());
+}
+
+#[test]
+fn test_attribute_fn_is_exempt_but_surrounding_code_is_not() {
+    let src = "\
+use std::collections::HashMap;
+#[test]
+fn check() {
+    let m = HashMap::new();
+}
+";
+    assert_eq!(findings(src), vec![(1, Rule::HashCollections)]);
+}
+
+// ------------------------------------------------------ allow annotations
+
+#[test]
+fn allow_waives_the_named_rule_on_the_annotated_line() {
+    let src =
+        "let t = Instant::now(); // lint: allow(ambient-entropy, fixture proves the waiver)\n";
+    assert!(findings(src).is_empty());
+}
+
+#[test]
+fn allow_on_its_own_line_covers_the_next_code_line_only() {
+    let src = "\
+// lint: allow(hash-collections, first import is justified)
+use std::collections::HashMap;
+use std::collections::HashSet;
+";
+    assert_eq!(findings(src), vec![(3, Rule::HashCollections)]);
+}
+
+#[test]
+fn allow_for_a_different_rule_does_not_waive() {
+    let src = "let t = Instant::now(); // lint: allow(hash-collections, wrong rule)\n";
+    assert_eq!(findings(src), vec![(1, Rule::AmbientEntropy)]);
+}
+
+#[test]
+fn malformed_allow_is_a_gating_finding() {
+    for src in [
+        "x(); // lint: allow(not-a-rule, reason)\n",
+        "x(); // lint: allow(ambient-entropy)\n",
+        "x(); // lint: allow(ambient-entropy,   )\n",
+        "x(); // lint: allow(bad-allow, the waiver rule itself is not waivable)\n",
+    ] {
+        assert_eq!(findings(src), vec![(1, Rule::BadAllow)], "fixture {src:?}");
+    }
+}
+
+// ------------------------------------------------------------ ratchet
+
+fn counts_of(entries: &[(&str, &[usize])]) -> BTreeMap<String, Vec<usize>> {
+    entries.iter().map(|(f, l)| (f.to_string(), l.to_vec())).collect()
+}
+
+#[test]
+fn unwrap_and_expect_are_counted_per_line() {
+    let src = "\
+fn f() {
+    a.unwrap();
+    b.expect(\"because\").unwrap();
+}
+";
+    assert_eq!(unwraps(src), vec![2, 3, 3]);
+    // unwrap_or / unwrap_or_else / unwrap_or_default are error handling,
+    // not panic paths.
+    assert!(unwraps("let x = o.unwrap_or(1) + p.unwrap_or_else(f) + q.unwrap_or_default();\n")
+        .is_empty());
+}
+
+#[test]
+fn ratchet_increase_fires_at_the_first_over_budget_call() {
+    let budget = Ratchet::from_counts(
+        &[("src/a.rs".to_string(), 2usize)].into_iter().collect(),
+    );
+    let live = counts_of(&[("src/a.rs", &[10, 20, 30])]);
+    let f = budget.compare(&live);
+    assert_eq!(f.len(), 1);
+    assert_eq!((f[0].line, f[0].rule), (30, Rule::UnwrapRatchet));
+}
+
+#[test]
+fn ratchet_decrease_and_deleted_files_are_stale_findings() {
+    let budget = Ratchet::from_counts(
+        &[("src/a.rs".to_string(), 3usize), ("src/gone.rs".to_string(), 1)]
+            .into_iter()
+            .collect(),
+    );
+    let f = budget.compare(&counts_of(&[("src/a.rs", &[10])]));
+    assert_eq!(f.len(), 2);
+    assert!(f.iter().all(|f| f.rule == Rule::UnwrapRatchet));
+    assert!(f.iter().all(|f| f.message.contains("stale")));
+}
+
+#[test]
+fn ratchet_equal_counts_pass_and_new_files_have_zero_budget() {
+    let budget = Ratchet::from_counts(
+        &[("src/a.rs".to_string(), 1usize)].into_iter().collect(),
+    );
+    assert!(budget.compare(&counts_of(&[("src/a.rs", &[5])])).is_empty());
+    let f = budget.compare(&counts_of(&[("src/a.rs", &[5]), ("src/new.rs", &[9])]));
+    assert_eq!(f.len(), 1);
+    assert_eq!((f[0].file.as_str(), f[0].line), ("src/new.rs", 9));
+}
+
+// --------------------------------------------------- the gate itself
+
+#[test]
+fn the_tree_is_lint_clean_against_the_committed_ratchet() {
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let (all, scan) = run(
+        &manifest.join("src"),
+        &manifest.join("lint_ratchet.json"),
+        false,
+    )
+    .expect("lint scan over src/");
+    let rendered: Vec<String> = all.iter().map(|f| f.render()).collect();
+    assert!(all.is_empty(), "lint findings in the tree:\n{}", rendered.join("\n"));
+    assert!(scan.files_scanned >= 40, "src/ walk found only {} files", scan.files_scanned);
+}
+
+#[test]
+fn the_committed_ratchet_is_byte_stable_under_update() {
+    // `--update-ratchet` must be idempotent on a clean tree: parsing the
+    // committed file and re-serializing reproduces it byte for byte.
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let path = manifest.join("lint_ratchet.json");
+    let committed = std::fs::read_to_string(&path).expect("committed lint_ratchet.json");
+    let parsed = Ratchet::parse(&committed).expect("parse committed ratchet");
+    assert_eq!(format!("{}\n", parsed.to_json_string()), committed);
+}

@@ -391,3 +391,45 @@ fn dropout_makespan_exceeds_healthy_for_every_scheme() {
         );
     }
 }
+
+// ------------------------------------------------------------------
+// Sort-regression pin for the total_cmp conversion (lint rule
+// `partial-cmp`): `Scenario::dropouts` and `compile` used to order
+// events with `partial_cmp(..).unwrap().then(..)`; on the finite keys a
+// validated scenario guarantees, `total_cmp` must produce the identical
+// permutation.  Golden synth seeds cover ties (same-time dropouts are
+// impossible from `synth`, so ties are exercised with a hand-built
+// scenario below).
+
+#[test]
+fn dropout_order_matches_the_old_comparator_on_golden_synth_seeds() {
+    for seed in [7u64, 11, 42, 1234, 0xD15E_A5E] {
+        for intensity in [0.7, 0.85, 1.0] {
+            let sc = Scenario::synth(seed, 8, 1e4, intensity);
+            let mut old: Vec<(f64, usize)> = sc
+                .events
+                .iter()
+                .filter_map(|e| match *e {
+                    ScenarioEvent::Dropout { device, at } => Some((at, device)),
+                    _ => None,
+                })
+                .collect();
+            // The pre-conversion comparator, verbatim.
+            old.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+            assert_eq!(sc.dropouts(), old, "seed {seed} intensity {intensity}");
+        }
+    }
+}
+
+#[test]
+fn dropout_ties_break_by_device_id_exactly_as_before() {
+    let sc = Scenario {
+        name: "ties".into(),
+        events: vec![
+            ScenarioEvent::Dropout { device: 3, at: 5.0 },
+            ScenarioEvent::Dropout { device: 1, at: 5.0 },
+            ScenarioEvent::Dropout { device: 2, at: 4.0 },
+        ],
+    };
+    assert_eq!(sc.dropouts(), vec![(4.0, 2), (5.0, 1), (5.0, 3)]);
+}

@@ -57,7 +57,7 @@ fn main() -> ringada::Result<()> {
 
     for &u in &sweep {
         let m = meta(2 * u);
-        let cl = ClusterConfig::synthetic(u, seed, 0.6);
+        let cl = ClusterConfig::synthetic(u, seed, 0.6)?;
         let lut = CostLut::analytic(&m, 5.0);
         let costs = PlannerCosts {
             block_fwd_s: lut.block_fwd_s,

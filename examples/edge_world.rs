@@ -1,0 +1,179 @@
+//! A day in the life of an elastic edge fleet: the world-model demo.
+//!
+//! The fixed-pool fleet demos (`fleet_serving`, `fleet_service`) assume
+//! the pool you start with is the pool you finish with.  Real edge
+//! deployments are not like that: devices share racks and NAT groups
+//! that fail *together*, phones join and leave, batteries drain, memory
+//! gets reclaimed by the foreground app, and job arrivals follow the
+//! sun.  This example scripts exactly one such day as a `World` timeline
+//! and serves the same job stream with and without it:
+//!
+//! * an overnight lull then a morning burst (`arrival_rate` windows),
+//! * a correlated rack outage at mid-day (`set_domain` + `domain_outage`
+//!   — six devices fail-stop in ONE fleet event),
+//! * two devices joining in the afternoon (`join` — the pool grows and
+//!   the free list picks them up),
+//! * a battery-constrained device that burns out (`energy_budget`), and
+//! * an evening memory-pressure window (`mem_pressure` — the planner
+//!   places layers under the shrunk budget instead of failing later).
+//!
+//! Timing-only: analytic cost LUT, no AOT artifacts — works anywhere.
+//!
+//! ```bash
+//! cargo run --release --example edge_world
+//! ```
+
+use ringada::config::FleetConfig;
+use ringada::fleet::{serve, AllocationPolicy, DeadlineEdf, FifoWholeRing, SmallestRingFirst};
+use ringada::metrics::{FleetDeltaTable, FleetReport};
+use ringada::world::{World, WorldEvent};
+
+fn summarize(label: &str, r: &FleetReport) {
+    println!(
+        "[{label}] {:<14} done {:>2}  failed {}  unserved {}  dead {}  pool {}  \
+         horizon {:>7.1}s  thr {:>5.1} j/h  mean JCT {:>6.1}s  util {:>4.1}%",
+        r.policy,
+        r.completed(),
+        r.failed_jobs(),
+        r.unserved(),
+        r.dead_devices,
+        r.pool_devices,
+        r.horizon_s,
+        r.throughput_jobs_per_hour(),
+        r.mean_jct_s(),
+        100.0 * r.pool_utilization(),
+    );
+    if let Some(w) = &r.world {
+        let domains: Vec<String> = w
+            .domains
+            .iter()
+            .map(|(name, members, lost)| format!("{name} {lost}/{members} lost"))
+            .collect();
+        println!(
+            "          world: {} base + {} joined, {} outage(s), {} battery death(s), \
+             {:.0} J drained, domains: {}",
+            w.base_devices,
+            w.joins,
+            w.outages,
+            w.energy_exhausted,
+            w.energy_spent_j,
+            domains.join(", "),
+        );
+    }
+}
+
+fn main() -> ringada::Result<()> {
+    let seed = 2026u64;
+    let mut cfg = FleetConfig::synthetic(24, 24, seed);
+    cfg.mean_interarrival_s = 20.0;
+    let day = cfg.mean_interarrival_s * cfg.jobs as f64; // nominal arrival span
+
+    // ---- the day's script -------------------------------------------
+    let mut events = Vec::new();
+    for d in 0..6 {
+        events.push(WorldEvent::SetDomain { device: d, domain: "rack-a".into() });
+    }
+    for d in 6..12 {
+        events.push(WorldEvent::SetDomain { device: d, domain: "rack-b".into() });
+    }
+    // Overnight lull: arrivals at quarter rate, then the morning burst.
+    events.push(WorldEvent::ArrivalRate { t_start: 0.0, t_end: 0.2 * day, factor: 0.25 });
+    events.push(WorldEvent::ArrivalRate { t_start: 0.2 * day, t_end: 0.6 * day, factor: 2.0 });
+    // Mid-day: rack-a's uplink dies — all six devices at once.
+    events.push(WorldEvent::DomainOutage { domain: "rack-a".into(), at: 0.5 * day });
+    // Afternoon: two phones come online (cloned from base device 0's
+    // class, modest uplink), labeled into the surviving rack.
+    for i in 0..2u64 {
+        events.push(WorldEvent::Join {
+            at: (0.55 + 0.05 * i as f64) * day,
+            compute_speed: cfg.pool.devices[0].compute_speed,
+            mem_bytes: cfg.pool.devices[0].mem_bytes,
+            rate_bytes_per_s: 25e6,
+            domain: Some("rack-b".into()),
+        });
+    }
+    // Device 12 runs on a small battery: 2 W drain, 240 J — two active
+    // minutes, then fail-stop at a round boundary.
+    events.push(WorldEvent::EnergyBudget { device: 12, capacity_j: 240.0, drain_w: 2.0 });
+    // Evening: the foreground app reclaims half of device 13's memory.
+    events.push(WorldEvent::MemPressure {
+        device: 13,
+        t_start: 0.6 * day,
+        t_end: 0.9 * day,
+        mem_bytes: (cfg.pool.devices[13].mem_bytes / 2).max(1),
+    });
+    let world = World { name: "one-edge-day".into(), events };
+
+    let mut worldly = cfg.clone();
+    worldly.world = Some(world.clone());
+
+    println!(
+        "edge_world: {} jobs over a {}-device base pool, seed {seed}; world `{}` \
+         scripts {} events (trace form below)\n",
+        cfg.jobs,
+        cfg.pool.len(),
+        world.name,
+        world.events.len(),
+    );
+    // The same timeline as its ringada_world v1 JSONL trace (what you
+    // would commit next to a config and point `world_trace_path` at).
+    print!("{}", world.to_jsonl());
+    println!();
+
+    let policies: [&dyn AllocationPolicy; 3] =
+        [&FifoWholeRing, &SmallestRingFirst, &DeadlineEdf];
+    let mut table = FleetDeltaTable::new();
+    let mut baseline: Option<FleetReport> = None;
+    for policy in policies {
+        let calm = serve(&cfg, policy)?;
+        summarize("calm-day", &calm);
+        let stormy = serve(&worldly, policy)?;
+        summarize("world", &stormy);
+
+        // The world actually happened: six rack-a devices died together,
+        // both phones joined, and the report says so.
+        let w = stormy.world.as_ref().expect("world run must carry world stats");
+        assert_eq!(w.outages, 1);
+        assert_eq!(w.joins, 2);
+        assert!(
+            w.domains.iter().any(|(n, m, l)| n == "rack-a" && *m == 6 && *l == 6),
+            "rack-a must be fully lost: {:?}",
+            w.domains
+        );
+        assert_eq!(stormy.pool_devices, 26, "the pool grew by the two joins");
+        assert_eq!(stormy.dead_devices, 6 + w.energy_exhausted);
+        assert_eq!(
+            stormy.completed() + stormy.failed_jobs() + stormy.unserved(),
+            cfg.jobs,
+            "job conservation must survive the world"
+        );
+        // Seed-determinism: the whole day replays byte-for-byte.
+        assert_eq!(
+            stormy.canonical_string(),
+            serve(&worldly, policy)?.canonical_string(),
+            "world runs must be seed-deterministic"
+        );
+
+        let base = baseline.get_or_insert_with(|| calm.clone());
+        table.push(base, &calm);
+        table.push(base, &stormy);
+        println!();
+    }
+
+    println!("per-policy deltas vs FIFO on the calm day (world rows carry Joins/Outs/Exh):\n");
+    println!("{}", table.render());
+
+    println!(
+        "\nreading: the correlated outage is one event, not six — admission never\n\
+         sees a half-dead rack, and every holding job re-plans its ring over the\n\
+         survivors at the next round boundary.  The joined phones enter the free\n\
+         pool and later grants use them (the pool column grows to 26).  The\n\
+         battery device burns its 240 J and fail-stops exactly when its active\n\
+         seconds hit capacity/drain; the memory-pressure window shrinks what the\n\
+         planner may place on device 13 instead of surfacing as a mid-round\n\
+         failure.  Diurnal arrival windows reshape the offered load without\n\
+         touching any job's content — the trace stays seed-deterministic, so\n\
+         every number above replays byte-identically."
+    );
+    Ok(())
+}

@@ -57,7 +57,7 @@ fn main() {
     let mut planner_rows = Vec::new();
     for &u in plan_sweep {
         let m = meta(2 * u);
-        let cl = ClusterConfig::synthetic(u, 11, 0.6);
+        let cl = ClusterConfig::synthetic(u, 11, 0.6).unwrap();
         let lut = CostLut::analytic(&m, 5.0);
         let planner = Planner::new(&m, &cl, costs(&lut, &m));
         let devices: Vec<usize> = (0..u).collect();
@@ -86,7 +86,7 @@ fn main() {
     let mut sim_rows = Vec::new();
     for &u in sim_sweep {
         let m = meta(2 * u);
-        let cl = ClusterConfig::synthetic(u, 13, 0.5);
+        let cl = ClusterConfig::synthetic(u, 13, 0.5).unwrap();
         let lut = CostLut::analytic(&m, 5.0);
         let planner = Planner::new(&m, &cl, costs(&lut, &m));
         let devices: Vec<usize> = (0..u).collect();
@@ -152,7 +152,7 @@ fn main() {
         let mut worst_ratio = 1.0f64;
         for s in 0..q_seeds {
             let m = meta(2 * u);
-            let cl = ClusterConfig::synthetic(u, 100 + s, 0.7);
+            let cl = ClusterConfig::synthetic(u, 100 + s, 0.7).unwrap();
             let lut = CostLut::analytic(&m, 5.0);
             let planner = Planner::new(&m, &cl, costs(&lut, &m));
             let devices: Vec<usize> = (0..u).collect();
@@ -188,7 +188,7 @@ fn main() {
     let mut incr_rows = Vec::new();
     for &u in incr_sweep {
         let m = meta(2 * u);
-        let cl = ClusterConfig::synthetic(u, 17, 0.6);
+        let cl = ClusterConfig::synthetic(u, 17, 0.6).unwrap();
         let lut = CostLut::analytic(&m, 5.0);
         let planner = Planner::new(&m, &cl, costs(&lut, &m));
         let devices: Vec<usize> = (0..u).collect();

@@ -1,0 +1,195 @@
+//! World-model benches: compile cost of an event timeline, `ringada_world`
+//! v1 trace parsing, and the end-to-end `serve` overhead of running under
+//! a world (churn + domains + budgets + diurnal arrivals) versus the same
+//! pool with no world.  Written to `BENCH_world.json` (CI runs the smoke
+//! profile and uploads the artifact).
+//!
+//! Two asserts are gating, not advisory: the committed mini world-trace
+//! fixture must round-trip byte-identically through this build's
+//! canonical JSONL form, and the degenerate (no-event) world must leave
+//! the fleet report byte-identical to having no world at all.
+//!
+//! Run: `cargo bench --bench world` — or `cargo bench --bench world --
+//! --smoke` (also honored via `RINGADA_BENCH_SMOKE=1`) for the CI profile.
+
+use ringada::config::FleetConfig;
+use ringada::fleet::{serve, AllocationPolicy, DeadlineEdf, FifoWholeRing};
+use ringada::util::bench::{black_box, Bencher};
+use ringada::util::json::Json;
+use ringada::world::{World, WorldEvent};
+
+/// Deterministic world scaled to the pool: one rack-sized failure domain
+/// (a quarter of the base pool) that drops mid-run, two joined devices,
+/// battery budgets on another quarter, one memory-pressure window, and a
+/// two-phase diurnal arrival profile.
+fn synth_world(cfg: &FleetConfig, horizon: f64) -> World {
+    let n = cfg.pool.len();
+    let rack = (n / 4).max(2);
+    let mut events = Vec::new();
+    for d in 0..rack {
+        events.push(WorldEvent::SetDomain { device: d, domain: "rack-0".into() });
+    }
+    events.push(WorldEvent::DomainOutage { domain: "rack-0".into(), at: 0.5 * horizon });
+    for i in 0..2u64 {
+        events.push(WorldEvent::Join {
+            at: (0.3 + 0.1 * i as f64) * horizon,
+            compute_speed: cfg.pool.devices[0].compute_speed,
+            mem_bytes: cfg.pool.devices[0].mem_bytes,
+            rate_bytes_per_s: 25e6,
+            domain: Some("rack-1".into()),
+        });
+    }
+    for d in rack..(2 * rack).min(n) {
+        // The first budgeted device gets a battery tight enough to burn
+        // out mid-run; the rest carry ample headroom.
+        let capacity_j = if d == rack { 60.0 } else { 400.0 * horizon };
+        events.push(WorldEvent::EnergyBudget { device: d, capacity_j, drain_w: 2.0 });
+    }
+    let pressured = n - 1;
+    events.push(WorldEvent::MemPressure {
+        device: pressured,
+        t_start: 0.2 * horizon,
+        t_end: 0.6 * horizon,
+        mem_bytes: (cfg.pool.devices[pressured].mem_bytes / 2).max(1),
+    });
+    events.push(WorldEvent::ArrivalRate { t_start: 0.0, t_end: 0.25 * horizon, factor: 0.5 });
+    events.push(WorldEvent::ArrivalRate {
+        t_start: 0.25 * horizon,
+        t_end: 0.75 * horizon,
+        factor: 1.5,
+    });
+    World { name: "bench-world".into(), events }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("RINGADA_BENCH_SMOKE").map_or(false, |v| v == "1");
+    let mut b = Bencher::coarse();
+    println!("== world benches ({}) ==", if smoke { "smoke" } else { "full" });
+
+    let (pool, jobs) = if smoke { (24, 10) } else { (96, 48) };
+    let mut cfg = FleetConfig::synthetic(pool, jobs, 2026);
+    cfg.mean_interarrival_s = 15.0;
+    let horizon = cfg.mean_interarrival_s * jobs as f64;
+    let world = synth_world(&cfg, horizon);
+
+    // ---- gating conformance: committed fixture is a canonical fixed point
+    let fixture = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/data/world_mini.jsonl");
+    let committed = std::fs::read_to_string(fixture).expect("read world_mini.jsonl");
+    let parsed = World::from_jsonl(&committed).expect("parse committed world fixture");
+    assert_eq!(
+        parsed.to_jsonl(),
+        committed,
+        "gating: committed ringada_world fixture must round-trip byte-identically"
+    );
+
+    // ---- gating conformance: the degenerate world is byte-invisible
+    let baseline = serve(&cfg, &FifoWholeRing).expect("baseline serve");
+    let mut degenerate = cfg.clone();
+    degenerate.world = Some(World::empty());
+    assert_eq!(
+        serve(&degenerate, &FifoWholeRing).expect("degenerate serve").canonical_string(),
+        baseline.canonical_string(),
+        "gating: a no-event world changed the trajectory"
+    );
+
+    // ---- micro: compile + trace parse -------------------------------
+    let compile_mean_s = b
+        .bench("world/compile", || {
+            black_box(world.compile(&cfg.pool).expect("compile"));
+        })
+        .mean
+        .as_secs_f64();
+    let text = world.to_jsonl();
+    let parse_mean_s = b
+        .bench("world/trace_parse", || {
+            black_box(World::from_jsonl(&text).expect("parse"));
+        })
+        .mean
+        .as_secs_f64();
+    println!(
+        "  -> compile {:.1}us, trace parse {:.1}us ({} events)",
+        1e6 * compile_mean_s,
+        1e6 * parse_mean_s,
+        world.events.len(),
+    );
+
+    // ---- end-to-end: serve with vs without the world ----------------
+    let mut worldly = cfg.clone();
+    worldly.world = Some(world.clone());
+    let policies: [&dyn AllocationPolicy; 2] = [&FifoWholeRing, &DeadlineEdf];
+    let mut rows = Vec::new();
+    for policy in policies {
+        let base_mean_s = b
+            .bench(&format!("world/serve_plain_{}", policy.name()), || {
+                black_box(serve(&cfg, policy).unwrap());
+            })
+            .mean
+            .as_secs_f64();
+        let report = serve(&worldly, policy).expect("world serve");
+        let world_mean_s = b
+            .bench(&format!("world/serve_world_{}", policy.name()), || {
+                black_box(serve(&worldly, policy).unwrap());
+            })
+            .mean
+            .as_secs_f64();
+        // Gating: world runs replay byte-identically and conserve jobs.
+        let again = serve(&worldly, policy).expect("world serve replay");
+        assert_eq!(
+            report.canonical_string(),
+            again.canonical_string(),
+            "gating: world run not seed-deterministic ({})",
+            policy.name()
+        );
+        assert_eq!(
+            report.completed() + report.failed_jobs() + report.unserved(),
+            jobs,
+            "gating: job conservation violated under the world ({})",
+            policy.name()
+        );
+        let w = report.world.as_ref().expect("world stats");
+        println!(
+            "  -> {}: plain {:.1}ms vs world {:.1}ms ({:+.0}% overhead); \
+             {} joins, {} outages, {} exhausted, {:.0} J drained, {} dead",
+            policy.name(),
+            1e3 * base_mean_s,
+            1e3 * world_mean_s,
+            100.0 * (world_mean_s / base_mean_s.max(1e-12) - 1.0),
+            w.joins,
+            w.outages,
+            w.energy_exhausted,
+            w.energy_spent_j,
+            report.dead_devices,
+        );
+        rows.push(Json::obj(vec![
+            ("policy", Json::str(policy.name())),
+            ("pool", Json::num(pool as f64)),
+            ("jobs", Json::num(jobs as f64)),
+            ("serve_plain_mean_s", Json::num(base_mean_s)),
+            ("serve_world_mean_s", Json::num(world_mean_s)),
+            (
+                "world_overhead_pct",
+                Json::num(100.0 * (world_mean_s / base_mean_s.max(1e-12) - 1.0)),
+            ),
+            ("completed", Json::num(report.completed() as f64)),
+            ("failed", Json::num(report.failed_jobs() as f64)),
+            ("unserved", Json::num(report.unserved() as f64)),
+            ("dead_devices", Json::num(report.dead_devices as f64)),
+            ("joins", Json::num(w.joins as f64)),
+            ("outages", Json::num(w.outages as f64)),
+            ("energy_exhausted", Json::num(w.energy_exhausted as f64)),
+            ("energy_spent_j", Json::num(w.energy_spent_j)),
+        ]));
+    }
+
+    let out = Json::obj(vec![
+        ("bench", Json::str("world")),
+        ("smoke", Json::Bool(smoke)),
+        ("world_events", Json::num(world.events.len() as f64)),
+        ("compile_mean_s", Json::num(compile_mean_s)),
+        ("trace_parse_mean_s", Json::num(parse_mean_s)),
+        ("runs", Json::Arr(rows)),
+    ]);
+    std::fs::write("BENCH_world.json", out.pretty()).expect("write BENCH_world.json");
+    println!("wrote BENCH_world.json");
+}

@@ -48,11 +48,16 @@ pub struct DeviceSpec {
     pub compute_speed: f64,
     /// Memory budget `C_u^mem` in bytes.
     pub mem_bytes: usize,
+    /// Correlated-failure domain label (rack / NAT group) for the world
+    /// model's domain outages (see [`crate::world`]).  `None` = unlabeled;
+    /// the JSON form omits the key, so pre-world configs and goldens are
+    /// untouched.
+    pub domain: Option<String>,
 }
 
 impl DeviceSpec {
     pub fn uniform(id: usize) -> Self {
-        DeviceSpec { id, compute_speed: 1.0, mem_bytes: 8 << 30 }
+        DeviceSpec { id, compute_speed: 1.0, mem_bytes: 8 << 30, domain: None }
     }
 }
 
@@ -113,11 +118,34 @@ impl ClusterConfig {
     /// connected by ~200 Mbps D2D links whose rates jitter by the same
     /// knob.
     ///
-    /// `heterogeneity` is clamped to [0, 1]: 0 ⇒ identical devices and
-    /// links; 1 ⇒ up to ~10× compute spread (log-uniform, strictly
+    /// `heterogeneity` must be a positive finite number (values above 1
+    /// clamp to 1): 1 ⇒ up to ~10× compute spread (log-uniform, strictly
     /// positive) and up to 5× link-rate spread.  Same
     /// `(n, seed, heterogeneity)` ⇒ bit-identical cluster.
-    pub fn synthetic(n: usize, seed: u64, heterogeneity: f64) -> Self {
+    ///
+    /// NaN, negative, and zero heterogeneity are rejected with
+    /// [`Error::Schedule`] — a zero-spread "synthetic" pool is an
+    /// identical-device pool in disguise; ask [`ClusterConfig::homogeneous`]
+    /// for that.  `n == 0` is rejected for the same reason `validate`
+    /// rejects it.
+    pub fn synthetic(n: usize, seed: u64, heterogeneity: f64) -> Result<Self> {
+        if n == 0 {
+            return Err(Error::Schedule(
+                "synthetic cluster needs at least one device".into(),
+            ));
+        }
+        // `!(h > 0.0)` also catches NaN, which `h <= 0.0` lets through.
+        if !(heterogeneity > 0.0) || !heterogeneity.is_finite() {
+            return Err(Error::Schedule(format!(
+                "synthetic heterogeneity {heterogeneity} must be finite and > 0"
+            )));
+        }
+        Ok(Self::synthetic_raw(n, seed, heterogeneity))
+    }
+
+    /// Infallible body of [`ClusterConfig::synthetic`] for in-crate
+    /// callers whose inputs are compile-time constants.
+    pub(crate) fn synthetic_raw(n: usize, seed: u64, heterogeneity: f64) -> Self {
         let h = heterogeneity.clamp(0.0, 1.0);
         let mut rng = Rng::new(seed ^ 0xC1_05_7E_12);
         let mut c = Self::homogeneous(n, 25e6);
@@ -202,11 +230,11 @@ impl ClusterConfig {
     /// matrix.
     pub fn from_json(v: &Json) -> Result<Self> {
         if let Some(s) = v.get("synthetic") {
-            return Ok(Self::synthetic(
+            return Self::synthetic(
                 s.req("n")?.as_usize()?,
                 seed_from_json(s.req("seed")?)?,
                 s.req("heterogeneity")?.as_f64()?,
-            ));
+            );
         }
         let devices = v
             .req("devices")?
@@ -217,6 +245,10 @@ impl ClusterConfig {
                     id: d.req("id")?.as_usize()?,
                     compute_speed: d.req("compute_speed")?.as_f64()?,
                     mem_bytes: d.req("mem_bytes")?.as_usize()?,
+                    domain: match d.get("domain") {
+                        Some(dm) => Some(dm.as_str()?.to_string()),
+                        None => None,
+                    },
                 })
             })
             .collect::<Result<Vec<_>>>()?;
@@ -242,11 +274,17 @@ impl ClusterConfig {
             self.devices
                 .iter()
                 .map(|d| {
-                    Json::obj(vec![
+                    let mut pairs = vec![
                         ("id", Json::num(d.id as f64)),
                         ("compute_speed", Json::num(d.compute_speed)),
                         ("mem_bytes", Json::num(d.mem_bytes as f64)),
-                    ])
+                    ];
+                    // Omitted when unlabeled so pre-world JSON and the
+                    // golden fingerprints stay byte-identical.
+                    if let Some(dm) = &d.domain {
+                        pairs.push(("domain", Json::str(dm.clone())));
+                    }
+                    Json::obj(pairs)
                 })
                 .collect(),
         );
@@ -515,6 +553,15 @@ pub struct FleetConfig {
     /// still size per-job training; `jobs` is ignored when a trace is set
     /// (the stream ends when the file does).
     pub trace_path: Option<String>,
+    /// Optional inline world-event timeline (see [`crate::world`]):
+    /// correlated domain outages, device joins, energy/memory budgets,
+    /// diurnal arrival intensity.  An event-free world is the degenerate
+    /// world — byte-identical trajectories to `None`.
+    pub world: Option<crate::world::World>,
+    /// Optional `ringada_world` v1 JSONL trace to load the world from
+    /// instead (mutually exclusive with `world`; see
+    /// [`FleetConfig::resolve_world`]).
+    pub world_trace_path: Option<String>,
 }
 
 impl FleetConfig {
@@ -522,7 +569,7 @@ impl FleetConfig {
     /// paper-class job sizes — the examples/benches/tests entry point.
     pub fn synthetic(pool_devices: usize, jobs: usize, seed: u64) -> Self {
         FleetConfig {
-            pool: ClusterConfig::synthetic(pool_devices, seed, 0.6),
+            pool: ClusterConfig::synthetic_raw(pool_devices, seed, 0.6),
             jobs,
             mean_interarrival_s: 20.0,
             seed,
@@ -536,6 +583,30 @@ impl FleetConfig {
             preemption: false,
             admission: AdmissionControl::Open,
             trace_path: None,
+            world: None,
+            world_trace_path: None,
+        }
+    }
+
+    /// The world this config asks for, or `None` for the fixed-pool
+    /// default.  An *event-free* world also resolves to `None`: the
+    /// degenerate world is indistinguishable from no world, and mapping
+    /// it out here keeps every healthy-path trajectory (and snapshot)
+    /// byte-identical by construction.
+    pub fn resolve_world(&self) -> Result<Option<crate::world::World>> {
+        if self.world.is_some() && self.world_trace_path.is_some() {
+            return Err(Error::Config(
+                "set `world` or `world_trace_path`, not both".into(),
+            ));
+        }
+        let world = match (&self.world, &self.world_trace_path) {
+            (Some(w), _) => Some(w.clone()),
+            (None, Some(path)) => Some(crate::world::World::load(path)?),
+            (None, None) => None,
+        };
+        match world {
+            Some(w) if w.is_empty() => Ok(None),
+            other => Ok(other),
         }
     }
 
@@ -575,6 +646,16 @@ impl FleetConfig {
         if let Some(sc) = &self.scenario {
             sc.validate(self.pool.len())?;
         }
+        if self.world.is_some() && self.world_trace_path.is_some() {
+            return Err(Error::Config(
+                "set `world` or `world_trace_path`, not both".into(),
+            ));
+        }
+        if let Some(w) = &self.world {
+            w.validate(self.pool.len())?;
+        }
+        // `world_trace_path` is validated at load time (resolve_world):
+        // validate() stays IO-free, like `trace_path`.
         Ok(())
     }
 
@@ -632,6 +713,14 @@ impl FleetConfig {
                 Some(p) => Some(p.as_str()?.to_string()),
                 None => None,
             },
+            world: match v.get("world") {
+                Some(w) => Some(crate::world::World::from_json(w)?),
+                None => None,
+            },
+            world_trace_path: match v.get("world_trace_path") {
+                Some(p) => Some(p.as_str()?.to_string()),
+                None => None,
+            },
         })
     }
 
@@ -659,6 +748,12 @@ impl FleetConfig {
         }
         if let Some(path) = &self.trace_path {
             pairs.push(("trace_path", Json::str(path)));
+        }
+        if let Some(w) = &self.world {
+            pairs.push(("world", w.to_json()));
+        }
+        if let Some(path) = &self.world_trace_path {
+            pairs.push(("world_trace_path", Json::str(path)));
         }
         Json::obj(pairs)
     }
@@ -712,29 +807,47 @@ mod tests {
 
     #[test]
     fn synthetic_cluster_is_deterministic_and_valid() {
-        let a = ClusterConfig::synthetic(64, 9, 0.8);
-        let b = ClusterConfig::synthetic(64, 9, 0.8);
+        let a = ClusterConfig::synthetic(64, 9, 0.8).unwrap();
+        let b = ClusterConfig::synthetic(64, 9, 0.8).unwrap();
         a.validate().unwrap();
         assert_eq!(a.len(), 64);
         for (da, db) in a.devices.iter().zip(&b.devices) {
             assert_eq!(da.compute_speed.to_bits(), db.compute_speed.to_bits());
         }
         assert_eq!(a.rate_bytes_per_s, b.rate_bytes_per_s);
-        // Heterogeneity 0 collapses to identical devices and links.
-        let flat = ClusterConfig::synthetic(8, 3, 0.0);
-        flat.validate().unwrap();
-        assert!(flat
-            .devices
-            .iter()
-            .all(|d| (d.compute_speed - 0.1).abs() < 1e-12));
-        assert!((flat.rate_bytes_per_s[0][1] - 25e6).abs() < 1e-3);
         // Different seeds produce different clusters.
-        let c = ClusterConfig::synthetic(64, 10, 0.8);
+        let c = ClusterConfig::synthetic(64, 10, 0.8).unwrap();
         assert!(a
             .devices
             .iter()
             .zip(&c.devices)
             .any(|(x, y)| x.compute_speed != y.compute_speed));
+    }
+
+    #[test]
+    fn synthetic_cluster_rejects_degenerate_inputs() {
+        // NaN, negative, and zero heterogeneity, plus an empty pool, are
+        // schedule errors — not silently-degenerate pools.
+        for h in [f64::NAN, -0.5, 0.0, f64::NEG_INFINITY, f64::INFINITY] {
+            let err = ClusterConfig::synthetic(8, 3, h).unwrap_err();
+            assert!(
+                matches!(err, Error::Schedule(_)),
+                "heterogeneity {h} should be Error::Schedule, got {err}"
+            );
+        }
+        let err = ClusterConfig::synthetic(0, 3, 0.5).unwrap_err();
+        assert!(matches!(err, Error::Schedule(_)), "n=0 should be Error::Schedule");
+        // Values above 1 still clamp rather than error (documented).
+        let clamped = ClusterConfig::synthetic(4, 3, 7.0).unwrap();
+        let unit = ClusterConfig::synthetic(4, 3, 1.0).unwrap();
+        for (a, b) in clamped.devices.iter().zip(&unit.devices) {
+            assert_eq!(a.compute_speed.to_bits(), b.compute_speed.to_bits());
+        }
+        // The JSON synthetic spec propagates the same rejection.
+        let text = r#"{"synthetic": {"n": 8, "seed": 3, "heterogeneity": 0}}"#;
+        assert!(ClusterConfig::from_json(&Json::parse(text).unwrap()).is_err());
+        let text = r#"{"synthetic": {"n": 0, "seed": 3, "heterogeneity": 0.5}}"#;
+        assert!(ClusterConfig::from_json(&Json::parse(text).unwrap()).is_err());
     }
 
     #[test]
@@ -781,7 +894,7 @@ mod tests {
 
     #[test]
     fn cluster_json_round_trips_bit_exactly() {
-        let c = ClusterConfig::synthetic(6, 5, 0.7);
+        let c = ClusterConfig::synthetic(6, 5, 0.7).unwrap();
         let back = ClusterConfig::from_json(&Json::parse(&c.to_json().pretty()).unwrap()).unwrap();
         back.validate().unwrap();
         for (a, b) in c.devices.iter().zip(&back.devices) {
@@ -797,14 +910,14 @@ mod tests {
         let c = ClusterConfig::from_json(&Json::parse(text).unwrap()).unwrap();
         c.validate().unwrap();
         assert_eq!(c.len(), 16);
-        let direct = ClusterConfig::synthetic(16, 9, 0.8);
+        let direct = ClusterConfig::synthetic(16, 9, 0.8).unwrap();
         for (a, b) in c.devices.iter().zip(&direct.devices) {
             assert_eq!(a.compute_speed.to_bits(), b.compute_speed.to_bits());
         }
         // String seeds are accepted here too, so > 2^53 seeds survive.
         let text = r#"{"synthetic": {"n": 4, "seed": "1152921504606846977", "heterogeneity": 0.2}}"#;
         let c2 = ClusterConfig::from_json(&Json::parse(text).unwrap()).unwrap();
-        let d2 = ClusterConfig::synthetic(4, (1u64 << 60) + 1, 0.2);
+        let d2 = ClusterConfig::synthetic(4, (1u64 << 60) + 1, 0.2).unwrap();
         assert_eq!(
             c2.devices[0].compute_speed.to_bits(),
             d2.devices[0].compute_speed.to_bits()
@@ -896,5 +1009,46 @@ mod tests {
             }
         }
         assert!(FleetConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn world_rides_along_in_fleet_json() {
+        use crate::world::{World, WorldEvent};
+        let mut cfg = FleetConfig::synthetic(4, 2, 7);
+        cfg.world = Some(World {
+            name: "w".into(),
+            events: vec![
+                WorldEvent::SetDomain { device: 1, domain: "rack".into() },
+                WorldEvent::DomainOutage { domain: "rack".into(), at: 50.0 },
+            ],
+        });
+        cfg.validate().unwrap();
+        let back = FleetConfig::from_json(&Json::parse(&cfg.to_json().pretty()).unwrap()).unwrap();
+        assert_eq!(back.world, cfg.world);
+        assert!(back.world_trace_path.is_none());
+        // Device domain labels round-trip through the explicit cluster form.
+        let mut labeled = ClusterConfig::homogeneous(2, 1e6);
+        labeled.devices[1].domain = Some("rack-b".into());
+        let back = ClusterConfig::from_json(&Json::parse(&labeled.to_json().pretty()).unwrap())
+            .unwrap();
+        assert_eq!(back.devices[0].domain, None);
+        assert_eq!(back.devices[1].domain.as_deref(), Some("rack-b"));
+        // Inline world + trace path is a conflict.
+        let mut both = FleetConfig::synthetic(4, 2, 7);
+        both.world = Some(World::empty());
+        both.world_trace_path = Some("x.jsonl".into());
+        assert!(both.validate().is_err());
+        assert!(both.resolve_world().is_err());
+        // An event-free world resolves to None (the degenerate world).
+        let mut empty = FleetConfig::synthetic(4, 2, 7);
+        empty.world = Some(World::empty());
+        assert!(empty.resolve_world().unwrap().is_none());
+        // A world referencing devices beyond the pool fails validate.
+        let mut bad = FleetConfig::synthetic(4, 2, 7);
+        bad.world = Some(World {
+            name: "bad".into(),
+            events: vec![WorldEvent::SetDomain { device: 9, domain: "r".into() }],
+        });
+        assert!(bad.validate().is_err());
     }
 }

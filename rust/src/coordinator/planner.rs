@@ -1203,7 +1203,7 @@ mod tests {
     #[test]
     fn eval_budget_caps_anneal_cost_deterministically() {
         let m = meta(32);
-        let cl = ClusterConfig::synthetic(16, 21, 0.7);
+        let cl = ClusterConfig::synthetic(16, 21, 0.7).unwrap();
         let p = Planner::new(&m, &cl, costs());
         let devices: Vec<usize> = (0..16).collect();
         let tight = SearchParams {
@@ -1237,7 +1237,7 @@ mod tests {
     #[test]
     fn bottleneck_estimate_tracks_the_full_planner() {
         let m = meta(24);
-        let cl = ClusterConfig::synthetic(6, 17, 0.5);
+        let cl = ClusterConfig::synthetic(6, 17, 0.5).unwrap();
         let p = Planner::new(&m, &cl, costs());
         let devices: Vec<usize> = (0..6).collect();
         let est = p.estimate_bottleneck_for_devices(&devices).unwrap();
@@ -1263,7 +1263,7 @@ mod tests {
         // swaps/reverses (and undos), the maintained (a, t) arrays equal
         // a fresh order_coeffs build bit for bit.
         let m = meta(24);
-        let cl = ClusterConfig::synthetic(12, 77, 0.8);
+        let cl = ClusterConfig::synthetic(12, 77, 0.8).unwrap();
         let p = Planner::new(&m, &cl, costs());
         let mut order: Vec<usize> = (0..12).collect();
         let (mut a, mut t) = p.order_coeffs(&order);
@@ -1306,7 +1306,7 @@ mod tests {
         let u = DP_EXACT_MAX_DEVICES + 2;
         let layers = 2 * u;
         let m = meta(layers);
-        let cl = ClusterConfig::synthetic(u, 31, 0.6);
+        let cl = ClusterConfig::synthetic(u, 31, 0.6).unwrap();
         let p = Planner::new(&m, &cl, costs());
         let order: Vec<usize> = (0..u).collect();
         let (a, t) = p.order_coeffs(&order);
@@ -1332,7 +1332,7 @@ mod tests {
     #[test]
     fn beam_anneal_plans_a_large_cluster() {
         let m = meta(48);
-        let cl = ClusterConfig::synthetic(24, 7, 0.6);
+        let cl = ClusterConfig::synthetic(24, 7, 0.6).unwrap();
         let plan = Planner::new(&m, &cl, costs()).plan().unwrap();
         plan.assignment.validate(48).unwrap();
         assert_eq!(plan.assignment.num_positions(), 24);

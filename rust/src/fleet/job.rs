@@ -18,7 +18,9 @@ use crate::error::{Error, Result};
 use crate::model::manifest::ModelHyper;
 use crate::model::ModelMeta;
 use crate::runtime::rng::{mix, Rng};
+use crate::sim::scenario::{finish_after, Window};
 use crate::util::json::Json;
+use crate::world::World;
 
 /// Scheduling priority of a fleet job.  Orthogonal to [`DeadlineClass`]
 /// (how tight the deadline is): priority decides who may preempt whom —
@@ -239,6 +241,11 @@ pub struct SyntheticSource {
     max_rounds: usize,
     local_iters: usize,
     priority_mix: [f64; 3],
+    /// Diurnal arrival-intensity windows from the config's world
+    /// ([`crate::world::WorldEvent::ArrivalRate`]): piecewise-constant
+    /// multipliers on the arrival *rate*.  Empty for a world-less config —
+    /// the gap arithmetic is then bit-identical to the pre-world source.
+    arrival_windows: Vec<Window>,
     rng: Rng,
     prio_rng: Rng,
     t: f64,
@@ -246,7 +253,16 @@ pub struct SyntheticSource {
 }
 
 impl SyntheticSource {
+    /// Source for `cfg`, honoring an *inline* world's arrival windows
+    /// (`cfg.world`).  A `world_trace_path` world needs IO to resolve —
+    /// use [`default_source`] / [`SyntheticSource::with_world`] for that.
     pub fn new(cfg: &FleetConfig) -> Self {
+        Self::with_world(cfg, cfg.world.as_ref())
+    }
+
+    /// Source for `cfg` under an explicitly resolved world (see
+    /// `FleetConfig::resolve_world`).
+    pub fn with_world(cfg: &FleetConfig, world: Option<&World>) -> Self {
         SyntheticSource {
             jobs: cfg.jobs,
             mean_interarrival_s: cfg.mean_interarrival_s,
@@ -256,6 +272,7 @@ impl SyntheticSource {
             max_rounds: cfg.max_rounds,
             local_iters: cfg.local_iters,
             priority_mix: cfg.priority_mix,
+            arrival_windows: world.map(World::arrival_windows).unwrap_or_default(),
             rng: Rng::new(cfg.seed ^ 0xF1EE_7A8B),
             prio_rng: Rng::new(mix(cfg.seed, 0x5EED_9A10)),
             t: 0.0,
@@ -265,10 +282,11 @@ impl SyntheticSource {
 
     /// Rebuild a mid-stream generator from [`JobSource::snapshot`] output.
     /// `cfg` must be the config the snapshot was taken under (the fleet
-    /// snapshot's compatibility rule) — the trace parameters come from it,
-    /// only the generator position comes from the snapshot.
+    /// snapshot's compatibility rule) — the trace parameters and arrival
+    /// windows come from it, only the generator position comes from the
+    /// snapshot.
     pub fn resume(cfg: &FleetConfig, v: &Json) -> Result<Self> {
-        let mut src = Self::new(cfg);
+        let mut src = Self::with_world(cfg, cfg.resolve_world()?.as_ref());
         src.rng = rng_from_json(v.req("rng")?)?;
         src.prio_rng = rng_from_json(v.req("prio_rng")?)?;
         src.t = f64::from_bits(v.req("t_bits")?.as_u64()?);
@@ -291,8 +309,14 @@ impl JobSource for SyntheticSource {
         let id = self.emitted;
         let [w_high, w_normal, w_low] = self.priority_mix;
         let w_sum = w_high + w_normal + w_low;
+        // The exponential gap is drawn in *nominal* arrival time, then
+        // stretched/compressed through the diurnal intensity windows
+        // (factor 2 ⇒ gaps close twice as fast ⇒ twice the arrivals).
+        // With no windows, `finish_after` is exactly `t + gap`, so a
+        // world-less source stays bit-identical to the historical one.
         let u = self.rng.next_f64();
-        self.t += -self.mean_interarrival_s * (1.0 - u).ln();
+        let gap = -self.mean_interarrival_s * (1.0 - u).ln();
+        self.t = finish_after(&self.arrival_windows, self.t, gap)?;
         let layers = self.min_layers + self.rng.next_below(self.max_layers - self.min_layers + 1);
         let rounds = self.min_rounds + self.rng.next_below(self.max_rounds - self.min_rounds + 1);
         let ring_size = (2 + self.rng.next_below(7)).min((layers / 2).max(1));
@@ -482,11 +506,17 @@ impl JobSource for JsonlSource {
 }
 
 /// The source a [`FleetConfig`] asks for: the JSONL trace at
-/// `cfg.trace_path` when set, else the synthetic generator.
+/// `cfg.trace_path` when set, else the synthetic generator (under the
+/// config's resolved world, so diurnal `arrival_rate` windows apply).
+/// A JSONL trace carries literal arrival times, so a world's arrival
+/// windows do not modulate it.
 pub fn default_source(cfg: &FleetConfig) -> Result<Box<dyn JobSource>> {
     match &cfg.trace_path {
         Some(path) => Ok(Box::new(JsonlSource::open(path)?)),
-        None => Ok(Box::new(SyntheticSource::new(cfg))),
+        None => {
+            let world = cfg.resolve_world()?;
+            Ok(Box::new(SyntheticSource::with_world(cfg, world.as_ref())))
+        }
     }
 }
 
@@ -683,6 +713,64 @@ mod tests {
         assert!(src.next_job().unwrap().is_some());
         assert!(src.next_job().unwrap().is_some());
         assert!(src.next_job().unwrap().is_none());
+    }
+
+    #[test]
+    fn diurnal_windows_modulate_arrivals_without_touching_draws() {
+        use crate::world::{World, WorldEvent};
+        let cfg = FleetConfig::synthetic(16, 24, 11);
+        let base = JobTrace::synthetic(&cfg);
+        // An empty world is the degenerate world: bit-identical trace.
+        let mut degenerate = cfg.clone();
+        degenerate.world = Some(World::empty());
+        let same = JobTrace::synthetic(&degenerate);
+        for (a, b) in base.iter().zip(&same) {
+            assert_eq!(a, b);
+            assert_eq!(a.arrival_s.to_bits(), b.arrival_s.to_bits());
+        }
+        // A factor-2 window covering the whole trace doubles the arrival
+        // rate: every arrival lands at exactly half its nominal clock,
+        // and every non-arrival draw (sizes, rounds, rings, deadlines,
+        // priorities) is untouched.
+        let mut rush = cfg.clone();
+        rush.world = Some(World {
+            name: "rush".into(),
+            events: vec![WorldEvent::ArrivalRate { t_start: 0.0, t_end: 1e12, factor: 2.0 }],
+        });
+        let sped = JobTrace::synthetic(&rush);
+        assert_eq!(sped.len(), base.len());
+        for (a, b) in base.iter().zip(&sped) {
+            assert!(b.arrival_s < 1e12, "test premise: trace inside the window");
+            assert_eq!((b.arrival_s * 2.0).to_bits(), a.arrival_s.to_bits());
+            assert_eq!(a.layers, b.layers);
+            assert_eq!(a.rounds, b.rounds);
+            assert_eq!(a.ring_size, b.ring_size);
+            assert_eq!(a.deadline, b.deadline);
+            assert_eq!(a.priority, b.priority);
+        }
+        // A factor-0 window stalls the stream until it lifts.
+        let mut night = cfg.clone();
+        let lift = base[0].arrival_s + 1.0;
+        night.world = Some(World {
+            name: "night".into(),
+            events: vec![WorldEvent::ArrivalRate { t_start: 0.0, t_end: lift, factor: 0.0 }],
+        });
+        let stalled = JobTrace::synthetic(&night);
+        assert!(stalled[0].arrival_s >= lift, "first arrival waits out the outage window");
+        // Mid-stream snapshot/resume replays the diurnal tail bit-exactly.
+        let mut src = SyntheticSource::new(&rush);
+        for _ in 0..10 {
+            src.next_job().unwrap().unwrap();
+        }
+        let snap = src.snapshot().unwrap();
+        let mut resumed =
+            SyntheticSource::resume(&rush, &Json::parse(&snap.to_string()).unwrap()).unwrap();
+        for want in &sped[10..] {
+            let got = resumed.next_job().unwrap().unwrap();
+            assert_eq!(&got, want);
+            assert_eq!(got.arrival_s.to_bits(), want.arrival_s.to_bits());
+        }
+        assert!(resumed.next_job().unwrap().is_none());
     }
 
     #[test]

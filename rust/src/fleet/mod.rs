@@ -104,15 +104,16 @@ pub use policy::{
 use std::cmp::Ordering;
 use std::collections::{BTreeMap, BinaryHeap, VecDeque};
 
-use crate::config::{AdmissionControl, FleetConfig, TrainingConfig};
+use crate::config::{AdmissionControl, ClusterConfig, FleetConfig, TrainingConfig};
 use crate::coordinator::{Coordinator, LayerAssignment, Planner, PlannerCosts, SearchParams};
 use crate::error::{Error, Result};
-use crate::metrics::{FleetAggregates, FleetJobRow, FleetReport};
+use crate::metrics::{FleetAggregates, FleetJobRow, FleetReport, WorldStats};
 use crate::model::ModelMeta;
 use crate::pipeline::{ScheduleBuilder, WireSizes};
 use crate::runtime::rng::mix;
 use crate::sim::{ClockState, CostLut, Scenario, Simulator};
 use crate::util::json::Json;
+use crate::world::CompiledWorld;
 
 /// Effective GFLOP/s of the analytic LUT every fleet job prices its model
 /// with (the scale examples use the same figure).
@@ -163,32 +164,44 @@ fn job_seed(cfg: &FleetConfig, job: usize) -> u64 {
 enum EventKind {
     /// Scripted device fail-stop (device id).
     Drop(usize),
+    /// Correlated domain outage from the world model (index into
+    /// [`crate::world::CompiledWorld::outages`]) — drops the whole member
+    /// set atomically before any same-instant admission runs.
+    Outage(usize),
     /// Job completion: its staged devices return to the pool (job id).
     Done(usize),
     /// One round step of a running job (job id).
     Step(usize),
     /// Job arrival into the waiting queue (job id).
     Arrive(usize),
+    /// A world-model device joins the pool at runtime (device id).
+    Join(usize),
 }
 
 impl EventKind {
     /// Same-time ordering rank: dropouts before completions before round
     /// steps before arrivals (the seed's `RANK_*` order, pinned by the
-    /// golden event-order test).
+    /// golden event-order test).  World events slot around that order
+    /// without disturbing it: an `Outage` is a correlated `Drop` and
+    /// shares its rank; a `Join` ranks last so a same-instant arrival is
+    /// queued before the grown pool runs its admission pass.
     fn rank(&self) -> u8 {
         match self {
-            EventKind::Drop(_) => 0,
+            EventKind::Drop(_) | EventKind::Outage(_) => 0,
             EventKind::Done(_) => 1,
             EventKind::Step(_) => 2,
             EventKind::Arrive(_) => 3,
+            EventKind::Join(_) => 4,
         }
     }
 
-    /// The carried device id (`Drop`) or job id (the rest) — only for
-    /// tie-breaking and display; handlers match on the variant.
+    /// The carried device id (`Drop`/`Join`), outage index (`Outage`), or
+    /// job id (the rest) — only for tie-breaking and display; handlers
+    /// match on the variant.
     fn id(&self) -> usize {
         match *self {
-            EventKind::Drop(d) => d,
+            EventKind::Drop(d) | EventKind::Join(d) => d,
+            EventKind::Outage(i) => i,
             EventKind::Done(j) | EventKind::Step(j) | EventKind::Arrive(j) => j,
         }
     }
@@ -197,18 +210,22 @@ impl EventKind {
     fn name(&self) -> &'static str {
         match self {
             EventKind::Drop(_) => "drop",
+            EventKind::Outage(_) => "outage",
             EventKind::Done(_) => "done",
             EventKind::Step(_) => "step",
             EventKind::Arrive(_) => "arrive",
+            EventKind::Join(_) => "join",
         }
     }
 
     fn from_parts(name: &str, id: usize) -> Result<EventKind> {
         match name {
             "drop" => Ok(EventKind::Drop(id)),
+            "outage" => Ok(EventKind::Outage(id)),
             "done" => Ok(EventKind::Done(id)),
             "step" => Ok(EventKind::Step(id)),
             "arrive" => Ok(EventKind::Arrive(id)),
+            "join" => Ok(EventKind::Join(id)),
             _ => Err(Error::Schedule(format!("unknown event kind `{name}` in snapshot"))),
         }
     }
@@ -593,6 +610,15 @@ impl JobExec {
     /// error.  Deliberately fail-fast rather than re-queue: the policy
     /// granted these devices, and re-queuing an infeasible grant would
     /// retry the identical decision every event (livelock).
+    ///
+    /// `pool` is the run's stable pool (world-extended when a world is
+    /// configured); `planning_pool` — when a memory-pressure window is
+    /// active at `admit_s` — is the shrunk-memory view the *planner*
+    /// searches under, so placement treats the pressure as a constraint
+    /// while the simulator still times on the stable hardware.
+    /// `dropouts` is the merged scripted-failure list (scenario dropouts
+    /// plus world outage pairs), time-ascending.
+    #[allow(clippy::too_many_arguments)]
     fn admit(
         cfg: &FleetConfig,
         scenario: &Scenario,
@@ -600,6 +626,9 @@ impl JobExec {
         devices: &[usize],
         admit_s: f64,
         cache: &mut PlanCache,
+        pool: &ClusterConfig,
+        planning_pool: Option<&ClusterConfig>,
+        dropouts: &[(f64, usize)],
     ) -> Result<Option<JobExec>> {
         let meta = spec.model_meta();
         let lut = CostLut::analytic(&meta, LUT_GFLOPS);
@@ -608,7 +637,7 @@ impl JobExec {
             block_fwd_s,
             activation_bytes: meta.activation_bytes(),
         };
-        let planner = Planner::new(&meta, &cfg.pool, costs);
+        let planner = Planner::new(&meta, planning_pool.unwrap_or(pool), costs);
         let training = TrainingConfig {
             rounds: spec.rounds,
             local_iters: spec.local_iters,
@@ -624,19 +653,19 @@ impl JobExec {
         let mut alive: Vec<usize> = devices.to_vec();
         alive.sort_unstable();
 
-        let assignment = match plan_ring_cached(&planner, &alive, cache, cfg.pool.len()) {
+        let assignment = match plan_ring_cached(&planner, &alive, cache, pool.len()) {
             Ok(a) => a,
             Err(_) => return Ok(None),
         };
         let coordinator =
-            Coordinator::with_assignment_for_cluster(assignment, &meta, &cfg.pool, &training)?;
+            Coordinator::with_assignment_for_cluster(assignment, &meta, pool, &training)?;
         let builder =
             ScheduleBuilder::new(coordinator.assignment.clone(), sizes, alive.len().max(2));
-        let mut sim = Simulator::with_scenario(cfg.pool.clone(), lut, scenario)?;
+        let mut sim = Simulator::with_scenario(pool.clone(), lut, scenario)?;
         sim.now = admit_s; // release floor: nothing starts before admission
-        let pending: VecDeque<(f64, usize)> = scenario
-            .dropouts()
-            .into_iter()
+        let pending: VecDeque<(f64, usize)> = dropouts
+            .iter()
+            .copied()
             .filter(|&(at, d)| at > admit_s && alive.contains(&d))
             .collect();
         Ok(Some(JobExec {
@@ -654,7 +683,7 @@ impl JobExec {
             sim,
             alive,
             pending,
-            busy: vec![0.0f64; cfg.pool.len()],
+            busy: vec![0.0f64; pool.len()],
             replans: 0,
             dropped: Vec::new(),
             preemptions: 0,
@@ -669,11 +698,19 @@ impl JobExec {
     /// re-plan over the survivors when rounds remain.  The per-round body
     /// is the legacy `run_job` loop body verbatim — the differential
     /// tests rely on that.
+    ///
+    /// With a world, the round's busy seconds also feed the shared energy
+    /// ledger; any alive device crossing its budget at this boundary
+    /// fail-stops exactly like a scripted dropout (and is queued in
+    /// `world.newly_exhausted` for the fleet to mark dead pool-wide).
+    /// Re-plans search under the memory-pressured pool view when a
+    /// pressure window is active at the boundary time.
     fn step(
         &mut self,
-        cfg: &FleetConfig,
+        pool: &ClusterConfig,
         spec: &JobSpec,
         cache: &mut PlanCache,
+        mut world: Option<&mut WorldRt>,
     ) -> Result<StepOutcome> {
         let round = self.rounds_done;
         let rp = self.coordinator.round_plan(round)?;
@@ -694,6 +731,11 @@ impl JobExec {
         for (d, b) in report.device_busy.iter().enumerate() {
             self.busy[d] += b;
         }
+        if let Some(w) = world.as_deref_mut() {
+            for (d, b) in report.device_busy.iter().enumerate() {
+                w.active_s[d] += b;
+            }
+        }
         self.rounds_done += 1;
         // Fail-stops detected at this round boundary.  `<=` keeps a
         // dropout landing *exactly* on the final boundary inside the job:
@@ -707,6 +749,31 @@ impl JobExec {
             self.dropped.push(d);
             need_replan = true;
         }
+        // Energy exhaustion, swept after scripted drains so a device
+        // killed by both in one round is recorded dropped exactly once
+        // (its still-queued scripted pair, if any, is purged).  Checked
+        // *before* the Done return: exhaustion on the final boundary
+        // still fail-stops the device, mirroring the dropout `<=` rule.
+        if let Some(w) = world.as_deref_mut() {
+            let exhausted: Vec<usize> = self
+                .alive
+                .iter()
+                .copied()
+                .filter(|&d| {
+                    !w.energy_dead[d]
+                        && w.cw.energy_limit_s[d].is_some_and(|lim| w.active_s[d] >= lim)
+                })
+                .collect();
+            for d in exhausted {
+                w.energy_dead[d] = true;
+                w.newly_exhausted.push(d);
+                self.sim.drop_device(d);
+                self.alive.retain(|&x| x != d);
+                self.pending.retain(|&(_, x)| x != d);
+                self.dropped.push(d);
+                need_replan = true;
+            }
+        }
         if self.rounds_done == spec.rounds {
             return Ok(StepOutcome::Done);
         }
@@ -715,13 +782,15 @@ impl JobExec {
                 return Ok(StepOutcome::Failed);
             }
             self.replans += 1;
-            let planner = Planner::new(&self.meta, &cfg.pool, self.costs());
-            match plan_ring_cached(&planner, &self.alive, cache, cfg.pool.len()) {
+            let eff =
+                world.as_ref().and_then(|w| w.cw.effective_pool_if_pressured(self.sim.now));
+            let planner = Planner::new(&self.meta, eff.as_ref().unwrap_or(pool), self.costs());
+            match plan_ring_cached(&planner, &self.alive, cache, pool.len()) {
                 Ok(a) => {
                     self.coordinator = Coordinator::with_assignment_for_cluster(
                         a,
                         &self.meta,
-                        &cfg.pool,
+                        pool,
                         &self.training,
                     )?;
                     self.builder = ScheduleBuilder::new(
@@ -741,26 +810,28 @@ impl JobExec {
     /// re-planning; a width change counts as a resize.  `Ok(false)` means
     /// the grant cannot host the model — the caller fails the job and
     /// returns the grant (same fail-fast contract as [`JobExec::admit`]).
+    #[allow(clippy::too_many_arguments)]
     fn resume(
         &mut self,
-        cfg: &FleetConfig,
-        scenario: &Scenario,
         devices: &[usize],
         now: f64,
         cache: &mut PlanCache,
+        pool: &ClusterConfig,
+        planning_pool: Option<&ClusterConfig>,
+        dropouts: &[(f64, usize)],
     ) -> Result<bool> {
         debug_assert!(self.paused, "resume on a running job");
         let mut alive: Vec<usize> = devices.to_vec();
         alive.sort_unstable();
-        let planner = Planner::new(&self.meta, &cfg.pool, self.costs());
-        let assignment = match plan_ring_cached(&planner, &alive, cache, cfg.pool.len()) {
+        let planner = Planner::new(&self.meta, planning_pool.unwrap_or(pool), self.costs());
+        let assignment = match plan_ring_cached(&planner, &alive, cache, pool.len()) {
             Ok(a) => a,
             Err(_) => return Ok(false),
         };
         self.coordinator = Coordinator::with_assignment_for_cluster(
             assignment,
             &self.meta,
-            &cfg.pool,
+            pool,
             &self.training,
         )?;
         self.builder = ScheduleBuilder::new(
@@ -776,9 +847,9 @@ impl JobExec {
         // can never move backwards — resumes happen at or after the
         // pause boundary).
         self.sim.now = self.sim.now.max(now);
-        self.pending = scenario
-            .dropouts()
-            .into_iter()
+        self.pending = dropouts
+            .iter()
+            .copied()
             .filter(|&(at, d)| at > now && alive.contains(&d))
             .collect();
         self.alive = alive;
@@ -850,8 +921,9 @@ impl JobExec {
         scenario: &Scenario,
         spec: &JobSpec,
         v: &Json,
+        pool: &ClusterConfig,
     ) -> Result<JobExec> {
-        let n = cfg.pool.len();
+        let n = pool.len();
         let meta = spec.model_meta();
         let lut = CostLut::analytic(&meta, LUT_GFLOPS);
         let block_fwd_s = lut.block_fwd_s;
@@ -871,11 +943,11 @@ impl JobExec {
         let counts = v.req("counts")?.usize_vec()?;
         let assignment = LayerAssignment::from_counts_for_devices(order, &counts, n)?;
         let coordinator =
-            Coordinator::with_assignment_for_cluster(assignment, &meta, &cfg.pool, &training)?;
+            Coordinator::with_assignment_for_cluster(assignment, &meta, pool, &training)?;
         let alive = v.req("alive")?.usize_vec()?;
         let builder =
             ScheduleBuilder::new(coordinator.assignment.clone(), sizes, alive.len().max(2));
-        let mut sim = Simulator::with_scenario(cfg.pool.clone(), lut, scenario)?;
+        let mut sim = Simulator::with_scenario(pool.clone(), lut, scenario)?;
         sim.restore_clocks(&clock_from_json(v.req("clock")?)?)?;
         let busy = f64_bits_from_json(v.req("busy_bits")?)?;
         if busy.len() != n {
@@ -1027,6 +1099,82 @@ fn row_from_json(v: &Json) -> Result<FleetJobRow> {
     })
 }
 
+/// Runtime state of an active world model: the compiled static tables
+/// plus the ledgers the event loop mutates.  Absent (`None` in
+/// [`FleetRun::world`]) when no world is configured — every world branch
+/// in the scheduler is gated on it, which is what keeps world-less
+/// trajectories byte-identical to the pre-world scheduler.
+struct WorldRt {
+    cw: CompiledWorld,
+    /// Pool membership: base devices start `true`; world devices flip at
+    /// their `Join` event.  A never-joined device is invisible to the
+    /// free pool and exempt from the conservation audit.
+    joined: Vec<bool>,
+    /// Busy (active) seconds per device across all jobs — the energy
+    /// ledger that per-device budgets drain against.
+    active_s: Vec<f64>,
+    /// Devices fail-stopped by battery exhaustion.
+    energy_dead: Vec<bool>,
+    /// Exhaustions a job step just detected, drained by `handle_step`
+    /// into the fleet-wide dead set before the next event pops (always
+    /// empty between events, so snapshots never carry it).
+    newly_exhausted: Vec<usize>,
+}
+
+/// Resolve `cfg`'s world (inline or trace file) into the run's stable
+/// pool plus the world runtime, if any.  [`FleetRun::new`] and
+/// [`FleetRun::restore`] must build these identically — restore replays
+/// the same config, so the compiled tables are re-derived, not stored.
+fn build_world(cfg: &FleetConfig) -> Result<(ClusterConfig, Option<WorldRt>)> {
+    match cfg.resolve_world()? {
+        Some(w) => {
+            let cw = w.compile(&cfg.pool)?;
+            let n = cw.pool.len();
+            let mut joined = vec![true; cw.base_devices];
+            joined.resize(n, false);
+            let pool = cw.pool.clone();
+            Ok((
+                pool,
+                Some(WorldRt {
+                    joined,
+                    active_s: vec![0.0f64; n],
+                    energy_dead: vec![false; n],
+                    newly_exhausted: Vec::new(),
+                    cw,
+                }),
+            ))
+        }
+        None => Ok((cfg.pool.clone(), None)),
+    }
+}
+
+/// Summarize a run's world ledgers for the report: event counts, the
+/// energy totals, and per-domain `(members, lost)` availability —
+/// BTreeMap-ordered by domain name, so the rendering is deterministic.
+fn world_stats(w: &WorldRt, dead: &[bool]) -> WorldStats {
+    let mut domains: BTreeMap<String, (usize, usize)> = BTreeMap::new();
+    for (d, label) in w.cw.domains.iter().enumerate() {
+        if let Some(label) = label {
+            let ent = domains.entry(label.clone()).or_insert((0, 0));
+            ent.0 += 1;
+            if dead.get(d).copied().unwrap_or(false) {
+                ent.1 += 1;
+            }
+        }
+    }
+    let energy_spent_j = (0..w.active_s.len())
+        .map(|d| w.cw.energy_spent_j(d, w.active_s[d]))
+        .sum();
+    WorldStats {
+        base_devices: w.cw.base_devices,
+        joins: w.cw.joins.len(),
+        outages: w.cw.outages.len(),
+        energy_exhausted: w.energy_dead.iter().filter(|&&b| b).count(),
+        energy_spent_j,
+        domains: domains.into_iter().map(|(k, (m, l))| (k, m, l)).collect(),
+    }
+}
+
 /// All mutable state of one [`serve`] run, so the event handlers and the
 /// admission pass can live in named methods instead of one giant loop.
 ///
@@ -1041,6 +1189,16 @@ struct FleetRun<'a> {
     cfg: &'a FleetConfig,
     policy: &'a dyn AllocationPolicy,
     scenario: Scenario,
+    /// The run's stable pool: `cfg.pool` extended with every world join
+    /// (identical to `cfg.pool` when no world is configured).  Every
+    /// per-device ledger below is sized by this pool.
+    pool: ClusterConfig,
+    /// World-model runtime (`None` = no world configured).
+    world: Option<WorldRt>,
+    /// Merged scripted-failure pairs — scenario dropouts plus world
+    /// outage members — time-ascending; sliced into each job's pending
+    /// queue at admission/resume.
+    dropouts: Vec<(f64, usize)>,
     /// Arrival stream; exactly one un-popped arrival is held in `heap`.
     source: Box<dyn JobSource>,
     /// Specs of every job pulled so far (ids are dense: `specs[id].id ==
@@ -1090,21 +1248,39 @@ impl<'a> FleetRun<'a> {
         retain_rows: bool,
         bucket_width_s: f64,
     ) -> Result<Self> {
-        let n = cfg.pool.len();
+        let (pool, world) = build_world(cfg)?;
+        let n = pool.len();
         let scenario = cfg.scenario.clone().unwrap_or_else(Scenario::healthy);
         let mut heap: BinaryHeap<Event> = BinaryHeap::new();
-        for (at, d) in scenario.dropouts() {
+        let mut dropouts = scenario.dropouts();
+        for (at, d) in dropouts.iter().copied() {
             heap.push(Event { t: at, kind: EventKind::Drop(d) });
         }
+        if let Some(w) = &world {
+            for (i, o) in w.cw.outages.iter().enumerate() {
+                heap.push(Event { t: o.at, kind: EventKind::Outage(i) });
+            }
+            for &(at, d) in &w.cw.joins {
+                heap.push(Event { t: at, kind: EventKind::Join(d) });
+            }
+            dropouts.extend(w.cw.dropout_pairs.iter().copied());
+            dropouts.sort_by(|a, b| a.0.total_cmp(&b.0).then_with(|| a.1.cmp(&b.1)));
+        }
         let agg = FleetAggregates::new(policy.name(), &scenario.name, n, bucket_width_s);
+        // Only base devices start free; world devices enter the pool at
+        // their `Join` event.
+        let free = FreePool::with_all(cfg.pool.len());
         let mut run = FleetRun {
             cfg,
             policy,
             scenario,
+            pool,
+            world,
+            dropouts,
             source,
             specs: Vec::new(),
             heap,
-            free: FreePool::with_all(n),
+            free,
             plan_cache: PlanCache::default(),
             dead: vec![false; n],
             detected: vec![false; n],
@@ -1300,17 +1476,31 @@ impl<'a> FleetRun<'a> {
             return Ok(true);
         }
         let spec = &self.specs[id];
-        let outcome = exec.step(self.cfg, spec, &mut self.plan_cache)?;
+        let outcome = exec.step(&self.pool, spec, &mut self.plan_cache, self.world.as_mut())?;
         let next = Event { t: exec.sim.now, kind: EventKind::Step(id) };
         for &d in &exec.dropped {
             self.detected[d] = true;
+        }
+        // Energy exhaustions the step detected kill the device *fleet
+        // wide* — unlike scripted dropouts there is no separate pool
+        // event, so the dead marking happens here and the pass below
+        // reacts to the shrunk pool.
+        let mut pool_changed = false;
+        if let Some(w) = self.world.as_mut() {
+            for d in std::mem::take(&mut w.newly_exhausted) {
+                if !self.dead[d] {
+                    self.dead[d] = true;
+                    self.free.remove(d);
+                    pool_changed = true;
+                }
+            }
         }
         match outcome {
             StepOutcome::Continue => self.heap.push(next),
             StepOutcome::Done => self.finish_job(id, false)?,
             StepOutcome::Failed => self.finish_job(id, true)?,
         }
-        Ok(false)
+        Ok(pool_changed)
     }
 
     /// One admission pass: reject (admission control), mark preemptions,
@@ -1338,11 +1528,15 @@ impl<'a> FleetRun<'a> {
         if self.free.is_empty() {
             return Ok(());
         }
+        // Under an active memory-pressure window the policy sizes rings
+        // and the planner searches against the shrunk-memory view; the
+        // simulators still time on the stable pool.
+        let eff = self.effective_pool(now);
         let queue: Vec<&JobSpec> = self.waiting.iter().map(|&j| &self.specs[j]).collect();
         let allocs = self.policy.allocate(
             &queue,
             &PoolView {
-                cluster: &self.cfg.pool,
+                cluster: eff.as_ref().unwrap_or(&self.pool),
                 free: self.free.as_slice(),
                 dead: &self.dead,
                 now,
@@ -1384,7 +1578,14 @@ impl<'a> FleetRun<'a> {
                             a.job
                         )));
                     };
-                    exec.resume(self.cfg, &self.scenario, &a.devices, now, &mut self.plan_cache)?
+                    exec.resume(
+                        &a.devices,
+                        now,
+                        &mut self.plan_cache,
+                        &self.pool,
+                        eff.as_ref(),
+                        &self.dropouts,
+                    )?
                 };
                 if resumed {
                     self.heap.push(Event { t: now, kind: EventKind::Step(a.job) });
@@ -1409,6 +1610,9 @@ impl<'a> FleetRun<'a> {
                     &a.devices,
                     now,
                     &mut self.plan_cache,
+                    &self.pool,
+                    eff.as_ref(),
+                    &self.dropouts,
                 )? {
                     Some(exec) => {
                         self.execs[a.job] = Some(Box::new(exec));
@@ -1435,10 +1639,11 @@ impl<'a> FleetRun<'a> {
         if fresh.is_empty() {
             return Ok(());
         }
+        let eff = self.effective_pool(now);
         let rejected = self.policy.reject(
             &fresh,
             &PoolView {
-                cluster: &self.cfg.pool,
+                cluster: eff.as_ref().unwrap_or(&self.pool),
                 free: self.free.as_slice(),
                 dead: &self.dead,
                 now,
@@ -1489,8 +1694,82 @@ impl<'a> FleetRun<'a> {
     /// Preemption: show the policy the running set and mark its picks to
     /// pause at their next round boundary.
     fn preemption_pass(&mut self, now: f64) -> Result<()> {
-        let running: Vec<RunningJob> = self
-            .execs
+        let running = self.running_jobs();
+        if running.is_empty() {
+            return Ok(());
+        }
+        let queue: Vec<&JobSpec> = self.waiting.iter().map(|&j| &self.specs[j]).collect();
+        let eff = self.effective_pool(now);
+        let picks = self.policy.preempt(
+            &queue,
+            &running,
+            &PoolView {
+                cluster: eff.as_ref().unwrap_or(&self.pool),
+                free: self.free.as_slice(),
+                dead: &self.dead,
+                now,
+            },
+        );
+        self.mark_preempt_picks(picks, "preempted")
+    }
+
+    /// The policy's post-join hook: a world `Join` just grew the pool, so
+    /// offer the running set for voluntary pause-and-resize through the
+    /// same machinery preemption uses.  Gated on `cfg.preemption` (a
+    /// pause without resume support would strand the job), which the
+    /// trait documents.
+    fn rebalance_pass(&mut self, now: f64) -> Result<()> {
+        let running = self.running_jobs();
+        if running.is_empty() {
+            return Ok(());
+        }
+        let queue: Vec<&JobSpec> = self.waiting.iter().map(|&j| &self.specs[j]).collect();
+        let eff = self.effective_pool(now);
+        let picks = self.policy.rebalance(
+            &queue,
+            &running,
+            &PoolView {
+                cluster: eff.as_ref().unwrap_or(&self.pool),
+                free: self.free.as_slice(),
+                dead: &self.dead,
+                now,
+            },
+        );
+        self.mark_preempt_picks(picks, "rebalanced")
+    }
+
+    /// Validate a preempt/rebalance pick list and mark each job to pause
+    /// at its next round boundary.
+    fn mark_preempt_picks(&mut self, picks: Vec<usize>, verb: &str) -> Result<()> {
+        for id in picks {
+            let valid = self.execs.get(id).map_or(false, |e| {
+                e.as_ref().map_or(false, |e| !e.paused && !e.preempt_pending)
+            });
+            if !valid {
+                return Err(Error::Schedule(format!(
+                    "policy {} {verb} job {id} which is not running (or already marked)",
+                    self.policy.name()
+                )));
+            }
+            if let Some(exec) = self.execs.get_mut(id).and_then(|e| e.as_mut()) {
+                exec.preempt_pending = true;
+            }
+        }
+        Ok(())
+    }
+
+    /// The memory-pressured pool view at `now`, or `None` when no world
+    /// (or no pressure) is scripted — callers fall back to the stable
+    /// pool without cloning.
+    fn effective_pool(&self, now: f64) -> Option<ClusterConfig> {
+        self.world
+            .as_ref()
+            .and_then(|w| w.cw.effective_pool_if_pressured(now))
+    }
+
+    /// The non-paused running set as the policy-facing view.
+    fn running_jobs(&self) -> Vec<RunningJob> {
+        self.execs
             .iter()
             .flatten()
             .filter(|e| !e.paused)
@@ -1503,36 +1782,7 @@ impl<'a> FleetRun<'a> {
                 rounds_total: self.specs[e.job].rounds,
                 preempt_pending: e.preempt_pending,
             })
-            .collect();
-        if running.is_empty() {
-            return Ok(());
-        }
-        let queue: Vec<&JobSpec> = self.waiting.iter().map(|&j| &self.specs[j]).collect();
-        let picks = self.policy.preempt(
-            &queue,
-            &running,
-            &PoolView {
-                cluster: &self.cfg.pool,
-                free: self.free.as_slice(),
-                dead: &self.dead,
-                now,
-            },
-        );
-        for id in picks {
-            let valid = self.execs.get(id).map_or(false, |e| {
-                e.as_ref().map_or(false, |e| !e.paused && !e.preempt_pending)
-            });
-            if !valid {
-                return Err(Error::Schedule(format!(
-                    "policy {} preempted job {id} which is not running (or already marked)",
-                    self.policy.name()
-                )));
-            }
-            if let Some(exec) = self.execs.get_mut(id).and_then(|e| e.as_mut()) {
-                exec.preempt_pending = true;
-            }
-        }
-        Ok(())
+            .collect()
     }
 
     /// Device conservation audit (debug builds only): every non-dead,
@@ -1541,7 +1791,7 @@ impl<'a> FleetRun<'a> {
     /// claimed twice; nothing dead sits in the free list.
     #[cfg(debug_assertions)]
     fn check_conservation(&self) {
-        let n = self.cfg.pool.len();
+        let n = self.pool.len();
         let mut claims = vec![0usize; n];
         for &d in self.free.as_slice() {
             claims[d] += 1;
@@ -1562,8 +1812,10 @@ impl<'a> FleetRun<'a> {
         for (d, &c) in claims.iter().enumerate() {
             assert!(c <= 1, "device {d} claimed {c} times");
             if c == 0 {
+                let not_yet_joined =
+                    self.world.as_ref().map_or(false, |w| !w.joined[d]);
                 assert!(
-                    self.dead[d] || self.detected[d],
+                    self.dead[d] || self.detected[d] || not_yet_joined,
                     "alive device {d} leaked (not free, not held, not staged)"
                 );
             }
@@ -1584,6 +1836,30 @@ impl<'a> FleetRun<'a> {
                 self.free.remove(d);
                 true
             }
+            EventKind::Outage(i) => {
+                // Atomic correlated failure: the whole member set dies
+                // before any same-instant admission runs (members that
+                // have not joined yet are skipped — they were not in the
+                // domain when it went down).
+                let Some(w) = self.world.as_ref() else {
+                    return Err(Error::Schedule(format!(
+                        "outage event {i} without a configured world"
+                    )));
+                };
+                let Some(outage) = w.cw.outages.get(i) else {
+                    return Err(Error::Schedule(format!(
+                        "outage event {i} outside the world's {} outages",
+                        w.cw.outages.len()
+                    )));
+                };
+                for &d in &outage.members {
+                    if w.joined[d] && !self.dead[d] {
+                        self.dead[d] = true;
+                        self.free.remove(d);
+                    }
+                }
+                true
+            }
             EventKind::Done(id) => {
                 self.handle_done(id, now);
                 true
@@ -1593,6 +1869,26 @@ impl<'a> FleetRun<'a> {
                 self.waiting.push(id);
                 self.waiting.sort_unstable();
                 self.pull_next_arrival()?;
+                true
+            }
+            EventKind::Join(d) => {
+                let Some(w) = self.world.as_mut() else {
+                    return Err(Error::Schedule(format!(
+                        "join event for device {d} without a configured world"
+                    )));
+                };
+                if w.joined.get(d).copied() != Some(false) {
+                    return Err(Error::Schedule(format!(
+                        "join event for device {d} which is out of range or already joined"
+                    )));
+                }
+                w.joined[d] = true;
+                if !self.dead[d] {
+                    self.free.insert(d);
+                }
+                if self.cfg.preemption {
+                    self.rebalance_pass(now)?;
+                }
                 true
             }
         };
@@ -1620,9 +1916,10 @@ impl<'a> FleetRun<'a> {
             ));
         }
         let FleetRun {
-            cfg,
             policy,
             scenario,
+            pool,
+            world,
             specs,
             execs,
             rows,
@@ -1699,14 +1996,16 @@ impl<'a> FleetRun<'a> {
                 },
             });
         }
+        let world_stats = world.as_ref().map(|w| world_stats(w, &dead));
         Ok(FleetReport {
             policy: policy.name().to_string(),
             scenario: scenario.name.clone(),
-            pool_devices: cfg.pool.len(),
+            pool_devices: pool.len(),
             rows: out_rows,
             horizon_s: last_done,
             pool_device_busy: pool_busy,
             dead_devices: dead.iter().filter(|&&d| d).count(),
+            world: world_stats,
         })
     }
 
@@ -1811,7 +2110,7 @@ impl<'a> FleetRun<'a> {
                 ]));
             }
         }
-        Ok(Json::obj(vec![
+        let mut pairs = vec![
             ("version", Json::u64(FLEET_SNAPSHOT_VERSION)),
             ("policy", Json::str(self.policy.name())),
             ("seed", Json::u64(self.cfg.seed)),
@@ -1839,7 +2138,23 @@ impl<'a> FleetRun<'a> {
             ("agg", self.agg.to_json()),
             ("resident_rows", Json::u64(self.resident_rows as u64)),
             ("peak_resident_rows", Json::u64(self.peak_resident_rows as u64)),
-        ]))
+        ];
+        if let Some(w) = &self.world {
+            // Compiled tables are re-derived from the config at restore;
+            // only the runtime ledgers cross the snapshot.
+            // `newly_exhausted` is always drained before an event
+            // completes, so it never appears here.
+            debug_assert!(w.newly_exhausted.is_empty());
+            pairs.push((
+                "world",
+                Json::obj(vec![
+                    ("joined", bools_to_json(&w.joined)),
+                    ("active_bits", f64_bits_to_json(&w.active_s)),
+                    ("energy_dead", bools_to_json(&w.energy_dead)),
+                ]),
+            ));
+        }
+        Ok(Json::obj(pairs))
     }
 
     /// Rebuild a run from a [`FleetRun::snapshot`] under the *same*
@@ -1872,7 +2187,47 @@ impl<'a> FleetRun<'a> {
             )));
         }
         let streaming = v.req("streaming")?.as_bool()?;
-        let n = cfg.pool.len();
+        let (pool, mut world) = build_world(cfg)?;
+        let n = pool.len();
+        match (&mut world, v.get("world")) {
+            (Some(w), Some(wv)) => {
+                w.joined = bools_from_json(wv.req("joined")?)?;
+                w.active_s = f64_bits_from_json(wv.req("active_bits")?)?;
+                w.energy_dead = bools_from_json(wv.req("energy_dead")?)?;
+                if w.joined.len() != n || w.active_s.len() != n || w.energy_dead.len() != n {
+                    return Err(Error::Schedule(
+                        "snapshot world ledgers do not cover the pool".into(),
+                    ));
+                }
+                for (d, &joined) in w.joined.iter().enumerate() {
+                    if d < w.cw.base_devices && !joined {
+                        return Err(Error::Schedule(format!(
+                            "snapshot un-joins base device {d}"
+                        )));
+                    }
+                }
+            }
+            (None, None) => {}
+            (Some(_), None) => {
+                return Err(Error::Schedule(
+                    "config has a world but the snapshot carries no world state".into(),
+                ));
+            }
+            (None, Some(_)) => {
+                return Err(Error::Schedule(
+                    "snapshot carries world state but the config has no world".into(),
+                ));
+            }
+        }
+        let mut dropouts = cfg
+            .scenario
+            .as_ref()
+            .map(|s| s.dropouts())
+            .unwrap_or_default();
+        if let Some(w) = &world {
+            dropouts.extend(w.cw.dropout_pairs.iter().copied());
+            dropouts.sort_by(|a, b| a.0.total_cmp(&b.0).then_with(|| a.1.cmp(&b.1)));
+        }
         let scenario = cfg.scenario.clone().unwrap_or_else(Scenario::healthy);
         let source = source_from_snapshot(cfg, v.req("source")?)?;
         let specs: Vec<JobSpec> = v
@@ -1902,11 +2257,21 @@ impl<'a> FleetRun<'a> {
             let t = f64::from_bits(e.req("t_bits")?.as_u64()?);
             let kind = EventKind::from_parts(e.req("kind")?.as_str()?, e.req("id")?.as_usize()?)?;
             let bound = match kind {
-                EventKind::Drop(d) => (d, n, "device"),
+                EventKind::Drop(d) | EventKind::Join(d) => (d, n, "device"),
+                EventKind::Outage(i) => (
+                    i,
+                    world.as_ref().map_or(0, |w| w.cw.outages.len()),
+                    "outage",
+                ),
                 EventKind::Done(j) | EventKind::Step(j) | EventKind::Arrive(j) => {
                     (j, jobs, "job")
                 }
             };
+            if matches!(kind, EventKind::Join(_)) && world.is_none() {
+                return Err(Error::Schedule(
+                    "snapshot join event but the config has no world".into(),
+                ));
+            }
             if bound.0 >= bound.1 || !t.is_finite() {
                 return Err(Error::Schedule(format!(
                     "snapshot event {} {} {} out of range (t {t})",
@@ -1936,7 +2301,7 @@ impl<'a> FleetRun<'a> {
             if id >= jobs || execs[id].is_some() {
                 return Err(Error::Schedule(format!("snapshot exec for invalid job {id}")));
             }
-            execs[id] = Some(Box::new(JobExec::restore(cfg, &scenario, &specs[id], ej)?));
+            execs[id] = Some(Box::new(JobExec::restore(cfg, &scenario, &specs[id], ej, &pool)?));
         }
         let mut release_at_done: Vec<Vec<usize>> = vec![Vec::new(); jobs];
         for r in v.req("release")?.as_arr()? {
@@ -1977,6 +2342,9 @@ impl<'a> FleetRun<'a> {
             cfg,
             policy,
             scenario,
+            pool,
+            world,
+            dropouts,
             source,
             specs,
             heap,
@@ -2348,6 +2716,11 @@ pub fn serve_reference(cfg: &FleetConfig, policy: &dyn AllocationPolicy) -> Resu
             "serve_reference cannot express preemption or admission control".into(),
         ));
     }
+    if cfg.world.is_some() || cfg.world_trace_path.is_some() {
+        return Err(Error::Schedule(
+            "serve_reference cannot express a world model".into(),
+        ));
+    }
     let n = cfg.pool.len();
     let scenario = cfg.scenario.clone().unwrap_or_else(Scenario::healthy);
     let specs = JobTrace::synthetic(cfg);
@@ -2393,6 +2766,13 @@ pub fn serve_reference(cfg: &FleetConfig, policy: &dyn AllocationPolicy) -> Resu
             // The legacy path never schedules round steps; arrivals (and
             // nothing else) enter the waiting queue.
             EventKind::Step(j) | EventKind::Arrive(j) => waiting.push(j),
+            // Unreachable: the world guard above rejected any config
+            // that could seed these.
+            EventKind::Outage(_) | EventKind::Join(_) => {
+                return Err(Error::Schedule(
+                    "serve_reference cannot express a world model".into(),
+                ));
+            }
         }
         if waiting.is_empty() || free.is_empty() {
             continue;
@@ -2496,6 +2876,7 @@ pub fn serve_reference(cfg: &FleetConfig, policy: &dyn AllocationPolicy) -> Resu
         horizon_s: last_done,
         pool_device_busy: pool_busy,
         dead_devices: dead.iter().filter(|&&d| d).count(),
+        world: None,
     })
 }
 
@@ -2538,15 +2919,41 @@ mod tests {
         // as the same variant, never re-typed as a job event.
         let kinds = [
             EventKind::Drop(7),
+            EventKind::Outage(7),
             EventKind::Done(7),
             EventKind::Step(7),
             EventKind::Arrive(7),
+            EventKind::Join(7),
         ];
         for k in kinds {
             assert_eq!(EventKind::from_parts(k.name(), k.id()).unwrap(), k);
         }
         assert!(EventKind::from_parts("dropp", 0).is_err());
         assert!(EventKind::from_parts("", 0).is_err());
+    }
+
+    #[test]
+    fn world_events_slot_around_the_pinned_ranks() {
+        // An `Outage` is a correlated `Drop` (shared rank 0, so the
+        // member set dies before same-instant completions free devices);
+        // a `Join` pops after everything else at its instant, so a
+        // same-time arrival is queued before the grown pool admits.
+        let mut h: BinaryHeap<Event> = BinaryHeap::new();
+        h.push(Event { t: 1.0, kind: EventKind::Join(4) });
+        h.push(Event { t: 1.0, kind: EventKind::Arrive(0) });
+        h.push(Event { t: 1.0, kind: EventKind::Outage(0) });
+        h.push(Event { t: 1.0, kind: EventKind::Done(2) });
+        let order: Vec<EventKind> = std::iter::from_fn(|| h.pop()).map(|e| e.kind).collect();
+        assert_eq!(
+            order,
+            vec![
+                EventKind::Outage(0),
+                EventKind::Done(2),
+                EventKind::Arrive(0),
+                EventKind::Join(4)
+            ]
+        );
+        assert_eq!(EventKind::Outage(0).rank(), EventKind::Drop(0).rank());
     }
 
     #[test]

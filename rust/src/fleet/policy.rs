@@ -111,6 +111,24 @@ pub trait AllocationPolicy {
         let _ = (queue, running, pool);
         Vec::new()
     }
+
+    /// Called once right after the pool *grows* (a world `join` event —
+    /// see [`crate::world::WorldEvent::Join`]): running jobs to pause at
+    /// their next round boundary so re-admission can re-plan them over
+    /// the enlarged pool (a wider or faster ring).  Pausing rides the
+    /// preemption machinery, so the hook only fires when
+    /// `FleetConfig::preemption` is enabled; the default leaves everyone
+    /// running — joined devices then serve the waiting queue only.
+    /// Returned ids must name running jobs; the scheduler validates.
+    fn rebalance(
+        &self,
+        queue: &[&JobSpec],
+        running: &[RunningJob],
+        pool: &PoolView<'_>,
+    ) -> Vec<usize> {
+        let _ = (queue, running, pool);
+        Vec::new()
+    }
 }
 
 /// Strict FIFO with whole-ring grants and head-of-line blocking.
@@ -510,7 +528,7 @@ mod tests {
 
     #[test]
     fn fifo_blocks_behind_the_head() {
-        let cl = ClusterConfig::synthetic(4, 1, 0.3);
+        let cl = ClusterConfig::synthetic(4, 1, 0.3).unwrap();
         let j0 = job(0, 6, 16); // does not fit a 4-device pool
         let j1 = job(1, 2, 16); // would fit, but FIFO must not skip ahead
         let free = [0, 1, 2, 3];
@@ -528,7 +546,7 @@ mod tests {
 
     #[test]
     fn smallest_first_packs_around_a_big_head() {
-        let cl = ClusterConfig::synthetic(4, 1, 0.3);
+        let cl = ClusterConfig::synthetic(4, 1, 0.3).unwrap();
         let j0 = job(0, 6, 16);
         let j1 = job(1, 3, 16);
         let j2 = job(2, 2, 16);
@@ -545,7 +563,7 @@ mod tests {
 
     #[test]
     fn edf_admits_in_deadline_order_on_the_fastest_devices() {
-        let cl = ClusterConfig::synthetic(8, 7, 0.6);
+        let cl = ClusterConfig::synthetic(8, 7, 0.6).unwrap();
         // Same shape, different arrival ⇒ job 1's absolute deadline is
         // later than job 0's; a relaxed class pushes job 2's later still.
         let j0 = job(0, 2, 16);
@@ -574,7 +592,7 @@ mod tests {
 
     #[test]
     fn edf_rejects_only_infeasible_jobs() {
-        let cl = ClusterConfig::synthetic(8, 7, 0.6);
+        let cl = ClusterConfig::synthetic(8, 7, 0.6).unwrap();
         let free: Vec<usize> = (0..8).collect();
         let no_dead = [false; 8];
         // Generous deadline at t=0: kept.
@@ -594,7 +612,7 @@ mod tests {
 
     #[test]
     fn edf_preempts_strictly_lower_priority_victims_only() {
-        let cl = ClusterConfig::synthetic(8, 7, 0.6);
+        let cl = ClusterConfig::synthetic(8, 7, 0.6).unwrap();
         let mut urgent = job(9, 4, 16);
         urgent.priority = Priority::High;
         let running = |job, priority, devices, pending| RunningJob {
@@ -648,7 +666,7 @@ mod tests {
 
     #[test]
     fn util_aware_sizes_rings_and_skips_unfittable_jobs() {
-        let cl = ClusterConfig::synthetic(8, 7, 0.6);
+        let cl = ClusterConfig::synthetic(8, 7, 0.6).unwrap();
         let j0 = job(0, 8, 8); // request 8, model only supports small rings
         let j1 = job(1, 2, 16);
         let free: Vec<usize> = (0..8).collect();

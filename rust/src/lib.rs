@@ -139,6 +139,7 @@ pub mod runtime;
 pub mod sim;
 pub mod train;
 pub mod util;
+pub mod world;
 
 pub use error::{Error, Result};
 
@@ -164,4 +165,5 @@ pub mod prelude {
     pub use crate::runtime::{Engine, HostTensor, ModelWeights, StageRunner};
     pub use crate::sim::{CostLut, Scenario, ScenarioEvent, ScenarioRun, SimReport, Simulator};
     pub use crate::train::{run_scheme, simulate_scenario, TrainOptions, TrainReport};
+    pub use crate::world::{World, WorldEvent};
 }

@@ -391,6 +391,30 @@ pub struct FleetReport {
     pub pool_device_busy: Vec<f64>,
     /// Devices fail-stopped by the scenario over the run.
     pub dead_devices: usize,
+    /// World-model outcomes (`None` when the run had no world configured
+    /// — a `None` leaves [`FleetReport::canonical_string`] byte-identical
+    /// to pre-world builds).
+    pub world: Option<WorldStats>,
+}
+
+/// World-model outcomes of one fleet run: the event counts, energy
+/// totals, and per-domain availability the delta table and canonical
+/// fingerprint report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorldStats {
+    /// Devices in the pool before any `join` event.
+    pub base_devices: usize,
+    /// `join` events scripted (all fire by the time the heap drains).
+    pub joins: usize,
+    /// Correlated domain outages scripted.
+    pub outages: usize,
+    /// Devices fail-stopped by battery exhaustion.
+    pub energy_exhausted: usize,
+    /// Total joules drained across all budgeted devices.
+    pub energy_spent_j: f64,
+    /// `(domain, member devices, members dead at end)` — sorted by
+    /// domain name.
+    pub domains: Vec<(String, usize, usize)>,
 }
 
 impl FleetReport {
@@ -638,6 +662,19 @@ impl FleetReport {
             let _ = write!(s, "{}{b}", if i > 0 { "," } else { "" });
         }
         s.push(']');
+        // The world section exists only when a world was configured:
+        // world-less reports stay byte-identical to pre-world builds.
+        if let Some(w) = &self.world {
+            let _ = write!(
+                s,
+                ";world={{base={},joins={},outages={},exhausted={},energy={},domains=[",
+                w.base_devices, w.joins, w.outages, w.energy_exhausted, w.energy_spent_j,
+            );
+            for (i, (name, members, lost)) in w.domains.iter().enumerate() {
+                let _ = write!(s, "{}{name}:{lost}/{members}", if i > 0 { "," } else { "" });
+            }
+            let _ = write!(s, "]}}");
+        }
         s
     }
 }
@@ -1084,6 +1121,10 @@ pub struct FleetDeltaRow {
     pub preemptions: usize,
     pub resizes: usize,
     pub rejected: usize,
+    /// World-model columns (all zero when the run had no world).
+    pub joins: usize,
+    pub outages: usize,
+    pub energy_exhausted: usize,
     /// Per-priority-class slice of the run (`[high, normal, low]`), for
     /// [`FleetDeltaTable::render_by_class`].
     pub class_stats: Vec<ClassStat>,
@@ -1118,6 +1159,9 @@ impl FleetDeltaRow {
             preemptions: run.preemptions(),
             resizes: run.resizes(),
             rejected: run.rejected_jobs(),
+            joins: run.world.as_ref().map_or(0, |w| w.joins),
+            outages: run.world.as_ref().map_or(0, |w| w.outages),
+            energy_exhausted: run.world.as_ref().map_or(0, |w| w.energy_exhausted),
             class_stats: run.class_stats(),
         }
     }
@@ -1158,6 +1202,9 @@ impl FleetDeltaTable {
             "Pre",
             "Rsz",
             "Rej",
+            "Joins",
+            "Outs",
+            "Exh",
         ]);
         for r in &self.rows {
             t.row(vec![
@@ -1178,6 +1225,9 @@ impl FleetDeltaTable {
                 r.preemptions.to_string(),
                 r.resizes.to_string(),
                 r.rejected.to_string(),
+                r.joins.to_string(),
+                r.outages.to_string(),
+                r.energy_exhausted.to_string(),
             ]);
         }
         t.render()
@@ -1391,7 +1441,30 @@ mod tests {
             horizon_s: 100.0,
             pool_device_busy: vec![10.0, 10.0, 0.0, 0.0],
             dead_devices: 0,
+            world: None,
         }
+    }
+
+    #[test]
+    fn world_section_appends_to_the_canonical_string_only_when_present() {
+        let plain = fleet_report(vec![fleet_row(0, 0.0, 0.0, 10.0, 5.0)]);
+        let base = plain.canonical_string();
+        assert!(!base.contains(";world="), "world-less reports carry no world section");
+        let mut with = plain.clone();
+        with.world = Some(WorldStats {
+            base_devices: 4,
+            joins: 2,
+            outages: 1,
+            energy_exhausted: 1,
+            energy_spent_j: 42.5,
+            domains: vec![("rack-a".into(), 2, 2), ("rack-b".into(), 1, 0)],
+        });
+        let s = with.canonical_string();
+        assert!(s.starts_with(&base), "world section strictly appends");
+        assert_eq!(
+            &s[base.len()..],
+            ";world={base=4,joins=2,outages=1,exhausted=1,energy=42.5,domains=[rack-a:2/2,rack-b:0/1]}"
+        );
     }
 
     #[test]

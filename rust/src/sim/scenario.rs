@@ -213,12 +213,23 @@ impl Scenario {
     // -------------------------------------------------------------- JSON
 
     pub fn from_json(v: &Json) -> Result<Self> {
-        let name = v.req("name")?.as_str()?.to_string();
+        let name = v
+            .req("name")
+            .and_then(Json::as_str)
+            .map_err(|e| Error::Scenario(e.to_string()))?
+            .to_string();
         let events = v
-            .req("events")?
-            .as_arr()?
+            .req("events")
+            .and_then(Json::as_arr)
+            .map_err(|e| Error::Scenario(e.to_string()))?
             .iter()
-            .map(event_from_json)
+            .enumerate()
+            .map(|(i, e)| {
+                event_from_json(e).map_err(|err| match err {
+                    Error::Scenario(msg) => Error::Scenario(format!("event {i}: {msg}")),
+                    other => other,
+                })
+            })
             .collect::<Result<Vec<_>>>()?;
         Ok(Scenario { name, events })
     }
@@ -277,26 +288,44 @@ fn check_window(t_start: f64, t_end: f64, factor: f64, kind: &str) -> Result<()>
 }
 
 fn event_from_json(v: &Json) -> Result<ScenarioEvent> {
-    match v.req("kind")?.as_str()? {
+    let kind = v
+        .req("kind")
+        .and_then(Json::as_str)
+        .map_err(|e| Error::Scenario(e.to_string()))?;
+    match kind {
         "straggler" => Ok(ScenarioEvent::Straggler {
-            device: v.req("device")?.as_usize()?,
-            t_start: v.req("t_start")?.as_f64()?,
-            t_end: v.req("t_end")?.as_f64()?,
-            factor: v.req("factor")?.as_f64()?,
+            device: usize_field(v, kind, "device")?,
+            t_start: f64_field(v, kind, "t_start")?,
+            t_end: f64_field(v, kind, "t_end")?,
+            factor: f64_field(v, kind, "factor")?,
         }),
         "link_degrade" => Ok(ScenarioEvent::LinkDegrade {
-            from: v.req("from")?.as_usize()?,
-            to: v.req("to")?.as_usize()?,
-            t_start: v.req("t_start")?.as_f64()?,
-            t_end: v.req("t_end")?.as_f64()?,
-            factor: v.req("factor")?.as_f64()?,
+            from: usize_field(v, kind, "from")?,
+            to: usize_field(v, kind, "to")?,
+            t_start: f64_field(v, kind, "t_start")?,
+            t_end: f64_field(v, kind, "t_end")?,
+            factor: f64_field(v, kind, "factor")?,
         }),
         "dropout" => Ok(ScenarioEvent::Dropout {
-            device: v.req("device")?.as_usize()?,
-            at: v.req("at")?.as_f64()?,
+            device: usize_field(v, kind, "device")?,
+            at: f64_field(v, kind, "at")?,
         }),
-        other => Err(Error::Scenario(format!("unknown event kind `{other}`"))),
+        other => Err(Error::Scenario(format!(
+            "unknown event kind `{other}` (expected one of: straggler, link_degrade, dropout)"
+        ))),
     }
+}
+
+fn f64_field(v: &Json, kind: &str, key: &str) -> Result<f64> {
+    v.req(key)
+        .and_then(Json::as_f64)
+        .map_err(|e| Error::Scenario(format!("{kind} event field `{key}`: {e}")))
+}
+
+fn usize_field(v: &Json, kind: &str, key: &str) -> Result<usize> {
+    v.req(key)
+        .and_then(Json::as_usize)
+        .map_err(|e| Error::Scenario(format!("{kind} event field `{key}`: {e}")))
 }
 
 fn event_to_json(e: &ScenarioEvent) -> Json {
@@ -558,6 +587,29 @@ mod tests {
         let text = sc.to_json().pretty();
         let back = Scenario::parse(&text).unwrap();
         assert_eq!(sc, back);
+    }
+
+    #[test]
+    fn parse_errors_name_the_event_index_kind_and_field() {
+        // Wrong type on a field: error names the index, kind and key.
+        let text = r#"{"name": "x", "events": [
+            {"kind": "straggler", "device": 0, "t_start": 0.0, "t_end": 1.0, "factor": 0.5},
+            {"kind": "dropout", "device": "nope", "at": 1.0}
+        ]}"#;
+        let err = Scenario::parse(text).unwrap_err().to_string();
+        assert!(err.contains("event 1"), "{err}");
+        assert!(err.contains("dropout") && err.contains("`device`"), "{err}");
+
+        // Missing field: same shape of context.
+        let text = r#"{"name": "x", "events": [{"kind": "link_degrade", "from": 0, "to": 1}]}"#;
+        let err = Scenario::parse(text).unwrap_err().to_string();
+        assert!(err.contains("event 0") && err.contains("link_degrade"), "{err}");
+        assert!(err.contains("t_start"), "{err}");
+
+        // Unknown kind lists the accepted taxonomy.
+        let text = r#"{"name": "x", "events": [{"kind": "flood"}]}"#;
+        let err = Scenario::parse(text).unwrap_err().to_string();
+        assert!(err.contains("flood") && err.contains("straggler"), "{err}");
     }
 
     #[test]

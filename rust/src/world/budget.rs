@@ -1,0 +1,65 @@
+//! Resource-budget arithmetic for the world model: memory-pressure
+//! windows and energy (battery) accounting.  Pure functions so the fleet
+//! loop and the tests share one definition of "effective" capacity.
+
+/// A memory-pressure window: usable memory is capped at `cap_bytes`
+/// during `[t0, t1)`.
+pub type MemWindow = (f64, f64, usize);
+
+/// Usable memory of a device at time `now`: the spec budget, clamped by
+/// every active pressure window (overlaps take the minimum).
+pub(crate) fn effective_mem_bytes(spec_bytes: usize, windows: &[MemWindow], now: f64) -> usize {
+    windows
+        .iter()
+        .filter(|&&(t0, t1, _)| t0 <= now && now < t1)
+        .map(|&(_, _, cap)| cap)
+        .fold(spec_bytes, usize::min)
+}
+
+/// Active seconds a device can spend before its battery is exhausted.
+/// Only called with validated budgets (`capacity_j > 0`, `drain_w > 0`),
+/// so the result is finite and positive.
+pub(crate) fn energy_limit_s(capacity_j: f64, drain_w: f64) -> f64 {
+    capacity_j / drain_w
+}
+
+/// Joules drained after `active_s` busy seconds at `drain_w`, capped at
+/// the budget: exhaustion is detected at round boundaries, so the raw
+/// ledger can overshoot the capacity by a fraction of a round — the
+/// *reported* spend never exceeds what the battery held.
+pub(crate) fn energy_spent_j(active_s: f64, drain_w: f64, capacity_j: f64) -> f64 {
+    (active_s * drain_w).min(capacity_j)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn effective_memory_takes_the_minimum_active_cap() {
+        let spec = 8usize << 30;
+        let windows = vec![
+            (10.0, 50.0, 4usize << 30),
+            (20.0, 30.0, 2usize << 30),
+        ];
+        assert_eq!(effective_mem_bytes(spec, &windows, 0.0), spec);
+        assert_eq!(effective_mem_bytes(spec, &windows, 10.0), 4 << 30);
+        assert_eq!(effective_mem_bytes(spec, &windows, 25.0), 2 << 30);
+        assert_eq!(effective_mem_bytes(spec, &windows, 30.0), 4 << 30);
+        // Half-open windows: the cap lifts exactly at t1.
+        assert_eq!(effective_mem_bytes(spec, &windows, 50.0), spec);
+        // A window can never *grow* memory past the spec.
+        let big = vec![(0.0, 100.0, 64usize << 30)];
+        assert_eq!(effective_mem_bytes(spec, &big, 5.0), spec);
+    }
+
+    #[test]
+    fn energy_limit_and_spend_are_consistent() {
+        let limit = energy_limit_s(900.0, 3.0);
+        assert_eq!(limit, 300.0);
+        // Spend is linear in active time until the budget, then capped.
+        assert_eq!(energy_spent_j(100.0, 3.0, 900.0), 300.0);
+        assert_eq!(energy_spent_j(300.0, 3.0, 900.0), 900.0);
+        assert_eq!(energy_spent_j(305.5, 3.0, 900.0), 900.0);
+    }
+}

@@ -1,0 +1,236 @@
+//! The typed event taxonomy of the world model (see the [`super`] module
+//! docs for semantics and the JSONL trace form).
+//!
+//! Every parse error carries the event kind and the offending field so a
+//! malformed trace line points at the key to fix, mirroring the strict
+//! `ringada_jobs` validator.
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// One typed event on the world timeline.  Events are *data*: a
+/// [`super::World`] is compiled once per run into static per-device
+/// tables (see [`super::CompiledWorld`]) and never mutated after.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorldEvent {
+    /// Label a *base-pool* device with a correlated-failure domain
+    /// (rack / NAT group).  Later labels win; joined devices carry their
+    /// label on the `Join` event instead.
+    SetDomain { device: usize, domain: String },
+    /// Correlated outage: every labeled device in `domain` fail-stops
+    /// atomically at `at` (one fleet event, not a sequence of drops).
+    DomainOutage { domain: String, at: f64 },
+    /// A new device joins the pool at `at`.  It gets the next free id
+    /// (base pool size + join order) and is fully connected at
+    /// `rate_bytes_per_s` in both directions.
+    Join {
+        at: f64,
+        compute_speed: f64,
+        mem_bytes: usize,
+        rate_bytes_per_s: f64,
+        domain: Option<String>,
+    },
+    /// Energy budget: the device drains `drain_w` joules per *active*
+    /// (ring-busy) second and fail-stops when `capacity_j` is exhausted.
+    /// At most one budget per device.
+    EnergyBudget { device: usize, capacity_j: f64, drain_w: f64 },
+    /// Memory pressure: the device's usable memory shrinks to at most
+    /// `mem_bytes` during `[t_start, t_end)`.  Overlapping windows take
+    /// the minimum; the planner and admission estimates see the shrunk
+    /// budget as a placement constraint.
+    MemPressure { device: usize, t_start: f64, t_end: f64, mem_bytes: usize },
+    /// Diurnal arrival intensity: the synthetic job source's arrival
+    /// rate is multiplied by `factor` during `[t_start, t_end)`
+    /// (`factor = 0` stalls arrivals until the window lifts; overlapping
+    /// windows multiply).
+    ArrivalRate { t_start: f64, t_end: f64, factor: f64 },
+}
+
+impl WorldEvent {
+    /// Stable kind name used in the JSONL form.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            WorldEvent::SetDomain { .. } => "set_domain",
+            WorldEvent::DomainOutage { .. } => "domain_outage",
+            WorldEvent::Join { .. } => "join",
+            WorldEvent::EnergyBudget { .. } => "energy_budget",
+            WorldEvent::MemPressure { .. } => "mem_pressure",
+            WorldEvent::ArrivalRate { .. } => "arrival_rate",
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            WorldEvent::SetDomain { device, domain } => Json::obj(vec![
+                ("kind", Json::str(self.kind())),
+                ("device", Json::u64(*device as u64)),
+                ("domain", Json::str(domain.clone())),
+            ]),
+            WorldEvent::DomainOutage { domain, at } => Json::obj(vec![
+                ("kind", Json::str(self.kind())),
+                ("domain", Json::str(domain.clone())),
+                ("at", Json::num(*at)),
+            ]),
+            WorldEvent::Join { at, compute_speed, mem_bytes, rate_bytes_per_s, domain } => {
+                let mut pairs = vec![
+                    ("kind", Json::str(self.kind())),
+                    ("at", Json::num(*at)),
+                    ("compute_speed", Json::num(*compute_speed)),
+                    ("mem_bytes", Json::u64(*mem_bytes as u64)),
+                    ("rate_bytes_per_s", Json::num(*rate_bytes_per_s)),
+                ];
+                if let Some(d) = domain {
+                    pairs.push(("domain", Json::str(d.clone())));
+                }
+                Json::obj(pairs)
+            }
+            WorldEvent::EnergyBudget { device, capacity_j, drain_w } => Json::obj(vec![
+                ("kind", Json::str(self.kind())),
+                ("device", Json::u64(*device as u64)),
+                ("capacity_j", Json::num(*capacity_j)),
+                ("drain_w", Json::num(*drain_w)),
+            ]),
+            WorldEvent::MemPressure { device, t_start, t_end, mem_bytes } => Json::obj(vec![
+                ("kind", Json::str(self.kind())),
+                ("device", Json::u64(*device as u64)),
+                ("t_start", Json::num(*t_start)),
+                ("t_end", Json::num(*t_end)),
+                ("mem_bytes", Json::u64(*mem_bytes as u64)),
+            ]),
+            WorldEvent::ArrivalRate { t_start, t_end, factor } => Json::obj(vec![
+                ("kind", Json::str(self.kind())),
+                ("t_start", Json::num(*t_start)),
+                ("t_end", Json::num(*t_end)),
+                ("factor", Json::num(*factor)),
+            ]),
+        }
+    }
+
+    /// Inverse of [`WorldEvent::to_json`], with kind + field context on
+    /// every error.
+    pub fn from_json(v: &Json) -> Result<WorldEvent> {
+        let kind = v
+            .req("kind")
+            .and_then(Json::as_str)
+            .map_err(|e| Error::Config(format!("world event: {e}")))?;
+        match kind {
+            "set_domain" => Ok(WorldEvent::SetDomain {
+                device: usize_field(v, kind, "device")?,
+                domain: str_field(v, kind, "domain")?,
+            }),
+            "domain_outage" => Ok(WorldEvent::DomainOutage {
+                domain: str_field(v, kind, "domain")?,
+                at: f64_field(v, kind, "at")?,
+            }),
+            "join" => Ok(WorldEvent::Join {
+                at: f64_field(v, kind, "at")?,
+                compute_speed: f64_field(v, kind, "compute_speed")?,
+                mem_bytes: usize_field(v, kind, "mem_bytes")?,
+                rate_bytes_per_s: f64_field(v, kind, "rate_bytes_per_s")?,
+                domain: match v.get("domain") {
+                    Some(_) => Some(str_field(v, kind, "domain")?),
+                    None => None,
+                },
+            }),
+            "energy_budget" => Ok(WorldEvent::EnergyBudget {
+                device: usize_field(v, kind, "device")?,
+                capacity_j: f64_field(v, kind, "capacity_j")?,
+                drain_w: f64_field(v, kind, "drain_w")?,
+            }),
+            "mem_pressure" => Ok(WorldEvent::MemPressure {
+                device: usize_field(v, kind, "device")?,
+                t_start: f64_field(v, kind, "t_start")?,
+                t_end: f64_field(v, kind, "t_end")?,
+                mem_bytes: usize_field(v, kind, "mem_bytes")?,
+            }),
+            "arrival_rate" => Ok(WorldEvent::ArrivalRate {
+                t_start: f64_field(v, kind, "t_start")?,
+                t_end: f64_field(v, kind, "t_end")?,
+                factor: f64_field(v, kind, "factor")?,
+            }),
+            other => Err(Error::Config(format!(
+                "unknown world event kind `{other}` (expected one of: set_domain, \
+                 domain_outage, join, energy_budget, mem_pressure, arrival_rate)"
+            ))),
+        }
+    }
+}
+
+fn req_ctx<'a>(v: &'a Json, kind: &str, key: &str) -> Result<&'a Json> {
+    v.req(key)
+        .map_err(|e| Error::Config(format!("{kind} event: {e}")))
+}
+
+fn f64_field(v: &Json, kind: &str, key: &str) -> Result<f64> {
+    req_ctx(v, kind, key)?
+        .as_f64()
+        .map_err(|e| Error::Config(format!("{kind} event field `{key}`: {e}")))
+}
+
+fn usize_field(v: &Json, kind: &str, key: &str) -> Result<usize> {
+    req_ctx(v, kind, key)?
+        .as_usize()
+        .map_err(|e| Error::Config(format!("{kind} event field `{key}`: {e}")))
+}
+
+fn str_field(v: &Json, kind: &str, key: &str) -> Result<String> {
+    Ok(req_ctx(v, kind, key)?
+        .as_str()
+        .map_err(|e| Error::Config(format!("{kind} event field `{key}`: {e}")))?
+        .to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_kind_round_trips_through_json() {
+        let events = vec![
+            WorldEvent::SetDomain { device: 3, domain: "rack-a".into() },
+            WorldEvent::DomainOutage { domain: "rack-a".into(), at: 120.5 },
+            WorldEvent::Join {
+                at: 60.0,
+                compute_speed: 0.125,
+                mem_bytes: 6 << 30,
+                rate_bytes_per_s: 25e6,
+                domain: Some("rack-b".into()),
+            },
+            WorldEvent::Join {
+                at: 61.0,
+                compute_speed: 0.1,
+                mem_bytes: 4 << 30,
+                rate_bytes_per_s: 20e6,
+                domain: None,
+            },
+            WorldEvent::EnergyBudget { device: 1, capacity_j: 900.0, drain_w: 3.0 },
+            WorldEvent::MemPressure {
+                device: 0,
+                t_start: 10.0,
+                t_end: 50.0,
+                mem_bytes: 2 << 30,
+            },
+            WorldEvent::ArrivalRate { t_start: 0.0, t_end: 100.0, factor: 0.5 },
+        ];
+        for e in &events {
+            let back = WorldEvent::from_json(&e.to_json()).unwrap();
+            assert_eq!(*e, back);
+        }
+    }
+
+    #[test]
+    fn parse_errors_name_the_kind_and_field() {
+        let bad = Json::parse(r#"{"kind": "energy_budget", "device": 1, "drain_w": 3.0}"#).unwrap();
+        let err = WorldEvent::from_json(&bad).unwrap_err().to_string();
+        assert!(err.contains("energy_budget"), "{err}");
+        assert!(err.contains("capacity_j"), "{err}");
+
+        let bad = Json::parse(r#"{"kind": "set_domain", "device": "x", "domain": "r"}"#).unwrap();
+        let err = WorldEvent::from_json(&bad).unwrap_err().to_string();
+        assert!(err.contains("set_domain") && err.contains("`device`"), "{err}");
+
+        let bad = Json::parse(r#"{"kind": "meteor_strike"}"#).unwrap();
+        let err = WorldEvent::from_json(&bad).unwrap_err().to_string();
+        assert!(err.contains("meteor_strike"), "{err}");
+    }
+}

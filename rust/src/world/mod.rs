@@ -1,0 +1,552 @@
+//! World model: a seed-deterministic timeline of typed events over an
+//! *elastic* device pool — the edge-realistic generalization of the
+//! fixed-pool scenario scripts (ROADMAP item 3).
+//!
+//! Where a [`crate::sim::Scenario`] perturbs a fixed cluster with
+//! independent stragglers/degradations/dropouts, a [`World`] scripts the
+//! fleet-level dynamics real edge deployments are defined by:
+//!
+//! * **Correlated failure domains** ([`WorldEvent::SetDomain`] +
+//!   [`WorldEvent::DomainOutage`]) — devices carry a rack/NAT-group
+//!   label and an outage fail-stops the whole labeled set *atomically*,
+//!   in one fleet event, so admission never observes a half-dead domain.
+//! * **Device churn** ([`WorldEvent::Join`]) — the pool grows at
+//!   runtime; joined devices enter the free pool and policies get a
+//!   `rebalance` hook (see [`crate::fleet::AllocationPolicy`]).
+//! * **Resource budgets** ([`WorldEvent::EnergyBudget`],
+//!   [`WorldEvent::MemPressure`]) — per-device battery drain in joules
+//!   per active second with fail-stop at exhaustion, and
+//!   memory-pressure windows that shrink the planner's and admission
+//!   control's usable memory budget.
+//! * **Diurnal arrival intensity** ([`WorldEvent::ArrivalRate`]) — a
+//!   piecewise-constant rate multiplier on the synthetic job source.
+//!
+//! A world with **no events is the degenerate world**: every fleet
+//! trajectory is byte-identical to a run with no world configured (the
+//! golden batteries pin this).
+//!
+//! ## `ringada_world` v1 (JSONL trace-replay format)
+//!
+//! Mirrors the `ringada_jobs` format (PR 6): a version header line, then
+//! one event object per line, blank lines ignored, strict line-numbered
+//! validation.  [`World::to_jsonl`] output round-trips byte-identically
+//! through [`World::from_jsonl`]:
+//!
+//! ```text
+//! {"name":"rack-outage","ringada_world":1}
+//! {"device":0,"domain":"rack-a","kind":"set_domain"}
+//! {"at":120,"domain":"rack-a","kind":"domain_outage"}
+//! {"at":60,"compute_speed":0.1,"kind":"join","mem_bytes":6442450944,"rate_bytes_per_s":25000000}
+//! ```
+
+mod budget;
+mod event;
+mod trace;
+
+pub use event::WorldEvent;
+pub use trace::WORLD_TRACE_VERSION;
+
+use crate::config::{ClusterConfig, DeviceSpec};
+use crate::error::{Error, Result};
+use crate::sim::scenario::Window;
+use crate::util::json::Json;
+
+/// A named, validated world-event timeline.  Like [`crate::sim::Scenario`]
+/// it is pure data: [`World::compile`] resolves it against a base pool
+/// into the static tables the fleet loop consumes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct World {
+    pub name: String,
+    pub events: Vec<WorldEvent>,
+}
+
+impl World {
+    /// The degenerate world: no events, byte-identical trajectories to
+    /// having no world at all.
+    pub fn empty() -> Self {
+        World { name: "empty".into(), events: Vec::new() }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Devices the world adds to a base pool of `base_devices`.
+    pub fn join_count(&self) -> usize {
+        self.events
+            .iter()
+            .filter(|e| matches!(e, WorldEvent::Join { .. }))
+            .count()
+    }
+
+    /// Sanity-check every event against a base pool of `base_devices`.
+    /// Budget events may reference joined devices (ids `base_devices..`);
+    /// domain labels on base devices come from [`WorldEvent::SetDomain`]
+    /// only.  Domain *membership* (an outage naming a domain no device
+    /// carries) is checked at [`World::compile`] time, where labels
+    /// resolve.
+    pub fn validate(&self, base_devices: usize) -> Result<()> {
+        let ext_n = base_devices + self.join_count();
+        let mut budgeted = vec![false; ext_n];
+        for (i, e) in self.events.iter().enumerate() {
+            let ctx = |msg: String| Error::Config(format!("world event {i} ({}): {msg}", e.kind()));
+            match e {
+                WorldEvent::SetDomain { device, domain } => {
+                    if *device >= base_devices {
+                        return Err(ctx(format!(
+                            "device {device} out of range (base pool has {base_devices}; \
+                             joined devices are labeled on their join event)"
+                        )));
+                    }
+                    if domain.is_empty() {
+                        return Err(ctx("domain label must be non-empty".into()));
+                    }
+                }
+                WorldEvent::DomainOutage { domain, at } => {
+                    if domain.is_empty() {
+                        return Err(ctx("domain label must be non-empty".into()));
+                    }
+                    if !at.is_finite() || *at < 0.0 {
+                        return Err(ctx(format!("outage time {at} must be finite and >= 0")));
+                    }
+                }
+                WorldEvent::Join { at, compute_speed, mem_bytes, rate_bytes_per_s, domain } => {
+                    if !at.is_finite() || *at < 0.0 {
+                        return Err(ctx(format!("join time {at} must be finite and >= 0")));
+                    }
+                    if !(*compute_speed > 0.0) || !compute_speed.is_finite() {
+                        return Err(ctx(format!(
+                            "compute_speed {compute_speed} must be finite and > 0"
+                        )));
+                    }
+                    if *mem_bytes == 0 {
+                        return Err(ctx("mem_bytes must be > 0".into()));
+                    }
+                    if !(*rate_bytes_per_s > 0.0) || !rate_bytes_per_s.is_finite() {
+                        return Err(ctx(format!(
+                            "rate_bytes_per_s {rate_bytes_per_s} must be finite and > 0"
+                        )));
+                    }
+                    if matches!(domain, Some(d) if d.is_empty()) {
+                        return Err(ctx("domain label must be non-empty".into()));
+                    }
+                }
+                WorldEvent::EnergyBudget { device, capacity_j, drain_w } => {
+                    if *device >= ext_n {
+                        return Err(ctx(format!(
+                            "device {device} out of range (pool + joins has {ext_n})"
+                        )));
+                    }
+                    if !(*capacity_j > 0.0) || !capacity_j.is_finite() {
+                        return Err(ctx(format!("capacity_j {capacity_j} must be finite and > 0")));
+                    }
+                    if !(*drain_w > 0.0) || !drain_w.is_finite() {
+                        return Err(ctx(format!("drain_w {drain_w} must be finite and > 0")));
+                    }
+                    if budgeted[*device] {
+                        return Err(ctx(format!("device {device} has two energy budgets")));
+                    }
+                    budgeted[*device] = true;
+                }
+                WorldEvent::MemPressure { device, t_start, t_end, mem_bytes } => {
+                    if *device >= ext_n {
+                        return Err(ctx(format!(
+                            "device {device} out of range (pool + joins has {ext_n})"
+                        )));
+                    }
+                    if !(t_start.is_finite() && t_end.is_finite() && t_end > t_start && *t_start >= 0.0)
+                    {
+                        return Err(ctx(format!(
+                            "window [{t_start}, {t_end}) must be finite, non-negative and non-empty"
+                        )));
+                    }
+                    if *mem_bytes == 0 {
+                        return Err(ctx("mem_bytes must be > 0".into()));
+                    }
+                }
+                WorldEvent::ArrivalRate { t_start, t_end, factor } => {
+                    if !(t_start.is_finite() && t_end.is_finite() && t_end > t_start && *t_start >= 0.0)
+                    {
+                        return Err(ctx(format!(
+                            "window [{t_start}, {t_end}) must be finite, non-negative and non-empty"
+                        )));
+                    }
+                    // Bounded factor-0 windows stall arrivals until the
+                    // window lifts; the finite-t_end check above rules
+                    // out permanent starvation.
+                    if !factor.is_finite() || *factor < 0.0 {
+                        return Err(ctx(format!("factor {factor} must be finite and >= 0")));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Arrival-intensity windows for the synthetic job source, in event
+    /// order.  `factor` multiplies the arrival *rate*: 2.0 means
+    /// inter-arrival gaps close twice as fast (twice the arrivals), 0
+    /// stalls the stream for the window.
+    pub(crate) fn arrival_windows(&self) -> Vec<Window> {
+        self.events
+            .iter()
+            .filter_map(|e| match *e {
+                WorldEvent::ArrivalRate { t_start, t_end, factor } => {
+                    Some(Window { t0: t_start, t1: t_end, factor })
+                }
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Resolve the timeline against a base pool into the static tables
+    /// the fleet loop consumes (validates first).
+    pub fn compile(&self, base: &ClusterConfig) -> Result<CompiledWorld> {
+        let base_n = base.len();
+        self.validate(base_n)?;
+
+        // Extend the pool with joined devices in event order: the i-th
+        // join gets id base_n + i and is fully connected (both
+        // directions) at its advertised link rate.
+        let mut pool = base.clone();
+        let mut joins = Vec::new();
+        for e in &self.events {
+            if let WorldEvent::Join { at, compute_speed, mem_bytes, rate_bytes_per_s, domain } = e {
+                let id = pool.devices.len();
+                pool.devices.push(DeviceSpec {
+                    id,
+                    compute_speed: *compute_speed,
+                    mem_bytes: *mem_bytes,
+                    domain: domain.clone(),
+                });
+                for row in pool.rate_bytes_per_s.iter_mut() {
+                    row.push(*rate_bytes_per_s);
+                }
+                pool.rate_bytes_per_s.push(vec![*rate_bytes_per_s; id + 1]);
+                joins.push((*at, id));
+            }
+        }
+        let n = pool.len();
+
+        // Domain labels: base DeviceSpec labels, overridden by SetDomain
+        // in event order (later wins); joined devices keep their join
+        // label.
+        let mut domains: Vec<Option<String>> =
+            pool.devices.iter().map(|d| d.domain.clone()).collect();
+        for e in &self.events {
+            if let WorldEvent::SetDomain { device, domain } = e {
+                domains[*device] = Some(domain.clone());
+            }
+        }
+
+        // Outages resolve to their member sets statically; dispatch
+        // skips members that have not joined yet or are already dead.
+        let mut outages = Vec::new();
+        for e in &self.events {
+            if let WorldEvent::DomainOutage { domain, at } = e {
+                let members: Vec<usize> = (0..n)
+                    .filter(|&d| domains[d].as_deref() == Some(domain.as_str()))
+                    .collect();
+                if members.is_empty() {
+                    return Err(Error::Config(format!(
+                        "world `{}`: domain outage at t={at} names `{domain}`, \
+                         which no device carries",
+                        self.name
+                    )));
+                }
+                outages.push(Outage { at: *at, domain: domain.clone(), members });
+            }
+        }
+        outages.sort_by(|a, b| a.at.total_cmp(&b.at).then(a.domain.cmp(&b.domain)));
+        let mut dropout_pairs: Vec<(f64, usize)> = outages
+            .iter()
+            .flat_map(|o| o.members.iter().map(|&d| (o.at, d)))
+            .collect();
+        dropout_pairs.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+
+        let mut energy_limit_s = vec![None; n];
+        let mut drain_w = vec![0.0; n];
+        let mut capacity_j = vec![0.0; n];
+        let mut mem_windows: Vec<Vec<budget::MemWindow>> = vec![Vec::new(); n];
+        for e in &self.events {
+            match e {
+                WorldEvent::EnergyBudget { device, capacity_j: cap, drain_w: w } => {
+                    energy_limit_s[*device] = Some(budget::energy_limit_s(*cap, *w));
+                    drain_w[*device] = *w;
+                    capacity_j[*device] = *cap;
+                }
+                WorldEvent::MemPressure { device, t_start, t_end, mem_bytes } => {
+                    mem_windows[*device].push((*t_start, *t_end, *mem_bytes));
+                }
+                _ => {}
+            }
+        }
+        let has_mem_pressure = mem_windows.iter().any(|w| !w.is_empty());
+
+        Ok(CompiledWorld {
+            pool,
+            base_devices: base_n,
+            joins,
+            outages,
+            dropout_pairs,
+            energy_limit_s,
+            drain_w,
+            capacity_j,
+            mem_windows,
+            has_mem_pressure,
+            arrival_windows: self.arrival_windows(),
+            domains,
+        })
+    }
+
+    // -------------------------------------------------------------- JSON
+
+    /// Object form (embedded in a `FleetConfig` under `"world"`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            (
+                "events",
+                Json::Arr(self.events.iter().map(WorldEvent::to_json).collect()),
+            ),
+        ])
+    }
+
+    /// Inverse of [`World::to_json`], with event-index context on errors.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let name = v
+            .req("name")
+            .and_then(Json::as_str)
+            .map_err(|e| Error::Config(format!("world: {e}")))?
+            .to_string();
+        let events = v
+            .req("events")
+            .and_then(Json::as_arr)
+            .map_err(|e| Error::Config(format!("world `{name}`: {e}")))?
+            .iter()
+            .enumerate()
+            .map(|(i, ev)| {
+                WorldEvent::from_json(ev)
+                    .map_err(|e| Error::Config(format!("world `{name}` event {i}: {e}")))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(World { name, events })
+    }
+}
+
+/// One correlated outage, resolved to its member set.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Outage {
+    pub at: f64,
+    pub domain: String,
+    /// Member device ids, ascending.
+    pub members: Vec<usize>,
+}
+
+/// A [`World`] resolved against a base pool: the static tables the fleet
+/// loop reads.  Never mutated after compilation — runtime state (who has
+/// joined, energy spent) lives in the fleet's own ledgers.
+#[derive(Debug, Clone)]
+pub struct CompiledWorld {
+    /// Base pool extended with every joined device (ids `base_devices..`
+    /// in join-event order).  The fleet's stable pool for the whole run;
+    /// not-yet-joined devices simply never appear in the free pool.
+    pub pool: ClusterConfig,
+    pub base_devices: usize,
+    /// `(join time, device id)` in event order (ids ascending).
+    pub joins: Vec<(f64, usize)>,
+    /// Outages sorted by `(time, domain)`.
+    pub outages: Vec<Outage>,
+    /// Every `(outage time, member)` pair, sorted by `(time, device)` —
+    /// merged into each running job's pending-dropout queue at admission.
+    pub dropout_pairs: Vec<(f64, usize)>,
+    /// Active seconds before exhaustion per device (`None` = unbudgeted).
+    pub energy_limit_s: Vec<Option<f64>>,
+    /// Joules per active second per device (0.0 = unbudgeted).
+    pub drain_w: Vec<f64>,
+    /// Battery capacity per device (0.0 = unbudgeted).
+    pub capacity_j: Vec<f64>,
+    /// Memory-pressure windows per device.
+    pub mem_windows: Vec<Vec<budget::MemWindow>>,
+    has_mem_pressure: bool,
+    /// Arrival-intensity windows for the synthetic source.
+    pub(crate) arrival_windows: Vec<Window>,
+    /// Final domain label per device (`None` = unlabeled).
+    pub domains: Vec<Option<String>>,
+}
+
+impl CompiledWorld {
+    /// The pool with every memory-pressure window active at `now`
+    /// applied, or `None` when the world scripts no memory pressure at
+    /// all — the no-pressure fast path keeps healthy trajectories
+    /// allocation-identical, not just byte-identical.
+    pub fn effective_pool_if_pressured(&self, now: f64) -> Option<ClusterConfig> {
+        if !self.has_mem_pressure {
+            return None;
+        }
+        let mut pool = self.pool.clone();
+        for (d, dev) in pool.devices.iter_mut().enumerate() {
+            dev.mem_bytes = budget::effective_mem_bytes(dev.mem_bytes, &self.mem_windows[d], now);
+        }
+        Some(pool)
+    }
+
+    /// Joules actually drained by device `d` after `active_s` busy
+    /// seconds (0 for unbudgeted devices; capped at capacity).
+    pub fn energy_spent_j(&self, d: usize, active_s: f64) -> f64 {
+        if self.energy_limit_s.get(d).is_some_and(Option::is_some) {
+            budget::energy_spent_j(active_s, self.drain_w[d], self.capacity_j[d])
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base4() -> ClusterConfig {
+        ClusterConfig::homogeneous(4, 25e6)
+    }
+
+    fn labeled_world() -> World {
+        World {
+            name: "t".into(),
+            events: vec![
+                WorldEvent::SetDomain { device: 0, domain: "a".into() },
+                WorldEvent::SetDomain { device: 1, domain: "a".into() },
+                WorldEvent::SetDomain { device: 2, domain: "b".into() },
+                WorldEvent::Join {
+                    at: 50.0,
+                    compute_speed: 0.1,
+                    mem_bytes: 6 << 30,
+                    rate_bytes_per_s: 20e6,
+                    domain: Some("a".into()),
+                },
+                WorldEvent::DomainOutage { domain: "a".into(), at: 100.0 },
+                WorldEvent::EnergyBudget { device: 3, capacity_j: 600.0, drain_w: 2.0 },
+                WorldEvent::MemPressure {
+                    device: 2,
+                    t_start: 10.0,
+                    t_end: 90.0,
+                    mem_bytes: 1 << 30,
+                },
+                WorldEvent::ArrivalRate { t_start: 0.0, t_end: 40.0, factor: 2.0 },
+            ],
+        }
+    }
+
+    #[test]
+    fn compile_extends_the_pool_and_resolves_domains() {
+        let cw = labeled_world().compile(&base4()).unwrap();
+        assert_eq!(cw.base_devices, 4);
+        assert_eq!(cw.pool.len(), 5);
+        assert_eq!(cw.joins, vec![(50.0, 4)]);
+        cw.pool.validate().unwrap();
+        // The joined device is fully connected at its own rate.
+        assert_eq!(cw.pool.rate_bytes_per_s[0][4], 20e6);
+        assert_eq!(cw.pool.rate_bytes_per_s[4][1], 20e6);
+        // The outage covers devices 0, 1 and the joined device 4.
+        assert_eq!(cw.outages.len(), 1);
+        assert_eq!(cw.outages[0].members, vec![0, 1, 4]);
+        assert_eq!(
+            cw.dropout_pairs,
+            vec![(100.0, 0), (100.0, 1), (100.0, 4)]
+        );
+        assert_eq!(cw.energy_limit_s[3], Some(300.0));
+        assert_eq!(cw.domains[2].as_deref(), Some("b"));
+        assert_eq!(cw.domains[3], None);
+    }
+
+    #[test]
+    fn effective_pool_applies_only_active_pressure() {
+        let cw = labeled_world().compile(&base4()).unwrap();
+        let at_peak = cw.effective_pool_if_pressured(20.0).unwrap();
+        assert_eq!(at_peak.devices[2].mem_bytes, 1 << 30);
+        assert_eq!(at_peak.devices[0].mem_bytes, 8 << 30);
+        let after = cw.effective_pool_if_pressured(90.0).unwrap();
+        assert_eq!(after.devices[2].mem_bytes, 8 << 30);
+        // A world without pressure returns None (the fast path).
+        let plain = World::empty().compile(&base4()).unwrap();
+        assert!(plain.effective_pool_if_pressured(20.0).is_none());
+    }
+
+    #[test]
+    fn validate_rejects_bad_events() {
+        let w = |events: Vec<WorldEvent>| World { name: "x".into(), events };
+        assert!(w(vec![WorldEvent::SetDomain { device: 4, domain: "a".into() }])
+            .validate(4)
+            .is_err());
+        assert!(w(vec![WorldEvent::SetDomain { device: 0, domain: "".into() }])
+            .validate(4)
+            .is_err());
+        assert!(w(vec![WorldEvent::DomainOutage { domain: "a".into(), at: f64::NAN }])
+            .validate(4)
+            .is_err());
+        assert!(w(vec![WorldEvent::Join {
+            at: 1.0,
+            compute_speed: 0.0,
+            mem_bytes: 1,
+            rate_bytes_per_s: 1.0,
+            domain: None,
+        }])
+        .validate(4)
+        .is_err());
+        assert!(w(vec![WorldEvent::EnergyBudget { device: 0, capacity_j: -1.0, drain_w: 1.0 }])
+            .validate(4)
+            .is_err());
+        let twice = w(vec![
+            WorldEvent::EnergyBudget { device: 0, capacity_j: 1.0, drain_w: 1.0 },
+            WorldEvent::EnergyBudget { device: 0, capacity_j: 2.0, drain_w: 1.0 },
+        ]);
+        assert!(twice.validate(4).is_err());
+        assert!(w(vec![WorldEvent::MemPressure {
+            device: 0,
+            t_start: 5.0,
+            t_end: 5.0,
+            mem_bytes: 1,
+        }])
+        .validate(4)
+        .is_err());
+        assert!(w(vec![WorldEvent::ArrivalRate {
+            t_start: 0.0,
+            t_end: f64::INFINITY,
+            factor: 0.0,
+        }])
+        .validate(4)
+        .is_err());
+        // A budget on a joined device (id = base + join order) is fine.
+        let join_budget = w(vec![
+            WorldEvent::Join {
+                at: 1.0,
+                compute_speed: 0.1,
+                mem_bytes: 1 << 30,
+                rate_bytes_per_s: 1e6,
+                domain: None,
+            },
+            WorldEvent::EnergyBudget { device: 4, capacity_j: 10.0, drain_w: 1.0 },
+        ]);
+        join_budget.validate(4).unwrap();
+        // An outage of an unlabeled domain is caught at compile.
+        let ghost = w(vec![WorldEvent::DomainOutage { domain: "ghost".into(), at: 1.0 }]);
+        ghost.validate(4).unwrap();
+        assert!(ghost.compile(&base4()).is_err());
+    }
+
+    #[test]
+    fn json_object_form_round_trips() {
+        let world = labeled_world();
+        let back = World::from_json(&world.to_json()).unwrap();
+        assert_eq!(world, back);
+        // Errors carry the event index.
+        let mut j = world.to_json();
+        if let Json::Obj(m) = &mut j {
+            if let Some(Json::Arr(evs)) = m.get_mut("events") {
+                evs[1] = Json::parse(r#"{"kind": "domain_outage", "domain": "a"}"#).unwrap();
+            }
+        }
+        let err = World::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("event 1") && err.contains("`at`"), "{err}");
+    }
+}

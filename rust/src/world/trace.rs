@@ -1,0 +1,132 @@
+//! `ringada_world` v1 — the versioned JSONL trace-replay form of a
+//! [`World`].  Mirrors the `ringada_jobs` format: a header line carrying
+//! the version tag, then one event object per line, blank lines ignored,
+//! strict line-numbered validation.  [`World::to_jsonl`] output is
+//! canonical (sorted keys, shortest-round-trip floats), so
+//! `to_jsonl(from_jsonl(x)) == x` for any trace this build wrote — the
+//! CI conformance check pins that byte identity on a committed fixture.
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+use super::{World, WorldEvent};
+
+/// Version tag a world trace's header line must carry:
+/// `{"name":"...","ringada_world":1}`.
+pub const WORLD_TRACE_VERSION: u64 = 1;
+
+impl World {
+    /// Render the canonical JSONL form (header + one event per line).
+    pub fn to_jsonl(&self) -> String {
+        let header = Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("ringada_world", Json::u64(WORLD_TRACE_VERSION)),
+        ]);
+        let mut out = header.to_string();
+        out.push('\n');
+        for e in &self.events {
+            out.push_str(&e.to_json().to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Parse the JSONL form.  The first line must be the version header;
+    /// every later non-blank line is one event.  Errors carry the line
+    /// number plus the event kind/field context from
+    /// [`WorldEvent::from_json`].
+    pub fn from_jsonl(text: &str) -> Result<World> {
+        let mut lines = text.lines();
+        let header = lines
+            .next()
+            .filter(|l| !l.trim().is_empty())
+            .ok_or_else(|| {
+                Error::Config("empty world trace (missing version header)".into())
+            })?;
+        let v = Json::parse(header.trim())
+            .map_err(|e| Error::Config(format!("world trace header: {e}")))?;
+        let version = v
+            .req("ringada_world")
+            .and_then(Json::as_u64)
+            .map_err(|e| Error::Config(format!("world trace header: {e}")))?;
+        if version != WORLD_TRACE_VERSION {
+            return Err(Error::Config(format!(
+                "unsupported world trace version {version} (this build reads {WORLD_TRACE_VERSION})"
+            )));
+        }
+        let name = match v.get("name") {
+            Some(n) => n
+                .as_str()
+                .map_err(|e| Error::Config(format!("world trace header: {e}")))?
+                .to_string(),
+            None => "world".to_string(),
+        };
+        let mut events = Vec::new();
+        for (i, raw) in lines.enumerate() {
+            let line_no = i + 2;
+            let trimmed = raw.trim();
+            if trimmed.is_empty() {
+                continue;
+            }
+            let ev = Json::parse(trimmed)
+                .and_then(|v| WorldEvent::from_json(&v))
+                .map_err(|e| Error::Config(format!("world trace line {line_no}: {e}")))?;
+            events.push(ev);
+        }
+        Ok(World { name, events })
+    }
+
+    /// Read and parse a trace file (the `FleetConfig::world_trace_path`
+    /// loader).
+    pub fn load(path: &str) -> Result<World> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("world trace `{path}`: {e}")))?;
+        Self::from_jsonl(&text)
+            .map_err(|e| Error::Config(format!("world trace `{path}`: {e}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> World {
+        World {
+            name: "mini".into(),
+            events: vec![
+                WorldEvent::SetDomain { device: 0, domain: "rack-a".into() },
+                WorldEvent::DomainOutage { domain: "rack-a".into(), at: 120.0 },
+                WorldEvent::Join {
+                    at: 60.5,
+                    compute_speed: 0.1,
+                    mem_bytes: 6 << 30,
+                    rate_bytes_per_s: 25e6,
+                    domain: None,
+                },
+                WorldEvent::ArrivalRate { t_start: 0.0, t_end: 200.0, factor: 1.5 },
+            ],
+        }
+    }
+
+    #[test]
+    fn jsonl_round_trips_byte_identically() {
+        let text = sample().to_jsonl();
+        let back = World::from_jsonl(&text).unwrap();
+        assert_eq!(back, sample());
+        assert_eq!(back.to_jsonl(), text, "canonical form is a fixed point");
+        // Blank lines between events are tolerated (but not canonical).
+        let padded = text.replace('\n', "\n\n");
+        assert_eq!(World::from_jsonl(&padded).unwrap(), sample());
+    }
+
+    #[test]
+    fn malformed_traces_carry_line_numbers() {
+        assert!(World::from_jsonl("").is_err());
+        assert!(World::from_jsonl("{\"ringada_world\": 2}\n").is_err());
+        assert!(World::from_jsonl("{\"ringada_jobs\": 1}\n").is_err());
+        let bad = "{\"ringada_world\": 1}\n\n{\"kind\": \"join\", \"at\": 1.0}\n";
+        let err = World::from_jsonl(bad).unwrap_err().to_string();
+        assert!(err.contains("line 3"), "{err}");
+        assert!(err.contains("compute_speed"), "{err}");
+    }
+}

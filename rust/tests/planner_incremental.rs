@@ -164,7 +164,7 @@ fn incremental_matches_reference_on_large_random_clusters() {
     // `incremental` rows extend the same differential to U = 4096.
     for (u, iters, seed) in [(64usize, 250usize, 3u64), (256, 250, 4), (1024, 150, 5)] {
         let m = meta(2 * u);
-        let cl = ClusterConfig::synthetic(u, seed, 0.6);
+        let cl = ClusterConfig::synthetic(u, seed, 0.6).unwrap();
         let p = Planner::new(&m, &cl, costs());
         let devices: Vec<usize> = (0..u).collect();
         let params = SearchParams {
@@ -206,7 +206,7 @@ fn max_evals_budget_counts_proposals_under_both_evaluators() {
     // proposes the identical move sequence — and returns the identical
     // plan — under either evaluator implementation.
     let m = meta(32);
-    let cl = ClusterConfig::synthetic(16, 21, 0.7);
+    let cl = ClusterConfig::synthetic(16, 21, 0.7).unwrap();
     let p = Planner::new(&m, &cl, costs());
     let devices: Vec<usize> = (0..16).collect();
     let params = SearchParams {

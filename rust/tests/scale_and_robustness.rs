@@ -133,7 +133,7 @@ fn planner_errors_on_nan_speed_instead_of_panicking() {
     let m = meta(24);
     // > 8 devices: the seed's speed sort on this path `unwrap()`ed a
     // `partial_cmp` and panicked on NaN.
-    let mut cl = ClusterConfig::synthetic(12, 5, 0.5);
+    let mut cl = ClusterConfig::synthetic(12, 5, 0.5).unwrap();
     cl.devices[7].compute_speed = f64::NAN;
     let p = Planner::new(&m, &cl, costs());
     match p.plan() {
@@ -387,7 +387,7 @@ fn large_cluster_scenario_sweep_survives_dropout_replanning() {
     // re-plan over 11 survivors.
     let u = 12;
     let m = meta(2 * u);
-    let cl = ClusterConfig::synthetic(u, 42, 0.6);
+    let cl = ClusterConfig::synthetic(u, 42, 0.6).unwrap();
     let lut = CostLut::analytic(&m, 5.0);
     let tr = TrainingConfig {
         rounds: 3,

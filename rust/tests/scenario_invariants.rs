@@ -433,3 +433,119 @@ fn dropout_ties_break_by_device_id_exactly_as_before() {
     };
     assert_eq!(sc.dropouts(), vec![(4.0, 2), (5.0, 1), (5.0, 3)]);
 }
+
+// ------------------------------------------------------------------
+// World-model equivalence battery: a correlated domain outage must be
+// indistinguishable from the same devices dropping individually at the
+// same instant *when nothing is waiting to be admitted in between* — the
+// survivor set, the re-planned rings, and every job row agree
+// byte-for-byte (the world run merely appends its `;world=` section to
+// the canonical fingerprint).
+
+mod world_equivalence {
+    use ringada::config::FleetConfig;
+    use ringada::fleet::{serve, AllocationPolicy, FifoWholeRing, SmallestRingFirst};
+    use ringada::sim::{Scenario, ScenarioEvent};
+    use ringada::world::{World, WorldEvent};
+
+    /// Canonical fingerprint with the world section (if any) removed.
+    fn core(s: &str) -> String {
+        s.split(";world=").next().unwrap().to_string()
+    }
+
+    fn outage_world(at: f64) -> World {
+        World {
+            name: "duo-world".into(),
+            events: vec![
+                WorldEvent::SetDomain { device: 1, domain: "rack".into() },
+                WorldEvent::SetDomain { device: 2, domain: "rack".into() },
+                WorldEvent::DomainOutage { domain: "rack".into(), at },
+            ],
+        }
+    }
+
+    fn drops_scenario(at: f64) -> Scenario {
+        Scenario {
+            name: "duo".into(),
+            events: vec![
+                ScenarioEvent::Dropout { device: 1, at },
+                ScenarioEvent::Dropout { device: 2, at },
+            ],
+        }
+    }
+
+    #[test]
+    fn golden_domain_outage_equals_single_drops_when_nothing_waits() {
+        // One job on the pool: the queue is provably empty at the outage
+        // instant, so atomic-vs-sequential death is unobservable and the
+        // runs must agree byte-for-byte on every survivor and ring.
+        for seed in [5u64, 9, 21] {
+            let base = FleetConfig::synthetic(8, 1, seed);
+            for policy in [&FifoWholeRing as &dyn AllocationPolicy, &SmallestRingFirst] {
+                let healthy = serve(&base, policy).unwrap();
+                let done = healthy.rows[0].completed_s;
+                assert!(done > 0.0);
+                let at = 0.45 * done;
+
+                let mut with_world = base.clone();
+                with_world.scenario = Some(Scenario { name: "duo".into(), events: vec![] });
+                with_world.world = Some(outage_world(at));
+                let mut with_drops = base.clone();
+                with_drops.scenario = Some(drops_scenario(at));
+
+                let a = serve(&with_world, policy).unwrap();
+                let b = serve(&with_drops, policy).unwrap();
+                assert_eq!(
+                    core(&a.canonical_string()),
+                    b.canonical_string(),
+                    "outage != drops (seed {seed}, policy {})",
+                    policy.name()
+                );
+                // Survivor set: both runs killed exactly devices {1, 2}.
+                assert_eq!(a.dead_devices, 2, "seed {seed}");
+                assert_eq!(b.dead_devices, 2, "seed {seed}");
+                for (d, (x, y)) in
+                    a.pool_device_busy.iter().zip(&b.pool_device_busy).enumerate()
+                {
+                    assert_eq!(x.to_bits(), y.to_bits(), "device {d} busy diverged");
+                }
+                // The world run attributes the loss to the domain.
+                let w = a.world.as_ref().unwrap();
+                assert_eq!(w.outages, 1);
+                assert_eq!(w.domains, vec![("rack".to_string(), 2, 2)]);
+                // And replays byte-identically.
+                let a2 = serve(&with_world, policy).unwrap();
+                assert_eq!(a.canonical_string(), a2.canonical_string());
+            }
+        }
+    }
+
+    #[test]
+    fn contended_domain_outage_keeps_the_survivor_set_and_conservation() {
+        // With a contended queue the admission interleaving between two
+        // sequential drops MAY legitimately diverge from the atomic
+        // outage; the survivor set and job conservation still must not.
+        for seed in [5u64, 9] {
+            let mut base = FleetConfig::synthetic(8, 6, seed);
+            base.mean_interarrival_s = 5.0;
+            let healthy = serve(&base, &FifoWholeRing).unwrap();
+            let at = 0.5 * healthy.horizon_s;
+            assert!(at > 0.0);
+
+            let mut with_world = base.clone();
+            with_world.world = Some(outage_world(at));
+            let mut with_drops = base.clone();
+            with_drops.scenario = Some(drops_scenario(at));
+
+            for cfg in [&with_world, &with_drops] {
+                let r = serve(cfg, &FifoWholeRing).unwrap();
+                assert_eq!(r.dead_devices, 2, "seed {seed}");
+                assert_eq!(
+                    r.completed() + r.failed_jobs() + r.unserved(),
+                    base.jobs,
+                    "job conservation violated (seed {seed})"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,286 @@
+//! World-model acceptance battery: the degenerate (no-event) world is
+//! byte-invisible, the committed `ringada_world` v1 fixture replays
+//! seed-deterministically across policies and seeds, trace loading is
+//! equivalent to embedding the world in the config, and checkpoints
+//! taken mid-world-event (between a join and its outage, after an energy
+//! exhaustion, ...) restore byte-identically.
+
+use ringada::config::{AdmissionControl, FleetConfig};
+use ringada::fleet::{
+    serve, serve_reference, serve_streaming, AllocationPolicy, DeadlineEdf, FifoWholeRing,
+    FleetState, SmallestRingFirst, UtilizationAware,
+};
+use ringada::sim::Scenario;
+use ringada::util::json::Json;
+use ringada::world::{World, WorldEvent, WORLD_TRACE_VERSION};
+
+fn policies() -> [&'static dyn AllocationPolicy; 4] {
+    [&FifoWholeRing, &SmallestRingFirst, &UtilizationAware, &DeadlineEdf]
+}
+
+/// The committed mini world trace: a correlated domain outage over
+/// devices {1, 2}, two joins, and a battery so small device 0 exhausts
+/// at its first round boundary.
+fn fixture_path() -> String {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/tests/data/world_mini.jsonl").to_string()
+}
+
+fn world_cfg(seed: u64, jobs: usize) -> FleetConfig {
+    let mut cfg = FleetConfig::synthetic(8, jobs, seed);
+    cfg.mean_interarrival_s = 30.0;
+    cfg.world_trace_path = Some(fixture_path());
+    cfg
+}
+
+// ------------------------------------------------------- degenerate world
+
+#[test]
+fn empty_world_is_byte_invisible_healthy_and_faulted() {
+    // A configured world with no events must not change a single byte of
+    // any trajectory — the pre-world golden batteries keep their meaning.
+    for seed in [3u64, 9] {
+        let mut plain = FleetConfig::synthetic(12, 8, seed);
+        plain.mean_interarrival_s = 12.0;
+        let mut faulted = plain.clone();
+        faulted.scenario = Some(Scenario::synth(seed, 12, 2000.0, 0.8));
+        for base in [&plain, &faulted] {
+            let mut with_empty = base.clone();
+            with_empty.world = Some(World::empty());
+            for policy in policies() {
+                let a = serve(base, policy).unwrap();
+                let b = serve(&with_empty, policy).unwrap();
+                assert_eq!(
+                    a.canonical_string(),
+                    b.canonical_string(),
+                    "empty world changed the run (seed {seed}, policy {})",
+                    policy.name()
+                );
+                assert!(b.world.is_none(), "empty world must resolve to no world");
+            }
+        }
+        // Streaming agrees too.
+        let (a, _) = serve_streaming(&plain, &FifoWholeRing).unwrap();
+        let mut with_empty = plain.clone();
+        with_empty.world = Some(World::empty());
+        let (b, _) = serve_streaming(&with_empty, &FifoWholeRing).unwrap();
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+    }
+}
+
+#[test]
+fn serve_reference_refuses_world_configs() {
+    // The legacy differential path cannot express pool churn; it must
+    // refuse rather than silently ignore the world (even a degenerate
+    // one — the guard is on the config, not the resolved timeline).
+    let mut cfg = FleetConfig::synthetic(8, 4, 3);
+    cfg.world = Some(World::empty());
+    assert!(serve_reference(&cfg, &FifoWholeRing).is_err());
+    let mut cfg = FleetConfig::synthetic(8, 4, 3);
+    cfg.world_trace_path = Some(fixture_path());
+    assert!(serve_reference(&cfg, &FifoWholeRing).is_err());
+}
+
+// ------------------------------------------------------ fixture conformance
+
+#[test]
+fn fixture_trace_round_trips_byte_identically() {
+    // The CI conformance check: this build's canonical JSONL form of the
+    // committed fixture is the committed bytes themselves.
+    let text = std::fs::read_to_string(fixture_path()).unwrap();
+    let world = World::from_jsonl(&text).unwrap();
+    assert_eq!(world.to_jsonl(), text, "ringada_world v1 canonical form drifted");
+    assert_eq!(WORLD_TRACE_VERSION, 1);
+    assert_eq!(world.name, "mini-world");
+    assert_eq!(world.join_count(), 2);
+    let outages = world
+        .events
+        .iter()
+        .filter(|e| matches!(e, WorldEvent::DomainOutage { .. }))
+        .count();
+    assert_eq!(outages, 1);
+    let budgets = world
+        .events
+        .iter()
+        .filter(|e| matches!(e, WorldEvent::EnergyBudget { .. }))
+        .count();
+    assert_eq!(budgets, 1);
+    // Loading through the config path yields the same world.
+    let cfg = world_cfg(3, 4);
+    assert_eq!(cfg.resolve_world().unwrap().unwrap(), world);
+}
+
+#[test]
+fn trace_path_and_embedded_world_serve_identically() {
+    let by_path = world_cfg(5, 8);
+    let mut embedded = by_path.clone();
+    embedded.world_trace_path = None;
+    embedded.world = Some(World::load(&fixture_path()).unwrap());
+    let a = serve(&by_path, &FifoWholeRing).unwrap();
+    let b = serve(&embedded, &FifoWholeRing).unwrap();
+    assert_eq!(a.canonical_string(), b.canonical_string());
+}
+
+// --------------------------------------------------------- fixture goldens
+
+#[test]
+fn fixture_world_is_seed_deterministic_for_every_policy() {
+    // The acceptance battery: the fixture (outage + joins + exhaustion)
+    // produces byte-identical replays across >= 2 policies x >= 2 seeds,
+    // with the world section pinning the same availability story.
+    for seed in [5u64, 9] {
+        for policy in policies() {
+            let cfg = world_cfg(seed, 12);
+            let a = serve(&cfg, policy).unwrap();
+            let b = serve(&cfg, policy).unwrap();
+            assert_eq!(
+                a.canonical_string(),
+                b.canonical_string(),
+                "world run not deterministic (seed {seed}, policy {})",
+                policy.name()
+            );
+            assert_eq!(
+                a.completed() + a.failed_jobs() + a.unserved(),
+                cfg.jobs,
+                "job conservation violated (seed {seed}, policy {})",
+                policy.name()
+            );
+            // The pool grew by the two joins.
+            assert_eq!(a.pool_devices, 10);
+            assert_eq!(a.pool_device_busy.len(), 10);
+            let w = a.world.as_ref().expect("world run must report world stats");
+            assert_eq!(w.base_devices, 8);
+            assert_eq!(w.joins, 2);
+            assert_eq!(w.outages, 1);
+            // The rack-a outage always lands (both members lost); the
+            // joined rack-b device survives.
+            assert_eq!(
+                w.domains,
+                vec![("rack-a".to_string(), 2, 2), ("rack-b".to_string(), 1, 0)]
+            );
+            // Every death is either the outage or battery exhaustion.
+            assert_eq!(a.dead_devices, 2 + w.energy_exhausted);
+        }
+    }
+}
+
+#[test]
+fn fifo_fixture_run_exhausts_the_budgeted_device() {
+    // FIFO's first grant is the free-pool prefix, so device 0 (2 J at
+    // 1 W: two active seconds) always burns out at a round boundary.
+    for seed in [5u64, 9] {
+        let report = serve(&world_cfg(seed, 12), &FifoWholeRing).unwrap();
+        let w = report.world.as_ref().unwrap();
+        assert_eq!(w.energy_exhausted, 1, "seed {seed}");
+        assert_eq!(w.energy_spent_j, 2.0, "the drained battery reports its capacity");
+        assert_eq!(report.dead_devices, 3, "outage pair + exhausted device");
+        // Losing ring members mid-flight forces at least one re-plan.
+        let replans: usize = report.rows.iter().map(|r| r.replans).sum();
+        assert!(replans >= 1, "seed {seed}: no job ever re-planned");
+    }
+}
+
+// ----------------------------------------------------- checkpoint/restore
+
+/// Run `k` events, snapshot, round-trip the snapshot through text,
+/// resume into a fresh state, finish, and return the canonical string.
+fn killed_at(cfg: &FleetConfig, policy: &dyn AllocationPolicy, k: usize) -> String {
+    let mut state = FleetState::new(cfg, policy).unwrap();
+    for i in 0..k {
+        assert!(state.step_event().unwrap(), "event stream ended early at {i}/{k}");
+    }
+    let text = state.snapshot().unwrap().to_string();
+    drop(state);
+    let reparsed = Json::parse(&text).unwrap();
+    let mut resumed = FleetState::resume(cfg, policy, &reparsed).unwrap();
+    resumed.run_to_end().unwrap();
+    resumed.into_report().unwrap().canonical_string()
+}
+
+#[test]
+fn kill_at_every_event_replays_the_fixture_world_byte_identically() {
+    // PR 6 compatibility acceptance: snapshots taken at *every* event —
+    // including between the two join dispatches, mid-outage-aftermath,
+    // and after the energy exhaustion — restore and finish on the exact
+    // bytes of the uninterrupted run.
+    let cfg = world_cfg(7, 8);
+    for policy in [&FifoWholeRing as &dyn AllocationPolicy, &DeadlineEdf] {
+        let want = serve(&cfg, policy).unwrap().canonical_string();
+        let mut counter = FleetState::new(&cfg, policy).unwrap();
+        let mut total = 0usize;
+        while counter.step_event().unwrap() {
+            total += 1;
+        }
+        assert!(total > 20, "battery config too small: only {total} events");
+        for k in 0..=total {
+            assert_eq!(
+                killed_at(&cfg, policy, k),
+                want,
+                "kill at event {k}/{total} diverged (policy {})",
+                policy.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn world_snapshots_restore_under_preemption_and_admission() {
+    let mut cfg = world_cfg(11, 8);
+    cfg.preemption = true;
+    cfg.admission = AdmissionControl::Feasibility;
+    let want = serve(&cfg, &DeadlineEdf).unwrap().canonical_string();
+    let mut counter = FleetState::new(&cfg, &DeadlineEdf).unwrap();
+    let mut total = 0usize;
+    while counter.step_event().unwrap() {
+        total += 1;
+    }
+    for k in (0..=total).step_by(7) {
+        assert_eq!(killed_at(&cfg, &DeadlineEdf, k), want, "kill at {k}/{total} diverged");
+    }
+    assert_eq!(killed_at(&cfg, &DeadlineEdf, total), want);
+}
+
+#[test]
+fn world_snapshot_rejects_mismatched_configs() {
+    // A snapshot taken with a world cannot restore into a world-less
+    // config (and vice versa): the ledgers would silently desynchronize.
+    let cfg = world_cfg(3, 6);
+    let mut state = FleetState::new(&cfg, &FifoWholeRing).unwrap();
+    for _ in 0..5 {
+        assert!(state.step_event().unwrap());
+    }
+    let text = state.snapshot().unwrap().to_string();
+    let snap = Json::parse(&text).unwrap();
+    let mut worldless = cfg.clone();
+    worldless.world_trace_path = None;
+    assert!(FleetState::resume(&worldless, &FifoWholeRing, &snap).is_err());
+
+    let mut plain = FleetConfig::synthetic(8, 6, 3);
+    plain.mean_interarrival_s = 30.0;
+    let mut state = FleetState::new(&plain, &FifoWholeRing).unwrap();
+    for _ in 0..5 {
+        assert!(state.step_event().unwrap());
+    }
+    let plain_snap = Json::parse(&state.snapshot().unwrap().to_string()).unwrap();
+    let mut worldly = plain.clone();
+    worldly.world_trace_path = Some(fixture_path());
+    assert!(FleetState::resume(&worldly, &FifoWholeRing, &plain_snap).is_err());
+}
+
+// ------------------------------------------------------------- streaming
+
+#[test]
+fn streaming_world_runs_agree_with_the_materialized_report() {
+    // The bounded-memory path shares the event loop: device accounting
+    // (including joined devices and world deaths) matches bitwise.
+    let cfg = world_cfg(5, 12);
+    let report = serve(&cfg, &FifoWholeRing).unwrap();
+    let (agg, _) = serve_streaming(&cfg, &FifoWholeRing).unwrap();
+    assert_eq!(agg.jobs, report.rows.len());
+    assert_eq!(agg.dead_devices, report.dead_devices);
+    assert_eq!(agg.horizon_s.to_bits(), report.horizon_s.to_bits());
+    let busy: f64 = report.pool_device_busy.iter().sum();
+    assert_eq!(agg.pool_busy_s.to_bits(), busy.to_bits());
+    // And replays identically.
+    let (again, _) = serve_streaming(&cfg, &FifoWholeRing).unwrap();
+    assert_eq!(agg.to_json().to_string(), again.to_json().to_string());
+}

@@ -4,6 +4,10 @@
 //! across PRs next to `BENCH_scale.json` (CI runs the smoke profile and
 //! uploads the artifact).
 //!
+//! Every serve row carries a `threads` dimension ({1, 4}); the parallel
+//! run's canonical report (and the streaming aggregates) must reproduce
+//! the sequential run byte for byte before timings are recorded.
+//!
 //! Run: `cargo bench --bench fleet` — or `cargo bench --bench fleet --
 //! --smoke` (also honored via `RINGADA_BENCH_SMOKE=1`) for the quick CI
 //! profile: smaller pool and stream, same JSON schema.
@@ -50,71 +54,92 @@ fn main() {
 
     let policies: [&dyn AllocationPolicy; 4] =
         [&FifoWholeRing, &SmallestRingFirst, &UtilizationAware, &DeadlineEdf];
+    // Each (scenario, policy) row runs at threads ∈ {1, 4}; the threads=4
+    // report must reproduce the threads=1 canonical string byte for byte
+    // (the speedup gate is deterministic — identical results, identical
+    // event counts — so wall clock stays informational).
     let mut rows = Vec::new();
-    for (label, c) in [
+    for (label, base) in [
         ("healthy", &cfg),
         ("faulted", &faulted),
         ("preempting", &preempting),
     ] {
         for policy in policies {
-            let (report, stats) = serve_with_stats(c, policy).expect("fleet run must succeed");
-            let serve_mean_s = {
-                let r = b.bench(&format!("fleet/serve_{label}_{}", policy.name()), || {
-                    black_box(serve(c, policy).unwrap());
-                });
-                r.mean.as_secs_f64()
-            };
-            let hit_rate = if stats.plans > 0 {
-                stats.plan_cache_hits as f64 / stats.plans as f64
-            } else {
-                0.0
-            };
-            println!(
-                "  -> {label}/{}: {} completed, thr {:.1} j/h, util {:.1}%, jain {:.3}, \
-                 {:.0} sim-jobs/s, plan cache {}/{} ({:.0}%)",
-                policy.name(),
-                report.completed(),
-                report.throughput_jobs_per_hour(),
-                100.0 * report.pool_utilization(),
-                report.jain_fairness(),
-                jobs as f64 / serve_mean_s.max(1e-12),
-                stats.plan_cache_hits,
-                stats.plans,
-                100.0 * hit_rate,
-            );
-            rows.push(Json::obj(vec![
-                ("scenario", Json::str(label)),
-                ("policy", Json::str(policy.name())),
-                ("pool", Json::num(pool as f64)),
-                ("jobs", Json::num(jobs as f64)),
-                ("serve_mean_s", Json::num(serve_mean_s)),
-                (
-                    "sim_jobs_per_s",
-                    Json::num(jobs as f64 / serve_mean_s.max(1e-12)),
-                ),
-                ("completed", Json::num(report.completed() as f64)),
-                ("failed", Json::num(report.failed_jobs() as f64)),
-                ("unserved", Json::num(report.unserved() as f64)),
-                (
-                    "throughput_jobs_per_hour",
-                    Json::num(report.throughput_jobs_per_hour()),
-                ),
-                ("mean_jct_s", Json::num(report.mean_jct_s())),
-                ("p95_jct_s", Json::num(report.p95_jct_s())),
-                ("mean_wait_s", Json::num(report.mean_wait_s())),
-                ("pool_utilization", Json::num(report.pool_utilization())),
-                ("jain_fairness", Json::num(report.jain_fairness())),
-                (
-                    "deadline_hit_rate",
-                    Json::num(report.deadline_hit_rate()),
-                ),
-                ("preemptions", Json::num(report.preemptions() as f64)),
-                ("resizes", Json::num(report.resizes() as f64)),
-                ("rejected", Json::num(report.rejected_jobs() as f64)),
-                ("plans", Json::num(stats.plans as f64)),
-                ("plan_cache_hits", Json::num(stats.plan_cache_hits as f64)),
-                ("plan_cache_hit_rate", Json::num(hit_rate)),
-            ]));
+            let mut seq_canon: Option<String> = None;
+            for threads in [1usize, 4] {
+                let mut c = base.clone();
+                c.threads = threads;
+                let c = &c;
+                let (report, stats) = serve_with_stats(c, policy).expect("fleet run must succeed");
+                match &seq_canon {
+                    None => seq_canon = Some(report.canonical_string()),
+                    Some(want) => assert_eq!(
+                        &report.canonical_string(),
+                        want,
+                        "threads={threads} changed {label}/{}",
+                        policy.name()
+                    ),
+                }
+                let serve_mean_s = {
+                    let name = format!("fleet/serve_{label}_{}_t{threads}", policy.name());
+                    let r = b.bench(&name, || {
+                        black_box(serve(c, policy).unwrap());
+                    });
+                    r.mean.as_secs_f64()
+                };
+                let hit_rate = if stats.plans > 0 {
+                    stats.plan_cache_hits as f64 / stats.plans as f64
+                } else {
+                    0.0
+                };
+                println!(
+                    "  -> {label}/{} t{threads}: {} completed, thr {:.1} j/h, util {:.1}%, \
+                     jain {:.3}, {:.0} sim-jobs/s, plan cache {}/{} ({:.0}%)",
+                    policy.name(),
+                    report.completed(),
+                    report.throughput_jobs_per_hour(),
+                    100.0 * report.pool_utilization(),
+                    report.jain_fairness(),
+                    jobs as f64 / serve_mean_s.max(1e-12),
+                    stats.plan_cache_hits,
+                    stats.plans,
+                    100.0 * hit_rate,
+                );
+                rows.push(Json::obj(vec![
+                    ("scenario", Json::str(label)),
+                    ("policy", Json::str(policy.name())),
+                    ("threads", Json::num(threads as f64)),
+                    ("pool", Json::num(pool as f64)),
+                    ("jobs", Json::num(jobs as f64)),
+                    ("serve_mean_s", Json::num(serve_mean_s)),
+                    (
+                        "sim_jobs_per_s",
+                        Json::num(jobs as f64 / serve_mean_s.max(1e-12)),
+                    ),
+                    ("completed", Json::num(report.completed() as f64)),
+                    ("failed", Json::num(report.failed_jobs() as f64)),
+                    ("unserved", Json::num(report.unserved() as f64)),
+                    (
+                        "throughput_jobs_per_hour",
+                        Json::num(report.throughput_jobs_per_hour()),
+                    ),
+                    ("mean_jct_s", Json::num(report.mean_jct_s())),
+                    ("p95_jct_s", Json::num(report.p95_jct_s())),
+                    ("mean_wait_s", Json::num(report.mean_wait_s())),
+                    ("pool_utilization", Json::num(report.pool_utilization())),
+                    ("jain_fairness", Json::num(report.jain_fairness())),
+                    (
+                        "deadline_hit_rate",
+                        Json::num(report.deadline_hit_rate()),
+                    ),
+                    ("preemptions", Json::num(report.preemptions() as f64)),
+                    ("resizes", Json::num(report.resizes() as f64)),
+                    ("rejected", Json::num(report.rejected_jobs() as f64)),
+                    ("plans", Json::num(stats.plans as f64)),
+                    ("plan_cache_hits", Json::num(stats.plan_cache_hits as f64)),
+                    ("plan_cache_hit_rate", Json::num(hit_rate)),
+                ]));
+            }
         }
     }
 
@@ -141,6 +166,18 @@ fn main() {
             let (report, mat_stats) = serve_with_stats(c, policy).expect("fleet run must succeed");
             let (agg, stream_stats) =
                 serve_streaming(c, policy).expect("streaming run must succeed");
+            // Thread-count parity on the streaming path, too: the pooled
+            // run must fold the exact same aggregates.
+            let mut par_c = c.clone();
+            par_c.threads = 4;
+            let (par_agg, _) =
+                serve_streaming(&par_c, policy).expect("parallel streaming run must succeed");
+            assert_eq!(
+                par_agg.to_json().to_string(),
+                agg.to_json().to_string(),
+                "threads=4 changed streaming aggregates on {label}/{}",
+                policy.name()
+            );
             let stream_mean_s = {
                 let r = b.bench(&format!("fleet/stream_{label}_{}", policy.name()), || {
                     black_box(serve_streaming(c, policy).unwrap());

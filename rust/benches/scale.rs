@@ -1,9 +1,11 @@
 //! Scale benches: planner time vs cluster size, heap-simulator throughput
 //! vs the retained greedy-rescan reference, beam/anneal bottleneck
-//! quality vs the exhaustive optimum, and the incremental anneal
-//! evaluator vs the retained full-bisection reference at U up to 4096.
-//! Results are written to `BENCH_scale.json` (CI uploads it as an
-//! artifact) so the perf trajectory accumulates across PRs.
+//! quality vs the exhaustive optimum, the incremental anneal evaluator vs
+//! the retained full-bisection reference at U up to 4096, and the
+//! fork-join planner across a `threads` dimension (parity with the
+//! sequential run gated at every row).  Results are written to
+//! `BENCH_scale.json` (CI uploads it as an artifact) so the perf
+//! trajectory accumulates across PRs.
 //!
 //! The `incremental` rows double as a differential test at scales the
 //! unit batteries cannot afford: both evaluator paths must produce
@@ -261,6 +263,65 @@ fn main() {
         }
     }
 
+    // ---- threads dimension: the fork-join planner at 1/2/4/8 workers.
+    // Parity is the gate at every row — plan bytes, accepted-move
+    // trajectory, and evaluator-call counts must all match the threads=1
+    // run exactly (counts are thread-count independent by construction,
+    // so the speedup gate needs no wall-clock threshold; timings are
+    // informational).
+    let t_u = if smoke { 64 } else { 256 };
+    let mut thread_rows = Vec::new();
+    {
+        let m = meta(2 * t_u);
+        let cl = ClusterConfig::synthetic(t_u, 23, 0.6).unwrap();
+        let lut = CostLut::analytic(&m, 5.0);
+        let planner = Planner::new(&m, &cl, costs(&lut, &m));
+        let devices: Vec<usize> = (0..t_u).collect();
+        let mut baseline = None;
+        for threads in [1usize, 2, 4, 8] {
+            let p = SearchParams { restarts: 4, threads, ..params };
+            let t0 = std::time::Instant::now();
+            let (plan, st) = planner
+                .plan_beam_anneal_traced(&devices, &p)
+                .expect("synthetic cluster must be plannable");
+            let wall_s = t0.elapsed().as_secs_f64();
+            match &baseline {
+                None => baseline = Some((plan.clone(), st.clone())),
+                Some((bp, bs)) => {
+                    assert_eq!(
+                        plan.assignment,
+                        bp.assignment,
+                        "threads={threads} changed the plan"
+                    );
+                    assert_eq!(plan.bottleneck_s.to_bits(), bp.bottleneck_s.to_bits());
+                    assert_eq!(
+                        st.accepted,
+                        bs.accepted,
+                        "threads={threads} changed the accepted-move trajectory"
+                    );
+                    assert_eq!(
+                        (st.anneal_moves, st.full_evals, st.pruned_moves, st.anneal_sweeps),
+                        (bs.anneal_moves, bs.full_evals, bs.pruned_moves, bs.anneal_sweeps),
+                        "threads={threads} changed the evaluator-call counts"
+                    );
+                }
+            }
+            println!(
+                "  -> threads={threads}: u={t_u}, 4 restarts, {} full evals, plan {wall_s:.3}s \
+                 (parity vs threads=1 asserted)",
+                st.full_evals,
+            );
+            thread_rows.push(Json::obj(vec![
+                ("threads", Json::num(threads as f64)),
+                ("u", Json::num(t_u as f64)),
+                ("restarts", Json::num(4.0)),
+                ("plan_s", Json::num(wall_s)),
+                ("full_evals", Json::num(st.full_evals as f64)),
+                ("anneal_moves", Json::num(st.anneal_moves as f64)),
+            ]));
+        }
+    }
+
     let out = Json::obj(vec![
         ("bench", Json::str("scale")),
         ("smoke", Json::Bool(smoke)),
@@ -268,6 +329,7 @@ fn main() {
         ("sim", Json::Arr(sim_rows)),
         ("quality", Json::Arr(quality_rows)),
         ("incremental", Json::Arr(incr_rows)),
+        ("threads", Json::Arr(thread_rows)),
     ]);
     std::fs::write("BENCH_scale.json", out.pretty()).expect("write BENCH_scale.json");
     println!("wrote BENCH_scale.json");

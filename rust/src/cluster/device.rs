@@ -7,6 +7,7 @@
 
 use std::collections::{BTreeMap, VecDeque};
 use std::path::PathBuf;
+// lint: allow(parallel-primitives, device actor mailbox; each receiver drains one ordered stream)
 use std::sync::mpsc::{Receiver, Sender};
 use std::thread::JoinHandle;
 

@@ -3,6 +3,7 @@
 //! batch id and the initiator position so the ring can have dynamic start
 //! and end points (paper §III.A).
 
+// lint: allow(parallel-primitives, protocol types only; sends are sequenced by the ring)
 use std::sync::mpsc::Sender;
 
 use crate::runtime::HostTensor;

@@ -18,6 +18,7 @@ pub mod messages;
 pub use device::{spawn_device, DeviceHandle};
 pub use messages::{Command, Event};
 
+// lint: allow(parallel-primitives, D2D links between device actors; ring protocol orders receives)
 use std::sync::mpsc::{channel, Receiver};
 
 use crate::coordinator::LayerAssignment;

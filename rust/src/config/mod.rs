@@ -562,6 +562,12 @@ pub struct FleetConfig {
     /// instead (mutually exclusive with `world`; see
     /// [`FleetConfig::resolve_world`]).
     pub world_trace_path: Option<String>,
+    /// Fork-join worker count for the serve loop and its ring planning
+    /// (see [`crate::exec`]).  `1` (the default, and the only value legacy
+    /// configs can express) is the fully sequential code path; the
+    /// `RINGADA_THREADS` env var overrides any value set here.  Thread
+    /// count never changes serve results, only wall clock.
+    pub threads: usize,
 }
 
 impl FleetConfig {
@@ -585,6 +591,7 @@ impl FleetConfig {
             trace_path: None,
             world: None,
             world_trace_path: None,
+            threads: 1,
         }
     }
 
@@ -642,6 +649,11 @@ impl FleetConfig {
         }
         if self.local_iters == 0 {
             return Err(Error::Config("local_iters must be > 0".into()));
+        }
+        if self.threads == 0 {
+            return Err(Error::Config(
+                "threads must be >= 1 (use 1 for sequential)".into(),
+            ));
         }
         if let Some(sc) = &self.scenario {
             sc.validate(self.pool.len())?;
@@ -721,6 +733,24 @@ impl FleetConfig {
                 Some(p) => Some(p.as_str()?.to_string()),
                 None => None,
             },
+            // Optional like the serving knobs: absent means sequential.
+            // `as_usize` already rejects negative, fractional, and
+            // oversized numbers; zero gets the field-contextual error
+            // here rather than a late one from validate().
+            threads: match v.get("threads") {
+                Some(t) => {
+                    let n = t
+                        .as_usize()
+                        .map_err(|e| Error::Config(format!("threads: {e}")))?;
+                    if n == 0 {
+                        return Err(Error::Config(
+                            "threads must be >= 1 (use 1 for sequential)".into(),
+                        ));
+                    }
+                    n
+                }
+                None => 1,
+            },
         })
     }
 
@@ -754,6 +784,11 @@ impl FleetConfig {
         }
         if let Some(path) = &self.world_trace_path {
             pairs.push(("world_trace_path", Json::str(path)));
+        }
+        // Emitted only when non-default so legacy round-trips stay
+        // byte-identical (threads is a runtime knob, not trace state).
+        if self.threads != 1 {
+            pairs.push(("threads", Json::num(self.threads as f64)));
         }
         Json::obj(pairs)
     }

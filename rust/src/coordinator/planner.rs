@@ -95,7 +95,7 @@ use crate::coordinator::ring::LayerAssignment;
 use crate::error::{Error, Result};
 use crate::model::{MemoryModel, ModelMeta};
 use crate::config::Scheme;
-use crate::runtime::rng::Rng;
+use crate::runtime::rng::{mix, Rng};
 
 /// Largest cluster the exhaustive order search is allowed to chew on
 /// (8! = 40 320 permutations); beyond this [`Planner::plan_for_devices`]
@@ -151,6 +151,18 @@ pub struct SearchParams {
     /// produce bitwise-identical plans and accepted-move sequences (the
     /// parity battery pins it), differing only in evaluator-call counts.
     pub incremental: bool,
+    /// Independent anneal restarts, each with its own RNG stream forked
+    /// via [`mix`] (restart 0 keeps `seed` verbatim, so `restarts = 1`
+    /// reproduces the legacy single-chain trajectory bit for bit).
+    /// Restart results merge by a deterministic `(score, restart-index)`
+    /// argmin; under `max_evals` the anneal budget is split evenly across
+    /// restarts.  `0` is treated as `1`.
+    pub restarts: usize,
+    /// Fork-join worker count for candidate scoring and the restart fan
+    /// -out (see [`crate::exec`]); `1` = fully sequential code path, and
+    /// the `RINGADA_THREADS` env var overrides any value set here.
+    /// Thread count never affects plan bytes, only wall clock.
+    pub threads: usize,
 }
 
 impl Default for SearchParams {
@@ -161,6 +173,8 @@ impl Default for SearchParams {
             max_evals: 0,
             seed: 0x52_49_4E_47,
             incremental: true,
+            restarts: 1,
+            threads: 1,
         }
     }
 }
@@ -584,14 +598,9 @@ impl<'a> Planner<'a> {
                 "{n} devices but only {layers} blocks — ring cannot fill every position"
             )));
         }
+        let threads = crate::exec::resolve_threads(params.threads.max(1))?;
+        let restarts = params.restarts.max(1);
         let mut stats = SearchStats::default();
-        let eval = |order: &[usize], stats: &mut SearchStats| -> f64 {
-            let (a, t) = self.order_coeffs(order);
-            stats.candidate_evals += 1;
-            min_bottleneck_partition(&a, &t, layers, &mut stats.candidate_sweeps)
-                .map(|(_, v)| v)
-                .unwrap_or(f64::INFINITY)
-        };
 
         // Stage 0: deterministic seed orders — speed-descending (ties by
         // id, total order so NaN-free by validation) and the id order.
@@ -607,14 +616,32 @@ impl<'a> Planner<'a> {
         // a pruned incremental delta-eval included, so budgeted searches
         // visit the same move sequence under either evaluator (see module
         // docs).  Capping the anneal at the remaining budget bounds total
-        // search cost deterministically.
+        // search cost deterministically; with restarts the remainder is
+        // split evenly so total anneal proposals never exceed the budget.
         let scored = 2 + beamed.len();
         let anneal_iters = if params.max_evals == 0 {
             params.anneal_iters
         } else {
-            params.anneal_iters.min(params.max_evals.saturating_sub(scored))
+            params.anneal_iters.min(params.max_evals.saturating_sub(scored) / restarts)
         };
         let budgeted = SearchParams { anneal_iters, ..*params };
+
+        // Candidate scoring fans out per candidate on the fork-join pool
+        // (scores are independent pure functions of the order); results
+        // come back index-ordered, so the fold below accumulates stats
+        // and dedups candidates exactly as the sequential loop did.
+        let mut cand_orders: Vec<Vec<usize>> = Vec::with_capacity(scored);
+        cand_orders.push(speed_order);
+        cand_orders.push(id_order);
+        cand_orders.extend(beamed);
+        let cand_scores = crate::exec::par_map(threads, &cand_orders, |_, order| {
+            let (a, t) = self.order_coeffs(order);
+            let mut sweeps = 0usize;
+            let score = min_bottleneck_partition(&a, &t, layers, &mut sweeps)
+                .map(|(_, v)| v)
+                .unwrap_or(f64::INFINITY);
+            (score, sweeps)
+        });
 
         // Candidate pool: scored, deduped, deterministic order.
         let mut candidates: Vec<(f64, Vec<usize>)> = Vec::new();
@@ -623,25 +650,54 @@ impl<'a> Planner<'a> {
                 cands.push((score, order));
             }
         };
-        let s = eval(&speed_order, &mut stats);
-        push(&mut candidates, speed_order.clone(), s);
-        let s = eval(&id_order, &mut stats);
-        push(&mut candidates, id_order.clone(), s);
-        for order in beamed {
-            let s = eval(&order, &mut stats);
-            push(&mut candidates, order, s);
+        for (order, (score, sweeps)) in cand_orders.into_iter().zip(cand_scores) {
+            stats.candidate_evals += 1;
+            stats.candidate_sweeps += sweeps;
+            push(&mut candidates, order, score);
         }
         candidates.sort_by(|x, y| x.0.total_cmp(&y.0).then(x.1.cmp(&y.1)));
 
-        // Stage 2: simulated-annealing refinement from the best candidate.
+        // Stage 2: simulated-annealing refinement from the best candidate,
+        // as `restarts` independent chains.  Chain 0 uses `params.seed`
+        // verbatim (the legacy trajectory); chain k forks its stream via
+        // `mix(seed, k)`.  Chains run on the pool, then merge in restart
+        // order: counts summed, accepted-move trajectories concatenated,
+        // and the winning order picked by `(score, restart-index)` argmin
+        // — all independent of the thread count.
         if let Some((start_score, start)) = candidates.first().cloned() {
-            let (best_order, best_score) = if params.incremental {
-                self.anneal_incremental(layers, start, start_score, &budgeted, &mut stats)
-            } else {
-                self.anneal_reference(layers, start, start_score, &budgeted, &mut stats)
-            };
-            push(&mut candidates, best_order, best_score);
-            candidates.sort_by(|x, y| x.0.total_cmp(&y.0).then(x.1.cmp(&y.1)));
+            let seeds: Vec<u64> = (0..restarts)
+                .map(|k| if k == 0 { params.seed } else { mix(params.seed, k as u64) })
+                .collect();
+            let runs = crate::exec::par_map(threads, &seeds, |_, &seed| {
+                let mut local = SearchStats::default();
+                let p = SearchParams { seed, ..budgeted };
+                let (order, score) = if params.incremental {
+                    self.anneal_incremental(layers, start.clone(), start_score, &p, &mut local)
+                } else {
+                    self.anneal_reference(layers, start.clone(), start_score, &p, &mut local)
+                };
+                (order, score, local)
+            });
+            let mut winner: Option<(f64, usize)> = None;
+            for (k, (_, score, local)) in runs.iter().enumerate() {
+                stats.anneal_moves += local.anneal_moves;
+                stats.full_evals += local.full_evals;
+                stats.pruned_moves += local.pruned_moves;
+                stats.anneal_sweeps += local.anneal_sweeps;
+                stats.accepted.extend(local.accepted.iter().copied());
+                let better = match winner {
+                    None => true,
+                    Some((best, _)) => score.total_cmp(&best) == std::cmp::Ordering::Less,
+                };
+                if better {
+                    winner = Some((*score, k));
+                }
+            }
+            if let Some((best_score, k)) = winner {
+                let (best_order, _, _) = runs.into_iter().nth(k).unwrap_or_default();
+                push(&mut candidates, best_order, best_score);
+                candidates.sort_by(|x, y| x.0.total_cmp(&y.0).then(x.1.cmp(&y.1)));
+            }
         }
 
         // Re-plan the best candidates through the exact DP + memory check;

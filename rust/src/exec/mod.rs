@@ -1,0 +1,231 @@
+//! Deterministic fork-join executor (ISSUE 9, ROADMAP item 1).
+//!
+//! A zero-dependency scoped worker pool whose one contract is: **thread
+//! count never changes results, only wall clock**.  Both entry points —
+//! [`par_map`] over borrowed slices and [`par_map_owned`] over owned
+//! items — collect results *index-ordered*, so a parallel map is
+//! byte-identical to the sequential `iter().map()` it replaces.  With
+//! `threads <= 1` (or a single item) the map short-circuits to the
+//! exact sequential code path: same closure, same order, no threads
+//! spawned at all.
+//!
+//! ## Determinism argument
+//!
+//! * Workers never share mutable state: each produces a private
+//!   `(index, result)` vector; the fork-join parent concatenates the
+//!   vectors and sorts by index.  The merged output is a pure function
+//!   of `(items, f)` — scheduling order is unobservable.
+//! * Work distribution itself may race (an atomic claim counter in
+//!   [`par_map`], pre-computed strides in [`par_map_owned`]), but it
+//!   only decides *which worker* computes an index, never *what* is
+//!   computed for it — closures must be pure functions of
+//!   `(index, item)`, which the planner/fleet call sites are.
+//! * A panicking worker aborts the join and the panic is resumed on the
+//!   caller's thread, exactly like the sequential path.
+//!
+//! The rest of the tree is kept honest by `ringada-lint` rule R6
+//! (`parallel-primitives`): raw `thread::spawn`, `mpsc` channels, and
+//! `Mutex`-accumulated results are forbidden outside this module, so
+//! every parallel code path funnels through the ordered fork-join core.
+//!
+//! ## Thread-count resolution
+//!
+//! Call sites carry a validated `threads` knob (config key or
+//! `SearchParams` field); [`resolve_threads`] applies the
+//! `RINGADA_THREADS` environment override on top.  Precedence:
+//! env var (when set and valid) > config value.  Zero is rejected in
+//! both positions — "sequential" is spelled `threads = 1`.
+
+use crate::error::{Error, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Environment override for the worker count; takes precedence over any
+/// configured `threads` value when set.
+pub const THREADS_ENV: &str = "RINGADA_THREADS";
+
+/// Resolve the effective worker count from a validated config value and
+/// the [`THREADS_ENV`] override.
+///
+/// * `requested == 0` is a config error ("sequential" is `1`);
+/// * a set-but-invalid env var (empty, non-integer, or `0`) is an
+///   error — a silently ignored override is worse than a loud one;
+/// * an unset env var leaves the configured value in force.
+pub fn resolve_threads(requested: usize) -> Result<usize> {
+    if requested == 0 {
+        return Err(Error::Config("threads must be >= 1 (use 1 for sequential)".into()));
+    }
+    match std::env::var(THREADS_ENV) {
+        Ok(raw) => {
+            let parsed = raw.trim().parse::<usize>().map_err(|_| {
+                Error::Config(format!("{THREADS_ENV} must be a positive integer, got {raw:?}"))
+            })?;
+            if parsed == 0 {
+                return Err(Error::Config(format!(
+                    "{THREADS_ENV} must be >= 1 (use 1 for sequential), got 0"
+                )));
+            }
+            Ok(parsed)
+        }
+        Err(std::env::VarError::NotPresent) => Ok(requested),
+        Err(std::env::VarError::NotUnicode(_)) => {
+            Err(Error::Config(format!("{THREADS_ENV} is not valid unicode")))
+        }
+    }
+}
+
+/// Map `f` over `items` on up to `threads` scoped workers, returning
+/// results in item order.
+///
+/// `f` receives `(index, &item)` and must be a pure function of that
+/// pair for the determinism contract to hold.  `threads <= 1` or
+/// `items.len() <= 1` short-circuits to the sequential in-order loop.
+/// Work is distributed by an atomic claim counter (idle workers steal
+/// the next unclaimed index), so uneven item costs balance without any
+/// effect on the merged output.
+pub fn par_map<T, R, F>(threads: usize, items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    if threads <= 1 || items.len() <= 1 {
+        return items.iter().enumerate().map(|(i, it)| f(i, it)).collect();
+    }
+    let workers = threads.min(items.len());
+    let next = AtomicUsize::new(0);
+    let mut tagged: Vec<(usize, R)> = Vec::with_capacity(items.len());
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            handles.push(scope.spawn(|| {
+                let mut local: Vec<(usize, R)> = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= items.len() {
+                        break;
+                    }
+                    local.push((i, f(i, &items[i])));
+                }
+                local
+            }));
+        }
+        for h in handles {
+            match h.join() {
+                Ok(local) => tagged.extend(local),
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
+        }
+    });
+    tagged.sort_by_key(|e| e.0);
+    tagged.into_iter().map(|e| e.1).collect()
+}
+
+/// Map `f` over owned `items` on up to `threads` scoped workers,
+/// returning results in item order.
+///
+/// The owned variant for non-`Sync` items (e.g. boxed job executors
+/// moved out of the fleet run for a step batch): items are
+/// pre-partitioned into per-worker stripes (`index % workers`) before
+/// any thread spawns, so distribution is deterministic by construction.
+/// `f` receives `(index, item)` by value.  `threads <= 1` or a single
+/// item short-circuits to the sequential in-order loop.
+pub fn par_map_owned<T, R, F>(threads: usize, items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+{
+    if threads <= 1 || items.len() <= 1 {
+        return items.into_iter().enumerate().map(|(i, it)| f(i, it)).collect();
+    }
+    let workers = threads.min(items.len());
+    let mut lanes: Vec<Vec<(usize, T)>> = (0..workers).map(|_| Vec::new()).collect();
+    for (i, item) in items.into_iter().enumerate() {
+        lanes[i % workers].push((i, item));
+    }
+    let mut tagged: Vec<(usize, R)> = Vec::new();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(workers);
+        for lane in lanes {
+            let fr = &f;
+            handles.push(scope.spawn(move || {
+                lane.into_iter().map(|(i, item)| (i, fr(i, item))).collect::<Vec<(usize, R)>>()
+            }));
+        }
+        for h in handles {
+            match h.join() {
+                Ok(local) => tagged.extend(local),
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
+        }
+    });
+    tagged.sort_by_key(|e| e.0);
+    tagged.into_iter().map(|e| e.1).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_matches_sequential_at_every_thread_count() {
+        let items: Vec<u64> = (0..97).collect();
+        let want: Vec<u64> = items.iter().enumerate().map(|(i, x)| x * 3 + i as u64).collect();
+        for threads in [1, 2, 3, 4, 8, 128] {
+            let got = par_map(threads, &items, |i, x| x * 3 + i as u64);
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn par_map_owned_matches_sequential_at_every_thread_count() {
+        for threads in [1, 2, 3, 4, 8, 128] {
+            let items: Vec<String> = (0..53).map(|i| format!("job{i}")).collect();
+            let want: Vec<String> =
+                items.iter().enumerate().map(|(i, s)| format!("{i}:{s}")).collect();
+            let got = par_map_owned(threads, items, |i, s| format!("{i}:{s}"));
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn empty_and_singleton_inputs() {
+        let empty: Vec<u32> = Vec::new();
+        assert!(par_map(4, &empty, |_, x| *x).is_empty());
+        assert!(par_map_owned(4, Vec::<u32>::new(), |_, x| x).is_empty());
+        assert_eq!(par_map(4, &[7u32], |i, x| *x + i as u32), vec![7]);
+        assert_eq!(par_map_owned(4, vec![7u32], |i, x| x + i as u32), vec![7]);
+    }
+
+    #[test]
+    fn uneven_work_still_merges_in_order() {
+        // Heavier items early: stealing reorders execution, never output.
+        let items: Vec<usize> = (0..40).collect();
+        let got = par_map(4, &items, |_, &x| {
+            let mut acc = 0u64;
+            for k in 0..(40 - x) * 1000 {
+                acc = acc.wrapping_mul(6364136223846793005).wrapping_add(k as u64);
+            }
+            ((x as u64) << 32) | (acc & 1)
+        });
+        let want = items
+            .iter()
+            .map(|&x| {
+                let mut acc = 0u64;
+                for k in 0..(40 - x) * 1000 {
+                    acc = acc.wrapping_mul(6364136223846793005).wrapping_add(k as u64);
+                }
+                ((x as u64) << 32) | (acc & 1)
+            })
+            .collect::<Vec<_>>();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn resolve_threads_rejects_zero_request() {
+        // Env-var cases are covered in `tests/exec_threads_env.rs`, whose
+        // dedicated binary serializes the mutation behind one lock; here
+        // only the pure-argument path.
+        assert!(resolve_threads(0).is_err());
+    }
+}

@@ -134,11 +134,15 @@ const FLEET_EXHAUSTIVE_MAX_DEVICES: usize = 4;
 /// Search profile for fleet (re-)planning: small beam plus the
 /// [`SearchParams::max_evals`] budget knob — deterministic and cheap
 /// enough to run at every admission, resume, and dropout re-plan.
-fn fleet_search() -> SearchParams {
+/// `threads` sizes the planner's fork-join pool ([`FleetConfig::threads`]
+/// resolved through [`crate::exec::resolve_threads`]); plans are
+/// bit-identical at every thread count, so cached entries stay valid.
+fn fleet_search(threads: usize) -> SearchParams {
     SearchParams {
         beam_width: 4,
         anneal_iters: 600,
         max_evals: 800,
+        threads,
         ..SearchParams::default()
     }
 }
@@ -273,11 +277,11 @@ fn event_chronological(a: &Event, b: &Event) -> Ordering {
 
 /// Plan a ring over `devices`: exhaustive for tiny rings, budgeted beam +
 /// anneal beyond (see [`fleet_search`]).
-fn plan_ring(planner: &Planner<'_>, devices: &[usize]) -> Result<LayerAssignment> {
+fn plan_ring(planner: &Planner<'_>, devices: &[usize], threads: usize) -> Result<LayerAssignment> {
     let plan = if devices.len() <= FLEET_EXHAUSTIVE_MAX_DEVICES {
         planner.plan_exhaustive(devices)?
     } else {
-        planner.plan_beam_anneal_with(devices, &fleet_search())?
+        planner.plan_beam_anneal_with(devices, &fleet_search(threads))?
     };
     Ok(plan.assignment)
 }
@@ -498,6 +502,7 @@ fn plan_ring_cached(
     devices: &[usize],
     cache: &mut PlanCache,
     pool_len: usize,
+    threads: usize,
 ) -> Result<LayerAssignment> {
     let key = PlanKey::new(planner, devices);
     if let Some(cached) = cache.map.get(&key) {
@@ -525,7 +530,7 @@ fn plan_ring_cached(
         };
     }
     cache.misses += 1;
-    match plan_ring(planner, devices) {
+    match plan_ring(planner, devices, threads) {
         Ok(assignment) => {
             let order_pos: Vec<usize> = assignment
                 .order
@@ -546,6 +551,15 @@ fn plan_ring_cached(
             Err(e)
         }
     }
+}
+
+/// The job-local result of [`JobExec::step_compute`], carried across the
+/// event-merge barrier into [`JobExec::step_finish`]: the round's
+/// per-device busy seconds (for the shared world energy ledger) and
+/// whether the scripted-dropout drain left the ring needing a re-plan.
+struct StepWork {
+    round_busy: Vec<f64>,
+    need_replan: bool,
 }
 
 /// What one round step did to the job (see [`JobExec::step`]).
@@ -629,6 +643,7 @@ impl JobExec {
         pool: &ClusterConfig,
         planning_pool: Option<&ClusterConfig>,
         dropouts: &[(f64, usize)],
+        threads: usize,
     ) -> Result<Option<JobExec>> {
         let meta = spec.model_meta();
         let lut = CostLut::analytic(&meta, LUT_GFLOPS);
@@ -653,7 +668,7 @@ impl JobExec {
         let mut alive: Vec<usize> = devices.to_vec();
         alive.sort_unstable();
 
-        let assignment = match plan_ring_cached(&planner, &alive, cache, pool.len()) {
+        let assignment = match plan_ring_cached(&planner, &alive, cache, pool.len(), threads) {
             Ok(a) => a,
             Err(_) => return Ok(None),
         };
@@ -705,13 +720,29 @@ impl JobExec {
     /// `world.newly_exhausted` for the fleet to mark dead pool-wide).
     /// Re-plans search under the memory-pressured pool view when a
     /// pressure window is active at the boundary time.
+    ///
+    /// Split into [`JobExec::step_compute`] (job-local, runs on the
+    /// fork-join pool for same-timestamp step batches) and
+    /// [`JobExec::step_finish`] (shared-state, always applied in heap pop
+    /// order) — this wrapper is their sequential composition.
     fn step(
         &mut self,
         pool: &ClusterConfig,
         spec: &JobSpec,
         cache: &mut PlanCache,
-        mut world: Option<&mut WorldRt>,
+        world: Option<&mut WorldRt>,
+        threads: usize,
     ) -> Result<StepOutcome> {
+        let work = self.step_compute(spec)?;
+        self.step_finish(pool, spec, cache, world, work, threads)
+    }
+
+    /// The job-local half of one round: chunk build, simulation, busy
+    /// ledger, and the scripted-dropout drain.  Touches nothing outside
+    /// `self`, so same-timestamp steps of independent jobs can run
+    /// concurrently — determinism needs no ordering here because every
+    /// read and write is this job's own state.
+    fn step_compute(&mut self, spec: &JobSpec) -> Result<StepWork> {
         let round = self.rounds_done;
         let rp = self.coordinator.round_plan(round)?;
         for turn in 0..self.segment_width {
@@ -731,11 +762,6 @@ impl JobExec {
         for (d, b) in report.device_busy.iter().enumerate() {
             self.busy[d] += b;
         }
-        if let Some(w) = world.as_deref_mut() {
-            for (d, b) in report.device_busy.iter().enumerate() {
-                w.active_s[d] += b;
-            }
-        }
         self.rounds_done += 1;
         // Fail-stops detected at this round boundary.  `<=` keeps a
         // dropout landing *exactly* on the final boundary inside the job:
@@ -748,6 +774,28 @@ impl JobExec {
             self.alive.retain(|&x| x != d);
             self.dropped.push(d);
             need_replan = true;
+        }
+        Ok(StepWork { round_busy: report.device_busy, need_replan })
+    }
+
+    /// The shared-state half of one round: world energy ledger + sweep,
+    /// completion, and re-planning through the shared [`PlanCache`].
+    /// Always executed in heap pop order (the event-merge barrier), so
+    /// every shared mutation happens exactly as in a sequential run.
+    fn step_finish(
+        &mut self,
+        pool: &ClusterConfig,
+        spec: &JobSpec,
+        cache: &mut PlanCache,
+        mut world: Option<&mut WorldRt>,
+        work: StepWork,
+        threads: usize,
+    ) -> Result<StepOutcome> {
+        let StepWork { round_busy, mut need_replan } = work;
+        if let Some(w) = world.as_deref_mut() {
+            for (d, b) in round_busy.iter().enumerate() {
+                w.active_s[d] += b;
+            }
         }
         // Energy exhaustion, swept after scripted drains so a device
         // killed by both in one round is recorded dropped exactly once
@@ -785,7 +833,7 @@ impl JobExec {
             let eff =
                 world.as_ref().and_then(|w| w.cw.effective_pool_if_pressured(self.sim.now));
             let planner = Planner::new(&self.meta, eff.as_ref().unwrap_or(pool), self.costs());
-            match plan_ring_cached(&planner, &self.alive, cache, pool.len()) {
+            match plan_ring_cached(&planner, &self.alive, cache, pool.len(), threads) {
                 Ok(a) => {
                     self.coordinator = Coordinator::with_assignment_for_cluster(
                         a,
@@ -819,12 +867,13 @@ impl JobExec {
         pool: &ClusterConfig,
         planning_pool: Option<&ClusterConfig>,
         dropouts: &[(f64, usize)],
+        threads: usize,
     ) -> Result<bool> {
         debug_assert!(self.paused, "resume on a running job");
         let mut alive: Vec<usize> = devices.to_vec();
         alive.sort_unstable();
         let planner = Planner::new(&self.meta, planning_pool.unwrap_or(pool), self.costs());
-        let assignment = match plan_ring_cached(&planner, &alive, cache, pool.len()) {
+        let assignment = match plan_ring_cached(&planner, &alive, cache, pool.len(), threads) {
             Ok(a) => a,
             Err(_) => return Ok(false),
         };
@@ -1238,6 +1287,11 @@ struct FleetRun<'a> {
     peak_resident_rows: usize,
     pool_busy: Vec<f64>,
     last_done: f64,
+    /// Resolved fork-join worker count ([`crate::exec::resolve_threads`]
+    /// over `cfg.threads`).  A runtime knob, never serialized into
+    /// snapshots: thread count must not change results, so restored runs
+    /// re-resolve it from their own config/environment.
+    threads: usize,
 }
 
 impl<'a> FleetRun<'a> {
@@ -1295,6 +1349,7 @@ impl<'a> FleetRun<'a> {
             peak_resident_rows: 0,
             pool_busy: vec![0.0f64; n],
             last_done: 0.0,
+            threads: crate::exec::resolve_threads(cfg.threads)?,
         };
         run.pull_next_arrival()?;
         Ok(run)
@@ -1475,8 +1530,32 @@ impl<'a> FleetRun<'a> {
             self.waiting.sort_unstable();
             return Ok(true);
         }
+        let work = exec.step_compute(&self.specs[id])?;
+        self.finish_step(id, work)
+    }
+
+    /// The shared-state tail of one round step: world ledger + energy
+    /// sweep, re-planning, heap push, and pool bookkeeping.  Split from
+    /// [`FleetRun::handle_step`] so a same-timestamp step *batch* can run
+    /// every member's [`JobExec::step_compute`] on the fork-join pool and
+    /// then apply these finishes strictly in heap pop order — the
+    /// event-merge barrier that keeps shared mutations sequential.
+    fn finish_step(&mut self, id: usize, work: StepWork) -> Result<bool> {
+        let threads = self.threads;
+        let Some(exec) = self.execs.get_mut(id).and_then(|e| e.as_mut()) else {
+            return Err(Error::Schedule(format!(
+                "step event for job {id} with no execution state"
+            )));
+        };
         let spec = &self.specs[id];
-        let outcome = exec.step(&self.pool, spec, &mut self.plan_cache, self.world.as_mut())?;
+        let outcome = exec.step_finish(
+            &self.pool,
+            spec,
+            &mut self.plan_cache,
+            self.world.as_mut(),
+            work,
+            threads,
+        )?;
         let next = Event { t: exec.sim.now, kind: EventKind::Step(id) };
         for &d in &exec.dropped {
             self.detected[d] = true;
@@ -1585,6 +1664,7 @@ impl<'a> FleetRun<'a> {
                         &self.pool,
                         eff.as_ref(),
                         &self.dropouts,
+                        self.threads,
                     )?
                 };
                 if resumed {
@@ -1613,6 +1693,7 @@ impl<'a> FleetRun<'a> {
                     &self.pool,
                     eff.as_ref(),
                     &self.dropouts,
+                    self.threads,
                 )? {
                     Some(exec) => {
                         self.execs[a.job] = Some(Box::new(exec));
@@ -1897,6 +1978,112 @@ impl<'a> FleetRun<'a> {
         }
         #[cfg(debug_assertions)]
         self.check_conservation();
+        Ok(())
+    }
+
+    /// True when `ev` is a plain round step whose compute half touches
+    /// only job-local state: a running (non-pausing) job with no world
+    /// configured.  Only such events join a same-timestamp step batch —
+    /// everything else (pool mutations, world ledgers, pauses) goes
+    /// through [`FleetRun::dispatch`] one event at a time.
+    fn batchable(&self, ev: &Event) -> bool {
+        let EventKind::Step(id) = ev.kind else {
+            return false;
+        };
+        if self.world.is_some() {
+            return false;
+        }
+        match self.execs.get(id).and_then(|e| e.as_ref()) {
+            Some(exec) => !(self.cfg.preemption && exec.preempt_pending),
+            None => false,
+        }
+    }
+
+    /// Dispatch `ev` plus every immediately following same-timestamp
+    /// batchable step as one fork-join batch; everything else falls back
+    /// to the sequential [`FleetRun::dispatch`].
+    ///
+    /// Batching is **always on** (including `threads = 1`, where the
+    /// batch computes sequentially in the same order), so batch
+    /// boundaries — and therefore event counts and snapshot points — are
+    /// independent of the thread count.  Correctness of the fan-out:
+    ///
+    /// * same-timestamp `Step` events are contiguous in pop order
+    ///   (`EventKind::rank` sorts steps together at equal times, job id
+    ///   breaks ties), so the batch is exactly the run the sequential
+    ///   loop would pop back to back;
+    /// * each member's [`JobExec::step_compute`] reads and writes only
+    ///   that job's own state, so computing members concurrently cannot
+    ///   observe ordering;
+    /// * every round has strictly positive cost, so a member's finish
+    ///   pushes its next event strictly later than the batch time —
+    ///   no member can inject a new event *into* the batch;
+    /// * finishes ([`FleetRun::finish_step`]: shared plan cache, heap,
+    ///   row/pool bookkeeping) are applied strictly in pop order, the
+    ///   event-merge barrier that makes every shared mutation sequential.
+    fn dispatch_from(&mut self, ev: Event) -> Result<()> {
+        if !self.batchable(&ev) {
+            return self.dispatch(ev);
+        }
+        let EventKind::Step(first) = ev.kind else {
+            return self.dispatch(ev);
+        };
+        let mut ids = vec![first];
+        while let Some(&top) = self.heap.peek() {
+            if top.t.to_bits() != ev.t.to_bits() || !self.batchable(&top) {
+                break;
+            }
+            let Some(popped) = self.heap.pop() else {
+                break;
+            };
+            if let EventKind::Step(id) = popped.kind {
+                ids.push(id);
+            }
+        }
+        if ids.len() == 1 {
+            return self.dispatch(ev);
+        }
+        self.dispatch_step_batch(ev.t, ids)
+    }
+
+    /// Run the compute half of every batch member on the fork-join pool,
+    /// then finish each member in pop order (see
+    /// [`FleetRun::dispatch_from`] for the correctness argument).
+    fn dispatch_step_batch(&mut self, now: f64, ids: Vec<usize>) -> Result<()> {
+        let mut members: Vec<(usize, Box<JobExec>)> = Vec::with_capacity(ids.len());
+        for id in ids {
+            let Some(exec) = self.execs.get_mut(id).and_then(|e| e.take()) else {
+                return Err(Error::Schedule(format!(
+                    "step event for job {id} with no execution state"
+                )));
+            };
+            debug_assert!(!exec.paused, "step event for a paused job");
+            members.push((id, exec));
+        }
+        let specs = &self.specs;
+        let computed = crate::exec::par_map_owned(self.threads, members, |_, (id, mut exec)| {
+            let work = exec.step_compute(&specs[id]);
+            (id, exec, work)
+        });
+        // Re-home every machine before finishing (or erroring): a compute
+        // failure must not leave sibling members detached from the run.
+        let mut works: Vec<(usize, Result<StepWork>)> = Vec::with_capacity(computed.len());
+        for (id, exec, work) in computed {
+            self.execs[id] = Some(exec);
+            works.push((id, work));
+        }
+        for (id, work) in works {
+            let pool_changed = self.finish_step(id, work?)?;
+            // Batch guards exclude both pool-changing finishes (pauses
+            // need `preempt_pending`, energy exhaustion needs a world),
+            // but stay graceful if a new finish path appears.
+            debug_assert!(!pool_changed, "batched step finish changed the pool");
+            if pool_changed {
+                self.admission_pass(now)?;
+            }
+            #[cfg(debug_assertions)]
+            self.check_conservation();
+        }
         Ok(())
     }
 
@@ -2363,6 +2550,7 @@ impl<'a> FleetRun<'a> {
             peak_resident_rows: v.req("peak_resident_rows")?.as_usize()?,
             pool_busy,
             last_done: f64::from_bits(v.req("last_done_bits")?.as_u64()?),
+            threads: crate::exec::resolve_threads(cfg.threads)?,
         })
     }
 }
@@ -2449,7 +2637,7 @@ impl<'a> FleetState<'a> {
         let Some(ev) = self.run.heap.pop() else {
             return Ok(false);
         };
-        self.run.dispatch(ev)?;
+        self.run.dispatch_from(ev)?;
         Ok(true)
     }
 
@@ -2598,7 +2786,7 @@ fn run_job(
     alive.sort_unstable();
     let mut busy = vec![0.0f64; cfg.pool.len()];
 
-    let assignment = match plan_ring(&planner, &alive) {
+    let assignment = match plan_ring(&planner, &alive, 1) {
         Ok(a) => a,
         Err(_) => {
             // This subset cannot host the model (memory budgets): a failed
@@ -2670,7 +2858,7 @@ fn run_job(
                 break;
             }
             replans += 1;
-            match plan_ring(&planner, &alive) {
+            match plan_ring(&planner, &alive, 1) {
                 Ok(a) => {
                     coordinator =
                         Coordinator::with_assignment_for_cluster(a, &meta, &cfg.pool, &training)?;
@@ -2719,6 +2907,11 @@ pub fn serve_reference(cfg: &FleetConfig, policy: &dyn AllocationPolicy) -> Resu
     if cfg.world.is_some() || cfg.world_trace_path.is_some() {
         return Err(Error::Schedule(
             "serve_reference cannot express a world model".into(),
+        ));
+    }
+    if cfg.threads > 1 {
+        return Err(Error::Schedule(
+            "serve_reference is single-threaded by definition; set threads = 1".into(),
         ));
     }
     let n = cfg.pool.len();
@@ -3014,16 +3207,21 @@ mod tests {
         let planner = Planner::new(&meta, &cfg.pool, costs);
         let mut cache = PlanCache::default();
         let devices = [1usize, 3, 5, 8, 9];
-        let fresh = plan_ring_cached(&planner, &devices, &mut cache, 12).unwrap();
+        let fresh = plan_ring_cached(&planner, &devices, &mut cache, 12, 1).unwrap();
         assert_eq!((cache.hits, cache.misses), (0, 1));
-        let cached = plan_ring_cached(&planner, &devices, &mut cache, 12).unwrap();
+        let cached = plan_ring_cached(&planner, &devices, &mut cache, 12, 1).unwrap();
         assert_eq!((cache.hits, cache.misses), (1, 1));
         assert_eq!(fresh, cached, "cache hit must be bit-identical");
-        assert_eq!(fresh, plan_ring(&planner, &devices).unwrap());
+        assert_eq!(fresh, plan_ring(&planner, &devices, 1).unwrap());
+        // A thread count is not part of the key: a parallel search must
+        // answer from the sequential entry (plans are thread-invariant).
+        let par = plan_ring_cached(&planner, &devices, &mut cache, 12, 4).unwrap();
+        assert_eq!((cache.hits, cache.misses), (2, 1));
+        assert_eq!(fresh, par, "plan cache must be thread-count invariant");
         // A different subset is a different key (distinct speed profile).
         let other = [0usize, 2, 4, 6, 7];
-        let _ = plan_ring_cached(&planner, &other, &mut cache, 12).unwrap();
-        assert_eq!((cache.hits, cache.misses), (1, 2));
+        let _ = plan_ring_cached(&planner, &other, &mut cache, 12, 1).unwrap();
+        assert_eq!((cache.hits, cache.misses), (2, 2));
     }
 
     #[test]
@@ -3068,7 +3266,7 @@ mod tests {
         cache
             .map
             .insert(key, Some(CachedPlan { order_pos: vec![99, 0, 1, 2, 3], counts: vec![16] }));
-        let err = plan_ring_cached(&planner, &devices, &mut cache, 12).unwrap_err();
+        let err = plan_ring_cached(&planner, &devices, &mut cache, 12, 1).unwrap_err();
         assert!(
             matches!(err, Error::Schedule(_)),
             "poisoned cache must fail with Error::Schedule, got {err:?}"

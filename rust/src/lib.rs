@@ -130,6 +130,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod error;
+pub mod exec;
 pub mod fleet;
 pub mod lint;
 pub mod metrics;

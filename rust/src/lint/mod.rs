@@ -24,6 +24,11 @@
 //!   `x.score`, `rate[i][j]`) must chain an explicit `.then`/`.then_with`
 //!   tie-break, or equal keys leave the order at the mercy of the input
 //!   permutation.
+//! - `parallel-primitives` (R6) — no raw `thread::spawn`, `mpsc`
+//!   channels, or `Mutex`-accumulated results outside `src/exec/`: each
+//!   lets thread scheduling order leak into results.  Parallel work must
+//!   go through the fork-join core (`exec::par_map`/`par_map_owned`),
+//!   whose index-ordered merge keeps scheduling unobservable.
 //!
 //! Any rule except `bad-allow` can be waived line-by-line with a comment
 //! annotation, which requires a reason:
@@ -59,8 +64,8 @@ use rules::{Finding, Rule, Scope};
 /// Result of scanning one source file.
 #[derive(Debug, Clone, Default)]
 pub struct FileScan {
-    /// Findings from the always-on rules (R1/R2/R3/R5 plus `bad-allow`),
-    /// sorted by (line, rule).
+    /// Findings from the always-on rules (R1/R2/R3/R5/R6 plus
+    /// `bad-allow`), sorted by (line, rule).
     pub findings: Vec<Finding>,
     /// 1-based lines of live `.unwrap()`/`.expect(` calls, for the ratchet.
     pub unwrap_lines: Vec<usize>,
@@ -90,6 +95,7 @@ pub fn scan_source(display_path: &str, src: &str) -> FileScan {
     rules::check_partial_cmp(display_path, &scope, &mut findings);
     rules::check_ambient_entropy(display_path, &scope, &mut findings);
     rules::check_sort_tie_break(display_path, &scope, &mut findings);
+    rules::check_parallel_primitives(display_path, &scope, &mut findings);
     let unwrap_lines = rules::unwrap_lines(&scope);
     findings.sort_by(|a, b| a.line.cmp(&b.line).then(a.rule.cmp(&b.rule)));
     FileScan { findings, unwrap_lines }
@@ -294,6 +300,7 @@ fn summary_json(findings: &[Finding], scan: &TreeScan, with_list: bool) -> Json 
         Rule::AmbientEntropy,
         Rule::SortTieBreak,
         Rule::UnwrapRatchet,
+        Rule::ParallelPrimitives,
         Rule::BadAllow,
     ] {
         let n = findings.iter().filter(|f| f.rule == rule).count();
@@ -403,6 +410,16 @@ use std::collections::HashSet;
             assert_eq!(scan.findings.len(), 1, "{src:?}");
             assert_eq!(scan.findings[0].rule, Rule::BadAllow, "{src:?}");
         }
+    }
+
+    #[test]
+    fn parallel_primitives_respects_the_exec_exemption_and_allows() {
+        let src = "let shared = std::sync::Mutex::new(Vec::new());\n";
+        assert_eq!(scan_source("src/fleet/mod.rs", src).findings.len(), 1);
+        assert!(scan_source("src/exec/mod.rs", src).findings.is_empty());
+        let waived = "let shared = std::sync::Mutex::new(Vec::new()); \
+                      // lint: allow(parallel-primitives, guards a non-result side table)\n";
+        assert!(scan_source("src/fleet/mod.rs", waived).findings.is_empty());
     }
 
     #[test]

@@ -27,6 +27,14 @@ pub enum Rule {
     /// R4 — `.unwrap()`/`.expect(` in live library code, gated by the
     /// committed ratchet file: per-file counts may only go down.
     UnwrapRatchet,
+    /// R6 — no raw parallelism primitives outside `src/exec/`: bare
+    /// `thread::spawn` (join order is scheduler-chosen), `mpsc` channels
+    /// (receive order is send-completion order), and `Mutex` (lock
+    /// acquisition order is contention-chosen) all let thread scheduling
+    /// leak into results.  Parallel code must funnel through the ordered
+    /// fork-join core ([`crate::exec`]), whose index-ordered merge makes
+    /// scheduling unobservable.
+    ParallelPrimitives,
     /// A malformed `lint: allow(...)` annotation (unknown rule id or
     /// missing reason).  Not itself allowable.
     BadAllow,
@@ -40,6 +48,7 @@ impl Rule {
             Rule::AmbientEntropy => "ambient-entropy",
             Rule::SortTieBreak => "sort-tie-break",
             Rule::UnwrapRatchet => "unwrap-ratchet",
+            Rule::ParallelPrimitives => "parallel-primitives",
             Rule::BadAllow => "bad-allow",
         }
     }
@@ -51,18 +60,20 @@ impl Rule {
             "ambient-entropy" => Some(Rule::AmbientEntropy),
             "sort-tie-break" => Some(Rule::SortTieBreak),
             "unwrap-ratchet" => Some(Rule::UnwrapRatchet),
+            "parallel-primitives" => Some(Rule::ParallelPrimitives),
             "bad-allow" => Some(Rule::BadAllow),
             _ => None,
         }
     }
 
     /// Every rule an annotation may name.
-    pub const ALLOWABLE: [Rule; 5] = [
+    pub const ALLOWABLE: [Rule; 6] = [
         Rule::HashCollections,
         Rule::PartialCmp,
         Rule::AmbientEntropy,
         Rule::SortTieBreak,
         Rule::UnwrapRatchet,
+        Rule::ParallelPrimitives,
     ];
 }
 
@@ -320,6 +331,39 @@ fn receiver_is_projection(arg: &str, dot: usize) -> bool {
     saw_inner_dot || saw_index
 }
 
+/// R6: raw parallelism primitives outside the fork-join core.  Matches
+/// `thread::spawn` (but not `thread::scope` — the scoped pool in
+/// `src/exec/` is its sanctioned user), `mpsc`, and `Mutex`; any file
+/// under `src/exec/` is exempt wholesale.
+pub(crate) fn check_parallel_primitives(file: &str, scope: &Scope<'_>, out: &mut Vec<Finding>) {
+    if file.starts_with("src/exec/") {
+        return;
+    }
+    const PATTERNS: [(&str, &str); 3] = [
+        ("thread::spawn", "unscoped spawns join in scheduler order"),
+        ("mpsc", "channel receive order is send-completion order"),
+        ("Mutex", "lock acquisition order is contention-chosen"),
+    ];
+    for (li, line) in scope.stripped.lines.iter().enumerate() {
+        if (scope.skip)(li, Rule::ParallelPrimitives) {
+            continue;
+        }
+        for (pat, why) in PATTERNS {
+            if !find_word(&line.code, pat).is_empty() {
+                out.push(Finding {
+                    file: file.to_string(),
+                    line: li + 1,
+                    rule: Rule::ParallelPrimitives,
+                    message: format!(
+                        "{pat} outside src/exec/ ({why}); route parallel work through \
+                         exec::par_map/par_map_owned, which merge results index-ordered"
+                    ),
+                });
+            }
+        }
+    }
+}
+
 /// R4 support: 1-based lines of each live `.unwrap()` / `.expect(` call.
 /// The ratchet layer turns these into findings when a file's count grows.
 pub(crate) fn unwrap_lines(scope: &Scope<'_>) -> Vec<usize> {
@@ -355,6 +399,7 @@ mod tests {
         check_partial_cmp("f.rs", &scope, &mut out);
         check_ambient_entropy("f.rs", &scope, &mut out);
         check_sort_tie_break("f.rs", &scope, &mut out);
+        check_parallel_primitives("f.rs", &scope, &mut out);
         out
     }
 
@@ -417,6 +462,31 @@ mod tests {
         assert!(run_all("xs.sort_by(|a, b| a.total_cmp(b));\n").is_empty());
         assert!(run_all("xs.sort_unstable_by(f64::total_cmp);\n").is_empty());
         assert!(run_all("v.sort_by(|a, b| a.id.cmp(&b.id));\n").is_empty());
+    }
+
+    #[test]
+    fn parallel_primitives_fire_outside_the_exec_core() {
+        let f = run_all("let h = std::thread::spawn(move || work());\n");
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, Rule::ParallelPrimitives);
+        assert_eq!(run_all("use std::sync::mpsc;\n").len(), 1);
+        assert_eq!(run_all("let shared: Mutex<Vec<u64>> = Mutex::new(Vec::new());\n").len(), 2);
+    }
+
+    #[test]
+    fn scoped_pool_idioms_and_the_exec_core_are_exempt() {
+        // `thread::scope` / `scope.spawn` are the sanctioned pool's idiom
+        // and must not word-match `thread::spawn`.
+        assert!(run_all("std::thread::scope(|scope| { scope.spawn(|| f()); });\n").is_empty());
+        let src = "let h = std::thread::spawn(f);\nlet m = Mutex::new(0);\n";
+        let stripped = strip(src);
+        let skip = |_: usize, _: Rule| false;
+        let scope = Scope { stripped: &stripped, skip: &skip };
+        let mut out = Vec::new();
+        check_parallel_primitives("src/exec/mod.rs", &scope, &mut out);
+        assert!(out.is_empty(), "src/exec/ is exempt wholesale");
+        check_parallel_primitives("src/fleet/mod.rs", &scope, &mut out);
+        assert_eq!(out.len(), 2);
     }
 
     #[test]

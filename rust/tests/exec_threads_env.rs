@@ -1,0 +1,68 @@
+//! `RINGADA_THREADS` precedence tests for `exec::resolve_threads`.
+//!
+//! These live in their own integration-test binary on purpose: they
+//! mutate the process environment, and every test in this file holds one
+//! shared lock while doing so.  Keeping them out of
+//! `tests/parallel_parity.rs` means no planner/fleet parity test can
+//! observe a half-mutated environment, and the original value is always
+//! restored (CI runs the suite under a `RINGADA_THREADS` matrix).
+
+use std::sync::Mutex;
+
+use ringada::exec::{resolve_threads, THREADS_ENV};
+
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+/// Run `f` with `THREADS_ENV` set to `value` (or unset for `None`),
+/// restoring the prior value afterwards — even on panic the poisoned
+/// lock fails the remaining tests loudly rather than leaking state.
+fn with_env<R>(value: Option<&str>, f: impl FnOnce() -> R) -> R {
+    let _guard = ENV_LOCK.lock().unwrap();
+    let saved = std::env::var_os(THREADS_ENV);
+    match value {
+        Some(v) => std::env::set_var(THREADS_ENV, v),
+        None => std::env::remove_var(THREADS_ENV),
+    }
+    let out = f();
+    match saved {
+        Some(v) => std::env::set_var(THREADS_ENV, v),
+        None => std::env::remove_var(THREADS_ENV),
+    }
+    out
+}
+
+#[test]
+fn unset_env_uses_the_requested_count() {
+    with_env(None, || {
+        assert_eq!(resolve_threads(1).unwrap(), 1);
+        assert_eq!(resolve_threads(3).unwrap(), 3);
+        assert!(resolve_threads(0).is_err(), "zero workers is a config error");
+    });
+}
+
+#[test]
+fn valid_env_overrides_any_requested_count() {
+    with_env(Some("8"), || {
+        assert_eq!(resolve_threads(1).unwrap(), 8, "env must beat the config key");
+        assert_eq!(resolve_threads(3).unwrap(), 8);
+    });
+    with_env(Some(" 6 "), || {
+        assert_eq!(resolve_threads(2).unwrap(), 6, "surrounding whitespace is tolerated");
+    });
+    with_env(Some("1"), || {
+        assert_eq!(resolve_threads(4).unwrap(), 1, "env can force the sequential path");
+    });
+}
+
+#[test]
+fn invalid_env_fails_loudly_instead_of_silently_sequential() {
+    for bad in ["0", "lots", "", "-2", "1.5"] {
+        with_env(Some(bad), || {
+            let err = resolve_threads(3).unwrap_err().to_string();
+            assert!(
+                err.contains(THREADS_ENV),
+                "RINGADA_THREADS={bad:?}: error must name the variable, got: {err}"
+            );
+        });
+    }
+}

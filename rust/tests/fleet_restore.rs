@@ -4,6 +4,11 @@
 //! `FleetReport::canonical_string`), snapshot idempotence across a
 //! 64-job trace, streaming aggregates versus the materialized report,
 //! and JSONL trace ingestion.
+//!
+//! The kill battery and the streaming battery run at `threads ∈ {1, 4}`
+//! and assert that snapshots and canonical reports are byte-identical
+//! across thread counts — the worker pool is a wall-clock knob, never a
+//! results knob (`exec` module contract).
 
 use ringada::config::{AdmissionControl, FleetConfig};
 use ringada::fleet::{
@@ -27,8 +32,8 @@ fn battery_cfg(seed: u64) -> FleetConfig {
 
 /// Run `k` events, snapshot, round-trip the snapshot through its *text*
 /// form, resume into a fresh state, run to the end, and return the
-/// canonical report string.
-fn killed_at(cfg: &FleetConfig, policy: &dyn AllocationPolicy, k: usize) -> String {
+/// snapshot text plus the canonical report string.
+fn killed_at(cfg: &FleetConfig, policy: &dyn AllocationPolicy, k: usize) -> (String, String) {
     let mut state = FleetState::new(cfg, policy).unwrap();
     for i in 0..k {
         assert!(state.step_event().unwrap(), "event stream ended early at {i}/{k}");
@@ -38,25 +43,54 @@ fn killed_at(cfg: &FleetConfig, policy: &dyn AllocationPolicy, k: usize) -> Stri
     let reparsed = Json::parse(&text).unwrap();
     let mut resumed = FleetState::resume(cfg, policy, &reparsed).unwrap();
     resumed.run_to_end().unwrap();
-    resumed.into_report().unwrap().canonical_string()
+    let canon = resumed.into_report().unwrap().canonical_string();
+    (text, canon)
 }
 
 /// The satellite property: for **every** event index, stopping there and
 /// resuming from the (text round-tripped) snapshot replays the
-/// uninterrupted run byte-for-byte.
+/// uninterrupted run byte-for-byte — and none of it depends on the
+/// worker count.  The `threads = 4` run must produce the same snapshot
+/// text and the same final report as `threads = 1` at every kill point
+/// (the `threads` knob is never serialized, and batch boundaries are
+/// thread-count independent).
 fn kill_battery(cfg: &FleetConfig, policy: &dyn AllocationPolicy) {
-    let want = serve(cfg, policy).unwrap().canonical_string();
-    let mut counter = FleetState::new(cfg, policy).unwrap();
+    let mut seq = cfg.clone();
+    seq.threads = 1;
+    let mut par = cfg.clone();
+    par.threads = 4;
+    let want = serve(&seq, policy).unwrap().canonical_string();
+    assert_eq!(
+        serve(&par, policy).unwrap().canonical_string(),
+        want,
+        "threads=4 serve diverged (policy {})",
+        policy.name()
+    );
+    let mut counter = FleetState::new(&seq, policy).unwrap();
     let mut total = 0usize;
     while counter.step_event().unwrap() {
         total += 1;
     }
     assert!(total > 20, "battery config too small: only {total} events");
     for k in 0..=total {
+        let (snap_seq, canon_seq) = killed_at(&seq, policy, k);
+        let (snap_par, canon_par) = killed_at(&par, policy, k);
         assert_eq!(
-            killed_at(cfg, policy, k),
+            snap_par,
+            snap_seq,
+            "snapshot at event {k}/{total} depends on threads (policy {})",
+            policy.name()
+        );
+        assert_eq!(
+            canon_seq,
             want,
             "kill at event {k}/{total} diverged (policy {})",
+            policy.name()
+        );
+        assert_eq!(
+            canon_par,
+            want,
+            "kill at event {k}/{total} diverged at threads=4 (policy {})",
             policy.name()
         );
     }
@@ -143,24 +177,44 @@ fn sampled_full_restarts_on_the_64_job_trace() {
         total += 1;
     }
     for k in (0..=total).step_by(41) {
-        assert_eq!(killed_at(&cfg, &FifoWholeRing, k), want, "restart at {k}/{total} diverged");
+        assert_eq!(killed_at(&cfg, &FifoWholeRing, k).1, want, "restart at {k}/{total} diverged");
     }
-    assert_eq!(killed_at(&cfg, &FifoWholeRing, total), want);
+    assert_eq!(killed_at(&cfg, &FifoWholeRing, total).1, want);
 }
 
 #[test]
 fn streaming_aggregates_match_the_materialized_report() {
     // Acceptance: on all four policies, healthy and faulted, the
     // bounded-memory aggregates reproduce the materialized report —
-    // counts and sums bitwise, p95 within one sketch bucket.
+    // counts and sums bitwise, p95 within one sketch bucket — and both
+    // paths are thread-count invariant (threads=4 reproduces threads=1
+    // bitwise before the row checks run).
     let mut healthy = FleetConfig::synthetic(16, 24, 7);
     healthy.mean_interarrival_s = 10.0;
     let mut faulted = healthy.clone();
     faulted.scenario = Some(Scenario::synth(7, 16, 2500.0, 0.8));
-    for cfg in [&healthy, &faulted] {
+    for base in [&healthy, &faulted] {
         for policy in policies() {
-            let (report, _) = serve_with_stats(cfg, policy).unwrap();
-            let (agg, stats) = serve_streaming(cfg, policy).unwrap();
+            let mut cfg = base.clone();
+            cfg.threads = 1;
+            let (report, _) = serve_with_stats(&cfg, policy).unwrap();
+            let (agg, stats) = serve_streaming(&cfg, policy).unwrap();
+            let mut par = base.clone();
+            par.threads = 4;
+            let (par_report, _) = serve_with_stats(&par, policy).unwrap();
+            let (par_agg, _) = serve_streaming(&par, policy).unwrap();
+            assert_eq!(
+                par_report.canonical_string(),
+                report.canonical_string(),
+                "materialized report depends on threads (policy {})",
+                policy.name()
+            );
+            assert_eq!(
+                par_agg.to_json().to_string(),
+                agg.to_json().to_string(),
+                "streaming aggregates depend on threads (policy {})",
+                policy.name()
+            );
             let tag = format!("policy {} scenario {}", policy.name(), report.scenario);
             assert_eq!(agg.jobs, report.rows.len(), "jobs ({tag})");
             assert_eq!(agg.completed, report.completed(), "completed ({tag})");
@@ -205,20 +259,33 @@ fn streaming_aggregates_match_the_materialized_report() {
 #[test]
 fn streaming_state_snapshots_and_resumes() {
     // Streaming mode checkpoints too: kill mid-run, resume, and the
-    // final aggregates match the uninterrupted streaming serve bitwise.
-    let cfg = battery_cfg(9);
-    let (want, _) = serve_streaming(&cfg, &DeadlineEdf).unwrap();
-    let mut state = FleetState::streaming(&cfg, &DeadlineEdf).unwrap();
-    for _ in 0..12 {
-        assert!(state.step_event().unwrap());
+    // final aggregates match the uninterrupted streaming serve bitwise —
+    // at either thread count, with byte-identical snapshot texts.
+    let base = battery_cfg(9);
+    let (want, _) = serve_streaming(&base, &DeadlineEdf).unwrap();
+    let mut texts = Vec::new();
+    for threads in [1usize, 4] {
+        let mut cfg = base.clone();
+        cfg.threads = threads;
+        let mut state = FleetState::streaming(&cfg, &DeadlineEdf).unwrap();
+        for _ in 0..12 {
+            assert!(state.step_event().unwrap());
+        }
+        let text = state.snapshot().unwrap().to_string();
+        let resumed = FleetState::resume(&cfg, &DeadlineEdf, &Json::parse(&text).unwrap()).unwrap();
+        assert!(resumed.into_report().is_err(), "streaming state must refuse a report");
+        let mut resumed =
+            FleetState::resume(&cfg, &DeadlineEdf, &Json::parse(&text).unwrap()).unwrap();
+        resumed.run_to_end().unwrap();
+        let got = resumed.into_aggregates();
+        assert_eq!(
+            got.to_json().to_string(),
+            want.to_json().to_string(),
+            "threads={threads} streaming resume diverged"
+        );
+        texts.push(text);
     }
-    let text = state.snapshot().unwrap().to_string();
-    let resumed = FleetState::resume(&cfg, &DeadlineEdf, &Json::parse(&text).unwrap()).unwrap();
-    assert!(resumed.into_report().is_err(), "streaming state must refuse a report");
-    let mut resumed = FleetState::resume(&cfg, &DeadlineEdf, &Json::parse(&text).unwrap()).unwrap();
-    resumed.run_to_end().unwrap();
-    let got = resumed.into_aggregates();
-    assert_eq!(got.to_json().to_string(), want.to_json().to_string());
+    assert_eq!(texts[0], texts[1], "streaming snapshot depends on thread count");
 }
 
 #[test]

@@ -131,6 +131,39 @@ fn sort_tie_break_must_pass() {
     assert!(findings("v.sort_by(|a, b| a.id.cmp(&b.id));\n").is_empty());
 }
 
+// ------------------------------------------------------------ R6
+
+#[test]
+fn parallel_primitives_must_fire() {
+    assert_eq!(
+        findings("let h = std::thread::spawn(move || work());\n"),
+        vec![(1, Rule::ParallelPrimitives)]
+    );
+    assert_eq!(
+        findings("use std::sync::mpsc::channel;\n"),
+        vec![(1, Rule::ParallelPrimitives)]
+    );
+    // A Mutex-accumulated result merges in lock-acquisition order.
+    assert_eq!(
+        findings("let acc = std::sync::Mutex::new(Vec::new());\n"),
+        vec![(1, Rule::ParallelPrimitives)]
+    );
+}
+
+#[test]
+fn parallel_primitives_must_pass() {
+    // The fork-join core's own idiom: scoped spawns, not thread::spawn.
+    assert!(findings("std::thread::scope(|scope| { scope.spawn(|| f()); });\n").is_empty());
+    // The exec core itself is exempt wholesale — same source, exec path.
+    let src = "let h = std::thread::spawn(f);\nlet acc = Mutex::new(0);\n";
+    assert_eq!(findings(src).len(), 2);
+    assert!(scan_source("src/exec/mod.rs", src).findings.is_empty());
+    // The escape hatch with a reason waives line by line.
+    let waived =
+        "let acc = std::sync::Mutex::new(0); // lint: allow(parallel-primitives, side table)\n";
+    assert!(findings(waived).is_empty());
+}
+
 // ------------------------------------------------------ cfg(test) spans
 
 #[test]

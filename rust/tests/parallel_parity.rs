@@ -1,0 +1,272 @@
+//! Parallel-vs-sequential parity battery for the fork-join executor
+//! (`src/exec/`): the acceptance gate for the deterministic parallel
+//! refactor.  `plan_beam_anneal_traced`, `Simulator::run` fanned out via
+//! `exec::par_map`, and `serve`/`serve_streaming` must produce
+//! bit-identical outputs — plans, accepted-move trajectories, simulator
+//! reports, and `canonical_string` — at `threads ∈ {1, 2, 4, 8}`.
+//!
+//! Everything here is exact equality (float bits included): the worker
+//! pool is a wall-clock knob, never a results knob.  Under a CI
+//! `RINGADA_THREADS` override all rows resolve to the same pool width and
+//! the assertions hold by the same contract; the env precedence itself is
+//! pinned in `tests/exec_threads_env.rs`, which owns the process
+//! environment.
+
+use ringada::config::{ClusterConfig, FleetConfig, TrainingConfig};
+use ringada::coordinator::{Coordinator, Planner, PlannerCosts, SearchParams};
+use ringada::exec::par_map;
+use ringada::fleet::{
+    serve, serve_reference, serve_streaming, AllocationPolicy, DeadlineEdf, FifoWholeRing,
+};
+use ringada::model::manifest::ModelHyper;
+use ringada::model::ModelMeta;
+use ringada::pipeline::{ScheduleBuilder, WireSizes};
+use ringada::sim::{CostLut, Scenario, SimReport, Simulator};
+use ringada::util::json::Json;
+
+fn meta(layers: usize) -> ModelMeta {
+    ModelMeta::from_hyper(ModelHyper {
+        name: "parity".into(),
+        vocab: 2048,
+        hidden: 64,
+        layers,
+        heads: 4,
+        ffn: 256,
+        bottleneck: 16,
+        seq: 32,
+        batch: 4,
+        init_std: 0.02,
+    })
+}
+
+fn costs(lut: &CostLut, m: &ModelMeta) -> PlannerCosts {
+    PlannerCosts { block_fwd_s: lut.block_fwd_s, activation_bytes: m.activation_bytes() }
+}
+
+// ------------------------------------------------------------ planner
+
+/// Plans, bottlenecks (bitwise), and the full `SearchStats` — accepted
+/// trajectories included — must not move with the thread count, at one
+/// restart and at several.
+#[test]
+fn planner_parity_across_thread_counts_and_restarts() {
+    let u = 16;
+    let m = meta(2 * u);
+    let cl = ClusterConfig::synthetic(u, 11, 0.6).unwrap();
+    let lut = CostLut::analytic(&m, 5.0);
+    let planner = Planner::new(&m, &cl, costs(&lut, &m));
+    let devices: Vec<usize> = (0..u).collect();
+    for restarts in [1usize, 3] {
+        let mut baseline = None;
+        for threads in [1usize, 2, 4, 8] {
+            let params = SearchParams { restarts, threads, ..SearchParams::smoke() };
+            let (plan, stats) = planner.plan_beam_anneal_traced(&devices, &params).unwrap();
+            match &baseline {
+                None => baseline = Some((plan, stats)),
+                Some((bp, bs)) => {
+                    assert_eq!(
+                        plan.assignment,
+                        bp.assignment,
+                        "threads={threads} restarts={restarts}: assignment diverged"
+                    );
+                    assert_eq!(
+                        plan.bottleneck_s.to_bits(),
+                        bp.bottleneck_s.to_bits(),
+                        "threads={threads} restarts={restarts}: bottleneck diverged"
+                    );
+                    assert_eq!(
+                        &stats,
+                        bs,
+                        "threads={threads} restarts={restarts}: evaluator counts or \
+                         accepted-move trajectory diverged"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Restart 0 uses `params.seed` verbatim, and stats merge in restart
+/// order — so the `restarts = 1` trajectory must reappear as an exact
+/// prefix of the `restarts = 3` trajectory.
+#[test]
+fn restart_zero_replays_the_legacy_single_chain_trajectory() {
+    let u = 16;
+    let m = meta(2 * u);
+    let cl = ClusterConfig::synthetic(u, 11, 0.6).unwrap();
+    let lut = CostLut::analytic(&m, 5.0);
+    let planner = Planner::new(&m, &cl, costs(&lut, &m));
+    let devices: Vec<usize> = (0..u).collect();
+    let single = SearchParams { restarts: 1, ..SearchParams::smoke() };
+    let multi = SearchParams { restarts: 3, ..SearchParams::smoke() };
+    let (_, s1) = planner.plan_beam_anneal_traced(&devices, &single).unwrap();
+    let (_, s3) = planner.plan_beam_anneal_traced(&devices, &multi).unwrap();
+    assert!(!s1.accepted.is_empty(), "trajectory too small to pin anything");
+    assert!(
+        s3.accepted.starts_with(&s1.accepted),
+        "restart 0 must replay the restarts=1 chain verbatim"
+    );
+    assert!(s3.anneal_moves >= s1.anneal_moves, "extra restarts cannot propose fewer moves");
+}
+
+// ------------------------------------------------------------ simulator
+
+fn bits(xs: &[f64]) -> Vec<u64> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+fn assert_reports_identical(a: &SimReport, b: &SimReport, tag: &str) {
+    assert_eq!(bits(&a.finish), bits(&b.finish), "{tag}: finish");
+    assert_eq!(bits(&a.start), bits(&b.start), "{tag}: start");
+    assert_eq!(bits(&a.device_busy), bits(&b.device_busy), "{tag}: device_busy");
+    assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "{tag}: makespan");
+    assert_eq!(a.link_bytes, b.link_bytes, "{tag}: link_bytes");
+}
+
+/// Independent task sets fanned out over `par_map` must reproduce the
+/// sequential loop field-for-field, float bits included, at every pool
+/// width — the same shape the fleet layer uses for same-timestamp `Step`
+/// batches.
+#[test]
+fn par_map_simulator_runs_match_the_sequential_loop() {
+    let u = 6;
+    let m = meta(2 * u);
+    let cl = ClusterConfig::synthetic(u, 13, 0.5).unwrap();
+    let lut = CostLut::analytic(&m, 5.0);
+    let planner = Planner::new(&m, &cl, costs(&lut, &m));
+    let devices: Vec<usize> = (0..u).collect();
+    let plan = planner.plan_for_devices(&devices).unwrap();
+    let tr = TrainingConfig {
+        rounds: 1,
+        local_iters: 1,
+        unfreeze_interval: 1,
+        initial_depth: 1,
+        ..Default::default()
+    };
+    let c = Coordinator::with_assignment(plan.assignment.clone(), &m, &cl, &tr).unwrap();
+    let rp = c.round_plan(0).unwrap();
+    let chunks: Vec<_> = (0..u)
+        .map(|i| {
+            let sizes = WireSizes { activation_bytes: m.activation_bytes(), head_bytes: 64 };
+            let mut b = ScheduleBuilder::new(plan.assignment.clone(), sizes, u);
+            b.ringada_step(&rp, rp.initiators[i % rp.initiators.len()]).unwrap();
+            b.into_tasks().0
+        })
+        .collect();
+    let seq: Vec<SimReport> = chunks
+        .iter()
+        .map(|tasks| Simulator::new(cl.clone(), lut.clone()).run(tasks).unwrap())
+        .collect();
+    for threads in [1usize, 2, 4, 8] {
+        let par = par_map(threads, &chunks, |_, tasks| {
+            Simulator::new(cl.clone(), lut.clone()).run(tasks).unwrap()
+        });
+        assert_eq!(par.len(), seq.len(), "par_map dropped or duplicated results");
+        for (i, (a, b)) in par.iter().zip(&seq).enumerate() {
+            assert_reports_identical(a, b, &format!("chunk {i} at threads={threads}"));
+        }
+    }
+}
+
+// ------------------------------------------------------------ fleet
+
+/// `serve` canonical reports and `serve_streaming` aggregates must be
+/// byte-identical across thread counts, healthy and faulted, for both a
+/// FIFO and a deadline-driven policy.
+#[test]
+fn serve_and_streaming_parity_across_thread_counts() {
+    let mut healthy = FleetConfig::synthetic(12, 10, 17);
+    healthy.mean_interarrival_s = 10.0;
+    let mut faulted = healthy.clone();
+    faulted.scenario = Some(Scenario::synth(17, 12, 1500.0, 0.8));
+    for base in [&healthy, &faulted] {
+        let tag = if base.scenario.is_some() { "faulted" } else { "healthy" };
+        for policy in [&FifoWholeRing as &dyn AllocationPolicy, &DeadlineEdf] {
+            let mut want_canon: Option<String> = None;
+            let mut want_agg: Option<String> = None;
+            for threads in [1usize, 2, 4, 8] {
+                let mut cfg = base.clone();
+                cfg.threads = threads;
+                let canon = serve(&cfg, policy).unwrap().canonical_string();
+                let (agg, _) = serve_streaming(&cfg, policy).unwrap();
+                let agg = agg.to_json().to_string();
+                match &want_canon {
+                    None => want_canon = Some(canon),
+                    Some(w) => assert_eq!(
+                        &canon,
+                        w,
+                        "threads={threads} changed serve on {tag}/{}",
+                        policy.name()
+                    ),
+                }
+                match &want_agg {
+                    None => want_agg = Some(agg),
+                    Some(w) => assert_eq!(
+                        &agg,
+                        w,
+                        "threads={threads} changed streaming aggregates on {tag}/{}",
+                        policy.name()
+                    ),
+                }
+            }
+        }
+    }
+}
+
+/// The retained sequential oracle: runs (and matches `serve`) at
+/// `threads = 1`, refuses a parallel config outright — it pins the
+/// sequential semantics and must never silently run multi-threaded.
+#[test]
+fn serve_reference_matches_at_one_thread_and_rejects_parallel_configs() {
+    let mut cfg = FleetConfig::synthetic(8, 6, 3);
+    cfg.mean_interarrival_s = 10.0;
+    cfg.threads = 1;
+    let want = serve(&cfg, &FifoWholeRing).unwrap().canonical_string();
+    let oracle = serve_reference(&cfg, &FifoWholeRing).unwrap().canonical_string();
+    assert_eq!(oracle, want, "reference diverged from the batched dispatcher");
+    let mut par = cfg.clone();
+    par.threads = 4;
+    let err = serve_reference(&par, &FifoWholeRing).unwrap_err();
+    assert!(
+        err.to_string().contains("single-threaded"),
+        "wrong rejection for serve_reference at threads=4: {err}"
+    );
+}
+
+// ------------------------------------------------------------ config
+
+/// The optional `threads` config key: legacy JSON (no key) parses to 1
+/// and round-trips byte-identically; explicit values round-trip; zero,
+/// fractional, and non-numeric values fail with the field-contextual
+/// `threads:` error style.
+#[test]
+fn fleet_config_threads_key_parses_and_round_trips() {
+    let base = FleetConfig::synthetic(6, 4, 1);
+    let legacy_text = base.to_json().to_string();
+    assert!(
+        !legacy_text.contains("threads"),
+        "threads=1 must not be serialized (legacy byte-identity)"
+    );
+    let parsed = FleetConfig::from_json(&Json::parse(&legacy_text).unwrap()).unwrap();
+    assert_eq!(parsed.threads, 1, "absent key must mean sequential");
+    assert_eq!(parsed.to_json().to_string(), legacy_text, "legacy round-trip changed bytes");
+
+    let mut par = base.clone();
+    par.threads = 6;
+    let round = FleetConfig::from_json(&Json::parse(&par.to_json().to_string()).unwrap()).unwrap();
+    assert_eq!(round.threads, 6, "explicit threads must round-trip");
+
+    // Splice a threads key into otherwise-valid legacy JSON.
+    let with_threads = |v: &str| format!("{{\"threads\": {v}, {}", &legacy_text[1..]);
+    let ok = FleetConfig::from_json(&Json::parse(&with_threads("4")).unwrap()).unwrap();
+    assert_eq!(ok.threads, 4);
+    for bad in ["0", "2.5", "-3", "\"four\"", "true"] {
+        let v = Json::parse(&with_threads(bad)).unwrap();
+        let err = FleetConfig::from_json(&v).unwrap_err().to_string();
+        assert!(err.contains("threads"), "threads={bad}: error not field-contextual: {err}");
+    }
+
+    let mut zero = base.clone();
+    zero.threads = 0;
+    assert!(zero.validate().is_err(), "validate() must reject threads=0");
+}

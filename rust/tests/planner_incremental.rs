@@ -172,7 +172,7 @@ fn incremental_matches_reference_on_large_random_clusters() {
             anneal_iters: iters,
             max_evals: 0,
             seed: 0xA11E + seed,
-            incremental: true,
+            ..SearchParams::default()
         };
         let (st_inc, st_ref) =
             assert_paths_identical(&p, &devices, &params, &format!("u={u}")).unwrap();
@@ -214,7 +214,7 @@ fn max_evals_budget_counts_proposals_under_both_evaluators() {
         anneal_iters: 10_000,
         max_evals: 64,
         seed: 7,
-        incremental: true,
+        ..SearchParams::default()
     };
     let (st_inc, st_ref) =
         assert_paths_identical(&p, &devices, &params, "budgeted").unwrap();

@@ -11,13 +11,19 @@
 //! Run: `cargo bench --bench fleet` — or `cargo bench --bench fleet --
 //! --smoke` (also honored via `RINGADA_BENCH_SMOKE=1`) for the quick CI
 //! profile: smaller pool and stream, same JSON schema.
+//!
+//! The final section serves 100k jobs over a 10k-device pool with the
+//! cross-job planning pipeline on and off (`BENCH_mega.json`); its gates
+//! — canonical byte-identity across thread counts and speculation
+//! on/off, plus planning-counter invariants — are deterministic, so it
+//! runs in smoke too.
 
 use ringada::config::{AdmissionControl, FleetConfig};
 use ringada::fleet::{
     serve, serve_streaming, serve_with_stats, AllocationPolicy, DeadlineEdf, FifoWholeRing,
-    JobTrace, SmallestRingFirst, UtilizationAware,
+    JobTrace, ServeStats, SmallestRingFirst, UtilizationAware,
 };
-use ringada::sim::Scenario;
+use ringada::sim::{CostLut, Scenario};
 use ringada::util::bench::{black_box, Bencher};
 use ringada::util::json::Json;
 
@@ -235,4 +241,206 @@ fn main() {
     ]);
     std::fs::write("BENCH_stream.json", stream_out.pretty()).expect("write BENCH_stream.json");
     println!("wrote BENCH_stream.json");
+
+    mega_section(smoke);
+}
+
+/// The 10k-device / 100k-job planning-pipeline section (ROADMAP item 1's
+/// scale target), written to `BENCH_mega.json`.  Every gate in here is
+/// deterministic — canonical byte-identity across thread counts and
+/// speculation on/off, plus counter invariants — so a red run means a
+/// pipeline regression, never timing noise.  Wall clock is recorded as an
+/// informational column only.
+///
+/// Serve runs at this scale are seconds each, so each configuration is
+/// timed once with a raw timer instead of the repeating [`Bencher`] loop.
+fn mega_section(smoke: bool) {
+    println!("== fleet mega section (10k devices / 100k jobs) ==");
+    let mut mega = FleetConfig::synthetic(10_000, 100_000, 2026);
+    // Calibrate the arrival rate to ~90% offered load.  Per-job attribute
+    // draws are independent of `mean_interarrival_s` (the exponential gap
+    // just scales), so the pilot trace's device-second demand transfers
+    // unchanged to the calibrated stream: queues form under bursts (the
+    // pipeline gets real multi-admission barriers) without the waiting
+    // queue growing unboundedly.
+    let demand_s: f64 = JobTrace::synthetic(&mega)
+        .iter()
+        .map(|j| {
+            let lut = CostLut::analytic(&j.model_meta(), 5.0);
+            j.nominal_service_s(lut.block_fwd_s) * j.ring_size as f64
+        })
+        .sum();
+    mega.mean_interarrival_s =
+        (demand_s / (0.9 * mega.pool.len() as f64 * mega.jobs as f64)).max(1e-6);
+    println!(
+        "  calibrated interarrival {:.4}s ({:.0} device-seconds of demand)",
+        mega.mean_interarrival_s, demand_s
+    );
+
+    // (threads, speculate) column per policy.  FIFO carries the full
+    // thread column; smallest-first spot-checks the widest width (its
+    // baseline-off run still pins the canonical suffix relation).
+    let fifo_col: &[(usize, bool)] = if smoke {
+        &[(1, false), (4, false), (4, true)]
+    } else {
+        &[(1, false), (4, false), (8, false), (8, true)]
+    };
+    let srf_col: &[(usize, bool)] = if smoke {
+        &[(4, false), (4, true)]
+    } else {
+        &[(1, false), (4, false), (4, true)]
+    };
+    let mut rows = Vec::new();
+    for (policy, col) in [
+        (&FifoWholeRing as &dyn AllocationPolicy, fifo_col),
+        (&SmallestRingFirst, srf_col),
+    ] {
+        // Baseline: pipeline off, sequential — the legacy path whose
+        // canonical string every pipeline run must extend append-only.
+        mega.threads = 1;
+        mega.plan_pipeline = false;
+        mega.speculate = false;
+        let t0 = std::time::Instant::now();
+        let (base_report, base_stats) =
+            serve_with_stats(&mega, policy).expect("mega baseline serve");
+        let base_s = t0.elapsed().as_secs_f64();
+        let base_canon = base_report.canonical_string();
+        assert_eq!(
+            base_report.completed() + base_report.failed_jobs() + base_report.unserved(),
+            mega.jobs,
+            "mega baseline lost jobs ({})",
+            policy.name()
+        );
+        assert!(
+            2 * base_report.completed() > mega.jobs,
+            "mega baseline completed only {} of {} jobs ({})",
+            base_report.completed(),
+            mega.jobs,
+            policy.name()
+        );
+        assert_eq!(base_stats.plan_batches, 0, "pipeline-off run counted batches");
+        println!(
+            "  -> mega/{} off t1: {:.1}s, {} completed, plan cache {}/{}",
+            policy.name(),
+            base_s,
+            base_report.completed(),
+            base_stats.plan_cache_hits,
+            base_stats.plans,
+        );
+        rows.push(mega_row(policy.name(), 1, false, false, base_s, &base_stats));
+        drop(base_report);
+
+        let mut want: Option<(String, ServeStats)> = None;
+        for &(threads, speculate) in col {
+            mega.threads = threads;
+            mega.plan_pipeline = true;
+            mega.speculate = speculate;
+            let t0 = std::time::Instant::now();
+            let (report, stats) = serve_with_stats(&mega, policy).expect("mega pipeline serve");
+            let dt = t0.elapsed().as_secs_f64();
+            let canon = report.canonical_string();
+            drop(report);
+            let tag = format!("{} t{threads} spec={speculate}", policy.name());
+            // Append-only report contract: the pipeline run reproduces
+            // the legacy bytes exactly, plus the planning section.
+            let suffix = canon.strip_prefix(&base_canon).unwrap_or_else(|| {
+                panic!("mega {tag}: pipeline run rewrote the legacy canonical bytes")
+            });
+            assert!(
+                suffix.starts_with(";planning={batches="),
+                "mega {tag}: unexpected canonical suffix {suffix:?}"
+            );
+            // Deterministic counter gates: batching really ran, the
+            // histogram accounts for every batch, and speculation stays
+            // invisible to the canonical counters.
+            assert!(stats.plan_batches > 0, "mega {tag}: no plan batches at 100k jobs");
+            assert!(stats.plan_batch_requests >= stats.plan_batches, "mega {tag}: counters");
+            assert_eq!(
+                stats.plan_batch_hist.iter().sum::<usize>(),
+                stats.plan_batches,
+                "mega {tag}: histogram does not cover the batches"
+            );
+            if speculate {
+                assert!(
+                    stats.speculative_hits <= stats.speculative_plans,
+                    "mega {tag}: more speculative hits than plans"
+                );
+            } else {
+                assert_eq!(stats.speculative_plans, 0, "mega {tag}: speculated while off");
+            }
+            match &want {
+                None => want = Some((canon, stats)),
+                Some((wc, ws)) => {
+                    assert_eq!(&canon, wc, "mega {tag}: canonical diverged across the column");
+                    for (got, exp, name) in [
+                        (stats.plans, ws.plans, "plans"),
+                        (stats.plan_cache_hits, ws.plan_cache_hits, "hits"),
+                        (stats.plan_batches, ws.plan_batches, "batches"),
+                        (stats.plan_batch_requests, ws.plan_batch_requests, "requests"),
+                        (stats.plan_dedup_merges, ws.plan_dedup_merges, "dedup"),
+                    ] {
+                        assert_eq!(got, exp, "mega {tag}: {name} diverged across the column");
+                    }
+                    assert_eq!(
+                        stats.plan_batch_hist, ws.plan_batch_hist,
+                        "mega {tag}: batch histogram diverged across the column"
+                    );
+                }
+            }
+            let spec_rate = if stats.speculative_plans > 0 {
+                stats.speculative_hits as f64 / stats.speculative_plans as f64
+            } else {
+                0.0
+            };
+            println!(
+                "  -> mega/{tag}: {dt:.1}s ({:.2}x), {} batches / {} requests ({} dedup), \
+                 speculative {}/{} ({:.0}%)",
+                base_s / dt.max(1e-12),
+                stats.plan_batches,
+                stats.plan_batch_requests,
+                stats.plan_dedup_merges,
+                stats.speculative_hits,
+                stats.speculative_plans,
+                100.0 * spec_rate,
+            );
+            rows.push(mega_row(policy.name(), threads, true, speculate, dt, &stats));
+        }
+    }
+
+    let out = Json::obj(vec![
+        ("bench", Json::str("fleet_mega")),
+        ("smoke", Json::Bool(smoke)),
+        ("pool", Json::num(mega.pool.len() as f64)),
+        ("jobs", Json::num(mega.jobs as f64)),
+        ("mean_interarrival_s", Json::num(mega.mean_interarrival_s)),
+        ("runs", Json::Arr(rows)),
+    ]);
+    std::fs::write("BENCH_mega.json", out.pretty()).expect("write BENCH_mega.json");
+    println!("wrote BENCH_mega.json");
+}
+
+fn mega_row(
+    policy: &str,
+    threads: usize,
+    pipeline: bool,
+    speculate: bool,
+    serve_s: f64,
+    stats: &ServeStats,
+) -> Json {
+    Json::obj(vec![
+        ("policy", Json::str(policy)),
+        ("threads", Json::num(threads as f64)),
+        ("plan_pipeline", Json::Bool(pipeline)),
+        ("speculate", Json::Bool(speculate)),
+        ("serve_s", Json::num(serve_s)),
+        ("plans", Json::num(stats.plans as f64)),
+        ("plan_cache_hits", Json::num(stats.plan_cache_hits as f64)),
+        ("plan_batches", Json::num(stats.plan_batches as f64)),
+        ("plan_batch_requests", Json::num(stats.plan_batch_requests as f64)),
+        ("plan_dedup_merges", Json::num(stats.plan_dedup_merges as f64)),
+        ("plan_batch_hist", Json::arr_usize(&stats.plan_batch_hist)),
+        ("speculative_plans", Json::num(stats.speculative_plans as f64)),
+        ("speculative_hits", Json::num(stats.speculative_hits as f64)),
+        ("speculative_wasted", Json::num(stats.speculative_wasted as f64)),
+    ])
 }

@@ -568,6 +568,23 @@ pub struct FleetConfig {
     /// `RINGADA_THREADS` env var overrides any value set here.  Thread
     /// count never changes serve results, only wall clock.
     pub threads: usize,
+    /// Enable the cross-job planning pipeline: plan requests pending at
+    /// the same fleet timestamp (admissions, dropout re-plans, resize
+    /// re-plans) are deduplicated by plan-cache key and fanned out over
+    /// the fork-join pool, with results committed in heap-pop order.
+    /// Off by default — the legacy one-plan-per-event path.  Like
+    /// `threads`, a wall-clock knob: serve results are byte-identical
+    /// either way, except that [`crate::metrics::FleetReport`] gains an
+    /// append-only `planning` observability section when enabled.
+    pub plan_pipeline: bool,
+    /// Enable speculative pre-planning on top of `plan_pipeline`: between
+    /// event barriers the fleet plans against the profiles of imminent
+    /// arrivals and queued re-admissions so the cache is warm when the
+    /// event fires.  Speculation only ever inserts cache entries
+    /// identical to what the demand path would compute, so it is
+    /// on/off- and thread-count-invariant by construction.  Requires
+    /// `plan_pipeline`.
+    pub speculate: bool,
 }
 
 impl FleetConfig {
@@ -592,6 +609,8 @@ impl FleetConfig {
             world: None,
             world_trace_path: None,
             threads: 1,
+            plan_pipeline: false,
+            speculate: false,
         }
     }
 
@@ -653,6 +672,13 @@ impl FleetConfig {
         if self.threads == 0 {
             return Err(Error::Config(
                 "threads must be >= 1 (use 1 for sequential)".into(),
+            ));
+        }
+        if self.speculate && !self.plan_pipeline {
+            return Err(Error::Config(
+                "speculate requires plan_pipeline (speculation pre-warms the pipeline's \
+                 plan cache; there is nothing to speculate for without it)"
+                    .into(),
             ));
         }
         if let Some(sc) = &self.scenario {
@@ -751,6 +777,21 @@ impl FleetConfig {
                 }
                 None => 1,
             },
+            // Optional like `threads`: absent means the legacy
+            // one-plan-per-event path.  `speculate` without
+            // `plan_pipeline` is rejected by validate().
+            plan_pipeline: match v.get("plan_pipeline") {
+                Some(b) => b
+                    .as_bool()
+                    .map_err(|e| Error::Config(format!("plan_pipeline: {e}")))?,
+                None => false,
+            },
+            speculate: match v.get("speculate") {
+                Some(b) => b
+                    .as_bool()
+                    .map_err(|e| Error::Config(format!("speculate: {e}")))?,
+                None => false,
+            },
         })
     }
 
@@ -789,6 +830,12 @@ impl FleetConfig {
         // byte-identical (threads is a runtime knob, not trace state).
         if self.threads != 1 {
             pairs.push(("threads", Json::num(self.threads as f64)));
+        }
+        if self.plan_pipeline {
+            pairs.push(("plan_pipeline", Json::Bool(true)));
+        }
+        if self.speculate {
+            pairs.push(("speculate", Json::Bool(true)));
         }
         Json::obj(pairs)
     }

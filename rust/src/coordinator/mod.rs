@@ -9,7 +9,7 @@ pub mod ring;
 pub mod unfreeze;
 
 pub use planner::{
-    AcceptedMove, Plan, Planner, PlannerCosts, SearchParams, SearchStats,
+    AcceptedMove, Plan, Planner, PlannerCosts, PoolFingerprints, SearchParams, SearchStats,
     DP_EXACT_MAX_DEVICES, EXHAUSTIVE_MAX_DEVICES,
 };
 pub use ring::{InitiatorRotation, LayerAssignment};

@@ -126,6 +126,69 @@ pub struct PlannerCosts {
     pub activation_bytes: usize,
 }
 
+/// Per-device canonical fingerprints of a cluster's rate matrix, built
+/// once per pool (O(n²)) so plan-cache keys can identify a device's full
+/// connectivity in O(1) instead of re-reading O(r²) pairwise rates per
+/// lookup.  Each device gets a 128-bit row digest (its outgoing rates,
+/// in column order, diagonal included) and a 128-bit column digest (its
+/// incoming rates, in row order) — two independent [`mix`] chains per
+/// direction, position-sensitive, so equal digests mean equal rate
+/// vectors up to hash collision.  Rates never change over a fleet run
+/// (drops and memory pressure leave the matrix untouched; world joins
+/// are pre-extended into the pool before serving starts), so the table
+/// is immutable after construction.
+#[derive(Debug, Clone)]
+pub struct PoolFingerprints {
+    /// `[row_a, row_b, col_a, col_b]` per device.
+    digests: Vec<[u64; 4]>,
+}
+
+/// Independent chain seeds: the two lanes of each digest must not be
+/// shifted copies of one another.
+const FP_SEED_A: u64 = 0x52_49_4E_47_41_44_41_31; // "RINGADA1"
+const FP_SEED_B: u64 = 0x52_49_4E_47_41_44_41_32; // "RINGADA2"
+
+impl PoolFingerprints {
+    pub fn new(cluster: &ClusterConfig) -> Self {
+        let n = cluster.len();
+        let mut digests = vec![[0u64; 4]; n];
+        for d in 0..n {
+            let (mut ra, mut rb) = (mix(FP_SEED_A, d as u64), mix(FP_SEED_B, d as u64));
+            for e in 0..n {
+                let bits = cluster.rate_bytes_per_s[d][e].to_bits();
+                ra = mix(ra, bits);
+                rb = mix(rb, bits);
+            }
+            digests[d][0] = ra;
+            digests[d][1] = rb;
+        }
+        for e in 0..n {
+            let (mut ca, mut cb) = (mix(FP_SEED_A, !(e as u64)), mix(FP_SEED_B, !(e as u64)));
+            for row in &cluster.rate_bytes_per_s {
+                let bits = row[e].to_bits();
+                ca = mix(ca, bits);
+                cb = mix(cb, bits);
+            }
+            digests[e][2] = ca;
+            digests[e][3] = cb;
+        }
+        PoolFingerprints { digests }
+    }
+
+    /// The four digest words of `device` (`[row_a, row_b, col_a, col_b]`).
+    pub fn device(&self, device: usize) -> [u64; 4] {
+        self.digests[device]
+    }
+
+    pub fn len(&self) -> usize {
+        self.digests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.digests.is_empty()
+    }
+}
+
 /// Tuning knobs for the non-exhaustive (U > 8) ring-order search.  The
 /// defaults are sized so a 128-device plan stays well under a second while
 /// matching the exhaustive optimum on every cluster small enough to check.

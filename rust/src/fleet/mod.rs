@@ -103,11 +103,14 @@ pub use policy::{
 
 use std::cmp::Ordering;
 use std::collections::{BTreeMap, BinaryHeap, VecDeque};
+use std::sync::Arc;
 
 use crate::config::{AdmissionControl, ClusterConfig, FleetConfig, TrainingConfig};
-use crate::coordinator::{Coordinator, LayerAssignment, Planner, PlannerCosts, SearchParams};
+use crate::coordinator::{
+    Coordinator, LayerAssignment, Planner, PlannerCosts, PoolFingerprints, SearchParams,
+};
 use crate::error::{Error, Result};
-use crate::metrics::{FleetAggregates, FleetJobRow, FleetReport, WorldStats};
+use crate::metrics::{FleetAggregates, FleetJobRow, FleetReport, PlanningStats, WorldStats};
 use crate::model::ModelMeta;
 use crate::pipeline::{ScheduleBuilder, WireSizes};
 use crate::runtime::rng::mix;
@@ -329,6 +332,75 @@ impl FreePool {
             Err(_) => false,
         }
     }
+
+    /// Return every id in `devs` (sorted ascending, disjoint from the
+    /// pool) in one merge pass — O(n + k) instead of k binary-search
+    /// inserts, each with its own O(n) memmove.  Equivalent to calling
+    /// [`FreePool::insert`] per id, duplicate handling included.
+    fn insert_many(&mut self, devs: &[usize]) {
+        if devs.len() <= 1 {
+            if let Some(&d) = devs.first() {
+                self.insert(d);
+            }
+            return;
+        }
+        debug_assert!(devs.windows(2).all(|w| w[0] < w[1]), "unsorted batch free");
+        let mut merged = Vec::with_capacity(self.ids.len() + devs.len());
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < self.ids.len() && j < devs.len() {
+            match self.ids[i].cmp(&devs[j]) {
+                Ordering::Less => {
+                    merged.push(self.ids[i]);
+                    i += 1;
+                }
+                Ordering::Greater => {
+                    merged.push(devs[j]);
+                    j += 1;
+                }
+                Ordering::Equal => {
+                    debug_assert!(false, "device {} freed twice", devs[j]);
+                    merged.push(self.ids[i]);
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        merged.extend_from_slice(&self.ids[i..]);
+        merged.extend_from_slice(&devs[j..]);
+        self.ids = merged;
+    }
+
+    /// Take every id in `devs` (sorted ascending) out in one compaction
+    /// pass; returns the first id that was not free, if any — in which
+    /// case the pool is left untouched (the caller errors the run).
+    fn remove_many(&mut self, devs: &[usize]) -> Option<usize> {
+        debug_assert!(devs.windows(2).all(|w| w[0] <= w[1]), "unsorted batch grant");
+        match devs {
+            [] => return None,
+            [d] => {
+                return if self.remove(*d) { None } else { Some(*d) };
+            }
+            _ => {}
+        }
+        let mut kept = Vec::with_capacity(self.ids.len().saturating_sub(devs.len()));
+        let mut j = 0usize;
+        for &id in &self.ids {
+            if j < devs.len() && id == devs[j] {
+                j += 1;
+            } else if j < devs.len() && devs[j] < id {
+                // Also catches duplicate grant ids: the second copy
+                // compares below every later pool id.
+                return Some(devs[j]);
+            } else {
+                kept.push(id);
+            }
+        }
+        if j < devs.len() {
+            return Some(devs[j]);
+        }
+        self.ids = kept;
+        None
+    }
 }
 
 /// Per-run ring-plan memoization (see module docs).  Keys canonicalize
@@ -350,15 +422,22 @@ struct PlanKey {
     activation_bytes: usize,
     /// Canonical survivor profile: a model/pool fingerprint prefix (param
     /// counts, hyper fields, link latency — see [`PlanKey::new`]), then
-    /// per device `(speed bits, mem)` and the pairwise rate matrix bits,
-    /// row-major over the ascending ids.
+    /// per device `(speed bits, mem)` and, in a second pass over the
+    /// ascending ids, each device's four [`PoolFingerprints`] digest
+    /// words.  The digests replace the seed's O(r²) pairwise rate dump:
+    /// they canonicalize each device's *entire* row and column of the
+    /// rate matrix, so equal profiles still mean the search reads equal
+    /// rates (strictly finer than the pairwise form — a digest match
+    /// implies the old submatrix match, never the reverse), while key
+    /// construction is O(r) against the per-run table.
     profile: Vec<u64>,
 }
 
 impl PlanKey {
-    fn new(planner: &Planner<'_>, devices: &[usize]) -> Self {
+    fn new(planner: &Planner<'_>, fps: &PoolFingerprints, devices: &[usize]) -> Self {
         debug_assert!(devices.windows(2).all(|w| w[0] < w[1]), "unsorted grant");
-        let mut profile = Vec::with_capacity(devices.len() * (devices.len() + 1) + 13);
+        debug_assert_eq!(fps.len(), planner.cluster.len(), "fingerprints for a different pool");
+        let mut profile = Vec::with_capacity(devices.len() * 6 + 13);
         // Model fingerprint beyond the layer count, plus the pool-wide
         // link latency: every remaining numeric input the ring search and
         // its memory-feasibility check read.  Per-run these are constant
@@ -387,11 +466,7 @@ impl PlanKey {
             profile.push(planner.cluster.devices[d].mem_bytes as u64);
         }
         for &d in devices {
-            for &e in devices {
-                if d != e {
-                    profile.push(planner.cluster.rate_bytes_per_s[d][e].to_bits());
-                }
-            }
+            profile.extend_from_slice(&fps.device(d));
         }
         PlanKey {
             layers: planner.meta.hyper.layers,
@@ -493,6 +568,163 @@ impl PlanCache {
     }
 }
 
+/// Rebuild a cached entry's assignment for `devices` — the shared tail of
+/// every cache-hit and staged-promotion path, so all of them produce the
+/// assignment through the same constructor a fresh search uses.
+fn rebuild_cached(
+    cached: &Option<CachedPlan>,
+    devices: &[usize],
+    pool_len: usize,
+) -> Result<LayerAssignment> {
+    match cached {
+        Some(c) => {
+            // A corrupt entry (e.g. an imported cache with positions
+            // past the grant width) fails this plan request, not the
+            // process — the seed indexed `devices[p]` and panicked.
+            let order: Vec<usize> = c
+                .order_pos
+                .iter()
+                .map(|&p| {
+                    devices.get(p).copied().ok_or_else(|| {
+                        Error::Schedule(format!(
+                            "cached plan position {p} outside a {}-device grant",
+                            devices.len()
+                        ))
+                    })
+                })
+                .collect::<Result<_>>()?;
+            LayerAssignment::from_counts_for_devices(order, &c.counts, pool_len)
+        }
+        None => Err(Error::Plan("no feasible layer assignment (cached)".into())),
+    }
+}
+
+/// One plan request captured at an event-merge barrier, self-contained so
+/// the fan-out workers need no access to fleet state: the model and costs
+/// are pure functions of the job spec (identical to what the demand path
+/// derives), and `devices` is the sorted grant / survivor set.
+struct PlanRequest {
+    meta: ModelMeta,
+    costs: PlannerCosts,
+    devices: Vec<usize>,
+}
+
+/// What one fan-out worker computed for a request: the exact cache entry
+/// the demand search would insert (`Ok(Some)` feasible, `Ok(None)`
+/// infeasible), or the grant-validation failure the demand path would
+/// surface (`Err` — never cached, exactly like the sequential path).
+type StagedPlan = std::result::Result<Option<CachedPlan>, String>;
+
+/// Search one request on a worker thread.  Runs the planner sequentially
+/// (`threads = 1`): the fan-out parallelizes *across* requests, and plans
+/// are bit-identical at every planner thread count anyway (the parity
+/// battery pins it), so nesting pools would add contention, not speed.
+fn stage_plan(planner: &Planner<'_>, devices: &[usize]) -> StagedPlan {
+    match plan_ring(planner, devices, 1) {
+        Ok(assignment) => {
+            let mut order_pos = Vec::with_capacity(assignment.order.len());
+            for d in &assignment.order {
+                match devices.binary_search(d) {
+                    Ok(p) => order_pos.push(p),
+                    Err(_) => {
+                        return Err(format!("planner returned device {d} outside the grant"));
+                    }
+                }
+            }
+            Ok(Some(CachedPlan { order_pos, counts: assignment.counts() }))
+        }
+        Err(_) => Ok(None),
+    }
+}
+
+/// The cross-job planning pipeline (see [`crate::config::FleetConfig`]'s
+/// `plan_pipeline`/`speculate` knobs).  Staged results live *outside* the
+/// real [`PlanCache`]: a staged entry is promoted into the cache only
+/// when the demand path asks for that exact key, counting as a demand
+/// miss — so cache contents, hit/miss counters, and snapshots are
+/// byte-identical to the sequential path whether the pipeline (or
+/// speculation) is on or off, at any thread count.
+///
+/// `staged` holds barrier-batch results and always drains by the end of
+/// the dispatch that filled it (every batched request reaches its plan
+/// call before the barrier completes).  `spec_staged` holds speculative
+/// results and may carry waste across barriers; neither map is ever
+/// serialized — a restored run simply re-plans, identically.
+/// Bound on unconsumed speculative entries: past this the map is cleared
+/// (speculation is pure wall clock, so eviction never changes results).
+const SPEC_STAGED_CAP: usize = 1024;
+
+#[derive(Debug, Default)]
+struct PlanPipeline {
+    enabled: bool,
+    speculate: bool,
+    /// Barriers that batched at least one demand plan request.
+    batches: usize,
+    /// Demand plan requests batched, pre-dedup.
+    batched_requests: usize,
+    /// Requests whose key duplicated an earlier request in the same
+    /// barrier batch (one search served both).
+    dedup_merges: usize,
+    /// Batch-size histogram over `batches`, bucketed
+    /// `[1, 2, 3, 4, 5-8, 9-16, 17-32, 33+]`.
+    batch_hist: [usize; 8],
+    staged: BTreeMap<PlanKey, StagedPlan>,
+    spec_staged: BTreeMap<PlanKey, StagedPlan>,
+    /// Speculative searches executed (insertions into `spec_staged`).
+    spec_planned: usize,
+    /// Speculative entries a demand miss later consumed.
+    spec_hits: usize,
+}
+
+impl PlanPipeline {
+    fn new(enabled: bool, speculate: bool) -> Self {
+        PlanPipeline { enabled, speculate: enabled && speculate, ..Self::default() }
+    }
+
+    /// Record one non-empty demand batch in the canonical counters.
+    /// These count *requests at the barrier*, before any dedup or cache
+    /// state is consulted, so they are invariant to thread count and to
+    /// speculation on/off.
+    fn observe_batch(&mut self, size: usize) {
+        self.batches += 1;
+        self.batched_requests += size;
+        let bucket = match size {
+            0..=1 => 0,
+            2 => 1,
+            3 => 2,
+            4 => 3,
+            5..=8 => 4,
+            9..=16 => 5,
+            17..=32 => 6,
+            _ => 7,
+        };
+        self.batch_hist[bucket] += 1;
+    }
+
+    /// Take the staged result for `key`, if any worker computed one —
+    /// barrier batches first, then speculation (which scores a hit).
+    fn take_staged(&mut self, key: &PlanKey) -> Option<StagedPlan> {
+        if let Some(e) = self.staged.remove(key) {
+            return Some(e);
+        }
+        if let Some(e) = self.spec_staged.remove(key) {
+            self.spec_hits += 1;
+            return Some(e);
+        }
+        None
+    }
+}
+
+/// Everything a demand-path plan call needs, bundled so [`JobExec`]'s
+/// admit/resume/re-plan signatures stay stable as the pipeline grows.
+struct PlanSvc<'a> {
+    cache: &'a mut PlanCache,
+    pipeline: &'a mut PlanPipeline,
+    fps: &'a PoolFingerprints,
+    pool_len: usize,
+    threads: usize,
+}
+
 /// [`plan_ring`] through the per-run cache.  `devices` must be sorted
 /// ascending (every fleet call site sorts its grant first).  Infeasible
 /// grants are cached too — the callers discard the error message, so a
@@ -500,37 +732,30 @@ impl PlanCache {
 fn plan_ring_cached(
     planner: &Planner<'_>,
     devices: &[usize],
-    cache: &mut PlanCache,
-    pool_len: usize,
-    threads: usize,
+    svc: &mut PlanSvc<'_>,
 ) -> Result<LayerAssignment> {
-    let key = PlanKey::new(planner, devices);
-    if let Some(cached) = cache.map.get(&key) {
-        cache.hits += 1;
-        return match cached {
-            Some(c) => {
-                // A corrupt entry (e.g. an imported cache with positions
-                // past the grant width) fails this plan request, not the
-                // process — the seed indexed `devices[p]` and panicked.
-                let order: Vec<usize> = c
-                    .order_pos
-                    .iter()
-                    .map(|&p| {
-                        devices.get(p).copied().ok_or_else(|| {
-                            Error::Schedule(format!(
-                                "cached plan position {p} outside a {}-device grant",
-                                devices.len()
-                            ))
-                        })
-                    })
-                    .collect::<Result<_>>()?;
-                LayerAssignment::from_counts_for_devices(order, &c.counts, pool_len)
+    let key = PlanKey::new(planner, svc.fps, devices);
+    if let Some(cached) = svc.cache.map.get(&key) {
+        svc.cache.hits += 1;
+        return rebuild_cached(cached, devices, svc.pool_len);
+    }
+    // A barrier-batched or speculative worker may have already searched
+    // this key.  The staged entry is exactly what the search below would
+    // produce, so promoting it keeps cache contents and counters
+    // byte-identical to the sequential path — a staged answer is still a
+    // demand *miss* (the real cache had no entry).
+    svc.cache.misses += 1;
+    if let Some(staged) = svc.pipeline.take_staged(&key) {
+        return match staged {
+            Ok(entry) => {
+                let out = rebuild_cached(&entry, devices, svc.pool_len);
+                svc.cache.map.insert(key, entry);
+                out
             }
-            None => Err(Error::Plan("no feasible layer assignment (cached)".into())),
+            Err(msg) => Err(Error::Schedule(msg)),
         };
     }
-    cache.misses += 1;
-    match plan_ring(planner, devices, threads) {
+    match plan_ring(planner, devices, svc.threads) {
         Ok(assignment) => {
             let order_pos: Vec<usize> = assignment
                 .order
@@ -541,13 +766,13 @@ fn plan_ring_cached(
                     })
                 })
                 .collect::<Result<_>>()?;
-            cache
+            svc.cache
                 .map
                 .insert(key, Some(CachedPlan { order_pos, counts: assignment.counts() }));
             Ok(assignment)
         }
         Err(e) => {
-            cache.map.insert(key, None);
+            svc.cache.map.insert(key, None);
             Err(e)
         }
     }
@@ -639,11 +864,10 @@ impl JobExec {
         spec: &JobSpec,
         devices: &[usize],
         admit_s: f64,
-        cache: &mut PlanCache,
-        pool: &ClusterConfig,
+        svc: &mut PlanSvc<'_>,
+        pool: &Arc<ClusterConfig>,
         planning_pool: Option<&ClusterConfig>,
         dropouts: &[(f64, usize)],
-        threads: usize,
     ) -> Result<Option<JobExec>> {
         let meta = spec.model_meta();
         let lut = CostLut::analytic(&meta, LUT_GFLOPS);
@@ -668,7 +892,7 @@ impl JobExec {
         let mut alive: Vec<usize> = devices.to_vec();
         alive.sort_unstable();
 
-        let assignment = match plan_ring_cached(&planner, &alive, cache, pool.len(), threads) {
+        let assignment = match plan_ring_cached(&planner, &alive, svc) {
             Ok(a) => a,
             Err(_) => return Ok(None),
         };
@@ -676,7 +900,11 @@ impl JobExec {
             Coordinator::with_assignment_for_cluster(assignment, &meta, pool, &training)?;
         let builder =
             ScheduleBuilder::new(coordinator.assignment.clone(), sizes, alive.len().max(2));
-        let mut sim = Simulator::with_scenario(pool.clone(), lut, scenario)?;
+        // Shared pool: a refcount bump, not an O(n²) rate-matrix clone —
+        // the scale fix that makes 10k-device pools admissible.  The run
+        // validated the pool once up front.
+        let mut sim = Simulator::with_scenario_shared(Arc::clone(pool), lut, scenario)?;
+        sim.assume_validated();
         sim.now = admit_s; // release floor: nothing starts before admission
         let pending: VecDeque<(f64, usize)> = dropouts
             .iter()
@@ -729,12 +957,11 @@ impl JobExec {
         &mut self,
         pool: &ClusterConfig,
         spec: &JobSpec,
-        cache: &mut PlanCache,
+        svc: &mut PlanSvc<'_>,
         world: Option<&mut WorldRt>,
-        threads: usize,
     ) -> Result<StepOutcome> {
         let work = self.step_compute(spec)?;
-        self.step_finish(pool, spec, cache, world, work, threads)
+        self.step_finish(pool, spec, svc, world, work)
     }
 
     /// The job-local half of one round: chunk build, simulation, busy
@@ -786,10 +1013,9 @@ impl JobExec {
         &mut self,
         pool: &ClusterConfig,
         spec: &JobSpec,
-        cache: &mut PlanCache,
+        svc: &mut PlanSvc<'_>,
         mut world: Option<&mut WorldRt>,
         work: StepWork,
-        threads: usize,
     ) -> Result<StepOutcome> {
         let StepWork { round_busy, mut need_replan } = work;
         if let Some(w) = world.as_deref_mut() {
@@ -833,7 +1059,7 @@ impl JobExec {
             let eff =
                 world.as_ref().and_then(|w| w.cw.effective_pool_if_pressured(self.sim.now));
             let planner = Planner::new(&self.meta, eff.as_ref().unwrap_or(pool), self.costs());
-            match plan_ring_cached(&planner, &self.alive, cache, pool.len(), threads) {
+            match plan_ring_cached(&planner, &self.alive, svc) {
                 Ok(a) => {
                     self.coordinator = Coordinator::with_assignment_for_cluster(
                         a,
@@ -858,22 +1084,20 @@ impl JobExec {
     /// re-planning; a width change counts as a resize.  `Ok(false)` means
     /// the grant cannot host the model — the caller fails the job and
     /// returns the grant (same fail-fast contract as [`JobExec::admit`]).
-    #[allow(clippy::too_many_arguments)]
     fn resume(
         &mut self,
         devices: &[usize],
         now: f64,
-        cache: &mut PlanCache,
+        svc: &mut PlanSvc<'_>,
         pool: &ClusterConfig,
         planning_pool: Option<&ClusterConfig>,
         dropouts: &[(f64, usize)],
-        threads: usize,
     ) -> Result<bool> {
         debug_assert!(self.paused, "resume on a running job");
         let mut alive: Vec<usize> = devices.to_vec();
         alive.sort_unstable();
         let planner = Planner::new(&self.meta, planning_pool.unwrap_or(pool), self.costs());
-        let assignment = match plan_ring_cached(&planner, &alive, cache, pool.len(), threads) {
+        let assignment = match plan_ring_cached(&planner, &alive, svc) {
             Ok(a) => a,
             Err(_) => return Ok(false),
         };
@@ -970,7 +1194,7 @@ impl JobExec {
         scenario: &Scenario,
         spec: &JobSpec,
         v: &Json,
-        pool: &ClusterConfig,
+        pool: &Arc<ClusterConfig>,
     ) -> Result<JobExec> {
         let n = pool.len();
         let meta = spec.model_meta();
@@ -996,7 +1220,8 @@ impl JobExec {
         let alive = v.req("alive")?.usize_vec()?;
         let builder =
             ScheduleBuilder::new(coordinator.assignment.clone(), sizes, alive.len().max(2));
-        let mut sim = Simulator::with_scenario(pool.clone(), lut, scenario)?;
+        let mut sim = Simulator::with_scenario_shared(Arc::clone(pool), lut, scenario)?;
+        sim.assume_validated();
         sim.restore_clocks(&clock_from_json(v.req("clock")?)?)?;
         let busy = f64_bits_from_json(v.req("busy_bits")?)?;
         if busy.len() != n {
@@ -1174,14 +1399,14 @@ struct WorldRt {
 /// pool plus the world runtime, if any.  [`FleetRun::new`] and
 /// [`FleetRun::restore`] must build these identically — restore replays
 /// the same config, so the compiled tables are re-derived, not stored.
-fn build_world(cfg: &FleetConfig) -> Result<(ClusterConfig, Option<WorldRt>)> {
+fn build_world(cfg: &FleetConfig) -> Result<(Arc<ClusterConfig>, Option<WorldRt>)> {
     match cfg.resolve_world()? {
         Some(w) => {
             let cw = w.compile(&cfg.pool)?;
             let n = cw.pool.len();
             let mut joined = vec![true; cw.base_devices];
             joined.resize(n, false);
-            let pool = cw.pool.clone();
+            let pool = Arc::new(cw.pool.clone());
             Ok((
                 pool,
                 Some(WorldRt {
@@ -1193,7 +1418,7 @@ fn build_world(cfg: &FleetConfig) -> Result<(ClusterConfig, Option<WorldRt>)> {
                 }),
             ))
         }
-        None => Ok((cfg.pool.clone(), None)),
+        None => Ok((Arc::new(cfg.pool.clone()), None)),
     }
 }
 
@@ -1240,8 +1465,15 @@ struct FleetRun<'a> {
     scenario: Scenario,
     /// The run's stable pool: `cfg.pool` extended with every world join
     /// (identical to `cfg.pool` when no world is configured).  Every
-    /// per-device ledger below is sized by this pool.
-    pool: ClusterConfig,
+    /// per-device ledger below is sized by this pool.  `Arc`-shared so
+    /// each job's simulator references it instead of cloning the O(n²)
+    /// rate matrix; validated once here, never per job.
+    pool: Arc<ClusterConfig>,
+    /// Per-device rate-matrix digests of `pool` (see
+    /// [`PoolFingerprints`]): plan-cache keys canonicalize connectivity
+    /// through these in O(1) per device.  Built once — the matrix never
+    /// changes over a run.
+    fps: PoolFingerprints,
     /// World-model runtime (`None` = no world configured).
     world: Option<WorldRt>,
     /// Merged scripted-failure pairs — scenario dropouts plus world
@@ -1258,6 +1490,14 @@ struct FleetRun<'a> {
     free: FreePool,
     /// Per-run ring-plan memoization (admissions, re-plans, resumes).
     plan_cache: PlanCache,
+    /// Cross-job planning pipeline state (barrier batching + speculation;
+    /// inert when `cfg.plan_pipeline` is off).  Never serialized: staged
+    /// results are either consumed within their barrier or pure waste.
+    pipeline: PlanPipeline,
+    /// The one arrival currently held in `heap` (see
+    /// [`FleetRun::pull_next_arrival`]) — what speculation plans against.
+    /// Derivable from the heap, so restore recomputes it.
+    pending_arrival: Option<usize>,
     /// Fail-stopped devices (set when the scripted event fires).
     dead: Vec<bool>,
     /// Devices some job detected as dropped (possibly before the
@@ -1303,6 +1543,10 @@ impl<'a> FleetRun<'a> {
         bucket_width_s: f64,
     ) -> Result<Self> {
         let (pool, world) = build_world(cfg)?;
+        // Validate the shared pool once — every job's simulator then skips
+        // its own O(n²) first-chunk check (`Simulator::assume_validated`).
+        pool.validate()?;
+        let fps = PoolFingerprints::new(&pool);
         let n = pool.len();
         let scenario = cfg.scenario.clone().unwrap_or_else(Scenario::healthy);
         let mut heap: BinaryHeap<Event> = BinaryHeap::new();
@@ -1329,6 +1573,7 @@ impl<'a> FleetRun<'a> {
             policy,
             scenario,
             pool,
+            fps,
             world,
             dropouts,
             source,
@@ -1336,6 +1581,8 @@ impl<'a> FleetRun<'a> {
             heap,
             free,
             plan_cache: PlanCache::default(),
+            pipeline: PlanPipeline::new(cfg.plan_pipeline, cfg.speculate),
+            pending_arrival: None,
             dead: vec![false; n],
             detected: vec![false; n],
             waiting: Vec::new(),
@@ -1363,6 +1610,7 @@ impl<'a> FleetRun<'a> {
     /// — before the next pop — so the held arrival is always the
     /// earliest un-emitted event of its kind.
     fn pull_next_arrival(&mut self) -> Result<()> {
+        self.pending_arrival = None;
         let Some(spec) = self.source.next_job()? else {
             return Ok(());
         };
@@ -1383,6 +1631,7 @@ impl<'a> FleetRun<'a> {
             )));
         }
         self.heap.push(Event { t: spec.arrival_s, kind: EventKind::Arrive(spec.id) });
+        self.pending_arrival = Some(spec.id);
         self.specs.push(spec);
         self.execs.push(None);
         self.release_at_done.push(Vec::new());
@@ -1500,12 +1749,19 @@ impl<'a> FleetRun<'a> {
         if !self.retain_rows && self.rows[id].take().is_some() {
             self.resident_rows -= 1;
         }
-        let hs = std::mem::take(&mut self.release_at_done[id]);
-        for d in hs {
-            if !self.dead[d] {
-                self.free.insert(d);
-            }
-        }
+        // One merge pass instead of per-device sorted inserts: a wide
+        // ring's release was O(r·n) memmove at 10k devices.
+        let mut live = std::mem::take(&mut self.release_at_done[id]);
+        live.retain(|&d| !self.dead[d]);
+        live.sort_unstable();
+        self.free.insert_many(&live);
+    }
+
+    /// Insert `id` into the ascending waiting queue (replaces the seed's
+    /// push-then-sort, which re-sorted the whole queue per arrival).
+    fn enqueue_waiting(&mut self, id: usize) {
+        let pos = self.waiting.partition_point(|&j| j < id);
+        self.waiting.insert(pos, id);
     }
 
     /// Advance one job by one round (or pause it at the boundary).
@@ -1519,15 +1775,15 @@ impl<'a> FleetRun<'a> {
         };
         debug_assert!(!exec.paused, "step event for a paused job");
         if self.cfg.preemption && exec.preempt_pending {
-            let freed = exec.pause();
-            for d in freed {
-                debug_assert!(!self.dead[d], "pause released a dead device");
-                if !self.dead[d] {
-                    self.free.insert(d);
-                }
-            }
-            self.waiting.push(id);
-            self.waiting.sort_unstable();
+            let mut freed = exec.pause();
+            debug_assert!(
+                freed.iter().all(|&d| !self.dead[d]),
+                "pause released a dead device"
+            );
+            freed.retain(|&d| !self.dead[d]);
+            freed.sort_unstable();
+            self.free.insert_many(&freed);
+            self.enqueue_waiting(id);
             return Ok(true);
         }
         let work = exec.step_compute(&self.specs[id])?;
@@ -1541,6 +1797,7 @@ impl<'a> FleetRun<'a> {
     /// then apply these finishes strictly in heap pop order — the
     /// event-merge barrier that keeps shared mutations sequential.
     fn finish_step(&mut self, id: usize, work: StepWork) -> Result<bool> {
+        let pool_len = self.pool.len();
         let threads = self.threads;
         let Some(exec) = self.execs.get_mut(id).and_then(|e| e.as_mut()) else {
             return Err(Error::Schedule(format!(
@@ -1548,14 +1805,14 @@ impl<'a> FleetRun<'a> {
             )));
         };
         let spec = &self.specs[id];
-        let outcome = exec.step_finish(
-            &self.pool,
-            spec,
-            &mut self.plan_cache,
-            self.world.as_mut(),
-            work,
+        let mut svc = PlanSvc {
+            cache: &mut self.plan_cache,
+            pipeline: &mut self.pipeline,
+            fps: &self.fps,
+            pool_len,
             threads,
-        )?;
+        };
+        let outcome = exec.step_finish(&self.pool, spec, &mut svc, self.world.as_mut(), work)?;
         let next = Event { t: exec.sim.now, kind: EventKind::Step(id) };
         for &d in &exec.dropped {
             self.detected[d] = true;
@@ -1621,6 +1878,13 @@ impl<'a> FleetRun<'a> {
                 now,
             },
         );
+        // Pipeline: fan every distinct grant's ring search out across the
+        // fork-join pool *before* the sequential commit loop below, which
+        // then promotes the staged results in grant order — identical
+        // cache contents and counters, parallel wall clock.
+        if self.pipeline.enabled {
+            self.prefetch_admission_plans(&allocs, eff.as_ref());
+        }
         for a in allocs {
             let Some(wpos) = self.waiting.iter().position(|&j| j == a.job) else {
                 return Err(Error::Schedule(format!(
@@ -1636,13 +1900,13 @@ impl<'a> FleetRun<'a> {
                     a.job
                 )));
             }
-            for &d in &a.devices {
-                if !self.free.remove(d) {
-                    return Err(Error::Schedule(format!(
-                        "policy {} allocated device {d} which is not free",
-                        self.policy.name()
-                    )));
-                }
+            let mut grant = a.devices.clone();
+            grant.sort_unstable();
+            if let Some(d) = self.free.remove_many(&grant) {
+                return Err(Error::Schedule(format!(
+                    "policy {} allocated device {d} which is not free",
+                    self.policy.name()
+                )));
             }
             self.waiting.remove(wpos);
             if self.execs.get(a.job).map_or(false, |e| e.is_some()) {
@@ -1651,20 +1915,27 @@ impl<'a> FleetRun<'a> {
                 // that vanished mid-pass is a scheduler bug reported as
                 // an error, not an unwrap panic.
                 let resumed = {
+                    let pool_len = self.pool.len();
                     let Some(exec) = self.execs.get_mut(a.job).and_then(|e| e.as_mut()) else {
                         return Err(Error::Schedule(format!(
                             "job {} lost its execution state during resume",
                             a.job
                         )));
                     };
+                    let mut svc = PlanSvc {
+                        cache: &mut self.plan_cache,
+                        pipeline: &mut self.pipeline,
+                        fps: &self.fps,
+                        pool_len,
+                        threads: self.threads,
+                    };
                     exec.resume(
                         &a.devices,
                         now,
-                        &mut self.plan_cache,
+                        &mut svc,
                         &self.pool,
                         eff.as_ref(),
                         &self.dropouts,
-                        self.threads,
                     )?
                 };
                 if resumed {
@@ -1683,17 +1954,23 @@ impl<'a> FleetRun<'a> {
                     self.finish_job(a.job, true)?;
                 }
             } else {
+                let mut svc = PlanSvc {
+                    cache: &mut self.plan_cache,
+                    pipeline: &mut self.pipeline,
+                    fps: &self.fps,
+                    pool_len: self.pool.len(),
+                    threads: self.threads,
+                };
                 match JobExec::admit(
                     self.cfg,
                     &self.scenario,
                     &self.specs[a.job],
                     &a.devices,
                     now,
-                    &mut self.plan_cache,
+                    &mut svc,
                     &self.pool,
                     eff.as_ref(),
                     &self.dropouts,
-                    self.threads,
                 )? {
                     Some(exec) => {
                         self.execs[a.job] = Some(Box::new(exec));
@@ -1704,6 +1981,170 @@ impl<'a> FleetRun<'a> {
             }
         }
         Ok(())
+    }
+
+    /// The demand-path plan request for granting `devices` to `job`,
+    /// keyed exactly as [`JobExec::admit`] / [`JobExec::resume`] would
+    /// key it: model meta and costs are pure functions of the spec (a
+    /// resume's exec holds the same values it derived at admission), and
+    /// the grant is sorted into the canonical ascending order.
+    fn plan_request_for(&self, job: usize, devices: &[usize]) -> PlanRequest {
+        let spec = &self.specs[job];
+        let meta = spec.model_meta();
+        let lut = CostLut::analytic(&meta, LUT_GFLOPS);
+        let costs = PlannerCosts {
+            block_fwd_s: lut.block_fwd_s,
+            activation_bytes: meta.activation_bytes(),
+        };
+        let mut devs = devices.to_vec();
+        devs.sort_unstable();
+        PlanRequest { meta, costs, devices: devs }
+    }
+
+    /// Fan a deduped key/request batch out across the fork-join pool;
+    /// returns each key's staged result in batch order.  Workers search
+    /// independent requests against shared read-only state, so results
+    /// are position-stable and thread-count-invariant.
+    fn search_plan_batch(
+        &self,
+        batch: Vec<(PlanKey, PlanRequest)>,
+        search_pool: &ClusterConfig,
+    ) -> Vec<(PlanKey, StagedPlan)> {
+        let staged = crate::exec::par_map(self.threads, &batch, |_, (_, req)| {
+            let planner = Planner::new(&req.meta, search_pool, req.costs);
+            stage_plan(&planner, &req.devices)
+        });
+        batch.into_iter().map(|(k, _)| k).zip(staged).collect()
+    }
+
+    /// Pipeline front half of an admission pass: one [`PlanRequest`] per
+    /// grant the policy just handed out (fresh admissions and resumes
+    /// alike — both key identically).  Allocs the commit loop will
+    /// reject as malformed are skipped here; the loop's validation still
+    /// fails the run with its usual error.
+    fn prefetch_admission_plans(&mut self, allocs: &[Allocation], eff: Option<&ClusterConfig>) {
+        let n = self.pool.len();
+        let reqs: Vec<PlanRequest> = allocs
+            .iter()
+            .filter(|a| {
+                !a.devices.is_empty()
+                    && a.devices.iter().all(|&d| d < n)
+                    && a.job < self.specs.len()
+            })
+            .map(|a| self.plan_request_for(a.job, &a.devices))
+            .collect();
+        self.prefetch_plans(reqs, eff);
+    }
+
+    /// Batch, dedup, and fan out the demand plan requests pending at one
+    /// event-merge barrier.  The canonical counters (batches, requests,
+    /// dedup merges, size histogram) are recorded *before* any cache
+    /// state is consulted, so they are invariant to thread count and to
+    /// speculation on/off; only keys absent from the cache and both
+    /// staged maps are actually searched.
+    fn prefetch_plans(&mut self, reqs: Vec<PlanRequest>, eff: Option<&ClusterConfig>) {
+        if !self.pipeline.enabled || reqs.is_empty() {
+            return;
+        }
+        self.pipeline.observe_batch(reqs.len());
+        let search_pool = eff.unwrap_or(&self.pool);
+        let mut batch: Vec<(PlanKey, PlanRequest)> = Vec::with_capacity(reqs.len());
+        for req in reqs {
+            let planner = Planner::new(&req.meta, search_pool, req.costs);
+            let key = PlanKey::new(&planner, &self.fps, &req.devices);
+            if batch.iter().any(|(k, _)| *k == key) {
+                self.pipeline.dedup_merges += 1;
+                continue;
+            }
+            batch.push((key, req));
+        }
+        batch.retain(|(k, _)| {
+            !self.plan_cache.map.contains_key(k)
+                && !self.pipeline.staged.contains_key(k)
+                && !self.pipeline.spec_staged.contains_key(k)
+        });
+        if batch.is_empty() {
+            return;
+        }
+        for (key, plan) in self.search_plan_batch(batch, search_pool) {
+            self.pipeline.staged.insert(key, plan);
+        }
+    }
+
+    /// Speculative pre-planning between event barriers (`cfg.speculate`):
+    /// ask the policy what it would grant if the next event had already
+    /// fired — today's waiters, plus the held arrival when that *is* the
+    /// next event — and search those rings ahead of demand.  Entries
+    /// land in `spec_staged` keyed by the full search profile, so a
+    /// speculative result is identical to what the demand search would
+    /// compute: a wrong guess is wall-clock waste, never a wrong plan,
+    /// and serve results are byte-identical with speculation on or off
+    /// (pinned by the parity battery).
+    fn speculate_pass(&mut self) {
+        if !self.pipeline.speculate || self.free.is_empty() {
+            return;
+        }
+        let Some(next) = self.heap.peek() else {
+            return;
+        };
+        let (now, kind) = (next.t, next.kind);
+        if self.pipeline.spec_staged.len() > SPEC_STAGED_CAP {
+            // Unconsumed guesses are pure waste; cap the map so a cold
+            // streak cannot grow it without bound (the eviction shows up
+            // as `planned - hits - staged`).
+            self.pipeline.spec_staged.clear();
+        }
+        let mut hypo: Vec<usize> = self.waiting.clone();
+        if let EventKind::Arrive(id) = kind {
+            // Arrivals carry the newest id, so the queue stays ascending.
+            hypo.push(id);
+        }
+        if hypo.is_empty() {
+            return;
+        }
+        let queue: Vec<&JobSpec> = hypo.iter().map(|&j| &self.specs[j]).collect();
+        let eff = self.effective_pool(now);
+        let allocs = self.policy.allocate(
+            &queue,
+            &PoolView {
+                cluster: eff.as_ref().unwrap_or(&self.pool),
+                free: self.free.as_slice(),
+                dead: &self.dead,
+                now,
+            },
+        );
+        let n = self.pool.len();
+        let reqs: Vec<PlanRequest> = allocs
+            .iter()
+            .filter(|a| {
+                !a.devices.is_empty()
+                    && a.devices.iter().all(|&d| d < n)
+                    && a.job < self.specs.len()
+            })
+            .map(|a| self.plan_request_for(a.job, &a.devices))
+            .collect();
+        let search_pool = eff.as_ref().unwrap_or(&self.pool);
+        let mut batch: Vec<(PlanKey, PlanRequest)> = Vec::with_capacity(reqs.len());
+        for req in reqs {
+            let planner = Planner::new(&req.meta, search_pool, req.costs);
+            let key = PlanKey::new(&planner, &self.fps, &req.devices);
+            if batch.iter().any(|(k, _)| *k == key) {
+                continue;
+            }
+            batch.push((key, req));
+        }
+        batch.retain(|(k, _)| {
+            !self.plan_cache.map.contains_key(k)
+                && !self.pipeline.staged.contains_key(k)
+                && !self.pipeline.spec_staged.contains_key(k)
+        });
+        if batch.is_empty() {
+            return;
+        }
+        self.pipeline.spec_planned += batch.len();
+        for (key, plan) in self.search_plan_batch(batch, search_pool) {
+            self.pipeline.spec_staged.insert(key, plan);
+        }
     }
 
     /// Admission control: offer the policy every waiting job that has
@@ -1947,8 +2388,7 @@ impl<'a> FleetRun<'a> {
             }
             EventKind::Step(id) => self.handle_step(id)?,
             EventKind::Arrive(id) => {
-                self.waiting.push(id);
-                self.waiting.sort_unstable();
+                self.enqueue_waiting(id);
                 self.pull_next_arrival()?;
                 true
             }
@@ -2022,6 +2462,17 @@ impl<'a> FleetRun<'a> {
     ///   row/pool bookkeeping) are applied strictly in pop order, the
     ///   event-merge barrier that makes every shared mutation sequential.
     fn dispatch_from(&mut self, ev: Event) -> Result<()> {
+        self.dispatch_merged(ev)?;
+        // Between barriers: pre-warm the pipeline against the next event
+        // before it is popped (inert unless `cfg.speculate`).
+        self.speculate_pass();
+        Ok(())
+    }
+
+    /// The event-dispatch half of [`FleetRun::dispatch_from`] (split so
+    /// the speculation hook runs after every barrier, whichever branch
+    /// handled the event).
+    fn dispatch_merged(&mut self, ev: Event) -> Result<()> {
         if !self.batchable(&ev) {
             return self.dispatch(ev);
         }
@@ -2072,6 +2523,31 @@ impl<'a> FleetRun<'a> {
             self.execs[id] = Some(exec);
             works.push((id, work));
         }
+        // Pipeline: the members' dropout re-plans are known now, before
+        // the sequential finish loop — batch exactly the searches it
+        // would run one by one (the guards mirror [`JobExec::step_finish`]
+        // on this no-world path) and fan them out.
+        if self.pipeline.enabled {
+            let mut reqs: Vec<PlanRequest> = Vec::new();
+            for (id, work) in &works {
+                let Ok(w) = work else { continue };
+                let Some(exec) = self.execs.get(*id).and_then(|e| e.as_ref()) else {
+                    continue;
+                };
+                if !w.need_replan
+                    || exec.rounds_done == self.specs[*id].rounds
+                    || exec.alive.is_empty()
+                {
+                    continue;
+                }
+                reqs.push(PlanRequest {
+                    meta: exec.meta.clone(),
+                    costs: exec.costs(),
+                    devices: exec.alive.clone(),
+                });
+            }
+            self.prefetch_plans(reqs, None);
+        }
         for (id, work) in works {
             let pool_changed = self.finish_step(id, work?)?;
             // Batch guards exclude both pool-changing finishes (pauses
@@ -2088,11 +2564,19 @@ impl<'a> FleetRun<'a> {
     }
 
     fn stats(&self) -> ServeStats {
+        let p = &self.pipeline;
         ServeStats {
             plans: self.plan_cache.hits + self.plan_cache.misses,
             plan_cache_hits: self.plan_cache.hits,
             plan_cache_misses: self.plan_cache.misses,
             peak_resident_rows: self.peak_resident_rows,
+            plan_batches: p.batches,
+            plan_batch_requests: p.batched_requests,
+            plan_dedup_merges: p.dedup_merges,
+            plan_batch_hist: p.batch_hist,
+            speculative_plans: p.spec_planned,
+            speculative_hits: p.spec_hits,
+            speculative_wasted: p.spec_planned - p.spec_hits - p.spec_staged.len(),
         }
     }
 
@@ -2113,6 +2597,7 @@ impl<'a> FleetRun<'a> {
             mut pool_busy,
             mut last_done,
             dead,
+            pipeline,
             ..
         } = self;
         let mut out_rows: Vec<FleetJobRow> = Vec::with_capacity(rows.len());
@@ -2184,6 +2669,12 @@ impl<'a> FleetRun<'a> {
             });
         }
         let world_stats = world.as_ref().map(|w| world_stats(w, &dead));
+        let planning = pipeline.enabled.then(|| PlanningStats {
+            batches: pipeline.batches,
+            requests: pipeline.batched_requests,
+            dedup_merges: pipeline.dedup_merges,
+            batch_hist: pipeline.batch_hist,
+        });
         Ok(FleetReport {
             policy: policy.name().to_string(),
             scenario: scenario.name.clone(),
@@ -2193,6 +2684,7 @@ impl<'a> FleetRun<'a> {
             pool_device_busy: pool_busy,
             dead_devices: dead.iter().filter(|&&d| d).count(),
             world: world_stats,
+            planning,
         })
     }
 
@@ -2341,6 +2833,25 @@ impl<'a> FleetRun<'a> {
                 ]),
             ));
         }
+        if self.pipeline.enabled {
+            // Staged barrier results never outlive their barrier, and
+            // speculative state is deliberately not serialized (a
+            // restored run simply re-plans, identically) — only the
+            // canonical demand counters cross the snapshot.
+            debug_assert!(
+                self.pipeline.staged.is_empty(),
+                "staged plans alive at a snapshot point"
+            );
+            pairs.push((
+                "planning",
+                Json::obj(vec![
+                    ("batches", Json::u64(self.pipeline.batches as u64)),
+                    ("requests", Json::u64(self.pipeline.batched_requests as u64)),
+                    ("dedup", Json::u64(self.pipeline.dedup_merges as u64)),
+                    ("hist", Json::arr_usize(&self.pipeline.batch_hist)),
+                ]),
+            ));
+        }
         Ok(Json::obj(pairs))
     }
 
@@ -2375,7 +2886,39 @@ impl<'a> FleetRun<'a> {
         }
         let streaming = v.req("streaming")?.as_bool()?;
         let (pool, mut world) = build_world(cfg)?;
+        pool.validate()?;
+        let fps = PoolFingerprints::new(&pool);
         let n = pool.len();
+        let mut pipeline = PlanPipeline::new(cfg.plan_pipeline, cfg.speculate);
+        match (cfg.plan_pipeline, v.get("planning")) {
+            (true, Some(pv)) => {
+                pipeline.batches = pv.req("batches")?.as_usize()?;
+                pipeline.batched_requests = pv.req("requests")?.as_usize()?;
+                pipeline.dedup_merges = pv.req("dedup")?.as_usize()?;
+                let hist = pv.req("hist")?.usize_vec()?;
+                if hist.len() != pipeline.batch_hist.len() {
+                    return Err(Error::Schedule(format!(
+                        "snapshot planning histogram has {} of {} buckets",
+                        hist.len(),
+                        pipeline.batch_hist.len()
+                    )));
+                }
+                pipeline.batch_hist.copy_from_slice(&hist);
+            }
+            (false, None) => {}
+            (true, None) => {
+                return Err(Error::Schedule(
+                    "config enables plan_pipeline but the snapshot carries no planning state"
+                        .into(),
+                ));
+            }
+            (false, Some(_)) => {
+                return Err(Error::Schedule(
+                    "snapshot carries planning state but the config disables plan_pipeline"
+                        .into(),
+                ));
+            }
+        }
         match (&mut world, v.get("world")) {
             (Some(w), Some(wv)) => {
                 w.joined = bools_from_json(wv.req("joined")?)?;
@@ -2525,11 +3068,27 @@ impl<'a> FleetRun<'a> {
                 "snapshot claims {resident_rows} resident rows but stores {resident}"
             )));
         }
+        // `pending_arrival` is derivable state: the invariant is exactly
+        // one un-popped `Arrive` in the heap (zero once the source
+        // drains), so a scan recovers it — and rejects forged snapshots
+        // that would break the one-pending-arrival discipline.
+        let mut pending_arrival = None;
+        for e in heap.iter() {
+            if let EventKind::Arrive(id) = e.kind {
+                if pending_arrival.is_some() {
+                    return Err(Error::Schedule(
+                        "snapshot holds more than one pending arrival".into(),
+                    ));
+                }
+                pending_arrival = Some(id);
+            }
+        }
         Ok(FleetRun {
             cfg,
             policy,
             scenario,
             pool,
+            fps,
             world,
             dropouts,
             source,
@@ -2537,6 +3096,8 @@ impl<'a> FleetRun<'a> {
             heap,
             free: FreePool { ids: free_ids },
             plan_cache: PlanCache::from_json(v.req("plan_cache")?)?,
+            pipeline,
+            pending_arrival,
             dead,
             detected,
             waiting,
@@ -2570,6 +3131,24 @@ pub struct ServeStats {
     /// Streaming mode bounds this by the in-flight job count; the
     /// materialized path grows it to the full trace.
     pub peak_resident_rows: usize,
+    /// Event-merge barriers that batched at least one demand plan
+    /// request (zero with `plan_pipeline` off).
+    pub plan_batches: usize,
+    /// Demand plan requests batched at those barriers, pre-dedup.
+    pub plan_batch_requests: usize,
+    /// Requests whose key duplicated an earlier request in the same
+    /// barrier batch (one search served both).
+    pub plan_dedup_merges: usize,
+    /// Batch-size histogram over `plan_batches`, bucketed
+    /// `[1, 2, 3, 4, 5-8, 9-16, 17-32, 33+]`.
+    pub plan_batch_hist: [usize; 8],
+    /// Speculative ring searches executed (`speculate` only).
+    pub speculative_plans: usize,
+    /// Speculative results a demand miss later consumed.
+    pub speculative_hits: usize,
+    /// Speculative results evicted or never consumed so far
+    /// (`plans - hits - still staged`).
+    pub speculative_wasted: usize,
 }
 
 /// Default quantile-sketch bucket width for streaming serves: one mean
@@ -2914,6 +3493,11 @@ pub fn serve_reference(cfg: &FleetConfig, policy: &dyn AllocationPolicy) -> Resu
             "serve_reference is single-threaded by definition; set threads = 1".into(),
         ));
     }
+    if cfg.plan_pipeline {
+        return Err(Error::Schedule(
+            "serve_reference predates the planning pipeline; disable plan_pipeline".into(),
+        ));
+    }
     let n = cfg.pool.len();
     let scenario = cfg.scenario.clone().unwrap_or_else(Scenario::healthy);
     let specs = JobTrace::synthetic(cfg);
@@ -3070,6 +3654,7 @@ pub fn serve_reference(cfg: &FleetConfig, policy: &dyn AllocationPolicy) -> Resu
         pool_device_busy: pool_busy,
         dead_devices: dead.iter().filter(|&&d| d).count(),
         world: None,
+        planning: None,
     })
 }
 
@@ -3205,23 +3790,93 @@ mod tests {
             activation_bytes: meta.activation_bytes(),
         };
         let planner = Planner::new(&meta, &cfg.pool, costs);
+        let fps = PoolFingerprints::new(&cfg.pool);
         let mut cache = PlanCache::default();
+        let mut pipeline = PlanPipeline::new(false, false);
+        let mut svc = PlanSvc {
+            cache: &mut cache,
+            pipeline: &mut pipeline,
+            fps: &fps,
+            pool_len: 12,
+            threads: 1,
+        };
         let devices = [1usize, 3, 5, 8, 9];
-        let fresh = plan_ring_cached(&planner, &devices, &mut cache, 12, 1).unwrap();
-        assert_eq!((cache.hits, cache.misses), (0, 1));
-        let cached = plan_ring_cached(&planner, &devices, &mut cache, 12, 1).unwrap();
-        assert_eq!((cache.hits, cache.misses), (1, 1));
+        let fresh = plan_ring_cached(&planner, &devices, &mut svc).unwrap();
+        assert_eq!((svc.cache.hits, svc.cache.misses), (0, 1));
+        let cached = plan_ring_cached(&planner, &devices, &mut svc).unwrap();
+        assert_eq!((svc.cache.hits, svc.cache.misses), (1, 1));
         assert_eq!(fresh, cached, "cache hit must be bit-identical");
         assert_eq!(fresh, plan_ring(&planner, &devices, 1).unwrap());
         // A thread count is not part of the key: a parallel search must
         // answer from the sequential entry (plans are thread-invariant).
-        let par = plan_ring_cached(&planner, &devices, &mut cache, 12, 4).unwrap();
-        assert_eq!((cache.hits, cache.misses), (2, 1));
+        svc.threads = 4;
+        let par = plan_ring_cached(&planner, &devices, &mut svc).unwrap();
+        assert_eq!((svc.cache.hits, svc.cache.misses), (2, 1));
         assert_eq!(fresh, par, "plan cache must be thread-count invariant");
+        svc.threads = 1;
         // A different subset is a different key (distinct speed profile).
         let other = [0usize, 2, 4, 6, 7];
-        let _ = plan_ring_cached(&planner, &other, &mut cache, 12, 1).unwrap();
-        assert_eq!((cache.hits, cache.misses), (2, 2));
+        let _ = plan_ring_cached(&planner, &other, &mut svc).unwrap();
+        assert_eq!((svc.cache.hits, svc.cache.misses), (2, 2));
+    }
+
+    #[test]
+    fn fingerprint_keys_match_the_pairwise_canonicalization() {
+        // Regression for the fingerprint key (the O(r²) pairwise-rate
+        // dump's replacement): equal digests must imply the *exact*
+        // submatrix equality the old key encoded, and a repeated grant
+        // must produce a byte-identical key.
+        let cfg = FleetConfig::synthetic(12, 1, 9);
+        let fps = PoolFingerprints::new(&cfg.pool);
+        let spec = JobSpec {
+            id: 0,
+            arrival_s: 0.0,
+            layers: 16,
+            rounds: 2,
+            local_iters: 1,
+            ring_size: 4,
+            deadline: DeadlineClass::Standard,
+            priority: Priority::Normal,
+        };
+        let meta = spec.model_meta();
+        let lut = CostLut::analytic(&meta, LUT_GFLOPS);
+        let costs = PlannerCosts {
+            block_fwd_s: lut.block_fwd_s,
+            activation_bytes: meta.activation_bytes(),
+        };
+        let planner = Planner::new(&meta, &cfg.pool, costs);
+        let devices = [1usize, 3, 5, 8, 9];
+        // Same grant, same key — bit-identical, so cache hits survive.
+        assert_eq!(
+            PlanKey::new(&planner, &fps, &devices),
+            PlanKey::new(&planner, &fps, &devices)
+        );
+        // Equal per-device digests between two grants imply equal
+        // pairwise rate submatrices (the old key's contents): check the
+        // contrapositive over every same-size pair in a real pool —
+        // whenever the digest blocks agree, the submatrices agree.
+        let other = [0usize, 2, 4, 6, 7];
+        let digests =
+            |ds: &[usize]| ds.iter().map(|&d| fps.device(d)).collect::<Vec<[u64; 4]>>();
+        let submatrix = |ds: &[usize]| {
+            let mut out = Vec::with_capacity(ds.len() * ds.len());
+            for &a in ds {
+                for &b in ds {
+                    out.push(cfg.pool.rate_bytes_per_s[a][b]);
+                }
+            }
+            out
+        };
+        if digests(&devices) == digests(&other) {
+            assert_eq!(submatrix(&devices), submatrix(&other));
+        }
+        // A synthetic pool's rates are heterogeneous: distinct grants
+        // must produce distinct keys here (digests fingerprint the full
+        // row/column, so collisions would need identical connectivity).
+        assert_ne!(
+            PlanKey::new(&planner, &fps, &devices),
+            PlanKey::new(&planner, &fps, &other)
+        );
     }
 
     #[test]
@@ -3260,13 +3915,22 @@ mod tests {
             activation_bytes: meta.activation_bytes(),
         };
         let planner = Planner::new(&meta, &cfg.pool, costs);
+        let fps = PoolFingerprints::new(&cfg.pool);
         let devices = [1usize, 3, 5, 8, 9];
         let mut cache = PlanCache::default();
-        let key = PlanKey::new(&planner, &devices);
+        let key = PlanKey::new(&planner, &fps, &devices);
         cache
             .map
             .insert(key, Some(CachedPlan { order_pos: vec![99, 0, 1, 2, 3], counts: vec![16] }));
-        let err = plan_ring_cached(&planner, &devices, &mut cache, 12, 1).unwrap_err();
+        let mut pipeline = PlanPipeline::new(false, false);
+        let mut svc = PlanSvc {
+            cache: &mut cache,
+            pipeline: &mut pipeline,
+            fps: &fps,
+            pool_len: 12,
+            threads: 1,
+        };
+        let err = plan_ring_cached(&planner, &devices, &mut svc).unwrap_err();
         assert!(
             matches!(err, Error::Schedule(_)),
             "poisoned cache must fail with Error::Schedule, got {err:?}"

@@ -395,6 +395,30 @@ pub struct FleetReport {
     /// — a `None` leaves [`FleetReport::canonical_string`] byte-identical
     /// to pre-world builds).
     pub world: Option<WorldStats>,
+    /// Planning-pipeline demand counters (`None` when `plan_pipeline`
+    /// was off — a `None` leaves [`FleetReport::canonical_string`]
+    /// byte-identical to pre-pipeline builds).  Only speculation- and
+    /// thread-invariant counters live here; speculative hit/waste
+    /// counters are observability (`ServeStats`), not results.
+    pub planning: Option<PlanningStats>,
+}
+
+/// Demand-side planning-pipeline counters of one fleet run: how many
+/// event-merge barriers batched plan requests, how many requests they
+/// carried, and how many were deduplicated within their batch.  All
+/// deterministic functions of `(FleetConfig, policy)` — independent of
+/// thread count and of whether speculation ran.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlanningStats {
+    /// Barriers that batched at least one demand plan request.
+    pub batches: usize,
+    /// Demand plan requests batched, pre-dedup.
+    pub requests: usize,
+    /// Requests merged into an earlier same-key request of their batch.
+    pub dedup_merges: usize,
+    /// Batch-size histogram over `batches`, bucketed
+    /// `[1, 2, 3, 4, 5-8, 9-16, 17-32, 33+]`.
+    pub batch_hist: [usize; 8],
 }
 
 /// World-model outcomes of one fleet run: the event counts, energy
@@ -672,6 +696,21 @@ impl FleetReport {
             );
             for (i, (name, members, lost)) in w.domains.iter().enumerate() {
                 let _ = write!(s, "{}{name}:{lost}/{members}", if i > 0 { "," } else { "" });
+            }
+            let _ = write!(s, "]}}");
+        }
+        // The planning section exists only when the pipeline was on:
+        // legacy (pipeline-off) reports stay byte-identical to
+        // pre-pipeline builds, and the section itself carries only
+        // speculation- and thread-invariant demand counters.
+        if let Some(p) = &self.planning {
+            let _ = write!(
+                s,
+                ";planning={{batches={},requests={},dedup={},hist=[",
+                p.batches, p.requests, p.dedup_merges,
+            );
+            for (i, h) in p.batch_hist.iter().enumerate() {
+                let _ = write!(s, "{}{h}", if i > 0 { "," } else { "" });
             }
             let _ = write!(s, "]}}");
         }
@@ -1525,7 +1564,51 @@ mod tests {
             pool_device_busy: vec![10.0, 10.0, 0.0, 0.0],
             dead_devices: 0,
             world: None,
+            planning: None,
         }
+    }
+
+    #[test]
+    fn planning_section_appends_to_the_canonical_string_only_when_present() {
+        let plain = fleet_report(vec![fleet_row(0, 0.0, 0.0, 10.0, 5.0)]);
+        let base = plain.canonical_string();
+        assert!(!base.contains(";planning="), "pipeline-off reports carry no planning section");
+        let mut with = plain.clone();
+        with.planning = Some(PlanningStats {
+            batches: 3,
+            requests: 7,
+            dedup_merges: 2,
+            batch_hist: [1, 0, 2, 0, 0, 0, 0, 0],
+        });
+        let s = with.canonical_string();
+        assert!(s.starts_with(&base), "planning section strictly appends");
+        assert_eq!(
+            &s[base.len()..],
+            ";planning={batches=3,requests=7,dedup=2,hist=[1,0,2,0,0,0,0,0]}"
+        );
+    }
+
+    #[test]
+    fn planning_section_appends_after_the_world_section() {
+        let mut r = fleet_report(vec![fleet_row(0, 0.0, 0.0, 10.0, 5.0)]);
+        r.world = Some(WorldStats {
+            base_devices: 4,
+            joins: 0,
+            outages: 0,
+            energy_exhausted: 0,
+            energy_spent_j: 0.0,
+            domains: Vec::new(),
+        });
+        r.planning = Some(PlanningStats {
+            batches: 1,
+            requests: 1,
+            dedup_merges: 0,
+            batch_hist: [1, 0, 0, 0, 0, 0, 0, 0],
+        });
+        let s = r.canonical_string();
+        let w = s.find(";world=").expect("world section present");
+        let p = s.find(";planning=").expect("planning section present");
+        assert!(w < p, "planning appends after world");
     }
 
     #[test]

@@ -39,6 +39,7 @@ pub use scenario::{Scenario, ScenarioEvent, ScenarioRun};
 
 use std::cmp::Ordering;
 use std::collections::{BTreeMap, BinaryHeap};
+use std::sync::Arc;
 
 use crate::config::ClusterConfig;
 use crate::error::{Error, Result};
@@ -175,7 +176,11 @@ pub struct ClockState {
 
 #[derive(Debug, Clone)]
 pub struct Simulator {
-    cluster: ClusterConfig,
+    /// Shared, immutable cluster description.  An `Arc` so fleet-scale
+    /// callers (thousands of concurrent jobs over one 10k-device pool)
+    /// share a single rate matrix instead of cloning ~O(n²) floats per
+    /// simulator; single-job callers pay one refcount and nothing else.
+    cluster: Arc<ClusterConfig>,
     lut: CostLut,
     device_free: Vec<f64>,
     link_free: BTreeMap<(usize, usize), f64>,
@@ -193,6 +198,13 @@ pub struct Simulator {
 
 impl Simulator {
     pub fn new(cluster: ClusterConfig, lut: CostLut) -> Self {
+        Self::new_shared(Arc::new(cluster), lut)
+    }
+
+    /// [`Simulator::new`] over an already-shared cluster: no copy of the
+    /// rate matrix, just a refcount bump.  The fleet layer builds one
+    /// `Arc` per run and hands it to every job's simulator.
+    pub fn new_shared(cluster: Arc<ClusterConfig>, lut: CostLut) -> Self {
         let n = cluster.len();
         Simulator {
             perturb: scenario::Compiled::empty(n),
@@ -216,10 +228,29 @@ impl Simulator {
         lut: CostLut,
         scenario: &Scenario,
     ) -> Result<Self> {
+        Self::with_scenario_shared(Arc::new(cluster), lut, scenario)
+    }
+
+    /// [`Simulator::with_scenario`] over an already-shared cluster.
+    pub fn with_scenario_shared(
+        cluster: Arc<ClusterConfig>,
+        lut: CostLut,
+        scenario: &Scenario,
+    ) -> Result<Self> {
         scenario.validate(cluster.len())?;
-        let mut sim = Self::new(cluster, lut);
+        let mut sim = Self::new_shared(cluster, lut);
         sim.perturb = scenario.compile(sim.cluster.len());
         Ok(sim)
+    }
+
+    /// Skip the one-time cluster validity check in
+    /// [`Simulator::run`]'s chunk admission: the caller validated the
+    /// shared pool once up front (the fleet does, at `FleetRun`
+    /// construction) and re-checking an O(n²) rate matrix per job is
+    /// measurable at 10k devices.  Behaviorally inert for valid
+    /// clusters — the check is idempotent and error-free on them.
+    pub fn assume_validated(&mut self) {
+        self.validated = true;
     }
 
     pub fn lut(&self) -> &CostLut {

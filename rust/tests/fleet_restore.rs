@@ -125,6 +125,96 @@ fn kill_at_every_event_replays_with_preemption_and_admission() {
 }
 
 #[test]
+fn kill_at_every_event_replays_with_the_planning_pipeline() {
+    // The pipeline satellite: snapshots taken mid-batch (the kill sweep
+    // hits every barrier) restore byte-identically with batching *and*
+    // speculation on — staged plans drain within their barrier and
+    // speculative state is never serialized, so a restored run simply
+    // re-plans, identically.
+    let mut cfg = battery_cfg(13);
+    cfg.plan_pipeline = true;
+    cfg.speculate = true;
+    for policy in [&FifoWholeRing as &dyn AllocationPolicy, &DeadlineEdf] {
+        kill_battery(&cfg, policy);
+    }
+    // Faulted too: dropout re-plan batches cross the kill points.
+    let mut faulted = battery_cfg(13);
+    faulted.scenario = Some(Scenario::synth(13, 10, 2000.0, 0.8));
+    faulted.plan_pipeline = true;
+    faulted.speculate = true;
+    kill_battery(&faulted, &FifoWholeRing);
+}
+
+#[test]
+fn snapshots_carry_planning_counters_but_never_speculative_state() {
+    let base = battery_cfg(15);
+    let mut on = base.clone();
+    on.plan_pipeline = true;
+    let mut spec = on.clone();
+    spec.speculate = true;
+
+    // Walk the three variants in lockstep.  At every event: the
+    // pipeline-on snapshot equals the speculating snapshot byte for byte
+    // (speculation is wall-clock state, never snapshot state), carries
+    // the "planning" key, and the pipeline-off snapshot lacks it.
+    let mut off_state = FleetState::new(&base, &FifoWholeRing).unwrap();
+    let mut on_state = FleetState::new(&on, &FifoWholeRing).unwrap();
+    let mut spec_state = FleetState::new(&spec, &FifoWholeRing).unwrap();
+    let mut steps = 0usize;
+    loop {
+        let off_text = off_state.snapshot().unwrap().to_string();
+        let on_text = on_state.snapshot().unwrap().to_string();
+        let spec_text = spec_state.snapshot().unwrap().to_string();
+        assert_eq!(
+            on_text, spec_text,
+            "speculative state leaked into the snapshot at event {steps}"
+        );
+        assert!(
+            Json::parse(&on_text).unwrap().get("planning").is_some(),
+            "pipeline-on snapshot lost its planning section at event {steps}"
+        );
+        assert!(
+            Json::parse(&off_text).unwrap().get("planning").is_none(),
+            "pipeline-off snapshot grew a planning section at event {steps}"
+        );
+        let stepped = off_state.step_event().unwrap();
+        assert_eq!(on_state.step_event().unwrap(), stepped, "event streams diverged");
+        assert_eq!(spec_state.step_event().unwrap(), stepped, "event streams diverged");
+        if !stepped {
+            break;
+        }
+        steps += 1;
+    }
+    assert!(steps > 20, "battery config too small: only {steps} events");
+}
+
+#[test]
+fn restore_rejects_a_pipeline_config_mismatch() {
+    // A snapshot is resumable only under the configuration that produced
+    // it: flipping `plan_pipeline` either way is a hard error, not a
+    // silent counter reset.
+    let base = battery_cfg(17);
+    let mut on = base.clone();
+    on.plan_pipeline = true;
+
+    let mut s = FleetState::new(&on, &FifoWholeRing).unwrap();
+    for _ in 0..5 {
+        assert!(s.step_event().unwrap());
+    }
+    let snap_on = s.snapshot().unwrap();
+    let err = FleetState::resume(&base, &FifoWholeRing, &snap_on).unwrap_err();
+    assert!(err.to_string().contains("disables plan_pipeline"), "wrong rejection: {err}");
+
+    let mut s = FleetState::new(&base, &FifoWholeRing).unwrap();
+    for _ in 0..5 {
+        assert!(s.step_event().unwrap());
+    }
+    let snap_off = s.snapshot().unwrap();
+    let err = FleetState::resume(&on, &FifoWholeRing, &snap_off).unwrap_err();
+    assert!(err.to_string().contains("no planning state"), "wrong rejection: {err}");
+}
+
+#[test]
 fn chained_resume_covers_every_event_of_a_64_job_trace() {
     // Linear-cost version of the acceptance sweep: at every event the
     // live state is snapshotted, the snapshot round-trips through text,

@@ -151,6 +151,39 @@ fn parallel_primitives_must_fire() {
 }
 
 #[test]
+fn parallel_primitives_must_fire_on_pipeline_antipatterns() {
+    // The shapes the planning pipeline must NOT take: a Mutex-guarded
+    // shared plan cache (merge order = lock order) and a channel draining
+    // worker results (arrival order = scheduler order) both fire.
+    assert_eq!(
+        findings("let cache = std::sync::Mutex::new(PlanCache::default());\n"),
+        vec![(1, Rule::ParallelPrimitives)]
+    );
+    assert_eq!(
+        findings("let (tx, rx) = mpsc::channel(); workers.send(tx);\n"),
+        vec![(1, Rule::ParallelPrimitives)]
+    );
+}
+
+#[test]
+fn parallel_primitives_pass_the_pipeline_fan_out_idiom() {
+    // The planning pipeline's actual shape: `exec::par_map` over a
+    // deduped request batch against Arc-shared read-only state, results
+    // committed in batch order.  No raw primitive appears, nothing fires.
+    let fan_out = "\
+let staged = crate::exec::par_map(threads, &batch, |_, (_, req)| {
+    stage_plan(&Planner::new(&req.meta, search_pool, req.costs), &req.devices)
+});
+for (key, plan) in batch.into_iter().map(|(k, _)| k).zip(staged) {
+    pipeline.staged.insert(key, plan);
+}
+";
+    assert!(findings(fan_out).is_empty());
+    assert!(findings("let pool = std::sync::Arc::new(cfg.pool.clone());\n").is_empty());
+    assert!(findings("let shared = Arc::clone(pool);\n").is_empty());
+}
+
+#[test]
 fn parallel_primitives_must_pass() {
     // The fork-join core's own idiom: scoped spawns, not thread::spawn.
     assert!(findings("std::thread::scope(|scope| { scope.spawn(|| f()); });\n").is_empty());

@@ -16,13 +16,15 @@ use ringada::config::{ClusterConfig, FleetConfig, TrainingConfig};
 use ringada::coordinator::{Coordinator, Planner, PlannerCosts, SearchParams};
 use ringada::exec::par_map;
 use ringada::fleet::{
-    serve, serve_reference, serve_streaming, AllocationPolicy, DeadlineEdf, FifoWholeRing,
+    serve, serve_reference, serve_streaming, serve_with_stats, AllocationPolicy, DeadlineEdf,
+    FifoWholeRing,
 };
 use ringada::model::manifest::ModelHyper;
 use ringada::model::ModelMeta;
 use ringada::pipeline::{ScheduleBuilder, WireSizes};
 use ringada::sim::{CostLut, Scenario, SimReport, Simulator};
 use ringada::util::json::Json;
+use ringada::world::{World, WorldEvent};
 
 fn meta(layers: usize) -> ModelMeta {
     ModelMeta::from_hyper(ModelHyper {
@@ -269,4 +271,187 @@ fn fleet_config_threads_key_parses_and_round_trips() {
     let mut zero = base.clone();
     zero.threads = 0;
     assert!(zero.validate().is_err(), "validate() must reject threads=0");
+}
+
+/// The optional `plan_pipeline` / `speculate` config keys: absent means
+/// off and legacy JSON round-trips byte-identically; explicit values
+/// round-trip; non-boolean values fail with the field-contextual error
+/// style; and `speculate` without `plan_pipeline` parses but fails
+/// `validate()` (there is nothing to speculate for).
+#[test]
+fn fleet_config_pipeline_keys_parse_and_round_trip() {
+    let base = FleetConfig::synthetic(6, 4, 1);
+    let legacy_text = base.to_json().to_string();
+    assert!(
+        !legacy_text.contains("plan_pipeline") && !legacy_text.contains("speculate"),
+        "off pipeline must not be serialized (legacy byte-identity)"
+    );
+    let parsed = FleetConfig::from_json(&Json::parse(&legacy_text).unwrap()).unwrap();
+    assert!(!parsed.plan_pipeline && !parsed.speculate, "absent keys must mean off");
+    assert_eq!(parsed.to_json().to_string(), legacy_text, "legacy round-trip changed bytes");
+
+    let mut on = base.clone();
+    on.plan_pipeline = true;
+    on.speculate = true;
+    assert!(on.validate().is_ok(), "pipeline + speculation is a valid config");
+    let on_text = on.to_json().to_string();
+    let round = FleetConfig::from_json(&Json::parse(&on_text).unwrap()).unwrap();
+    assert!(round.plan_pipeline && round.speculate, "explicit keys must round-trip");
+    assert_eq!(round.to_json().to_string(), on_text, "on round-trip changed bytes");
+
+    // Splice each key into otherwise-valid legacy JSON.
+    let splice = |k: &str, v: &str| format!("{{\"{k}\": {v}, {}", &legacy_text[1..]);
+    for key in ["plan_pipeline", "speculate"] {
+        for bad in ["1", "\"yes\"", "[true]"] {
+            let v = Json::parse(&splice(key, bad)).unwrap();
+            let err = FleetConfig::from_json(&v).unwrap_err().to_string();
+            assert!(err.contains(key), "{key}={bad}: error not field-contextual: {err}");
+        }
+    }
+    let solo = FleetConfig::from_json(&Json::parse(&splice("speculate", "true")).unwrap()).unwrap();
+    let err = solo.validate().unwrap_err().to_string();
+    assert!(
+        err.contains("speculate") && err.contains("plan_pipeline"),
+        "speculate-without-pipeline rejection must name both knobs: {err}"
+    );
+}
+
+// ------------------------------------------------- planning pipeline
+
+/// Serve a config with the pipeline off at `threads = 1`: the legacy
+/// canonical bytes every pipeline run must extend append-only.
+fn legacy_canon(base: &FleetConfig, policy: &dyn AllocationPolicy) -> String {
+    let mut off = base.clone();
+    off.threads = 1;
+    off.plan_pipeline = false;
+    off.speculate = false;
+    serve(&off, policy).unwrap().canonical_string()
+}
+
+/// The tentpole acceptance battery: with the cross-job planning pipeline
+/// on, canonical reports are byte-identical across `threads ∈ {1,2,4,8}`
+/// × speculation {off,on} × {healthy, faulted, world-outage} × {fifo,
+/// deadline-edf} — and always equal the pipeline-off bytes plus the
+/// append-only `;planning=` section (whose counters are therefore
+/// invariant to thread count and speculation too).
+#[test]
+fn plan_pipeline_parity_battery() {
+    let mut healthy = FleetConfig::synthetic(12, 10, 23);
+    // Fast arrivals: the queue backs up, so event barriers carry real
+    // multi-admission batches, not just batches of one.
+    healthy.mean_interarrival_s = 6.0;
+    let mut faulted = healthy.clone();
+    faulted.scenario = Some(Scenario::synth(23, 12, 1500.0, 0.8));
+    let mut outage = healthy.clone();
+    outage.world = Some(World {
+        name: "parity-world".into(),
+        events: vec![
+            WorldEvent::SetDomain { device: 1, domain: "rack".into() },
+            WorldEvent::SetDomain { device: 2, domain: "rack".into() },
+            WorldEvent::DomainOutage { domain: "rack".into(), at: 40.0 },
+        ],
+    });
+    for (tag, base) in [("healthy", &healthy), ("faulted", &faulted), ("outage", &outage)] {
+        for policy in [&FifoWholeRing as &dyn AllocationPolicy, &DeadlineEdf] {
+            let legacy = legacy_canon(base, policy);
+            let mut want: Option<String> = None;
+            for speculate in [false, true] {
+                for threads in [1usize, 2, 4, 8] {
+                    let mut cfg = base.clone();
+                    cfg.threads = threads;
+                    cfg.plan_pipeline = true;
+                    cfg.speculate = speculate;
+                    let canon = serve(&cfg, policy).unwrap().canonical_string();
+                    let label =
+                        format!("{tag}/{} t{threads} spec={speculate}", policy.name());
+                    let suffix = canon.strip_prefix(&legacy).unwrap_or_else(|| {
+                        panic!("{label}: pipeline run rewrote the legacy canonical bytes")
+                    });
+                    assert!(
+                        suffix.starts_with(";planning={batches="),
+                        "{label}: unexpected canonical suffix {suffix:?}"
+                    );
+                    match &want {
+                        None => want = Some(canon),
+                        Some(w) => {
+                            assert_eq!(&canon, w, "{label}: canonical diverged")
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The serving-side counters behind the canonical section: the demand
+/// counters (plans, cache hits, batches, requests, dedup, histogram) are
+/// invariant to thread count *and* to speculation on/off; the
+/// speculative counters are thread-invariant and internally consistent
+/// (`hits + wasted ≤ planned`, all zero with speculation off).
+#[test]
+fn planning_counters_are_thread_and_speculation_invariant() {
+    let mut cfg = FleetConfig::synthetic(12, 12, 29);
+    cfg.mean_interarrival_s = 5.0;
+    cfg.plan_pipeline = true;
+    let mut demand: Option<(usize, usize, usize, usize, usize, [usize; 8])> = None;
+    for speculate in [false, true] {
+        let mut spec_counters: Option<(usize, usize, usize)> = None;
+        for threads in [1usize, 2, 4, 8] {
+            let mut c = cfg.clone();
+            c.threads = threads;
+            c.speculate = speculate;
+            let (_, s) = serve_with_stats(&c, &FifoWholeRing).unwrap();
+            let label = format!("t{threads} spec={speculate}");
+            assert!(s.plan_batches > 0, "{label}: pipeline ran but batched nothing");
+            assert_eq!(
+                s.plan_batch_hist.iter().sum::<usize>(),
+                s.plan_batches,
+                "{label}: histogram does not cover the batches"
+            );
+            let d = (
+                s.plans,
+                s.plan_cache_hits,
+                s.plan_batches,
+                s.plan_batch_requests,
+                s.plan_dedup_merges,
+                s.plan_batch_hist,
+            );
+            match &demand {
+                None => demand = Some(d),
+                Some(w) => assert_eq!(&d, w, "{label}: demand counters moved"),
+            }
+            if speculate {
+                assert!(
+                    s.speculative_hits + s.speculative_wasted <= s.speculative_plans,
+                    "{label}: speculative accounting broken: {s:?}"
+                );
+                let sc = (s.speculative_plans, s.speculative_hits, s.speculative_wasted);
+                match &spec_counters {
+                    None => spec_counters = Some(sc),
+                    Some(w) => {
+                        assert_eq!(&sc, w, "{label}: speculative counters moved with threads")
+                    }
+                }
+            } else {
+                assert_eq!(
+                    (s.speculative_plans, s.speculative_hits, s.speculative_wasted),
+                    (0, 0, 0),
+                    "{label}: speculative counters nonzero with speculation off"
+                );
+            }
+        }
+    }
+}
+
+/// The sequential oracle predates the pipeline and must refuse it
+/// outright rather than silently serve without batching.
+#[test]
+fn serve_reference_rejects_the_planning_pipeline() {
+    let mut cfg = FleetConfig::synthetic(8, 6, 3);
+    cfg.plan_pipeline = true;
+    let err = serve_reference(&cfg, &FifoWholeRing).unwrap_err();
+    assert!(
+        err.to_string().contains("plan_pipeline"),
+        "wrong rejection for serve_reference with the pipeline on: {err}"
+    );
 }
